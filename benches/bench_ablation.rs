@@ -1,0 +1,155 @@
+//! Ablations of the design choices DESIGN.md §6 calls out:
+//!
+//! 1. judge bound source: Gauss-Radau vs Gauss/Lobatto (Thm. 4/6 predict
+//!    Radau decides in ≤ iterations),
+//! 2. two-sided refinement: adaptive (§5.1) vs strict alternation,
+//! 3. Jacobi preconditioning (§5.4) on a badly-scaled kernel,
+//! 4. reorthogonalization cost,
+//! 5. DPP baseline strength: exact-Cholesky vs maintained-inverse vs
+//!    quadrature.
+//!
+//! Run: `cargo bench --bench bench_ablation`
+
+use gauss_bif::apps::{BifStrategy, DppConfig, DppSampler};
+use gauss_bif::datasets::random_sparse_spd;
+use gauss_bif::linalg::{sym_eigenvalues, Cholesky, DMat};
+use gauss_bif::quadrature::{
+    judge_ratio_policy, judge_threshold_src, BoundSource, Gql, GqlOptions, JacobiPrecond,
+    RefinePolicy, Reorth,
+};
+use gauss_bif::util::bench::{Bencher, Table};
+use gauss_bif::util::rng::Rng;
+
+fn main() {
+    let mut b = Bencher::quick();
+
+    // --- 1. bound source: Radau vs Gauss/Lobatto ---
+    println!("== ablation 1: judge bound source (iterations to decide) ==");
+    let mut rng = Rng::new(0xAB1);
+    let n = 600;
+    let (a, w) = random_sparse_spd(&mut rng, n, 5e-3, 1e-2);
+    let u: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let exact = gauss_bif::quadrature::cg::cg_bif_estimate(&a, &u, 1e-12, 10 * n);
+    let opts = GqlOptions::new(w.lo, w.hi);
+    let mut table = Table::new(&["threshold/exact", "radau iters", "gauss/lobatto iters"]);
+    let mut radau_total = 0usize;
+    let mut gl_total = 0usize;
+    for f in [0.5, 0.9, 0.99, 1.01, 1.1, 2.0] {
+        let t = exact * f;
+        let (_, jr) = judge_threshold_src(&a, &u, t, opts, BoundSource::Radau);
+        let (_, jg) = judge_threshold_src(&a, &u, t, opts, BoundSource::GaussLobatto);
+        radau_total += jr.iters;
+        gl_total += jg.iters;
+        table.row(vec![f.to_string(), jr.iters.to_string(), jg.iters.to_string()]);
+    }
+    println!("{}", table.render());
+    println!("totals: radau {radau_total} vs gauss/lobatto {gl_total} (Thm. 4/6 ⇒ radau ≤)\n");
+
+    // --- 2. refinement policy on ratio judgements ---
+    println!("== ablation 2: adaptive (§5.1) vs alternate refinement ==");
+    let v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let exact_v = gauss_bif::quadrature::cg::cg_bif_estimate(&a, &v, 1e-12, 10 * n);
+    let mut adaptive_total = 0usize;
+    let mut alternate_total = 0usize;
+    for p in [0.1, 0.3, 0.7, 0.9] {
+        let truth = p * exact_v - exact;
+        for off in [-0.3, -0.05, 0.05, 0.3] {
+            let t = truth + off * exact.abs();
+            let (da, ja) =
+                judge_ratio_policy(&a, &u, &v, t, p, opts, RefinePolicy::Adaptive);
+            let (dn, jn) =
+                judge_ratio_policy(&a, &u, &v, t, p, opts, RefinePolicy::Alternate);
+            assert_eq!(da, dn, "policies must agree on the decision");
+            adaptive_total += ja.iters;
+            alternate_total += jn.iters;
+        }
+    }
+    println!(
+        "total iterations over 16 judgements: adaptive {adaptive_total} vs alternate {alternate_total}\n"
+    );
+
+    // --- 3. Jacobi preconditioning on a badly-scaled kernel ---
+    println!("== ablation 3: Jacobi preconditioning (badly scaled matrix) ==");
+    let n2 = 120;
+    let mut rng2 = Rng::new(0xAB3);
+    let (mut d, _) = {
+        let (a, w) = random_sparse_spd(&mut rng2, n2, 0.3, 1e-1);
+        (a.to_dense(), w)
+    };
+    for i in 0..n2 {
+        let s = 10f64.powi((i % 4) as i32);
+        for j in 0..n2 {
+            let v = d.get(i, j) * s.sqrt() * (10f64.powi((j % 4) as i32)).sqrt();
+            d.set(i, j, v);
+        }
+    }
+    let ev = sym_eigenvalues(&d);
+    let u2: Vec<f64> = (0..n2).map(|_| rng2.normal()).collect();
+    let exact2 = Cholesky::factor(&d).unwrap().bif(&u2);
+    let plain_opts = GqlOptions::new(ev[0] * 0.99, ev[n2 - 1] * 1.01);
+    let iters_plain = {
+        let mut q = Gql::new(&d, &u2, plain_opts);
+        q.run_to_gap(1e-3 * exact2.abs()).iter
+    };
+    let pc = JacobiPrecond::new(&d).unwrap();
+    let su = pc.scaled_query(&u2);
+    let mut m = DMat::zeros(n2, n2);
+    for j in 0..n2 {
+        let mut e = vec![0.0; n2];
+        e[j] = 1.0;
+        let mut col = vec![0.0; n2];
+        gauss_bif::sparse::SymOp::matvec(&pc, &e, &mut col);
+        for i in 0..n2 {
+            m.set(i, j, col[i]);
+        }
+    }
+    let ev_pc = sym_eigenvalues(&m);
+    let pc_opts = GqlOptions::new(ev_pc[0] * 0.99, ev_pc[n2 - 1] * 1.01);
+    let iters_pc = {
+        let mut q = Gql::new(&pc, &su, pc_opts);
+        q.run_to_gap(1e-3 * exact2.abs()).iter
+    };
+    println!(
+        "iterations to 0.1% bracket: plain {iters_plain} (κ={:.1e}) vs jacobi {iters_pc} (κ={:.1e})\n",
+        ev[n2 - 1] / ev[0],
+        ev_pc[n2 - 1] / ev_pc[0]
+    );
+
+    // --- 4. reorthogonalization cost ---
+    println!("== ablation 4: reorthogonalization cost (n=600, 48 iters) ==");
+    let s_none = b.bench("gql_no_reorth", || {
+        let mut q = Gql::new(&a, &u, opts);
+        q.run(48).last().unwrap().gauss
+    });
+    let s_full = b.bench("gql_full_reorth", || {
+        let mut q = Gql::new(&a, &u, opts.with_reorth(Reorth::Full));
+        q.run(48).last().unwrap().gauss
+    });
+    println!(
+        "overhead: {:.1}x\n",
+        s_full.mean_ns / s_none.mean_ns
+    );
+
+    // --- 5. DPP baseline strength ---
+    println!("== ablation 5: DPP step cost — exact vs incremental vs gauss ==");
+    let mut rng3 = Rng::new(0xAB5);
+    let (l, w3) = random_sparse_spd(&mut rng3, 700, 5e-3, 1e-2);
+    let mut table = Table::new(&["strategy", "ms/step"]);
+    for (name, strategy, steps) in [
+        ("exact (paper baseline)", BifStrategy::Exact, 4usize),
+        ("incremental inverse", BifStrategy::Incremental, 40),
+        ("gauss (ours)", BifStrategy::Gauss, 200),
+    ] {
+        let mut r = Rng::new(77);
+        let mut s = DppSampler::new(
+            &l,
+            DppConfig::new(strategy, w3).with_init_size(700 / 3),
+            &mut r,
+        );
+        let t0 = std::time::Instant::now();
+        s.run(steps, &mut r);
+        let per = t0.elapsed().as_secs_f64() / steps as f64;
+        table.row(vec![name.into(), format!("{:.3}", per * 1e3)]);
+    }
+    println!("{}", table.render());
+}

@@ -1,0 +1,58 @@
+//! Figure 2 regeneration: (k-)DPP and double-greedy running time +
+//! speedup vs matrix density on synthetic sparse matrices.
+//!
+//! Default runs at 1/4 of the paper's sizes so the bench suite fits the
+//! session budget; `GAUSS_BIF_SCALE=1 cargo bench --bench bench_fig2`
+//! reproduces the paper's 5000²/2000² sizes.  The *shape* — speedup
+//! growing as density falls, all three algorithms ahead of their exact
+//! baselines — is scale-invariant (see EXPERIMENTS.md).
+
+use gauss_bif::config::RunConfig;
+use gauss_bif::experiments::fig2::{self, Fig2Budget};
+use gauss_bif::util::bench::{fmt_sci, Table};
+
+fn main() {
+    let scale: usize = std::env::var("GAUSS_BIF_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(4);
+    let cfg = RunConfig { seed: 0xF162, dataset_scale: scale, ..Default::default() };
+    let budget = Fig2Budget {
+        baseline_steps: 4,
+        gauss_steps: 150,
+        dg_baseline_elems: 4,
+    };
+    println!(
+        "Fig. 2 sweep at scale 1/{scale} (DPP/kDPP n={}, DG n={})",
+        5000 / scale,
+        2000 / scale
+    );
+    let rows = fig2::run(&cfg, budget, &fig2::DENSITIES);
+
+    let mut table = Table::new(&[
+        "algo", "density", "baseline s/step", "gauss s/step", "speedup", "avg judge iters",
+    ]);
+    for r in &rows {
+        table.row(vec![
+            r.algo.into(),
+            format!("{:.0e}", r.density),
+            fmt_sci(r.baseline_s),
+            fmt_sci(r.gauss_s),
+            format!("{:.1}x", r.speedup),
+            format!("{:.1}", r.gauss_avg_judge_iters),
+        ]);
+    }
+    println!("{}", table.render());
+
+    // paper-shape checks (soft: printed, not asserted, so the bench never
+    // aborts a suite run)
+    for algo in ["dpp", "kdpp", "dg"] {
+        let algo_rows: Vec<_> = rows.iter().filter(|r| r.algo == algo).collect();
+        let all_win = algo_rows.iter().all(|r| r.speedup > 1.0);
+        let sparse_vs_dense = algo_rows.first().map(|r| r.speedup).unwrap_or(0.0)
+            / algo_rows.last().map(|r| r.speedup.max(1e-9)).unwrap_or(1.0);
+        println!(
+            "shape[{algo}]: quadrature wins at every density: {all_win}; speedup(sparsest)/speedup(densest) = {sparse_vs_dense:.1} (paper: > 1)"
+        );
+    }
+}

@@ -1,0 +1,88 @@
+//! GQL core microbenchmarks + Figure-1 regeneration timing.
+//!
+//! Rows reported:
+//! * per-iteration cost of `Gql::step` across matrix size × density
+//!   (sparse CSR — the paper's O(nnz) claim),
+//! * judge iterations/latency as the threshold hardness varies,
+//! * full Fig. 1 panel regeneration time,
+//! * the dense-Cholesky exact-BIF cost for contrast.
+//!
+//! Run: `cargo bench --bench bench_quadrature`
+
+use gauss_bif::config::RunConfig;
+use gauss_bif::datasets::random_sparse_spd;
+use gauss_bif::experiments::fig1;
+use gauss_bif::linalg::Cholesky;
+use gauss_bif::quadrature::cg::cg_bif_estimate;
+use gauss_bif::quadrature::{judge_threshold, Gql, GqlOptions};
+use gauss_bif::util::bench::{Bencher, Table};
+use gauss_bif::util::rng::Rng;
+
+fn main() {
+    let mut b = Bencher::new();
+    println!("== GQL per-iteration cost (one sparse matvec + O(1)) ==");
+    let mut table = Table::new(&["n", "density", "nnz", "ns/iter"]);
+    for &n in &[500usize, 2000, 8000] {
+        for &density in &[1e-3, 1e-2] {
+            let mut rng = Rng::new(0xB101);
+            let (a, w) = random_sparse_spd(&mut rng, n, density, 1e-2);
+            let u: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let opts = GqlOptions::new(w.lo, w.hi);
+            // measure k steps per sample to amortize setup
+            let k = 16usize;
+            let stats = b.bench(&format!("gql_step n={n} d={density:.0e}"), || {
+                let mut q = Gql::new(&a, &u, opts);
+                let mut acc = 0.0;
+                for _ in 0..k {
+                    acc += q.step().gauss;
+                }
+                acc
+            });
+            table.row(vec![
+                n.to_string(),
+                format!("{density:.0e}"),
+                a.nnz().to_string(),
+                format!("{:.0}", stats.mean_ns / k as f64),
+            ]);
+        }
+    }
+    println!("\n{}", table.render());
+
+    println!("== judge latency vs threshold hardness (n=2000, d=1e-2) ==");
+    let mut rng = Rng::new(0xB102);
+    let n = 2000;
+    let (a, w) = random_sparse_spd(&mut rng, n, 1e-2, 1e-2);
+    let u: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let exact = cg_bif_estimate(&a, &u, 1e-12, 10 * n);
+    let opts = GqlOptions::new(w.lo, w.hi);
+    let mut table = Table::new(&["threshold/exact", "iters", "µs/judgement"]);
+    for f in [0.2, 0.8, 0.95, 0.999] {
+        let t = exact * f;
+        let (_, js) = judge_threshold(&a, &u, t, opts);
+        let stats = b.bench(&format!("judge f={f}"), || judge_threshold(&a, &u, t, opts));
+        table.row(vec![
+            format!("{f}"),
+            js.iters.to_string(),
+            format!("{:.1}", stats.mean_ns / 1e3),
+        ]);
+    }
+    println!("\n{}", table.render());
+
+    println!("== Fig. 1 regeneration (3 panels x 60 iterations, n=100) ==");
+    let cfg = RunConfig::default();
+    b.bench("fig1_all_panels", || fig1::run(&cfg, 60));
+
+    println!("\n== exact-BIF baseline for contrast (dense Cholesky) ==");
+    let mut table = Table::new(&["n", "ms/solve"]);
+    for &n in &[200usize, 500, 1000] {
+        let mut rng = Rng::new(0xB103);
+        let (a, _) = random_sparse_spd(&mut rng, n, 0.05, 1e-2);
+        let d = a.to_dense();
+        let u: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let stats = b.bench(&format!("cholesky_bif n={n}"), || {
+            Cholesky::factor(&d).unwrap().bif(&u)
+        });
+        table.row(vec![n.to_string(), format!("{:.2}", stats.mean_ns / 1e6)]);
+    }
+    println!("\n{}", table.render());
+}

@@ -1,0 +1,110 @@
+//! PJRT runtime + coordinator benchmarks: artifact execute latency per
+//! bucket, single vs batched dispatch, and judge-service throughput.
+//! Requires `make artifacts` (skips gracefully without them).
+//!
+//! Run: `cargo bench --bench bench_runtime`
+
+use gauss_bif::coordinator::{BatchPolicy, JudgeRequest, JudgeService};
+use gauss_bif::datasets::random_spd_exact;
+use gauss_bif::runtime::GqlRuntime;
+use gauss_bif::util::bench::{Bencher, Stats, Table};
+use gauss_bif::util::rng::Rng;
+use std::path::Path;
+
+fn main() {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("artifacts/ missing — run `make artifacts` first; skipping bench_runtime");
+        return;
+    }
+    let rt = GqlRuntime::load(dir).expect("load artifacts");
+    println!("platform: {}\n", rt.platform());
+    let mut b = Bencher::quick();
+
+    // --- execute latency per bucket ---
+    println!("== PJRT execute latency per bucket ==");
+    let mut table = Table::new(&["bucket", "batch", "iters", "latency", "µs/lane-iter"]);
+    let mut rng = Rng::new(0xBE1);
+    for art in rt.artifacts() {
+        let n = art.meta.n;
+        let (a, l1, ln) = random_spd_exact(&mut rng, n, 0.8, 0.3);
+        let af: Vec<f32> = (0..n * n).map(|k| a.get(k / n, k % n) as f32).collect();
+        let uf: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let lo = (l1 * 0.99) as f32;
+        let hi = (ln * 1.01) as f32;
+        let stats = if art.meta.batch == 1 {
+            b.bench(&format!("exec {}", art.meta.name), || {
+                art.execute(&af, &uf, lo, hi).unwrap()
+            })
+        } else {
+            let bsz = art.meta.batch;
+            let mut a_all = Vec::new();
+            let mut u_all = Vec::new();
+            for _ in 0..bsz {
+                a_all.extend_from_slice(&af);
+                u_all.extend_from_slice(&uf);
+            }
+            let lo_all = vec![lo; bsz];
+            let hi_all = vec![hi; bsz];
+            b.bench(&format!("exec {}", art.meta.name), || {
+                art.execute_batch(&a_all, &u_all, &lo_all, &hi_all).unwrap()
+            })
+        };
+        let lane_iters = (art.meta.batch * art.meta.iters) as f64;
+        table.row(vec![
+            art.meta.n.to_string(),
+            art.meta.batch.to_string(),
+            art.meta.iters.to_string(),
+            Stats::fmt_time(stats.mean_ns),
+            format!("{:.1}", stats.mean_ns / 1e3 / lane_iters),
+        ]);
+    }
+    println!("\n{}", table.render());
+
+    // --- service throughput across batch policies ---
+    println!("== judge service throughput (200 mixed-size requests) ==");
+    let mut table = Table::new(&["max_batch", "max_wait_µs", "req/s", "pjrt %"]);
+    for (max_batch, wait_us) in [(1usize, 0u64), (4, 100), (8, 200), (8, 1000)] {
+        let policy = BatchPolicy {
+            max_batch,
+            max_wait: std::time::Duration::from_micros(wait_us),
+            native_threshold: 256,
+        };
+        let svc = JudgeService::start(Some(dir.to_path_buf()), policy, 2);
+        let mut rng = Rng::new(0xBE2);
+        let n_requests = 200;
+        let t0 = std::time::Instant::now();
+        let mut rxs = Vec::new();
+        for i in 0..n_requests {
+            let n = [12usize, 16, 24, 32][i % 4];
+            let (a, l1, ln) = random_spd_exact(&mut rng, n, 0.8, 0.3);
+            let u: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            rxs.push(svc.submit(JudgeRequest {
+                a: (0..n * n).map(|k| a.get(k / n, k % n) as f32).collect(),
+                u: u.iter().map(|&x| x as f32).collect(),
+                n,
+                lam_min: (l1 * 0.99) as f32,
+                lam_max: (ln * 1.01) as f32,
+                t: 1.0,
+            }));
+        }
+        let mut pjrt = 0usize;
+        for rx in rxs {
+            if matches!(
+                rx.recv().unwrap().path,
+                gauss_bif::coordinator::RoutePath::Pjrt { .. }
+            ) {
+                pjrt += 1;
+            }
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        table.row(vec![
+            max_batch.to_string(),
+            wait_us.to_string(),
+            format!("{:.0}", n_requests as f64 / dt),
+            format!("{:.0}", 100.0 * pjrt as f64 / n_requests as f64),
+        ]);
+        svc.shutdown();
+    }
+    println!("{}", table.render());
+}

@@ -1,0 +1,54 @@
+//! Table 2 regeneration: running time + speedup for (k-)DPP and double
+//! greedy on the six Table-1 dataset substitutes.
+//!
+//! Defaults to scale 1/8 and a short chain so the whole bench suite runs
+//! in minutes; the recorded full-scale numbers live in EXPERIMENTS.md.
+//! Env overrides: GAUSS_BIF_SCALE, GAUSS_BIF_DATASETS, GAUSS_BIF_STEPS.
+//!
+//! Run: `cargo bench --bench bench_table2`
+
+use gauss_bif::config::RunConfig;
+use gauss_bif::experiments::table2::{self, Table2Budget};
+use gauss_bif::util::bench::{fmt_sci, Table};
+
+fn main() {
+    let scale: usize = std::env::var("GAUSS_BIF_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(8);
+    let n_datasets: usize = std::env::var("GAUSS_BIF_DATASETS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(4);
+    let gauss_steps: usize = std::env::var("GAUSS_BIF_STEPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(100);
+
+    let cfg = RunConfig { seed: 0x7AB2, dataset_scale: scale, ..Default::default() };
+    let budget = Table2Budget {
+        gauss_steps,
+        baseline_steps: 3,
+        baseline_timeout_s: 120.0,
+        dg_limit: Some(4000 / scale.max(1)),
+    };
+    println!("Table 2 at scale 1/{scale}, first {n_datasets} datasets\n");
+    let rows = table2::run(&cfg, budget, n_datasets);
+
+    let mut table = Table::new(&[
+        "dataset", "algo", "n", "nnz", "baseline s", "gauss s", "speedup",
+    ]);
+    for r in &rows {
+        table.row(vec![
+            r.dataset.into(),
+            r.algo.into(),
+            r.n.to_string(),
+            r.nnz.to_string(),
+            r.baseline_s.map_or("*".into(), fmt_sci),
+            fmt_sci(r.gauss_s),
+            r.speedup.map_or("*".into(), |s| format!("{s:.1}x")),
+        ]);
+    }
+    println!("{}", table.render());
+    println!("(DPP/kDPP rows: seconds per chain step; DG rows: full-run seconds; '*' = baseline infeasible, as in the paper)");
+}

@@ -1,0 +1,91 @@
+//! DPP and k-DPP sampling with the retrospective quadrature framework
+//! (paper §5.1), on an RBF-kernel dataset substitute — mirrors the
+//! workload behind Table 2's Dpp/k-Dpp rows and prints the same
+//! time + speedup columns.
+//!
+//! Run: `cargo run --release --example dpp_sampling`
+
+use gauss_bif::apps::{BifStrategy, DppConfig, DppSampler, KdppConfig, KdppSampler};
+use gauss_bif::datasets::{table1_specs, RIDGE};
+use gauss_bif::sparse::gershgorin_bounds;
+use gauss_bif::util::bench::{fmt_sci, fmt_speedup};
+use gauss_bif::util::rng::Rng;
+use std::time::Instant;
+
+fn main() {
+    let mut rng = Rng::new(7);
+    // Abalone substitute at 1/8 scale so the exact baseline stays feasible
+    // for a live demo (Table 2's full-scale run lives in EXPERIMENTS.md).
+    let spec = &table1_specs()[0];
+    let scale = 8;
+    let l = spec.build(&mut rng, scale);
+    let window = gershgorin_bounds(&l).clamp_lo(RIDGE * 0.5);
+    let n = l.n;
+    let k = n / 3;
+    println!(
+        "{} substitute (scale 1/{}): n={} nnz={} density={:.2e}",
+        spec.name,
+        scale,
+        n,
+        l.nnz(),
+        l.density()
+    );
+
+    // --- DPP: exact baseline vs retrospective quadrature ---
+    let steps_exact = 20;
+    let steps_gauss = 400;
+
+    let mut r = Rng::new(1001);
+    let mut exact = DppSampler::new(
+        &l,
+        DppConfig::new(BifStrategy::Exact, window).with_init_size(k),
+        &mut r,
+    );
+    let t0 = Instant::now();
+    exact.run(steps_exact, &mut r);
+    let exact_per_step = t0.elapsed().as_secs_f64() / steps_exact as f64;
+
+    let mut r = Rng::new(1001);
+    let mut gauss = DppSampler::new(
+        &l,
+        DppConfig::new(BifStrategy::Gauss, window).with_init_size(k),
+        &mut r,
+    );
+    let t0 = Instant::now();
+    gauss.run(steps_gauss, &mut r);
+    let gauss_per_step = t0.elapsed().as_secs_f64() / steps_gauss as f64;
+
+    println!("\nDPP  (per chain step):");
+    println!("  exact baseline : {}", fmt_sci(exact_per_step));
+    println!("  gauss (ours)   : {}", fmt_sci(gauss_per_step));
+    println!("  speedup        : {}", fmt_speedup(exact_per_step, gauss_per_step));
+    println!(
+        "  avg judge iterations: {:.1} (set size ~{})",
+        gauss.stats.judge_iters_total as f64 / gauss.stats.decisions.max(1) as f64,
+        gauss.current_set().len()
+    );
+
+    // --- k-DPP swap chain ---
+    let mut r = Rng::new(2002);
+    let mut exact = KdppSampler::new(&l, KdppConfig::new(BifStrategy::Exact, window, k), &mut r);
+    let t0 = Instant::now();
+    exact.run(steps_exact, &mut r);
+    let exact_per_step = t0.elapsed().as_secs_f64() / steps_exact as f64;
+
+    let mut r = Rng::new(2002);
+    let mut gauss = KdppSampler::new(&l, KdppConfig::new(BifStrategy::Gauss, window, k), &mut r);
+    let t0 = Instant::now();
+    gauss.run(steps_gauss, &mut r);
+    let gauss_per_step = t0.elapsed().as_secs_f64() / steps_gauss as f64;
+
+    println!("\nk-DPP (k = {k}, per swap proposal):");
+    println!("  exact baseline : {}", fmt_sci(exact_per_step));
+    println!("  gauss (ours)   : {}", fmt_sci(gauss_per_step));
+    println!("  speedup        : {}", fmt_speedup(exact_per_step, gauss_per_step));
+    println!(
+        "  acceptance rate: {:.2}",
+        gauss.stats.accepted as f64 / gauss.stats.steps as f64
+    );
+
+    println!("\ndpp_sampling OK");
+}

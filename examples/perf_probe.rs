@@ -1,0 +1,18 @@
+// perf probe: DPP gauss chain per-step cost (EXPERIMENTS.md §Perf)
+use gauss_bif::apps::{BifStrategy, DppConfig, DppSampler};
+use gauss_bif::datasets::random_sparse_spd;
+use gauss_bif::util::rng::Rng;
+fn main() {
+    for &n in &[5000usize, 20000, 50000] {
+        let mut rng = Rng::new(0xFEED);
+        let (l, w) = random_sparse_spd(&mut rng, n, 2e-4, 1e-2);
+        let mut r = Rng::new(1);
+        let mut s = DppSampler::new(&l, DppConfig::new(BifStrategy::Gauss, w).with_init_size(n/3), &mut r);
+        let steps = 300;
+        let t0 = std::time::Instant::now();
+        s.run(steps, &mut r);
+        let per = t0.elapsed().as_secs_f64()/steps as f64;
+        println!("n={n:6} nnz={:8} per-step={:.1}us avg-judge-iters={:.1}",
+            l.nnz(), per*1e6, s.stats.judge_iters_total as f64/s.stats.decisions as f64);
+    }
+}

@@ -1,0 +1,77 @@
+//! Quickstart: bound a bilinear inverse form `u^T A^{-1} u` with iteratively
+//! tightening Gauss-type quadrature, and use the retrospective judge to
+//! decide a comparison in a handful of iterations.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use gauss_bif::datasets::random_sparse_spd;
+use gauss_bif::linalg::Cholesky;
+use gauss_bif::quadrature::{judge_threshold, Gql, GqlOptions};
+use gauss_bif::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(42);
+
+    // A 500×500 sparse SPD matrix (1% density) and a random query vector.
+    let n = 500;
+    let (a, window) = random_sparse_spd(&mut rng, n, 0.01, 1e-2);
+    let u: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    println!(
+        "A: {}x{} CSR, nnz = {} (density {:.2e}), spectrum window [{:.3e}, {:.3e}]",
+        n,
+        n,
+        a.nnz(),
+        a.density(),
+        window.lo,
+        window.hi
+    );
+
+    // Ground truth (dense Cholesky — the thing quadrature avoids).
+    let exact = Cholesky::factor(&a.to_dense()).unwrap().bif(&u);
+    println!("exact  u^T A^-1 u = {exact:.6}");
+
+    // Iteratively tightening bounds (paper Alg. 5). Each step is one
+    // sparse matvec.
+    let opts = GqlOptions::new(window.lo, window.hi);
+    let mut gql = Gql::new(&a, &u, opts);
+    println!("\niter |    gauss (lower) | radau lower | radau upper | lobatto (upper)");
+    for _ in 0..25 {
+        let b = gql.step();
+        if b.iter % 5 == 0 || b.iter <= 3 {
+            println!(
+                "{:4} | {:16.6} | {:11.6} | {:11.6} | {:15.6}",
+                b.iter, b.gauss, b.radau_lower, b.radau_upper, b.lobatto
+            );
+        }
+        if b.exact {
+            break;
+        }
+    }
+    let b = gql.last_bounds().unwrap();
+    // fully converged bounds agree with the Cholesky value to rounding
+    let tol = 1e-9 * exact.abs();
+    assert!(b.lower() <= exact + tol && exact <= b.upper() + tol);
+    println!(
+        "\nafter {} iterations: bracket [{:.6}, {:.6}] (width {:.2e}) contains the truth",
+        gql.iterations(),
+        b.lower(),
+        b.upper(),
+        b.gap()
+    );
+
+    // The retrospective judge: decide "is 0.9·exact < BIF?" — typically in
+    // far fewer iterations than convergence requires.
+    let (ans, stats) = judge_threshold(&a, &u, 0.9 * exact, opts);
+    println!(
+        "judge(0.9·exact < BIF) = {ans} after only {} iterations ({:?})",
+        stats.iters, stats.outcome
+    );
+    assert!(ans);
+    let (ans, stats) = judge_threshold(&a, &u, 1.1 * exact, opts);
+    println!(
+        "judge(1.1·exact < BIF) = {ans} after only {} iterations ({:?})",
+        stats.iters, stats.outcome
+    );
+    assert!(!ans);
+    println!("\nquickstart OK");
+}

@@ -1,0 +1,118 @@
+"""AOT pipeline: lower the L2 GQL model to HLO *text* artifacts + manifest.
+
+Python runs once at build time (``make artifacts``); the rust runtime loads
+``artifacts/*.hlo.txt`` via ``HloModuleProto::from_text_file`` and never
+calls back into python.
+
+HLO text — not ``.serialize()`` — is the interchange format: jax ≥ 0.5 emits
+HloModuleProtos with 64-bit instruction ids which the image's xla_extension
+0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly.  See /opt/xla-example/load_hlo/.
+
+Artifact signature (all f32):
+  inputs : a [n,n] (or [b,n,n]), u [n] (or [b,n]), lam_min [] (or [b]),
+           lam_max [] (or [b])
+  outputs: 4-tuple (g, g_rr, g_lr, g_lo), each [iters] (or [b,iters])
+
+The manifest is plain JSON parsed by the in-repo parser in
+rust/src/config/json.rs.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# (n, batch, iters, use_pallas): serving buckets.  The single-query buckets
+# route through the fused Pallas Lanczos-step kernel; batched buckets use the
+# vmapped jnp step (see model.gql_bounds_batched docstring).
+DEFAULT_BUCKETS = [
+    (16, 1, 16, True),
+    (32, 1, 32, True),
+    (64, 1, 48, True),
+    (128, 1, 64, True),
+    (256, 1, 64, True),
+    (32, 8, 32, False),
+    (64, 8, 48, False),
+    (128, 8, 64, False),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_bucket(n: int, batch: int, iters: int, use_pallas: bool) -> str:
+    import jax.numpy as jnp
+
+    f32 = jnp.float32
+    if batch == 1:
+        spec_a = jax.ShapeDtypeStruct((n, n), f32)
+        spec_u = jax.ShapeDtypeStruct((n,), f32)
+        spec_s = jax.ShapeDtypeStruct((), f32)
+
+        def fn(a, u, lam_min, lam_max):
+            return model.gql_bounds(a, u, lam_min, lam_max, iters,
+                                    use_pallas=use_pallas)
+    else:
+        spec_a = jax.ShapeDtypeStruct((batch, n, n), f32)
+        spec_u = jax.ShapeDtypeStruct((batch, n), f32)
+        spec_s = jax.ShapeDtypeStruct((batch,), f32)
+
+        def fn(a, u, lam_min, lam_max):
+            return model.gql_bounds_batched(a, u, lam_min, lam_max, iters,
+                                            use_pallas=use_pallas)
+
+    lowered = jax.jit(fn).lower(spec_a, spec_u, spec_s, spec_s)
+    return to_hlo_text(lowered)
+
+
+def build(out_dir: str, buckets=None) -> dict:
+    buckets = buckets or DEFAULT_BUCKETS
+    os.makedirs(out_dir, exist_ok=True)
+    entries = []
+    for n, batch, iters, use_pallas in buckets:
+        name = f"gql_n{n}_b{batch}_i{iters}"
+        path = f"{name}.hlo.txt"
+        text = lower_bucket(n, batch, iters, use_pallas)
+        with open(os.path.join(out_dir, path), "w") as f:
+            f.write(text)
+        entries.append({
+            "name": name,
+            "path": path,
+            "n": n,
+            "batch": batch,
+            "iters": iters,
+            "dtype": "f32",
+            "pallas": use_pallas,
+        })
+        print(f"  wrote {path} ({len(text)} chars)")
+    manifest = {"version": 1, "entries": entries}
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"  wrote manifest.json ({len(entries)} entries)")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--quick", action="store_true",
+                    help="only the two smallest buckets (for tests)")
+    args = ap.parse_args()
+    buckets = DEFAULT_BUCKETS[:2] if args.quick else DEFAULT_BUCKETS
+    build(args.out_dir, buckets)
+
+
+if __name__ == "__main__":
+    main()

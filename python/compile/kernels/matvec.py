@@ -1,0 +1,125 @@
+"""L1 Pallas kernels: VMEM-tiled symmetric matvec and the fused Lanczos step.
+
+These are the per-iteration hot-spot of GQL.  The TPU mapping (see
+DESIGN.md §Hardware-Adaptation):
+
+* ``matvec_tiled`` — A is tiled into ``(TM, N)`` row panels; each grid step
+  holds one panel plus the full ``u`` in VMEM and emits a ``(TM,)`` slice of
+  ``y``.  ``dot(panel, u)`` maps to an (TM x N)·(N x 1) MXU op.  The
+  BlockSpec index maps express the HBM↔VMEM schedule the paper's CPU code
+  left to the BLAS.
+* ``lanczos_step_fused`` — for bucket sizes where whole-A fits in VMEM
+  (all serving buckets: N ≤ 512 → ≤ 1 MiB f32), the matvec and both BLAS-1
+  reductions (alpha, beta) plus the vector update are fused into a single
+  pass: one HBM read of A per Lanczos iteration instead of three vector
+  sweeps.
+
+All kernels are lowered with ``interpret=True``: the image's CPU PJRT cannot
+run Mosaic custom-calls, so interpret mode is both the validation path and
+the artifact path; real-TPU perf is estimated structurally in DESIGN.md.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True  # CPU PJRT requirement; see module docstring.
+
+
+def _matvec_kernel(a_ref, u_ref, o_ref):
+    # One (TM, N) row panel of A against the full u vector.
+    o_ref[...] = a_ref[...] @ u_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def matvec_tiled(a, u, *, block_rows=128):
+    """y = A @ u with A:[n,n] tiled into (block_rows, n) VMEM panels."""
+    n = a.shape[0]
+    tm = min(block_rows, n)
+    if n % tm != 0:
+        # fall back to a single whole-matrix panel for ragged sizes
+        tm = n
+    grid = (n // tm,)
+    return pl.pallas_call(
+        _matvec_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, n), lambda i: (i, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tm,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), a.dtype),
+        interpret=INTERPRET,
+    )(a, u)
+
+
+def _matvec_batched_kernel(a_ref, u_ref, o_ref):
+    # a_ref: (1, TM, N); u_ref: (1, N); o_ref: (1, TM)
+    o_ref[...] = (a_ref[0] @ u_ref[0])[None]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def matvec_tiled_batched(a, u, *, block_rows=128):
+    """y[b] = A[b] @ u[b] with grid (B, n/TM): the batcher's bucket maps to
+    the leading grid axis so one dispatch serves a whole bucket."""
+    b, n, _ = a.shape
+    tm = min(block_rows, n)
+    if n % tm != 0:
+        tm = n
+    grid = (b, n // tm)
+    return pl.pallas_call(
+        _matvec_batched_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, tm, n), lambda bi, i: (bi, i, 0)),
+            pl.BlockSpec((1, n), lambda bi, i: (bi, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, tm), lambda bi, i: (bi, i)),
+        out_shape=jax.ShapeDtypeStruct((b, n), a.dtype),
+        interpret=INTERPRET,
+    )(a, u)
+
+
+def _lanczos_step_kernel(a_ref, vp_ref, vc_ref, bp_ref, alpha_ref, beta_ref, vn_ref):
+    """Fused Lanczos step; see lanczos_step_ref in ref.py for the math."""
+    vc = vc_ref[...]
+    av = a_ref[...] @ vc
+    alpha = jnp.sum(av * vc)
+    w = av - alpha * vc - bp_ref[0] * vp_ref[...]
+    beta = jnp.sqrt(jnp.sum(w * w))
+    alpha_ref[0] = alpha
+    beta_ref[0] = beta
+    safe = jnp.where(beta > 0, beta, jnp.ones_like(beta))
+    vn_ref[...] = jnp.where(beta > 0, w / safe, jnp.zeros_like(w))
+
+
+@jax.jit
+def lanczos_step_fused(a, v_prev, v_curr, beta_prev):
+    """(alpha, beta, v_next) in one fused pass; whole-A-in-VMEM variant.
+
+    ``beta_prev`` is a scalar or shape-(1,) array.
+    """
+    n = a.shape[0]
+    bp = jnp.asarray(beta_prev, dtype=a.dtype).reshape((1,))
+    alpha, beta, v_next = pl.pallas_call(
+        _lanczos_step_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((1,), a.dtype),
+            jax.ShapeDtypeStruct((1,), a.dtype),
+            jax.ShapeDtypeStruct((n,), a.dtype),
+        ),
+        interpret=INTERPRET,
+    )(a, v_prev, v_curr, bp)
+    return alpha[0], beta[0], v_next
+
+
+def vmem_bytes(n, block_rows=128, dtype_bytes=4, batched=1):
+    """Structural VMEM footprint of one grid step of the tiled matvec:
+    one (TM, N) panel + u + y-slice.  Used by DESIGN.md's roofline estimate
+    and asserted < 16 MiB in tests for every serving bucket."""
+    tm = min(block_rows, n)
+    return batched * (tm * n + n + tm) * dtype_bytes

@@ -1,0 +1,160 @@
+"""L2: the GQL compute graph in JAX (paper Alg. 5), calling the L1 kernels.
+
+``gql_bounds`` runs a fixed number of Gauss-Quadrature-Lanczos iterations as
+a ``lax.scan`` whose body is the fused Pallas Lanczos step plus the
+Sherman–Morrison bound recurrences, returning the full per-iteration history
+of the four Gauss-type bounds.  The rust coordinator then scans that history
+for the first iteration at which a retrospective judge becomes decidable —
+that keeps PJRT artifacts fixed-shape while preserving the paper's
+"iterate-until-decidable" semantics.
+
+``gql_bounds_batched`` vmaps over a bucket of queries; one PJRT dispatch
+serves a whole dynamic-batcher bucket.
+
+Shapes are bridged by identity padding (see ``pad_query``): blkdiag(A, I)
+with zero-padded u leaves every Lanczos iterate — hence every bound —
+unchanged, which tests assert exactly.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from compile.kernels import matvec as kernels
+
+
+def _radau_lobatto(g, unorm2, beta, c, delta, d_lr, d_rr, lam_min, lam_max):
+    """Bound corrections from the modified Jacobi matrices (see ref.py for
+    the Lobatto coefficient derivation)."""
+    beta2 = beta * beta
+    a_lr = lam_min + beta2 / d_lr
+    a_rr = lam_max + beta2 / d_rr
+    denom = d_rr - d_lr
+    b_lo2 = (lam_max - lam_min) * d_lr * d_rr / denom
+    a_lo = (lam_max * d_rr - lam_min * d_lr) / denom
+    c2 = c * c
+    g_rr = g + unorm2 * beta2 * c2 / (delta * (a_rr * delta - beta2))
+    g_lr = g + unorm2 * beta2 * c2 / (delta * (a_lr * delta - beta2))
+    g_lo = g + unorm2 * b_lo2 * c2 / (delta * (a_lo * delta - b_lo2))
+    return g_rr, g_lr, g_lo
+
+
+def gql_bounds(a, u, lam_min, lam_max, iters, *, use_pallas=True):
+    """Per-iteration GQL bounds on u^T A^{-1} u.
+
+    Args:
+      a: [n, n] symmetric positive definite (f32).
+      u: [n] query vector (nonzero).
+      lam_min, lam_max: scalars straddling the spectrum (0 < lam_min ≤ λ_1,
+        lam_max ≥ λ_n).
+      iters: static number of quadrature iterations.
+      use_pallas: route the Lanczos step through the L1 kernel (default) or
+        the pure-jnp reference (used by tests to isolate kernel bugs).
+
+    Returns:
+      (g, g_rr, g_lr, g_lo): four [iters] arrays; g/g_rr are lower bounds,
+      g_lr/g_lo upper bounds, monotone per Corr. 7.  After Krylov breakdown
+      all four freeze at the (exact) Gauss value.
+    """
+    n = a.shape[0]
+    dtype = a.dtype
+    unorm2 = jnp.sum(u * u)
+    u0 = u / jnp.sqrt(unorm2)
+    lam_min = jnp.asarray(lam_min, dtype)
+    lam_max = jnp.asarray(lam_max, dtype)
+
+    def step_kernel(v_prev, v_curr, beta_prev):
+        if use_pallas:
+            return kernels.lanczos_step_fused(a, v_prev, v_curr, beta_prev)
+        av = a @ v_curr
+        alpha = jnp.sum(av * v_curr)
+        w = av - alpha * v_curr - beta_prev * v_prev
+        beta = jnp.sqrt(jnp.sum(w * w))
+        safe = jnp.where(beta > 0, beta, jnp.ones_like(beta))
+        v_next = jnp.where(beta > 0, w / safe, jnp.zeros_like(w))
+        return alpha, beta, v_next
+
+    # --- iteration 1 (initializes every recurrence) ---
+    alpha1, beta1, v1 = step_kernel(jnp.zeros_like(u0), u0, jnp.zeros((), dtype))
+    g1 = unorm2 / alpha1
+    c1 = jnp.ones((), dtype)
+    delta1 = alpha1
+    d_lr1 = alpha1 - lam_min
+    d_rr1 = alpha1 - lam_max
+    grr1, glr1, glo1 = _radau_lobatto(
+        g1, unorm2, beta1, c1, delta1, d_lr1, d_rr1, lam_min, lam_max
+    )
+
+    def body(carry, _):
+        v_prev, v_curr, beta_prev, g, c, delta, d_lr, d_rr = carry
+        alive = beta_prev > 0
+
+        alpha, beta, v_next = step_kernel(v_prev, v_curr, beta_prev)
+
+        bp2 = beta_prev * beta_prev
+        g_new = g + unorm2 * bp2 * c * c / (delta * (alpha * delta - bp2))
+        c_new = c * beta_prev / delta
+        delta_new = alpha - bp2 / delta
+        d_lr_new = alpha - lam_min - bp2 / d_lr
+        d_rr_new = alpha - lam_max - bp2 / d_rr
+        g_rr, g_lr, g_lo = _radau_lobatto(
+            g_new, unorm2, beta, c_new, delta_new, d_lr_new, d_rr_new,
+            lam_min, lam_max,
+        )
+
+        # Krylov breakdown: freeze everything at the exact Gauss value.
+        g_out = jnp.where(alive, g_new, g)
+        outs = (
+            g_out,
+            jnp.where(alive, g_rr, g),
+            jnp.where(alive, g_lr, g),
+            jnp.where(alive, g_lo, g),
+        )
+        carry = (
+            jnp.where(alive, v_curr, v_prev),
+            jnp.where(alive, v_next, v_curr),
+            jnp.where(alive, beta, beta_prev * 0),
+            g_out,
+            jnp.where(alive, c_new, c),
+            jnp.where(alive, delta_new, delta),
+            jnp.where(alive, d_lr_new, d_lr),
+            jnp.where(alive, d_rr_new, d_rr),
+        )
+        return carry, outs
+
+    carry0 = (u0, v1, beta1, g1, c1, delta1, d_lr1, d_rr1)
+    if iters > 1:
+        _, (gs, grrs, glrs, glos) = lax.scan(body, carry0, None, length=iters - 1)
+        g = jnp.concatenate([g1[None], gs])
+        g_rr = jnp.concatenate([grr1[None], grrs])
+        g_lr = jnp.concatenate([glr1[None], glrs])
+        g_lo = jnp.concatenate([glo1[None], glos])
+    else:
+        g, g_rr, g_lr, g_lo = g1[None], grr1[None], glr1[None], glo1[None]
+    return g, g_rr, g_lr, g_lo
+
+
+def gql_bounds_batched(a, u, lam_min, lam_max, iters, *, use_pallas=False):
+    """vmapped GQL over a bucket: a:[B,n,n], u:[B,n], lam_*:[B].
+
+    The batched artifact uses the jnp step (vmap of a pallas_call in
+    interpret mode lowers to per-example loops anyway; the single-query
+    artifact exercises the kernel).
+    """
+    fn = functools.partial(gql_bounds, iters=iters, use_pallas=use_pallas)
+    return jax.vmap(fn, in_axes=(0, 0, 0, 0))(a, u, lam_min, lam_max)
+
+
+def pad_query(a, u, n_pad):
+    """Identity-pad a query to bucket size ``n_pad``: A ← blkdiag(A, I),
+    u ← [u; 0].  Leaves u^T A^{-1} u and every GQL iterate unchanged."""
+    n = a.shape[0]
+    if n == n_pad:
+        return a, u
+    a_p = jnp.eye(n_pad, dtype=a.dtype).at[:n, :n].set(a)
+    u_p = jnp.zeros((n_pad,), dtype=u.dtype).at[:n].set(u)
+    return a_p, u_p

@@ -1,0 +1,131 @@
+"""L2 model correctness: the scan-based jax GQL (with and without the Pallas
+kernel on the hot path) against the float64 oracle, plus the identity-padding
+shape bridge and batching semantics the rust coordinator relies on.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+SEEDS = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+def make_problem(n, seed, lam1=0.5, density=0.7):
+    # float32 on the model path wants moderate conditioning
+    a, lmin, lmax = ref.random_spd(n, density=density, lam1=lam1, seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    u = rng.standard_normal(n)
+    return (a.astype(np.float32), u.astype(np.float32),
+            np.float32(lmin * 0.99), np.float32(lmax * 1.01))
+
+
+class TestModelVsOracle:
+    @settings(max_examples=10, deadline=None)
+    @given(n=st.sampled_from([8, 16, 32]), seed=SEEDS)
+    def test_jnp_path_matches_f64_oracle(self, n, seed):
+        a, u, lmin, lmax = make_problem(n, seed)
+        iters = n // 2
+        got = model.gql_bounds(a, u, lmin, lmax, iters, use_pallas=False)
+        want = ref.gql_bounds_ref(np.asarray(a, np.float64), u, float(lmin),
+                                  float(lmax), iters)
+        for gg, ww in zip(got, want):
+            np.testing.assert_allclose(np.asarray(gg), ww, rtol=5e-3, atol=1e-4)
+
+    @settings(max_examples=8, deadline=None)
+    @given(n=st.sampled_from([8, 16, 32]), seed=SEEDS)
+    def test_pallas_path_matches_jnp_path(self, n, seed):
+        a, u, lmin, lmax = make_problem(n, seed)
+        iters = n // 2
+        got = model.gql_bounds(a, u, lmin, lmax, iters, use_pallas=True)
+        want = model.gql_bounds(a, u, lmin, lmax, iters, use_pallas=False)
+        for gg, ww in zip(got, want):
+            np.testing.assert_allclose(np.asarray(gg), np.asarray(ww),
+                                       rtol=1e-3, atol=1e-4)
+
+    def test_bounds_sandwich_truth_f32(self):
+        a, u, lmin, lmax = make_problem(24, 3)
+        exact = ref.bif_exact(a, u)
+        g, g_rr, g_lr, g_lo = model.gql_bounds(a, u, lmin, lmax, 12,
+                                               use_pallas=True)
+        tol = 1e-3 * abs(exact)
+        assert np.all(np.asarray(g) <= exact + tol)
+        assert np.all(np.asarray(g_rr) <= exact + tol)
+        assert np.all(np.asarray(g_lr) >= exact - tol)
+        assert np.all(np.asarray(g_lo) >= exact - tol)
+
+    def test_breakdown_freezes_at_exact(self):
+        """iters > n: after Krylov exhaustion all rules equal the exact BIF
+        and contain no NaN/inf."""
+        n = 6
+        a, u, lmin, lmax = make_problem(n, 9, density=1.0)
+        exact = ref.bif_exact(a, u)
+        outs = model.gql_bounds(a, u, lmin, lmax, n + 5, use_pallas=False)
+        for o in outs:
+            o = np.asarray(o)
+            assert np.all(np.isfinite(o))
+            assert abs(o[-1] - exact) / abs(exact) < 5e-3
+
+    def test_single_iteration_shape(self):
+        a, u, lmin, lmax = make_problem(8, 1)
+        outs = model.gql_bounds(a, u, lmin, lmax, 1, use_pallas=False)
+        for o in outs:
+            assert o.shape == (1,)
+
+
+class TestPaddingBridge:
+    @settings(max_examples=10, deadline=None)
+    @given(n=st.sampled_from([5, 8, 13]), n_pad=st.sampled_from([16, 32]),
+           seed=SEEDS)
+    def test_identity_padding_is_exact_invariance(self, n, n_pad, seed):
+        """blkdiag(A, I) + zero-padded u leaves every GQL iterate unchanged —
+        this is what lets the coordinator bucket dense queries."""
+        a, u, lmin, lmax = make_problem(n, seed)
+        a_p, u_p = model.pad_query(jnp.asarray(a), jnp.asarray(u), n_pad)
+        assert a_p.shape == (n_pad, n_pad) and u_p.shape == (n_pad,)
+        iters = max(2, n // 2)
+        got = model.gql_bounds(np.asarray(a_p), np.asarray(u_p), lmin, lmax,
+                               iters, use_pallas=False)
+        want = model.gql_bounds(a, u, lmin, lmax, iters, use_pallas=False)
+        for gg, ww in zip(got, want):
+            np.testing.assert_allclose(np.asarray(gg), np.asarray(ww),
+                                       rtol=1e-5, atol=1e-6)
+
+    def test_pad_noop_when_equal(self):
+        a, u, *_ = make_problem(16, 0)
+        a_p, u_p = model.pad_query(jnp.asarray(a), jnp.asarray(u), 16)
+        np.testing.assert_array_equal(np.asarray(a_p), a)
+
+
+class TestBatched:
+    def test_batched_matches_loop(self):
+        b, n, iters = 4, 16, 8
+        As, Us, lmins, lmaxs = [], [], [], []
+        for s in range(b):
+            a, u, lmin, lmax = make_problem(n, s)
+            As.append(a); Us.append(u); lmins.append(lmin); lmaxs.append(lmax)
+        A = np.stack(As); U = np.stack(Us)
+        LMIN = np.array(lmins, np.float32); LMAX = np.array(lmaxs, np.float32)
+        got = model.gql_bounds_batched(A, U, LMIN, LMAX, iters)
+        for i in range(b):
+            want = model.gql_bounds(As[i], Us[i], lmins[i], lmaxs[i], iters,
+                                    use_pallas=False)
+            for gg, ww in zip(got, want):
+                np.testing.assert_allclose(np.asarray(gg)[i], np.asarray(ww),
+                                           rtol=1e-5, atol=1e-6)
+
+    def test_batched_shapes(self):
+        b, n, iters = 2, 8, 5
+        a = np.stack([np.eye(n, dtype=np.float32) * 2] * b)
+        u = np.ones((b, n), np.float32)
+        lm = np.full((b,), 1.0, np.float32)
+        lx = np.full((b,), 3.0, np.float32)
+        outs = model.gql_bounds_batched(a, u, lm, lx, iters)
+        for o in outs:
+            assert o.shape == (b, iters)
+        # A = 2I ⇒ u'A⁻¹u = n/2 exactly at iteration 1
+        np.testing.assert_allclose(np.asarray(outs[0])[:, 0], n / 2, rtol=1e-6)

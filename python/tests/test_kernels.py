@@ -1,0 +1,140 @@
+"""L1 kernel correctness: Pallas kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes/dtypes; every case asserts allclose against ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matvec as K
+from compile.kernels import ref
+
+SIZES = st.sampled_from([1, 2, 3, 8, 16, 33, 64, 128])
+DTYPES = st.sampled_from([np.float32])
+SEEDS = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+def _rand(rng, shape, dtype):
+    return rng.standard_normal(shape).astype(dtype)
+
+
+class TestMatvecTiled:
+    @settings(max_examples=40, deadline=None)
+    @given(n=SIZES, dtype=DTYPES, seed=SEEDS)
+    def test_matches_ref(self, n, dtype, seed):
+        rng = np.random.default_rng(seed)
+        a = _rand(rng, (n, n), dtype)
+        u = _rand(rng, (n,), dtype)
+        got = K.matvec_tiled(a, u)
+        want = ref.matvec_ref(jnp.asarray(a), jnp.asarray(u))
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    @settings(max_examples=15, deadline=None)
+    @given(n=st.sampled_from([128, 256]), block=st.sampled_from([32, 64, 128]),
+           seed=SEEDS)
+    def test_block_rows_invariance(self, n, block, seed):
+        """Tiling must not change the numbers (schedule-only knob)."""
+        rng = np.random.default_rng(seed)
+        a = _rand(rng, (n, n), np.float32)
+        u = _rand(rng, (n,), np.float32)
+        got = K.matvec_tiled(a, u, block_rows=block)
+        want = K.matvec_tiled(a, u, block_rows=n)
+        # different panel shapes pick different XLA dot blockings ⇒ f32
+        # summation-order noise, nothing more
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_ragged_size_falls_back_to_single_panel(self):
+        rng = np.random.default_rng(0)
+        a = _rand(rng, (37, 37), np.float32)
+        u = _rand(rng, (37,), np.float32)
+        got = K.matvec_tiled(a, u, block_rows=16)
+        np.testing.assert_allclose(got, a @ u, rtol=1e-5, atol=1e-5)
+
+
+class TestMatvecBatched:
+    @settings(max_examples=25, deadline=None)
+    @given(b=st.sampled_from([1, 2, 5, 8]), n=st.sampled_from([8, 16, 64]),
+           seed=SEEDS)
+    def test_matches_ref(self, b, n, seed):
+        rng = np.random.default_rng(seed)
+        a = _rand(rng, (b, n, n), np.float32)
+        u = _rand(rng, (b, n), np.float32)
+        got = K.matvec_tiled_batched(a, u)
+        want = ref.matvec_ref(jnp.asarray(a), jnp.asarray(u))
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_batch_independence(self):
+        """Each lane must see only its own (A, u)."""
+        rng = np.random.default_rng(7)
+        a = _rand(rng, (3, 16, 16), np.float32)
+        u = _rand(rng, (3, 16), np.float32)
+        full = np.asarray(K.matvec_tiled_batched(a, u))
+        for i in range(3):
+            solo = np.asarray(K.matvec_tiled(a[i], u[i]))
+            np.testing.assert_allclose(full[i], solo, rtol=1e-6, atol=1e-6)
+
+
+class TestLanczosStepFused:
+    @settings(max_examples=40, deadline=None)
+    @given(n=SIZES, seed=SEEDS, with_prev=st.booleans())
+    def test_matches_ref(self, n, seed, with_prev):
+        rng = np.random.default_rng(seed)
+        a = _rand(rng, (n, n), np.float32)
+        a = (a + a.T) / 2
+        v_curr = _rand(rng, (n,), np.float32)
+        v_curr /= np.linalg.norm(v_curr)
+        if with_prev:
+            v_prev = _rand(rng, (n,), np.float32)
+            v_prev /= np.linalg.norm(v_prev)
+            beta_prev = np.float32(abs(rng.standard_normal()))
+        else:
+            v_prev = np.zeros((n,), np.float32)
+            beta_prev = np.float32(0.0)
+        alpha, beta, v_next = K.lanczos_step_fused(a, v_prev, v_curr, beta_prev)
+        alpha_r, beta_r, v_next_r = ref.lanczos_step_ref(
+            jnp.asarray(a), jnp.asarray(v_prev), jnp.asarray(v_curr),
+            jnp.asarray(beta_prev))
+        np.testing.assert_allclose(alpha, alpha_r, rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(beta, beta_r, rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(v_next, v_next_r, rtol=1e-3, atol=1e-4)
+
+    def test_breakdown_returns_zero_vector(self):
+        """A = I: w = v - 1*v = 0 ⇒ beta = 0 and v_next = 0, no NaNs."""
+        n = 8
+        a = np.eye(n, dtype=np.float32)
+        v = np.zeros((n,), np.float32)
+        v[0] = 1.0
+        alpha, beta, v_next = K.lanczos_step_fused(
+            a, np.zeros_like(v), v, np.float32(0.0))
+        assert np.isclose(float(alpha), 1.0)
+        assert np.isclose(float(beta), 0.0)
+        assert np.all(np.isfinite(np.asarray(v_next)))
+        np.testing.assert_allclose(v_next, 0.0)
+
+    def test_orthogonality_one_step(self):
+        """v_next ⟂ v_curr after an exact step."""
+        rng = np.random.default_rng(3)
+        n = 32
+        a = _rand(rng, (n, n), np.float32)
+        a = (a + a.T) / 2
+        v = _rand(rng, (n,), np.float32)
+        v /= np.linalg.norm(v)
+        _, beta, v_next = K.lanczos_step_fused(a, np.zeros_like(v), v,
+                                               np.float32(0.0))
+        assert abs(float(np.asarray(v_next) @ v)) < 1e-4
+        assert abs(float(np.linalg.norm(np.asarray(v_next))) - 1.0) < 1e-4
+
+
+class TestVmemBudget:
+    @pytest.mark.parametrize("n", [16, 32, 64, 128, 256, 512])
+    def test_buckets_fit_vmem(self, n):
+        assert K.vmem_bytes(n) <= 16 * 2**20
+
+    def test_tiling_kicks_in_beyond_vmem(self):
+        # At n=8192 a whole-A panel would blow VMEM; tiling caps the panel.
+        whole = K.vmem_bytes(8192, block_rows=8192)
+        tiled = K.vmem_bytes(8192, block_rows=128)
+        assert whole > 16 * 2**20 > tiled

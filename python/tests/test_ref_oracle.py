@@ -1,0 +1,156 @@
+"""Validate the oracle itself: the Sherman–Morrison GQL recurrences in
+ref.gql_bounds_ref against (a) direct modified-Jacobi-matrix evaluation and
+(b) the exact BIF, plus the paper's theorems as executable properties.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+
+SEEDS = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+def make_problem(n, density, lam1, seed):
+    a, lmin, lmax = ref.random_spd(n, density=density, lam1=lam1, seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    u = rng.standard_normal(n)
+    return a, u, lmin, lmax
+
+
+class TestRecurrencesVsDirect:
+    @settings(max_examples=15, deadline=None)
+    @given(n=st.sampled_from([4, 8, 16, 32]), seed=SEEDS)
+    def test_sherman_morrison_matches_direct_solve(self, n, seed):
+        a, u, lmin, lmax = make_problem(n, 0.5, 1e-1, seed)
+        lam_min, lam_max = lmin * 0.999, lmax * 1.001
+        iters = n - 1  # strictly before exhaustion: recurrences well-defined
+        got = ref.gql_bounds_ref(a, u, lam_min, lam_max, iters)
+        want = ref.gql_bounds_eig_ref(a, u, lam_min, lam_max, iters)
+        for g1, g2 in zip(got, want):
+            np.testing.assert_allclose(g1, g2, rtol=1e-6, atol=1e-8)
+
+    def test_exact_at_n_iterations(self):
+        a, u, lmin, lmax = make_problem(24, 0.6, 1e-1, 5)
+        exact = ref.bif_exact(a, u)
+        g, g_rr, g_lr, g_lo = ref.gql_bounds_ref(
+            a, u, lmin * 0.999, lmax * 1.001, 24)
+        assert abs(g[-1] - exact) / exact < 1e-8
+        assert abs(g_rr[-1] - exact) / exact < 1e-6
+        assert abs(g_lr[-1] - exact) / exact < 1e-6
+
+
+class TestPaperTheorems:
+    @settings(max_examples=20, deadline=None)
+    @given(n=st.sampled_from([16, 32, 64]), seed=SEEDS,
+           density=st.sampled_from([0.2, 0.5, 1.0]))
+    def test_bounds_sandwich_truth(self, n, seed, density):
+        """Thm. 2: g, g_rr ≤ u'A⁻¹u ≤ g_lr, g_lo at every iteration."""
+        a, u, lmin, lmax = make_problem(n, density, 1e-1, seed)
+        exact = ref.bif_exact(a, u)
+        g, g_rr, g_lr, g_lo = ref.gql_bounds_ref(
+            a, u, lmin * 0.99, lmax * 1.01, n - 1)
+        tol = 1e-7 * abs(exact)
+        assert np.all(g <= exact + tol)
+        assert np.all(g_rr <= exact + tol)
+        assert np.all(g_lr >= exact - tol)
+        assert np.all(g_lo >= exact - tol)
+
+    @settings(max_examples=20, deadline=None)
+    @given(n=st.sampled_from([16, 32, 64]), seed=SEEDS)
+    def test_monotonicity_corr7(self, n, seed):
+        a, u, lmin, lmax = make_problem(n, 0.4, 1e-1, seed)
+        g, g_rr, g_lr, g_lo = ref.gql_bounds_ref(
+            a, u, lmin * 0.99, lmax * 1.01, n - 1)
+        tol = 1e-9 * max(1.0, abs(g[-1]))
+        assert np.all(np.diff(g) >= -tol)
+        assert np.all(np.diff(g_rr) >= -tol)
+        assert np.all(np.diff(g_lr) <= tol)
+        assert np.all(np.diff(g_lo) <= tol)
+
+    @settings(max_examples=20, deadline=None)
+    @given(n=st.sampled_from([16, 32]), seed=SEEDS)
+    def test_ordering_thm4_thm6(self, n, seed):
+        """g_i ≤ g_i^rr ≤ g_{i+1} and g_{i+1}^lo ≤ g_i^lr ≤ g_i^lo."""
+        a, u, lmin, lmax = make_problem(n, 0.5, 1e-1, seed)
+        g, g_rr, g_lr, g_lo = ref.gql_bounds_ref(
+            a, u, lmin * 0.99, lmax * 1.01, n - 1)
+        tol = 1e-8 * max(1.0, abs(g[-1]))
+        assert np.all(g <= g_rr + tol)
+        assert np.all(g_rr[:-1] <= g[1:] + tol)
+        assert np.all(g_lr <= g_lo + tol)
+        assert np.all(g_lo[1:] <= g_lr[:-1] + tol)
+
+    def test_linear_rate_thm3(self):
+        """Relative error of Gauss ≤ 2((√κ−1)/(√κ+1))^i."""
+        a, u, lmin, lmax = make_problem(48, 1.0, 1.0, 11)
+        exact = ref.bif_exact(a, u)
+        kappa = lmax / lmin
+        rho = (np.sqrt(kappa) - 1) / (np.sqrt(kappa) + 1)
+        g, g_rr, _, _ = ref.gql_bounds_ref(a, u, lmin * 0.999, lmax * 1.001, 40)
+        for i, gi in enumerate(g, start=1):
+            assert (exact - gi) / exact <= 2 * rho**i + 1e-9
+        # Thm. 5: same rate for right Gauss-Radau
+        for i, gi in enumerate(g_rr, start=1):
+            assert (exact - gi) / exact <= 2 * rho**i + 1e-9
+
+    def test_radau_tighter_than_gauss_and_lobatto(self):
+        """Thm 4/6: at equal i, Radau dominates Gauss (lower) / Lobatto
+        (upper)."""
+        a, u, lmin, lmax = make_problem(32, 0.5, 1e-1, 13)
+        g, g_rr, g_lr, g_lo = ref.gql_bounds_ref(
+            a, u, lmin * 0.99, lmax * 1.01, 31)
+        assert np.all(g_rr >= g - 1e-12)
+        assert np.all(g_lr <= g_lo + 1e-12)
+
+
+class TestLobattoCoeffs:
+    @settings(max_examples=25, deadline=None)
+    @given(seed=SEEDS, n=st.sampled_from([2, 3, 5, 8]))
+    def test_extended_matrix_has_prescribed_eigenvalues(self, n, seed):
+        """The (a_lo, b_lo²) solution must place lam_min and lam_max in the
+        spectrum of the extended Jacobi matrix."""
+        a, u, lmin, lmax = make_problem(n + 4, 1.0, 1e-1, seed)
+        lam_min, lam_max = lmin * 0.9, lmax * 1.1
+        # run n Lanczos steps to get J_n, then extend
+        unorm = np.linalg.norm(u)
+        v = u / unorm
+        V = [v]
+        alphas, betas = [], []
+        v_prev, beta_prev = np.zeros_like(v), 0.0
+        for _ in range(n):
+            w = a @ v - beta_prev * v_prev
+            al = float(v @ w)
+            w = w - al * v
+            for q in V:
+                w -= (q @ w) * q
+            be = float(np.linalg.norm(w))
+            alphas.append(al)
+            betas.append(be)
+            v_prev, v, beta_prev = v, w / be, be
+            V.append(v)
+        d_lr, d_rr = alphas[0] - lam_min, alphas[0] - lam_max
+        for j in range(1, n):
+            d_lr = alphas[j] - lam_min - betas[j - 1] ** 2 / d_lr
+            d_rr = alphas[j] - lam_max - betas[j - 1] ** 2 / d_rr
+        a_lo, b_lo2 = ref.lobatto_coeffs(d_lr, d_rr, lam_min, lam_max)
+        assert b_lo2 > 0
+        J = np.diag(alphas) + np.diag(betas[:-1], 1) + np.diag(betas[:-1], -1)
+        Je = np.zeros((n + 1, n + 1))
+        Je[:n, :n] = J
+        Je[n, n] = a_lo
+        Je[n - 1, n] = Je[n, n - 1] = np.sqrt(b_lo2)
+        ev = np.linalg.eigvalsh(Je)
+        assert min(abs(ev - lam_min)) < 1e-6 * max(1, abs(lam_min))
+        assert min(abs(ev - lam_max)) < 1e-6 * abs(lam_max)
+
+
+class TestGenerator:
+    def test_random_spd_spectrum(self):
+        a, lmin, lmax = ref.random_spd(64, density=0.1, lam1=1e-2, seed=0)
+        ev = np.linalg.eigvalsh(a)
+        assert abs(ev[0] - 1e-2) < 1e-8
+        assert abs(ev[0] - lmin) < 1e-10
+        assert abs(ev[-1] - lmax) < 1e-8
+        np.testing.assert_allclose(a, a.T)

@@ -1,0 +1,9 @@
+//! Run configuration + the minimal JSON layer (serde is not in the
+//! offline crate cache): a full JSON parser/writer in [`json`] and typed
+//! config structs for the launcher and the artifact manifest.
+
+pub mod json;
+pub mod run;
+
+pub use json::{parse, Json, JsonError};
+pub use run::{ExperimentConfig, ManifestEntry, RunConfig};

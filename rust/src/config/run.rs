@@ -1,0 +1,179 @@
+//! Typed configuration: the artifact manifest (written by
+//! `python/compile/aot.py`) and launcher run configs.
+
+use super::json::{parse, Json, JsonError};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One AOT artifact bucket from `artifacts/manifest.json`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ManifestEntry {
+    pub name: String,
+    pub path: String,
+    pub n: usize,
+    pub batch: usize,
+    pub iters: usize,
+    pub dtype: String,
+    pub pallas: bool,
+}
+
+/// Parse the manifest JSON text.
+pub fn parse_manifest(src: &str) -> Result<Vec<ManifestEntry>, String> {
+    let v = parse(src).map_err(|e| e.to_string())?;
+    let entries = v
+        .get("entries")
+        .and_then(Json::as_arr)
+        .ok_or("manifest missing 'entries'")?;
+    let mut out = Vec::with_capacity(entries.len());
+    for (i, e) in entries.iter().enumerate() {
+        let gets = |k: &str| -> Result<&Json, String> {
+            e.get(k).ok_or(format!("entry {i} missing '{k}'"))
+        };
+        out.push(ManifestEntry {
+            name: gets("name")?.as_str().ok_or("name not a string")?.to_string(),
+            path: gets("path")?.as_str().ok_or("path not a string")?.to_string(),
+            n: gets("n")?.as_usize().ok_or("n not an integer")?,
+            batch: gets("batch")?.as_usize().ok_or("batch not an integer")?,
+            iters: gets("iters")?.as_usize().ok_or("iters not an integer")?,
+            dtype: gets("dtype")?.as_str().ok_or("dtype not a string")?.to_string(),
+            pallas: e.get("pallas").and_then(Json::as_bool).unwrap_or(false),
+        });
+    }
+    Ok(out)
+}
+
+/// Which experiment to run (launcher subcommands mirror these).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExperimentConfig {
+    Fig1,
+    Fig2,
+    Table2,
+    Rates,
+    Serve,
+}
+
+impl ExperimentConfig {
+    pub fn from_name(s: &str) -> Option<Self> {
+        match s {
+            "fig1" => Some(Self::Fig1),
+            "fig2" => Some(Self::Fig2),
+            "table2" => Some(Self::Table2),
+            "rates" => Some(Self::Rates),
+            "serve" => Some(Self::Serve),
+            _ => None,
+        }
+    }
+}
+
+/// Launcher run configuration, loadable from a JSON file and overridable
+/// from CLI flags.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunConfig {
+    pub seed: u64,
+    /// output directory for CSV/markdown results
+    pub out_dir: PathBuf,
+    /// artifacts directory (PJRT buckets)
+    pub artifacts_dir: PathBuf,
+    /// Table-2 size divisor (1 = paper size; larger = session-budget runs)
+    pub dataset_scale: usize,
+    /// chain iterations for the samplers
+    pub chain_iters: usize,
+    /// repetitions to average
+    pub repeats: usize,
+    /// extra free-form knobs
+    pub extra: BTreeMap<String, String>,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            seed: 0xB1F,
+            out_dir: PathBuf::from("results"),
+            artifacts_dir: PathBuf::from("artifacts"),
+            dataset_scale: 1,
+            chain_iters: 1000,
+            repeats: 3,
+            extra: BTreeMap::new(),
+        }
+    }
+}
+
+impl RunConfig {
+    pub fn from_json(src: &str) -> Result<Self, String> {
+        let v = parse(src).map_err(|e: JsonError| e.to_string())?;
+        let mut c = RunConfig::default();
+        if let Some(x) = v.get("seed").and_then(Json::as_f64) {
+            c.seed = x as u64;
+        }
+        if let Some(x) = v.get("out_dir").and_then(Json::as_str) {
+            c.out_dir = PathBuf::from(x);
+        }
+        if let Some(x) = v.get("artifacts_dir").and_then(Json::as_str) {
+            c.artifacts_dir = PathBuf::from(x);
+        }
+        if let Some(x) = v.get("dataset_scale").and_then(Json::as_usize) {
+            c.dataset_scale = x.max(1);
+        }
+        if let Some(x) = v.get("chain_iters").and_then(Json::as_usize) {
+            c.chain_iters = x;
+        }
+        if let Some(x) = v.get("repeats").and_then(Json::as_usize) {
+            c.repeats = x.max(1);
+        }
+        if let Some(Json::Obj(m)) = v.get("extra") {
+            for (k, val) in m {
+                if let Some(s) = val.as_str() {
+                    c.extra.insert(k.clone(), s.to_string());
+                }
+            }
+        }
+        Ok(c)
+    }
+
+    pub fn load(path: &Path) -> Result<Self, String> {
+        let src = std::fs::read_to_string(path)
+            .map_err(|e| format!("read {}: {e}", path.display()))?;
+        Self::from_json(&src)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses() {
+        let src = r#"{"version":1,"entries":[
+            {"name":"gql_n16_b1_i16","path":"gql_n16_b1_i16.hlo.txt","n":16,
+             "batch":1,"iters":16,"dtype":"f32","pallas":true},
+            {"name":"gql_n32_b8_i32","path":"x.hlo.txt","n":32,"batch":8,
+             "iters":32,"dtype":"f32","pallas":false}]}"#;
+        let m = parse_manifest(src).unwrap();
+        assert_eq!(m.len(), 2);
+        assert_eq!(m[0].n, 16);
+        assert!(m[0].pallas);
+        assert_eq!(m[1].batch, 8);
+    }
+
+    #[test]
+    fn manifest_missing_field_errors() {
+        let src = r#"{"entries":[{"name":"x"}]}"#;
+        assert!(parse_manifest(src).unwrap_err().contains("missing"));
+    }
+
+    #[test]
+    fn run_config_defaults_and_overrides() {
+        let c = RunConfig::from_json(r#"{"seed": 7, "dataset_scale": 8}"#).unwrap();
+        assert_eq!(c.seed, 7);
+        assert_eq!(c.dataset_scale, 8);
+        assert_eq!(c.chain_iters, 1000);
+        let d = RunConfig::default();
+        assert_eq!(d.repeats, 3);
+    }
+
+    #[test]
+    fn experiment_names() {
+        assert_eq!(ExperimentConfig::from_name("fig1"), Some(ExperimentConfig::Fig1));
+        assert_eq!(ExperimentConfig::from_name("nope"), None);
+    }
+}

@@ -1,0 +1,91 @@
+//! Size-bucketing and batch formation policy.
+//!
+//! Dense queries are identity-padded to the smallest artifact bucket that
+//! fits (padding is exact — see model.pad_query); queued requests sharing
+//! a bucket are drained together up to the bucket's batch width, waiting
+//! at most `max_wait` for stragglers.
+
+use std::time::Duration;
+
+/// Batch formation policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// max requests drained into one dispatch (bounded by the artifact's
+    /// batch width at dispatch time)
+    pub max_batch: usize,
+    /// how long the drainer waits for the batch to fill
+    pub max_wait: Duration,
+    /// queries with dim above this always take the native path
+    pub native_threshold: usize,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_micros(200),
+            native_threshold: 256,
+        }
+    }
+}
+
+/// Maps query dimensions to artifact bucket sizes.
+#[derive(Clone, Debug)]
+pub struct Bucketizer {
+    /// sorted ascending bucket sizes available as artifacts
+    sizes: Vec<usize>,
+}
+
+impl Bucketizer {
+    pub fn new(mut sizes: Vec<usize>) -> Self {
+        sizes.sort_unstable();
+        sizes.dedup();
+        Bucketizer { sizes }
+    }
+
+    /// Smallest bucket ≥ dim (None: dim exceeds all buckets → native path).
+    pub fn bucket(&self, dim: usize) -> Option<usize> {
+        self.sizes.iter().copied().find(|&s| s >= dim)
+    }
+
+    pub fn sizes(&self) -> &[usize] {
+        &self.sizes
+    }
+
+    /// Padding waste ratio for a query at this dim (diagnostics): padded
+    /// area / true area.
+    pub fn waste(&self, dim: usize) -> Option<f64> {
+        self.bucket(dim)
+            .map(|b| (b * b) as f64 / (dim * dim).max(1) as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_selection() {
+        let b = Bucketizer::new(vec![64, 16, 32, 64]);
+        assert_eq!(b.sizes(), &[16, 32, 64]);
+        assert_eq!(b.bucket(1), Some(16));
+        assert_eq!(b.bucket(16), Some(16));
+        assert_eq!(b.bucket(17), Some(32));
+        assert_eq!(b.bucket(65), None);
+    }
+
+    #[test]
+    fn waste_ratio() {
+        let b = Bucketizer::new(vec![16]);
+        assert_eq!(b.waste(16), Some(1.0));
+        assert_eq!(b.waste(8), Some(4.0));
+        assert_eq!(b.waste(17), None);
+    }
+
+    #[test]
+    fn default_policy_sane() {
+        let p = BatchPolicy::default();
+        assert!(p.max_batch >= 1);
+        assert!(p.native_threshold >= 64);
+    }
+}

@@ -1,0 +1,15 @@
+//! The serving layer: a BIF **judge service** in the style of an
+//! inference router — clients submit "is `t < u^T A^{-1} u`?" queries; a
+//! router sends small dense queries to the PJRT artifacts (bucketed +
+//! dynamically batched, vLLM-router style) and everything else to the
+//! native sparse GQL path. Python is never on this path.
+//!
+//! Threading: a worker pool over a condvar'd queue (tokio is not in the
+//! offline crate cache; the pool is ~the same shape an async runtime would
+//! give this CPU-bound workload anyway).
+
+pub mod batcher;
+pub mod service;
+
+pub use batcher::{BatchPolicy, Bucketizer};
+pub use service::{JudgeRequest, JudgeResponse, JudgeService, RoutePath};

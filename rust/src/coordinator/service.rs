@@ -1,0 +1,464 @@
+//! The judge service: request queue → router → (PJRT executor | native GQL).
+//!
+//! The `xla` crate's PJRT handles are not `Send`, so — exactly like a
+//! single physical accelerator — one dedicated **executor thread** owns the
+//! compiled artifacts; router/worker threads form batches and forward them
+//! over a channel, falling back to the native GQL path when the executor
+//! is absent (no artifacts) or reports an error.
+//!
+//! Lifecycle: [`JudgeService::start`] spawns workers (+ executor); clients
+//! call [`JudgeService::submit`] (returns a receiver) or
+//! [`JudgeService::judge_blocking`]. Drop/`shutdown` drains and joins.
+
+use super::batcher::{BatchPolicy, Bucketizer};
+use crate::config::run::parse_manifest;
+use crate::linalg::DMat;
+use crate::metrics::ServiceMetrics;
+use crate::quadrature::{judge_threshold, GqlOptions};
+use crate::runtime::{BoundsHistory, GqlRuntime};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+/// A dense threshold-judgement query: decide `t < u^T A^{-1} u`.
+#[derive(Clone, Debug)]
+pub struct JudgeRequest {
+    /// row-major dense symmetric matrix, `n*n`
+    pub a: Vec<f32>,
+    pub u: Vec<f32>,
+    pub n: usize,
+    pub lam_min: f32,
+    pub lam_max: f32,
+    pub t: f64,
+}
+
+/// Which path served a request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RoutePath {
+    /// PJRT dispatch into bucket `n` with this many co-batched requests
+    Pjrt { bucket: usize, batch: usize },
+    /// native rust GQL (big queries, no artifacts, or PJRT failure)
+    Native,
+}
+
+/// Service answer.
+#[derive(Clone, Debug)]
+pub struct JudgeResponse {
+    pub decision: bool,
+    /// quadrature iterations the decision consumed (first decisive
+    /// iteration for PJRT histories)
+    pub iters: usize,
+    pub path: RoutePath,
+}
+
+struct Queued {
+    req: JudgeRequest,
+    enqueued: Instant,
+    reply: Sender<JudgeResponse>,
+}
+
+/// Batch job sent to the executor thread.
+struct ExecJob {
+    bucket: usize,
+    items: Vec<Queued>,
+    /// per-item histories (None on execution failure)
+    reply: Sender<(Vec<Queued>, Option<Vec<BoundsHistory>>)>,
+}
+
+struct Shared {
+    queue: Mutex<Vec<Queued>>,
+    cv: Condvar,
+    shutdown: AtomicBool,
+}
+
+/// The running service.
+pub struct JudgeService {
+    shared: Arc<Shared>,
+    pub metrics: Arc<ServiceMetrics>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    executor: Option<std::thread::JoinHandle<()>>,
+}
+
+impl JudgeService {
+    /// Start with `n_workers` routing threads. `artifacts_dir = None`
+    /// forces the native path for everything.
+    pub fn start(
+        artifacts_dir: Option<PathBuf>,
+        policy: BatchPolicy,
+        n_workers: usize,
+    ) -> Self {
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(Vec::new()),
+            cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let metrics = Arc::new(ServiceMetrics::new());
+
+        // Parse the manifest on this thread (cheap) so the workers know
+        // the buckets; compile inside the executor thread (owns PJRT).
+        let (bucketizer, exec_tx, executor) = match artifacts_dir {
+            Some(dir) => {
+                let manifest = std::fs::read_to_string(dir.join("manifest.json"))
+                    .ok()
+                    .and_then(|s| parse_manifest(&s).ok());
+                match manifest {
+                    Some(entries) => {
+                        let sizes: Vec<usize> = entries
+                            .iter()
+                            .filter(|e| e.batch == 1)
+                            .map(|e| e.n)
+                            .collect();
+                        let (tx, rx) = channel::<ExecJob>();
+                        let handle = std::thread::spawn(move || executor_loop(dir, rx));
+                        (Bucketizer::new(sizes), Some(tx), Some(handle))
+                    }
+                    None => (Bucketizer::new(vec![]), None, None),
+                }
+            }
+            None => (Bucketizer::new(vec![]), None, None),
+        };
+
+        let exec_tx = Arc::new(Mutex::new(exec_tx));
+        let bucketizer = Arc::new(bucketizer);
+        let workers = (0..n_workers.max(1))
+            .map(|_| {
+                let shared = shared.clone();
+                let metrics = metrics.clone();
+                let bucketizer = bucketizer.clone();
+                let exec_tx = exec_tx.clone();
+                std::thread::spawn(move || {
+                    worker_loop(shared, metrics, bucketizer, exec_tx, policy)
+                })
+            })
+            .collect();
+        JudgeService { shared, metrics, workers, executor }
+    }
+
+    /// Enqueue a request; the receiver yields exactly one response.
+    pub fn submit(&self, req: JudgeRequest) -> Receiver<JudgeResponse> {
+        self.metrics.requests.inc();
+        let (tx, rx) = channel();
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.push(Queued { req, enqueued: Instant::now(), reply: tx });
+        }
+        self.shared.cv.notify_one();
+        rx
+    }
+
+    /// Submit and wait.
+    pub fn judge_blocking(&self, req: JudgeRequest) -> JudgeResponse {
+        self.submit(req).recv().expect("service dropped the reply")
+    }
+
+    /// Stop workers and join them.
+    pub fn shutdown(mut self) {
+        self.do_shutdown();
+    }
+
+    fn do_shutdown(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.cv.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        if let Some(e) = self.executor.take() {
+            // dropping all worker-held senders closes the channel; we only
+            // reach here after workers joined
+            let _ = e.join();
+        }
+    }
+}
+
+impl Drop for JudgeService {
+    fn drop(&mut self) {
+        self.do_shutdown();
+    }
+}
+
+/// The PJRT-owning thread: compiles artifacts once, serves batch jobs.
+fn executor_loop(dir: PathBuf, rx: Receiver<ExecJob>) {
+    let runtime = GqlRuntime::load(&dir).ok();
+    while let Ok(job) = rx.recv() {
+        let result = runtime.as_ref().and_then(|rt| run_job(rt, &job));
+        let _ = job.reply.send((job.items, result));
+    }
+}
+
+fn run_job(rt: &GqlRuntime, job: &ExecJob) -> Option<Vec<BoundsHistory>> {
+    let bucket = job.bucket;
+    let items = &job.items;
+    // prefer a batched artifact when >1 request shares the bucket
+    let batched = if items.len() > 1 {
+        rt.artifacts()
+            .iter()
+            .find(|a| a.meta.batch >= items.len() && a.meta.n == bucket)
+    } else {
+        None
+    };
+    match batched {
+        Some(art) => {
+            let (n, b) = (art.meta.n, art.meta.batch);
+            let mut a = Vec::with_capacity(b * n * n);
+            let mut u = Vec::with_capacity(b * n);
+            let mut lo = Vec::with_capacity(b);
+            let mut hi = Vec::with_capacity(b);
+            for item in items {
+                let (ap, up) = GqlRuntime::pad_query(&item.req.a, &item.req.u, item.req.n, n);
+                a.extend_from_slice(&ap);
+                u.extend_from_slice(&up);
+                lo.push(item.req.lam_min);
+                hi.push(item.req.lam_max);
+            }
+            for _ in items.len()..b {
+                // identity filler lanes
+                let mut ap = vec![0.0f32; n * n];
+                for i in 0..n {
+                    ap[i * n + i] = 1.0;
+                }
+                a.extend_from_slice(&ap);
+                let mut up = vec![0.0f32; n];
+                up[0] = 1.0;
+                u.extend_from_slice(&up);
+                lo.push(0.5);
+                hi.push(2.0);
+            }
+            art.execute_batch(&a, &u, &lo, &hi)
+                .ok()
+                .map(|h| h.into_iter().take(items.len()).collect())
+        }
+        None => items
+            .iter()
+            .map(|item| {
+                rt.gql_bounds(
+                    &item.req.a,
+                    &item.req.u,
+                    item.req.n,
+                    item.req.lam_min,
+                    item.req.lam_max,
+                )
+                .ok()
+            })
+            .collect(),
+    }
+}
+
+fn worker_loop(
+    shared: Arc<Shared>,
+    metrics: Arc<ServiceMetrics>,
+    bucketizer: Arc<Bucketizer>,
+    exec_tx: Arc<Mutex<Option<Sender<ExecJob>>>>,
+    policy: BatchPolicy,
+) {
+    loop {
+        let first = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if shared.shutdown.load(Ordering::SeqCst) && q.is_empty() {
+                    return;
+                }
+                if let Some(item) = pop_oldest(&mut q) {
+                    break item;
+                }
+                let (guard, _) = shared
+                    .cv
+                    .wait_timeout(q, policy.max_wait.max(std::time::Duration::from_millis(5)))
+                    .unwrap();
+                q = guard;
+            }
+        };
+
+        let dim = first.req.n;
+        let bucket = bucketizer.bucket(dim).filter(|_| dim <= policy.native_threshold);
+        let sender = { exec_tx.lock().unwrap().clone() };
+        let (bucket, sender) = match (bucket, sender) {
+            (Some(b), Some(s)) => (b, s),
+            _ => {
+                serve_native(&metrics, first);
+                continue;
+            }
+        };
+
+        // form a batch from same-bucket requests
+        let mut batch = vec![first];
+        let deadline = Instant::now() + policy.max_wait;
+        while batch.len() < policy.max_batch {
+            {
+                let mut q = shared.queue.lock().unwrap();
+                if let Some(pos) = q
+                    .iter()
+                    .position(|item| bucketizer.bucket(item.req.n) == Some(bucket))
+                {
+                    batch.push(q.remove(pos));
+                    continue;
+                }
+            }
+            if Instant::now() >= deadline {
+                break;
+            }
+            std::thread::yield_now();
+        }
+
+        metrics.batches.inc();
+        metrics.batch_size.lock().unwrap().record(batch.len() as f64);
+        let (reply_tx, reply_rx) = channel();
+        let n_items = batch.len();
+        if sender
+            .send(ExecJob { bucket, items: batch, reply: reply_tx })
+            .is_err()
+        {
+            // executor gone — nothing to do; items are lost with it. This
+            // only happens at shutdown.
+            continue;
+        }
+        let (items, histories) = match reply_rx.recv() {
+            Ok(r) => r,
+            Err(_) => continue,
+        };
+        match histories {
+            Some(hists) => {
+                for (item, h) in items.into_iter().zip(hists) {
+                    let (iters, decision) = match h.first_decision(item.req.t) {
+                        Some((i, d)) => (i + 1, d),
+                        None => {
+                            let last = h.at(h.len() - 1);
+                            (h.len(), item.req.t < last.mid())
+                        }
+                    };
+                    metrics.judge_iters.lock().unwrap().record(iters as f64);
+                    metrics
+                        .latency_ns
+                        .lock()
+                        .unwrap()
+                        .record(item.enqueued.elapsed().as_nanos() as f64);
+                    let _ = item.reply.send(JudgeResponse {
+                        decision,
+                        iters,
+                        path: RoutePath::Pjrt { bucket, batch: n_items },
+                    });
+                }
+            }
+            None => {
+                for item in items {
+                    serve_native(&metrics, item);
+                }
+            }
+        }
+    }
+}
+
+fn pop_oldest(q: &mut Vec<Queued>) -> Option<Queued> {
+    if q.is_empty() {
+        return None;
+    }
+    let idx = q
+        .iter()
+        .enumerate()
+        .min_by_key(|(_, item)| item.enqueued)
+        .map(|(i, _)| i)?;
+    Some(q.remove(idx))
+}
+
+fn serve_native(metrics: &ServiceMetrics, item: Queued) {
+    metrics.native_fallbacks.inc();
+    let n = item.req.n;
+    let a = DMat::from_fn(n, n, |i, j| item.req.a[i * n + j] as f64);
+    let u: Vec<f64> = item.req.u.iter().map(|&x| x as f64).collect();
+    let opts = GqlOptions::new(item.req.lam_min as f64, item.req.lam_max as f64);
+    let (decision, stats) = judge_threshold(&a, &u, item.req.t, opts);
+    metrics.judge_iters.lock().unwrap().record(stats.iters as f64);
+    metrics
+        .latency_ns
+        .lock()
+        .unwrap()
+        .record(item.enqueued.elapsed().as_nanos() as f64);
+    let _ = item.reply.send(JudgeResponse {
+        decision,
+        iters: stats.iters,
+        path: RoutePath::Native,
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::random_spd_exact;
+    use crate::linalg::Cholesky;
+    use crate::util::rng::Rng;
+
+    pub fn make_request(rng: &mut Rng, n: usize, t_factor: f64) -> (JudgeRequest, bool) {
+        let (a, l1, ln) = random_spd_exact(rng, n, 0.6, 0.2);
+        let u: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let exact = Cholesky::factor(&a).unwrap().bif(&u);
+        let t = exact * t_factor;
+        let req = JudgeRequest {
+            a: (0..n * n).map(|k| a.get(k / n, k % n) as f32).collect(),
+            u: u.iter().map(|&x| x as f32).collect(),
+            n,
+            lam_min: (l1 * 0.99) as f32,
+            lam_max: (ln * 1.01) as f32,
+            t,
+        };
+        (req, t < exact)
+    }
+
+    #[test]
+    fn native_only_service_answers_correctly() {
+        let svc = JudgeService::start(None, BatchPolicy::default(), 2);
+        let mut rng = Rng::new(0x5E1);
+        for factor in [0.5, 0.9, 1.1, 2.0] {
+            let (req, want) = make_request(&mut rng, 20, factor);
+            let resp = svc.judge_blocking(req);
+            assert_eq!(resp.decision, want, "factor {factor}");
+            assert_eq!(resp.path, RoutePath::Native);
+        }
+        assert_eq!(svc.metrics.requests.get(), 4);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn concurrent_submissions_all_answered() {
+        let svc = Arc::new(JudgeService::start(None, BatchPolicy::default(), 3));
+        let mut rng = Rng::new(0x5E2);
+        let mut expected = Vec::new();
+        let mut rxs = Vec::new();
+        for i in 0..24 {
+            // factors straddle 1.0 but avoid the exact tie t == BIF
+            let (req, want) =
+                make_request(&mut rng, 12 + (i % 5), 0.5 + 0.1 * (i % 10) as f64 + 0.03);
+            expected.push(want);
+            rxs.push(svc.submit(req));
+        }
+        for (rx, want) in rxs.into_iter().zip(expected) {
+            let resp = rx.recv().unwrap();
+            assert_eq!(resp.decision, want);
+        }
+        assert_eq!(svc.metrics.requests.get(), 24);
+    }
+
+    #[test]
+    fn shutdown_drains_queue() {
+        let svc = JudgeService::start(None, BatchPolicy::default(), 1);
+        let mut rng = Rng::new(0x5E3);
+        let (req, want) = make_request(&mut rng, 10, 0.5);
+        let rx = svc.submit(req);
+        svc.shutdown();
+        assert_eq!(rx.recv().unwrap().decision, want);
+    }
+
+    #[test]
+    fn missing_artifacts_dir_degrades_to_native() {
+        let svc = JudgeService::start(
+            Some(PathBuf::from("/definitely/not/a/real/dir")),
+            BatchPolicy::default(),
+            1,
+        );
+        let mut rng = Rng::new(0x5E4);
+        let (req, want) = make_request(&mut rng, 14, 0.7);
+        let resp = svc.judge_blocking(req);
+        assert_eq!(resp.decision, want);
+        assert_eq!(resp.path, RoutePath::Native);
+    }
+}

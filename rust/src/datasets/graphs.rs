@@ -1,0 +1,156 @@
+//! Synthetic power-law graphs + Laplacians — the GR/HEP/Epinions/Slashdot
+//! substitutes.  SNAP collaboration/social graphs have heavy-tailed degree
+//! distributions; a Barabási–Albert-style preferential-attachment process
+//! reproduces that class.  The average degree is tuned to match the
+//! Table-1 nnz (Laplacian nnz = n + 2|E|).
+
+use crate::sparse::{Csr, CsrBuilder};
+use crate::util::rng::Rng;
+
+/// Undirected edge list (i < j, no duplicates).
+pub type EdgeList = Vec<(usize, usize)>;
+
+/// Preferential-attachment graph with ~`avg_degree`·n/2 edges.
+/// Each new node attaches `m ≈ avg_degree/2` edges to targets sampled
+/// from the running endpoint multiset (degree-proportional).
+pub fn power_law_graph(rng: &mut Rng, n: usize, avg_degree: f64) -> EdgeList {
+    assert!(n >= 2);
+    let m = (avg_degree / 2.0).round().max(1.0) as usize;
+    let mut edges: EdgeList = Vec::with_capacity(n * m);
+    // endpoint multiset for preferential attachment
+    let mut endpoints: Vec<usize> = Vec::with_capacity(2 * n * m);
+    // seed: a small clique over the first m+1 nodes
+    let seed = (m + 1).min(n);
+    for i in 0..seed {
+        for j in (i + 1)..seed {
+            edges.push((i, j));
+            endpoints.push(i);
+            endpoints.push(j);
+        }
+    }
+    for v in seed..n {
+        let mut picked: Vec<usize> = Vec::with_capacity(m);
+        let mut guard = 0;
+        while picked.len() < m && guard < 50 * m {
+            guard += 1;
+            let t = if endpoints.is_empty() || rng.bool(0.05) {
+                rng.below(v) // small uniform mixing keeps the graph connected-ish
+            } else {
+                endpoints[rng.below(endpoints.len())]
+            };
+            if t != v && !picked.contains(&t) {
+                picked.push(t);
+            }
+        }
+        for &t in &picked {
+            let (a, b) = if v < t { (v, t) } else { (t, v) };
+            edges.push((a, b));
+            endpoints.push(a);
+            endpoints.push(b);
+        }
+    }
+    edges.sort_unstable();
+    edges.dedup();
+    edges
+}
+
+/// Graph Laplacian `L = D − A` as CSR (diagonal = degree, off-diagonal
+/// −1 per edge). PSD by construction; callers add the paper's ridge.
+pub fn laplacian(n: usize, edges: &EdgeList) -> Csr {
+    let mut deg = vec![0usize; n];
+    for &(i, j) in edges {
+        deg[i] += 1;
+        deg[j] += 1;
+    }
+    let mut b = CsrBuilder::new(n);
+    for i in 0..n {
+        b.push(i, i, deg[i] as f64);
+    }
+    for &(i, j) in edges {
+        b.push_sym(i, j, -1.0);
+    }
+    b.build()
+}
+
+/// Degree sequence of an edge list (for tail inspection in tests).
+pub fn degrees(n: usize, edges: &EdgeList) -> Vec<usize> {
+    let mut deg = vec![0usize; n];
+    for &(i, j) in edges {
+        deg[i] += 1;
+        deg[j] += 1;
+    }
+    deg
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::SymOp;
+
+    #[test]
+    fn edge_count_tracks_avg_degree() {
+        let mut rng = Rng::new(10);
+        let n = 2000;
+        for target in [4.0, 10.0, 20.0] {
+            let e = power_law_graph(&mut rng, n, target);
+            let avg = 2.0 * e.len() as f64 / n as f64;
+            assert!(
+                (avg / target) > 0.6 && (avg / target) < 1.4,
+                "target {target} got {avg}"
+            );
+        }
+    }
+
+    #[test]
+    fn degree_distribution_is_heavy_tailed() {
+        let mut rng = Rng::new(11);
+        let n = 3000;
+        let e = power_law_graph(&mut rng, n, 6.0);
+        let mut deg = degrees(n, &e);
+        deg.sort_unstable();
+        let max = *deg.last().unwrap() as f64;
+        let median = deg[n / 2] as f64;
+        // power-law-ish: the hub degree dwarfs the median
+        assert!(max > 8.0 * median, "max {max} median {median}");
+    }
+
+    #[test]
+    fn laplacian_rows_sum_to_zero() {
+        let mut rng = Rng::new(12);
+        let n = 200;
+        let e = power_law_graph(&mut rng, n, 5.0);
+        let l = laplacian(n, &e);
+        let ones = vec![1.0; n];
+        let mut y = vec![0.0; n];
+        l.matvec(&ones, &mut y);
+        assert!(y.iter().all(|&v| v.abs() < 1e-12), "L·1 != 0");
+        assert_eq!(l.asymmetry(), 0.0);
+    }
+
+    #[test]
+    fn laplacian_is_psd() {
+        // x^T L x = Σ_(i,j)∈E (x_i − x_j)² ≥ 0; spot-check quadratic form
+        let mut rng = Rng::new(13);
+        let n = 100;
+        let e = power_law_graph(&mut rng, n, 4.0);
+        let l = laplacian(n, &e);
+        for _ in 0..20 {
+            let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let mut y = vec![0.0; n];
+            l.matvec(&x, &mut y);
+            let q: f64 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
+            assert!(q >= -1e-9, "x^T L x = {q}");
+        }
+    }
+
+    #[test]
+    fn no_self_loops_or_duplicates() {
+        let mut rng = Rng::new(14);
+        let e = power_law_graph(&mut rng, 500, 8.0);
+        let mut seen = std::collections::HashSet::new();
+        for &(i, j) in &e {
+            assert!(i < j, "unnormalized edge ({i},{j})");
+            assert!(seen.insert((i, j)), "duplicate edge ({i},{j})");
+        }
+    }
+}

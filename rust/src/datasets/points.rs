@@ -1,0 +1,188 @@
+//! Synthetic point clouds + sparse RBF kernels with hard cutoff — the
+//! Abalone/Wine substitutes (§5.3.2; kernel construction per Gittens &
+//! Mahoney 2013 as cited by the paper: RBF with bandwidth σ, entries
+//! zeroed beyond the 3σ cutoff).
+//!
+//! The cloud is drawn from a small mixture of Gaussians so that near-
+//! neighbor structure (hence kernel sparsity pattern) resembles real
+//! tabular data rather than a uniform cube; the cutoff radius is then
+//! *calibrated* against a sample so the resulting nnz density matches the
+//! Table-1 target.
+
+use crate::sparse::{Csr, CsrBuilder};
+use crate::util::rng::Rng;
+
+/// Points in R^d, row-major.
+#[derive(Clone, Debug)]
+pub struct PointCloud {
+    pub n: usize,
+    pub d: usize,
+    pub xs: Vec<f64>,
+}
+
+impl PointCloud {
+    /// Mixture of `max(2, d/2)` Gaussian clusters in the unit box.
+    pub fn synthetic(rng: &mut Rng, n: usize, d: usize) -> Self {
+        let k = (d / 2).max(2);
+        let centers: Vec<f64> = (0..k * d).map(|_| rng.f64()).collect();
+        let mut xs = Vec::with_capacity(n * d);
+        for _ in 0..n {
+            let c = rng.below(k);
+            for j in 0..d {
+                xs.push(centers[c * d + j] + 0.08 * rng.normal());
+            }
+        }
+        PointCloud { n, d, xs }
+    }
+
+    #[inline]
+    pub fn point(&self, i: usize) -> &[f64] {
+        &self.xs[i * self.d..(i + 1) * self.d]
+    }
+
+    #[inline]
+    pub fn dist2(&self, i: usize, j: usize) -> f64 {
+        let (a, b) = (self.point(i), self.point(j));
+        a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+    }
+}
+
+/// Sparse RBF kernel `K_ij = exp(−||x_i−x_j||²/(2σ²)) · w(d/cutoff)`,
+/// zero beyond `cutoff`; the cutoff is shrunk/grown by bisection on a
+/// subsample so the final density approaches `target_density` (matching
+/// the Table-1 nnz without the original data).
+///
+/// A *hard* cutoff (the paper's construction) makes the kernel indefinite
+/// in general — the paper's `+1e-3·I` ridge absorbs the violation on its
+/// datasets, but our clustered synthetic clouds can violate PSD-ness by
+/// more than the ridge. We therefore taper with the Wendland window
+/// `w(t) = (1−t)⁸₊(8t+1)` (positive definite on R^d for d ≤ 11): the
+/// Schur product of two PD kernels stays PD, so `K + ridge·I` is SPD with
+/// `λ_min > ridge` by construction — same sparsity pattern, same decay
+/// class, and the ridge-based spectrum window stays valid.
+pub fn rbf_kernel_csr(
+    cloud: &PointCloud,
+    sigma: f64,
+    cutoff: f64,
+    target_density: f64,
+) -> Csr {
+    let n = cloud.n;
+    let cutoff = calibrate_cutoff(cloud, cutoff, target_density);
+    let cut2 = cutoff * cutoff;
+    let inv = 1.0 / (2.0 * sigma * sigma);
+    let mut b = CsrBuilder::new(n);
+    for i in 0..n {
+        b.push(i, i, 1.0);
+        for j in (i + 1)..n {
+            let d2 = cloud.dist2(i, j);
+            if d2 <= cut2 {
+                let t = (d2 / cut2).sqrt();
+                let wendland = (1.0 - t).powi(8) * (8.0 * t + 1.0);
+                b.push_sym(i, j, (-d2 * inv).exp() * wendland);
+            }
+        }
+    }
+    b.build()
+}
+
+/// Bisect the cutoff radius on a ≤512-point subsample so the implied
+/// density is close to `target`. Keeps the paper's "3σ" flavor as the
+/// starting point / upper limit scale.
+fn calibrate_cutoff(cloud: &PointCloud, start: f64, target: f64) -> f64 {
+    let m = cloud.n.min(512);
+    let density_at = |r: f64| -> f64 {
+        let r2 = r * r;
+        let mut cnt = 0usize;
+        for i in 0..m {
+            for j in (i + 1)..m {
+                if cloud.dist2(i, j) <= r2 {
+                    cnt += 1;
+                }
+            }
+        }
+        (2 * cnt + m) as f64 / (m as f64 * m as f64)
+    };
+    let (mut lo, mut hi) = (0.0f64, (start * 8.0).max(1.0));
+    // grow hi until it exceeds the target (or caps out)
+    let mut guard = 0;
+    while density_at(hi) < target && guard < 8 {
+        hi *= 2.0;
+        guard += 1;
+    }
+    for _ in 0..24 {
+        let mid = 0.5 * (lo + hi);
+        if density_at(mid) < target {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    0.5 * (lo + hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cloud_shape() {
+        let mut rng = Rng::new(1);
+        let c = PointCloud::synthetic(&mut rng, 100, 5);
+        assert_eq!(c.xs.len(), 500);
+        assert_eq!(c.point(99).len(), 5);
+        assert_eq!(c.dist2(3, 3), 0.0);
+    }
+
+    #[test]
+    fn kernel_is_symmetric_with_unit_diagonal() {
+        let mut rng = Rng::new(2);
+        let c = PointCloud::synthetic(&mut rng, 120, 4);
+        let k = rbf_kernel_csr(&c, 0.3, 0.9, 0.05);
+        assert_eq!(k.asymmetry(), 0.0);
+        for i in 0..k.n {
+            assert_eq!(k.get(i, i), 1.0);
+        }
+    }
+
+    #[test]
+    fn kernel_entries_in_unit_interval() {
+        let mut rng = Rng::new(3);
+        let c = PointCloud::synthetic(&mut rng, 80, 3);
+        let k = rbf_kernel_csr(&c, 0.5, 1.5, 0.1);
+        assert!(k.values.iter().all(|&v| v > 0.0 && v <= 1.0));
+    }
+
+    #[test]
+    fn calibration_tracks_target_density() {
+        let mut rng = Rng::new(4);
+        let c = PointCloud::synthetic(&mut rng, 400, 6);
+        for target in [0.01, 0.05, 0.15] {
+            let k = rbf_kernel_csr(&c, 0.4, 1.2, target);
+            let got = k.density();
+            assert!(
+                (got / target) > 0.3 && (got / target) < 3.0,
+                "target {target} got {got}"
+            );
+        }
+    }
+
+    #[test]
+    fn kernel_is_positive_definite_before_ridge() {
+        // the Wendland taper keeps the truncated kernel PD (cf. module
+        // docs); check the smallest eigenvalue of a dense copy
+        let mut rng = Rng::new(6);
+        let c = PointCloud::synthetic(&mut rng, 90, 8);
+        let k = rbf_kernel_csr(&c, 0.15, 0.45, 0.05);
+        let ev = crate::linalg::sym_eigenvalues(&k.to_dense());
+        assert!(ev[0] > -1e-10, "λmin = {}", ev[0]);
+    }
+
+    #[test]
+    fn denser_target_gives_denser_kernel() {
+        let mut rng = Rng::new(5);
+        let c = PointCloud::synthetic(&mut rng, 300, 4);
+        let k1 = rbf_kernel_csr(&c, 0.4, 1.2, 0.01);
+        let k2 = rbf_kernel_csr(&c, 0.4, 1.2, 0.2);
+        assert!(k2.nnz() > k1.nnz());
+    }
+}

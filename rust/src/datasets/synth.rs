@@ -1,0 +1,119 @@
+//! Synthetic SPD generators.
+//!
+//! * [`random_spd_exact`] — the paper's §4.4 matrix: dense storage, random
+//!   symmetric entries at a given density, diagonal shifted so λ₁ hits a
+//!   prescribed value exactly (needs an O(n³) eigensolve; n ≤ ~500).
+//! * [`random_sparse_spd`] — the §5.3.1 scaled-up variant: CSR, density
+//!   swept over 1e-3..1e-1, diagonal shifted by a Gershgorin bound plus a
+//!   prescribed λ₁ (cheap, guarantees λ_min ≥ λ₁ rather than equality —
+//!   the speedup experiments only need positive definiteness + a window).
+
+use crate::linalg::{sym_eigenvalues, DMat};
+use crate::sparse::{gershgorin_bounds, Csr, CsrBuilder};
+use crate::util::rng::Rng;
+
+/// Paper §4.4: random symmetric `n×n` with `density` fraction of normal
+/// entries, shifted so the smallest eigenvalue equals `lam1` exactly.
+/// Returns `(A, λ₁, λ_N)` with the *true* extremal eigenvalues.
+pub fn random_spd_exact(rng: &mut Rng, n: usize, density: f64, lam1: f64) -> (DMat, f64, f64) {
+    let mut a = DMat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            if i == j || rng.bool(density) {
+                let v = rng.normal();
+                a.set(i, j, v);
+                a.set(j, i, v);
+            }
+        }
+    }
+    let ev = sym_eigenvalues(&a);
+    a.shift_diag(lam1 - ev[0]);
+    (a, lam1, ev[n - 1] - ev[0] + lam1)
+}
+
+/// Paper §5.3.1: sparse random symmetric CSR at the given density, made
+/// positive definite by shifting the diagonal to `lam1 −` (Gershgorin
+/// lower bound). Returns `(A, window)` where `window` is a valid spectrum
+/// bracket (Gershgorin of the shifted matrix, lower end clamped to lam1).
+pub fn random_sparse_spd(
+    rng: &mut Rng,
+    n: usize,
+    density: f64,
+    lam1: f64,
+) -> (Csr, crate::sparse::SpectrumBounds) {
+    // sample ~density·n²/2 off-diagonal pairs
+    let target_pairs = (density * (n as f64) * (n as f64) / 2.0).round() as usize;
+    let mut b = CsrBuilder::new(n);
+    for _ in 0..target_pairs {
+        let i = rng.below(n);
+        let j = rng.below(n);
+        if i != j {
+            b.push_sym(i, j, rng.normal());
+        }
+    }
+    for i in 0..n {
+        b.push(i, i, rng.normal());
+    }
+    let base = b.build();
+    let g = gershgorin_bounds(&base);
+    let shifted = base.with_diag_shift(lam1 - g.lo);
+    let window = gershgorin_bounds(&shifted).clamp_lo(lam1 * 0.5);
+    (shifted, window)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Cholesky;
+    use crate::util::prop::{assert_close, forall};
+
+    #[test]
+    fn exact_generator_hits_lambda1() {
+        forall(10, 0xD51, |rng| {
+            let n = 8 + rng.below(40);
+            let (a, l1, ln) = random_spd_exact(rng, n, 0.3, 1e-2);
+            let ev = sym_eigenvalues(&a);
+            assert_close(ev[0], 1e-2, 1e-6, 1e-9);
+            assert_close(ev[0], l1, 1e-12, 0.0);
+            assert_close(ev[n - 1], ln, 1e-6, 1e-9);
+        });
+    }
+
+    #[test]
+    fn exact_generator_density_roughly_respected() {
+        let mut rng = Rng::new(7);
+        let n = 100;
+        let (a, _, _) = random_spd_exact(&mut rng, n, 0.1, 1e-2);
+        let nnz_off = (0..n)
+            .flat_map(|i| (0..n).map(move |j| (i, j)))
+            .filter(|&(i, j)| i != j && a.get(i, j) != 0.0)
+            .count();
+        let emp = nnz_off as f64 / (n * n - n) as f64;
+        assert!((emp - 0.1).abs() < 0.03, "empirical density {emp}");
+    }
+
+    #[test]
+    fn sparse_generator_is_spd_and_window_valid() {
+        forall(8, 0xD52, |rng| {
+            let n = 30 + rng.below(80);
+            let density = [1e-2, 5e-2, 1e-1][rng.below(3)];
+            let (a, w) = random_sparse_spd(rng, n, density, 1e-2);
+            assert_eq!(a.asymmetry(), 0.0);
+            // SPD check via Cholesky of the dense copy
+            let ch = Cholesky::factor(&a.to_dense());
+            assert!(ch.is_ok(), "not SPD at density {density}");
+            let ev = sym_eigenvalues(&a.to_dense());
+            assert!(w.lo <= ev[0] + 1e-9, "window lo {} > λ1 {}", w.lo, ev[0]);
+            assert!(w.hi >= ev[n - 1] - 1e-9);
+            assert!(w.lo > 0.0);
+        });
+    }
+
+    #[test]
+    fn sparse_generator_density_scales() {
+        let mut rng = Rng::new(9);
+        let (a_lo, _) = random_sparse_spd(&mut rng, 400, 1e-3, 1e-2);
+        let (a_hi, _) = random_sparse_spd(&mut rng, 400, 1e-1, 1e-2);
+        assert!(a_hi.nnz() > 10 * a_lo.nnz());
+    }
+}

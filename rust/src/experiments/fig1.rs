@@ -1,0 +1,135 @@
+//! Figure 1 — bound evolution on `u^T A^{-1} u`, `A ∈ R^{100×100}` random
+//! symmetric with 10% density, λ₁ = 1e-2 (paper §4.4).
+//!
+//! Three window settings:
+//! * (a) tight:  λ_min = λ₁ − 1e-5,   λ_max = λ_N + 1e-5
+//! * (b) loose lower: λ_min ← 0.1·(λ₁ − 1e-5)   (hurts left Radau/Lobatto)
+//! * (c) loose upper: λ_max ← 10·(λ_N + 1e-5)   (hurts right Radau/Lobatto)
+
+use crate::config::RunConfig;
+use crate::datasets::random_spd_exact;
+use crate::linalg::Cholesky;
+use crate::quadrature::{Bounds, Gql, GqlOptions};
+use crate::util::rng::Rng;
+
+/// One panel of Figure 1.
+#[derive(Clone, Debug)]
+pub struct Fig1Panel {
+    pub name: &'static str,
+    pub lam_min: f64,
+    pub lam_max: f64,
+    pub history: Vec<Bounds>,
+    pub exact: f64,
+}
+
+impl Fig1Panel {
+    /// Iterations until the Radau bracket is within `rel` of the truth.
+    pub fn iters_to_rel_gap(&self, rel: f64) -> Option<usize> {
+        self.history
+            .iter()
+            .find(|b| b.gap() <= rel * self.exact.abs())
+            .map(|b| b.iter)
+    }
+}
+
+/// Run all three panels; `iters` per panel (paper plots ~N).
+pub fn run(cfg: &RunConfig, iters: usize) -> Vec<Fig1Panel> {
+    let mut rng = Rng::new(cfg.seed);
+    let n = 100;
+    let (a, l1, ln) = random_spd_exact(&mut rng, n, 0.10, 1e-2);
+    let u: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let exact = Cholesky::factor(&a).unwrap().bif(&u);
+
+    let l1m = l1 - 1e-5;
+    let lnp = ln + 1e-5;
+    let panels: [(&'static str, f64, f64); 3] = [
+        ("a_tight", l1m, lnp),
+        ("b_loose_lmin", 0.1 * l1m, lnp),
+        ("c_loose_lmax", l1m, 10.0 * lnp),
+    ];
+    panels
+        .into_iter()
+        .map(|(name, lam_min, lam_max)| {
+            let mut q = Gql::new(&a, &u, GqlOptions::new(lam_min, lam_max));
+            let history = q.run(iters);
+            Fig1Panel { name, lam_min, lam_max, history, exact }
+        })
+        .collect()
+}
+
+/// CSV rows: panel, iter, gauss, radau_lower, radau_upper, lobatto, exact.
+pub fn csv_rows(panels: &[Fig1Panel]) -> Vec<Vec<String>> {
+    let mut rows = Vec::new();
+    for p in panels {
+        for b in &p.history {
+            rows.push(vec![
+                p.name.to_string(),
+                b.iter.to_string(),
+                format!("{:.10e}", b.gauss),
+                format!("{:.10e}", b.radau_lower),
+                format!("{:.10e}", b.radau_upper),
+                format!("{:.10e}", b.lobatto),
+                format!("{:.10e}", p.exact),
+            ]);
+        }
+    }
+    rows
+}
+
+pub const CSV_HEADER: [&str; 7] =
+    ["panel", "iter", "gauss", "radau_lower", "radau_upper", "lobatto", "exact"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_cfg() -> RunConfig {
+        RunConfig { seed: 0xF161, ..Default::default() }
+    }
+
+    #[test]
+    fn panels_reproduce_paper_shape() {
+        let panels = run(&quick_cfg(), 60);
+        assert_eq!(panels.len(), 3);
+        let [a, b, c] = [&panels[0], &panels[1], &panels[2]];
+
+        // all bounds sandwich the truth in every panel
+        for p in [a, b, c] {
+            for bd in &p.history {
+                assert!(bd.radau_lower <= p.exact * (1.0 + 1e-6), "{}", p.name);
+                assert!(bd.radau_upper >= p.exact * (1.0 - 1e-6), "{}", p.name);
+            }
+        }
+        // paper: "within 25 iterations reasonably tight bounds" (tight
+        // windows); allow some slack for generator differences
+        let it_a = a.iters_to_rel_gap(0.05).expect("panel a should converge");
+        assert!(it_a <= 40, "panel a took {it_a} iterations");
+
+        // (b): worse λ_min slows the *upper* bounds (left Radau) — gap at
+        // a mid iteration is wider than in (a)
+        let mid = 15.min(a.history.len() - 1);
+        assert!(
+            b.history[mid].radau_upper >= a.history[mid].radau_upper - 1e-12,
+            "loose λ_min should not tighten the upper bound"
+        );
+        // (c): worse λ_max slows the right-Radau lower bound
+        assert!(
+            c.history[mid].radau_lower <= a.history[mid].radau_lower + 1e-12,
+            "loose λ_max should not tighten the Radau lower bound"
+        );
+        // Gauss is unaffected by the window (identical in all panels)
+        for i in 0..a.history.len() {
+            let g = a.history[i].gauss;
+            assert!((b.history[i].gauss - g).abs() <= 1e-9 * g.abs().max(1.0));
+            assert!((c.history[i].gauss - g).abs() <= 1e-9 * g.abs().max(1.0));
+        }
+    }
+
+    #[test]
+    fn csv_shape() {
+        let panels = run(&quick_cfg(), 10);
+        let rows = csv_rows(&panels);
+        assert_eq!(rows.len(), 30);
+        assert_eq!(rows[0].len(), CSV_HEADER.len());
+    }
+}

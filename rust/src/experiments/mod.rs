@@ -1,0 +1,59 @@
+//! Experiment drivers: one per paper table/figure (see DESIGN.md §4).
+//! Each driver is a library function returning structured rows, so the
+//! CLI (`gauss-bif <exp>`), the examples and the benches all regenerate
+//! the same artifact; results are also written as CSV under
+//! `results/`.
+
+pub mod fig1;
+pub mod fig2;
+pub mod rates;
+pub mod table2;
+
+use std::io::Write;
+use std::path::Path;
+
+/// Write rows as CSV (header + records) under `dir/name`.
+pub fn write_csv(dir: &Path, name: &str, header: &[&str], rows: &[Vec<String>]) -> std::io::Result<std::path::PathBuf> {
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(name);
+    let mut f = std::fs::File::create(&path)?;
+    writeln!(f, "{}", header.join(","))?;
+    for r in rows {
+        writeln!(f, "{}", r.join(","))?;
+    }
+    Ok(path)
+}
+
+/// Measure wall-clock seconds of `f` (single shot — experiment drivers
+/// measure real workloads, not micro-ops).
+pub fn time_secs<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = std::time::Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_roundtrip() {
+        let dir = std::env::temp_dir().join("gauss_bif_csv_test");
+        let p = write_csv(
+            &dir,
+            "t.csv",
+            &["a", "b"],
+            &[vec!["1".into(), "2".into()]],
+        )
+        .unwrap();
+        let s = std::fs::read_to_string(p).unwrap();
+        assert_eq!(s, "a,b\n1,2\n");
+    }
+
+    #[test]
+    fn time_secs_returns_value() {
+        let (v, s) = time_secs(|| 42);
+        assert_eq!(v, 42);
+        assert!(s >= 0.0);
+    }
+}

@@ -1,0 +1,126 @@
+//! §4 theory validation ("THM" in DESIGN.md §4): measure the observed
+//! relative errors of all four quadrature rules against the theoretical
+//! envelopes of Thm. 3 (Gauss), Thm. 5 (right Radau), Thm. 8 (left Radau)
+//! and Corr. 9 (Lobatto), plus the Thm. 12 CG↔GQL identity.
+
+use crate::config::RunConfig;
+use crate::datasets::random_spd_exact;
+use crate::linalg::Cholesky;
+use crate::quadrature::{cg_solve, Gql, GqlOptions};
+use crate::util::rng::Rng;
+
+/// Worst observed ratio (error / theoretical bound) per rule; ≤ 1 means
+/// the theorem holds on this instance.
+#[derive(Clone, Debug)]
+pub struct RateReport {
+    pub n: usize,
+    pub kappa: f64,
+    pub kappa_plus: f64,
+    pub worst_gauss: f64,
+    pub worst_radau_lower: f64,
+    pub worst_radau_upper: f64,
+    pub worst_lobatto: f64,
+    /// max |(g_N − g_k) − ||ε_k||²_A| / g_N over k (Thm. 12 residual)
+    pub thm12_residual: f64,
+}
+
+pub fn run_one(rng: &mut Rng, n: usize) -> RateReport {
+    let (a, l1, ln) = random_spd_exact(rng, n, 0.3, 0.1);
+    let u: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let exact = Cholesky::factor(&a).unwrap().bif(&u);
+    let lam_min = l1 * 0.99;
+    let lam_max = ln * 1.01;
+    let kappa = ln / l1;
+    let kappa_plus = ln / lam_min;
+    let rho = (kappa.sqrt() - 1.0) / (kappa.sqrt() + 1.0);
+
+    let mut q = Gql::new(&a, &u, GqlOptions::new(lam_min, lam_max));
+    let hist = q.run(n - 1);
+
+    let mut worst = [0.0f64; 4];
+    for b in &hist {
+        if b.exact {
+            break;
+        }
+        let i = b.iter as i32;
+        let env_lower = 2.0 * rho.powi(i);
+        let env_upper = 2.0 * kappa_plus * rho.powi(i);
+        let env_lobatto = 2.0 * kappa_plus * rho.powi(i - 1);
+        worst[0] = worst[0].max(((exact - b.gauss) / exact) / env_lower);
+        worst[1] = worst[1].max(((exact - b.radau_lower) / exact) / env_lower);
+        worst[2] = worst[2].max(((b.radau_upper - exact) / exact) / env_upper);
+        worst[3] = worst[3].max(((b.lobatto - exact) / exact) / env_lobatto);
+    }
+
+    // Thm. 12: ||ε_k||²_A = ||u||²([J_N^{-1}]₁₁ − [J_k^{-1}]₁₁) = g_N − g_k
+    // with CG started at x₀ = 0, b = u.
+    let mut thm12_residual = 0.0f64;
+    let ch = Cholesky::factor(&a).unwrap();
+    let xstar = ch.solve(&u);
+    for k in [1usize, 2, 4, 8].into_iter().filter(|&k| k < n) {
+        let cg = cg_solve(&a, &u, 0.0, k);
+        // ||ε_k||²_A = ε^T A ε
+        let eps: Vec<f64> = xstar.iter().zip(&cg.x).map(|(s, x)| s - x).collect();
+        let mut aeps = vec![0.0; n];
+        crate::sparse::SymOp::matvec(&a, &eps, &mut aeps);
+        let err_a2: f64 = eps.iter().zip(&aeps).map(|(a, b)| a * b).sum();
+        let gk = hist[k - 1].gauss;
+        thm12_residual = thm12_residual.max(((exact - gk) - err_a2).abs() / exact);
+    }
+
+    RateReport {
+        n,
+        kappa,
+        kappa_plus,
+        worst_gauss: worst[0],
+        worst_radau_lower: worst[1],
+        worst_radau_upper: worst[2],
+        worst_lobatto: worst[3],
+        thm12_residual,
+    }
+}
+
+pub fn run(cfg: &RunConfig, sizes: &[usize]) -> Vec<RateReport> {
+    let mut rng = Rng::new(cfg.seed ^ 0x7A7E5);
+    sizes.iter().map(|&n| run_one(&mut rng, n)).collect()
+}
+
+pub const CSV_HEADER: [&str; 8] = [
+    "n", "kappa", "kappa_plus", "worst_gauss", "worst_radau_lower",
+    "worst_radau_upper", "worst_lobatto", "thm12_residual",
+];
+
+pub fn csv_rows(reports: &[RateReport]) -> Vec<Vec<String>> {
+    reports
+        .iter()
+        .map(|r| {
+            vec![
+                r.n.to_string(),
+                format!("{:.3e}", r.kappa),
+                format!("{:.3e}", r.kappa_plus),
+                format!("{:.4}", r.worst_gauss),
+                format!("{:.4}", r.worst_radau_lower),
+                format!("{:.4}", r.worst_radau_upper),
+                format!("{:.4}", r.worst_lobatto),
+                format!("{:.3e}", r.thm12_residual),
+            ]
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_theorem_envelopes_hold() {
+        let cfg = RunConfig { seed: 0xAA, ..Default::default() };
+        for rep in run(&cfg, &[24, 48, 96]) {
+            assert!(rep.worst_gauss <= 1.0 + 1e-9, "Thm3 violated: {rep:?}");
+            assert!(rep.worst_radau_lower <= 1.0 + 1e-9, "Thm5 violated: {rep:?}");
+            assert!(rep.worst_radau_upper <= 1.0 + 1e-9, "Thm8 violated: {rep:?}");
+            assert!(rep.worst_lobatto <= 1.0 + 1e-9, "Corr9 violated: {rep:?}");
+            assert!(rep.thm12_residual < 1e-5, "Thm12 violated: {rep:?}");
+        }
+    }
+}

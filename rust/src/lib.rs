@@ -1,0 +1,32 @@
+//! # gauss-bif
+//!
+//! Production reproduction of *"Gauss quadrature for matrix inverse forms
+//! with applications"* (Li, Sra, Jegelka): iteratively tightening lower and
+//! upper bounds on bilinear inverse forms `u^T A^{-1} u` via Gauss-type
+//! quadrature (GQL), and the retrospective framework that accelerates
+//! DPP / k-DPP Markov-chain sampling and double-greedy submodular
+//! maximization.
+//!
+//! Layout (three-layer architecture):
+//! * [`sparse`], [`linalg`], [`datasets`] — substrates (CSR, dense Cholesky,
+//!   synthetic dataset builders).
+//! * [`quadrature`] — the paper's core: GQL (Alg. 5), retrospective judges
+//!   (Alg. 4/7/9), CG, preconditioning.
+//! * [`apps`] — DPP, k-DPP, double greedy, centrality: exact baselines and
+//!   quadrature-accelerated variants.
+//! * [`runtime`] — PJRT loader/executor for the AOT JAX+Pallas artifacts.
+//! * [`coordinator`] — the serving layer: router + dynamic batcher +
+//!   retrospective judge service.
+//! * [`metrics`], [`config`] — observability and run configuration.
+
+pub mod apps;
+pub mod config;
+pub mod coordinator;
+pub mod datasets;
+pub mod experiments;
+pub mod linalg;
+pub mod metrics;
+pub mod quadrature;
+pub mod runtime;
+pub mod sparse;
+pub mod util;

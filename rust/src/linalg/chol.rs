@@ -1,0 +1,293 @@
+//! Cholesky factorization `A = L L^T` — the exact-BIF workhorse.
+//!
+//! The paper's baselines ("original algorithm" columns of Fig. 2 / Table 2)
+//! evaluate `u^T A^{-1} u` by a direct solve; this module provides that,
+//! plus `log det` (for the double-greedy objective) and an *appending*
+//! update (`extend`) used by the smarter incremental baseline in
+//! [`crate::linalg::inverse`]-adjacent ablations.
+
+use super::dense::DMat;
+
+/// Lower-triangular Cholesky factor of an SPD matrix.
+#[derive(Clone, Debug)]
+pub struct Cholesky {
+    /// Lower factor, column-major, dimension n.
+    l: DMat,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum CholError {
+    /// Leading minor at this index is not positive definite.
+    NotPositiveDefinite(usize),
+}
+
+impl std::fmt::Display for CholError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CholError::NotPositiveDefinite(k) => {
+                write!(f, "matrix not positive definite (pivot {k})")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CholError {}
+
+impl Cholesky {
+    /// Factor an SPD matrix (reads the lower triangle).
+    pub fn factor(a: &DMat) -> Result<Self, CholError> {
+        assert_eq!(a.nrows, a.ncols);
+        let n = a.nrows;
+        let mut l = DMat::zeros(n, n);
+        for j in 0..n {
+            // diagonal
+            let mut d = a.get(j, j);
+            for k in 0..j {
+                let ljk = l.get(j, k);
+                d -= ljk * ljk;
+            }
+            if d <= 0.0 || !d.is_finite() {
+                return Err(CholError::NotPositiveDefinite(j));
+            }
+            let dj = d.sqrt();
+            l.set(j, j, dj);
+            // column below diagonal
+            for i in (j + 1)..n {
+                let mut s = a.get(i, j);
+                for k in 0..j {
+                    s -= l.get(i, k) * l.get(j, k);
+                }
+                l.set(i, j, s / dj);
+            }
+        }
+        Ok(Cholesky { l })
+    }
+
+    pub fn dim(&self) -> usize {
+        self.l.nrows
+    }
+
+    pub fn factor_matrix(&self) -> &DMat {
+        &self.l
+    }
+
+    /// Solve A x = b.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let mut x = b.to_vec();
+        self.solve_in_place(&mut x);
+        x
+    }
+
+    pub fn solve_in_place(&self, x: &mut [f64]) {
+        let n = self.dim();
+        assert_eq!(x.len(), n);
+        // forward: L y = b (column-oriented, stride-1 updates)
+        for j in 0..n {
+            x[j] /= self.l.get(j, j);
+            let xj = x[j];
+            let col = self.l.col(j);
+            for i in (j + 1)..n {
+                x[i] -= col[i] * xj;
+            }
+        }
+        // backward: L^T x = y
+        for j in (0..n).rev() {
+            let col = self.l.col(j);
+            let mut s = x[j];
+            for i in (j + 1)..n {
+                s -= col[i] * x[i];
+            }
+            x[j] = s / col[j];
+        }
+    }
+
+    /// The bilinear inverse form `u^T A^{-1} u` — exact ground truth.
+    pub fn bif(&self, u: &[f64]) -> f64 {
+        // u^T A^{-1} u = ||L^{-1} u||^2: forward solve only.
+        let n = self.dim();
+        assert_eq!(u.len(), n);
+        let mut y = u.to_vec();
+        for j in 0..n {
+            y[j] /= self.l.get(j, j);
+            let yj = y[j];
+            let col = self.l.col(j);
+            for i in (j + 1)..n {
+                y[i] -= col[i] * yj;
+            }
+        }
+        y.iter().map(|v| v * v).sum()
+    }
+
+    /// General bilinear form `u^T A^{-1} v`.
+    pub fn bif2(&self, u: &[f64], v: &[f64]) -> f64 {
+        let x = self.solve(v);
+        u.iter().zip(&x).map(|(a, b)| a * b).sum()
+    }
+
+    /// log det A = 2 Σ log L_jj.
+    pub fn logdet(&self) -> f64 {
+        (0..self.dim()).map(|j| 2.0 * self.l.get(j, j).ln()).sum()
+    }
+
+    /// Append one row/column (the SPD matrix grows by one): given the new
+    /// column `a_new = A[0..n, n]` and diagonal entry `a_nn`, extend the
+    /// factor in O(n^2). Used by the incremental double-greedy baseline.
+    pub fn extend(&mut self, a_new: &[f64], a_nn: f64) -> Result<(), CholError> {
+        let n = self.dim();
+        assert_eq!(a_new.len(), n);
+        // Solve L w = a_new
+        let mut w = a_new.to_vec();
+        for j in 0..n {
+            w[j] /= self.l.get(j, j);
+            let wj = w[j];
+            let col = self.l.col(j);
+            for i in (j + 1)..n {
+                w[i] -= col[i] * wj;
+            }
+        }
+        let d = a_nn - w.iter().map(|x| x * x).sum::<f64>();
+        if d <= 0.0 || !d.is_finite() {
+            return Err(CholError::NotPositiveDefinite(n));
+        }
+        // Grow the factor
+        let mut l = DMat::zeros(n + 1, n + 1);
+        for j in 0..n {
+            for i in j..n {
+                l.set(i, j, self.l.get(i, j));
+            }
+            l.set(n, j, w[j]);
+        }
+        l.set(n, n, d.sqrt());
+        self.l = l;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{assert_close, forall};
+    use crate::util::rng::Rng;
+
+    pub fn random_spd(rng: &mut Rng, n: usize) -> DMat {
+        // A = B B^T + n * I: well-conditioned SPD
+        let b = DMat::from_fn(n, n, |_, _| rng.normal());
+        let mut a = DMat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0;
+                for k in 0..n {
+                    s += b.get(i, k) * b.get(j, k);
+                }
+                a.set(i, j, s);
+            }
+        }
+        a.shift_diag(n as f64);
+        a
+    }
+
+    #[test]
+    fn factor_reconstructs_matrix() {
+        forall(20, 0xC0DE, |rng| {
+            let n = 1 + rng.below(12);
+            let a = random_spd(rng, n);
+            let ch = Cholesky::factor(&a).unwrap();
+            let l = ch.factor_matrix();
+            for i in 0..n {
+                for j in 0..n {
+                    let mut s = 0.0;
+                    for k in 0..n {
+                        s += l.get(i, k) * l.get(j, k);
+                    }
+                    assert_close(s, a.get(i, j), 1e-10, 1e-10);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn solve_satisfies_system() {
+        forall(20, 0xBEEF, |rng| {
+            let n = 1 + rng.below(16);
+            let a = random_spd(rng, n);
+            let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let ch = Cholesky::factor(&a).unwrap();
+            let x = ch.solve(&b);
+            let mut ax = vec![0.0; n];
+            a.matvec(&x, &mut ax);
+            for (axi, bi) in ax.iter().zip(&b) {
+                assert_close(*axi, *bi, 1e-9, 1e-9);
+            }
+        });
+    }
+
+    #[test]
+    fn bif_matches_solve_route() {
+        forall(20, 0xF00D, |rng| {
+            let n = 1 + rng.below(16);
+            let a = random_spd(rng, n);
+            let u: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let ch = Cholesky::factor(&a).unwrap();
+            let direct = ch.bif(&u);
+            let via_solve: f64 = u.iter().zip(ch.solve(&u)).map(|(a, b)| a * b).sum();
+            assert_close(direct, via_solve, 1e-10, 1e-12);
+            assert!(direct >= 0.0);
+        });
+    }
+
+    #[test]
+    fn bif2_symmetry() {
+        forall(10, 0xAB, |rng| {
+            let n = 2 + rng.below(10);
+            let a = random_spd(rng, n);
+            let u: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let ch = Cholesky::factor(&a).unwrap();
+            assert_close(ch.bif2(&u, &v), ch.bif2(&v, &u), 1e-9, 1e-10);
+        });
+    }
+
+    #[test]
+    fn logdet_known_value() {
+        let mut a = DMat::eye(3);
+        a.set(0, 0, 4.0);
+        a.set(1, 1, 9.0);
+        let ch = Cholesky::factor(&a).unwrap();
+        assert_close(ch.logdet(), (36.0f64).ln(), 1e-12, 0.0);
+    }
+
+    #[test]
+    fn not_pd_detected() {
+        let mut a = DMat::eye(2);
+        a.set(1, 1, -1.0);
+        assert_eq!(
+            Cholesky::factor(&a).unwrap_err(),
+            CholError::NotPositiveDefinite(1)
+        );
+    }
+
+    #[test]
+    fn extend_matches_full_factorization() {
+        forall(20, 0xE11, |rng| {
+            let n = 2 + rng.below(10);
+            let a = random_spd(rng, n);
+            // factor the leading (n-1) block, then extend with last col
+            let idx: Vec<usize> = (0..n - 1).collect();
+            let a0 = a.principal_submatrix(&idx);
+            let mut ch = Cholesky::factor(&a0).unwrap();
+            let new_col: Vec<f64> = (0..n - 1).map(|i| a.get(i, n - 1)).collect();
+            ch.extend(&new_col, a.get(n - 1, n - 1)).unwrap();
+            let full = Cholesky::factor(&a).unwrap();
+            for i in 0..n {
+                for j in 0..=i {
+                    assert_close(
+                        ch.factor_matrix().get(i, j),
+                        full.factor_matrix().get(i, j),
+                        1e-9,
+                        1e-10,
+                    );
+                }
+            }
+        });
+    }
+}

@@ -1,0 +1,233 @@
+//! Column-major dense matrix. Deliberately small API: exactly what the
+//! baselines, generators and tests need — no general BLAS pretensions.
+
+use crate::sparse::SymOp;
+
+/// Column-major `n x m` dense matrix of f64.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DMat {
+    pub nrows: usize,
+    pub ncols: usize,
+    /// data[i + j * nrows] = A[i, j]
+    pub data: Vec<f64>,
+}
+
+impl DMat {
+    pub fn zeros(nrows: usize, ncols: usize) -> Self {
+        DMat { nrows, ncols, data: vec![0.0; nrows * ncols] }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m.set(i, i, 1.0);
+        }
+        m
+    }
+
+    pub fn from_fn(nrows: usize, ncols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut m = Self::zeros(nrows, ncols);
+        for j in 0..ncols {
+            for i in 0..nrows {
+                m.set(i, j, f(i, j));
+            }
+        }
+        m
+    }
+
+    /// Build from row-major slice (handy in tests).
+    pub fn from_rows(nrows: usize, ncols: usize, rows: &[f64]) -> Self {
+        assert_eq!(rows.len(), nrows * ncols);
+        Self::from_fn(nrows, ncols, |i, j| rows[i * ncols + j])
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(i < self.nrows && j < self.ncols);
+        self.data[i + j * self.nrows]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        debug_assert!(i < self.nrows && j < self.ncols);
+        self.data[i + j * self.nrows] = v;
+    }
+
+    #[inline]
+    pub fn col(&self, j: usize) -> &[f64] {
+        &self.data[j * self.nrows..(j + 1) * self.nrows]
+    }
+
+    #[inline]
+    pub fn col_mut(&mut self, j: usize) -> &mut [f64] {
+        &mut self.data[j * self.nrows..(j + 1) * self.nrows]
+    }
+
+    /// y = A x (column-major: accumulate columns — stride-1 inner loop).
+    pub fn matvec(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.ncols);
+        assert_eq!(y.len(), self.nrows);
+        y.fill(0.0);
+        for j in 0..self.ncols {
+            let xj = x[j];
+            if xj == 0.0 {
+                continue;
+            }
+            let col = self.col(j);
+            for (yi, &aij) in y.iter_mut().zip(col) {
+                *yi += aij * xj;
+            }
+        }
+    }
+
+    /// (A + A^T) / 2 in place (square only).
+    pub fn symmetrize(&mut self) {
+        assert_eq!(self.nrows, self.ncols);
+        for j in 0..self.ncols {
+            for i in 0..j {
+                let m = 0.5 * (self.get(i, j) + self.get(j, i));
+                self.set(i, j, m);
+                self.set(j, i, m);
+            }
+        }
+    }
+
+    /// A += s * I.
+    pub fn shift_diag(&mut self, s: f64) {
+        assert_eq!(self.nrows, self.ncols);
+        for i in 0..self.nrows {
+            let v = self.get(i, i) + s;
+            self.set(i, i, v);
+        }
+    }
+
+    /// Principal submatrix A[idx, idx].
+    pub fn principal_submatrix(&self, idx: &[usize]) -> DMat {
+        DMat::from_fn(idx.len(), idx.len(), |i, j| self.get(idx[i], idx[j]))
+    }
+
+    /// Max |A[i,j] - A[j,i]| (symmetry check in tests).
+    pub fn asymmetry(&self) -> f64 {
+        let mut m: f64 = 0.0;
+        for j in 0..self.ncols {
+            for i in 0..j {
+                m = m.max((self.get(i, j) - self.get(j, i)).abs());
+            }
+        }
+        m
+    }
+}
+
+impl SymOp for DMat {
+    fn dim(&self) -> usize {
+        debug_assert_eq!(self.nrows, self.ncols);
+        self.nrows
+    }
+
+    fn matvec(&self, x: &[f64], y: &mut [f64]) {
+        DMat::matvec(self, x, y)
+    }
+
+    fn diagonal(&self) -> Vec<f64> {
+        (0..self.nrows).map(|i| self.get(i, i)).collect()
+    }
+}
+
+/// x · y
+#[inline]
+pub fn dot(x: &[f64], y: &[f64]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    x.iter().zip(y).map(|(a, b)| a * b).sum()
+}
+
+/// ||x||_2
+#[inline]
+pub fn norm2(x: &[f64]) -> f64 {
+    dot(x, x).sqrt()
+}
+
+/// y += a * x
+#[inline]
+pub fn axpy(a: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, &xi) in y.iter_mut().zip(x) {
+        *yi += a * xi;
+    }
+}
+
+/// x *= a
+#[inline]
+pub fn scale(a: f64, x: &mut [f64]) {
+    for xi in x {
+        *xi *= a;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn get_set_col_major_layout() {
+        let mut m = DMat::zeros(2, 3);
+        m.set(1, 2, 7.0);
+        assert_eq!(m.get(1, 2), 7.0);
+        assert_eq!(m.data[1 + 2 * 2], 7.0);
+    }
+
+    #[test]
+    fn from_rows_matches_row_major_reading() {
+        let m = DMat::from_rows(2, 2, &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(m.get(0, 1), 2.0);
+        assert_eq!(m.get(1, 0), 3.0);
+    }
+
+    #[test]
+    fn matvec_known_values() {
+        let m = DMat::from_rows(2, 2, &[1.0, 2.0, 3.0, 4.0]);
+        let mut y = vec![0.0; 2];
+        m.matvec(&[1.0, 1.0], &mut y);
+        assert_eq!(y, vec![3.0, 7.0]);
+    }
+
+    #[test]
+    fn symmetrize_and_asymmetry() {
+        let mut m = DMat::from_rows(2, 2, &[0.0, 2.0, 4.0, 0.0]);
+        assert_eq!(m.asymmetry(), 2.0);
+        m.symmetrize();
+        assert_eq!(m.asymmetry(), 0.0);
+        assert_eq!(m.get(0, 1), 3.0);
+    }
+
+    #[test]
+    fn principal_submatrix_selects() {
+        let m = DMat::from_rows(3, 3, &[1., 2., 3., 4., 5., 6., 7., 8., 9.]);
+        let s = m.principal_submatrix(&[0, 2]);
+        assert_eq!(s.get(0, 1), 3.0);
+        assert_eq!(s.get(1, 0), 7.0);
+        assert_eq!(s.get(1, 1), 9.0);
+    }
+
+    #[test]
+    fn blas1_helpers() {
+        let x = vec![1.0, 2.0];
+        let mut y = vec![10.0, 20.0];
+        assert_eq!(dot(&x, &y), 50.0);
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, vec![12.0, 24.0]);
+        scale(0.5, &mut y);
+        assert_eq!(y, vec![6.0, 12.0]);
+        assert!((norm2(&[3.0, 4.0]) - 5.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn symop_impl_consistent() {
+        let m = DMat::from_rows(2, 2, &[2.0, 1.0, 1.0, 3.0]);
+        let op: &dyn SymOp = &m;
+        assert_eq!(op.dim(), 2);
+        assert_eq!(op.diagonal(), vec![2.0, 3.0]);
+        let mut y = vec![0.0; 2];
+        op.matvec(&[1.0, 0.0], &mut y);
+        assert_eq!(y, vec![2.0, 1.0]);
+    }
+}

@@ -1,0 +1,257 @@
+//! Symmetric eigensolver: Householder tridiagonalization + implicit-shift
+//! QL on the tridiagonal (eigenvalues only).
+//!
+//! Used by (a) the synthetic generators, which — like the paper's §4.4
+//! setup — shift the diagonal so the smallest eigenvalue hits a prescribed
+//! λ₁, and (b) tests that need spectrum ground truth (condition numbers for
+//! the rate theorems, Jacobi-matrix spectra, Lobatto prescribed-eigenvalue
+//! checks).  O(n³); fine up to the few-thousand sizes the generators use.
+
+use super::dense::DMat;
+
+/// Eigenvalues (ascending) of a symmetric matrix. Reads both triangles
+/// (averages them), so slight asymmetry from rounding is harmless.
+pub fn sym_eigenvalues(a: &DMat) -> Vec<f64> {
+    assert_eq!(a.nrows, a.ncols);
+    let (d, e) = householder_tridiag(a);
+    tridiag_eigenvalues(&d, &e)
+}
+
+/// Householder reduction of a symmetric matrix to tridiagonal form.
+/// Returns (diagonal, off-diagonal) with `off[i]` linking i and i+1.
+/// (Eigenvalue-only variant of Numerical Recipes `tred2`.)
+fn householder_tridiag(a_in: &DMat) -> (Vec<f64>, Vec<f64>) {
+    let n = a_in.nrows;
+    // Work on a symmetrized copy, row-major style via DMat accessor.
+    let mut a = a_in.clone();
+    a.symmetrize();
+    let mut d = vec![0.0; n];
+    let mut e = vec![0.0; n]; // e[i] couples (i-1, i) during the reduction
+
+    for i in (1..n).rev() {
+        let l = i; // elements 0..l of row i are being annihilated
+        let mut h = 0.0;
+        if l > 1 {
+            let scale: f64 = (0..l).map(|k| a.get(i, k).abs()).sum();
+            if scale == 0.0 {
+                e[i] = a.get(i, l - 1);
+            } else {
+                for k in 0..l {
+                    let v = a.get(i, k) / scale;
+                    a.set(i, k, v);
+                    h += v * v;
+                }
+                let mut f = a.get(i, l - 1);
+                let g = if f >= 0.0 { -h.sqrt() } else { h.sqrt() };
+                e[i] = scale * g;
+                h -= f * g;
+                a.set(i, l - 1, f - g);
+                f = 0.0;
+                for j in 0..l {
+                    let mut g = 0.0;
+                    for k in 0..=j {
+                        g += a.get(j, k) * a.get(i, k);
+                    }
+                    for k in (j + 1)..l {
+                        g += a.get(k, j) * a.get(i, k);
+                    }
+                    e[j] = g / h;
+                    f += e[j] * a.get(i, j);
+                }
+                let hh = f / (h + h);
+                for j in 0..l {
+                    let fj = a.get(i, j);
+                    let gj = e[j] - hh * fj;
+                    e[j] = gj;
+                    for k in 0..=j {
+                        let v = a.get(j, k) - fj * e[k] - gj * a.get(i, k);
+                        a.set(j, k, v);
+                    }
+                }
+            }
+        } else {
+            e[i] = a.get(i, l - 1);
+        }
+        d[i] = h;
+    }
+    for i in 0..n {
+        d[i] = a.get(i, i);
+    }
+    // Shift e left so e[i] couples (i, i+1), matching tridiag_eigenvalues.
+    let mut off = vec![0.0; n.saturating_sub(1)];
+    for i in 1..n {
+        off[i - 1] = e[i];
+    }
+    (d, off)
+}
+
+/// Eigenvalues (ascending) of a symmetric tridiagonal matrix with diagonal
+/// `d` and off-diagonal `e` (`e[i]` couples i and i+1). Implicit-shift QL
+/// with Wilkinson shift; eigenvalue-only variant of `tqli`.
+pub fn tridiag_eigenvalues(d_in: &[f64], e_in: &[f64]) -> Vec<f64> {
+    let n = d_in.len();
+    assert_eq!(e_in.len(), n.saturating_sub(1));
+    if n == 0 {
+        return vec![];
+    }
+    let mut d = d_in.to_vec();
+    let mut e = e_in.to_vec();
+    e.push(0.0);
+
+    for l in 0..n {
+        let mut iter = 0;
+        loop {
+            // find a small off-diagonal element to split at
+            let mut m = l;
+            while m + 1 < n {
+                let dd = d[m].abs() + d[m + 1].abs();
+                if e[m].abs() <= f64::EPSILON * dd {
+                    break;
+                }
+                m += 1;
+            }
+            if m == l {
+                break;
+            }
+            iter += 1;
+            assert!(iter < 64, "QL failed to converge");
+            // Wilkinson shift
+            let mut g = (d[l + 1] - d[l]) / (2.0 * e[l]);
+            let mut r = g.hypot(1.0);
+            g = d[m] - d[l] + e[l] / (g + r.copysign(g));
+            let (mut s, mut c) = (1.0, 1.0);
+            let mut p = 0.0;
+            for i in (l..m).rev() {
+                let mut f = s * e[i];
+                let b = c * e[i];
+                r = f.hypot(g);
+                e[i + 1] = r;
+                if r == 0.0 {
+                    d[i + 1] -= p;
+                    e[m] = 0.0;
+                    break;
+                }
+                s = f / r;
+                c = g / r;
+                g = d[i + 1] - p;
+                r = (d[i] - g) * s + 2.0 * c * b;
+                p = s * r;
+                d[i + 1] = g + p;
+                g = c * r - b;
+                f = 0.0;
+                let _ = f;
+            }
+            if r == 0.0 && m > l + 1 {
+                continue;
+            }
+            d[l] -= p;
+            e[l] = g;
+            e[m] = 0.0;
+        }
+    }
+    d.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{assert_close, forall};
+    use crate::util::rng::Rng;
+
+    fn random_sym(rng: &mut Rng, n: usize) -> DMat {
+        let mut a = DMat::from_fn(n, n, |_, _| rng.normal());
+        a.symmetrize();
+        a
+    }
+
+    #[test]
+    fn diagonal_matrix_eigenvalues() {
+        let mut a = DMat::eye(4);
+        a.set(0, 0, 3.0);
+        a.set(1, 1, -1.0);
+        a.set(2, 2, 0.5);
+        let ev = sym_eigenvalues(&a);
+        let want = [-1.0, 0.5, 1.0, 3.0];
+        for (g, w) in ev.iter().zip(want) {
+            assert_close(*g, w, 1e-12, 1e-12);
+        }
+    }
+
+    #[test]
+    fn known_2x2() {
+        // [[2,1],[1,2]] -> 1, 3
+        let a = DMat::from_rows(2, 2, &[2.0, 1.0, 1.0, 2.0]);
+        let ev = sym_eigenvalues(&a);
+        assert_close(ev[0], 1.0, 1e-12, 1e-12);
+        assert_close(ev[1], 3.0, 1e-12, 1e-12);
+    }
+
+    #[test]
+    fn tridiag_toeplitz_has_closed_form() {
+        // diag 2, off -1, size n: eigenvalues 2 - 2cos(kπ/(n+1))
+        let n = 12;
+        let d = vec![2.0; n];
+        let e = vec![-1.0; n - 1];
+        let ev = tridiag_eigenvalues(&d, &e);
+        for (k, g) in ev.iter().enumerate() {
+            let w = 2.0 - 2.0 * (std::f64::consts::PI * (k + 1) as f64 / (n as f64 + 1.0)).cos();
+            assert_close(*g, w, 1e-10, 1e-10);
+        }
+    }
+
+    #[test]
+    fn trace_and_frobenius_preserved() {
+        forall(20, 0x51D, |rng| {
+            let n = 2 + rng.below(14);
+            let a = random_sym(rng, n);
+            let ev = sym_eigenvalues(&a);
+            let tr: f64 = (0..n).map(|i| a.get(i, i)).sum();
+            assert_close(ev.iter().sum::<f64>(), tr, 1e-9, 1e-9);
+            let fro2: f64 = (0..n)
+                .flat_map(|i| (0..n).map(move |j| (i, j)))
+                .map(|(i, j)| a.get(i, j) * a.get(i, j))
+                .sum();
+            assert_close(ev.iter().map(|l| l * l).sum::<f64>(), fro2, 1e-9, 1e-9);
+        });
+    }
+
+    #[test]
+    fn eigenvalues_match_characteristic_poly_roots_3x3() {
+        forall(20, 0x3A3, |rng| {
+            let a = random_sym(rng, 3);
+            let ev = sym_eigenvalues(&a);
+            // det(A - λI) ≈ 0 for each reported eigenvalue
+            for &l in &ev {
+                let m = |i: usize, j: usize| a.get(i, j) - if i == j { l } else { 0.0 };
+                let det = m(0, 0) * (m(1, 1) * m(2, 2) - m(1, 2) * m(2, 1))
+                    - m(0, 1) * (m(1, 0) * m(2, 2) - m(1, 2) * m(2, 0))
+                    + m(0, 2) * (m(1, 0) * m(2, 1) - m(1, 1) * m(2, 0));
+                // scale by norm^3 for a relative check
+                let scale: f64 = ev.iter().map(|x| x.abs()).fold(1.0, f64::max);
+                assert!(det.abs() < 1e-8 * scale.powi(3) + 1e-8, "det={det}");
+            }
+        });
+    }
+
+    #[test]
+    fn spd_eigenvalues_positive() {
+        forall(10, 0x5bd, |rng| {
+            let n = 2 + rng.below(10);
+            let b = random_sym(rng, n);
+            // b^2 + I is SPD
+            let mut a = DMat::zeros(n, n);
+            for i in 0..n {
+                for j in 0..n {
+                    let mut s = if i == j { 1.0 } else { 0.0 };
+                    for k in 0..n {
+                        s += b.get(i, k) * b.get(k, j);
+                    }
+                    a.set(i, j, s);
+                }
+            }
+            let ev = sym_eigenvalues(&a);
+            assert!(ev[0] >= 1.0 - 1e-9, "λmin={}", ev[0]);
+        });
+    }
+}

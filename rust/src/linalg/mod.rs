@@ -1,0 +1,15 @@
+//! Dense linear-algebra substrate: column-major matrices, Cholesky
+//! (the exact-BIF baseline the paper's "original algorithms" use),
+//! incremental inverse maintenance, and a symmetric eigensolver
+//! (Householder tridiagonalization + implicit-shift QL) for generators
+//! and spectrum ground truth.
+
+pub mod chol;
+pub mod dense;
+pub mod eig;
+pub mod inverse;
+
+pub use chol::Cholesky;
+pub use dense::DMat;
+pub use eig::{sym_eigenvalues, tridiag_eigenvalues};
+pub use inverse::MaintainedInverse;

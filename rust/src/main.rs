@@ -1,0 +1,305 @@
+//! `gauss-bif` launcher: regenerate the paper's tables/figures, validate
+//! the theory, or run the judge service demo.
+//!
+//! Usage:
+//!   gauss-bif fig1   [--seed S] [--out DIR] [--iters N]
+//!   gauss-bif fig2   [--seed S] [--out DIR] [--scale K] [--densities d1,d2,...]
+//!   gauss-bif table2 [--seed S] [--out DIR] [--scale K] [--datasets N] [--dg-limit L]
+//!   gauss-bif rates  [--seed S] [--out DIR] [--sizes n1,n2,...]
+//!   gauss-bif serve  [--artifacts DIR] [--requests N] [--workers W]
+//!   gauss-bif info   [--artifacts DIR]
+//!
+//! A JSON run config can seed the defaults: `--config path.json`
+//! (see config::run::RunConfig).
+
+use gauss_bif::config::RunConfig;
+use gauss_bif::experiments::{self, fig1, fig2, rates, table2};
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some((cmd, flags)) = parse_args(&args) else {
+        eprintln!("{}", USAGE);
+        return ExitCode::from(2);
+    };
+
+    let mut cfg = match flags.get("config") {
+        Some(path) => match RunConfig::load(&PathBuf::from(path)) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("config error: {e}");
+                return ExitCode::from(2);
+            }
+        },
+        None => RunConfig::default(),
+    };
+    if let Some(s) = flags.get("seed").and_then(|s| s.parse().ok()) {
+        cfg.seed = s;
+    }
+    if let Some(s) = flags.get("out") {
+        cfg.out_dir = PathBuf::from(s);
+    }
+    if let Some(s) = flags.get("scale").and_then(|s| s.parse().ok()) {
+        cfg.dataset_scale = s;
+    }
+    if let Some(s) = flags.get("artifacts") {
+        cfg.artifacts_dir = PathBuf::from(s);
+    }
+
+    match cmd.as_str() {
+        "fig1" => cmd_fig1(&cfg, &flags),
+        "fig2" => cmd_fig2(&cfg, &flags),
+        "table2" => cmd_table2(&cfg, &flags),
+        "rates" => cmd_rates(&cfg, &flags),
+        "serve" => cmd_serve(&cfg, &flags),
+        "info" => cmd_info(&cfg),
+        _ => {
+            eprintln!("unknown command '{cmd}'\n{USAGE}");
+            ExitCode::from(2)
+        }
+    }
+}
+
+const USAGE: &str = "usage: gauss-bif <fig1|fig2|table2|rates|serve|info> [flags]\n\
+  common flags: --seed S --out DIR --scale K --config cfg.json --artifacts DIR";
+
+fn parse_args(args: &[String]) -> Option<(String, HashMap<String, String>)> {
+    let mut it = args.iter();
+    let cmd = it.next()?.clone();
+    let mut flags = HashMap::new();
+    while let Some(flag) = it.next() {
+        let name = flag.strip_prefix("--")?.to_string();
+        let value = it.next().cloned().unwrap_or_default();
+        flags.insert(name, value);
+    }
+    Some((cmd, flags))
+}
+
+fn parse_list<T: std::str::FromStr>(s: &str) -> Vec<T> {
+    s.split(',').filter_map(|x| x.trim().parse().ok()).collect()
+}
+
+fn cmd_fig1(cfg: &RunConfig, flags: &HashMap<String, String>) -> ExitCode {
+    let iters = flags.get("iters").and_then(|s| s.parse().ok()).unwrap_or(60);
+    let panels = fig1::run(cfg, iters);
+    for p in &panels {
+        println!(
+            "panel {:<14} λmin={:<10.3e} λmax={:<10.3e} exact={:.6} iters-to-1%={:?}",
+            p.name,
+            p.lam_min,
+            p.lam_max,
+            p.exact,
+            p.iters_to_rel_gap(0.01)
+        );
+    }
+    let rows = fig1::csv_rows(&panels);
+    match experiments::write_csv(&cfg.out_dir, "fig1.csv", &fig1::CSV_HEADER, &rows) {
+        Ok(p) => println!("wrote {}", p.display()),
+        Err(e) => {
+            eprintln!("write failed: {e}");
+            return ExitCode::FAILURE;
+        }
+    }
+    ExitCode::SUCCESS
+}
+
+fn cmd_fig2(cfg: &RunConfig, flags: &HashMap<String, String>) -> ExitCode {
+    let densities: Vec<f64> = flags
+        .get("densities")
+        .map(|s| parse_list(s))
+        .unwrap_or_else(|| fig2::DENSITIES.to_vec());
+    let budget = fig2::Fig2Budget::default();
+    let rows = fig2::run(cfg, budget, &densities);
+    let mut table = gauss_bif::util::bench::Table::new(&[
+        "algo", "n", "density", "baseline s/step", "gauss s/step", "speedup",
+    ]);
+    for r in &rows {
+        table.row(vec![
+            r.algo.into(),
+            r.n.to_string(),
+            format!("{:.0e}", r.density),
+            gauss_bif::util::bench::fmt_sci(r.baseline_s),
+            gauss_bif::util::bench::fmt_sci(r.gauss_s),
+            format!("{:.1}x", r.speedup),
+        ]);
+    }
+    println!("{}", table.render());
+    match experiments::write_csv(&cfg.out_dir, "fig2.csv", &fig2::CSV_HEADER, &fig2::csv_rows(&rows)) {
+        Ok(p) => println!("wrote {}", p.display()),
+        Err(e) => {
+            eprintln!("write failed: {e}");
+            return ExitCode::FAILURE;
+        }
+    }
+    ExitCode::SUCCESS
+}
+
+fn cmd_table2(cfg: &RunConfig, flags: &HashMap<String, String>) -> ExitCode {
+    let limit = flags.get("datasets").and_then(|s| s.parse().ok()).unwrap_or(6);
+    let skip = flags.get("skip").and_then(|s| s.parse().ok()).unwrap_or(0);
+    let mut budget = table2::Table2Budget::default();
+    if let Some(l) = flags.get("dg-limit").and_then(|s| s.parse().ok()) {
+        budget.dg_limit = Some(l);
+    }
+    if let Some(t) = flags.get("timeout").and_then(|s| s.parse().ok()) {
+        budget.baseline_timeout_s = t;
+    }
+    if let Some(g) = flags.get("gauss-steps").and_then(|s| s.parse().ok()) {
+        budget.gauss_steps = g;
+    }
+    let rows = table2::run_window(cfg, budget, skip, limit);
+    let mut table = gauss_bif::util::bench::Table::new(&[
+        "dataset", "algo", "n", "nnz", "baseline s", "gauss s", "speedup",
+    ]);
+    for r in &rows {
+        table.row(vec![
+            r.dataset.into(),
+            r.algo.into(),
+            r.n.to_string(),
+            r.nnz.to_string(),
+            r.baseline_s
+                .map_or("*".into(), gauss_bif::util::bench::fmt_sci),
+            gauss_bif::util::bench::fmt_sci(r.gauss_s),
+            r.speedup.map_or("*".into(), |s| format!("{s:.1}x")),
+        ]);
+    }
+    println!("{}", table.render());
+    let csv_name = if skip == 0 { "table2.csv".to_string() } else { format!("table2_skip{skip}.csv") };
+    match experiments::write_csv(
+        &cfg.out_dir,
+        &csv_name,
+        &table2::CSV_HEADER,
+        &table2::csv_rows(&rows),
+    ) {
+        Ok(p) => println!("wrote {}", p.display()),
+        Err(e) => {
+            eprintln!("write failed: {e}");
+            return ExitCode::FAILURE;
+        }
+    }
+    ExitCode::SUCCESS
+}
+
+fn cmd_rates(cfg: &RunConfig, flags: &HashMap<String, String>) -> ExitCode {
+    let sizes: Vec<usize> = flags
+        .get("sizes")
+        .map(|s| parse_list(s))
+        .unwrap_or_else(|| vec![32, 64, 128]);
+    let reports = rates::run(cfg, &sizes);
+    let mut ok = true;
+    for r in &reports {
+        let pass = r.worst_gauss <= 1.0
+            && r.worst_radau_lower <= 1.0
+            && r.worst_radau_upper <= 1.0
+            && r.worst_lobatto <= 1.0
+            && r.thm12_residual < 1e-5;
+        ok &= pass;
+        println!(
+            "n={:<5} κ={:<10.2e} worst err/envelope: gauss {:.3} | radau↓ {:.3} | radau↑ {:.3} | lobatto {:.3} | thm12 {:.1e} [{}]",
+            r.n,
+            r.kappa,
+            r.worst_gauss,
+            r.worst_radau_lower,
+            r.worst_radau_upper,
+            r.worst_lobatto,
+            r.thm12_residual,
+            if pass { "OK" } else { "VIOLATED" }
+        );
+    }
+    let _ = experiments::write_csv(
+        &cfg.out_dir,
+        "rates.csv",
+        &rates::CSV_HEADER,
+        &rates::csv_rows(&reports),
+    );
+    if ok {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}
+
+fn cmd_serve(cfg: &RunConfig, flags: &HashMap<String, String>) -> ExitCode {
+    use gauss_bif::coordinator::{BatchPolicy, JudgeService};
+    use gauss_bif::datasets::random_spd_exact;
+    use gauss_bif::linalg::Cholesky;
+    use gauss_bif::util::rng::Rng;
+
+    let n_requests = flags.get("requests").and_then(|s| s.parse().ok()).unwrap_or(200);
+    let workers = flags.get("workers").and_then(|s| s.parse().ok()).unwrap_or(2);
+    let svc = JudgeService::start(
+        Some(cfg.artifacts_dir.clone()),
+        BatchPolicy::default(),
+        workers,
+    );
+    let mut rng = Rng::new(cfg.seed);
+    let t0 = std::time::Instant::now();
+    let mut correct = 0usize;
+    let mut rxs = Vec::new();
+    let mut wants = Vec::new();
+    for i in 0..n_requests {
+        let n = [12, 16, 24, 31, 48][i % 5];
+        let (a, l1, ln) = random_spd_exact(&mut rng, n, 0.6, 0.2);
+        let u: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let exact = Cholesky::factor(&a).unwrap().bif(&u);
+        let t = exact * (0.5 + rng.f64());
+        wants.push(t < exact);
+        rxs.push(svc.submit(gauss_bif::coordinator::JudgeRequest {
+            a: (0..n * n).map(|k| a.get(k / n, k % n) as f32).collect(),
+            u: u.iter().map(|&x| x as f32).collect(),
+            n,
+            lam_min: (l1 * 0.99) as f32,
+            lam_max: (ln * 1.01) as f32,
+            t,
+        }));
+    }
+    for (rx, want) in rxs.into_iter().zip(wants) {
+        let resp = rx.recv().expect("response");
+        if resp.decision == want {
+            correct += 1;
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "{} requests in {:.3}s  ({:.0} req/s), {} correct",
+        n_requests,
+        dt,
+        n_requests as f64 / dt,
+        correct
+    );
+    println!("{}", svc.metrics.summary());
+    svc.shutdown();
+    if correct == n_requests {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}
+
+fn cmd_info(cfg: &RunConfig) -> ExitCode {
+    use gauss_bif::datasets::table1_specs;
+    println!("gauss-bif — Gauss quadrature for matrix inverse forms");
+    println!("artifacts dir: {}", cfg.artifacts_dir.display());
+    match gauss_bif::runtime::GqlRuntime::load(&cfg.artifacts_dir) {
+        Ok(rt) => {
+            println!("PJRT platform: {}", rt.platform());
+            for a in rt.artifacts() {
+                println!(
+                    "  {:<20} n={:<4} batch={:<2} iters={:<3} pallas={}",
+                    a.meta.name, a.meta.n, a.meta.batch, a.meta.iters, a.meta.pallas
+                );
+            }
+        }
+        Err(e) => println!("runtime unavailable: {e}"),
+    }
+    println!("\nTable-1 dataset substitutes:");
+    for s in table1_specs() {
+        println!(
+            "  {:<10} n={:<6} paper_nnz={:<9} kind={:?}",
+            s.name, s.n, s.paper_nnz, s.kind
+        );
+    }
+    ExitCode::SUCCESS
+}

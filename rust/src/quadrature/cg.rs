@@ -1,0 +1,144 @@
+//! Conjugate gradients: (a) the classical alternative for estimating
+//! `u^T A^{-1} u ≈ u^T x` by solving `A x = u` — the "black-box" approach
+//! §1 argues is insufficient because it yields no bounds — and (b) the
+//! theory bridge: Thm. 12 ties the CG error A-norm to the Gauss quadrature
+//! gap, which `rust/tests/prop_quadrature.rs` checks numerically.
+
+use crate::sparse::SymOp;
+
+/// Result of a CG solve.
+#[derive(Clone, Debug)]
+pub struct CgResult {
+    pub x: Vec<f64>,
+    pub iterations: usize,
+    pub residual_norm: f64,
+    /// ||r_k|| after every iteration (for convergence plots).
+    pub residual_history: Vec<f64>,
+    pub converged: bool,
+}
+
+/// Solve `A x = b` for SPD `A` by conjugate gradients.
+pub fn cg_solve(op: &dyn SymOp, b: &[f64], tol: f64, max_iters: usize) -> CgResult {
+    let n = op.dim();
+    assert_eq!(b.len(), n);
+    let mut x = vec![0.0; n];
+    let mut r = b.to_vec();
+    let mut p = r.clone();
+    let mut ap = vec![0.0; n];
+    let bnorm = r.iter().map(|v| v * v).sum::<f64>().sqrt().max(f64::MIN_POSITIVE);
+    let mut rs_old: f64 = r.iter().map(|v| v * v).sum();
+    let mut history = Vec::new();
+
+    for k in 0..max_iters {
+        if rs_old.sqrt() <= tol * bnorm {
+            return CgResult {
+                x,
+                iterations: k,
+                residual_norm: rs_old.sqrt(),
+                residual_history: history,
+                converged: true,
+            };
+        }
+        op.matvec(&p, &mut ap);
+        let pap: f64 = p.iter().zip(&ap).map(|(a, b)| a * b).sum();
+        if pap <= 0.0 {
+            break; // not SPD (or exhausted in exact arithmetic)
+        }
+        let alpha = rs_old / pap;
+        for i in 0..n {
+            x[i] += alpha * p[i];
+            r[i] -= alpha * ap[i];
+        }
+        let rs_new: f64 = r.iter().map(|v| v * v).sum();
+        history.push(rs_new.sqrt());
+        let beta = rs_new / rs_old;
+        for i in 0..n {
+            p[i] = r[i] + beta * p[i];
+        }
+        rs_old = rs_new;
+    }
+    CgResult {
+        x,
+        iterations: history.len(),
+        residual_norm: rs_old.sqrt(),
+        residual_history: history,
+        converged: rs_old.sqrt() <= tol * bnorm,
+    }
+}
+
+/// CG point estimate of the BIF: `u^T x` with `A x = u`. No bounds — the
+/// baseline the paper's framework improves on.
+pub fn cg_bif_estimate(op: &dyn SymOp, u: &[f64], tol: f64, max_iters: usize) -> f64 {
+    let r = cg_solve(op, u, tol, max_iters);
+    u.iter().zip(&r.x).map(|(a, b)| a * b).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{Cholesky, DMat};
+    use crate::quadrature::gql::tests::random_shifted_spd;
+    use crate::util::prop::{assert_close, forall};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn solves_identity_instantly() {
+        let a = DMat::eye(5);
+        let b = vec![1.0, 2.0, 3.0, 4.0, 5.0];
+        let r = cg_solve(&a, &b, 1e-12, 10);
+        assert!(r.converged);
+        for (xi, bi) in r.x.iter().zip(&b) {
+            assert_close(*xi, *bi, 1e-12, 1e-12);
+        }
+    }
+
+    #[test]
+    fn matches_cholesky_solution() {
+        forall(25, 0xC6, |rng| {
+            let n = 3 + rng.below(25);
+            let (a, _, _) = random_shifted_spd(rng, n, 0.5, 0.5);
+            let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let cg = cg_solve(&a, &b, 1e-12, 10 * n);
+            assert!(cg.converged, "CG did not converge");
+            let want = Cholesky::factor(&a).unwrap().solve(&b);
+            for (g, w) in cg.x.iter().zip(&want) {
+                assert_close(*g, *w, 1e-6, 1e-8);
+            }
+        });
+    }
+
+    #[test]
+    fn bif_estimate_matches_exact() {
+        forall(20, 0xC7, |rng| {
+            let n = 4 + rng.below(20);
+            let (a, _, _) = random_shifted_spd(rng, n, 0.6, 0.5);
+            let u: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let exact = Cholesky::factor(&a).unwrap().bif(&u);
+            let est = cg_bif_estimate(&a, &u, 1e-12, 10 * n);
+            assert_close(est, exact, 1e-7, 1e-9);
+        });
+    }
+
+    #[test]
+    fn residual_history_monotone_enough() {
+        // CG residuals are not strictly monotone, but the A-norm error is;
+        // check the residual at the end is far below the start.
+        let mut rng = Rng::new(0xC8);
+        let (a, _, _) = random_shifted_spd(&mut rng, 30, 0.6, 0.5);
+        let b: Vec<f64> = (0..30).map(|_| rng.normal()).collect();
+        let r = cg_solve(&a, &b, 1e-10, 300);
+        assert!(r.converged);
+        let first = r.residual_history.first().unwrap();
+        let last = r.residual_history.last().unwrap();
+        assert!(last < first);
+    }
+
+    #[test]
+    fn respects_max_iters() {
+        let mut rng = Rng::new(0xC9);
+        let (a, _, _) = random_shifted_spd(&mut rng, 40, 1.0, 1e-4);
+        let b: Vec<f64> = (0..40).map(|_| rng.normal()).collect();
+        let r = cg_solve(&a, &b, 1e-16, 3);
+        assert!(r.iterations <= 3);
+    }
+}

@@ -1,0 +1,534 @@
+//! Gauss Quadrature Lanczos (paper Alg. 5): iteratively tightening lower
+//! and upper bounds on `u^T A^{-1} u`.
+//!
+//! Per iteration the state advances one Lanczos step (one matvec — the hot
+//! path, O(nnz)) and updates the `[J_i^{-1}]_{1,1}` Sherman–Morrison
+//! recurrences for the Gauss estimate plus the three modified-Jacobi
+//! corrections:
+//!
+//! * Gauss `g`           → lower bound,
+//! * right Gauss-Radau `g_rr` (prescribed eigenvalue λ_max) → lower bound,
+//! * left Gauss-Radau  `g_lr` (prescribed eigenvalue λ_min) → upper bound,
+//! * Gauss-Lobatto     `g_lo` (both prescribed)             → upper bound.
+//!
+//! Monotonicity/ordering (Thm. 4/6, Corr. 7) and the linear rates
+//! (Thm. 3/5/8) are asserted as property tests below and in
+//! `rust/tests/prop_quadrature.rs`.
+//!
+//! No allocation happens inside [`Gql::step`]; all buffers are preallocated
+//! in [`Gql::new`] (perf deliverable — see EXPERIMENTS.md §Perf).
+
+use crate::sparse::SymOp;
+
+/// Reorthogonalization policy for the Lanczos basis (§5.4 "Instability").
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Reorth {
+    /// No reorthogonalization: the paper's default, O(nnz) per iteration.
+    None,
+    /// Full two-pass Gram–Schmidt against the stored basis: O(n·i) extra
+    /// per iteration; used when bound validity at high iteration counts
+    /// matters more than speed (ablated in `bench_ablation`).
+    Full,
+}
+
+/// Options for a GQL run.
+#[derive(Clone, Copy, Debug)]
+pub struct GqlOptions {
+    /// Estimate strictly below the smallest eigenvalue (λ_min in the
+    /// paper; must be > 0 for an SPD matrix and < λ₁).
+    pub lam_min: f64,
+    /// Estimate strictly above the largest eigenvalue.
+    pub lam_max: f64,
+    /// Hard cap on iterations (defaults to the dimension).
+    pub max_iters: usize,
+    pub reorth: Reorth,
+}
+
+impl GqlOptions {
+    pub fn new(lam_min: f64, lam_max: f64) -> Self {
+        GqlOptions { lam_min, lam_max, max_iters: usize::MAX, reorth: Reorth::None }
+    }
+
+    pub fn with_max_iters(mut self, it: usize) -> Self {
+        self.max_iters = it;
+        self
+    }
+
+    pub fn with_reorth(mut self, r: Reorth) -> Self {
+        self.reorth = r;
+        self
+    }
+}
+
+/// The four bound estimates after an iteration.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Bounds {
+    /// 1-based iteration index that produced these bounds.
+    pub iter: usize,
+    /// Gauss estimate (lower bound).
+    pub gauss: f64,
+    /// Right Gauss-Radau (tighter lower bound; Thm. 4).
+    pub radau_lower: f64,
+    /// Left Gauss-Radau (tighter upper bound; Thm. 6).
+    pub radau_upper: f64,
+    /// Gauss-Lobatto (upper bound).
+    pub lobatto: f64,
+    /// True once the Krylov space is exhausted (all four values exact).
+    pub exact: bool,
+}
+
+impl Bounds {
+    /// Best available lower bound.
+    #[inline]
+    pub fn lower(&self) -> f64 {
+        self.radau_lower.max(self.gauss)
+    }
+
+    /// Best available upper bound.
+    #[inline]
+    pub fn upper(&self) -> f64 {
+        if self.exact {
+            self.gauss
+        } else {
+            self.radau_upper.min(self.lobatto)
+        }
+    }
+
+    /// Width of the bracket.
+    #[inline]
+    pub fn gap(&self) -> f64 {
+        self.upper() - self.lower()
+    }
+
+    /// Midpoint estimate (used as fallback when a judge hits its budget).
+    #[inline]
+    pub fn mid(&self) -> f64 {
+        0.5 * (self.lower() + self.upper())
+    }
+}
+
+/// Incremental GQL state over a [`SymOp`].
+pub struct Gql<'a> {
+    op: &'a dyn SymOp,
+    opts: GqlOptions,
+    n: usize,
+    unorm2: f64,
+
+    // Lanczos vectors (preallocated; swapped, never reallocated)
+    v_prev: Vec<f64>,
+    v_curr: Vec<f64>,
+    w: Vec<f64>,
+    beta_prev: f64,
+
+    // Sherman–Morrison recurrence state
+    g: f64,
+    c: f64,
+    delta: f64,
+    d_lr: f64,
+    d_rr: f64,
+
+    iter: usize,
+    exhausted: bool,
+    last: Option<Bounds>,
+    /// stored basis when reorthogonalizing
+    basis: Vec<Vec<f64>>,
+}
+
+impl<'a> Gql<'a> {
+    /// Start a GQL run on `u^T op^{-1} u`. `u` must be nonzero.
+    pub fn new(op: &'a dyn SymOp, u: &[f64], opts: GqlOptions) -> Self {
+        let n = op.dim();
+        assert_eq!(u.len(), n, "dimension mismatch");
+        assert!(
+            opts.lam_min > 0.0 && opts.lam_max > opts.lam_min,
+            "need 0 < lam_min < lam_max (got {} .. {})",
+            opts.lam_min,
+            opts.lam_max
+        );
+        let unorm2: f64 = u.iter().map(|x| x * x).sum();
+        assert!(unorm2 > 0.0, "u must be nonzero");
+        let inv_norm = 1.0 / unorm2.sqrt();
+        let v_curr: Vec<f64> = u.iter().map(|x| x * inv_norm).collect();
+        Gql {
+            op,
+            opts,
+            n,
+            unorm2,
+            v_prev: vec![0.0; n],
+            v_curr,
+            w: vec![0.0; n],
+            beta_prev: 0.0,
+            g: 0.0,
+            c: 1.0,
+            delta: 0.0,
+            d_lr: 0.0,
+            d_rr: 0.0,
+            iter: 0,
+            exhausted: false,
+            last: None,
+            basis: Vec::new(),
+        }
+    }
+
+    pub fn iterations(&self) -> usize {
+        self.iter
+    }
+
+    pub fn is_exhausted(&self) -> bool {
+        self.exhausted
+    }
+
+    pub fn last_bounds(&self) -> Option<Bounds> {
+        self.last
+    }
+
+    /// Radau/Lobatto corrections from the current recurrence state and the
+    /// fresh off-diagonal `beta` (see python/compile/kernels/ref.py for the
+    /// Lobatto coefficient derivation; the paper's Alg. 5 rendering is
+    /// OCR-mangled there).
+    fn corrections(&self, beta: f64) -> (f64, f64, f64) {
+        let (lam_min, lam_max) = (self.opts.lam_min, self.opts.lam_max);
+        let beta2 = beta * beta;
+        let a_lr = lam_min + beta2 / self.d_lr;
+        let a_rr = lam_max + beta2 / self.d_rr;
+        let denom = self.d_rr - self.d_lr;
+        let b_lo2 = (lam_max - lam_min) * self.d_lr * self.d_rr / denom;
+        let a_lo = (lam_max * self.d_rr - lam_min * self.d_lr) / denom;
+        let c2 = self.c * self.c;
+        let k = self.unorm2 * c2 / self.delta;
+        let g_rr = self.g + k * beta2 / (a_rr * self.delta - beta2);
+        let g_lr = self.g + k * beta2 / (a_lr * self.delta - beta2);
+        let g_lo = self.g + k * b_lo2 / (a_lo * self.delta - b_lo2);
+        (g_rr, g_lr, g_lo)
+    }
+
+    /// One quadrature iteration: one matvec + O(1) recurrences (+ O(n·i)
+    /// when reorthogonalizing). Returns the updated bounds; after
+    /// exhaustion, keeps returning the exact value.
+    pub fn step(&mut self) -> Bounds {
+        if self.exhausted || self.iter >= self.opts.max_iters {
+            let mut b = self.last.expect("step after exhaustion requires a prior step");
+            b.exact = self.exhausted;
+            return b;
+        }
+        self.iter += 1;
+
+        // --- Lanczos step: alpha, beta, v_next (in-place in w) ---
+        self.op.matvec(&self.v_curr, &mut self.w);
+        let alpha: f64 = self.v_curr.iter().zip(&self.w).map(|(a, b)| a * b).sum();
+        for ((wi, &vc), &vp) in self.w.iter_mut().zip(&self.v_curr).zip(&self.v_prev) {
+            *wi -= alpha * vc + self.beta_prev * vp;
+        }
+        if self.opts.reorth == Reorth::Full {
+            if self.basis.is_empty() {
+                self.basis.push(self.v_curr.clone());
+            }
+            for _pass in 0..2 {
+                for q in &self.basis {
+                    let proj: f64 = q.iter().zip(&self.w).map(|(a, b)| a * b).sum();
+                    for (wi, &qi) in self.w.iter_mut().zip(q) {
+                        *wi -= proj * qi;
+                    }
+                }
+            }
+        }
+        let beta = self.w.iter().map(|x| x * x).sum::<f64>().sqrt();
+
+        // --- bound recurrences ---
+        if self.iter == 1 {
+            self.g = self.unorm2 / alpha;
+            self.c = 1.0;
+            self.delta = alpha;
+            self.d_lr = alpha - self.opts.lam_min;
+            self.d_rr = alpha - self.opts.lam_max;
+        } else {
+            let bp2 = self.beta_prev * self.beta_prev;
+            self.g += self.unorm2 * bp2 * self.c * self.c
+                / (self.delta * (alpha * self.delta - bp2));
+            self.c *= self.beta_prev / self.delta;
+            let delta_new = alpha - bp2 / self.delta;
+            self.d_lr = alpha - self.opts.lam_min - bp2 / self.d_lr;
+            self.d_rr = alpha - self.opts.lam_max - bp2 / self.d_rr;
+            self.delta = delta_new;
+        }
+
+        let breakdown = !(beta > Self::BREAKDOWN_TOL * alpha.abs().max(1.0));
+        let bounds = if breakdown {
+            // Krylov space exhausted: Gauss value is exact (Lemma 15).
+            self.exhausted = true;
+            Bounds {
+                iter: self.iter,
+                gauss: self.g,
+                radau_lower: self.g,
+                radau_upper: self.g,
+                lobatto: self.g,
+                exact: true,
+            }
+        } else {
+            let (g_rr, g_lr, g_lo) = self.corrections(beta);
+            Bounds {
+                iter: self.iter,
+                gauss: self.g,
+                radau_lower: g_rr,
+                radau_upper: g_lr,
+                lobatto: g_lo,
+                exact: false,
+            }
+        };
+
+        if !breakdown {
+            // advance Lanczos vectors without reallocating
+            let inv_beta = 1.0 / beta;
+            std::mem::swap(&mut self.v_prev, &mut self.v_curr);
+            for (vc, &wi) in self.v_curr.iter_mut().zip(&self.w) {
+                *vc = wi * inv_beta;
+            }
+            self.beta_prev = beta;
+            if self.opts.reorth == Reorth::Full {
+                self.basis.push(self.v_curr.clone());
+            }
+        }
+        if self.iter >= self.n {
+            self.exhausted = true;
+        }
+        self.last = Some(bounds);
+        bounds
+    }
+
+    /// Breakdown threshold relative to the Ritz scale.
+    const BREAKDOWN_TOL: f64 = 1e-13;
+
+    /// Run `k` iterations (or until exhaustion) collecting the history.
+    pub fn run(&mut self, k: usize) -> Vec<Bounds> {
+        let mut out = Vec::with_capacity(k);
+        for _ in 0..k {
+            out.push(self.step());
+            if self.exhausted {
+                break;
+            }
+        }
+        out
+    }
+
+    /// Iterate until the bracket width drops below `tol` (absolute) or the
+    /// space is exhausted; returns the final bounds.
+    pub fn run_to_gap(&mut self, tol: f64) -> Bounds {
+        loop {
+            let b = self.step();
+            if b.exact || b.gap() <= tol || self.iter >= self.opts.max_iters {
+                return b;
+            }
+        }
+    }
+}
+
+/// One-shot convenience: bounds on `u^T A^{-1} u` after `k` iterations.
+pub fn bif_bounds(op: &dyn SymOp, u: &[f64], opts: GqlOptions, k: usize) -> Bounds {
+    let mut q = Gql::new(op, u, opts);
+    let mut last = q.step();
+    for _ in 1..k {
+        if q.is_exhausted() {
+            break;
+        }
+        last = q.step();
+    }
+    last
+}
+
+#[cfg(test)]
+pub mod tests {
+    use super::*;
+    use crate::linalg::{sym_eigenvalues, Cholesky, DMat};
+    use crate::util::prop::{assert_close, assert_le, forall};
+    use crate::util::rng::Rng;
+
+    /// Paper §4.4 generator: random symmetric, density-masked, diagonal
+    /// shifted so λ₁ = lam1. Returns (A, λ₁, λ_N).
+    pub fn random_shifted_spd(rng: &mut Rng, n: usize, density: f64, lam1: f64) -> (DMat, f64, f64) {
+        let mut a = DMat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                if i == j || rng.bool(density) {
+                    let v = rng.normal();
+                    a.set(i, j, v);
+                    a.set(j, i, v);
+                }
+            }
+        }
+        let ev = sym_eigenvalues(&a);
+        a.shift_diag(lam1 - ev[0]);
+        (a, lam1, ev[n - 1] - ev[0] + lam1)
+    }
+
+    fn setup(rng: &mut Rng, n: usize) -> (DMat, Vec<f64>, f64, f64, f64) {
+        let (a, l1, ln) = random_shifted_spd(rng, n, 0.5, 0.1);
+        let u: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let exact = Cholesky::factor(&a).unwrap().bif(&u);
+        (a, u, l1, ln, exact)
+    }
+
+    #[test]
+    fn identity_matrix_is_exact_at_iteration_one() {
+        let a = DMat::eye(8);
+        let u = vec![1.0; 8];
+        let mut q = Gql::new(&a, &u, GqlOptions::new(0.5, 2.0));
+        let b = q.step();
+        assert!(b.exact);
+        assert_close(b.gauss, 8.0, 1e-14, 0.0);
+    }
+
+    #[test]
+    fn bounds_sandwich_exact_value() {
+        forall(25, 0x601, |rng| {
+            let n = 4 + rng.below(28);
+            let (a, u, l1, ln, exact) = setup(rng, n);
+            let opts = GqlOptions::new(l1 * 0.99, ln * 1.01);
+            let mut q = Gql::new(&a, &u, opts);
+            let tol = 1e-7 * exact.abs();
+            for b in q.run(n) {
+                assert_le(b.gauss, exact, tol);
+                assert_le(b.radau_lower, exact, tol);
+                assert_le(exact, b.radau_upper, tol);
+                assert_le(exact, b.lobatto, tol);
+            }
+        });
+    }
+
+    #[test]
+    fn monotone_and_ordered_corr7_thm4_thm6() {
+        forall(25, 0x602, |rng| {
+            let n = 6 + rng.below(24);
+            let (a, u, l1, ln, exact) = setup(rng, n);
+            let opts = GqlOptions::new(l1 * 0.99, ln * 1.01);
+            let mut q = Gql::new(&a, &u, opts);
+            let hist = q.run(n - 1);
+            let tol = 1e-8 * exact.abs().max(1.0);
+            for w in hist.windows(2) {
+                let (p, c) = (w[0], w[1]);
+                if c.exact {
+                    break;
+                }
+                // Corr. 7 monotonicity
+                assert_le(p.gauss, c.gauss, tol);
+                assert_le(p.radau_lower, c.radau_lower, tol);
+                assert_le(c.radau_upper, p.radau_upper, tol);
+                assert_le(c.lobatto, p.lobatto, tol);
+                // Thm. 4: g_i ≤ g_i^rr ≤ g_{i+1}
+                assert_le(p.gauss, p.radau_lower, tol);
+                assert_le(p.radau_lower, c.gauss, tol);
+                // Thm. 6: g_{i+1}^lo ≤ g_i^lr ≤ g_i^lo
+                assert_le(c.lobatto, p.radau_upper, tol);
+                assert_le(p.radau_upper, p.lobatto, tol);
+            }
+        });
+    }
+
+    #[test]
+    fn converges_to_exact_at_dimension() {
+        forall(20, 0x603, |rng| {
+            let n = 3 + rng.below(20);
+            let (a, u, l1, ln, exact) = setup(rng, n);
+            let mut q = Gql::new(&a, &u, GqlOptions::new(l1 * 0.999, ln * 1.001));
+            let hist = q.run(n);
+            let last = hist.last().unwrap();
+            assert_close(last.gauss, exact, 1e-6, 1e-9);
+        });
+    }
+
+    #[test]
+    fn gauss_rate_thm3() {
+        // relative error ≤ 2((√κ−1)/(√κ+1))^i
+        forall(10, 0x604, |rng| {
+            let n = 24;
+            let (a, u, l1, ln, exact) = setup(rng, n);
+            let kappa = ln / l1;
+            let rho = (kappa.sqrt() - 1.0) / (kappa.sqrt() + 1.0);
+            let mut q = Gql::new(&a, &u, GqlOptions::new(l1 * 0.999, ln * 1.001));
+            for b in q.run(n - 1) {
+                let bound = 2.0 * rho.powi(b.iter as i32) + 1e-9;
+                assert_le((exact - b.gauss) / exact, bound, 0.0);
+                assert_le((exact - b.radau_lower) / exact, bound, 0.0); // Thm. 5
+            }
+        });
+    }
+
+    #[test]
+    fn radau_upper_rate_thm8() {
+        forall(10, 0x605, |rng| {
+            let n = 24;
+            let (a, u, l1, ln, exact) = setup(rng, n);
+            let lam_min = l1 * 0.99;
+            let kappa = ln / l1;
+            let kappa_plus = ln / lam_min;
+            let rho = (kappa.sqrt() - 1.0) / (kappa.sqrt() + 1.0);
+            let mut q = Gql::new(&a, &u, GqlOptions::new(lam_min, ln * 1.01));
+            for b in q.run(n - 1) {
+                if b.exact {
+                    break;
+                }
+                let bound = 2.0 * kappa_plus * rho.powi(b.iter as i32) + 1e-9;
+                assert_le((b.radau_upper - exact) / exact, bound, 0.0);
+                // Corr. 9 for Lobatto (one power weaker)
+                let bound_lo = 2.0 * kappa_plus * rho.powi(b.iter as i32 - 1) + 1e-9;
+                assert_le((b.lobatto - exact) / exact, bound_lo, 0.0);
+            }
+        });
+    }
+
+    #[test]
+    fn run_to_gap_reaches_tolerance() {
+        let mut rng = Rng::new(0x606);
+        let (a, u, l1, ln, exact) = setup(&mut rng, 32);
+        let mut q = Gql::new(&a, &u, GqlOptions::new(l1 * 0.99, ln * 1.01));
+        let b = q.run_to_gap(1e-3 * exact.abs());
+        assert!(b.gap() <= 1e-3 * exact.abs() || b.exact);
+        assert!(b.lower() <= exact * (1.0 + 1e-9));
+        assert!(b.upper() >= exact * (1.0 - 1e-9));
+    }
+
+    #[test]
+    fn reorthogonalization_stays_valid_longer() {
+        // On an ill-conditioned matrix, plain Lanczos loses orthogonality;
+        // both variants must still produce valid *final* values, and full
+        // reorth must match the exact BIF tightly at exhaustion.
+        let mut rng = Rng::new(0x607);
+        let n = 40;
+        let (a, _, ln, ) = {
+            let (a, l1, ln) = random_shifted_spd(&mut rng, n, 1.0, 1e-4);
+            (a, l1, ln)
+        };
+        let u: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let exact = Cholesky::factor(&a).unwrap().bif(&u);
+        let opts = GqlOptions::new(1e-5, ln * 1.1).with_reorth(Reorth::Full);
+        let mut q = Gql::new(&a, &u, opts);
+        let hist = q.run(n);
+        let last = hist.last().unwrap();
+        assert_close(last.gauss, exact, 1e-5, 1e-8);
+    }
+
+    #[test]
+    fn max_iters_respected() {
+        let mut rng = Rng::new(0x608);
+        let (a, u, l1, ln, _) = setup(&mut rng, 16);
+        let opts = GqlOptions::new(l1 * 0.99, ln * 1.01).with_max_iters(3);
+        let mut q = Gql::new(&a, &u, opts);
+        for _ in 0..10 {
+            q.step();
+        }
+        assert_eq!(q.iterations(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "u must be nonzero")]
+    fn zero_vector_rejected() {
+        let a = DMat::eye(4);
+        let _ = Gql::new(&a, &[0.0; 4], GqlOptions::new(0.5, 2.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "need 0 < lam_min")]
+    fn bad_window_rejected() {
+        let a = DMat::eye(4);
+        let _ = Gql::new(&a, &[1.0; 4], GqlOptions::new(-1.0, 2.0));
+    }
+}

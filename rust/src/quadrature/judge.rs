@@ -1,0 +1,413 @@
+//! Retrospective judges (paper Alg. 4, 7, 9): run quadrature *just far
+//! enough* to decide a comparison involving BIFs, never farther.
+//!
+//! Each judge returns both the decision and [`JudgeStats`] (iterations
+//! actually spent) — the iteration histograms in EXPERIMENTS.md come from
+//! these.
+
+use super::gql::{Gql, GqlOptions};
+use crate::sparse::SymOp;
+
+/// How a judgement terminated.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JudgeOutcome {
+    /// Bounds separated before exhaustion — the cheap case the paper's
+    /// speedups come from.
+    Decided,
+    /// Krylov exhaustion made the value exact first.
+    Exact,
+    /// Iteration budget hit; decision taken at the bracket midpoint
+    /// (never happens with the default unlimited budget).
+    Budget,
+}
+
+/// Accounting for one judgement.
+#[derive(Clone, Copy, Debug)]
+pub struct JudgeStats {
+    pub iters: usize,
+    pub outcome: JudgeOutcome,
+}
+
+/// Which pair of bound sequences a judge separates on. The paper proves
+/// Radau dominates at equal iteration count (Thm. 4/6) — ablated in
+/// `bench_ablation`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BoundSource {
+    /// right Gauss-Radau (lower) + left Gauss-Radau (upper) — the default
+    Radau,
+    /// Gauss (lower) + Gauss-Lobatto (upper) — strictly weaker per Thm. 4/6
+    GaussLobatto,
+}
+
+/// Paper Alg. 4 (DPPJudge): is `t < u^T A^{-1} u`?
+///
+/// Iterates Gauss-Radau (both flavors come for free from one [`Gql`] step)
+/// until `t < g^rr` (true) or `t ≥ g^lr` (false).
+pub fn judge_threshold(
+    op: &dyn SymOp,
+    u: &[f64],
+    t: f64,
+    opts: GqlOptions,
+) -> (bool, JudgeStats) {
+    judge_threshold_src(op, u, t, opts, BoundSource::Radau)
+}
+
+/// [`judge_threshold`] with an explicit [`BoundSource`] (ablation entry).
+pub fn judge_threshold_src(
+    op: &dyn SymOp,
+    u: &[f64],
+    t: f64,
+    opts: GqlOptions,
+    src: BoundSource,
+) -> (bool, JudgeStats) {
+    if is_zero(u) {
+        // u = 0 ⇒ BIF = 0 exactly (disconnected candidate: common on the
+        // paper's very sparse matrices)
+        return (t < 0.0, JudgeStats { iters: 0, outcome: JudgeOutcome::Exact });
+    }
+    let mut q = Gql::new(op, u, opts);
+    loop {
+        let b = q.step();
+        if b.exact {
+            return (t < b.gauss, JudgeStats { iters: b.iter, outcome: JudgeOutcome::Exact });
+        }
+        let (lo, hi) = match src {
+            BoundSource::Radau => (b.radau_lower, b.radau_upper),
+            BoundSource::GaussLobatto => (b.gauss, b.lobatto),
+        };
+        if t < lo {
+            return (true, JudgeStats { iters: b.iter, outcome: JudgeOutcome::Decided });
+        }
+        if t >= hi {
+            return (false, JudgeStats { iters: b.iter, outcome: JudgeOutcome::Decided });
+        }
+        if q.iterations() >= opts.max_iters {
+            return (t < b.mid(), JudgeStats { iters: b.iter, outcome: JudgeOutcome::Budget });
+        }
+    }
+}
+
+/// How a two-sided judge picks which quadrature to advance next.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RefinePolicy {
+    /// §5.1: tighten whichever side contributes the larger (p-weighted)
+    /// bracket — the paper's refinement.
+    Adaptive,
+    /// strictly alternate sides (the straw-man the refinement improves on)
+    Alternate,
+}
+
+/// Paper Alg. 7 (kDPP-JudgeGauss): is `t < p·(v^T A^{-1} v) − u^T A^{-1} u`?
+///
+/// Runs two interleaved quadratures on the same operator and applies the
+/// §5.1 refinement: tighten whichever side currently contributes the larger
+/// (p-scaled) bracket to the undecidable region.
+pub fn judge_ratio(
+    op: &dyn SymOp,
+    u: &[f64],
+    v: &[f64],
+    t: f64,
+    p: f64,
+    opts: GqlOptions,
+) -> (bool, JudgeStats) {
+    judge_ratio_policy(op, u, v, t, p, opts, RefinePolicy::Adaptive)
+}
+
+/// [`judge_ratio`] with an explicit [`RefinePolicy`] (ablation entry).
+pub fn judge_ratio_policy(
+    op: &dyn SymOp,
+    u: &[f64],
+    v: &[f64],
+    t: f64,
+    p: f64,
+    opts: GqlOptions,
+    policy: RefinePolicy,
+) -> (bool, JudgeStats) {
+    // zero queries have exactly-zero BIFs; swap in an exhausted bracket
+    let zero_bounds = |iter| crate::quadrature::Bounds {
+        iter,
+        gauss: 0.0,
+        radau_lower: 0.0,
+        radau_upper: 0.0,
+        lobatto: 0.0,
+        exact: true,
+    };
+    let mut qu = (!is_zero(u)).then(|| Gql::new(op, u, opts));
+    let mut qv = (!is_zero(v)).then(|| Gql::new(op, v, opts));
+    let mut bu = qu.as_mut().map_or(zero_bounds(0), |q| q.step());
+    let mut bv = qv.as_mut().map_or(zero_bounds(0), |q| q.step());
+    loop {
+        // decide if possible: t < p·lower(v) − upper(u)  → true
+        //                     t ≥ p·upper(v) − lower(u)  → false
+        if t < p * bv.lower() - bu.upper() {
+            let outcome = if bu.exact && bv.exact { JudgeOutcome::Exact } else { JudgeOutcome::Decided };
+            return (true, JudgeStats { iters: bu.iter + bv.iter, outcome });
+        }
+        if t >= p * bv.upper() - bu.lower() {
+            let outcome = if bu.exact && bv.exact { JudgeOutcome::Exact } else { JudgeOutcome::Decided };
+            return (false, JudgeStats { iters: bu.iter + bv.iter, outcome });
+        }
+        if bu.exact && bv.exact {
+            // fully exact yet undecidable can only be a tie: break by <
+            let val = p * bv.gauss - bu.gauss;
+            return (t < val, JudgeStats { iters: bu.iter + bv.iter, outcome: JudgeOutcome::Exact });
+        }
+        let du = bu.gap();
+        let dv = p * bv.gap();
+        let budget_hit = bu.iter >= opts.max_iters && bv.iter >= opts.max_iters;
+        if budget_hit {
+            let val = p * bv.mid() - bu.mid();
+            return (t < val, JudgeStats { iters: bu.iter + bv.iter, outcome: JudgeOutcome::Budget });
+        }
+        // refinement: adaptive per §5.1 or strict alternation (ablation)
+        let prefer_u = match policy {
+            RefinePolicy::Adaptive => du >= dv,
+            RefinePolicy::Alternate => (bu.iter + bv.iter) % 2 == 0,
+        };
+        let tighten_u = (prefer_u && !bu.exact && bu.iter < opts.max_iters)
+            || bv.exact
+            || bv.iter >= opts.max_iters;
+        if tighten_u {
+            bu = qu.as_mut().map_or(bu, |q| q.step());
+        } else {
+            bv = qv.as_mut().map_or(bv, |q| q.step());
+        }
+    }
+}
+
+#[inline]
+fn is_zero(u: &[f64]) -> bool {
+    u.iter().all(|&x| x == 0.0)
+}
+
+/// Bracket for `log(t − bif)` given BIF bounds `[lo, hi]`; −∞ when the
+/// argument is non-positive (degenerate gain; `[x]₊` clamps it later).
+fn log_gap_bracket(t: f64, bif_lo: f64, bif_hi: f64) -> (f64, f64) {
+    let lo_arg = t - bif_hi;
+    let hi_arg = t - bif_lo;
+    let lo = if lo_arg > 0.0 { lo_arg.ln() } else { f64::NEG_INFINITY };
+    let hi = if hi_arg > 0.0 { hi_arg.ln() } else { f64::NEG_INFINITY };
+    (lo, hi)
+}
+
+#[inline]
+fn pos(x: f64) -> f64 {
+    x.max(0.0)
+}
+
+/// Paper Alg. 9 (DG-JudgeGauss): double-greedy inclusion test.
+///
+/// With Δ⁺ = log(l_ii − u_x^T L_X^{-1} u_x) (gain of adding `i` to X) and
+/// Δ⁻ = −log(l_ii − u_y^T L_{Y'}^{-1} u_y) (gain of removing `i` from Y),
+/// returns true (add to X) iff `p·[Δ⁻]₊ ≤ (1−p)·[Δ⁺]₊`.
+///
+/// `ops` may be `None` when the corresponding set is empty (Δ then depends
+/// on `l_ii` alone and is exact).
+pub fn judge_dg(
+    op_x: Option<(&dyn SymOp, &[f64])>,
+    op_y: Option<(&dyn SymOp, &[f64])>,
+    l_ii: f64,
+    p: f64,
+    opts_x: GqlOptions,
+    opts_y: GqlOptions,
+) -> (bool, JudgeStats) {
+    // Quadrature state (None = exact zero-BIF, incl. zero query vectors)
+    let mut qx = op_x
+        .filter(|(_, u)| !is_zero(u))
+        .map(|(op, u)| Gql::new(op, u, opts_x));
+    let mut qy = op_y
+        .filter(|(_, u)| !is_zero(u))
+        .map(|(op, u)| Gql::new(op, u, opts_y));
+    let mut bx = qx.as_mut().map(|q| q.step());
+    let mut by = qy.as_mut().map(|q| q.step());
+    let mut iters = 0usize;
+
+    loop {
+        let (x_lo, x_hi, x_exact) = match &bx {
+            Some(b) => (b.lower(), b.upper(), b.exact),
+            None => (0.0, 0.0, true),
+        };
+        let (y_lo, y_hi, y_exact) = match &by {
+            Some(b) => (b.lower(), b.upper(), b.exact),
+            None => (0.0, 0.0, true),
+        };
+        // Δ⁺ = log(l_ii − bif_x) ∈ [log(l_ii − x_hi), log(l_ii − x_lo)]
+        let (dp_lo, dp_hi) = log_gap_bracket(l_ii, x_lo, x_hi);
+        // Δ⁻ = −log(l_ii − bif_y) ∈ [−log(l_ii − y_lo), −log(l_ii − y_hi)]
+        let (ly_lo, ly_hi) = log_gap_bracket(l_ii, y_lo, y_hi);
+        let (dm_lo, dm_hi) = (-ly_hi, -ly_lo); // note sign flip reverses order
+
+        // decide: add i  if p·[Δ⁻]₊ ≤ (1−p)·[Δ⁺]₊ certainly
+        if p * pos(dm_hi) <= (1.0 - p) * pos(dp_lo) {
+            let outcome = if x_exact && y_exact { JudgeOutcome::Exact } else { JudgeOutcome::Decided };
+            return (true, JudgeStats { iters, outcome });
+        }
+        if p * pos(dm_lo) > (1.0 - p) * pos(dp_hi) {
+            let outcome = if x_exact && y_exact { JudgeOutcome::Exact } else { JudgeOutcome::Decided };
+            return (false, JudgeStats { iters, outcome });
+        }
+        if x_exact && y_exact {
+            return (
+                p * pos(dm_lo) <= (1.0 - p) * pos(dp_lo),
+                JudgeStats { iters, outcome: JudgeOutcome::Exact },
+            );
+        }
+        // §5.2 refinement: tighten the side with the larger weighted
+        // log-gap bracket
+        let gx = (1.0 - p) * (pos(dp_hi) - pos(dp_lo));
+        let gy = p * (pos(dm_hi) - pos(dm_lo));
+        let x_can = !x_exact && qx.as_ref().map_or(false, |q| q.iterations() < opts_x.max_iters);
+        let y_can = !y_exact && qy.as_ref().map_or(false, |q| q.iterations() < opts_y.max_iters);
+        if !x_can && !y_can {
+            let dp_mid = 0.5 * (pos(dp_lo) + pos(dp_hi));
+            let dm_mid = 0.5 * (pos(dm_lo) + pos(dm_hi));
+            return (
+                p * dm_mid <= (1.0 - p) * dp_mid,
+                JudgeStats { iters, outcome: JudgeOutcome::Budget },
+            );
+        }
+        if x_can && (gx >= gy || !y_can) {
+            bx = qx.as_mut().map(|q| q.step());
+        } else {
+            by = qy.as_mut().map(|q| q.step());
+        }
+        iters += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{Cholesky, DMat};
+    use crate::quadrature::gql::tests::random_shifted_spd;
+    use crate::util::prop::forall;
+    use crate::util::rng::Rng;
+
+    fn setup(rng: &mut Rng, n: usize) -> (DMat, Vec<f64>, GqlOptions, f64) {
+        let (a, l1, ln) = random_shifted_spd(rng, n, 0.6, 0.2);
+        let u: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let exact = Cholesky::factor(&a).unwrap().bif(&u);
+        (a, u, GqlOptions::new(l1 * 0.99, ln * 1.01), exact)
+    }
+
+    #[test]
+    fn threshold_judge_always_matches_exact_comparison() {
+        forall(40, 0x701, |rng| {
+            let n = 4 + rng.below(24);
+            let (a, u, opts, exact) = setup(rng, n);
+            // thresholds straddling the value at various distances
+            for factor in [0.5, 0.9, 0.999, 1.001, 1.1, 2.0] {
+                let t = exact * factor;
+                let (ans, stats) = judge_threshold(&a, &u, t, opts);
+                assert_eq!(ans, t < exact, "factor={factor}");
+                assert!(stats.iters <= n + 1);
+            }
+        });
+    }
+
+    #[test]
+    fn easy_thresholds_decide_in_few_iterations() {
+        let mut rng = Rng::new(0x702);
+        let (a, u, opts, exact) = setup(&mut rng, 64);
+        let (_, far) = judge_threshold(&a, &u, exact * 0.01, opts);
+        let (_, near) = judge_threshold(&a, &u, exact * 0.999, opts);
+        assert!(
+            far.iters <= near.iters,
+            "far {} vs near {}",
+            far.iters,
+            near.iters
+        );
+        assert!(far.iters < 64, "far threshold should decide early");
+    }
+
+    #[test]
+    fn ratio_judge_matches_exact_comparison() {
+        forall(30, 0x703, |rng| {
+            let n = 5 + rng.below(20);
+            let (a, l1, ln) = random_shifted_spd(rng, n, 0.6, 0.2);
+            let u: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let ch = Cholesky::factor(&a).unwrap();
+            let (eu, ev) = (ch.bif(&u), ch.bif(&v));
+            let opts = GqlOptions::new(l1 * 0.99, ln * 1.01);
+            for p in [0.1, 0.5, 0.9] {
+                let truth_val = p * ev - eu;
+                for t in [truth_val - 0.5, truth_val * 0.9, truth_val + 0.5] {
+                    if (t - truth_val).abs() < 1e-9 {
+                        continue;
+                    }
+                    let (ans, _) = judge_ratio(&a, &u, &v, t, p, opts);
+                    assert_eq!(ans, t < truth_val, "p={p} t={t} truth={truth_val}");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn dg_judge_matches_exact_decision() {
+        forall(30, 0x704, |rng| {
+            let n = 6 + rng.below(16);
+            let (a, l1, ln) = random_shifted_spd(rng, n, 0.7, 0.3);
+            // split indices into X and Y' with a candidate element i
+            let k = 2 + rng.below(n / 2);
+            let all = rng.sample_indices(n, n);
+            let (xs, rest) = all.split_at(k);
+            let (ys, _) = rest.split_at(rng.below(rest.len().max(2) - 1) + 1);
+            let i = *all.last().unwrap();
+            let full = a.clone();
+            let ax = full.principal_submatrix(xs);
+            let ay = full.principal_submatrix(ys);
+            let ux: Vec<f64> = xs.iter().map(|&m| full.get(m, i)).collect();
+            let uy: Vec<f64> = ys.iter().map(|&m| full.get(m, i)).collect();
+            let l_ii = full.get(i, i);
+            let chx = Cholesky::factor(&ax);
+            let chy = Cholesky::factor(&ay);
+            let (chx, chy) = match (chx, chy) {
+                (Ok(a), Ok(b)) => (a, b),
+                _ => return, // random submatrix not PD: skip case
+            };
+            let dp = (l_ii - chx.bif(&ux)).max(1e-300).ln();
+            let dm = -(l_ii - chy.bif(&uy)).max(1e-300).ln();
+            let opts = GqlOptions::new(l1 * 0.5, ln * 1.5);
+            for p in [0.2, 0.5, 0.8] {
+                let want = p * dm.max(0.0) <= (1.0 - p) * dp.max(0.0);
+                let (got, _) = judge_dg(
+                    Some((&ax, &ux)),
+                    Some((&ay, &uy)),
+                    l_ii,
+                    p,
+                    opts,
+                    opts,
+                );
+                assert_eq!(got, want, "p={p} dp={dp} dm={dm}");
+            }
+        });
+    }
+
+    #[test]
+    fn dg_judge_empty_sides_are_exact() {
+        // X empty, Y empty: Δ⁺ = log(l_ii), Δ⁻ = −log(l_ii), no quadrature.
+        let l_ii = 2.0;
+        let opts = GqlOptions::new(0.1, 10.0);
+        let (ans, stats) = judge_dg(None, None, l_ii, 0.3, opts, opts);
+        // Δ⁺ = ln 2 > 0, Δ⁻ = −ln 2 → [Δ⁻]₊ = 0 ⇒ always add
+        assert!(ans);
+        assert_eq!(stats.iters, 0);
+        assert_eq!(stats.outcome, JudgeOutcome::Exact);
+    }
+
+    #[test]
+    fn budget_falls_back_to_midpoint() {
+        let mut rng = Rng::new(0x705);
+        let (a, u, opts, exact) = setup(&mut rng, 48);
+        let tight = opts.with_max_iters(2);
+        // threshold so close the 2-iteration bracket cannot decide
+        let (ans, stats) = judge_threshold(&a, &u, exact * (1.0 - 1e-12), tight);
+        // must terminate quickly either way
+        assert!(stats.iters <= 2);
+        if stats.outcome == JudgeOutcome::Budget {
+            // midpoint decision is allowed to be either; just check sanity
+            let _ = ans;
+        }
+    }
+}

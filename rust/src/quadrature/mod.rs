@@ -1,0 +1,17 @@
+//! The paper's core: Gauss-Quadrature-Lanczos bounds on bilinear inverse
+//! forms, the retrospective judges built on them, conjugate gradients
+//! (both a baseline and the theory cross-check of Thm. 12), and Jacobi
+//! preconditioning (§5.4).
+
+pub mod cg;
+pub mod gql;
+pub mod judge;
+pub mod precond;
+
+pub use cg::{cg_solve, CgResult};
+pub use gql::{bif_bounds, Bounds, Gql, GqlOptions, Reorth};
+pub use judge::{
+    judge_dg, judge_ratio, judge_ratio_policy, judge_threshold, judge_threshold_src,
+    BoundSource, JudgeOutcome, JudgeStats, RefinePolicy,
+};
+pub use precond::JacobiPrecond;

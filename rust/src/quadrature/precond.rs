@@ -1,0 +1,183 @@
+//! Jacobi preconditioning (paper §5.4): `u^T A^{-1} u =
+//! (Cu)^T (C A C^T)^{-1} (Cu)` for any nonsingular `C`; with
+//! `C = diag(A)^{-1/2}` the transformed matrix has unit diagonal and
+//! (often) a much smaller condition number, which Thm. 3/5/8 translate
+//! directly into fewer quadrature iterations.  Ablated in
+//! `bench_ablation`.
+
+use crate::sparse::SymOp;
+
+/// The operator `D^{-1/2} A D^{-1/2}` (never materialized).
+pub struct JacobiPrecond<'a> {
+    op: &'a dyn SymOp,
+    /// d_scale[i] = 1/sqrt(diag[i])
+    d_scale: Vec<f64>,
+    /// scratch for the inner matvec
+    scratch: std::cell::RefCell<(Vec<f64>, Vec<f64>)>,
+}
+
+impl<'a> JacobiPrecond<'a> {
+    /// Wrap `op`; requires a strictly positive diagonal (SPD matrices
+    /// qualify). Returns `None` if any diagonal entry is ≤ 0.
+    pub fn new(op: &'a dyn SymOp) -> Option<Self> {
+        let diag = op.diagonal();
+        if diag.iter().any(|&d| d <= 0.0) {
+            return None;
+        }
+        let d_scale: Vec<f64> = diag.iter().map(|&d| 1.0 / d.sqrt()).collect();
+        let n = op.dim();
+        Some(JacobiPrecond {
+            op,
+            d_scale,
+            scratch: std::cell::RefCell::new((vec![0.0; n], vec![0.0; n])),
+        })
+    }
+
+    /// The transformed query vector `C u = D^{-1/2} u`; run GQL on
+    /// (`self`, `scaled_query(u)`) to bound the original BIF.
+    pub fn scaled_query(&self, u: &[f64]) -> Vec<f64> {
+        u.iter().zip(&self.d_scale).map(|(x, s)| x * s).collect()
+    }
+}
+
+impl SymOp for JacobiPrecond<'_> {
+    fn dim(&self) -> usize {
+        self.op.dim()
+    }
+
+    fn matvec(&self, x: &[f64], y: &mut [f64]) {
+        let mut guard = self.scratch.borrow_mut();
+        let (sx, sy) = &mut *guard;
+        for ((t, &xi), &s) in sx.iter_mut().zip(x).zip(&self.d_scale) {
+            *t = xi * s;
+        }
+        self.op.matvec(sx, sy);
+        for ((yi, &ti), &s) in y.iter_mut().zip(sy.iter()).zip(&self.d_scale) {
+            *yi = ti * s;
+        }
+    }
+
+    fn diagonal(&self) -> Vec<f64> {
+        // D^{-1/2} A D^{-1/2} has unit diagonal by construction.
+        vec![1.0; self.op.dim()]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{sym_eigenvalues, Cholesky, DMat};
+    use crate::quadrature::gql::tests::random_shifted_spd;
+    use crate::quadrature::{Gql, GqlOptions};
+    use crate::util::prop::{assert_close, forall};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn preconditioned_bif_equals_original() {
+        forall(20, 0x9C1, |rng| {
+            let n = 4 + rng.below(16);
+            let (a, _, _) = random_shifted_spd(rng, n, 0.6, 0.5);
+            let u: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let exact = Cholesky::factor(&a).unwrap().bif(&u);
+            let pc = JacobiPrecond::new(&a).unwrap();
+            let su = pc.scaled_query(&u);
+            // exact BIF of the transformed problem via dense materialization
+            let mut m = DMat::zeros(n, n);
+            for j in 0..n {
+                let mut e = vec![0.0; n];
+                e[j] = 1.0;
+                let mut col = vec![0.0; n];
+                pc.matvec(&e, &mut col);
+                for i in 0..n {
+                    m.set(i, j, col[i]);
+                }
+            }
+            let exact_pc = Cholesky::factor(&m).unwrap().bif(&su);
+            assert_close(exact_pc, exact, 1e-9, 1e-10);
+        });
+    }
+
+    #[test]
+    fn gql_on_preconditioned_op_brackets_original_value() {
+        let mut rng = Rng::new(0x9C2);
+        // badly scaled diagonal: Jacobi helps a lot here
+        let n = 24;
+        let (mut a, _, _) = random_shifted_spd(&mut rng, n, 0.5, 0.5);
+        for i in 0..n {
+            let s = 10f64.powi((i % 5) as i32);
+            for j in 0..n {
+                let v = a.get(i, j) * s.sqrt() * (10f64.powi((j % 5) as i32)).sqrt();
+                a.set(i, j, v);
+            }
+        }
+        let u: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let exact = Cholesky::factor(&a).unwrap().bif(&u);
+        let pc = JacobiPrecond::new(&a).unwrap();
+        let su = pc.scaled_query(&u);
+        // materialize to get a valid window for the transformed spectrum
+        let mut m = DMat::zeros(n, n);
+        for j in 0..n {
+            let mut e = vec![0.0; n];
+            e[j] = 1.0;
+            let mut col = vec![0.0; n];
+            pc.matvec(&e, &mut col);
+            for i in 0..n {
+                m.set(i, j, col[i]);
+            }
+        }
+        let ev = sym_eigenvalues(&m);
+        let opts = GqlOptions::new(ev[0] * 0.99, ev[n - 1] * 1.01);
+        let mut q = Gql::new(&pc, &su, opts);
+        let b = q.run_to_gap(1e-6 * exact.abs());
+        assert!(b.lower() <= exact * (1.0 + 1e-6));
+        assert!(b.upper() >= exact * (1.0 - 1e-6));
+    }
+
+    #[test]
+    fn preconditioning_reduces_condition_number() {
+        let mut rng = Rng::new(0x9C3);
+        let n = 16;
+        let (mut a, _, _) = random_shifted_spd(&mut rng, n, 0.5, 1.0);
+        // scale rows/cols badly
+        for i in 0..n {
+            for j in 0..n {
+                let s = (1 + i % 4 * 10) as f64 * (1 + j % 4 * 10) as f64;
+                a.set(i, j, a.get(i, j) * s.sqrt());
+            }
+        }
+        let ev = sym_eigenvalues(&a);
+        let pc = JacobiPrecond::new(&a).unwrap();
+        let mut m = DMat::zeros(n, n);
+        for j in 0..n {
+            let mut e = vec![0.0; n];
+            e[j] = 1.0;
+            let mut col = vec![0.0; n];
+            pc.matvec(&e, &mut col);
+            for i in 0..n {
+                m.set(i, j, col[i]);
+            }
+        }
+        let ev_pc = sym_eigenvalues(&m);
+        let kappa = ev[n - 1] / ev[0];
+        let kappa_pc = ev_pc[n - 1] / ev_pc[0];
+        assert!(
+            kappa_pc < kappa,
+            "jacobi should help here: {kappa_pc} vs {kappa}"
+        );
+    }
+
+    #[test]
+    fn rejects_nonpositive_diagonal() {
+        let mut a = DMat::eye(3);
+        a.set(1, 1, 0.0);
+        assert!(JacobiPrecond::new(&a).is_none());
+    }
+
+    #[test]
+    fn unit_diagonal_reported() {
+        let mut rng = Rng::new(0x9C4);
+        let (a, _, _) = random_shifted_spd(&mut rng, 8, 0.5, 0.5);
+        let pc = JacobiPrecond::new(&a).unwrap();
+        assert_eq!(pc.diagonal(), vec![1.0; 8]);
+    }
+}

@@ -1,0 +1,8 @@
+//! PJRT runtime: loads the AOT artifacts produced by
+//! `python/compile/aot.py` (HLO text + manifest) and executes them on the
+//! CPU PJRT client. Python never runs here — the artifacts are
+//! self-contained XLA programs.
+
+pub mod pjrt;
+
+pub use pjrt::{BoundsHistory, GqlArtifact, GqlRuntime};

@@ -1,0 +1,284 @@
+//! Wrapper around the `xla` crate: compile each manifest bucket once,
+//! execute many times.
+//!
+//! Interchange is HLO *text* (`HloModuleProto::from_text_file`): jax ≥ 0.5
+//! serializes protos with 64-bit instruction ids that the image's
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids (see
+//! /opt/xla-example/README.md).
+//!
+//! Artifact signature (matches aot.py):
+//!   inputs  a:[n,n] | [b,n,n], u:[n] | [b,n], lam_min, lam_max (f32)
+//!   outputs (g, g_rr, g_lr, g_lo) each [iters] | [b,iters]
+
+use crate::config::run::{parse_manifest, ManifestEntry};
+use crate::quadrature::Bounds;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::Path;
+
+/// Per-iteration bound history returned by one artifact execution.
+#[derive(Clone, Debug)]
+pub struct BoundsHistory {
+    pub gauss: Vec<f64>,
+    pub radau_lower: Vec<f64>,
+    pub radau_upper: Vec<f64>,
+    pub lobatto: Vec<f64>,
+}
+
+impl BoundsHistory {
+    pub fn len(&self) -> usize {
+        self.gauss.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.gauss.is_empty()
+    }
+
+    /// View iteration `i` (0-based) as a [`Bounds`] snapshot.
+    pub fn at(&self, i: usize) -> Bounds {
+        Bounds {
+            iter: i + 1,
+            gauss: self.gauss[i],
+            radau_lower: self.radau_lower[i],
+            radau_upper: self.radau_upper[i],
+            lobatto: self.lobatto[i],
+            // fixed-iteration artifacts don't flag breakdown; judges treat
+            // a collapsed bracket as exact
+            exact: (self.radau_upper[i] - self.radau_lower[i]).abs()
+                <= 1e-6 * self.gauss[i].abs().max(1e-30),
+        }
+    }
+
+    /// First iteration (0-based) whose bounds decide `t < BIF`, plus the
+    /// decision; `None` if the whole history is inconclusive.
+    pub fn first_decision(&self, t: f64) -> Option<(usize, bool)> {
+        for i in 0..self.len() {
+            let b = self.at(i);
+            if t < b.radau_lower {
+                return Some((i, true));
+            }
+            if t >= b.radau_upper {
+                return Some((i, false));
+            }
+        }
+        None
+    }
+}
+
+/// One compiled bucket.
+pub struct GqlArtifact {
+    pub meta: ManifestEntry,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl GqlArtifact {
+    /// Execute on one query (batch buckets replicate the query — used by
+    /// the batcher only through [`GqlRuntime::execute_batch`]).
+    pub fn execute(
+        &self,
+        a: &[f32],
+        u: &[f32],
+        lam_min: f32,
+        lam_max: f32,
+    ) -> Result<BoundsHistory> {
+        let n = self.meta.n;
+        if self.meta.batch != 1 {
+            bail!("single-query execute on a batched artifact");
+        }
+        if a.len() != n * n || u.len() != n {
+            bail!("shape mismatch: a={} u={} for n={}", a.len(), u.len(), n);
+        }
+        let a_lit = xla::Literal::vec1(a).reshape(&[n as i64, n as i64])?;
+        let u_lit = xla::Literal::vec1(u);
+        let lo = xla::Literal::from(lam_min);
+        let hi = xla::Literal::from(lam_max);
+        let result = self.exe.execute::<xla::Literal>(&[a_lit, u_lit, lo, hi])?[0][0]
+            .to_literal_sync()?;
+        let (g, grr, glr, glo) = result.to_tuple4()?;
+        Ok(BoundsHistory {
+            gauss: to_f64(&g)?,
+            radau_lower: to_f64(&grr)?,
+            radau_upper: to_f64(&glr)?,
+            lobatto: to_f64(&glo)?,
+        })
+    }
+
+    /// Execute a batched bucket: `a` is `[b, n, n]` row-major flattened,
+    /// `u` `[b, n]`, windows per lane. Returns one history per lane.
+    pub fn execute_batch(
+        &self,
+        a: &[f32],
+        u: &[f32],
+        lam_min: &[f32],
+        lam_max: &[f32],
+    ) -> Result<Vec<BoundsHistory>> {
+        let (n, b) = (self.meta.n, self.meta.batch);
+        if b == 1 {
+            bail!("batch execute on a single-query artifact");
+        }
+        if a.len() != b * n * n || u.len() != b * n || lam_min.len() != b || lam_max.len() != b
+        {
+            bail!("batch shape mismatch");
+        }
+        let a_lit = xla::Literal::vec1(a).reshape(&[b as i64, n as i64, n as i64])?;
+        let u_lit = xla::Literal::vec1(u).reshape(&[b as i64, n as i64])?;
+        let lo = xla::Literal::vec1(lam_min);
+        let hi = xla::Literal::vec1(lam_max);
+        let result = self.exe.execute::<xla::Literal>(&[a_lit, u_lit, lo, hi])?[0][0]
+            .to_literal_sync()?;
+        let (g, grr, glr, glo) = result.to_tuple4()?;
+        let (g, grr, glr, glo) = (to_f64(&g)?, to_f64(&grr)?, to_f64(&glr)?, to_f64(&glo)?);
+        let iters = self.meta.iters;
+        let lane = |v: &Vec<f64>, i: usize| v[i * iters..(i + 1) * iters].to_vec();
+        Ok((0..b)
+            .map(|i| BoundsHistory {
+                gauss: lane(&g, i),
+                radau_lower: lane(&grr, i),
+                radau_upper: lane(&glr, i),
+                lobatto: lane(&glo, i),
+            })
+            .collect())
+    }
+}
+
+fn to_f64(lit: &xla::Literal) -> Result<Vec<f64>> {
+    Ok(lit.to_vec::<f32>()?.into_iter().map(|x| x as f64).collect())
+}
+
+/// All compiled buckets, indexed for dispatch.
+pub struct GqlRuntime {
+    client: xla::PjRtClient,
+    artifacts: Vec<GqlArtifact>,
+}
+
+impl GqlRuntime {
+    /// Load `manifest.json` from `dir` and compile every bucket.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest_path = dir.join("manifest.json");
+        let src = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {}", manifest_path.display()))?;
+        let entries = parse_manifest(&src).map_err(|e| anyhow!("manifest: {e}"))?;
+        let client = xla::PjRtClient::cpu()?;
+        let mut artifacts = Vec::with_capacity(entries.len());
+        for meta in entries {
+            let path = dir.join(&meta.path);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp)?;
+            artifacts.push(GqlArtifact { meta, exe });
+        }
+        Ok(GqlRuntime { client, artifacts })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn artifacts(&self) -> &[GqlArtifact] {
+        &self.artifacts
+    }
+
+    /// Smallest single-query bucket with `n ≥ dim`.
+    pub fn bucket_for(&self, dim: usize) -> Option<&GqlArtifact> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.meta.batch == 1 && a.meta.n >= dim)
+            .min_by_key(|a| a.meta.n)
+    }
+
+    /// Smallest batched bucket with `n ≥ dim` (and its batch width).
+    pub fn batch_bucket_for(&self, dim: usize) -> Option<&GqlArtifact> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.meta.batch > 1 && a.meta.n >= dim)
+            .min_by_key(|a| a.meta.n)
+    }
+
+    /// Identity-pad a dense query to `n_pad` (see model.pad_query; exact
+    /// invariance is asserted in python tests and re-checked in
+    /// rust/tests/integration_runtime.rs).
+    pub fn pad_query(a: &[f32], u: &[f32], n: usize, n_pad: usize) -> (Vec<f32>, Vec<f32>) {
+        assert!(n_pad >= n);
+        let mut ap = vec![0.0f32; n_pad * n_pad];
+        for i in 0..n_pad {
+            ap[i * n_pad + i] = 1.0;
+        }
+        for i in 0..n {
+            ap[i * n_pad..i * n_pad + n].copy_from_slice(&a[i * n..(i + 1) * n]);
+        }
+        let mut up = vec![0.0f32; n_pad];
+        up[..n].copy_from_slice(u);
+        (ap, up)
+    }
+
+    /// Bounds history for one dense query, padded into the best bucket.
+    pub fn gql_bounds(
+        &self,
+        a: &[f32],
+        u: &[f32],
+        n: usize,
+        lam_min: f32,
+        lam_max: f32,
+    ) -> Result<BoundsHistory> {
+        let art = self
+            .bucket_for(n)
+            .ok_or_else(|| anyhow!("no bucket for dim {n}"))?;
+        let (ap, up) = Self::pad_query(a, u, n, art.meta.n);
+        art.execute(&ap, &up, lam_min, lam_max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Runtime tests that need compiled artifacts live in
+    // rust/tests/integration_runtime.rs (they require `make artifacts`).
+    // Here: pure helpers.
+
+    #[test]
+    fn pad_query_layout() {
+        let a = [1.0f32, 2.0, 3.0, 4.0]; // [[1,2],[3,4]]
+        let u = [5.0f32, 6.0];
+        let (ap, up) = GqlRuntime::pad_query(&a, &u, 2, 4);
+        assert_eq!(ap.len(), 16);
+        // original block
+        assert_eq!(ap[0], 1.0);
+        assert_eq!(ap[1], 2.0);
+        assert_eq!(ap[4], 3.0);
+        assert_eq!(ap[5], 4.0);
+        // identity tail
+        assert_eq!(ap[2 * 4 + 2], 1.0);
+        assert_eq!(ap[3 * 4 + 3], 1.0);
+        assert_eq!(ap[2 * 4 + 3], 0.0);
+        assert_eq!(up, vec![5.0, 6.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn history_first_decision() {
+        let h = BoundsHistory {
+            gauss: vec![1.0, 2.0, 3.0],
+            radau_lower: vec![1.5, 2.5, 3.5],
+            radau_upper: vec![10.0, 6.0, 3.8],
+            lobatto: vec![11.0, 7.0, 4.0],
+        };
+        // t below the first lower bound: decided true at iteration 0
+        assert_eq!(h.first_decision(1.0), Some((0, true)));
+        // t above all upper bounds: decided false once upper ≤ t
+        assert_eq!(h.first_decision(6.5), Some((1, false)));
+        // t in the final bracket: undecidable
+        assert_eq!(h.first_decision(3.6), None);
+    }
+
+    #[test]
+    fn history_at_marks_collapsed_bracket_exact() {
+        let h = BoundsHistory {
+            gauss: vec![2.0],
+            radau_lower: vec![2.0],
+            radau_upper: vec![2.0],
+            lobatto: vec![2.0],
+        };
+        assert!(h.at(0).exact);
+    }
+}

@@ -1,0 +1,294 @@
+//! Compressed sparse row matrix, built via COO accumulation.
+//!
+//! Only what the paper needs: symmetric matrices, matvec, principal
+//! submatrix extraction, row access for kernel columns, density stats.
+
+use super::SymOp;
+
+/// CSR sparse matrix (f64 values, usize indices).
+#[derive(Clone, Debug)]
+pub struct Csr {
+    pub n: usize,
+    /// row i occupies indices row_ptr[i]..row_ptr[i+1]
+    pub row_ptr: Vec<usize>,
+    pub col_idx: Vec<usize>,
+    pub values: Vec<f64>,
+}
+
+/// COO accumulator; duplicate (i, j) entries are summed on build.
+#[derive(Debug, Default)]
+pub struct CsrBuilder {
+    n: usize,
+    entries: Vec<(usize, usize, f64)>,
+}
+
+impl CsrBuilder {
+    pub fn new(n: usize) -> Self {
+        CsrBuilder { n, entries: Vec::new() }
+    }
+
+    pub fn push(&mut self, i: usize, j: usize, v: f64) {
+        debug_assert!(i < self.n && j < self.n);
+        if v != 0.0 {
+            self.entries.push((i, j, v));
+        }
+    }
+
+    /// Push both (i, j) and (j, i) (off-diagonal symmetric pair).
+    pub fn push_sym(&mut self, i: usize, j: usize, v: f64) {
+        self.push(i, j, v);
+        if i != j {
+            self.push(j, i, v);
+        }
+    }
+
+    pub fn build(mut self) -> Csr {
+        self.entries.sort_unstable_by_key(|&(i, j, _)| (i, j));
+        let mut row_ptr = vec![0usize; self.n + 1];
+        let mut col_idx = Vec::with_capacity(self.entries.len());
+        let mut values: Vec<f64> = Vec::with_capacity(self.entries.len());
+        let mut last: Option<(usize, usize)> = None;
+        for &(i, j, v) in &self.entries {
+            if last == Some((i, j)) {
+                *values.last_mut().unwrap() += v; // merge duplicate
+                continue;
+            }
+            col_idx.push(j);
+            values.push(v);
+            row_ptr[i + 1] += 1;
+            last = Some((i, j));
+        }
+        for i in 0..self.n {
+            row_ptr[i + 1] += row_ptr[i];
+        }
+        Csr { n: self.n, row_ptr, col_idx, values }
+    }
+}
+
+impl Csr {
+    /// Identity * s.
+    pub fn scaled_identity(n: usize, s: f64) -> Csr {
+        let mut b = CsrBuilder::new(n);
+        for i in 0..n {
+            b.push(i, i, s);
+        }
+        b.build()
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn density(&self) -> f64 {
+        self.nnz() as f64 / (self.n as f64 * self.n as f64)
+    }
+
+    /// entries of row i as (col, value) pairs
+    pub fn row(&self, i: usize) -> impl Iterator<Item = (usize, f64)> + '_ {
+        let lo = self.row_ptr[i];
+        let hi = self.row_ptr[i + 1];
+        self.col_idx[lo..hi]
+            .iter()
+            .copied()
+            .zip(self.values[lo..hi].iter().copied())
+    }
+
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        self.row(i).find(|&(c, _)| c == j).map_or(0.0, |(_, v)| v)
+    }
+
+    /// A += s * I (requires all diagonal entries present; use
+    /// `with_diag_shift` otherwise).
+    pub fn with_diag_shift(&self, s: f64) -> Csr {
+        let mut b = CsrBuilder::new(self.n);
+        for i in 0..self.n {
+            for (j, v) in self.row(i) {
+                b.push(i, j, v);
+            }
+            b.push(i, i, s);
+        }
+        b.build()
+    }
+
+    /// Materialize the principal submatrix A[idx, idx] as CSR.
+    /// `idx` must be strictly increasing? No — any order; output uses the
+    /// given local ordering. O(Σ nnz(row)) with a scatter map.
+    pub fn principal_submatrix(&self, idx: &[usize]) -> Csr {
+        let mut pos = vec![usize::MAX; self.n];
+        for (local, &g) in idx.iter().enumerate() {
+            pos[g] = local;
+        }
+        let mut b = CsrBuilder::new(idx.len());
+        for (li, &gi) in idx.iter().enumerate() {
+            for (gj, v) in self.row(gi) {
+                let lj = pos[gj];
+                if lj != usize::MAX {
+                    b.push(li, lj, v);
+                }
+            }
+        }
+        b.build()
+    }
+
+    /// Dense copy (tests / small baselines only).
+    pub fn to_dense(&self) -> crate::linalg::DMat {
+        let mut m = crate::linalg::DMat::zeros(self.n, self.n);
+        for i in 0..self.n {
+            for (j, v) in self.row(i) {
+                m.set(i, j, v);
+            }
+        }
+        m
+    }
+
+    /// Max |A - A^T| entry (symmetry check).
+    pub fn asymmetry(&self) -> f64 {
+        let mut worst: f64 = 0.0;
+        for i in 0..self.n {
+            for (j, v) in self.row(i) {
+                worst = worst.max((v - self.get(j, i)).abs());
+            }
+        }
+        worst
+    }
+}
+
+impl SymOp for Csr {
+    fn dim(&self) -> usize {
+        self.n
+    }
+
+    fn matvec(&self, x: &[f64], y: &mut [f64]) {
+        debug_assert_eq!(x.len(), self.n);
+        debug_assert_eq!(y.len(), self.n);
+        for i in 0..self.n {
+            let lo = self.row_ptr[i];
+            let hi = self.row_ptr[i + 1];
+            let mut acc = 0.0;
+            for k in lo..hi {
+                acc += self.values[k] * x[self.col_idx[k]];
+            }
+            y[i] = acc;
+        }
+    }
+
+    fn diagonal(&self) -> Vec<f64> {
+        (0..self.n).map(|i| self.get(i, i)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{assert_close, forall};
+    use crate::util::rng::Rng;
+
+    pub fn random_sym_csr(rng: &mut Rng, n: usize, density: f64) -> Csr {
+        let mut b = CsrBuilder::new(n);
+        for i in 0..n {
+            b.push(i, i, 2.0 + rng.f64());
+            for j in (i + 1)..n {
+                if rng.bool(density) {
+                    b.push_sym(i, j, rng.normal() * 0.1);
+                }
+            }
+        }
+        b.build()
+    }
+
+    #[test]
+    fn builder_sums_duplicates() {
+        let mut b = CsrBuilder::new(2);
+        b.push(0, 1, 1.0);
+        b.push(0, 1, 2.0);
+        b.push(1, 0, 3.0);
+        let m = b.build();
+        assert_eq!(m.nnz(), 2);
+        assert_eq!(m.get(0, 1), 3.0);
+        assert_eq!(m.get(1, 0), 3.0);
+    }
+
+    #[test]
+    fn builder_drops_explicit_zeros() {
+        let mut b = CsrBuilder::new(2);
+        b.push(0, 0, 0.0);
+        b.push(1, 1, 5.0);
+        let m = b.build();
+        assert_eq!(m.nnz(), 1);
+    }
+
+    #[test]
+    fn matvec_matches_dense() {
+        forall(25, 0xC5A, |rng| {
+            let n = 1 + rng.below(40);
+            let a = random_sym_csr(rng, n, 0.3);
+            let d = a.to_dense();
+            let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let mut ys = vec![0.0; n];
+            let mut yd = vec![0.0; n];
+            a.matvec(&x, &mut ys);
+            d.matvec(&x, &mut yd);
+            for (s, dd) in ys.iter().zip(&yd) {
+                assert_close(*s, *dd, 1e-12, 1e-12);
+            }
+        });
+    }
+
+    #[test]
+    fn submatrix_matches_dense_submatrix() {
+        forall(25, 0x5b5, |rng| {
+            let n = 4 + rng.below(30);
+            let a = random_sym_csr(rng, n, 0.4);
+            let k = 1 + rng.below(n - 1);
+            let idx = rng.sample_indices(n, k);
+            let sub = a.principal_submatrix(&idx);
+            let want = a.to_dense().principal_submatrix(&idx);
+            assert_eq!(sub.n, k);
+            for i in 0..k {
+                for j in 0..k {
+                    assert_close(sub.get(i, j), want.get(i, j), 0.0, 0.0);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn diag_shift() {
+        let mut b = CsrBuilder::new(3);
+        b.push(0, 0, 1.0);
+        b.push_sym(0, 2, 4.0);
+        let m = b.build().with_diag_shift(1e-3);
+        assert_close(m.get(0, 0), 1.001, 1e-15, 0.0);
+        assert_close(m.get(1, 1), 1e-3, 1e-15, 0.0);
+        assert_close(m.get(2, 2), 1e-3, 1e-15, 0.0);
+        assert_eq!(m.get(0, 2), 4.0);
+    }
+
+    #[test]
+    fn symmetry_of_random_generator() {
+        let mut rng = Rng::new(5);
+        let a = random_sym_csr(&mut rng, 30, 0.2);
+        assert_eq!(a.asymmetry(), 0.0);
+    }
+
+    #[test]
+    fn density_and_nnz() {
+        let m = Csr::scaled_identity(10, 2.0);
+        assert_eq!(m.nnz(), 10);
+        assert_close(m.density(), 0.1, 1e-15, 0.0);
+        let mut y = vec![0.0; 10];
+        m.matvec(&vec![1.0; 10], &mut y);
+        assert!(y.iter().all(|&v| v == 2.0));
+    }
+
+    #[test]
+    fn empty_rows_are_fine() {
+        let mut b = CsrBuilder::new(4);
+        b.push(0, 0, 1.0);
+        b.push(3, 3, 1.0);
+        let m = b.build();
+        let mut y = vec![0.0; 4];
+        m.matvec(&[1.0, 1.0, 1.0, 1.0], &mut y);
+        assert_eq!(y, vec![1.0, 0.0, 0.0, 1.0]);
+    }
+}

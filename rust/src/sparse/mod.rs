@@ -1,0 +1,27 @@
+//! Sparse substrate: CSR storage, the [`SymOp`] operator abstraction the
+//! quadrature core iterates against, zero-copy principal-submatrix views,
+//! and spectrum-bound estimators.
+//!
+//! Everything on the GQL hot path goes through [`SymOp::matvec`], so the
+//! same quadrature code serves dense baselines, CSR matrices, and dynamic
+//! submatrix views (the DPP/greedy working sets).
+
+pub mod csr;
+pub mod spectrum;
+pub mod submatrix;
+
+pub use csr::{Csr, CsrBuilder};
+pub use spectrum::{
+    gershgorin_bounds, gershgorin_view, lanczos_bounds, power_iteration_lmax, SpectrumBounds,
+};
+pub use submatrix::SubmatrixView;
+
+/// A symmetric linear operator: the only interface the quadrature core
+/// needs. `matvec` must compute `y = A x` with `A` symmetric.
+pub trait SymOp {
+    fn dim(&self) -> usize;
+    fn matvec(&self, x: &[f64], y: &mut [f64]);
+    /// The diagonal of the operator (used by Jacobi preconditioning and
+    /// Gershgorin bounds).
+    fn diagonal(&self) -> Vec<f64>;
+}

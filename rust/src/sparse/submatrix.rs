@@ -1,0 +1,202 @@
+//! Zero-copy principal-submatrix view over a CSR matrix.
+//!
+//! The DPP / k-DPP samplers and double greedy repeatedly need `L_Y` for a
+//! working set `Y` that changes by one element per step.  Materializing the
+//! submatrix each step is O(Σ nnz(rows in Y)) *plus* allocation; this view
+//! does the matvec directly through the parent with a reusable scatter map,
+//! so the per-iteration quadrature cost is exactly the paper's
+//! O(nnz(L_Y)).
+
+use super::csr::Csr;
+use super::SymOp;
+
+/// View of `parent[idx, idx]` implementing [`SymOp`] without materializing.
+pub struct SubmatrixView<'a> {
+    parent: &'a Csr,
+    /// global indices of the view, defining the local ordering
+    idx: Vec<usize>,
+    /// global -> local position map; usize::MAX = not in view
+    pos: Vec<usize>,
+}
+
+impl<'a> SubmatrixView<'a> {
+    pub fn new(parent: &'a Csr, idx: &[usize]) -> Self {
+        let mut pos = vec![usize::MAX; parent.n];
+        for (local, &g) in idx.iter().enumerate() {
+            debug_assert!(g < parent.n, "index {g} out of range");
+            debug_assert!(pos[g] == usize::MAX, "duplicate index {g}");
+            pos[g] = local;
+        }
+        SubmatrixView { parent, idx: idx.to_vec(), pos }
+    }
+
+    /// Like [`SubmatrixView::new`] but with the local ordering sorted
+    /// ascending. The BIF (and every GQL iterate) is invariant under
+    /// symmetric permutation, and ascending row order turns the matvec's
+    /// parent-row visits into a streaming access pattern the hardware
+    /// prefetcher can follow — ~10× faster on large sparse parents
+    /// (EXPERIMENTS.md §Perf). Judges should prefer this constructor.
+    pub fn new_sorted(parent: &'a Csr, idx: &[usize]) -> Self {
+        let mut sorted = idx.to_vec();
+        sorted.sort_unstable();
+        let mut pos = vec![usize::MAX; parent.n];
+        for (local, &g) in sorted.iter().enumerate() {
+            debug_assert!(g < parent.n, "index {g} out of range");
+            debug_assert!(pos[g] == usize::MAX, "duplicate index {g}");
+            pos[g] = local;
+        }
+        SubmatrixView { parent, idx: sorted, pos }
+    }
+
+    pub fn indices(&self) -> &[usize] {
+        &self.idx
+    }
+
+    /// nnz of the implied submatrix (counted, not stored).
+    pub fn nnz(&self) -> usize {
+        self.idx
+            .iter()
+            .map(|&gi| {
+                self.parent
+                    .row(gi)
+                    .filter(|&(gj, _)| self.pos[gj] != usize::MAX)
+                    .count()
+            })
+            .sum()
+    }
+
+    /// Materialize the view as a compact local CSR in ONE traversal (no
+    /// sort — CSR matvec does not require sorted columns). Costs about as
+    /// much as a single view matvec; every subsequent matvec then streams
+    /// a k-dim CSR instead of chasing parent rows through the scatter
+    /// map. Judges materialize when they expect >1 iteration
+    /// (EXPERIMENTS.md §Perf: ~2-10× on the large-graph rows).
+    pub fn to_csr(&self) -> Csr {
+        let k = self.idx.len();
+        let mut row_ptr = Vec::with_capacity(k + 1);
+        row_ptr.push(0usize);
+        let mut col_idx = Vec::new();
+        let mut values = Vec::new();
+        for &gi in &self.idx {
+            for (gj, v) in self.parent.row(gi) {
+                let lj = self.pos[gj];
+                if lj != usize::MAX {
+                    col_idx.push(lj);
+                    values.push(v);
+                }
+            }
+            row_ptr.push(col_idx.len());
+        }
+        Csr { n: k, row_ptr, col_idx, values }
+    }
+
+    /// The kernel column `parent[idx, v]` in local ordering — the `u`
+    /// vector of the DPP transition BIF (`L_{Y,v}`).
+    pub fn column_of(&self, v: usize) -> Vec<f64> {
+        let mut col = vec![0.0; self.idx.len()];
+        // v's row in the parent gives the column by symmetry
+        for (gj, val) in self.parent.row(v) {
+            let lj = self.pos[gj];
+            if lj != usize::MAX {
+                col[lj] = val;
+            }
+        }
+        col
+    }
+}
+
+impl SymOp for SubmatrixView<'_> {
+    fn dim(&self) -> usize {
+        self.idx.len()
+    }
+
+    fn matvec(&self, x: &[f64], y: &mut [f64]) {
+        debug_assert_eq!(x.len(), self.idx.len());
+        debug_assert_eq!(y.len(), self.idx.len());
+        for (li, &gi) in self.idx.iter().enumerate() {
+            let mut acc = 0.0;
+            for (gj, v) in self.parent.row(gi) {
+                let lj = self.pos[gj];
+                if lj != usize::MAX {
+                    acc += v * x[lj];
+                }
+            }
+            y[li] = acc;
+        }
+    }
+
+    fn diagonal(&self) -> Vec<f64> {
+        self.idx.iter().map(|&g| self.parent.get(g, g)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::csr::CsrBuilder;
+    use crate::util::prop::{assert_close, forall};
+    use crate::util::rng::Rng;
+
+    fn random_sym_csr(rng: &mut Rng, n: usize, density: f64) -> Csr {
+        let mut b = CsrBuilder::new(n);
+        for i in 0..n {
+            b.push(i, i, 2.0 + rng.f64());
+            for j in (i + 1)..n {
+                if rng.bool(density) {
+                    b.push_sym(i, j, rng.normal() * 0.1);
+                }
+            }
+        }
+        b.build()
+    }
+
+    #[test]
+    fn view_matvec_matches_materialized() {
+        forall(25, 0x5AB, |rng| {
+            let n = 4 + rng.below(40);
+            let a = random_sym_csr(rng, n, 0.3);
+            let k = 1 + rng.below(n - 1);
+            let idx = rng.sample_indices(n, k);
+            let view = SubmatrixView::new(&a, &idx);
+            let mat = a.principal_submatrix(&idx);
+            let x: Vec<f64> = (0..k).map(|_| rng.normal()).collect();
+            let mut yv = vec![0.0; k];
+            let mut ym = vec![0.0; k];
+            view.matvec(&x, &mut yv);
+            mat.matvec(&x, &mut ym);
+            for (v, m) in yv.iter().zip(&ym) {
+                assert_close(*v, *m, 1e-13, 1e-13);
+            }
+            assert_eq!(view.nnz(), mat.nnz());
+            assert_eq!(view.diagonal(), mat.diagonal());
+        });
+    }
+
+    #[test]
+    fn column_of_matches_submatrix_column() {
+        forall(25, 0xC01, |rng| {
+            let n = 5 + rng.below(30);
+            let a = random_sym_csr(rng, n, 0.4);
+            let k = 1 + rng.below(n - 2);
+            let idx = rng.sample_indices(n, k);
+            // v outside the view (the DPP proposal)
+            let v = (0..n).find(|i| !idx.contains(i)).unwrap();
+            let view = SubmatrixView::new(&a, &idx);
+            let col = view.column_of(v);
+            for (li, &gi) in idx.iter().enumerate() {
+                assert_close(col[li], a.get(gi, v), 0.0, 0.0);
+            }
+        });
+    }
+
+    #[test]
+    fn local_ordering_follows_idx_order() {
+        let mut b = CsrBuilder::new(3);
+        b.push(0, 0, 1.0);
+        b.push(1, 1, 2.0);
+        b.push(2, 2, 3.0);
+        let a = b.build();
+        let view = SubmatrixView::new(&a, &[2, 0]);
+        assert_eq!(view.diagonal(), vec![3.0, 1.0]);
+    }
+}

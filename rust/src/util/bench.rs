@@ -1,0 +1,251 @@
+//! Minimal criterion-style bench harness (criterion is not in the offline
+//! crate cache).  Measures wall-clock over adaptive batches, reports
+//! mean / median / p95 / stddev, and renders aligned tables so each
+//! `benches/bench_*.rs` can print the same rows the paper's tables report.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement summary (nanoseconds).
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub name: String,
+    pub samples: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p95_ns: f64,
+    pub stddev_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+}
+
+impl Stats {
+    pub fn mean_secs(&self) -> f64 {
+        self.mean_ns / 1e9
+    }
+
+    /// Human units: "123.4 ns", "4.56 µs", "7.8 ms", "1.2 s".
+    pub fn fmt_time(ns: f64) -> String {
+        if ns < 1e3 {
+            format!("{ns:.1} ns")
+        } else if ns < 1e6 {
+            format!("{:.2} µs", ns / 1e3)
+        } else if ns < 1e9 {
+            format!("{:.2} ms", ns / 1e6)
+        } else {
+            format!("{:.3} s", ns / 1e9)
+        }
+    }
+}
+
+impl std::fmt::Display for Stats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<44} mean {:>10}  median {:>10}  p95 {:>10}  (±{:>9}, n={})",
+            self.name,
+            Stats::fmt_time(self.mean_ns),
+            Stats::fmt_time(self.median_ns),
+            Stats::fmt_time(self.p95_ns),
+            Stats::fmt_time(self.stddev_ns),
+            self.samples
+        )
+    }
+}
+
+/// Bench runner. Defaults: 0.2 s warmup, 1 s measurement, ≤ 200 samples —
+/// tuned so a full `cargo bench` run fits the session budget while keeping
+/// stddev small on ms-scale routines.
+pub struct Bencher {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub max_samples: usize,
+    pub min_samples: usize,
+    results: Vec<Stats>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_secs(1),
+            max_samples: 200,
+            min_samples: 5,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Quick profile for expensive end-to-end drivers (few samples).
+    pub fn quick() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(50),
+            measure: Duration::from_millis(400),
+            max_samples: 30,
+            min_samples: 3,
+            results: Vec::new(),
+        }
+    }
+
+    /// Measure `f`, which must perform one unit of the benchmarked work and
+    /// return a value (consumed via `std::hint::black_box` to keep the
+    /// optimizer honest).
+    pub fn bench<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> Stats {
+        // Warmup
+        let start = Instant::now();
+        while start.elapsed() < self.warmup {
+            std::hint::black_box(f());
+        }
+        // Measure
+        let mut times = Vec::with_capacity(self.max_samples);
+        let start = Instant::now();
+        while (start.elapsed() < self.measure || times.len() < self.min_samples)
+            && times.len() < self.max_samples
+        {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            times.push(t0.elapsed().as_nanos() as f64);
+        }
+        let stats = Self::summarize(name, &mut times);
+        println!("{stats}");
+        self.results.push(stats.clone());
+        stats
+    }
+
+    fn summarize(name: &str, times: &mut [f64]) -> Stats {
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = times.len();
+        let mean = times.iter().sum::<f64>() / n as f64;
+        let var = times.iter().map(|t| (t - mean) * (t - mean)).sum::<f64>()
+            / n.max(2) as f64;
+        Stats {
+            name: name.to_string(),
+            samples: n,
+            mean_ns: mean,
+            median_ns: times[n / 2],
+            p95_ns: times[(n as f64 * 0.95) as usize % n],
+            stddev_ns: var.sqrt(),
+            min_ns: times[0],
+            max_ns: times[n - 1],
+        }
+    }
+
+    pub fn results(&self) -> &[Stats] {
+        &self.results
+    }
+}
+
+/// Aligned markdown-ish table printer used by the table-reproduction benches.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Table { header: header.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "row width mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut width = vec![0usize; ncol];
+        for (i, h) in self.header.iter().enumerate() {
+            width[i] = h.len();
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                width[i] = width[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], width: &[usize]| -> String {
+            let mut s = String::from("|");
+            for (c, w) in cells.iter().zip(width) {
+                s.push_str(&format!(" {:<w$} |", c, w = w));
+            }
+            s.push('\n');
+            s
+        };
+        out.push_str(&fmt_row(&self.header, &width));
+        out.push('|');
+        for w in &width {
+            out.push_str(&format!("{:-<w$}|", "", w = w + 2));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &width));
+        }
+        out
+    }
+}
+
+/// Format a speedup column the way Table 2 does ("17.8x").
+pub fn fmt_speedup(baseline_s: f64, ours_s: f64) -> String {
+    if ours_s <= 0.0 {
+        return "inf".into();
+    }
+    format!("{:.1}x", baseline_s / ours_s)
+}
+
+/// Format seconds in the paper's scientific style ("9.6E-3").
+pub fn fmt_sci(secs: f64) -> String {
+    if secs == 0.0 {
+        return "0".into();
+    }
+    let exp = secs.abs().log10().floor() as i32;
+    if (-2..4).contains(&exp) {
+        format!("{secs:.3}")
+    } else {
+        format!("{:.1}E{}", secs / 10f64.powi(exp), exp)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut b = Bencher {
+            warmup: Duration::from_millis(1),
+            measure: Duration::from_millis(10),
+            max_samples: 50,
+            min_samples: 3,
+            results: vec![],
+        };
+        let s = b.bench("noop-ish", || (0..100).sum::<u64>());
+        assert!(s.samples >= 3);
+        assert!(s.mean_ns > 0.0);
+        assert!(s.min_ns <= s.median_ns && s.median_ns <= s.max_ns);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["data", "time", "speedup"]);
+        t.row(vec!["abalone".into(), "9.6E-3".into(), "17.8x".into()]);
+        t.row(vec!["x".into(), "1".into(), "2x".into()]);
+        let r = t.render();
+        let lines: Vec<&str> = r.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert_eq!(lines[0].len(), lines[2].len());
+        assert!(lines[0].contains("data"));
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert_eq!(Stats::fmt_time(500.0), "500.0 ns");
+        assert_eq!(Stats::fmt_time(2_500.0), "2.50 µs");
+        assert_eq!(fmt_speedup(10.0, 1.0), "10.0x");
+        assert_eq!(fmt_sci(0.0096), "9.6E-3");
+        assert_eq!(fmt_sci(1025.6), "1025.600");
+    }
+}

@@ -1,0 +1,7 @@
+//! In-repo substitutes for crates the offline image does not carry:
+//! a deterministic PRNG ([`rng`]), a criterion-style bench harness
+//! ([`bench`]) and a small property-testing runner ([`prop`]).
+
+pub mod bench;
+pub mod prop;
+pub mod rng;

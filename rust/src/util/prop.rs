@@ -1,0 +1,99 @@
+//! Tiny property-testing runner (proptest is not in the offline cache).
+//!
+//! ```ignore
+//! use gauss_bif::util::prop::forall;
+//! forall(64, 0xC0FFEE, |rng| {
+//!     let n = 2 + rng.below(30);
+//!     // ... build a random case, assert the invariant ...
+//! });
+//! ```
+//!
+//! Each case gets a fresh fork of the master stream; on panic the harness
+//! reports the case index and its per-case seed so the failure replays with
+//! [`replay`].
+
+use super::rng::Rng;
+
+/// Run `prop` on `cases` random cases derived from `seed`. Panics (with the
+/// replay seed) on the first failing case.
+pub fn forall<F: FnMut(&mut Rng) + std::panic::UnwindSafe + Copy>(
+    cases: usize,
+    seed: u64,
+    prop: F,
+) {
+    let mut master = Rng::new(seed);
+    for i in 0..cases {
+        let case_seed = master.next_u64();
+        let result = std::panic::catch_unwind(move || {
+            let mut rng = Rng::new(case_seed);
+            let mut p = prop;
+            p(&mut rng);
+        });
+        if let Err(err) = result {
+            let msg = err
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property failed at case {i}/{cases} (replay seed: {case_seed:#x}):\n  {msg}"
+            );
+        }
+    }
+}
+
+/// Re-run a single failing case by its reported seed.
+pub fn replay<F: FnMut(&mut Rng)>(case_seed: u64, mut prop: F) {
+    let mut rng = Rng::new(case_seed);
+    prop(&mut rng);
+}
+
+/// Assert two floats agree to a relative (plus absolute floor) tolerance.
+#[track_caller]
+pub fn assert_close(a: f64, b: f64, rtol: f64, atol: f64) {
+    let diff = (a - b).abs();
+    let scale = a.abs().max(b.abs());
+    assert!(
+        diff <= atol + rtol * scale,
+        "assert_close failed: {a} vs {b} (diff {diff:.3e} > atol {atol:.1e} + rtol {rtol:.1e} * {scale:.3e})"
+    );
+}
+
+/// Assert `a <= b` up to tolerance (used for bound-ordering properties).
+#[track_caller]
+pub fn assert_le(a: f64, b: f64, tol: f64) {
+    assert!(a <= b + tol, "assert_le failed: {a} > {b} + {tol:.1e}");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall(32, 1, |rng| {
+            let x = rng.f64();
+            assert!((0.0..1.0).contains(&x));
+        });
+    }
+
+    #[test]
+    fn forall_reports_failure_with_seed() {
+        let r = std::panic::catch_unwind(|| {
+            forall(16, 2, |rng| {
+                // fails eventually
+                assert!(rng.f64() < 0.5, "coin came up heads");
+            });
+        });
+        let err = r.expect_err("property should have failed");
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("replay seed"), "msg: {msg}");
+    }
+
+    #[test]
+    fn assert_close_accepts_and_rejects() {
+        assert_close(1.0, 1.0 + 1e-12, 1e-9, 0.0);
+        let r = std::panic::catch_unwind(|| assert_close(1.0, 2.0, 1e-3, 0.0));
+        assert!(r.is_err());
+    }
+}

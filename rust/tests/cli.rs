@@ -1,0 +1,82 @@
+//! End-to-end launcher tests: drive the `gauss-bif` binary the way a user
+//! would and check outputs land where the docs say.
+
+use std::path::Path;
+use std::process::Command;
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_gauss-bif"))
+}
+
+fn tmp_out(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("gauss_bif_cli_{tag}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+#[test]
+fn fig1_writes_csv_and_reports_convergence() {
+    let out = tmp_out("fig1");
+    let o = bin()
+        .args(["fig1", "--out", out.to_str().unwrap(), "--iters", "30"])
+        .output()
+        .expect("run fig1");
+    assert!(o.status.success(), "stderr: {}", String::from_utf8_lossy(&o.stderr));
+    let stdout = String::from_utf8_lossy(&o.stdout);
+    assert!(stdout.contains("panel a_tight"), "{stdout}");
+    let csv = std::fs::read_to_string(out.join("fig1.csv")).expect("csv");
+    assert!(csv.starts_with("panel,iter,gauss"));
+    // 3 panels x 30 iters + header
+    assert_eq!(csv.lines().count(), 1 + 3 * 30);
+}
+
+#[test]
+fn rates_passes_and_writes_csv() {
+    let out = tmp_out("rates");
+    let o = bin()
+        .args(["rates", "--out", out.to_str().unwrap(), "--sizes", "24,48"])
+        .output()
+        .expect("run rates");
+    assert!(o.status.success(), "rates reported a theorem violation");
+    let stdout = String::from_utf8_lossy(&o.stdout);
+    assert_eq!(stdout.matches("[OK]").count(), 2, "{stdout}");
+    assert!(out.join("rates.csv").exists());
+}
+
+#[test]
+fn info_lists_datasets_and_artifacts() {
+    let o = bin().arg("info").output().expect("run info");
+    assert!(o.status.success());
+    let stdout = String::from_utf8_lossy(&o.stdout);
+    for name in ["Abalone", "Wine", "GR", "HEP", "Epinions", "Slashdot"] {
+        assert!(stdout.contains(name), "missing {name}: {stdout}");
+    }
+    if Path::new("artifacts/manifest.json").exists() {
+        assert!(stdout.contains("PJRT platform"), "{stdout}");
+    }
+}
+
+#[test]
+fn unknown_command_exits_2_with_usage() {
+    let o = bin().arg("frobnicate").output().expect("run");
+    assert_eq!(o.status.code(), Some(2));
+    assert!(String::from_utf8_lossy(&o.stderr).contains("usage:"));
+}
+
+#[test]
+fn config_file_overrides_defaults() {
+    let out = tmp_out("cfg");
+    std::fs::create_dir_all(&out).unwrap();
+    let cfg_path = out.join("run.json");
+    std::fs::write(
+        &cfg_path,
+        format!(r#"{{"seed": 9, "out_dir": "{}"}}"#, out.display()),
+    )
+    .unwrap();
+    let o = bin()
+        .args(["rates", "--config", cfg_path.to_str().unwrap(), "--sizes", "24"])
+        .output()
+        .expect("run with config");
+    assert!(o.status.success());
+    assert!(out.join("rates.csv").exists(), "out_dir from config respected");
+}

@@ -1,0 +1,203 @@
+//! Integration tests for the PJRT runtime + coordinator against the AOT
+//! artifacts. These need `make artifacts`; when artifacts are absent the
+//! tests print a notice and pass vacuously (the Makefile's `test` target
+//! always builds artifacts first, so CI-style runs exercise everything).
+
+use gauss_bif::coordinator::{BatchPolicy, JudgeRequest, JudgeService, RoutePath};
+use gauss_bif::datasets::random_spd_exact;
+use gauss_bif::linalg::Cholesky;
+use gauss_bif::quadrature::{Gql, GqlOptions};
+use gauss_bif::runtime::GqlRuntime;
+use gauss_bif::util::rng::Rng;
+use std::path::{Path, PathBuf};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let p = Path::new("artifacts");
+    if p.join("manifest.json").exists() {
+        Some(p.to_path_buf())
+    } else {
+        eprintln!("NOTE: artifacts/ missing — run `make artifacts`; skipping");
+        None
+    }
+}
+
+fn to_f32_rowmajor(a: &gauss_bif::linalg::DMat) -> Vec<f32> {
+    let n = a.nrows;
+    (0..n * n).map(|k| a.get(k / n, k % n) as f32).collect()
+}
+
+#[test]
+fn pjrt_bounds_match_native_gql() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = GqlRuntime::load(&dir).expect("load artifacts");
+    let mut rng = Rng::new(0x2001);
+    for &n in &[8usize, 16, 24, 32] {
+        let (a, l1, ln) = random_spd_exact(&mut rng, n, 0.7, 0.3);
+        let u: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let hist = rt
+            .gql_bounds(
+                &to_f32_rowmajor(&a),
+                &u.iter().map(|&x| x as f32).collect::<Vec<_>>(),
+                n,
+                (l1 * 0.99) as f32,
+                (ln * 1.01) as f32,
+            )
+            .expect("execute");
+        // native f64 reference
+        let mut q = Gql::new(&a, &u, GqlOptions::new(l1 * 0.99, ln * 1.01));
+        for i in 0..hist.len().min(n.saturating_sub(2)) {
+            let native = q.step();
+            if native.exact {
+                break;
+            }
+            let b = hist.at(i);
+            // f32 artifact vs f64 native: loose-ish tolerances
+            let tol = 2e-2 * native.gauss.abs().max(1e-3);
+            assert!(
+                (b.gauss - native.gauss).abs() <= tol,
+                "n={n} iter={i}: pjrt {} vs native {}",
+                b.gauss,
+                native.gauss
+            );
+            assert!(
+                (b.radau_lower - native.radau_lower).abs() <= tol,
+                "n={n} iter={i} radau_lower"
+            );
+        }
+    }
+}
+
+#[test]
+fn pjrt_bounds_sandwich_truth() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = GqlRuntime::load(&dir).expect("load artifacts");
+    let mut rng = Rng::new(0x2002);
+    let n = 20;
+    let (a, l1, ln) = random_spd_exact(&mut rng, n, 0.8, 0.3);
+    let u: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let exact = Cholesky::factor(&a).unwrap().bif(&u);
+    let hist = rt
+        .gql_bounds(
+            &to_f32_rowmajor(&a),
+            &u.iter().map(|&x| x as f32).collect::<Vec<_>>(),
+            n,
+            (l1 * 0.99) as f32,
+            (ln * 1.01) as f32,
+        )
+        .unwrap();
+    let tol = 5e-3 * exact.abs();
+    for i in 0..hist.len() {
+        let b = hist.at(i);
+        assert!(b.radau_lower <= exact + tol, "iter {i}");
+        assert!(b.radau_upper >= exact - tol, "iter {i}");
+    }
+}
+
+#[test]
+fn identity_padding_invariance_through_pjrt() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = GqlRuntime::load(&dir).expect("load artifacts");
+    let mut rng = Rng::new(0x2003);
+    let n = 10; // pads into the 16-bucket
+    let (a, l1, ln) = random_spd_exact(&mut rng, n, 0.9, 0.4);
+    let u: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let af: Vec<f32> = to_f32_rowmajor(&a);
+    let uf: Vec<f32> = u.iter().map(|&x| x as f32).collect();
+    let lo = (l1 * 0.99) as f32;
+    let hi = (ln * 1.01) as f32;
+    // padded into 16 via the runtime helper
+    let h16 = rt.gql_bounds(&af, &uf, n, lo, hi).unwrap();
+    // padded twice as far (manually into 32) must give the same bounds
+    let (a32, u32) = GqlRuntime::pad_query(&af, &uf, n, 32);
+    let art32 = rt
+        .artifacts()
+        .iter()
+        .find(|x| x.meta.n == 32 && x.meta.batch == 1)
+        .expect("32-bucket");
+    let h32 = art32.execute(&a32, &u32, lo, hi).unwrap();
+    for i in 0..h16.len().min(h32.len()).min(n) {
+        let (b16, b32) = (h16.at(i), h32.at(i));
+        assert!(
+            (b16.gauss - b32.gauss).abs() <= 1e-4 * b16.gauss.abs().max(1e-3),
+            "iter {i}: {} vs {}",
+            b16.gauss,
+            b32.gauss
+        );
+    }
+}
+
+#[test]
+fn batched_artifact_matches_single_lane_for_each_query() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = GqlRuntime::load(&dir).expect("load artifacts");
+    let Some(art) = rt
+        .artifacts()
+        .iter()
+        .find(|a| a.meta.batch > 1 && a.meta.n == 32)
+    else {
+        eprintln!("no batched 32-bucket; skipping");
+        return;
+    };
+    let (n, b) = (art.meta.n, art.meta.batch);
+    let mut rng = Rng::new(0x2004);
+    let mut a_all = Vec::new();
+    let mut u_all = Vec::new();
+    let mut lo_all = Vec::new();
+    let mut hi_all = Vec::new();
+    let mut singles = Vec::new();
+    for _ in 0..b {
+        let (a, l1, ln) = random_spd_exact(&mut rng, n, 0.7, 0.3);
+        let u: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let af = to_f32_rowmajor(&a);
+        let uf: Vec<f32> = u.iter().map(|&x| x as f32).collect();
+        let lo = (l1 * 0.99) as f32;
+        let hi = (ln * 1.01) as f32;
+        singles.push(rt.gql_bounds(&af, &uf, n, lo, hi).unwrap());
+        a_all.extend_from_slice(&af);
+        u_all.extend_from_slice(&uf);
+        lo_all.push(lo);
+        hi_all.push(hi);
+    }
+    let batched = art.execute_batch(&a_all, &u_all, &lo_all, &hi_all).unwrap();
+    assert_eq!(batched.len(), b);
+    for (lane, single) in batched.iter().zip(&singles) {
+        for i in 0..lane.len().min(single.len()).min(16) {
+            let (bb, sb) = (lane.at(i), single.at(i));
+            assert!(
+                (bb.gauss - sb.gauss).abs() <= 1e-3 * sb.gauss.abs().max(1e-3),
+                "iter {i}: batched {} vs single {}",
+                bb.gauss,
+                sb.gauss
+            );
+        }
+    }
+}
+
+#[test]
+fn service_with_artifacts_is_oracle_correct_and_uses_pjrt() {
+    let Some(dir) = artifacts_dir() else { return };
+    let svc = JudgeService::start(Some(dir), BatchPolicy::default(), 2);
+    let mut rng = Rng::new(0x2005);
+    let mut pjrt_seen = false;
+    for i in 0..40 {
+        let n = [10, 16, 30, 60][i % 4];
+        let (a, l1, ln) = random_spd_exact(&mut rng, n, 0.7, 0.3);
+        let u: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let exact = Cholesky::factor(&a).unwrap().bif(&u);
+        let t = exact * (0.5 + rng.f64());
+        let resp = svc.judge_blocking(JudgeRequest {
+            a: to_f32_rowmajor(&a),
+            u: u.iter().map(|&x| x as f32).collect(),
+            n,
+            lam_min: (l1 * 0.99) as f32,
+            lam_max: (ln * 1.01) as f32,
+            t,
+        });
+        assert_eq!(resp.decision, t < exact, "i={i} n={n}");
+        if matches!(resp.path, RoutePath::Pjrt { .. }) {
+            pjrt_seen = true;
+        }
+    }
+    assert!(pjrt_seen, "expected at least one PJRT-served request");
+    svc.shutdown();
+}

@@ -1,0 +1,182 @@
+//! Cross-module property tests: the quadrature core against the dense
+//! substrate, submatrix views, preconditioning and CG — the paper's §4
+//! claims exercised end-to-end through the public API.
+
+use gauss_bif::datasets::{random_sparse_spd, random_spd_exact};
+use gauss_bif::linalg::Cholesky;
+use gauss_bif::quadrature::{
+    cg_solve, judge_threshold, Gql, GqlOptions, JacobiPrecond, Reorth,
+};
+use gauss_bif::sparse::{gershgorin_view, SubmatrixView, SymOp};
+use gauss_bif::util::prop::{assert_close, assert_le, forall};
+use gauss_bif::util::rng::Rng;
+
+#[test]
+fn sparse_and_dense_gql_agree_exactly() {
+    // same matrix through CSR and DMat operators ⇒ identical iterates
+    forall(15, 0x1001, |rng| {
+        let n = 10 + rng.below(40);
+        let (a, w) = random_sparse_spd(rng, n, 0.2, 0.05);
+        let d = a.to_dense();
+        let u: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let opts = GqlOptions::new(w.lo, w.hi);
+        let mut qs = Gql::new(&a, &u, opts);
+        let mut qd = Gql::new(&d, &u, opts);
+        for _ in 0..n.min(20) {
+            let bs = qs.step();
+            let bd = qd.step();
+            assert_close(bs.gauss, bd.gauss, 1e-12, 1e-12);
+            assert_close(bs.radau_lower, bd.radau_lower, 1e-10, 1e-12);
+            assert_close(bs.radau_upper, bd.radau_upper, 1e-10, 1e-12);
+            if bs.exact {
+                break;
+            }
+        }
+    });
+}
+
+#[test]
+fn submatrix_view_bounds_match_materialized_submatrix() {
+    forall(15, 0x1002, |rng| {
+        let n = 20 + rng.below(40);
+        let (a, w) = random_sparse_spd(rng, n, 0.25, 0.05);
+        let k = 5 + rng.below(n - 6);
+        let idx = rng.sample_indices(n, k);
+        let view = SubmatrixView::new(&a, &idx);
+        let mat = a.principal_submatrix(&idx);
+        let u: Vec<f64> = (0..k).map(|_| rng.normal()).collect();
+        let opts = GqlOptions::new(w.lo, w.hi); // valid by interlacing
+        let mut qv = Gql::new(&view, &u, opts);
+        let mut qm = Gql::new(&mat, &u, opts);
+        for _ in 0..k.min(15) {
+            let bv = qv.step();
+            let bm = qm.step();
+            assert_close(bv.gauss, bm.gauss, 1e-12, 1e-12);
+            assert_close(bv.lobatto, bm.lobatto, 1e-10, 1e-12);
+            if bv.exact {
+                break;
+            }
+        }
+    });
+}
+
+#[test]
+fn judge_on_view_agrees_with_cholesky_truth() {
+    forall(20, 0x1003, |rng| {
+        let n = 20 + rng.below(30);
+        let (a, w) = random_sparse_spd(rng, n, 0.3, 0.05);
+        let k = 4 + rng.below(n / 2);
+        let idx = rng.sample_indices(n, k);
+        let v = (0..n).find(|i| !idx.contains(i)).unwrap();
+        let view = SubmatrixView::new(&a, &idx);
+        let u = view.column_of(v);
+        if u.iter().all(|&x| x == 0.0) {
+            return; // disconnected: zero BIF, trivially fine
+        }
+        let exact = Cholesky::factor(&a.principal_submatrix(&idx).to_dense())
+            .unwrap()
+            .bif(&u);
+        let opts = GqlOptions::new(w.lo, w.hi);
+        for f in [0.3, 0.8, 1.2, 3.0] {
+            let t = exact * f;
+            if (t - exact).abs() < 1e-12 {
+                continue;
+            }
+            let (ans, _) = judge_threshold(&view, &u, t, opts);
+            assert_eq!(ans, t < exact, "factor {f}");
+        }
+    });
+}
+
+#[test]
+fn interlacing_window_is_valid_for_every_submatrix() {
+    // Cauchy interlacing: submatrix spectrum ⊂ parent spectrum; the
+    // samplers rely on this to reuse one global window.
+    forall(15, 0x1004, |rng| {
+        let n = 15 + rng.below(30);
+        let (a, w) = random_sparse_spd(rng, n, 0.3, 0.05);
+        let k = 2 + rng.below(n - 2);
+        let idx = rng.sample_indices(n, k);
+        let view = SubmatrixView::new(&a, &idx);
+        let sub_w = gershgorin_view(&view);
+        // Gershgorin of the submatrix may be looser than the parent's
+        // spectrum, but the actual eigenvalues must respect the parent
+        // window — verify via the dense eigensolver.
+        let ev = gauss_bif::linalg::sym_eigenvalues(&a.principal_submatrix(&idx).to_dense());
+        assert!(w.lo <= ev[0] + 1e-9, "lo {} vs λ1 {}", w.lo, ev[0]);
+        assert!(w.hi >= ev[k - 1] - 1e-9);
+        let _ = sub_w;
+    });
+}
+
+#[test]
+fn preconditioned_judge_agrees_with_plain_judge() {
+    forall(15, 0x1005, |rng| {
+        let n = 10 + rng.below(20);
+        let (a, _, _) = random_spd_exact(rng, n, 0.5, 0.2);
+        let u: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let exact = Cholesky::factor(&a).unwrap().bif(&u);
+        let pc = JacobiPrecond::new(&a).unwrap();
+        let su = pc.scaled_query(&u);
+        // window for the transformed op from its Gershgorin via dense copy
+        let mut m = gauss_bif::linalg::DMat::zeros(n, n);
+        for j in 0..n {
+            let mut e = vec![0.0; n];
+            e[j] = 1.0;
+            let mut col = vec![0.0; n];
+            pc.matvec(&e, &mut col);
+            for i in 0..n {
+                m.set(i, j, col[i]);
+            }
+        }
+        let ev = gauss_bif::linalg::sym_eigenvalues(&m);
+        let opts = GqlOptions::new(ev[0] * 0.99, ev[n - 1] * 1.01);
+        for f in [0.5, 0.9, 1.1, 2.0] {
+            let t = exact * f;
+            let (ans, _) = judge_threshold(&pc, &su, t, opts);
+            assert_eq!(ans, t < exact, "factor {f}");
+        }
+    });
+}
+
+#[test]
+fn thm12_cg_error_equals_gauss_gap() {
+    forall(10, 0x1006, |rng| {
+        let n = 12 + rng.below(24);
+        let (a, l1, ln) = random_spd_exact(rng, n, 0.5, 0.3);
+        let u: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let exact = Cholesky::factor(&a).unwrap().bif(&u);
+        let mut q = Gql::new(&a, &u, GqlOptions::new(l1 * 0.99, ln * 1.01));
+        let hist = q.run(n);
+        let xstar = Cholesky::factor(&a).unwrap().solve(&u);
+        for k in [1usize, 3, 6] {
+            if k >= n {
+                break;
+            }
+            let cg = cg_solve(&a, &u, 0.0, k);
+            let eps: Vec<f64> = xstar.iter().zip(&cg.x).map(|(s, x)| s - x).collect();
+            let mut aeps = vec![0.0; n];
+            a.matvec(&eps, &mut aeps);
+            let err2: f64 = eps.iter().zip(&aeps).map(|(x, y)| x * y).sum();
+            assert_close(exact - hist[k - 1].gauss, err2, 1e-5, 1e-8 * exact.abs());
+        }
+    });
+}
+
+#[test]
+fn reorthogonalization_never_worsens_final_accuracy() {
+    forall(8, 0x1007, |rng| {
+        let n = 20 + rng.below(20);
+        let (a, _, ln) = random_spd_exact(rng, n, 1.0, 1e-3);
+        let u: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let exact = Cholesky::factor(&a).unwrap().bif(&u);
+        let base = GqlOptions::new(1e-4, ln * 1.05);
+        let mut plain = Gql::new(&a, &u, base);
+        let mut reorth = Gql::new(&a, &u, base.with_reorth(Reorth::Full));
+        let bp = plain.run(n).last().unwrap().gauss;
+        let br = reorth.run(n).last().unwrap().gauss;
+        let ep = (bp - exact).abs() / exact;
+        let er = (br - exact).abs() / exact;
+        assert_le(er, ep * 10.0 + 1e-6, 0.0); // reorth at worst comparable
+    });
+}
