@@ -1,0 +1,80 @@
+//! Block-vs-scalar GQL: k independent scalar runs against one `BlockGql`
+//! run over the same shared sparse operator, at k ∈ {4, 16, 64} (the
+//! acceptance sweep) plus a panel-width sweep at fixed k.
+//!
+//! Run: `cargo bench --bench bench_block`
+
+use gauss_bif::datasets::random_sparse_spd;
+use gauss_bif::quadrature::{block_solve, run_scalar, GqlOptions, StopRule};
+use gauss_bif::util::bench::{Bencher, Table};
+use gauss_bif::util::rng::Rng;
+
+fn main() {
+    let mut b = Bencher::new();
+    let n = 2000usize;
+    let density = 1e-2;
+    let iters = 16usize;
+    let mut rng = Rng::new(0xB10C);
+    let (a, w) = random_sparse_spd(&mut rng, n, density, 1e-2);
+    let opts = GqlOptions::new(w.lo, w.hi);
+    let stop = StopRule::Iters(iters);
+    println!(
+        "shared operator: n={n} nnz={} density={density:.0e}, {iters} iters/query\n",
+        a.nnz()
+    );
+
+    println!("== k scalar GQL runs vs one BlockGql run (width = k) ==");
+    let mut table = Table::new(&["k", "scalar ns/query-iter", "block ns/query-iter", "speedup"]);
+    for &k in &[4usize, 16, 64] {
+        let queries: Vec<Vec<f64>> = (0..k)
+            .map(|_| (0..n).map(|_| rng.normal()).collect())
+            .collect();
+        let scalar = b.bench(&format!("scalar k={k}"), || {
+            queries
+                .iter()
+                .map(|u| run_scalar(&a, u, opts, stop, false).bounds.gauss)
+                .sum::<f64>()
+        });
+        let block = b.bench(&format!("block  k={k}"), || {
+            block_solve(&a, opts, k, queries.iter().map(|u| (u.as_slice(), stop)))
+                .iter()
+                .map(|r| r.bounds.gauss)
+                .sum::<f64>()
+        });
+        let per = (k * iters) as f64;
+        table.row(vec![
+            k.to_string(),
+            format!("{:.0}", scalar.mean_ns / per),
+            format!("{:.0}", block.mean_ns / per),
+            format!("{:.2}x", scalar.mean_ns / block.mean_ns),
+        ]);
+    }
+    println!("\n{}", table.render());
+
+    println!("== panel-width sweep at k = 64 ==");
+    let k = 64usize;
+    let queries: Vec<Vec<f64>> = (0..k)
+        .map(|_| (0..n).map(|_| rng.normal()).collect())
+        .collect();
+    let scalar = b.bench("scalar k=64 (ref)", || {
+        queries
+            .iter()
+            .map(|u| run_scalar(&a, u, opts, stop, false).bounds.gauss)
+            .sum::<f64>()
+    });
+    let mut table = Table::new(&["width", "ns/query-iter", "speedup vs scalar"]);
+    for &width in &[2usize, 4, 8, 16, 32, 64] {
+        let block = b.bench(&format!("width={width}"), || {
+            block_solve(&a, opts, width, queries.iter().map(|u| (u.as_slice(), stop)))
+                .iter()
+                .map(|r| r.bounds.gauss)
+                .sum::<f64>()
+        });
+        table.row(vec![
+            width.to_string(),
+            format!("{:.0}", block.mean_ns / (k * iters) as f64),
+            format!("{:.2}x", scalar.mean_ns / block.mean_ns),
+        ]);
+    }
+    println!("\n{}", table.render());
+}

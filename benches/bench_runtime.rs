@@ -68,9 +68,9 @@ fn main() {
         let policy = BatchPolicy {
             max_batch,
             max_wait: std::time::Duration::from_micros(wait_us),
-            native_threshold: 256,
+            ..BatchPolicy::default()
         };
-        let svc = JudgeService::start(Some(dir.to_path_buf()), policy, 2);
+        let svc = JudgeService::start(Some(dir.to_path_buf()), policy, 2).expect("valid policy");
         let mut rng = Rng::new(0xBE2);
         let n_requests = 200;
         let t0 = std::time::Instant::now();
@@ -86,6 +86,7 @@ fn main() {
                 lam_min: (l1 * 0.99) as f32,
                 lam_max: (ln * 1.01) as f32,
                 t: 1.0,
+                op_key: None,
             }));
         }
         let mut pjrt = 0usize;

@@ -51,7 +51,8 @@ fn main() {
     }
 
     // --- Start the service (dedicated PJRT executor + 2 router workers) ---
-    let svc = JudgeService::start(Some(artifacts), BatchPolicy::default(), 2);
+    let svc =
+        JudgeService::start(Some(artifacts), BatchPolicy::default(), 2).expect("valid policy");
 
     // --- Workload: mixed-size BIF threshold judgements with oracle ---
     let mut rng = Rng::new(0xE2E);
@@ -73,6 +74,7 @@ fn main() {
             lam_min: (l1 * 0.99) as f32,
             lam_max: (ln * 1.01) as f32,
             t,
+            op_key: None, // fresh operator per request: nothing to coalesce
         };
         let want = t < exact;
         pending.push((svc.submit(req), want));
@@ -95,7 +97,7 @@ fn main() {
                     batched += 1;
                 }
             }
-            RoutePath::Native => {}
+            RoutePath::Native | RoutePath::NativeBlock { .. } => {}
         }
     }
     let dt = t0.elapsed().as_secs_f64();

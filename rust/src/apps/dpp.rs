@@ -23,6 +23,7 @@
 
 use super::BifStrategy;
 use crate::linalg::{Cholesky, MaintainedInverse};
+use crate::quadrature::block::{run_scalar, BlockGql, BlockResult, StopRule};
 use crate::quadrature::{judge_threshold, GqlOptions};
 use crate::sparse::{Csr, SpectrumBounds, SubmatrixView};
 use crate::util::rng::Rng;
@@ -222,6 +223,110 @@ impl<'a> DppSampler<'a> {
     }
 }
 
+/// Configuration for greedy MAP inference over a DPP kernel.
+#[derive(Clone, Copy, Debug)]
+pub struct GreedyConfig {
+    /// global spectrum window (valid for every `L_Y` by Cauchy interlacing)
+    pub window: SpectrumBounds,
+    /// target subset size
+    pub k: usize,
+    /// relative bracket tolerance each candidate score is refined to
+    pub tol_rel: f64,
+    /// candidate-scoring panel width: 1 = scalar path (independent `Gql`
+    /// runs), > 1 scores panels of candidates through [`BlockGql`]
+    pub block_width: usize,
+}
+
+impl GreedyConfig {
+    pub fn new(window: SpectrumBounds, k: usize) -> Self {
+        GreedyConfig { window, k, tol_rel: 1e-10, block_width: 16 }
+    }
+
+    pub fn with_block_width(mut self, w: usize) -> Self {
+        self.block_width = w;
+        self
+    }
+}
+
+/// Candidate-score estimate from a finished quadrature run (Gauss value
+/// when exact, bracket midpoint otherwise). Shared by the scalar and
+/// block paths so both score identically.
+fn bif_estimate(r: &BlockResult) -> f64 {
+    if r.bounds.exact {
+        r.bounds.gauss
+    } else {
+        r.bounds.mid()
+    }
+}
+
+/// Marginal gains below this are numerically indistinguishable from a
+/// singular update; greedy stops rather than add a non-PD element.
+const GAIN_FLOOR: f64 = 1e-12;
+
+/// Greedy MAP inference: repeatedly add the candidate with the largest
+/// Schur complement `s_c = L_cc − L_{c,Y} L_Y^{-1} L_{Y,c}` (equivalently
+/// the largest log-det gain `log s_c`) until `cfg.k` elements are chosen
+/// or no candidate keeps `L_Y` positive definite.
+///
+/// Every round scores *all* remaining candidates against the same
+/// operator `L_Y` — exactly the shared-operator workload the block
+/// engine batches. With `cfg.block_width == 1` each candidate runs a
+/// scalar [`crate::quadrature::Gql`]; with larger widths candidates are
+/// scored in lockstep panels. Both paths produce bit-identical scores
+/// (see `quadrature::block`'s exactness contract), hence **identical
+/// selections** — asserted in the tests below.
+pub fn greedy_map(l: &Csr, cfg: &GreedyConfig) -> Vec<usize> {
+    assert!(cfg.block_width >= 1, "block_width must be at least 1");
+    let n = l.n;
+    let k = cfg.k.min(n);
+    let opts = GqlOptions::new(cfg.window.lo, cfg.window.hi);
+    let stop = StopRule::GapRel(cfg.tol_rel);
+    let mut y: Vec<usize> = Vec::new(); // kept sorted (streaming views)
+    let mut in_y = vec![false; n];
+    while y.len() < k {
+        let candidates: Vec<usize> = (0..n).filter(|&c| !in_y[c]).collect();
+        let mut best: Option<(usize, f64)> = None;
+        if y.is_empty() {
+            for &c in &candidates {
+                let gain = l.get(c, c);
+                if best.map_or(true, |(_, g)| gain > g) {
+                    best = Some((c, gain));
+                }
+            }
+        } else {
+            let view = SubmatrixView::new(l, &y);
+            let scores: Vec<f64> = if cfg.block_width == 1 {
+                candidates
+                    .iter()
+                    .map(|&c| bif_estimate(&run_scalar(&view, &view.column_of(c), opts, stop, false)))
+                    .collect()
+            } else {
+                let mut eng = BlockGql::new(&view, opts, cfg.block_width);
+                for &c in &candidates {
+                    eng.push(&view.column_of(c), stop);
+                }
+                // run_all returns in push order == candidate order
+                eng.run_all().iter().map(bif_estimate).collect()
+            };
+            for (&c, &bif) in candidates.iter().zip(&scores) {
+                let gain = l.get(c, c) - bif;
+                if best.map_or(true, |(_, g)| gain > g) {
+                    best = Some((c, gain));
+                }
+            }
+        }
+        match best {
+            Some((c, gain)) if gain > GAIN_FLOOR => {
+                let pos = y.partition_point(|&m| m < c);
+                y.insert(pos, c);
+                in_y[c] = true;
+            }
+            _ => break, // no PD-feasible candidate left
+        }
+    }
+    y
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -317,5 +422,69 @@ mod tests {
         s.run(100, &mut rng);
         let avg = s.stats.judge_iters_total as f64 / s.stats.decisions as f64;
         assert!(avg < 25.0, "avg judge iterations {avg} too large");
+    }
+
+    #[test]
+    fn greedy_block_path_selects_identically_to_scalar() {
+        forall(8, 0xD9E, |rng| {
+            let n = 20 + rng.below(30);
+            let (l, w) = setup(rng, n, 0.2);
+            let k = 3 + rng.below(n / 4);
+            let base = GreedyConfig::new(w, k).with_block_width(1);
+            let scalar = greedy_map(&l, &base);
+            for width in [2, 5, 8, 32] {
+                let block = greedy_map(&l, &base.with_block_width(width));
+                assert_eq!(scalar, block, "width {width} changed the selection");
+            }
+        });
+    }
+
+    #[test]
+    fn greedy_matches_exact_cholesky_scoring() {
+        forall(8, 0xD9F, |rng| {
+            let n = 16 + rng.below(24);
+            let (l, w) = setup(rng, n, 0.25);
+            let k = 2 + rng.below(6);
+            let got = greedy_map(&l, &GreedyConfig::new(w, k));
+            // reference: same greedy with exact Schur complements
+            let mut y: Vec<usize> = Vec::new();
+            for _ in 0..k {
+                let mut best: Option<(usize, f64)> = None;
+                for c in (0..n).filter(|c| !y.contains(c)) {
+                    let gain = if y.is_empty() {
+                        l.get(c, c)
+                    } else {
+                        let sub = l.principal_submatrix(&y).to_dense();
+                        let col: Vec<f64> = y.iter().map(|&m| l.get(m, c)).collect();
+                        l.get(c, c) - Cholesky::factor(&sub).unwrap().bif(&col)
+                    };
+                    if best.map_or(true, |(_, g)| gain > g) {
+                        best = Some((c, gain));
+                    }
+                }
+                let (c, gain) = best.unwrap();
+                if gain <= GAIN_FLOOR {
+                    break;
+                }
+                let pos = y.partition_point(|&m| m < c);
+                y.insert(pos, c);
+            }
+            assert_eq!(got, y, "quadrature greedy deviated from exact greedy");
+        });
+    }
+
+    #[test]
+    fn greedy_set_is_distinct_and_capped() {
+        let mut rng = Rng::new(0xDA0);
+        let (l, w) = setup(&mut rng, 50, 0.15);
+        let got = greedy_map(&l, &GreedyConfig::new(w, 12));
+        assert!(got.len() <= 12);
+        let mut uniq = got.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(uniq.len(), got.len());
+        assert!(got.iter().all(|&c| c < 50));
+        // sorted invariant
+        assert!(got.windows(2).all(|p| p[0] < p[1]));
     }
 }

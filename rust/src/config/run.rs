@@ -49,6 +49,7 @@ pub enum ExperimentConfig {
     Fig2,
     Table2,
     Rates,
+    Block,
     Serve,
 }
 
@@ -59,6 +60,7 @@ impl ExperimentConfig {
             "fig2" => Some(Self::Fig2),
             "table2" => Some(Self::Table2),
             "rates" => Some(Self::Rates),
+            "block" => Some(Self::Block),
             "serve" => Some(Self::Serve),
             _ => None,
         }
@@ -80,6 +82,9 @@ pub struct RunConfig {
     pub chain_iters: usize,
     /// repetitions to average
     pub repeats: usize,
+    /// panel width for the block quadrature engine (candidate scoring,
+    /// coalesced native serving, the `block` experiment); 1 = scalar
+    pub block_width: usize,
     /// extra free-form knobs
     pub extra: BTreeMap<String, String>,
 }
@@ -93,6 +98,7 @@ impl Default for RunConfig {
             dataset_scale: 1,
             chain_iters: 1000,
             repeats: 3,
+            block_width: 16,
             extra: BTreeMap::new(),
         }
     }
@@ -119,6 +125,9 @@ impl RunConfig {
         }
         if let Some(x) = v.get("repeats").and_then(Json::as_usize) {
             c.repeats = x.max(1);
+        }
+        if let Some(x) = v.get("block_width").and_then(Json::as_usize) {
+            c.block_width = x.max(1);
         }
         if let Some(Json::Obj(m)) = v.get("extra") {
             for (k, val) in m {
@@ -163,17 +172,24 @@ mod tests {
 
     #[test]
     fn run_config_defaults_and_overrides() {
-        let c = RunConfig::from_json(r#"{"seed": 7, "dataset_scale": 8}"#).unwrap();
+        let c = RunConfig::from_json(r#"{"seed": 7, "dataset_scale": 8, "block_width": 32}"#)
+            .unwrap();
         assert_eq!(c.seed, 7);
         assert_eq!(c.dataset_scale, 8);
         assert_eq!(c.chain_iters, 1000);
+        assert_eq!(c.block_width, 32);
         let d = RunConfig::default();
         assert_eq!(d.repeats, 3);
+        assert_eq!(d.block_width, 16);
+        // degenerate widths clamp up to the scalar path
+        let z = RunConfig::from_json(r#"{"block_width": 0}"#).unwrap();
+        assert_eq!(z.block_width, 1);
     }
 
     #[test]
     fn experiment_names() {
         assert_eq!(ExperimentConfig::from_name("fig1"), Some(ExperimentConfig::Fig1));
+        assert_eq!(ExperimentConfig::from_name("block"), Some(ExperimentConfig::Block));
         assert_eq!(ExperimentConfig::from_name("nope"), None);
     }
 }

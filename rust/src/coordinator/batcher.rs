@@ -11,12 +11,17 @@ use std::time::Duration;
 #[derive(Clone, Copy, Debug)]
 pub struct BatchPolicy {
     /// max requests drained into one dispatch (bounded by the artifact's
-    /// batch width at dispatch time)
+    /// batch width at dispatch time); also the panel width for coalesced
+    /// native block runs
     pub max_batch: usize,
     /// how long the drainer waits for the batch to fill
     pub max_wait: Duration,
     /// queries with dim above this always take the native path
     pub native_threshold: usize,
+    /// drain co-keyed native-path requests (same `op_key`, dim, and
+    /// spectrum window) into one `quadrature::block::BlockGql` run
+    /// instead of N scalar runs
+    pub coalesce: bool,
 }
 
 impl Default for BatchPolicy {
@@ -25,7 +30,25 @@ impl Default for BatchPolicy {
             max_batch: 8,
             max_wait: Duration::from_micros(200),
             native_threshold: 256,
+            coalesce: true,
         }
+    }
+}
+
+impl BatchPolicy {
+    /// Reject configurations the drainer cannot make progress under:
+    /// `max_batch == 0` would form empty batches forever and
+    /// `native_threshold == 0` would starve every query of both paths.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.max_batch == 0 {
+            return Err("BatchPolicy.max_batch must be >= 1 (0 would spin the drainer)".into());
+        }
+        if self.native_threshold == 0 {
+            return Err(
+                "BatchPolicy.native_threshold must be >= 1 (0 starves every query)".into(),
+            );
+        }
+        Ok(())
     }
 }
 
@@ -58,6 +81,24 @@ impl Bucketizer {
         self.bucket(dim)
             .map(|b| (b * b) as f64 / (dim * dim).max(1) as f64)
     }
+
+    /// Same-operator coalescing mode: positions in `queued` whose
+    /// coalesce key equals `first`'s, oldest-first up to `limit` — the
+    /// requests the drainer folds into one native block run. `None` keys
+    /// (no `op_key`) never coalesce.
+    pub fn coalesce_positions<K: PartialEq>(
+        first: &K,
+        queued: &[Option<K>],
+        limit: usize,
+    ) -> Vec<usize> {
+        queued
+            .iter()
+            .enumerate()
+            .filter(|(_, k)| k.as_ref() == Some(first))
+            .map(|(i, _)| i)
+            .take(limit)
+            .collect()
+    }
 }
 
 #[cfg(test)]
@@ -87,5 +128,35 @@ mod tests {
         let p = BatchPolicy::default();
         assert!(p.max_batch >= 1);
         assert!(p.native_threshold >= 64);
+        assert!(p.validate().is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_zero_knobs() {
+        let mut p = BatchPolicy::default();
+        p.max_batch = 0;
+        assert!(p.validate().unwrap_err().contains("max_batch"));
+        let mut p = BatchPolicy::default();
+        p.native_threshold = 0;
+        assert!(p.validate().unwrap_err().contains("native_threshold"));
+    }
+
+    #[test]
+    fn coalesce_positions_matches_keys_oldest_first() {
+        let key = (7u64, 16usize);
+        let queued = vec![
+            Some((7u64, 16usize)), // match
+            Some((7, 32)),         // same op, different dim: no
+            None,                  // unkeyed: no
+            Some((8, 16)),         // different op: no
+            Some((7, 16)),         // match
+            Some((7, 16)),         // match (cut by limit)
+        ];
+        assert_eq!(Bucketizer::coalesce_positions(&key, &queued, 2), vec![0, 4]);
+        assert_eq!(
+            Bucketizer::coalesce_positions(&key, &queued, 8),
+            vec![0, 4, 5]
+        );
+        assert!(Bucketizer::coalesce_positions(&key, &[], 4).is_empty());
     }
 }

@@ -14,6 +14,7 @@ use super::batcher::{BatchPolicy, Bucketizer};
 use crate::config::run::parse_manifest;
 use crate::linalg::DMat;
 use crate::metrics::ServiceMetrics;
+use crate::quadrature::block::{BlockGql, StopRule};
 use crate::quadrature::{judge_threshold, GqlOptions};
 use crate::runtime::{BoundsHistory, GqlRuntime};
 use std::path::PathBuf;
@@ -32,6 +33,13 @@ pub struct JudgeRequest {
     pub lam_min: f32,
     pub lam_max: f32,
     pub t: f64,
+    /// Same-operator coalescing key. Clients issuing many queries against
+    /// one `a` (a DPP chain, a centrality sweep) tag them with a shared
+    /// key; co-keyed native-path requests with equal `n` and spectrum
+    /// window are drained into a single `BlockGql` run. **Contract:**
+    /// requests sharing a key must carry byte-identical `a`. `None`
+    /// disables coalescing for this request.
+    pub op_key: Option<u64>,
 }
 
 /// Which path served a request.
@@ -41,6 +49,9 @@ pub enum RoutePath {
     Pjrt { bucket: usize, batch: usize },
     /// native rust GQL (big queries, no artifacts, or PJRT failure)
     Native,
+    /// native block GQL: `batch` co-keyed requests coalesced into one
+    /// shared-operator `BlockGql` run
+    NativeBlock { batch: usize },
 }
 
 /// Service answer.
@@ -84,11 +95,16 @@ pub struct JudgeService {
 impl JudgeService {
     /// Start with `n_workers` routing threads. `artifacts_dir = None`
     /// forces the native path for everything.
+    ///
+    /// Rejects policies the drainer cannot make progress under
+    /// ([`BatchPolicy::validate`]): `max_batch == 0` or
+    /// `native_threshold == 0`.
     pub fn start(
         artifacts_dir: Option<PathBuf>,
         policy: BatchPolicy,
         n_workers: usize,
-    ) -> Self {
+    ) -> Result<Self, String> {
+        policy.validate()?;
         let shared = Arc::new(Shared {
             queue: Mutex::new(Vec::new()),
             cv: Condvar::new(),
@@ -133,7 +149,7 @@ impl JudgeService {
                 })
             })
             .collect();
-        JudgeService { shared, metrics, workers, executor }
+        Ok(JudgeService { shared, metrics, workers, executor })
     }
 
     /// Enqueue a request; the receiver yields exactly one response.
@@ -276,7 +292,12 @@ fn worker_loop(
         let (bucket, sender) = match (bucket, sender) {
             (Some(b), Some(s)) => (b, s),
             _ => {
-                serve_native(&metrics, first);
+                if policy.coalesce && first.req.op_key.is_some() && policy.max_batch > 1 {
+                    let group = drain_coalesced(&shared, &first, &policy);
+                    serve_native_block(&metrics, first, group);
+                } else {
+                    serve_native(&metrics, first);
+                }
                 continue;
             }
         };
@@ -361,6 +382,86 @@ fn pop_oldest(q: &mut Vec<Queued>) -> Option<Queued> {
     Some(q.remove(idx))
 }
 
+/// Coalesce key: requests may share a `BlockGql` panel only when the
+/// operator id, dimension, and spectrum window all agree.
+fn coalesce_key(req: &JudgeRequest) -> Option<(u64, usize, u32, u32)> {
+    req.op_key
+        .map(|k| (k, req.n, req.lam_min.to_bits(), req.lam_max.to_bits()))
+}
+
+/// The Bucketizer's same-operator coalescing mode: drain queued requests
+/// co-keyed with `first`, waiting up to `max_wait` for stragglers (the
+/// client tagged them batchable, so a bounded wait is the right trade).
+/// Mirrors the PJRT batch-forming spin below — a lone keyed request pays
+/// the full `max_wait` (200µs default); switching both loops to condvar
+/// wakeups is a ROADMAP follow-up.
+fn drain_coalesced(shared: &Shared, first: &Queued, policy: &BatchPolicy) -> Vec<Queued> {
+    let key = coalesce_key(&first.req).expect("caller checked op_key");
+    let mut group: Vec<Queued> = Vec::new();
+    let deadline = Instant::now() + policy.max_wait;
+    loop {
+        {
+            let mut q = shared.queue.lock().unwrap();
+            let keys: Vec<_> = q.iter().map(|item| coalesce_key(&item.req)).collect();
+            let want = policy.max_batch - 1 - group.len();
+            let pos = Bucketizer::coalesce_positions(&key, &keys, want);
+            for p in pos.into_iter().rev() {
+                group.push(q.remove(p));
+            }
+        }
+        if group.len() + 1 >= policy.max_batch || Instant::now() >= deadline {
+            return group;
+        }
+        std::thread::yield_now();
+    }
+}
+
+/// Serve a coalesced group through one shared-operator [`BlockGql`] run:
+/// the matrix is converted to f64 once and one panel sweep advances every
+/// lane. Per-lane decisions are identical to the scalar native path (the
+/// block engine's exactness contract).
+fn serve_native_block(metrics: &ServiceMetrics, first: Queued, others: Vec<Queued>) {
+    if others.is_empty() {
+        return serve_native(metrics, first);
+    }
+    let mut items = Vec::with_capacity(1 + others.len());
+    items.push(first);
+    items.extend(others);
+    let batch = items.len();
+    metrics.native_fallbacks.add(batch as u64);
+    metrics.coalesced_blocks.inc();
+    metrics.batch_size.lock().unwrap().record(batch as f64);
+    let n = items[0].req.n;
+    // the op_key contract says co-keyed requests carry byte-identical
+    // matrices; cheap to actually check in debug builds
+    debug_assert!(
+        items.iter().all(|it| it.req.a == items[0].req.a),
+        "co-keyed requests must share an identical operator matrix"
+    );
+    let a = DMat::from_fn(n, n, |i, j| items[0].req.a[i * n + j] as f64);
+    let opts = GqlOptions::new(items[0].req.lam_min as f64, items[0].req.lam_max as f64);
+    let mut eng = BlockGql::new(&a, opts, batch);
+    for item in &items {
+        let u: Vec<f64> = item.req.u.iter().map(|&x| x as f64).collect();
+        eng.push(&u, StopRule::Threshold(item.req.t));
+    }
+    let results = eng.run_all(); // sorted by id == items order
+    for (item, r) in items.into_iter().zip(results) {
+        metrics.judge_iters.lock().unwrap().record(r.iters as f64);
+        metrics
+            .latency_ns
+            .lock()
+            .unwrap()
+            .record(item.enqueued.elapsed().as_nanos() as f64);
+        let decision = r.decision.unwrap_or_else(|| item.req.t < r.bounds.mid());
+        let _ = item.reply.send(JudgeResponse {
+            decision,
+            iters: r.iters,
+            path: RoutePath::NativeBlock { batch },
+        });
+    }
+}
+
 fn serve_native(metrics: &ServiceMetrics, item: Queued) {
     metrics.native_fallbacks.inc();
     let n = item.req.n;
@@ -400,13 +501,14 @@ mod tests {
             lam_min: (l1 * 0.99) as f32,
             lam_max: (ln * 1.01) as f32,
             t,
+            op_key: None,
         };
         (req, t < exact)
     }
 
     #[test]
     fn native_only_service_answers_correctly() {
-        let svc = JudgeService::start(None, BatchPolicy::default(), 2);
+        let svc = JudgeService::start(None, BatchPolicy::default(), 2).unwrap();
         let mut rng = Rng::new(0x5E1);
         for factor in [0.5, 0.9, 1.1, 2.0] {
             let (req, want) = make_request(&mut rng, 20, factor);
@@ -420,7 +522,7 @@ mod tests {
 
     #[test]
     fn concurrent_submissions_all_answered() {
-        let svc = Arc::new(JudgeService::start(None, BatchPolicy::default(), 3));
+        let svc = Arc::new(JudgeService::start(None, BatchPolicy::default(), 3).unwrap());
         let mut rng = Rng::new(0x5E2);
         let mut expected = Vec::new();
         let mut rxs = Vec::new();
@@ -440,7 +542,7 @@ mod tests {
 
     #[test]
     fn shutdown_drains_queue() {
-        let svc = JudgeService::start(None, BatchPolicy::default(), 1);
+        let svc = JudgeService::start(None, BatchPolicy::default(), 1).unwrap();
         let mut rng = Rng::new(0x5E3);
         let (req, want) = make_request(&mut rng, 10, 0.5);
         let rx = svc.submit(req);
@@ -454,11 +556,86 @@ mod tests {
             Some(PathBuf::from("/definitely/not/a/real/dir")),
             BatchPolicy::default(),
             1,
-        );
+        )
+        .unwrap();
         let mut rng = Rng::new(0x5E4);
         let (req, want) = make_request(&mut rng, 14, 0.7);
         let resp = svc.judge_blocking(req);
         assert_eq!(resp.decision, want);
         assert_eq!(resp.path, RoutePath::Native);
+    }
+
+    #[test]
+    fn degenerate_policies_are_rejected_at_start() {
+        let mut p = BatchPolicy::default();
+        p.max_batch = 0;
+        let err = JudgeService::start(None, p, 1).err().expect("must reject");
+        assert!(err.contains("max_batch"), "{err}");
+        let mut p = BatchPolicy::default();
+        p.native_threshold = 0;
+        let err = JudgeService::start(None, p, 1).err().expect("must reject");
+        assert!(err.contains("native_threshold"), "{err}");
+    }
+
+    #[test]
+    fn co_keyed_requests_coalesce_into_one_block_run() {
+        // one shared operator, eight queries tagged with the same op_key;
+        // a generous max_wait makes the drain deterministic
+        let policy = BatchPolicy {
+            max_batch: 8,
+            max_wait: std::time::Duration::from_millis(50),
+            ..BatchPolicy::default()
+        };
+        let svc = JudgeService::start(None, policy, 1).unwrap();
+        let mut rng = Rng::new(0x5E5);
+        let n = 18;
+        let (a, l1, ln) = random_spd_exact(&mut rng, n, 0.6, 0.2);
+        let af: Vec<f32> = (0..n * n).map(|k| a.get(k / n, k % n) as f32).collect();
+        let ch = Cholesky::factor(&a).unwrap();
+        let mut rxs = Vec::new();
+        let mut wants = Vec::new();
+        for i in 0..8 {
+            let u: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let exact = ch.bif(&u);
+            let t = exact * (0.55 + 0.1 * i as f64);
+            wants.push(t < exact);
+            rxs.push(svc.submit(JudgeRequest {
+                a: af.clone(),
+                u: u.iter().map(|&x| x as f32).collect(),
+                n,
+                lam_min: (l1 * 0.99) as f32,
+                lam_max: (ln * 1.01) as f32,
+                t,
+                op_key: Some(0xC0A1),
+            }));
+        }
+        let mut block_served = 0usize;
+        for (rx, want) in rxs.into_iter().zip(wants) {
+            let resp = rx.recv().unwrap();
+            assert_eq!(resp.decision, want);
+            if let RoutePath::NativeBlock { batch } = resp.path {
+                assert!(batch >= 2);
+                block_served += 1;
+            }
+        }
+        assert!(
+            block_served >= 2,
+            "expected at least one coalesced block run (got {block_served})"
+        );
+        assert!(svc.metrics.coalesced_blocks.get() >= 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn coalescing_disabled_keeps_scalar_native_path() {
+        let policy = BatchPolicy { coalesce: false, ..BatchPolicy::default() };
+        let svc = JudgeService::start(None, policy, 1).unwrap();
+        let mut rng = Rng::new(0x5E6);
+        let (mut req, want) = make_request(&mut rng, 16, 0.8);
+        req.op_key = Some(1);
+        let resp = svc.judge_blocking(req);
+        assert_eq!(resp.decision, want);
+        assert_eq!(resp.path, RoutePath::Native);
+        assert_eq!(svc.metrics.coalesced_blocks.get(), 0);
     }
 }

@@ -1,0 +1,134 @@
+//! Scalar-vs-block wall-clock sweep: `k` independent GQL runs against one
+//! shared sparse operator versus a single `BlockGql` run at the same
+//! fixed iteration count (rates-style driver: structured rows + CSV).
+//!
+//! Because the block engine's per-lane arithmetic is bit-identical to the
+//! scalar engine, `max_dev` must be exactly zero — the sweep doubles as an
+//! end-to-end equivalence check while it measures the panel speedup.
+
+use crate::config::RunConfig;
+use crate::datasets::random_sparse_spd;
+use crate::experiments::time_secs;
+use crate::quadrature::{block_solve, run_scalar, GqlOptions, StopRule};
+use crate::util::rng::Rng;
+
+/// One sweep row: `k` queries of `iters` iterations each, scalar vs a
+/// width-`width` block run.
+#[derive(Clone, Debug)]
+pub struct BlockReport {
+    pub n: usize,
+    pub density: f64,
+    pub nnz: usize,
+    pub k: usize,
+    pub width: usize,
+    pub iters: usize,
+    pub scalar_s: f64,
+    pub block_s: f64,
+    pub speedup: f64,
+    /// max |gauss_block − gauss_scalar| over all queries (must be 0.0)
+    pub max_dev: f64,
+}
+
+pub fn run_one(
+    rng: &mut Rng,
+    n: usize,
+    density: f64,
+    k: usize,
+    width: usize,
+    iters: usize,
+) -> BlockReport {
+    let (a, w) = random_sparse_spd(rng, n, density, 1e-2);
+    let opts = GqlOptions::new(w.lo, w.hi);
+    let stop = StopRule::Iters(iters);
+    let queries: Vec<Vec<f64>> = (0..k)
+        .map(|_| (0..n).map(|_| rng.normal()).collect())
+        .collect();
+
+    let (scalar_res, scalar_s) = time_secs(|| {
+        queries
+            .iter()
+            .map(|u| run_scalar(&a, u, opts, stop, false))
+            .collect::<Vec<_>>()
+    });
+    let (block_res, block_s) = time_secs(|| {
+        block_solve(&a, opts, width, queries.iter().map(|u| (u.as_slice(), stop)))
+    });
+
+    let max_dev = scalar_res
+        .iter()
+        .zip(&block_res)
+        .map(|(s, b)| (s.bounds.gauss - b.bounds.gauss).abs())
+        .fold(0.0f64, f64::max);
+    BlockReport {
+        n,
+        density,
+        nnz: a.nnz(),
+        k,
+        width,
+        iters,
+        scalar_s,
+        block_s,
+        speedup: scalar_s / block_s.max(1e-12),
+        max_dev,
+    }
+}
+
+/// Sweep query counts `ks` at the configured `block_width`; problem size
+/// shrinks with `dataset_scale` for session-budget runs.
+pub fn run(cfg: &RunConfig, ks: &[usize]) -> Vec<BlockReport> {
+    let mut rng = Rng::new(cfg.seed ^ 0xB10C);
+    let n = (4000 / cfg.dataset_scale.max(1)).max(64);
+    let density = 2e-3;
+    let iters = 16;
+    ks.iter()
+        .map(|&k| run_one(&mut rng, n, density, k, cfg.block_width.max(1), iters))
+        .collect()
+}
+
+pub const CSV_HEADER: [&str; 10] = [
+    "n", "density", "nnz", "k", "width", "iters", "scalar_s", "block_s", "speedup", "max_dev",
+];
+
+pub fn csv_rows(reports: &[BlockReport]) -> Vec<Vec<String>> {
+    reports
+        .iter()
+        .map(|r| {
+            vec![
+                r.n.to_string(),
+                format!("{:.1e}", r.density),
+                r.nnz.to_string(),
+                r.k.to_string(),
+                r.width.to_string(),
+                r.iters.to_string(),
+                format!("{:.4e}", r.scalar_s),
+                format!("{:.4e}", r.block_s),
+                format!("{:.2}", r.speedup),
+                format!("{:.1e}", r.max_dev),
+            ]
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_rows_are_exact_and_well_formed() {
+        let mut rng = Rng::new(0xB10D);
+        let rep = run_one(&mut rng, 128, 0.05, 8, 4, 6);
+        assert_eq!(rep.k, 8);
+        assert_eq!(rep.width, 4);
+        assert!(rep.scalar_s > 0.0 && rep.block_s > 0.0);
+        // bit-identical lanes: the deviation is exactly zero, not just small
+        assert_eq!(rep.max_dev, 0.0);
+    }
+
+    #[test]
+    fn scaled_run_produces_a_row_per_k() {
+        let cfg = RunConfig { dataset_scale: 40, block_width: 4, ..Default::default() };
+        let rows = run(&cfg, &[2, 4]);
+        assert_eq!(rows.len(), 2);
+        assert!(rows.iter().all(|r| r.max_dev == 0.0));
+    }
+}

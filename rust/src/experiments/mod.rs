@@ -4,6 +4,7 @@
 //! the same artifact; results are also written as CSV under
 //! `results/`.
 
+pub mod block;
 pub mod fig1;
 pub mod fig2;
 pub mod rates;

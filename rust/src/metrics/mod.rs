@@ -59,6 +59,8 @@ pub struct ServiceMetrics {
     pub requests: Counter,
     pub batches: Counter,
     pub native_fallbacks: Counter,
+    /// coalesced shared-operator block runs on the native path
+    pub coalesced_blocks: Counter,
     pub latency_ns: std::sync::Mutex<Histogram>,
     pub batch_size: std::sync::Mutex<Histogram>,
     pub judge_iters: std::sync::Mutex<Histogram>,
@@ -75,10 +77,11 @@ impl ServiceMetrics {
         let bs = self.batch_size.lock().unwrap();
         let it = self.judge_iters.lock().unwrap();
         format!(
-            "requests={} batches={} native={} | latency p50={} p95={} p99={} | batch p50={:.1} | iters p50={:.0} p95={:.0}",
+            "requests={} batches={} native={} coalesced={} | latency p50={} p95={} p99={} | batch p50={:.1} | iters p50={:.0} p95={:.0}",
             self.requests.get(),
             self.batches.get(),
             self.native_fallbacks.get(),
+            self.coalesced_blocks.get(),
             crate::util::bench::Stats::fmt_time(lat.percentile(0.50)),
             crate::util::bench::Stats::fmt_time(lat.percentile(0.95)),
             crate::util::bench::Stats::fmt_time(lat.percentile(0.99)),

@@ -1,0 +1,687 @@
+//! Block Gauss-Quadrature-Lanczos: B independent GQL recurrences advanced
+//! in lockstep against a **shared** operator.
+//!
+//! Every consumer in this repo — DPP/k-DPP greedy scoring, centrality
+//! ranking, the judge service — issues many `u_i^T A^{-1} u_i` queries
+//! against the *same* `A`. Run scalar, each query pays one sparse matvec
+//! per iteration; run as a block, one [`SymOp::matvec_multi`] panel sweep
+//! (a single traversal of the operator) advances every lane at once, which
+//! is where the hardware-level speedup lives (cf. Zimmerling, Druskin &
+//! Simoncini, arXiv:2407.21505 for the block-quadrature bounds and Pleiss
+//! et al., arXiv:2006.11267 for batched Krylov on shared operators).
+//!
+//! Each lane carries the full four-bound state of the scalar engine
+//! (Gauss, both Gauss-Radau flavors, Gauss-Lobatto) and its own
+//! [`StopRule`]. Converged lanes exit early: their panel column is
+//! refilled from a pending queue so the panel stays dense (the mechanism
+//! that makes block DPP-greedy fast — score all remaining candidates in
+//! panels of `B`), and only once the queue drains does the panel compact
+//! to the surviving lanes.
+//!
+//! **Exactness contract:** per lane, the floating-point operation sequence
+//! is identical to a scalar [`Gql`] run (the specialized `matvec_multi`
+//! impls preserve per-lane accumulation order), so block results are
+//! bit-identical to scalar results — asserted by the `block_width = 1`
+//! property tests in `rust/tests/prop_block.rs`.
+
+use super::gql::{Bounds, Gql, GqlOptions, Reorth};
+use crate::sparse::SymOp;
+use std::collections::VecDeque;
+
+/// When a lane is allowed to leave the panel.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum StopRule {
+    /// Run to Krylov exhaustion (or the iteration budget).
+    Exhaust,
+    /// Stop once the bound bracket width drops below an absolute tolerance.
+    GapAbs(f64),
+    /// Stop once the bracket width drops below `tol * upper` (relative).
+    GapRel(f64),
+    /// Stop as soon as the Radau bounds decide `t < u^T A^{-1} u`; the
+    /// decision lands in [`BlockResult::decision`] (paper Alg. 4 semantics).
+    Threshold(f64),
+    /// Stop after a fixed number of iterations.
+    Iters(usize),
+}
+
+/// Outcome of one lane.
+#[derive(Clone, Debug)]
+pub struct BlockResult {
+    /// Push order (0-based): results from [`BlockGql::run_all`] are sorted
+    /// by this id, matching the order queries were pushed.
+    pub id: usize,
+    /// Final bounds when the lane exited.
+    pub bounds: Bounds,
+    /// For [`StopRule::Threshold`]: the decision `t < u^T A^{-1} u`
+    /// (midpoint fallback when the iteration budget ran out first).
+    pub decision: Option<bool>,
+    /// Quadrature iterations the lane consumed.
+    pub iters: usize,
+    /// Per-iteration bound history (empty unless recording was enabled
+    /// via [`BlockGql::record_history`]).
+    pub history: Vec<Bounds>,
+}
+
+/// Should a run with these bounds stop, and with what threshold decision?
+///
+/// Shared verbatim by the block lanes and the scalar reference driver
+/// [`run_scalar`], so the two paths terminate at exactly the same
+/// iteration with exactly the same decision — the invariant the block DPP
+/// greedy's "identical selections" guarantee rests on. `n` is the operator
+/// dimension, `max_iters` the (already clamped) budget.
+pub fn stop_decision(
+    b: &Bounds,
+    stop: &StopRule,
+    n: usize,
+    max_iters: usize,
+) -> Option<Option<bool>> {
+    let threshold_of = |t: f64, val: f64| Some(Some(t < val));
+    if b.exact {
+        // breakdown: the Gauss value is the exact BIF (Lemma 15)
+        return match *stop {
+            StopRule::Threshold(t) => threshold_of(t, b.gauss),
+            _ => Some(None),
+        };
+    }
+    match *stop {
+        StopRule::Threshold(t) => {
+            if t < b.radau_lower {
+                return Some(Some(true));
+            }
+            if t >= b.radau_upper {
+                return Some(Some(false));
+            }
+        }
+        StopRule::GapAbs(tol) => {
+            if b.gap() <= tol {
+                return Some(None);
+            }
+        }
+        StopRule::GapRel(tol) => {
+            if b.gap() <= tol * b.upper().abs() {
+                return Some(None);
+            }
+        }
+        StopRule::Iters(k) => {
+            if b.iter >= k {
+                return Some(None);
+            }
+        }
+        StopRule::Exhaust => {}
+    }
+    if b.iter >= n {
+        // Krylov space full: value exact even without a breakdown flag
+        return match *stop {
+            StopRule::Threshold(t) => threshold_of(t, b.gauss),
+            _ => Some(None),
+        };
+    }
+    if b.iter >= max_iters {
+        // budget: decide at the bracket midpoint, like the scalar judges
+        return match *stop {
+            StopRule::Threshold(t) => threshold_of(t, b.mid()),
+            _ => Some(None),
+        };
+    }
+    None
+}
+
+/// Scalar reference path: one query driven through [`Gql`] with the same
+/// stopping logic as a block lane. `BlockGql` with `width = 1` reproduces
+/// this bit-for-bit; apps use it as their non-batched code path.
+pub fn run_scalar(
+    op: &dyn SymOp,
+    u: &[f64],
+    opts: GqlOptions,
+    stop: StopRule,
+    record_history: bool,
+) -> BlockResult {
+    if is_zero(u) {
+        return zero_result(0, &stop);
+    }
+    let n = op.dim();
+    let max_iters = opts.max_iters.min(n).max(1);
+    let mut q = Gql::new(op, u, opts);
+    let mut history = Vec::new();
+    loop {
+        let b = q.step();
+        if record_history {
+            history.push(b);
+        }
+        if let Some(decision) = stop_decision(&b, &stop, n, max_iters) {
+            return BlockResult { id: 0, bounds: b, decision, iters: b.iter, history };
+        }
+    }
+}
+
+/// One lane's Sherman–Morrison recurrence state (mirrors [`Gql`]'s fields;
+/// the Lanczos vectors live in the engine's interleaved panels).
+struct Lane {
+    id: usize,
+    stop: StopRule,
+    unorm2: f64,
+    beta_prev: f64,
+    g: f64,
+    c: f64,
+    delta: f64,
+    d_lr: f64,
+    d_rr: f64,
+    iter: usize,
+    last: Option<Bounds>,
+    history: Vec<Bounds>,
+}
+
+impl Lane {
+    fn new(id: usize, stop: StopRule, unorm2: f64) -> Self {
+        Lane {
+            id,
+            stop,
+            unorm2,
+            beta_prev: 0.0,
+            g: 0.0,
+            c: 1.0,
+            delta: 0.0,
+            d_lr: 0.0,
+            d_rr: 0.0,
+            iter: 0,
+            last: None,
+            history: Vec::new(),
+        }
+    }
+}
+
+struct Pending {
+    id: usize,
+    u: Vec<f64>,
+    stop: StopRule,
+}
+
+/// Batched GQL engine: push queries, then [`BlockGql::run_all`].
+pub struct BlockGql<'a> {
+    op: &'a dyn SymOp,
+    opts: GqlOptions,
+    n: usize,
+    /// configured maximum panel width B
+    width: usize,
+    /// current stride (= active lane count = `lanes.len()`)
+    b: usize,
+    // interleaved panels, `n * b`: column `l` of lane `l` at `[i * b + l]`
+    v_prev: Vec<f64>,
+    v_curr: Vec<f64>,
+    w: Vec<f64>,
+    lanes: Vec<Lane>,
+    pending: VecDeque<Pending>,
+    done: Vec<BlockResult>,
+    next_id: usize,
+    record_history: bool,
+    sweeps: usize,
+}
+
+impl<'a> BlockGql<'a> {
+    /// Engine over `op` with panel width `width`. Like [`Gql::new`],
+    /// `opts.max_iters` is clamped to the operator dimension (no lane can
+    /// usefully iterate past Krylov exhaustion).
+    pub fn new(op: &'a dyn SymOp, opts: GqlOptions, width: usize) -> Self {
+        let n = op.dim();
+        assert!(width >= 1, "block width must be at least 1");
+        assert!(
+            opts.lam_min > 0.0 && opts.lam_max > opts.lam_min,
+            "need 0 < lam_min < lam_max (got {} .. {})",
+            opts.lam_min,
+            opts.lam_max
+        );
+        assert!(
+            opts.reorth == Reorth::None,
+            "BlockGql does not support reorthogonalization (use scalar Gql)"
+        );
+        let mut opts = opts;
+        opts.max_iters = opts.max_iters.min(n).max(1);
+        BlockGql {
+            op,
+            opts,
+            n,
+            width,
+            b: 0,
+            v_prev: Vec::new(),
+            v_curr: Vec::new(),
+            w: Vec::new(),
+            lanes: Vec::new(),
+            pending: VecDeque::new(),
+            done: Vec::new(),
+            next_id: 0,
+            record_history: false,
+            sweeps: 0,
+        }
+    }
+
+    /// Record per-iteration bound histories into each [`BlockResult`].
+    pub fn record_history(mut self, yes: bool) -> Self {
+        self.record_history = yes;
+        self
+    }
+
+    /// Queue a query `u^T op^{-1} u`; returns its id (push order). Zero
+    /// queries resolve immediately (BIF = 0 exactly) without taking a lane.
+    pub fn push(&mut self, u: &[f64], stop: StopRule) -> usize {
+        assert_eq!(u.len(), self.n, "dimension mismatch");
+        let id = self.next_id;
+        self.next_id += 1;
+        if is_zero(u) {
+            self.done.push(zero_result(id, &stop));
+        } else {
+            self.pending.push_back(Pending { id, u: u.to_vec(), stop });
+        }
+        id
+    }
+
+    /// Panel sweeps performed so far (each = one `matvec_multi`, i.e. one
+    /// traversal of the shared operator regardless of lane count).
+    pub fn sweeps(&self) -> usize {
+        self.sweeps
+    }
+
+    /// Run until every queued query has completed; results sorted by id.
+    pub fn run_all(&mut self) -> Vec<BlockResult> {
+        loop {
+            self.admit();
+            if self.lanes.is_empty() {
+                break;
+            }
+            self.sweep();
+        }
+        let mut out = std::mem::take(&mut self.done);
+        out.sort_by_key(|r| r.id);
+        out
+    }
+
+    /// Admit pending queries up to the configured width (growing the
+    /// panel stride).
+    fn admit(&mut self) {
+        let m = (self.width - self.b).min(self.pending.len());
+        if m == 0 {
+            return;
+        }
+        self.grow(m);
+        for _ in 0..m {
+            let p = self.pending.pop_front().unwrap();
+            let slot = self.lanes.len();
+            self.lanes.push(Lane::new(p.id, p.stop, 0.0)); // unorm2 set below
+            self.write_query(slot, &p.u);
+        }
+    }
+
+    /// Install `u` into lane `slot`: `v_curr` column = normalized query,
+    /// `v_prev` column = 0, recurrence state fresh.
+    fn write_query(&mut self, slot: usize, u: &[f64]) {
+        let b = self.b;
+        let unorm2: f64 = u.iter().map(|x| x * x).sum();
+        debug_assert!(unorm2 > 0.0, "zero queries never reach a lane");
+        let inv_norm = 1.0 / unorm2.sqrt();
+        for (i, &ui) in u.iter().enumerate() {
+            self.v_prev[i * b + slot] = 0.0;
+            self.v_curr[i * b + slot] = ui * inv_norm;
+        }
+        let lane = &mut self.lanes[slot];
+        let (id, stop) = (lane.id, lane.stop);
+        *lane = Lane::new(id, stop, unorm2);
+    }
+
+    /// Widen the panels by `m` lanes (in-place backward repack: for each
+    /// row the write offset `i * new_b + l` is ≥ the read offset
+    /// `i * b + l`, so iterating rows and lanes in descending order never
+    /// clobbers unread data).
+    fn grow(&mut self, m: usize) {
+        let (n, ob) = (self.n, self.b);
+        let nb = ob + m;
+        for panel in [&mut self.v_prev, &mut self.v_curr] {
+            panel.resize(n * nb, 0.0);
+            for i in (0..n).rev() {
+                for l in (0..ob).rev() {
+                    panel[i * nb + l] = panel[i * ob + l];
+                }
+                for l in ob..nb {
+                    panel[i * nb + l] = 0.0;
+                }
+            }
+        }
+        self.w.resize(n * nb, 0.0);
+        self.w.fill(0.0);
+        self.b = nb;
+    }
+
+    /// Drop the lanes *not* listed in `keep` (ascending old slot indices);
+    /// forward in-place repack — the mirror argument of [`BlockGql::grow`].
+    fn compact(&mut self, keep: &[usize]) {
+        let (n, ob) = (self.n, self.b);
+        let nb = keep.len();
+        for panel in [&mut self.v_prev, &mut self.v_curr] {
+            for i in 0..n {
+                for (nl, &ol) in keep.iter().enumerate() {
+                    panel[i * nb + nl] = panel[i * ob + ol];
+                }
+            }
+            panel.truncate(n * nb);
+        }
+        self.w.truncate(n * nb);
+        let old = std::mem::take(&mut self.lanes);
+        let mut it = keep.iter().peekable();
+        for (slot, lane) in old.into_iter().enumerate() {
+            if it.peek() == Some(&&slot) {
+                it.next();
+                self.lanes.push(lane);
+            }
+        }
+        self.b = nb;
+    }
+
+    /// One lockstep iteration: a single panel sweep of the operator plus
+    /// per-lane O(1) recurrences. Completed lanes are emitted, refilled
+    /// from the queue in place, or compacted away.
+    fn sweep(&mut self) {
+        let (n, b) = (self.n, self.b);
+        debug_assert!(b > 0);
+        self.op.matvec_multi(&self.v_curr, &mut self.w, b);
+        self.sweeps += 1;
+
+        let max_iters = self.opts.max_iters;
+        let mut finished: Vec<(usize, Option<bool>)> = Vec::new();
+        for l in 0..b {
+            let lane = &mut self.lanes[l];
+            lane.iter += 1;
+
+            // --- Lanczos step on column l (same op order as Gql::step) ---
+            let mut alpha = 0.0;
+            for i in 0..n {
+                alpha += self.v_curr[i * b + l] * self.w[i * b + l];
+            }
+            for i in 0..n {
+                let k = i * b + l;
+                self.w[k] -= alpha * self.v_curr[k] + lane.beta_prev * self.v_prev[k];
+            }
+            let mut beta2_acc = 0.0;
+            for i in 0..n {
+                let wk = self.w[i * b + l];
+                beta2_acc += wk * wk;
+            }
+            let beta = beta2_acc.sqrt();
+
+            // --- bound recurrences (verbatim from the scalar engine) ---
+            if lane.iter == 1 {
+                lane.g = lane.unorm2 / alpha;
+                lane.c = 1.0;
+                lane.delta = alpha;
+                lane.d_lr = alpha - self.opts.lam_min;
+                lane.d_rr = alpha - self.opts.lam_max;
+            } else {
+                let bp2 = lane.beta_prev * lane.beta_prev;
+                lane.g += lane.unorm2 * bp2 * lane.c * lane.c
+                    / (lane.delta * (alpha * lane.delta - bp2));
+                lane.c *= lane.beta_prev / lane.delta;
+                let delta_new = alpha - bp2 / lane.delta;
+                lane.d_lr = alpha - self.opts.lam_min - bp2 / lane.d_lr;
+                lane.d_rr = alpha - self.opts.lam_max - bp2 / lane.d_rr;
+                lane.delta = delta_new;
+            }
+
+            let breakdown = !(beta > Gql::BREAKDOWN_TOL * alpha.abs().max(1.0));
+            let bounds = if breakdown {
+                Bounds {
+                    iter: lane.iter,
+                    gauss: lane.g,
+                    radau_lower: lane.g,
+                    radau_upper: lane.g,
+                    lobatto: lane.g,
+                    exact: true,
+                }
+            } else {
+                let (g_rr, g_lr, g_lo) = corrections(lane, &self.opts, beta);
+                Bounds {
+                    iter: lane.iter,
+                    gauss: lane.g,
+                    radau_lower: g_rr,
+                    radau_upper: g_lr,
+                    lobatto: g_lo,
+                    exact: false,
+                }
+            };
+
+            if !breakdown {
+                // advance the lane's Lanczos column in place
+                let inv_beta = 1.0 / beta;
+                for i in 0..n {
+                    let k = i * b + l;
+                    self.v_prev[k] = self.v_curr[k];
+                    self.v_curr[k] = self.w[k] * inv_beta;
+                }
+                lane.beta_prev = beta;
+            }
+            if self.record_history {
+                lane.history.push(bounds);
+            }
+            lane.last = Some(bounds);
+            if let Some(decision) = stop_decision(&bounds, &lane.stop, n, max_iters) {
+                finished.push((l, decision));
+            }
+        }
+
+        // --- emit finished lanes; refill in place while the queue lasts ---
+        let mut dead: Vec<usize> = Vec::new();
+        for (slot, decision) in finished {
+            {
+                let lane = &mut self.lanes[slot];
+                self.done.push(BlockResult {
+                    id: lane.id,
+                    bounds: lane.last.expect("finished lane has bounds"),
+                    decision,
+                    iters: lane.iter,
+                    history: std::mem::take(&mut lane.history),
+                });
+            }
+            if let Some(p) = self.pending.pop_front() {
+                self.lanes[slot] = Lane::new(p.id, p.stop, 0.0);
+                self.write_query(slot, &p.u);
+            } else {
+                dead.push(slot);
+            }
+        }
+        if !dead.is_empty() {
+            let keep: Vec<usize> = (0..b).filter(|s| !dead.contains(s)).collect();
+            self.compact(&keep);
+        }
+    }
+}
+
+/// Radau/Lobatto corrections from a lane's recurrence state — identical
+/// arithmetic to `Gql::corrections`.
+fn corrections(lane: &Lane, opts: &GqlOptions, beta: f64) -> (f64, f64, f64) {
+    let (lam_min, lam_max) = (opts.lam_min, opts.lam_max);
+    let beta2 = beta * beta;
+    let a_lr = lam_min + beta2 / lane.d_lr;
+    let a_rr = lam_max + beta2 / lane.d_rr;
+    let denom = lane.d_rr - lane.d_lr;
+    let b_lo2 = (lam_max - lam_min) * lane.d_lr * lane.d_rr / denom;
+    let a_lo = (lam_max * lane.d_rr - lam_min * lane.d_lr) / denom;
+    let c2 = lane.c * lane.c;
+    let k = lane.unorm2 * c2 / lane.delta;
+    let g_rr = lane.g + k * beta2 / (a_rr * lane.delta - beta2);
+    let g_lr = lane.g + k * beta2 / (a_lr * lane.delta - beta2);
+    let g_lo = lane.g + k * b_lo2 / (a_lo * lane.delta - b_lo2);
+    (g_rr, g_lr, g_lo)
+}
+
+#[inline]
+fn is_zero(u: &[f64]) -> bool {
+    u.iter().all(|&x| x == 0.0)
+}
+
+/// Immediately-exact result for a zero query (`BIF = 0`).
+fn zero_result(id: usize, stop: &StopRule) -> BlockResult {
+    let bounds = Bounds {
+        iter: 0,
+        gauss: 0.0,
+        radau_lower: 0.0,
+        radau_upper: 0.0,
+        lobatto: 0.0,
+        exact: true,
+    };
+    let decision = match *stop {
+        StopRule::Threshold(t) => Some(t < 0.0),
+        _ => None,
+    };
+    BlockResult { id, bounds, decision, iters: 0, history: Vec::new() }
+}
+
+/// One-shot convenience: run `queries` (pairs of query vector and stop
+/// rule) through a width-`width` block engine; results in push order.
+/// Queries are borrowed so timed comparisons against the scalar path
+/// don't pay per-query clones.
+pub fn block_solve<'q>(
+    op: &dyn SymOp,
+    opts: GqlOptions,
+    width: usize,
+    queries: impl IntoIterator<Item = (&'q [f64], StopRule)>,
+) -> Vec<BlockResult> {
+    let mut engine = BlockGql::new(op, opts, width);
+    for (u, stop) in queries {
+        engine.push(u, stop);
+    }
+    engine.run_all()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::random_sparse_spd;
+    use crate::quadrature::judge_threshold;
+    use crate::util::prop::forall;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn width_one_is_bit_identical_to_scalar() {
+        forall(15, 0xB70C, |rng| {
+            let n = 4 + rng.below(24);
+            let (a, w) = random_sparse_spd(rng, n, 0.3, 0.05);
+            let u: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let opts = GqlOptions::new(w.lo, w.hi);
+            let scalar = run_scalar(&a, &u, opts, StopRule::Exhaust, true);
+            let mut eng = BlockGql::new(&a, opts, 1).record_history(true);
+            eng.push(&u, StopRule::Exhaust);
+            let block = eng.run_all().pop().unwrap();
+            assert_eq!(scalar.history.len(), block.history.len());
+            for (s, b) in scalar.history.iter().zip(&block.history) {
+                assert_eq!(s.gauss.to_bits(), b.gauss.to_bits());
+                assert_eq!(s.radau_lower.to_bits(), b.radau_lower.to_bits());
+                assert_eq!(s.radau_upper.to_bits(), b.radau_upper.to_bits());
+                assert_eq!(s.lobatto.to_bits(), b.lobatto.to_bits());
+                assert_eq!(s.exact, b.exact);
+            }
+        });
+    }
+
+    #[test]
+    fn thresholds_match_scalar_judge_decisions() {
+        forall(10, 0xB71D, |rng| {
+            let n = 6 + rng.below(20);
+            let (a, w) = random_sparse_spd(rng, n, 0.4, 0.05);
+            let opts = GqlOptions::new(w.lo, w.hi);
+            let mut eng = BlockGql::new(&a, opts, 4);
+            let mut want = Vec::new();
+            for _ in 0..9 {
+                let u: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+                let exact = crate::quadrature::cg::cg_bif_estimate(&a, &u, 1e-14, 10 * n);
+                let t = exact * (0.5 + rng.f64());
+                let (dec, _) = judge_threshold(&a, &u, t, opts);
+                eng.push(&u, StopRule::Threshold(t));
+                want.push(dec);
+            }
+            let got = eng.run_all();
+            assert_eq!(got.len(), want.len());
+            for (r, w) in got.iter().zip(&want) {
+                assert_eq!(r.decision, Some(*w), "lane {}", r.id);
+            }
+        });
+    }
+
+    #[test]
+    fn refill_and_compaction_preserve_per_query_results() {
+        // more queries than lanes, stopping at different iterations, so
+        // lanes exit, refill from the queue, and finally compact
+        let mut rng = Rng::new(0xB72E);
+        let n = 40;
+        let (a, w) = random_sparse_spd(&mut rng, n, 0.1, 0.05);
+        let opts = GqlOptions::new(w.lo, w.hi);
+        let rules = [
+            StopRule::Iters(1),
+            StopRule::Iters(7),
+            StopRule::GapRel(1e-4),
+            StopRule::Exhaust,
+        ];
+        let queries: Vec<(Vec<f64>, StopRule)> = (0..13)
+            .map(|i| {
+                let u: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+                (u, rules[i % rules.len()])
+            })
+            .collect();
+        let block = block_solve(&a, opts, 3, queries.iter().map(|(u, s)| (u.as_slice(), *s)));
+        assert_eq!(block.len(), queries.len());
+        for (r, (u, stop)) in block.iter().zip(&queries) {
+            let scalar = run_scalar(&a, u, opts, *stop, false);
+            assert_eq!(r.iters, scalar.iters, "query {}", r.id);
+            assert_eq!(r.bounds.gauss.to_bits(), scalar.bounds.gauss.to_bits());
+            assert_eq!(
+                r.bounds.radau_upper.to_bits(),
+                scalar.bounds.radau_upper.to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn zero_query_resolves_immediately() {
+        let mut rng = Rng::new(0xB73F);
+        let (a, w) = random_sparse_spd(&mut rng, 10, 0.3, 0.05);
+        let mut eng = BlockGql::new(&a, GqlOptions::new(w.lo, w.hi), 2);
+        let id = eng.push(&vec![0.0; 10], StopRule::Threshold(-1.0));
+        let u: Vec<f64> = (0..10).map(|_| rng.normal()).collect();
+        eng.push(&u, StopRule::Exhaust);
+        let out = eng.run_all();
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].id, id);
+        assert_eq!(out[0].iters, 0);
+        assert_eq!(out[0].decision, Some(true), "-1 < 0 exactly");
+        assert!(out[0].bounds.exact);
+    }
+
+    #[test]
+    fn max_iters_is_clamped_to_dimension() {
+        let mut rng = Rng::new(0xB740);
+        let (a, w) = random_sparse_spd(&mut rng, 8, 0.5, 0.05);
+        let eng = BlockGql::new(&a, GqlOptions::new(w.lo, w.hi), 2);
+        assert_eq!(eng.opts.max_iters, 8);
+    }
+
+    #[test]
+    fn panel_stays_dense_while_queue_lasts() {
+        // 8 one-iteration queries through width 4: every sweep should
+        // advance a full panel, so 2 sweeps finish everything
+        let mut rng = Rng::new(0xB751);
+        let n = 24;
+        let (a, w) = random_sparse_spd(&mut rng, n, 0.2, 0.05);
+        let mut eng = BlockGql::new(&a, GqlOptions::new(w.lo, w.hi), 4);
+        for _ in 0..8 {
+            let u: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            eng.push(&u, StopRule::Iters(1));
+        }
+        let out = eng.run_all();
+        assert_eq!(out.len(), 8);
+        assert_eq!(eng.sweeps(), 2, "refill must keep the panel dense");
+    }
+
+    #[test]
+    #[should_panic(expected = "reorthogonalization")]
+    fn reorth_rejected() {
+        let mut rng = Rng::new(0xB762);
+        let (a, w) = random_sparse_spd(&mut rng, 6, 0.5, 0.05);
+        let opts = GqlOptions::new(w.lo, w.hi).with_reorth(Reorth::Full);
+        let _ = BlockGql::new(&a, opts, 2);
+    }
+}

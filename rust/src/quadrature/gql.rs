@@ -136,8 +136,13 @@ pub struct Gql<'a> {
 
 impl<'a> Gql<'a> {
     /// Start a GQL run on `u^T op^{-1} u`. `u` must be nonzero.
-    pub fn new(op: &'a dyn SymOp, u: &[f64], opts: GqlOptions) -> Self {
+    ///
+    /// `opts.max_iters` is clamped to the operator dimension (the Krylov
+    /// space is exhausted after at most `n` steps — Lemma 15 — so larger
+    /// budgets can never be spent) and floored at 1.
+    pub fn new(op: &'a dyn SymOp, u: &[f64], mut opts: GqlOptions) -> Self {
         let n = op.dim();
+        opts.max_iters = opts.max_iters.min(n).max(1);
         assert_eq!(u.len(), n, "dimension mismatch");
         assert!(
             opts.lam_min > 0.0 && opts.lam_max > opts.lam_min,
@@ -295,8 +300,9 @@ impl<'a> Gql<'a> {
         bounds
     }
 
-    /// Breakdown threshold relative to the Ritz scale.
-    const BREAKDOWN_TOL: f64 = 1e-13;
+    /// Breakdown threshold relative to the Ritz scale (shared with the
+    /// lockstep lanes of `quadrature::block`).
+    pub(crate) const BREAKDOWN_TOL: f64 = 1e-13;
 
     /// Run `k` iterations (or until exhaustion) collecting the history.
     pub fn run(&mut self, k: usize) -> Vec<Bounds> {
@@ -516,6 +522,18 @@ pub mod tests {
             q.step();
         }
         assert_eq!(q.iterations(), 3);
+    }
+
+    #[test]
+    fn max_iters_clamped_to_dimension() {
+        let mut rng = Rng::new(0x609);
+        let (a, u, l1, ln, _) = setup(&mut rng, 12);
+        // default budget is usize::MAX; Krylov exhaustion caps useful work
+        // at n, so the constructor clamps
+        let q = Gql::new(&a, &u, GqlOptions::new(l1 * 0.99, ln * 1.01));
+        assert_eq!(q.opts.max_iters, 12);
+        let q0 = Gql::new(&a, &u, GqlOptions::new(l1 * 0.99, ln * 1.01).with_max_iters(0));
+        assert_eq!(q0.opts.max_iters, 1, "floor at one iteration");
     }
 
     #[test]

@@ -1,13 +1,16 @@
 //! The paper's core: Gauss-Quadrature-Lanczos bounds on bilinear inverse
-//! forms, the retrospective judges built on them, conjugate gradients
+//! forms, the block engine that batches many such runs over one shared
+//! operator, the retrospective judges built on them, conjugate gradients
 //! (both a baseline and the theory cross-check of Thm. 12), and Jacobi
 //! preconditioning (§5.4).
 
+pub mod block;
 pub mod cg;
 pub mod gql;
 pub mod judge;
 pub mod precond;
 
+pub use block::{block_solve, run_scalar, BlockGql, BlockResult, StopRule};
 pub use cg::{cg_solve, CgResult};
 pub use gql::{bif_bounds, Bounds, Gql, GqlOptions, Reorth};
 pub use judge::{

@@ -1,0 +1,122 @@
+//! Backend-independent runtime types: the per-iteration bound history an
+//! artifact execution returns, and the identity-padding helper. Shared by
+//! the PJRT backend (`pjrt`, behind the `pjrt` feature) and the
+//! native-only stub (`null`).
+
+use crate::quadrature::Bounds;
+
+/// Per-iteration bound history returned by one artifact execution.
+#[derive(Clone, Debug)]
+pub struct BoundsHistory {
+    pub gauss: Vec<f64>,
+    pub radau_lower: Vec<f64>,
+    pub radau_upper: Vec<f64>,
+    pub lobatto: Vec<f64>,
+}
+
+impl BoundsHistory {
+    pub fn len(&self) -> usize {
+        self.gauss.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.gauss.is_empty()
+    }
+
+    /// View iteration `i` (0-based) as a [`Bounds`] snapshot.
+    pub fn at(&self, i: usize) -> Bounds {
+        Bounds {
+            iter: i + 1,
+            gauss: self.gauss[i],
+            radau_lower: self.radau_lower[i],
+            radau_upper: self.radau_upper[i],
+            lobatto: self.lobatto[i],
+            // fixed-iteration artifacts don't flag breakdown; judges treat
+            // a collapsed bracket as exact
+            exact: (self.radau_upper[i] - self.radau_lower[i]).abs()
+                <= 1e-6 * self.gauss[i].abs().max(1e-30),
+        }
+    }
+
+    /// First iteration (0-based) whose bounds decide `t < BIF`, plus the
+    /// decision; `None` if the whole history is inconclusive.
+    pub fn first_decision(&self, t: f64) -> Option<(usize, bool)> {
+        for i in 0..self.len() {
+            let b = self.at(i);
+            if t < b.radau_lower {
+                return Some((i, true));
+            }
+            if t >= b.radau_upper {
+                return Some((i, false));
+            }
+        }
+        None
+    }
+}
+
+/// Identity-pad a dense query to `n_pad` (see model.pad_query; exact
+/// invariance is asserted in python tests and re-checked in
+/// rust/tests/integration_runtime.rs).
+pub fn pad_query(a: &[f32], u: &[f32], n: usize, n_pad: usize) -> (Vec<f32>, Vec<f32>) {
+    assert!(n_pad >= n);
+    let mut ap = vec![0.0f32; n_pad * n_pad];
+    for i in 0..n_pad {
+        ap[i * n_pad + i] = 1.0;
+    }
+    for i in 0..n {
+        ap[i * n_pad..i * n_pad + n].copy_from_slice(&a[i * n..(i + 1) * n]);
+    }
+    let mut up = vec![0.0f32; n_pad];
+    up[..n].copy_from_slice(u);
+    (ap, up)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pad_query_layout() {
+        let a = [1.0f32, 2.0, 3.0, 4.0]; // [[1,2],[3,4]]
+        let u = [5.0f32, 6.0];
+        let (ap, up) = pad_query(&a, &u, 2, 4);
+        assert_eq!(ap.len(), 16);
+        // original block
+        assert_eq!(ap[0], 1.0);
+        assert_eq!(ap[1], 2.0);
+        assert_eq!(ap[4], 3.0);
+        assert_eq!(ap[5], 4.0);
+        // identity tail
+        assert_eq!(ap[2 * 4 + 2], 1.0);
+        assert_eq!(ap[3 * 4 + 3], 1.0);
+        assert_eq!(ap[2 * 4 + 3], 0.0);
+        assert_eq!(up, vec![5.0, 6.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn history_first_decision() {
+        let h = BoundsHistory {
+            gauss: vec![1.0, 2.0, 3.0],
+            radau_lower: vec![1.5, 2.5, 3.5],
+            radau_upper: vec![10.0, 6.0, 3.8],
+            lobatto: vec![11.0, 7.0, 4.0],
+        };
+        // t below the first lower bound: decided true at iteration 0
+        assert_eq!(h.first_decision(1.0), Some((0, true)));
+        // t above all upper bounds: decided false once upper ≤ t
+        assert_eq!(h.first_decision(6.5), Some((1, false)));
+        // t in the final bracket: undecidable
+        assert_eq!(h.first_decision(3.6), None);
+    }
+
+    #[test]
+    fn history_at_marks_collapsed_bracket_exact() {
+        let h = BoundsHistory {
+            gauss: vec![2.0],
+            radau_lower: vec![2.0],
+            radau_upper: vec![2.0],
+            lobatto: vec![2.0],
+        };
+        assert!(h.at(0).exact);
+    }
+}

@@ -1,8 +1,27 @@
-//! PJRT runtime: loads the AOT artifacts produced by
+//! Runtime layer: loads the AOT artifacts produced by
 //! `python/compile/aot.py` (HLO text + manifest) and executes them on the
 //! CPU PJRT client. Python never runs here — the artifacts are
 //! self-contained XLA programs.
+//!
+//! The PJRT backend needs the `xla` (and `anyhow`) crates, which only
+//! exist in the image's vendored registry; it is gated behind the `pjrt`
+//! feature. Default builds get the [`null`] stub, whose `GqlRuntime::load`
+//! always fails — the coordinator then serves everything through the
+//! native GQL paths (scalar and coalesced block), so the full stack works
+//! offline.
 
+pub mod history;
+
+#[cfg(feature = "pjrt")]
 pub mod pjrt;
 
-pub use pjrt::{BoundsHistory, GqlArtifact, GqlRuntime};
+#[cfg(not(feature = "pjrt"))]
+pub mod null;
+
+pub use history::{pad_query, BoundsHistory};
+
+#[cfg(feature = "pjrt")]
+pub use pjrt::{GqlArtifact, GqlRuntime};
+
+#[cfg(not(feature = "pjrt"))]
+pub use null::{GqlArtifact, GqlRuntime, RuntimeUnavailable};

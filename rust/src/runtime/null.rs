@@ -1,0 +1,104 @@
+//! Native-only runtime stub, compiled when the `pjrt` feature is off
+//! (the `xla` crate and its PJRT client are not in the offline crate
+//! set). Every entry point reports [`RuntimeUnavailable`], so the
+//! coordinator degrades to the native GQL path exactly as it does for a
+//! missing artifacts directory — the whole serving stack stays usable.
+
+use super::history::{pad_query, BoundsHistory};
+use crate::config::run::ManifestEntry;
+use std::fmt;
+use std::path::Path;
+
+/// The PJRT backend was not compiled in.
+#[derive(Clone, Copy, Debug)]
+pub struct RuntimeUnavailable;
+
+impl fmt::Display for RuntimeUnavailable {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "built without the `pjrt` feature; native GQL only")
+    }
+}
+
+impl std::error::Error for RuntimeUnavailable {}
+
+/// One compiled bucket (never instantiated in stub builds; the type
+/// exists so the coordinator's dispatch code compiles unchanged).
+pub struct GqlArtifact {
+    pub meta: ManifestEntry,
+}
+
+impl GqlArtifact {
+    pub fn execute(
+        &self,
+        _a: &[f32],
+        _u: &[f32],
+        _lam_min: f32,
+        _lam_max: f32,
+    ) -> Result<BoundsHistory, RuntimeUnavailable> {
+        Err(RuntimeUnavailable)
+    }
+
+    pub fn execute_batch(
+        &self,
+        _a: &[f32],
+        _u: &[f32],
+        _lam_min: &[f32],
+        _lam_max: &[f32],
+    ) -> Result<Vec<BoundsHistory>, RuntimeUnavailable> {
+        Err(RuntimeUnavailable)
+    }
+}
+
+/// Stub runtime: loading always fails, so callers fall back natively.
+pub struct GqlRuntime {
+    artifacts: Vec<GqlArtifact>,
+}
+
+impl GqlRuntime {
+    pub fn load(_dir: &Path) -> Result<Self, RuntimeUnavailable> {
+        Err(RuntimeUnavailable)
+    }
+
+    pub fn platform(&self) -> String {
+        "disabled".to_string()
+    }
+
+    pub fn artifacts(&self) -> &[GqlArtifact] {
+        &self.artifacts
+    }
+
+    pub fn bucket_for(&self, _dim: usize) -> Option<&GqlArtifact> {
+        None
+    }
+
+    pub fn batch_bucket_for(&self, _dim: usize) -> Option<&GqlArtifact> {
+        None
+    }
+
+    /// Same padding helper as the real backend (pure, shared).
+    pub fn pad_query(a: &[f32], u: &[f32], n: usize, n_pad: usize) -> (Vec<f32>, Vec<f32>) {
+        pad_query(a, u, n, n_pad)
+    }
+
+    pub fn gql_bounds(
+        &self,
+        _a: &[f32],
+        _u: &[f32],
+        _n: usize,
+        _lam_min: f32,
+        _lam_max: f32,
+    ) -> Result<BoundsHistory, RuntimeUnavailable> {
+        Err(RuntimeUnavailable)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_reports_unavailable() {
+        let err = GqlRuntime::load(Path::new("artifacts")).err().unwrap();
+        assert!(err.to_string().contains("pjrt"));
+    }
+}

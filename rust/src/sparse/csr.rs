@@ -175,6 +175,31 @@ impl SymOp for Csr {
     fn diagonal(&self) -> Vec<f64> {
         (0..self.n).map(|i| self.get(i, i)).collect()
     }
+
+    /// True spmm over an interleaved panel: one CSR traversal feeds all
+    /// `b` lanes, turning `b` row-value loads into one load reused across
+    /// a contiguous lane row (the cache win `quadrature::block` is built
+    /// on). Per lane the nonzeros are accumulated in the same order as
+    /// the scalar [`SymOp::matvec`], so lane results are bit-identical to
+    /// `b` independent matvecs.
+    fn matvec_multi(&self, x: &[f64], y: &mut [f64], b: usize) {
+        debug_assert_eq!(x.len(), self.n * b);
+        debug_assert_eq!(y.len(), self.n * b);
+        if b == 1 {
+            return self.matvec(x, y);
+        }
+        for i in 0..self.n {
+            let yrow = &mut y[i * b..(i + 1) * b];
+            yrow.fill(0.0);
+            for k in self.row_ptr[i]..self.row_ptr[i + 1] {
+                let v = self.values[k];
+                let xrow = &x[self.col_idx[k] * b..self.col_idx[k] * b + b];
+                for (yl, &xl) in yrow.iter_mut().zip(xrow) {
+                    *yl += v * xl;
+                }
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -230,6 +255,34 @@ mod tests {
             d.matvec(&x, &mut yd);
             for (s, dd) in ys.iter().zip(&yd) {
                 assert_close(*s, *dd, 1e-12, 1e-12);
+            }
+        });
+    }
+
+    #[test]
+    fn matvec_multi_is_bit_identical_to_scalar_lanes() {
+        forall(25, 0xC5B, |rng| {
+            let n = 1 + rng.below(40);
+            let b = 1 + rng.below(9);
+            let a = random_sym_csr(rng, n, 0.3);
+            // interleaved panel [i * b + l]
+            let x: Vec<f64> = (0..n * b).map(|_| rng.normal()).collect();
+            let mut y = vec![0.0; n * b];
+            a.matvec_multi(&x, &mut y, b);
+            let mut xs = vec![0.0; n];
+            let mut ys = vec![0.0; n];
+            for l in 0..b {
+                for i in 0..n {
+                    xs[i] = x[i * b + l];
+                }
+                a.matvec(&xs, &mut ys);
+                for i in 0..n {
+                    assert_eq!(
+                        y[i * b + l].to_bits(),
+                        ys[i].to_bits(),
+                        "lane {l} row {i} not bit-identical"
+                    );
+                }
             }
         });
     }

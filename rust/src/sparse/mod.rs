@@ -24,4 +24,36 @@ pub trait SymOp {
     /// The diagonal of the operator (used by Jacobi preconditioning and
     /// Gershgorin bounds).
     fn diagonal(&self) -> Vec<f64>;
+
+    /// Multi-vector product `Y = A X` over an interleaved panel of `b`
+    /// column vectors: `x[i * b + l]` is component `i` of lane `l`, and
+    /// likewise for `y`. One panel sweep feeds every lane of a
+    /// [`crate::quadrature::block::BlockGql`] run from a single traversal
+    /// of the operator.
+    ///
+    /// The default implementation de-interleaves each lane and falls back
+    /// to `b` scalar [`SymOp::matvec`] calls, so every existing operator
+    /// keeps working; per-lane results are then *bit-identical* to the
+    /// scalar path. Specialized impls ([`Csr`], [`SubmatrixView`]) stream
+    /// the panel directly (a true spmm) while preserving the per-lane
+    /// floating-point accumulation order of their scalar `matvec`.
+    fn matvec_multi(&self, x: &[f64], y: &mut [f64], b: usize) {
+        let n = self.dim();
+        debug_assert_eq!(x.len(), n * b, "panel x shape");
+        debug_assert_eq!(y.len(), n * b, "panel y shape");
+        if b == 1 {
+            return self.matvec(x, y);
+        }
+        let mut xs = vec![0.0; n];
+        let mut ys = vec![0.0; n];
+        for l in 0..b {
+            for i in 0..n {
+                xs[i] = x[i * b + l];
+            }
+            self.matvec(&xs, &mut ys);
+            for i in 0..n {
+                y[i * b + l] = ys[i];
+            }
+        }
+    }
 }

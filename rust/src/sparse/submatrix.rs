@@ -128,6 +128,32 @@ impl SymOp for SubmatrixView<'_> {
     fn diagonal(&self) -> Vec<f64> {
         self.idx.iter().map(|&g| self.parent.get(g, g)).collect()
     }
+
+    /// Panel sweep through the parent rows: each parent nonzero visited
+    /// once per sweep regardless of the lane count (the block-DPP hot
+    /// path: scoring many candidates against one working set `Y`). Lane
+    /// accumulation order matches the scalar [`SymOp::matvec`] exactly.
+    fn matvec_multi(&self, x: &[f64], y: &mut [f64], b: usize) {
+        let k = self.idx.len();
+        debug_assert_eq!(x.len(), k * b);
+        debug_assert_eq!(y.len(), k * b);
+        if b == 1 {
+            return self.matvec(x, y);
+        }
+        for (li, &gi) in self.idx.iter().enumerate() {
+            let yrow = &mut y[li * b..(li + 1) * b];
+            yrow.fill(0.0);
+            for (gj, v) in self.parent.row(gi) {
+                let lj = self.pos[gj];
+                if lj != usize::MAX {
+                    let xrow = &x[lj * b..lj * b + b];
+                    for (yl, &xl) in yrow.iter_mut().zip(xrow) {
+                        *yl += v * xl;
+                    }
+                }
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -169,6 +195,32 @@ mod tests {
             }
             assert_eq!(view.nnz(), mat.nnz());
             assert_eq!(view.diagonal(), mat.diagonal());
+        });
+    }
+
+    #[test]
+    fn view_matvec_multi_matches_scalar_lanes() {
+        forall(25, 0x5AC, |rng| {
+            let n = 4 + rng.below(40);
+            let a = random_sym_csr(rng, n, 0.3);
+            let k = 1 + rng.below(n - 1);
+            let b = 1 + rng.below(7);
+            let idx = rng.sample_indices(n, k);
+            let view = SubmatrixView::new(&a, &idx);
+            let x: Vec<f64> = (0..k * b).map(|_| rng.normal()).collect();
+            let mut y = vec![0.0; k * b];
+            view.matvec_multi(&x, &mut y, b);
+            let mut xs = vec![0.0; k];
+            let mut ys = vec![0.0; k];
+            for l in 0..b {
+                for i in 0..k {
+                    xs[i] = x[i * b + l];
+                }
+                view.matvec(&xs, &mut ys);
+                for i in 0..k {
+                    assert_eq!(y[i * b + l].to_bits(), ys[i].to_bits(), "lane {l} row {i}");
+                }
+            }
         });
     }
 

@@ -64,6 +64,34 @@ fn unknown_command_exits_2_with_usage() {
 }
 
 #[test]
+fn block_sweep_writes_csv_and_stays_exact() {
+    let out = tmp_out("block");
+    // --scale shrinks the matrix so the sweep stays sub-second
+    let o = bin()
+        .args([
+            "block",
+            "--out",
+            out.to_str().unwrap(),
+            "--scale",
+            "40",
+            "--ks",
+            "2,4",
+            "--block-width",
+            "4",
+        ])
+        .output()
+        .expect("run block");
+    assert!(o.status.success(), "stderr: {}", String::from_utf8_lossy(&o.stderr));
+    let csv = std::fs::read_to_string(out.join("block.csv")).expect("csv");
+    assert!(csv.starts_with("n,density,nnz,k,width,iters"));
+    assert_eq!(csv.lines().count(), 1 + 2, "one row per k");
+    // exactness contract: every row reports zero deviation
+    for line in csv.lines().skip(1) {
+        assert!(line.ends_with("0.0e0"), "max_dev not zero: {line}");
+    }
+}
+
+#[test]
 fn config_file_overrides_defaults() {
     let out = tmp_out("cfg");
     std::fs::create_dir_all(&out).unwrap();

@@ -176,7 +176,7 @@ fn batched_artifact_matches_single_lane_for_each_query() {
 #[test]
 fn service_with_artifacts_is_oracle_correct_and_uses_pjrt() {
     let Some(dir) = artifacts_dir() else { return };
-    let svc = JudgeService::start(Some(dir), BatchPolicy::default(), 2);
+    let svc = JudgeService::start(Some(dir), BatchPolicy::default(), 2).expect("valid policy");
     let mut rng = Rng::new(0x2005);
     let mut pjrt_seen = false;
     for i in 0..40 {
@@ -192,6 +192,7 @@ fn service_with_artifacts_is_oracle_correct_and_uses_pjrt() {
             lam_min: (l1 * 0.99) as f32,
             lam_max: (ln * 1.01) as f32,
             t,
+            op_key: None,
         });
         assert_eq!(resp.decision, t < exact, "i={i} n={n}");
         if matches!(resp.path, RoutePath::Pjrt { .. }) {

@@ -1,0 +1,173 @@
+//! Block-engine property tests (ISSUE 1 satellite): `BlockGql` with
+//! `block_width = 1` must reproduce scalar `Gql` bound sequences to 1e-12
+//! on random SPD matrices, and mixed-convergence runs (lanes exiting at
+//! different iterations with queue refill) must match per-query scalar
+//! references.
+
+use gauss_bif::datasets::{random_sparse_spd, random_spd_exact};
+use gauss_bif::quadrature::block::{run_scalar, BlockGql, StopRule};
+use gauss_bif::quadrature::{judge_threshold, Gql, GqlOptions};
+use gauss_bif::sparse::SymOp;
+use gauss_bif::util::prop::{assert_close, forall};
+
+#[test]
+fn width_one_reproduces_scalar_gql_sequences_sparse() {
+    forall(30, 0xB10C01, |rng| {
+        let n = 4 + rng.below(40);
+        let (a, w) = random_sparse_spd(rng, n, 0.2, 0.05);
+        let u: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let opts = GqlOptions::new(w.lo, w.hi);
+
+        let mut q = Gql::new(&a, &u, opts);
+        let scalar = q.run(n);
+
+        let mut eng = BlockGql::new(&a, opts, 1).record_history(true);
+        eng.push(&u, StopRule::Exhaust);
+        let block = eng.run_all().pop().expect("one result");
+
+        assert_eq!(scalar.len(), block.history.len(), "sequence lengths differ");
+        for (s, b) in scalar.iter().zip(&block.history) {
+            assert_eq!(s.iter, b.iter);
+            assert_close(s.gauss, b.gauss, 1e-12, 1e-12);
+            assert_close(s.radau_lower, b.radau_lower, 1e-12, 1e-12);
+            assert_close(s.radau_upper, b.radau_upper, 1e-12, 1e-12);
+            assert_close(s.lobatto, b.lobatto, 1e-12, 1e-12);
+            assert_eq!(s.exact, b.exact);
+        }
+    });
+}
+
+#[test]
+fn width_one_reproduces_scalar_gql_sequences_dense_fallback() {
+    // DMat has no specialized matvec_multi: this exercises the SymOp
+    // default (de-interleave + scalar matvec) fallback path
+    forall(20, 0xB10C02, |rng| {
+        let n = 4 + rng.below(24);
+        let (a, l1, ln) = random_spd_exact(rng, n, 0.5, 0.2);
+        let u: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let opts = GqlOptions::new(l1 * 0.99, ln * 1.01);
+
+        let mut q = Gql::new(&a, &u, opts);
+        let scalar = q.run(n);
+        let op: &dyn SymOp = &a;
+        let mut eng = BlockGql::new(op, opts, 1).record_history(true);
+        eng.push(&u, StopRule::Exhaust);
+        let block = eng.run_all().pop().unwrap();
+
+        assert_eq!(scalar.len(), block.history.len());
+        for (s, b) in scalar.iter().zip(&block.history) {
+            assert_close(s.gauss, b.gauss, 1e-12, 1e-12);
+            assert_close(s.radau_lower, b.radau_lower, 1e-12, 1e-12);
+            assert_close(s.radau_upper, b.radau_upper, 1e-12, 1e-12);
+            assert_close(s.lobatto, b.lobatto, 1e-12, 1e-12);
+        }
+    });
+}
+
+#[test]
+fn wide_panels_reproduce_scalar_sequences_exactly() {
+    // every lane of a wide panel must still be bit-identical to its own
+    // scalar run — the exactness contract of the multi-vector kernels
+    forall(15, 0xB10C03, |rng| {
+        let n = 8 + rng.below(32);
+        let (a, w) = random_sparse_spd(rng, n, 0.3, 0.05);
+        let opts = GqlOptions::new(w.lo, w.hi);
+        let m = 2 + rng.below(9);
+        let width = 1 + rng.below(m);
+        let queries: Vec<Vec<f64>> = (0..m)
+            .map(|_| (0..n).map(|_| rng.normal()).collect())
+            .collect();
+        let mut eng = BlockGql::new(&a, opts, width).record_history(true);
+        for u in &queries {
+            eng.push(u, StopRule::Exhaust);
+        }
+        let results = eng.run_all();
+        assert_eq!(results.len(), m);
+        for (r, u) in results.iter().zip(&queries) {
+            let scalar = run_scalar(&a, u, opts, StopRule::Exhaust, true);
+            assert_eq!(scalar.history.len(), r.history.len(), "query {}", r.id);
+            for (s, b) in scalar.history.iter().zip(&r.history) {
+                assert_eq!(s.gauss.to_bits(), b.gauss.to_bits(), "query {}", r.id);
+                assert_eq!(s.radau_upper.to_bits(), b.radau_upper.to_bits());
+            }
+        }
+    });
+}
+
+#[test]
+fn mixed_convergence_with_queue_refill_matches_scalar_references() {
+    // lanes exit at wildly different iterations (hard thresholds decide in
+    // 1-2 steps, Exhaust lanes run to n) so the panel constantly refills
+    // from the queue; every query must still match its scalar reference
+    forall(10, 0xB10C04, |rng| {
+        let n = 16 + rng.below(32);
+        let (a, w) = random_sparse_spd(rng, n, 0.15, 0.05);
+        let opts = GqlOptions::new(w.lo, w.hi);
+        let m = 8 + rng.below(12);
+        let width = 2 + rng.below(4);
+
+        let mut queries: Vec<(Vec<f64>, StopRule)> = Vec::new();
+        for i in 0..m {
+            let u: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let stop = match i % 4 {
+                0 => {
+                    // easy threshold: decided in very few iterations
+                    let rough = gauss_bif::quadrature::cg::cg_bif_estimate(&a, &u, 1e-10, 4 * n);
+                    StopRule::Threshold(rough * 0.05)
+                }
+                1 => StopRule::Iters(1 + rng.below(3)),
+                2 => StopRule::GapRel(1e-3),
+                _ => StopRule::Exhaust,
+            };
+            queries.push((u, stop));
+        }
+
+        let mut eng = BlockGql::new(&a, opts, width);
+        for (u, stop) in &queries {
+            eng.push(u, *stop);
+        }
+        let results = eng.run_all();
+        assert_eq!(results.len(), m);
+
+        let mut iters_seen = std::collections::BTreeSet::new();
+        for (r, (u, stop)) in results.iter().zip(&queries) {
+            let scalar = run_scalar(&a, u, opts, *stop, false);
+            assert_eq!(r.iters, scalar.iters, "query {} iteration count", r.id);
+            assert_eq!(r.decision, scalar.decision, "query {} decision", r.id);
+            assert_eq!(
+                r.bounds.gauss.to_bits(),
+                scalar.bounds.gauss.to_bits(),
+                "query {} final gauss value",
+                r.id
+            );
+            iters_seen.insert(r.iters);
+        }
+        assert!(
+            iters_seen.len() > 1,
+            "test should exercise lanes exiting at different iterations"
+        );
+    });
+}
+
+#[test]
+fn block_threshold_decisions_agree_with_scalar_judges() {
+    forall(10, 0xB10C05, |rng| {
+        let n = 8 + rng.below(24);
+        let (a, w) = random_sparse_spd(rng, n, 0.3, 0.05);
+        let opts = GqlOptions::new(w.lo, w.hi);
+        let mut eng = BlockGql::new(&a, opts, 3);
+        let mut want = Vec::new();
+        for _ in 0..7 {
+            let u: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let exact = gauss_bif::quadrature::cg::cg_bif_estimate(&a, &u, 1e-14, 10 * n);
+            let t = exact * (0.4 + 1.2 * rng.f64());
+            let (dec, stats) = judge_threshold(&a, &u, t, opts);
+            eng.push(&u, StopRule::Threshold(t));
+            want.push((dec, stats.iters));
+        }
+        for (r, (dec, iters)) in eng.run_all().iter().zip(&want) {
+            assert_eq!(r.decision, Some(*dec), "query {} decision", r.id);
+            assert_eq!(r.iters, *iters, "query {} judge iterations", r.id);
+        }
+    });
+}
