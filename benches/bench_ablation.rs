@@ -4,7 +4,8 @@
 //!    Radau decides in ≤ iterations),
 //! 2. two-sided refinement: adaptive (§5.1) vs strict alternation,
 //! 3. Jacobi preconditioning (§5.4) on a badly-scaled kernel,
-//! 4. reorthogonalization cost,
+//! 4. reorthogonalization cost (scalar, and batched through the block
+//!    engine's per-lane bases — ISSUE 2),
 //! 5. DPP baseline strength: exact-Cholesky vs maintained-inverse vs
 //!    quadrature.
 //!
@@ -14,8 +15,8 @@ use gauss_bif::apps::{BifStrategy, DppConfig, DppSampler};
 use gauss_bif::datasets::random_sparse_spd;
 use gauss_bif::linalg::{sym_eigenvalues, Cholesky, DMat};
 use gauss_bif::quadrature::{
-    judge_ratio_policy, judge_threshold_src, BoundSource, Gql, GqlOptions, JacobiPrecond,
-    RefinePolicy, Reorth,
+    block_solve, judge_ratio_policy, judge_threshold_src, run_scalar, BoundSource, Gql,
+    GqlOptions, JacobiPrecond, RefinePolicy, Reorth, StopRule,
 };
 use gauss_bif::util::bench::{Bencher, Table};
 use gauss_bif::util::rng::Rng;
@@ -128,6 +129,45 @@ fn main() {
     println!(
         "overhead: {:.1}x\n",
         s_full.mean_ns / s_none.mean_ns
+    );
+
+    // --- 4b. block reorthogonalization: batched §5.4 lanes ---
+    println!("== ablation 4b: block reorthogonalization (8 queries, n=600, 48 iters) ==");
+    let k = 8usize;
+    let queries: Vec<Vec<f64>> = (0..k)
+        .map(|_| (0..n).map(|_| rng.normal()).collect())
+        .collect();
+    let reorth_opts = opts.with_reorth(Reorth::Full);
+    let stop = StopRule::Iters(48);
+    let s_scalar = b.bench("scalar_reorth_x8", || {
+        queries
+            .iter()
+            .map(|u| run_scalar(&a, u, reorth_opts, stop, false).bounds.gauss)
+            .sum::<f64>()
+    });
+    let s_block = b.bench("block_reorth_w8", || {
+        block_solve(&a, reorth_opts, k, queries.iter().map(|u| (u.as_slice(), stop)))
+            .iter()
+            .map(|r| r.bounds.gauss)
+            .sum::<f64>()
+    });
+    // the exactness contract extends to reorthogonalized lanes: the two
+    // paths must agree bit-for-bit, not just to rounding
+    let scalar_bits: Vec<u64> = queries
+        .iter()
+        .map(|u| run_scalar(&a, u, reorth_opts, stop, false).bounds.gauss.to_bits())
+        .collect();
+    let block_bits: Vec<u64> =
+        block_solve(&a, reorth_opts, k, queries.iter().map(|u| (u.as_slice(), stop)))
+            .iter()
+            .map(|r| r.bounds.gauss.to_bits())
+            .collect();
+    assert_eq!(scalar_bits, block_bits, "block reorth deviated from scalar");
+    println!(
+        "batched speedup: {:.2}x (scalar {:.0} ns vs block {:.0} ns)\n",
+        s_scalar.mean_ns / s_block.mean_ns,
+        s_scalar.mean_ns,
+        s_block.mean_ns
     );
 
     // --- 5. DPP baseline strength ---

@@ -87,6 +87,7 @@ fn main() {
                 lam_max: (ln * 1.01) as f32,
                 t: 1.0,
                 op_key: None,
+                reorth: false,
             }));
         }
         let mut pjrt = 0usize;

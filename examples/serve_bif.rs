@@ -75,6 +75,7 @@ fn main() {
             lam_max: (ln * 1.01) as f32,
             t,
             op_key: None, // fresh operator per request: nothing to coalesce
+            reorth: false,
         };
         let want = t < exact;
         pending.push((svc.submit(req), want));

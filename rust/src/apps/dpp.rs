@@ -24,7 +24,7 @@
 use super::BifStrategy;
 use crate::linalg::{Cholesky, MaintainedInverse};
 use crate::quadrature::block::{run_scalar, BlockGql, BlockResult, StopRule};
-use crate::quadrature::{judge_threshold, GqlOptions};
+use crate::quadrature::{judge_threshold, GqlOptions, Reorth};
 use crate::sparse::{Csr, SpectrumBounds, SubmatrixView};
 use crate::util::rng::Rng;
 
@@ -235,15 +235,26 @@ pub struct GreedyConfig {
     /// candidate-scoring panel width: 1 = scalar path (independent `Gql`
     /// runs), > 1 scores panels of candidates through [`BlockGql`]
     pub block_width: usize,
+    /// Lanczos reorthogonalization for candidate scoring (§5.4): use
+    /// [`Reorth::Full`] on ill-conditioned kernels where plain Lanczos
+    /// loses bound validity. Honored identically by the scalar and the
+    /// block path (the engines share one recurrence core), so selections
+    /// remain width-independent.
+    pub reorth: Reorth,
 }
 
 impl GreedyConfig {
     pub fn new(window: SpectrumBounds, k: usize) -> Self {
-        GreedyConfig { window, k, tol_rel: 1e-10, block_width: 16 }
+        GreedyConfig { window, k, tol_rel: 1e-10, block_width: 16, reorth: Reorth::None }
     }
 
     pub fn with_block_width(mut self, w: usize) -> Self {
         self.block_width = w;
+        self
+    }
+
+    pub fn with_reorth(mut self, r: Reorth) -> Self {
+        self.reorth = r;
         self
     }
 }
@@ -279,7 +290,7 @@ pub fn greedy_map(l: &Csr, cfg: &GreedyConfig) -> Vec<usize> {
     assert!(cfg.block_width >= 1, "block_width must be at least 1");
     let n = l.n;
     let k = cfg.k.min(n);
-    let opts = GqlOptions::new(cfg.window.lo, cfg.window.hi);
+    let opts = GqlOptions::new(cfg.window.lo, cfg.window.hi).with_reorth(cfg.reorth);
     let stop = StopRule::GapRel(cfg.tol_rel);
     let mut y: Vec<usize> = Vec::new(); // kept sorted (streaming views)
     let mut in_y = vec![false; n];
@@ -433,6 +444,25 @@ mod tests {
             let base = GreedyConfig::new(w, k).with_block_width(1);
             let scalar = greedy_map(&l, &base);
             for width in [2, 5, 8, 32] {
+                let block = greedy_map(&l, &base.with_block_width(width));
+                assert_eq!(scalar, block, "width {width} changed the selection");
+            }
+        });
+    }
+
+    #[test]
+    fn greedy_reorth_selects_identically_across_widths() {
+        // the reorth knob must not break the width-independence guarantee
+        // (scalar and block lanes share one recurrence core)
+        forall(4, 0xDA1, |rng| {
+            let n = 20 + rng.below(16);
+            let (l, w) = setup(rng, n, 0.2);
+            let k = 3 + rng.below(5);
+            let base = GreedyConfig::new(w, k)
+                .with_block_width(1)
+                .with_reorth(Reorth::Full);
+            let scalar = greedy_map(&l, &base);
+            for width in [3, 8] {
                 let block = greedy_map(&l, &base.with_block_width(width));
                 assert_eq!(scalar, block, "width {width} changed the selection");
             }

@@ -6,12 +6,15 @@
 //! `min{1, (L_uu − L_{u,Y'} L_{Y'}^{-1} L_{Y',u}) / (L_vv − L_{v,Y'} L_{Y'}^{-1} L_{Y',v})}`
 //!
 //! i.e. accept ⟺ `p·L_vv − L_uu < p·BIF_v − BIF_u`, which is exactly
-//! [`judge_ratio`] (Alg. 7) with its §5.1 tighten-the-looser-side
-//! refinement.
+//! Alg. 7's ratio judgement. The chain routes it through
+//! [`judge_ratio_block`]: both BIFs share the operator `L_{Y'}`, so the
+//! two quadratures advance from *one* width-2 `matvec_multi` panel sweep
+//! per iteration (the block engine's shared-operator speedup, ROADMAP
+//! follow-up) instead of two scalar traversals.
 
 use super::BifStrategy;
 use crate::linalg::Cholesky;
-use crate::quadrature::{judge_ratio, GqlOptions};
+use crate::quadrature::{judge_ratio_block, GqlOptions};
 use crate::sparse::{Csr, SpectrumBounds, SubmatrixView};
 use crate::util::rng::Rng;
 
@@ -127,9 +130,10 @@ impl<'a> KdppSampler<'a> {
                 let view = SubmatrixView::new(self.l, &idx); // idx pre-sorted
                 let uu = view.column_of(u);
                 let vv = view.column_of(v);
-                // accept ⟺ t < p·BIF_v − BIF_u  (§Perf: materialization
-                // tried and reverted — ~2 iterations don't amortize it)
-                let (ans, js) = judge_ratio(&view, &uu, &vv, t, p, self.cfg.gql_opts());
+                // accept ⟺ t < p·BIF_v − BIF_u, both sides fed by one
+                // paired panel sweep (§Perf: materialization tried and
+                // reverted — ~2 iterations don't amortize it)
+                let (ans, js) = judge_ratio_block(&view, &uu, &vv, t, p, self.cfg.gql_opts());
                 self.stats.judge_iters_total += js.iters;
                 ans
             }

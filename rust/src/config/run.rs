@@ -85,6 +85,10 @@ pub struct RunConfig {
     /// panel width for the block quadrature engine (candidate scoring,
     /// coalesced native serving, the `block` experiment); 1 = scalar
     pub block_width: usize,
+    /// full Lanczos reorthogonalization (§5.4) for quadrature runs driven
+    /// from this config (the `block` experiment sweep, `serve` requests);
+    /// JSON accepts a bool or the strings "full"/"none"
+    pub reorth: bool,
     /// extra free-form knobs
     pub extra: BTreeMap<String, String>,
 }
@@ -99,6 +103,7 @@ impl Default for RunConfig {
             chain_iters: 1000,
             repeats: 3,
             block_width: 16,
+            reorth: false,
             extra: BTreeMap::new(),
         }
     }
@@ -128,6 +133,11 @@ impl RunConfig {
         }
         if let Some(x) = v.get("block_width").and_then(Json::as_usize) {
             c.block_width = x.max(1);
+        }
+        match v.get("reorth") {
+            Some(Json::Bool(b)) => c.reorth = *b,
+            Some(Json::Str(s)) => c.reorth = s.eq_ignore_ascii_case("full"),
+            _ => {}
         }
         if let Some(Json::Obj(m)) = v.get("extra") {
             for (k, val) in m {
@@ -184,6 +194,17 @@ mod tests {
         // degenerate widths clamp up to the scalar path
         let z = RunConfig::from_json(r#"{"block_width": 0}"#).unwrap();
         assert_eq!(z.block_width, 1);
+    }
+
+    #[test]
+    fn reorth_knob_parses_bool_and_string_forms() {
+        assert!(!RunConfig::default().reorth);
+        assert!(RunConfig::from_json(r#"{"reorth": true}"#).unwrap().reorth);
+        assert!(RunConfig::from_json(r#"{"reorth": "full"}"#).unwrap().reorth);
+        assert!(RunConfig::from_json(r#"{"reorth": "Full"}"#).unwrap().reorth);
+        assert!(!RunConfig::from_json(r#"{"reorth": "none"}"#).unwrap().reorth);
+        assert!(!RunConfig::from_json(r#"{"reorth": false}"#).unwrap().reorth);
+        assert!(!RunConfig::from_json(r#"{}"#).unwrap().reorth);
     }
 
     #[test]

@@ -15,7 +15,7 @@ use crate::config::run::parse_manifest;
 use crate::linalg::DMat;
 use crate::metrics::ServiceMetrics;
 use crate::quadrature::block::{BlockGql, StopRule};
-use crate::quadrature::{judge_threshold, GqlOptions};
+use crate::quadrature::{judge_threshold, GqlOptions, Reorth};
 use crate::runtime::{BoundsHistory, GqlRuntime};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -40,6 +40,12 @@ pub struct JudgeRequest {
     /// requests sharing a key must carry byte-identical `a`. `None`
     /// disables coalescing for this request.
     pub op_key: Option<u64>,
+    /// Fully reorthogonalize the Lanczos basis (§5.4): set for
+    /// ill-conditioned operators where plain Lanczos loses bound validity.
+    /// Reorth requests always take the native path (the fixed-iteration
+    /// PJRT artifacts do not reorthogonalize) and only coalesce with other
+    /// reorth requests (part of the coalesce key).
+    pub reorth: bool,
 }
 
 /// Which path served a request.
@@ -160,7 +166,11 @@ impl JudgeService {
             let mut q = self.shared.queue.lock().unwrap();
             q.push(Queued { req, enqueued: Instant::now(), reply: tx });
         }
-        self.shared.cv.notify_one();
+        // notify_all, not notify_one: besides idle workers, batch-forming
+        // and coalescing drains also sleep on this condvar waiting for
+        // stragglers; a single wakeup could land on a drainer the new item
+        // doesn't match while an idle worker keeps sleeping.
+        self.shared.cv.notify_all();
         rx
     }
 
@@ -287,7 +297,12 @@ fn worker_loop(
         };
 
         let dim = first.req.n;
-        let bucket = bucketizer.bucket(dim).filter(|_| dim <= policy.native_threshold);
+        // reorth requests always run native: the fixed-iteration PJRT
+        // artifacts do not reorthogonalize, so routing them to an
+        // accelerator bucket would silently drop the stability guarantee
+        let bucket = bucketizer
+            .bucket(dim)
+            .filter(|_| dim <= policy.native_threshold && !first.req.reorth);
         let sender = { exec_tx.lock().unwrap().clone() };
         let (bucket, sender) = match (bucket, sender) {
             (Some(b), Some(s)) => (b, s),
@@ -302,24 +317,30 @@ fn worker_loop(
             }
         };
 
-        // form a batch from same-bucket requests
+        // form a batch from same-bucket requests, sleeping on the condvar
+        // between arrivals instead of spinning (a lone request used to
+        // burn a core for the full `max_wait` — ROADMAP latency bug)
         let mut batch = vec![first];
         let deadline = Instant::now() + policy.max_wait;
-        while batch.len() < policy.max_batch {
-            {
-                let mut q = shared.queue.lock().unwrap();
-                if let Some(pos) = q
-                    .iter()
-                    .position(|item| bucketizer.bucket(item.req.n) == Some(bucket))
-                {
+        {
+            let mut q = shared.queue.lock().unwrap();
+            while batch.len() < policy.max_batch {
+                // never absorb a reorth request into an accelerator batch:
+                // it must keep the native-path guarantee (see the bucket
+                // filter above)
+                if let Some(pos) = q.iter().position(|item| {
+                    !item.req.reorth && bucketizer.bucket(item.req.n) == Some(bucket)
+                }) {
                     batch.push(q.remove(pos));
                     continue;
                 }
+                let now = Instant::now();
+                if now >= deadline || shared.shutdown.load(Ordering::SeqCst) {
+                    break;
+                }
+                let (guard, _) = shared.cv.wait_timeout(q, deadline - now).unwrap();
+                q = guard;
             }
-            if Instant::now() >= deadline {
-                break;
-            }
-            std::thread::yield_now();
         }
 
         metrics.batches.inc();
@@ -341,6 +362,14 @@ fn worker_loop(
         match histories {
             Some(hists) => {
                 for (item, h) in items.into_iter().zip(hists) {
+                    if h.is_empty() {
+                        // a runtime that records zero iterations has
+                        // nothing to decide on; `h.at(h.len() - 1)` below
+                        // would panic and unwind the dispatcher thread —
+                        // fall back to the native scalar path instead
+                        serve_native(&metrics, item);
+                        continue;
+                    }
                     let (iters, decision) = match h.first_decision(item.req.t) {
                         Some((i, d)) => (i + 1, d),
                         None => {
@@ -383,36 +412,40 @@ fn pop_oldest(q: &mut Vec<Queued>) -> Option<Queued> {
 }
 
 /// Coalesce key: requests may share a `BlockGql` panel only when the
-/// operator id, dimension, and spectrum window all agree.
-fn coalesce_key(req: &JudgeRequest) -> Option<(u64, usize, u32, u32)> {
+/// operator id, dimension, spectrum window, and reorthogonalization mode
+/// all agree (the engine's `GqlOptions` are panel-wide).
+fn coalesce_key(req: &JudgeRequest) -> Option<(u64, usize, u32, u32, bool)> {
     req.op_key
-        .map(|k| (k, req.n, req.lam_min.to_bits(), req.lam_max.to_bits()))
+        .map(|k| (k, req.n, req.lam_min.to_bits(), req.lam_max.to_bits(), req.reorth))
 }
 
 /// The Bucketizer's same-operator coalescing mode: drain queued requests
-/// co-keyed with `first`, waiting up to `max_wait` for stragglers (the
-/// client tagged them batchable, so a bounded wait is the right trade).
-/// Mirrors the PJRT batch-forming spin below — a lone keyed request pays
-/// the full `max_wait` (200µs default); switching both loops to condvar
-/// wakeups is a ROADMAP follow-up.
+/// co-keyed with `first`, sleeping on the shared condvar (woken by
+/// `submit`) up to `max_wait` for stragglers — the client tagged them
+/// batchable, so a bounded wait is the right trade, but a lone keyed
+/// request now parks instead of burning a core for the full 200µs
+/// default (the ROADMAP's named latency bug).
 fn drain_coalesced(shared: &Shared, first: &Queued, policy: &BatchPolicy) -> Vec<Queued> {
     let key = coalesce_key(&first.req).expect("caller checked op_key");
     let mut group: Vec<Queued> = Vec::new();
     let deadline = Instant::now() + policy.max_wait;
+    let mut q = shared.queue.lock().unwrap();
     loop {
-        {
-            let mut q = shared.queue.lock().unwrap();
-            let keys: Vec<_> = q.iter().map(|item| coalesce_key(&item.req)).collect();
-            let want = policy.max_batch - 1 - group.len();
-            let pos = Bucketizer::coalesce_positions(&key, &keys, want);
-            for p in pos.into_iter().rev() {
-                group.push(q.remove(p));
-            }
+        let keys: Vec<_> = q.iter().map(|item| coalesce_key(&item.req)).collect();
+        let want = policy.max_batch - 1 - group.len();
+        let pos = Bucketizer::coalesce_positions(&key, &keys, want);
+        for p in pos.into_iter().rev() {
+            group.push(q.remove(p));
         }
-        if group.len() + 1 >= policy.max_batch || Instant::now() >= deadline {
+        let now = Instant::now();
+        if group.len() + 1 >= policy.max_batch
+            || now >= deadline
+            || shared.shutdown.load(Ordering::SeqCst)
+        {
             return group;
         }
-        std::thread::yield_now();
+        let (guard, _) = shared.cv.wait_timeout(q, deadline - now).unwrap();
+        q = guard;
     }
 }
 
@@ -439,7 +472,8 @@ fn serve_native_block(metrics: &ServiceMetrics, first: Queued, others: Vec<Queue
         "co-keyed requests must share an identical operator matrix"
     );
     let a = DMat::from_fn(n, n, |i, j| items[0].req.a[i * n + j] as f64);
-    let opts = GqlOptions::new(items[0].req.lam_min as f64, items[0].req.lam_max as f64);
+    let opts = GqlOptions::new(items[0].req.lam_min as f64, items[0].req.lam_max as f64)
+        .with_reorth(reorth_mode(&items[0].req));
     let mut eng = BlockGql::new(&a, opts, batch);
     for item in &items {
         let u: Vec<f64> = item.req.u.iter().map(|&x| x as f64).collect();
@@ -462,12 +496,22 @@ fn serve_native_block(metrics: &ServiceMetrics, first: Queued, others: Vec<Queue
     }
 }
 
+/// The reorthogonalization mode a request asked for.
+fn reorth_mode(req: &JudgeRequest) -> Reorth {
+    if req.reorth {
+        Reorth::Full
+    } else {
+        Reorth::None
+    }
+}
+
 fn serve_native(metrics: &ServiceMetrics, item: Queued) {
     metrics.native_fallbacks.inc();
     let n = item.req.n;
     let a = DMat::from_fn(n, n, |i, j| item.req.a[i * n + j] as f64);
     let u: Vec<f64> = item.req.u.iter().map(|&x| x as f64).collect();
-    let opts = GqlOptions::new(item.req.lam_min as f64, item.req.lam_max as f64);
+    let opts = GqlOptions::new(item.req.lam_min as f64, item.req.lam_max as f64)
+        .with_reorth(reorth_mode(&item.req));
     let (decision, stats) = judge_threshold(&a, &u, item.req.t, opts);
     metrics.judge_iters.lock().unwrap().record(stats.iters as f64);
     metrics
@@ -502,6 +546,7 @@ mod tests {
             lam_max: (ln * 1.01) as f32,
             t,
             op_key: None,
+            reorth: false,
         };
         (req, t < exact)
     }
@@ -607,6 +652,7 @@ mod tests {
                 lam_max: (ln * 1.01) as f32,
                 t,
                 op_key: Some(0xC0A1),
+                reorth: false,
             }));
         }
         let mut block_served = 0usize;
@@ -623,6 +669,53 @@ mod tests {
             "expected at least one coalesced block run (got {block_served})"
         );
         assert!(svc.metrics.coalesced_blocks.get() >= 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn reorth_requests_are_served_natively_and_correctly() {
+        // ill-conditioned-friendly knob: decisions must stay oracle-exact
+        // with full reorthogonalization, through both the scalar native
+        // path and a coalesced block run
+        let policy = BatchPolicy {
+            max_batch: 4,
+            max_wait: std::time::Duration::from_millis(50),
+            ..BatchPolicy::default()
+        };
+        let svc = JudgeService::start(None, policy, 1).unwrap();
+        let mut rng = Rng::new(0x5E7);
+        // scalar path
+        let (mut req, want) = make_request(&mut rng, 16, 0.8);
+        req.reorth = true;
+        let resp = svc.judge_blocking(req);
+        assert_eq!(resp.decision, want);
+        assert_eq!(resp.path, RoutePath::Native);
+        // coalesced block path
+        let n = 14;
+        let (a, l1, ln) = random_spd_exact(&mut rng, n, 0.6, 0.2);
+        let af: Vec<f32> = (0..n * n).map(|k| a.get(k / n, k % n) as f32).collect();
+        let ch = Cholesky::factor(&a).unwrap();
+        let mut rxs = Vec::new();
+        let mut wants = Vec::new();
+        for i in 0..4 {
+            let u: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let exact = ch.bif(&u);
+            let t = exact * (0.6 + 0.1 * i as f64);
+            wants.push(t < exact);
+            rxs.push(svc.submit(JudgeRequest {
+                a: af.clone(),
+                u: u.iter().map(|&x| x as f32).collect(),
+                n,
+                lam_min: (l1 * 0.99) as f32,
+                lam_max: (ln * 1.01) as f32,
+                t,
+                op_key: Some(0xC0A2),
+                reorth: true,
+            }));
+        }
+        for (rx, want) in rxs.into_iter().zip(wants) {
+            assert_eq!(rx.recv().unwrap().decision, want);
+        }
         svc.shutdown();
     }
 

@@ -9,7 +9,7 @@
 use crate::config::RunConfig;
 use crate::datasets::random_sparse_spd;
 use crate::experiments::time_secs;
-use crate::quadrature::{block_solve, run_scalar, GqlOptions, StopRule};
+use crate::quadrature::{block_solve, run_scalar, GqlOptions, Reorth, StopRule};
 use crate::util::rng::Rng;
 
 /// One sweep row: `k` queries of `iters` iterations each, scalar vs a
@@ -36,9 +36,10 @@ pub fn run_one(
     k: usize,
     width: usize,
     iters: usize,
+    reorth: Reorth,
 ) -> BlockReport {
     let (a, w) = random_sparse_spd(rng, n, density, 1e-2);
-    let opts = GqlOptions::new(w.lo, w.hi);
+    let opts = GqlOptions::new(w.lo, w.hi).with_reorth(reorth);
     let stop = StopRule::Iters(iters);
     let queries: Vec<Vec<f64>> = (0..k)
         .map(|_| (0..n).map(|_| rng.normal()).collect())
@@ -73,15 +74,17 @@ pub fn run_one(
     }
 }
 
-/// Sweep query counts `ks` at the configured `block_width`; problem size
-/// shrinks with `dataset_scale` for session-budget runs.
+/// Sweep query counts `ks` at the configured `block_width` (and
+/// `cfg.reorth` mode — the bit-identity check covers §5.4 runs too);
+/// problem size shrinks with `dataset_scale` for session-budget runs.
 pub fn run(cfg: &RunConfig, ks: &[usize]) -> Vec<BlockReport> {
     let mut rng = Rng::new(cfg.seed ^ 0xB10C);
     let n = (4000 / cfg.dataset_scale.max(1)).max(64);
     let density = 2e-3;
     let iters = 16;
+    let reorth = if cfg.reorth { Reorth::Full } else { Reorth::None };
     ks.iter()
-        .map(|&k| run_one(&mut rng, n, density, k, cfg.block_width.max(1), iters))
+        .map(|&k| run_one(&mut rng, n, density, k, cfg.block_width.max(1), iters, reorth))
         .collect()
 }
 
@@ -116,11 +119,19 @@ mod tests {
     #[test]
     fn sweep_rows_are_exact_and_well_formed() {
         let mut rng = Rng::new(0xB10D);
-        let rep = run_one(&mut rng, 128, 0.05, 8, 4, 6);
+        let rep = run_one(&mut rng, 128, 0.05, 8, 4, 6, Reorth::None);
         assert_eq!(rep.k, 8);
         assert_eq!(rep.width, 4);
         assert!(rep.scalar_s > 0.0 && rep.block_s > 0.0);
         // bit-identical lanes: the deviation is exactly zero, not just small
+        assert_eq!(rep.max_dev, 0.0);
+    }
+
+    #[test]
+    fn reorth_rows_stay_bit_exact() {
+        // the §5.4 mode preserves the scalar/block exactness contract
+        let mut rng = Rng::new(0xB10E);
+        let rep = run_one(&mut rng, 96, 0.05, 6, 3, 6, Reorth::Full);
         assert_eq!(rep.max_dev, 0.0);
     }
 

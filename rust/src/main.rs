@@ -51,6 +51,20 @@ fn main() -> ExitCode {
     if let Some(s) = flags.get("block-width").and_then(|s| s.parse::<usize>().ok()) {
         cfg.block_width = s.max(1);
     }
+    if let Some(s) = flags.get("reorth") {
+        // `--reorth full` (or true/1) enables §5.4 full reorthogonalization
+        // for config-driven quadrature runs; `--reorth none` (or false/0)
+        // disables. Case-insensitive, matching the JSON parser; anything
+        // else is a usage error rather than a silent no.
+        if ["full", "true", "1"].iter().any(|v| s.eq_ignore_ascii_case(v)) {
+            cfg.reorth = true;
+        } else if ["none", "false", "0"].iter().any(|v| s.eq_ignore_ascii_case(v)) {
+            cfg.reorth = false;
+        } else {
+            eprintln!("invalid --reorth value '{s}' (expected full|none)\n{USAGE}");
+            return ExitCode::from(2);
+        }
+    }
 
     match cmd.as_str() {
         "fig1" => cmd_fig1(&cfg, &flags),
@@ -68,7 +82,8 @@ fn main() -> ExitCode {
 }
 
 const USAGE: &str = "usage: gauss-bif <fig1|fig2|table2|rates|block|serve|info> [flags]\n\
-  common flags: --seed S --out DIR --scale K --config cfg.json --artifacts DIR --block-width B";
+  common flags: --seed S --out DIR --scale K --config cfg.json --artifacts DIR --block-width B\n\
+                --reorth full|none (§5.4 Lanczos reorthogonalization for block/serve runs)";
 
 fn parse_args(args: &[String]) -> Option<(String, HashMap<String, String>)> {
     let mut it = args.iter();
@@ -320,6 +335,7 @@ fn cmd_serve(cfg: &RunConfig, flags: &HashMap<String, String>) -> ExitCode {
             lam_max: (*ln * 1.01) as f32,
             t,
             op_key: Some((i % ops.len()) as u64),
+            reorth: cfg.reorth,
         }));
     }
     for (rx, want) in rxs.into_iter().zip(wants) {

@@ -19,16 +19,32 @@
 //! to the surviving lanes.
 //!
 //! **Exactness contract:** per lane, the floating-point operation sequence
-//! is identical to a scalar [`Gql`] run (the specialized `matvec_multi`
-//! impls preserve per-lane accumulation order), so block results are
-//! bit-identical to scalar results — asserted by the `block_width = 1`
-//! property tests in `rust/tests/prop_block.rs`.
+//! is identical to a scalar [`Gql`] run *by construction*: both drivers
+//! advance the same [`LaneCore`](crate::quadrature::recurrence::LaneCore)
+//! (one owner of the Sherman–Morrison recurrence, corrections, breakdown
+//! detection, and the per-column Lanczos step), and the specialized
+//! `matvec_multi` impls preserve per-lane accumulation order. Block
+//! results are therefore bit-identical to scalar results — still asserted
+//! by the `block_width = 1` property tests in `rust/tests/prop_block.rs`.
+//!
+//! Reorthogonalization (§5.4): lanes accept [`Reorth::Full`] — each lane
+//! stores its own deinterleaved basis and applies the scalar engine's
+//! two-pass Gram–Schmidt column-wise inside the interleaved panel, so the
+//! bit-identity contract extends to the ill-conditioned regime (O(n·i)
+//! extra per lane-iteration, same as scalar).
 
-use super::gql::{Bounds, Gql, GqlOptions, Reorth};
+use super::gql::{Bounds, Gql, GqlOptions};
+use super::recurrence::LaneCore;
 use crate::sparse::SymOp;
 use std::collections::VecDeque;
 
 /// When a lane is allowed to leave the panel.
+///
+/// **Invariant:** every admitted query performs at least one iteration —
+/// stop rules are only consulted *after* a sweep, so a zero iteration
+/// budget cannot be honored. [`StopRule::normalized`] (applied by
+/// [`BlockGql::push`] and [`run_scalar`]) floors `Iters(0)` to `Iters(1)`
+/// accordingly, matching the `max_iters` floor in [`Gql::new`].
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum StopRule {
     /// Run to Krylov exhaustion (or the iteration budget).
@@ -40,8 +56,22 @@ pub enum StopRule {
     /// Stop as soon as the Radau bounds decide `t < u^T A^{-1} u`; the
     /// decision lands in [`BlockResult::decision`] (paper Alg. 4 semantics).
     Threshold(f64),
-    /// Stop after a fixed number of iterations.
+    /// Stop after a fixed number of iterations (floored to 1 on
+    /// admission — see the type-level invariant).
     Iters(usize),
+}
+
+impl StopRule {
+    /// Enforce the type-level invariant: `Iters(0)` still runs one full
+    /// iteration (the rule is only consulted after a sweep), so it is
+    /// floored to `Iters(1)` when a query is admitted instead of silently
+    /// overshooting its budget.
+    pub fn normalized(self) -> Self {
+        match self {
+            StopRule::Iters(0) => StopRule::Iters(1),
+            s => s,
+        }
+    }
 }
 
 /// Outcome of one lane.
@@ -136,6 +166,7 @@ pub fn run_scalar(
     stop: StopRule,
     record_history: bool,
 ) -> BlockResult {
+    let stop = stop.normalized();
     if is_zero(u) {
         return zero_result(0, &stop);
     }
@@ -154,39 +185,21 @@ pub fn run_scalar(
     }
 }
 
-/// One lane's Sherman–Morrison recurrence state (mirrors [`Gql`]'s fields;
-/// the Lanczos vectors live in the engine's interleaved panels).
+/// One lane: id + stop rule + the shared recurrence core (the
+/// Sherman–Morrison state and reorth basis live in [`LaneCore`]; the
+/// Lanczos vectors live in the engine's interleaved panels).
 struct Lane {
     id: usize,
     stop: StopRule,
-    unorm2: f64,
-    beta_prev: f64,
-    g: f64,
-    c: f64,
-    delta: f64,
-    d_lr: f64,
-    d_rr: f64,
-    iter: usize,
-    last: Option<Bounds>,
+    core: LaneCore,
     history: Vec<Bounds>,
 }
 
 impl Lane {
-    fn new(id: usize, stop: StopRule, unorm2: f64) -> Self {
-        Lane {
-            id,
-            stop,
-            unorm2,
-            beta_prev: 0.0,
-            g: 0.0,
-            c: 1.0,
-            delta: 0.0,
-            d_lr: 0.0,
-            d_rr: 0.0,
-            iter: 0,
-            last: None,
-            history: Vec::new(),
-        }
+    /// Placeholder lane; [`BlockGql::write_query`] installs the real core
+    /// once the query vector (and its norm) is in the panel.
+    fn new(id: usize, stop: StopRule, opts: &GqlOptions) -> Self {
+        Lane { id, stop, core: LaneCore::new(opts, 0.0), history: Vec::new() }
     }
 }
 
@@ -220,7 +233,8 @@ pub struct BlockGql<'a> {
 impl<'a> BlockGql<'a> {
     /// Engine over `op` with panel width `width`. Like [`Gql::new`],
     /// `opts.max_iters` is clamped to the operator dimension (no lane can
-    /// usefully iterate past Krylov exhaustion).
+    /// usefully iterate past Krylov exhaustion). `opts.reorth` applies to
+    /// every lane (per-lane basis storage; see the module docs).
     pub fn new(op: &'a dyn SymOp, opts: GqlOptions, width: usize) -> Self {
         let n = op.dim();
         assert!(width >= 1, "block width must be at least 1");
@@ -229,10 +243,6 @@ impl<'a> BlockGql<'a> {
             "need 0 < lam_min < lam_max (got {} .. {})",
             opts.lam_min,
             opts.lam_max
-        );
-        assert!(
-            opts.reorth == Reorth::None,
-            "BlockGql does not support reorthogonalization (use scalar Gql)"
         );
         let mut opts = opts;
         opts.max_iters = opts.max_iters.min(n).max(1);
@@ -264,6 +274,7 @@ impl<'a> BlockGql<'a> {
     /// queries resolve immediately (BIF = 0 exactly) without taking a lane.
     pub fn push(&mut self, u: &[f64], stop: StopRule) -> usize {
         assert_eq!(u.len(), self.n, "dimension mismatch");
+        let stop = stop.normalized();
         let id = self.next_id;
         self.next_id += 1;
         if is_zero(u) {
@@ -305,13 +316,14 @@ impl<'a> BlockGql<'a> {
         for _ in 0..m {
             let p = self.pending.pop_front().unwrap();
             let slot = self.lanes.len();
-            self.lanes.push(Lane::new(p.id, p.stop, 0.0)); // unorm2 set below
+            let lane = Lane::new(p.id, p.stop, &self.opts); // core set below
+            self.lanes.push(lane);
             self.write_query(slot, &p.u);
         }
     }
 
     /// Install `u` into lane `slot`: `v_curr` column = normalized query,
-    /// `v_prev` column = 0, recurrence state fresh.
+    /// `v_prev` column = 0, recurrence core fresh.
     fn write_query(&mut self, slot: usize, u: &[f64]) {
         let b = self.b;
         let unorm2: f64 = u.iter().map(|x| x * x).sum();
@@ -321,9 +333,10 @@ impl<'a> BlockGql<'a> {
             self.v_prev[i * b + slot] = 0.0;
             self.v_curr[i * b + slot] = ui * inv_norm;
         }
+        let opts = self.opts;
         let lane = &mut self.lanes[slot];
-        let (id, stop) = (lane.id, lane.stop);
-        *lane = Lane::new(id, stop, unorm2);
+        lane.core = LaneCore::new(&opts, unorm2);
+        lane.history = Vec::new();
     }
 
     /// Widen the panels by `m` lanes (in-place backward repack: for each
@@ -375,8 +388,10 @@ impl<'a> BlockGql<'a> {
     }
 
     /// One lockstep iteration: a single panel sweep of the operator plus
-    /// per-lane O(1) recurrences. Completed lanes are emitted, refilled
-    /// from the queue in place, or compacted away.
+    /// one [`LaneCore::step_column`] per lane (the scalar engine's exact
+    /// op sequence on each column — see `quadrature::recurrence`).
+    /// Completed lanes are emitted, refilled from the queue in place, or
+    /// compacted away.
     fn sweep(&mut self) {
         let (n, b) = (self.n, self.b);
         debug_assert!(b > 0);
@@ -387,78 +402,17 @@ impl<'a> BlockGql<'a> {
         let mut finished: Vec<(usize, Option<bool>)> = Vec::new();
         for l in 0..b {
             let lane = &mut self.lanes[l];
-            lane.iter += 1;
-
-            // --- Lanczos step on column l (same op order as Gql::step) ---
-            let mut alpha = 0.0;
-            for i in 0..n {
-                alpha += self.v_curr[i * b + l] * self.w[i * b + l];
-            }
-            for i in 0..n {
-                let k = i * b + l;
-                self.w[k] -= alpha * self.v_curr[k] + lane.beta_prev * self.v_prev[k];
-            }
-            let mut beta2_acc = 0.0;
-            for i in 0..n {
-                let wk = self.w[i * b + l];
-                beta2_acc += wk * wk;
-            }
-            let beta = beta2_acc.sqrt();
-
-            // --- bound recurrences (verbatim from the scalar engine) ---
-            if lane.iter == 1 {
-                lane.g = lane.unorm2 / alpha;
-                lane.c = 1.0;
-                lane.delta = alpha;
-                lane.d_lr = alpha - self.opts.lam_min;
-                lane.d_rr = alpha - self.opts.lam_max;
-            } else {
-                let bp2 = lane.beta_prev * lane.beta_prev;
-                lane.g += lane.unorm2 * bp2 * lane.c * lane.c
-                    / (lane.delta * (alpha * lane.delta - bp2));
-                lane.c *= lane.beta_prev / lane.delta;
-                let delta_new = alpha - bp2 / lane.delta;
-                lane.d_lr = alpha - self.opts.lam_min - bp2 / lane.d_lr;
-                lane.d_rr = alpha - self.opts.lam_max - bp2 / lane.d_rr;
-                lane.delta = delta_new;
-            }
-
-            let breakdown = !(beta > Gql::BREAKDOWN_TOL * alpha.abs().max(1.0));
-            let bounds = if breakdown {
-                Bounds {
-                    iter: lane.iter,
-                    gauss: lane.g,
-                    radau_lower: lane.g,
-                    radau_upper: lane.g,
-                    lobatto: lane.g,
-                    exact: true,
-                }
-            } else {
-                let (g_rr, g_lr, g_lo) = corrections(lane, &self.opts, beta);
-                Bounds {
-                    iter: lane.iter,
-                    gauss: lane.g,
-                    radau_lower: g_rr,
-                    radau_upper: g_lr,
-                    lobatto: g_lo,
-                    exact: false,
-                }
-            };
-
-            if !breakdown {
-                // advance the lane's Lanczos column in place
-                let inv_beta = 1.0 / beta;
-                for i in 0..n {
-                    let k = i * b + l;
-                    self.v_prev[k] = self.v_curr[k];
-                    self.v_curr[k] = self.w[k] * inv_beta;
-                }
-                lane.beta_prev = beta;
-            }
+            let bounds = lane.core.step_column(
+                &mut self.v_prev,
+                &mut self.v_curr,
+                &mut self.w,
+                n,
+                b,
+                l,
+            );
             if self.record_history {
                 lane.history.push(bounds);
             }
-            lane.last = Some(bounds);
             if let Some(decision) = stop_decision(&bounds, &lane.stop, n, max_iters) {
                 finished.push((l, decision));
             }
@@ -471,14 +425,15 @@ impl<'a> BlockGql<'a> {
                 let lane = &mut self.lanes[slot];
                 self.done.push(BlockResult {
                     id: lane.id,
-                    bounds: lane.last.expect("finished lane has bounds"),
+                    bounds: lane.core.last_bounds().expect("finished lane has bounds"),
                     decision,
-                    iters: lane.iter,
+                    iters: lane.core.iterations(),
                     history: std::mem::take(&mut lane.history),
                 });
             }
             if let Some(p) = self.pending.pop_front() {
-                self.lanes[slot] = Lane::new(p.id, p.stop, 0.0);
+                let lane = Lane::new(p.id, p.stop, &self.opts);
+                self.lanes[slot] = lane;
                 self.write_query(slot, &p.u);
             } else {
                 dead.push(slot);
@@ -489,24 +444,6 @@ impl<'a> BlockGql<'a> {
             self.compact(&keep);
         }
     }
-}
-
-/// Radau/Lobatto corrections from a lane's recurrence state — identical
-/// arithmetic to `Gql::corrections`.
-fn corrections(lane: &Lane, opts: &GqlOptions, beta: f64) -> (f64, f64, f64) {
-    let (lam_min, lam_max) = (opts.lam_min, opts.lam_max);
-    let beta2 = beta * beta;
-    let a_lr = lam_min + beta2 / lane.d_lr;
-    let a_rr = lam_max + beta2 / lane.d_rr;
-    let denom = lane.d_rr - lane.d_lr;
-    let b_lo2 = (lam_max - lam_min) * lane.d_lr * lane.d_rr / denom;
-    let a_lo = (lam_max * lane.d_rr - lam_min * lane.d_lr) / denom;
-    let c2 = lane.c * lane.c;
-    let k = lane.unorm2 * c2 / lane.delta;
-    let g_rr = lane.g + k * beta2 / (a_rr * lane.delta - beta2);
-    let g_lr = lane.g + k * beta2 / (a_lr * lane.delta - beta2);
-    let g_lo = lane.g + k * b_lo2 / (a_lo * lane.delta - b_lo2);
-    (g_rr, g_lr, g_lo)
 }
 
 #[inline]
@@ -552,6 +489,7 @@ pub fn block_solve<'q>(
 mod tests {
     use super::*;
     use crate::datasets::random_sparse_spd;
+    use crate::quadrature::gql::Reorth;
     use crate::quadrature::judge_threshold;
     use crate::util::prop::forall;
     use crate::util::rng::Rng;
@@ -677,11 +615,77 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "reorthogonalization")]
-    fn reorth_rejected() {
-        let mut rng = Rng::new(0xB762);
-        let (a, w) = random_sparse_spd(&mut rng, 6, 0.5, 0.05);
-        let opts = GqlOptions::new(w.lo, w.hi).with_reorth(Reorth::Full);
-        let _ = BlockGql::new(&a, opts, 2);
+    fn reorth_lanes_are_bit_identical_to_scalar_reorth() {
+        // every lane of a reorthogonalized panel must reproduce its own
+        // scalar Reorth::Full run bit-for-bit — the exactness contract
+        // extended to §5.4 (ISSUE 2 tentpole)
+        forall(10, 0xB762, |rng| {
+            let n = 6 + rng.below(24);
+            let (a, w) = random_sparse_spd(rng, n, 0.3, 0.05);
+            let opts = GqlOptions::new(w.lo, w.hi).with_reorth(Reorth::Full);
+            let m = 1 + rng.below(6);
+            let width = 1 + rng.below(m);
+            let queries: Vec<Vec<f64>> = (0..m)
+                .map(|_| (0..n).map(|_| rng.normal()).collect())
+                .collect();
+            let mut eng = BlockGql::new(&a, opts, width).record_history(true);
+            for u in &queries {
+                eng.push(u, StopRule::Exhaust);
+            }
+            for (r, u) in eng.run_all().iter().zip(&queries) {
+                let scalar = run_scalar(&a, u, opts, StopRule::Exhaust, true);
+                assert_eq!(scalar.history.len(), r.history.len(), "query {}", r.id);
+                for (s, b) in scalar.history.iter().zip(&r.history) {
+                    assert_eq!(s.gauss.to_bits(), b.gauss.to_bits(), "query {}", r.id);
+                    assert_eq!(s.radau_lower.to_bits(), b.radau_lower.to_bits());
+                    assert_eq!(s.radau_upper.to_bits(), b.radau_upper.to_bits());
+                    assert_eq!(s.lobatto.to_bits(), b.lobatto.to_bits());
+                    assert_eq!(s.exact, b.exact);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn iters_zero_is_floored_to_one_iteration() {
+        // StopRule::Iters(0) would otherwise run a full sweep and then
+        // report it stopped "within budget" — the normalized() floor makes
+        // the one-iteration minimum explicit (ISSUE 2 satellite)
+        let mut rng = Rng::new(0xB773);
+        let n = 12;
+        let (a, w) = random_sparse_spd(&mut rng, n, 0.4, 0.05);
+        let u: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let opts = GqlOptions::new(w.lo, w.hi);
+        assert_eq!(StopRule::Iters(0).normalized(), StopRule::Iters(1));
+        assert_eq!(StopRule::Iters(3).normalized(), StopRule::Iters(3));
+        let zero = run_scalar(&a, &u, opts, StopRule::Iters(0), false);
+        let one = run_scalar(&a, &u, opts, StopRule::Iters(1), false);
+        assert_eq!(zero.iters, 1);
+        assert_eq!(zero.bounds.gauss.to_bits(), one.bounds.gauss.to_bits());
+        let mut eng = BlockGql::new(&a, opts, 2);
+        eng.push(&u, StopRule::Iters(0));
+        let r = eng.run_all().pop().unwrap();
+        assert_eq!(r.iters, 1);
+        assert_eq!(r.bounds.gauss.to_bits(), one.bounds.gauss.to_bits());
+    }
+
+    #[test]
+    fn exactness_flag_set_when_krylov_space_fills() {
+        // at iter == n the Gauss value is exact; the emitted Bounds must
+        // say so, collapsing Bounds::upper() onto it (ISSUE 2 satellite)
+        let mut rng = Rng::new(0xB784);
+        let n = 10;
+        let (a, w) = random_sparse_spd(&mut rng, n, 0.5, 0.05);
+        let u: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let opts = GqlOptions::new(w.lo, w.hi);
+        let r = run_scalar(&a, &u, opts, StopRule::Exhaust, true);
+        let last = r.history.last().unwrap();
+        assert!(last.exact, "final bounds must be flagged exact");
+        assert_eq!(last.upper(), last.gauss);
+        // block path agrees
+        let mut eng = BlockGql::new(&a, opts, 1).record_history(true);
+        eng.push(&u, StopRule::Exhaust);
+        let b = eng.run_all().pop().unwrap();
+        assert!(b.history.last().unwrap().exact);
     }
 }

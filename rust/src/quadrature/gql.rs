@@ -17,7 +17,13 @@
 //!
 //! No allocation happens inside [`Gql::step`]; all buffers are preallocated
 //! in [`Gql::new`] (perf deliverable — see EXPERIMENTS.md §Perf).
+//!
+//! The recurrence arithmetic itself lives in [`super::recurrence`] — this
+//! type is a thin driver (one matvec + one [`LaneCore::step_column`] on a
+//! width-1 panel) over the same core the block engine's lanes use, which
+//! is what makes scalar/block bit-identity structural.
 
+use super::recurrence::LaneCore;
 use crate::sparse::SymOp;
 
 /// Reorthogonalization policy for the Lanczos basis (§5.4 "Instability").
@@ -112,26 +118,14 @@ pub struct Gql<'a> {
     op: &'a dyn SymOp,
     opts: GqlOptions,
     n: usize,
-    unorm2: f64,
 
-    // Lanczos vectors (preallocated; swapped, never reallocated)
+    // Lanczos vectors (preallocated; never reallocated)
     v_prev: Vec<f64>,
     v_curr: Vec<f64>,
     w: Vec<f64>,
-    beta_prev: f64,
 
-    // Sherman–Morrison recurrence state
-    g: f64,
-    c: f64,
-    delta: f64,
-    d_lr: f64,
-    d_rr: f64,
-
-    iter: usize,
-    exhausted: bool,
-    last: Option<Bounds>,
-    /// stored basis when reorthogonalizing
-    basis: Vec<Vec<f64>>,
+    /// recurrence + reorthogonalization state (shared with block lanes)
+    core: LaneCore,
 }
 
 impl<'a> Gql<'a> {
@@ -158,158 +152,49 @@ impl<'a> Gql<'a> {
             op,
             opts,
             n,
-            unorm2,
             v_prev: vec![0.0; n],
             v_curr,
             w: vec![0.0; n],
-            beta_prev: 0.0,
-            g: 0.0,
-            c: 1.0,
-            delta: 0.0,
-            d_lr: 0.0,
-            d_rr: 0.0,
-            iter: 0,
-            exhausted: false,
-            last: None,
-            basis: Vec::new(),
+            core: LaneCore::new(&opts, unorm2),
         }
     }
 
     pub fn iterations(&self) -> usize {
-        self.iter
+        self.core.iterations()
     }
 
     pub fn is_exhausted(&self) -> bool {
-        self.exhausted
+        self.core.is_exhausted()
     }
 
     pub fn last_bounds(&self) -> Option<Bounds> {
-        self.last
-    }
-
-    /// Radau/Lobatto corrections from the current recurrence state and the
-    /// fresh off-diagonal `beta` (see python/compile/kernels/ref.py for the
-    /// Lobatto coefficient derivation; the paper's Alg. 5 rendering is
-    /// OCR-mangled there).
-    fn corrections(&self, beta: f64) -> (f64, f64, f64) {
-        let (lam_min, lam_max) = (self.opts.lam_min, self.opts.lam_max);
-        let beta2 = beta * beta;
-        let a_lr = lam_min + beta2 / self.d_lr;
-        let a_rr = lam_max + beta2 / self.d_rr;
-        let denom = self.d_rr - self.d_lr;
-        let b_lo2 = (lam_max - lam_min) * self.d_lr * self.d_rr / denom;
-        let a_lo = (lam_max * self.d_rr - lam_min * self.d_lr) / denom;
-        let c2 = self.c * self.c;
-        let k = self.unorm2 * c2 / self.delta;
-        let g_rr = self.g + k * beta2 / (a_rr * self.delta - beta2);
-        let g_lr = self.g + k * beta2 / (a_lr * self.delta - beta2);
-        let g_lo = self.g + k * b_lo2 / (a_lo * self.delta - b_lo2);
-        (g_rr, g_lr, g_lo)
+        self.core.last_bounds()
     }
 
     /// One quadrature iteration: one matvec + O(1) recurrences (+ O(n·i)
     /// when reorthogonalizing). Returns the updated bounds; after
-    /// exhaustion, keeps returning the exact value.
+    /// exhaustion (where the stored bounds are exact — breakdown or
+    /// `iter == n`), keeps returning them.
     pub fn step(&mut self) -> Bounds {
-        if self.exhausted || self.iter >= self.opts.max_iters {
-            let mut b = self.last.expect("step after exhaustion requires a prior step");
-            b.exact = self.exhausted;
-            return b;
+        if self.core.is_exhausted() || self.core.iterations() >= self.opts.max_iters {
+            return self
+                .core
+                .last_bounds()
+                .expect("step after exhaustion requires a prior step");
         }
-        self.iter += 1;
-
-        // --- Lanczos step: alpha, beta, v_next (in-place in w) ---
         self.op.matvec(&self.v_curr, &mut self.w);
-        let alpha: f64 = self.v_curr.iter().zip(&self.w).map(|(a, b)| a * b).sum();
-        for ((wi, &vc), &vp) in self.w.iter_mut().zip(&self.v_curr).zip(&self.v_prev) {
-            *wi -= alpha * vc + self.beta_prev * vp;
-        }
-        if self.opts.reorth == Reorth::Full {
-            if self.basis.is_empty() {
-                self.basis.push(self.v_curr.clone());
-            }
-            for _pass in 0..2 {
-                for q in &self.basis {
-                    let proj: f64 = q.iter().zip(&self.w).map(|(a, b)| a * b).sum();
-                    for (wi, &qi) in self.w.iter_mut().zip(q) {
-                        *wi -= proj * qi;
-                    }
-                }
-            }
-        }
-        let beta = self.w.iter().map(|x| x * x).sum::<f64>().sqrt();
-
-        // --- bound recurrences ---
-        if self.iter == 1 {
-            self.g = self.unorm2 / alpha;
-            self.c = 1.0;
-            self.delta = alpha;
-            self.d_lr = alpha - self.opts.lam_min;
-            self.d_rr = alpha - self.opts.lam_max;
-        } else {
-            let bp2 = self.beta_prev * self.beta_prev;
-            self.g += self.unorm2 * bp2 * self.c * self.c
-                / (self.delta * (alpha * self.delta - bp2));
-            self.c *= self.beta_prev / self.delta;
-            let delta_new = alpha - bp2 / self.delta;
-            self.d_lr = alpha - self.opts.lam_min - bp2 / self.d_lr;
-            self.d_rr = alpha - self.opts.lam_max - bp2 / self.d_rr;
-            self.delta = delta_new;
-        }
-
-        let breakdown = !(beta > Self::BREAKDOWN_TOL * alpha.abs().max(1.0));
-        let bounds = if breakdown {
-            // Krylov space exhausted: Gauss value is exact (Lemma 15).
-            self.exhausted = true;
-            Bounds {
-                iter: self.iter,
-                gauss: self.g,
-                radau_lower: self.g,
-                radau_upper: self.g,
-                lobatto: self.g,
-                exact: true,
-            }
-        } else {
-            let (g_rr, g_lr, g_lo) = self.corrections(beta);
-            Bounds {
-                iter: self.iter,
-                gauss: self.g,
-                radau_lower: g_rr,
-                radau_upper: g_lr,
-                lobatto: g_lo,
-                exact: false,
-            }
-        };
-
-        if !breakdown {
-            // advance Lanczos vectors without reallocating
-            let inv_beta = 1.0 / beta;
-            std::mem::swap(&mut self.v_prev, &mut self.v_curr);
-            for (vc, &wi) in self.v_curr.iter_mut().zip(&self.w) {
-                *vc = wi * inv_beta;
-            }
-            self.beta_prev = beta;
-            if self.opts.reorth == Reorth::Full {
-                self.basis.push(self.v_curr.clone());
-            }
-        }
-        if self.iter >= self.n {
-            self.exhausted = true;
-        }
-        self.last = Some(bounds);
-        bounds
+        // width-1 panel column 0 ≡ the scalar layout (see
+        // quadrature::recurrence for the full op sequence)
+        self.core
+            .step_column(&mut self.v_prev, &mut self.v_curr, &mut self.w, self.n, 1, 0)
     }
-
-    /// Breakdown threshold relative to the Ritz scale (shared with the
-    /// lockstep lanes of `quadrature::block`).
-    pub(crate) const BREAKDOWN_TOL: f64 = 1e-13;
 
     /// Run `k` iterations (or until exhaustion) collecting the history.
     pub fn run(&mut self, k: usize) -> Vec<Bounds> {
         let mut out = Vec::with_capacity(k);
         for _ in 0..k {
             out.push(self.step());
-            if self.exhausted {
+            if self.core.is_exhausted() {
                 break;
             }
         }
@@ -321,7 +206,7 @@ impl<'a> Gql<'a> {
     pub fn run_to_gap(&mut self, tol: f64) -> Bounds {
         loop {
             let b = self.step();
-            if b.exact || b.gap() <= tol || self.iter >= self.opts.max_iters {
+            if b.exact || b.gap() <= tol || self.core.iterations() >= self.opts.max_iters {
                 return b;
             }
         }

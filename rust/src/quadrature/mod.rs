@@ -1,7 +1,10 @@
 //! The paper's core: Gauss-Quadrature-Lanczos bounds on bilinear inverse
-//! forms, the block engine that batches many such runs over one shared
-//! operator, the retrospective judges built on them, conjugate gradients
-//! (both a baseline and the theory cross-check of Thm. 12), and Jacobi
+//! forms, the shared recurrence module both engines drive
+//! ([`recurrence`] — the single owner of the Sherman–Morrison update,
+//! Radau/Lobatto corrections, and breakdown detection), the block engine
+//! that batches many such runs over one shared operator, the
+//! retrospective judges built on them, conjugate gradients (both a
+//! baseline and the theory cross-check of Thm. 12), and Jacobi
 //! preconditioning (§5.4).
 
 pub mod block;
@@ -9,12 +12,14 @@ pub mod cg;
 pub mod gql;
 pub mod judge;
 pub mod precond;
+pub mod recurrence;
 
 pub use block::{block_solve, run_scalar, BlockGql, BlockResult, StopRule};
 pub use cg::{cg_solve, CgResult};
 pub use gql::{bif_bounds, Bounds, Gql, GqlOptions, Reorth};
 pub use judge::{
-    judge_dg, judge_ratio, judge_ratio_policy, judge_threshold, judge_threshold_src,
-    BoundSource, JudgeOutcome, JudgeStats, RefinePolicy,
+    judge_dg, judge_ratio, judge_ratio_block, judge_ratio_policy, judge_threshold,
+    judge_threshold_src, BoundSource, JudgeOutcome, JudgeStats, RefinePolicy,
 };
 pub use precond::JacobiPrecond;
+pub use recurrence::{LaneCore, Recurrence};

@@ -193,6 +193,7 @@ fn service_with_artifacts_is_oracle_correct_and_uses_pjrt() {
             lam_max: (ln * 1.01) as f32,
             t,
             op_key: None,
+            reorth: false,
         });
         assert_eq!(resp.decision, t < exact, "i={i} n={n}");
         if matches!(resp.path, RoutePath::Pjrt { .. }) {
