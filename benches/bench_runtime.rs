@@ -4,7 +4,7 @@
 //!
 //! Run: `cargo bench --bench bench_runtime`
 
-use gauss_bif::coordinator::{BatchPolicy, JudgeRequest, JudgeService};
+use gauss_bif::coordinator::{BatchPolicy, JudgeService, ThresholdRequest};
 use gauss_bif::datasets::random_spd_exact;
 use gauss_bif::runtime::GqlRuntime;
 use gauss_bif::util::bench::{Bencher, Stats, Table};
@@ -79,7 +79,7 @@ fn main() {
             let n = [12usize, 16, 24, 32][i % 4];
             let (a, l1, ln) = random_spd_exact(&mut rng, n, 0.8, 0.3);
             let u: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
-            rxs.push(svc.submit(JudgeRequest {
+            rxs.push(svc.submit(ThresholdRequest {
                 a: (0..n * n).map(|k| a.get(k / n, k % n) as f32).collect(),
                 u: u.iter().map(|&x| x as f32).collect(),
                 n,

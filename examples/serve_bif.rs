@@ -14,7 +14,7 @@
 //!
 //! Run: `cargo run --release --example serve_bif [-- <requests>]`
 
-use gauss_bif::coordinator::{BatchPolicy, JudgeRequest, JudgeService, RoutePath};
+use gauss_bif::coordinator::{BatchPolicy, JudgeService, RoutePath, ThresholdRequest};
 use gauss_bif::datasets::random_spd_exact;
 use gauss_bif::linalg::Cholesky;
 use gauss_bif::runtime::GqlRuntime;
@@ -67,7 +67,7 @@ fn main() {
         // thresholds at varying hardness (some decide in 1 iteration, some
         // need many)
         let t = exact * (0.6 + 0.8 * rng.f64());
-        let req = JudgeRequest {
+        let req = ThresholdRequest {
             a: (0..n * n).map(|k| a.get(k / n, k % n) as f32).collect(),
             u: u.iter().map(|&x| x as f32).collect(),
             n,
@@ -98,7 +98,7 @@ fn main() {
                     batched += 1;
                 }
             }
-            RoutePath::Native | RoutePath::NativeBlock { .. } => {}
+            RoutePath::Native | RoutePath::NativeBlock { .. } | RoutePath::NativeRace { .. } => {}
         }
     }
     let dt = t0.elapsed().as_secs_f64();

@@ -13,11 +13,17 @@
 //!   the paper's baseline (the one that times out on the large graphs).
 //! * `Incremental` — maintained inverses of `L_X` (insert) and `L_Y`
 //!   (remove): O(k²) per element, the strong classical baseline.
-//! * `Gauss` — retrospective Alg. 9 judging over submatrix views.
+//! * `Gauss` — the Δ⁺/Δ⁻ comparison race
+//!   ([`crate::quadrature::race::race_dg`], Alg. 9 semantics) over
+//!   submatrix views: under the default [`RacePolicy::Prune`] each
+//!   element's two quadratures stop the moment the log-gap brackets
+//!   separate; [`RacePolicy::Exhaustive`] refines both sides fully first
+//!   and decides identically (property-tested).
 
 use super::BifStrategy;
 use crate::linalg::{Cholesky, MaintainedInverse};
-use crate::quadrature::{judge_dg, GqlOptions};
+use crate::quadrature::race::{race_dg, RacePolicy};
+use crate::quadrature::GqlOptions;
 use crate::sparse::{Csr, SpectrumBounds, SubmatrixView};
 use crate::util::rng::Rng;
 
@@ -33,6 +39,9 @@ pub struct DgConfig {
     /// used to measure per-element baseline cost without running the whole
     /// O(n⁴) baseline (the partial result is for timing only)
     pub stop_after: Option<usize>,
+    /// Δ⁺/Δ⁻ comparison-race policy for the Gauss strategy (decisions are
+    /// policy-independent; iteration counts are not)
+    pub race: RacePolicy,
 }
 
 impl DgConfig {
@@ -43,7 +52,13 @@ impl DgConfig {
             max_judge_iters: usize::MAX,
             limit: None,
             stop_after: None,
+            race: RacePolicy::Prune,
         }
+    }
+
+    pub fn with_race(mut self, r: RacePolicy) -> Self {
+        self.race = r;
+        self
     }
 
     pub fn with_limit(mut self, l: usize) -> Self {
@@ -148,7 +163,7 @@ pub fn double_greedy(l: &Csr, cfg: DgConfig, rng: &mut Rng) -> DgResult {
                 let op_y = (!y_rest.is_empty())
                     .then_some((&view_y as &dyn crate::sparse::SymOp, uy.as_slice()));
                 let (ans, js) =
-                    judge_dg(op_x, op_y, l_ii, p, cfg.gql_opts(), cfg.gql_opts());
+                    race_dg(op_x, op_y, l_ii, p, cfg.gql_opts(), cfg.gql_opts(), cfg.race);
                 judge_iters_total += js.iters;
                 ans
             }
@@ -239,6 +254,34 @@ mod tests {
         );
         assert_eq!(res.elements, 10);
         assert!(res.chosen.iter().all(|&v| v < 10));
+    }
+
+    #[test]
+    fn race_policies_decide_identically() {
+        // the Δ⁺/Δ⁻ comparison race must pick the same set whether it
+        // stops at first bracket separation or refines both sides fully
+        forall(6, 0xDB, |rng| {
+            let n = 16 + rng.below(20);
+            let (l, w) = random_sparse_spd(rng, n, 0.25, 0.05);
+            let seed = rng.next_u64();
+            let run = |race| {
+                let mut r = Rng::new(seed);
+                double_greedy(
+                    &l,
+                    DgConfig::new(BifStrategy::Gauss, w).with_race(race),
+                    &mut r,
+                )
+            };
+            let pr = run(RacePolicy::Prune);
+            let ex = run(RacePolicy::Exhaustive);
+            assert_eq!(pr.chosen, ex.chosen, "policies diverged");
+            assert!(
+                pr.judge_iters_total <= ex.judge_iters_total,
+                "pruning refined more ({} vs {})",
+                pr.judge_iters_total,
+                ex.judge_iters_total
+            );
+        });
     }
 
     #[test]

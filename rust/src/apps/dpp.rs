@@ -23,7 +23,8 @@
 
 use super::BifStrategy;
 use crate::linalg::{Cholesky, MaintainedInverse};
-use crate::quadrature::block::{run_scalar, BlockGql, BlockResult, StopRule};
+use crate::quadrature::block::StopRule;
+use crate::quadrature::race::{Race, RacePolicy};
 use crate::quadrature::{judge_threshold, GqlOptions, Reorth};
 use crate::sparse::{Csr, SpectrumBounds, SubmatrixView};
 use crate::util::rng::Rng;
@@ -231,9 +232,13 @@ pub struct GreedyConfig {
     /// target subset size
     pub k: usize,
     /// relative bracket tolerance each candidate score is refined to
+    /// (when the race does not prune the candidate first)
     pub tol_rel: f64,
-    /// candidate-scoring panel width: 1 = scalar path (independent `Gql`
-    /// runs), > 1 scores panels of candidates through [`BlockGql`]
+    /// candidate-scoring panel width: 1 = scalar-layout lanes (bit-equal
+    /// to independent `Gql` runs), > 1 scores candidates in lockstep
+    /// panels. **Invariant:** a width of 0 is clamped to 1 — the scalar
+    /// path — mirroring the `max_iters` clamp in
+    /// [`crate::quadrature::Gql::new`] (previously an `assert!`).
     pub block_width: usize,
     /// Lanczos reorthogonalization for candidate scoring (§5.4): use
     /// [`Reorth::Full`] on ill-conditioned kernels where plain Lanczos
@@ -241,11 +246,25 @@ pub struct GreedyConfig {
     /// block path (the engines share one recurrence core), so selections
     /// remain width-independent.
     pub reorth: Reorth,
+    /// Candidate racing policy: [`RacePolicy::Prune`] (default) evicts
+    /// candidates whose gain bracket is dominated and stops each round as
+    /// soon as its argmax is determined; [`RacePolicy::Exhaustive`]
+    /// refines every candidate to `tol_rel` before comparing. Selections
+    /// are identical either way (see `quadrature::race`); only the panel
+    /// sweep count differs.
+    pub race: RacePolicy,
 }
 
 impl GreedyConfig {
     pub fn new(window: SpectrumBounds, k: usize) -> Self {
-        GreedyConfig { window, k, tol_rel: 1e-10, block_width: 16, reorth: Reorth::None }
+        GreedyConfig {
+            window,
+            k,
+            tol_rel: 1e-10,
+            block_width: 16,
+            reorth: Reorth::None,
+            race: RacePolicy::Prune,
+        }
     }
 
     pub fn with_block_width(mut self, w: usize) -> Self {
@@ -257,16 +276,10 @@ impl GreedyConfig {
         self.reorth = r;
         self
     }
-}
 
-/// Candidate-score estimate from a finished quadrature run (Gauss value
-/// when exact, bracket midpoint otherwise). Shared by the scalar and
-/// block paths so both score identically.
-fn bif_estimate(r: &BlockResult) -> f64 {
-    if r.bounds.exact {
-        r.bounds.gauss
-    } else {
-        r.bounds.mid()
+    pub fn with_race(mut self, r: RacePolicy) -> Self {
+        self.race = r;
+        self
     }
 }
 
@@ -274,68 +287,94 @@ fn bif_estimate(r: &BlockResult) -> f64 {
 /// singular update; greedy stops rather than add a non-PD element.
 const GAIN_FLOOR: f64 = 1e-12;
 
+/// Cumulative racing statistics for one [`greedy_map_stats`] run.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct GreedyStats {
+    /// selection rounds that scored candidates through the race (the
+    /// diagonal-only first round is free and not counted)
+    pub rounds: usize,
+    /// total `matvec_multi` panel sweeps spent scoring candidates
+    pub sweeps: usize,
+    /// candidates evicted by interval dominance across all rounds
+    pub pruned: usize,
+    /// rounds whose argmax was determined before every surviving
+    /// candidate reached `tol_rel`
+    pub decided_early: usize,
+}
+
 /// Greedy MAP inference: repeatedly add the candidate with the largest
 /// Schur complement `s_c = L_cc − L_{c,Y} L_Y^{-1} L_{Y,c}` (equivalently
 /// the largest log-det gain `log s_c`) until `cfg.k` elements are chosen
 /// or no candidate keeps `L_Y` positive definite.
-///
-/// Every round scores *all* remaining candidates against the same
-/// operator `L_Y` — exactly the shared-operator workload the block
-/// engine batches. With `cfg.block_width == 1` each candidate runs a
-/// scalar [`crate::quadrature::Gql`]; with larger widths candidates are
-/// scored in lockstep panels. Both paths produce bit-identical scores
-/// (see `quadrature::block`'s exactness contract), hence **identical
-/// selections** — asserted in the tests below.
 pub fn greedy_map(l: &Csr, cfg: &GreedyConfig) -> Vec<usize> {
-    assert!(cfg.block_width >= 1, "block_width must be at least 1");
+    greedy_map_stats(l, cfg).0
+}
+
+/// [`greedy_map`] plus per-run racing statistics (the `race` experiment
+/// and `bench_race` count panel sweeps through this entry).
+///
+/// Every round races *all* remaining candidates against the same operator
+/// `L_Y` through one [`Race`] (candidate `c`'s arm value is the marginal
+/// gain `L_cc − BIF`): under [`RacePolicy::Prune`] a candidate stops
+/// refining the moment its gain bracket falls below the best lower bound
+/// — the paper's "bounds tighten iteratively" turned into best-arm early
+/// termination (ROADMAP item). Selections are **identical** across
+/// policies and panel widths: per-lane scores are bit-identical to scalar
+/// runs (the block engine's exactness contract) and pruning only discards
+/// dominated candidates — asserted in the tests below and in
+/// `rust/tests/prop_race.rs`.
+pub fn greedy_map_stats(l: &Csr, cfg: &GreedyConfig) -> (Vec<usize>, GreedyStats) {
     let n = l.n;
     let k = cfg.k.min(n);
+    // clamp like Gql::new clamps max_iters: width 0 means "no batching",
+    // not "no panel" (ISSUE 3 satellite — this used to assert!)
+    let width = cfg.block_width.max(1);
     let opts = GqlOptions::new(cfg.window.lo, cfg.window.hi).with_reorth(cfg.reorth);
     let stop = StopRule::GapRel(cfg.tol_rel);
+    let mut stats = GreedyStats::default();
     let mut y: Vec<usize> = Vec::new(); // kept sorted (streaming views)
     let mut in_y = vec![false; n];
     while y.len() < k {
         let candidates: Vec<usize> = (0..n).filter(|&c| !in_y[c]).collect();
-        let mut best: Option<(usize, f64)> = None;
-        if y.is_empty() {
+        let chosen = if y.is_empty() {
+            // first round: gains are diagonal entries, no quadrature
+            let mut best: Option<(usize, f64)> = None;
             for &c in &candidates {
                 let gain = l.get(c, c);
                 if best.map_or(true, |(_, g)| gain > g) {
                     best = Some((c, gain));
                 }
             }
+            match best {
+                Some((c, gain)) if gain > GAIN_FLOOR => Some(c),
+                _ => None,
+            }
         } else {
             let view = SubmatrixView::new(l, &y);
-            let scores: Vec<f64> = if cfg.block_width == 1 {
-                candidates
-                    .iter()
-                    .map(|&c| bif_estimate(&run_scalar(&view, &view.column_of(c), opts, stop, false)))
-                    .collect()
-            } else {
-                let mut eng = BlockGql::new(&view, opts, cfg.block_width);
-                for &c in &candidates {
-                    eng.push(&view.column_of(c), stop);
-                }
-                // run_all returns in push order == candidate order
-                eng.run_all().iter().map(bif_estimate).collect()
-            };
-            for (&c, &bif) in candidates.iter().zip(&scores) {
-                let gain = l.get(c, c) - bif;
-                if best.map_or(true, |(_, g)| gain > g) {
-                    best = Some((c, gain));
-                }
+            let mut race = Race::new(&view, opts, width, cfg.race);
+            for &c in &candidates {
+                // arm value = L_cc − BIF, the marginal gain bracket
+                race.push_arm(&view.column_of(c), stop, l.get(c, c), -1.0);
             }
-        }
-        match best {
-            Some((c, gain)) if gain > GAIN_FLOOR => {
+            let out = race.run(Some(GAIN_FLOOR));
+            stats.rounds += 1;
+            stats.sweeps += out.stats.sweeps;
+            stats.pruned += out.stats.pruned();
+            if out.stats.decided_early {
+                stats.decided_early += 1;
+            }
+            out.winner.map(|a| candidates[a])
+        };
+        match chosen {
+            Some(c) => {
                 let pos = y.partition_point(|&m| m < c);
                 y.insert(pos, c);
                 in_y[c] = true;
             }
-            _ => break, // no PD-feasible candidate left
+            None => break, // no PD-feasible candidate left
         }
     }
-    y
+    (y, stats)
 }
 
 #[cfg(test)]
@@ -500,6 +539,39 @@ mod tests {
                 y.insert(pos, c);
             }
             assert_eq!(got, y, "quadrature greedy deviated from exact greedy");
+        });
+    }
+
+    #[test]
+    fn block_width_zero_is_clamped_to_scalar_path() {
+        // ISSUE 3 satellite: width 0 used to assert!; it now clamps to 1
+        // like Gql::new clamps max_iters
+        let mut rng = Rng::new(0xDA2);
+        let (l, w) = setup(&mut rng, 30, 0.2);
+        let base = GreedyConfig::new(w, 6);
+        let zero = greedy_map(&l, &base.with_block_width(0));
+        let one = greedy_map(&l, &base.with_block_width(1));
+        assert_eq!(zero, one, "width 0 must behave as the scalar path");
+        assert!(!zero.is_empty());
+    }
+
+    #[test]
+    fn race_policies_select_identically() {
+        forall(6, 0xDA3, |rng| {
+            let n = 20 + rng.below(24);
+            let (l, w) = setup(rng, n, 0.2);
+            let k = 3 + rng.below(6);
+            let base = GreedyConfig::new(w, k).with_block_width(1 + rng.below(8));
+            let (ex, ex_stats) =
+                greedy_map_stats(&l, &base.with_race(RacePolicy::Exhaustive));
+            let (pr, pr_stats) = greedy_map_stats(&l, &base.with_race(RacePolicy::Prune));
+            assert_eq!(ex, pr, "pruning changed the selection");
+            assert!(
+                pr_stats.sweeps <= ex_stats.sweeps,
+                "pruning spent more sweeps ({} vs {})",
+                pr_stats.sweeps,
+                ex_stats.sweeps
+            );
         });
     }
 

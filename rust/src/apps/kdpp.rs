@@ -64,11 +64,14 @@ impl<'a> KdppSampler<'a> {
     }
 
     /// Start the chain from the greedy MAP subset of size `k` instead of
-    /// a uniform one: candidate scoring runs through the block quadrature
-    /// engine ([`crate::quadrature::block::BlockGql`]) in panels of
-    /// `block_width`, so the warm start costs one greedy sweep of panel
-    /// matvecs instead of `k · N` scalar runs. A high-likelihood start
-    /// cuts chain burn-in on the peaked kernels of §5.3.
+    /// a uniform one: candidate scoring runs through the racing scheduler
+    /// ([`crate::quadrature::race::Race`]) over panels of `block_width`
+    /// lanes, so the warm start costs one greedy sweep of panel matvecs —
+    /// with dominated candidates pruned per round (the default
+    /// [`crate::quadrature::race::RacePolicy::Prune`], which provably
+    /// does not change the selected subset) — instead of `k · N` scalar
+    /// runs. A high-likelihood start cuts chain burn-in on the peaked
+    /// kernels of §5.3.
     ///
     /// Greedy can stall before `k` picks on near-singular kernels (no
     /// candidate keeps a usable marginal gain); the set is then topped up

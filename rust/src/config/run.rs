@@ -50,6 +50,7 @@ pub enum ExperimentConfig {
     Table2,
     Rates,
     Block,
+    Race,
     Serve,
 }
 
@@ -61,6 +62,7 @@ impl ExperimentConfig {
             "table2" => Some(Self::Table2),
             "rates" => Some(Self::Rates),
             "block" => Some(Self::Block),
+            "race" => Some(Self::Race),
             "serve" => Some(Self::Serve),
             _ => None,
         }
@@ -89,6 +91,13 @@ pub struct RunConfig {
     /// from this config (the `block` experiment sweep, `serve` requests);
     /// JSON accepts a bool or the strings "full"/"none"
     pub reorth: bool,
+    /// candidate racing for config-driven greedy runs (the `race`
+    /// experiment's raced arm, `serve` argmax demo batches): true =
+    /// prune dominated candidates by interval dominance, false = score
+    /// every candidate exhaustively. Selections are identical either way;
+    /// only panel sweeps differ. JSON accepts a bool or the strings
+    /// "prune"/"exhaustive"
+    pub race: bool,
     /// extra free-form knobs
     pub extra: BTreeMap<String, String>,
 }
@@ -104,6 +113,7 @@ impl Default for RunConfig {
             repeats: 3,
             block_width: 16,
             reorth: false,
+            race: true,
             extra: BTreeMap::new(),
         }
     }
@@ -137,6 +147,11 @@ impl RunConfig {
         match v.get("reorth") {
             Some(Json::Bool(b)) => c.reorth = *b,
             Some(Json::Str(s)) => c.reorth = s.eq_ignore_ascii_case("full"),
+            _ => {}
+        }
+        match v.get("race") {
+            Some(Json::Bool(b)) => c.race = *b,
+            Some(Json::Str(s)) => c.race = s.eq_ignore_ascii_case("prune"),
             _ => {}
         }
         if let Some(Json::Obj(m)) = v.get("extra") {
@@ -208,9 +223,21 @@ mod tests {
     }
 
     #[test]
+    fn race_knob_parses_bool_and_string_forms() {
+        assert!(RunConfig::default().race, "racing is the default");
+        assert!(RunConfig::from_json(r#"{"race": true}"#).unwrap().race);
+        assert!(RunConfig::from_json(r#"{"race": "prune"}"#).unwrap().race);
+        assert!(RunConfig::from_json(r#"{"race": "Prune"}"#).unwrap().race);
+        assert!(!RunConfig::from_json(r#"{"race": "exhaustive"}"#).unwrap().race);
+        assert!(!RunConfig::from_json(r#"{"race": false}"#).unwrap().race);
+        assert!(RunConfig::from_json(r#"{}"#).unwrap().race);
+    }
+
+    #[test]
     fn experiment_names() {
         assert_eq!(ExperimentConfig::from_name("fig1"), Some(ExperimentConfig::Fig1));
         assert_eq!(ExperimentConfig::from_name("block"), Some(ExperimentConfig::Block));
+        assert_eq!(ExperimentConfig::from_name("race"), Some(ExperimentConfig::Race));
         assert_eq!(ExperimentConfig::from_name("nope"), None);
     }
 }

@@ -12,4 +12,7 @@ pub mod batcher;
 pub mod service;
 
 pub use batcher::{BatchPolicy, Bucketizer};
-pub use service::{JudgeRequest, JudgeResponse, JudgeService, RoutePath};
+pub use service::{
+    ArgmaxRequest, ArgmaxResponse, JudgePending, JudgeRequest, JudgeResponse, JudgeService,
+    RoutePath, ThresholdRequest,
+};

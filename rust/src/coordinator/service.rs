@@ -6,15 +6,31 @@
 //! over a channel, falling back to the native GQL path when the executor
 //! is absent (no artifacts) or reports an error.
 //!
+//! Requests come in two kinds ([`JudgeRequest`]): classic threshold
+//! judgements (`t < u^T A^{-1} u`?) and **argmax batches**
+//! ([`JudgeRequest::Argmax`]) — N candidate queries against one operator,
+//! raced through the native scheduler
+//! ([`crate::quadrature::race::Race`]) so remote callers get best-arm
+//! early termination without shipping the kernel N times.
+//!
+//! Routing: threshold requests small enough for a PJRT bucket dispatch
+//! there, unless same-operator coalescing applies *and* the router's
+//! latency EWMAs ([`ServiceMetrics::prefer_native_block`]) say the native
+//! block path has recently been faster — the ROADMAP "prefer the faster
+//! path" heuristic. Argmax requests always run native (the
+//! fixed-iteration artifacts cannot early-terminate).
+//!
 //! Lifecycle: [`JudgeService::start`] spawns workers (+ executor); clients
-//! call [`JudgeService::submit`] (returns a receiver) or
-//! [`JudgeService::judge_blocking`]. Drop/`shutdown` drains and joins.
+//! call [`JudgeService::submit`] / [`JudgeService::submit_argmax`] (each
+//! returns a receiver) or the blocking wrappers. Drop/`shutdown` drains
+//! and joins.
 
 use super::batcher::{BatchPolicy, Bucketizer};
 use crate::config::run::parse_manifest;
 use crate::linalg::DMat;
 use crate::metrics::ServiceMetrics;
 use crate::quadrature::block::{BlockGql, StopRule};
+use crate::quadrature::race::{Race, RacePolicy};
 use crate::quadrature::{judge_threshold, GqlOptions, Reorth};
 use crate::runtime::{BoundsHistory, GqlRuntime};
 use std::path::PathBuf;
@@ -25,7 +41,7 @@ use std::time::Instant;
 
 /// A dense threshold-judgement query: decide `t < u^T A^{-1} u`.
 #[derive(Clone, Debug)]
-pub struct JudgeRequest {
+pub struct ThresholdRequest {
     /// row-major dense symmetric matrix, `n*n`
     pub a: Vec<f32>,
     pub u: Vec<f32>,
@@ -48,6 +64,40 @@ pub struct JudgeRequest {
     pub reorth: bool,
 }
 
+/// An argmax batch: find the candidate with the largest
+/// `offset_i ± u_i^T A^{-1} u_i` over one shared operator, racing all
+/// candidates through the native scheduler (dominated candidates stop
+/// refining early; the winner is identical to exhaustive scoring).
+#[derive(Clone, Debug)]
+pub struct ArgmaxRequest {
+    /// row-major dense symmetric matrix, `n*n` — shared by every arm
+    pub a: Vec<f32>,
+    pub n: usize,
+    pub lam_min: f32,
+    pub lam_max: f32,
+    /// candidate query vectors, each of length `n`
+    pub us: Vec<Vec<f32>>,
+    /// per-arm affine offsets (missing entries default to 0)
+    pub offsets: Vec<f64>,
+    /// arm value orientation: `false` ⇒ `offset + BIF` (plain largest
+    /// BIF), `true` ⇒ `offset − BIF` (DPP marginal-gain semantics)
+    pub negate: bool,
+    /// relative bracket tolerance an arm refines to when not pruned first
+    pub tol_rel: f64,
+    /// `true` (the point of the kind): prune dominated arms; `false`
+    /// scores every arm exhaustively — same winner, more sweeps
+    pub prune: bool,
+    /// §5.4 full reorthogonalization for every arm
+    pub reorth: bool,
+}
+
+/// The coordinator's request kinds.
+#[derive(Clone, Debug)]
+pub enum JudgeRequest {
+    Threshold(ThresholdRequest),
+    Argmax(ArgmaxRequest),
+}
+
 /// Which path served a request.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum RoutePath {
@@ -58,9 +108,11 @@ pub enum RoutePath {
     /// native block GQL: `batch` co-keyed requests coalesced into one
     /// shared-operator `BlockGql` run
     NativeBlock { batch: usize },
+    /// native racing scheduler: one argmax batch of `arms` candidates
+    NativeRace { arms: usize },
 }
 
-/// Service answer.
+/// Service answer to a threshold request.
 #[derive(Clone, Debug)]
 pub struct JudgeResponse {
     pub decision: bool,
@@ -70,18 +122,57 @@ pub struct JudgeResponse {
     pub path: RoutePath,
 }
 
-struct Queued {
-    req: JudgeRequest,
+/// Service answer to an argmax request.
+#[derive(Clone, Debug)]
+pub struct ArgmaxResponse {
+    /// winning arm index (push order); `None` for empty or malformed
+    /// batches (arm/operator dimension mismatch)
+    pub winner: Option<usize>,
+    /// panel sweeps the race spent
+    pub sweeps: usize,
+    /// arms pruned by interval dominance
+    pub pruned: usize,
+    pub path: RoutePath,
+}
+
+/// Receiver for a kind-dispatched [`JudgeService::submit_request`].
+pub enum JudgePending {
+    Threshold(Receiver<JudgeResponse>),
+    Argmax(Receiver<ArgmaxResponse>),
+}
+
+struct ThreshQueued {
+    req: ThresholdRequest,
     enqueued: Instant,
     reply: Sender<JudgeResponse>,
+}
+
+struct ArgmaxQueued {
+    req: ArgmaxRequest,
+    enqueued: Instant,
+    reply: Sender<ArgmaxResponse>,
+}
+
+enum Queued {
+    Threshold(ThreshQueued),
+    Argmax(ArgmaxQueued),
+}
+
+impl Queued {
+    fn enqueued(&self) -> Instant {
+        match self {
+            Queued::Threshold(t) => t.enqueued,
+            Queued::Argmax(a) => a.enqueued,
+        }
+    }
 }
 
 /// Batch job sent to the executor thread.
 struct ExecJob {
     bucket: usize,
-    items: Vec<Queued>,
+    items: Vec<ThreshQueued>,
     /// per-item histories (None on execution failure)
-    reply: Sender<(Vec<Queued>, Option<Vec<BoundsHistory>>)>,
+    reply: Sender<(Vec<ThreshQueued>, Option<Vec<BoundsHistory>>)>,
 }
 
 struct Shared {
@@ -158,25 +249,61 @@ impl JudgeService {
         Ok(JudgeService { shared, metrics, workers, executor })
     }
 
-    /// Enqueue a request; the receiver yields exactly one response.
-    pub fn submit(&self, req: JudgeRequest) -> Receiver<JudgeResponse> {
-        self.metrics.requests.inc();
-        let (tx, rx) = channel();
+    fn enqueue(&self, item: Queued) {
         {
             let mut q = self.shared.queue.lock().unwrap();
-            q.push(Queued { req, enqueued: Instant::now(), reply: tx });
+            q.push(item);
         }
         // notify_all, not notify_one: besides idle workers, batch-forming
         // and coalescing drains also sleep on this condvar waiting for
         // stragglers; a single wakeup could land on a drainer the new item
         // doesn't match while an idle worker keeps sleeping.
         self.shared.cv.notify_all();
+    }
+
+    /// Enqueue a threshold request; the receiver yields exactly one
+    /// response.
+    pub fn submit(&self, req: ThresholdRequest) -> Receiver<JudgeResponse> {
+        self.metrics.requests.inc();
+        let (tx, rx) = channel();
+        self.enqueue(Queued::Threshold(ThreshQueued {
+            req,
+            enqueued: Instant::now(),
+            reply: tx,
+        }));
         rx
     }
 
-    /// Submit and wait.
-    pub fn judge_blocking(&self, req: JudgeRequest) -> JudgeResponse {
+    /// Enqueue an argmax batch; the receiver yields exactly one response.
+    pub fn submit_argmax(&self, req: ArgmaxRequest) -> Receiver<ArgmaxResponse> {
+        self.metrics.requests.inc();
+        let (tx, rx) = channel();
+        self.enqueue(Queued::Argmax(ArgmaxQueued {
+            req,
+            enqueued: Instant::now(),
+            reply: tx,
+        }));
+        rx
+    }
+
+    /// Kind-dispatching entry for callers holding a [`JudgeRequest`].
+    pub fn submit_request(&self, req: JudgeRequest) -> JudgePending {
+        match req {
+            JudgeRequest::Threshold(r) => JudgePending::Threshold(self.submit(r)),
+            JudgeRequest::Argmax(r) => JudgePending::Argmax(self.submit_argmax(r)),
+        }
+    }
+
+    /// Submit a threshold request and wait.
+    pub fn judge_blocking(&self, req: ThresholdRequest) -> JudgeResponse {
         self.submit(req).recv().expect("service dropped the reply")
+    }
+
+    /// Submit an argmax batch and wait.
+    pub fn argmax_blocking(&self, req: ArgmaxRequest) -> ArgmaxResponse {
+        self.submit_argmax(req)
+            .recv()
+            .expect("service dropped the reply")
     }
 
     /// Stop workers and join them.
@@ -296,6 +423,16 @@ fn worker_loop(
             }
         };
 
+        // argmax batches always run native: the fixed-iteration PJRT
+        // artifacts cannot prune dominated arms mid-flight
+        let first = match first {
+            Queued::Argmax(item) => {
+                serve_argmax(&metrics, item);
+                continue;
+            }
+            Queued::Threshold(item) => item,
+        };
+
         let dim = first.req.n;
         // reorth requests always run native: the fixed-iteration PJRT
         // artifacts do not reorthogonalize, so routing them to an
@@ -304,17 +441,23 @@ fn worker_loop(
             .bucket(dim)
             .filter(|_| dim <= policy.native_threshold && !first.req.reorth);
         let sender = { exec_tx.lock().unwrap().clone() };
-        let (bucket, sender) = match (bucket, sender) {
-            (Some(b), Some(s)) => (b, s),
-            _ => {
-                if policy.coalesce && first.req.op_key.is_some() && policy.max_batch > 1 {
-                    let group = drain_coalesced(&shared, &first, &policy);
-                    serve_native_block(&metrics, first, group);
-                } else {
-                    serve_native(&metrics, first);
-                }
-                continue;
+        let coalescible = policy.coalesce && first.req.op_key.is_some() && policy.max_batch > 1;
+        // EWMA routing (ROADMAP): a coalescible request with a viable
+        // PJRT bucket goes native anyway when the native block path has
+        // recently been faster per request — or is still unmeasured, in
+        // which case it claims this one request as its exploration sample
+        let use_pjrt = matches!((&bucket, &sender), (Some(_), Some(_)))
+            && !(coalescible && metrics.prefer_native_block());
+        let (bucket, sender) = if use_pjrt {
+            (bucket.expect("checked above"), sender.expect("checked above"))
+        } else {
+            if coalescible {
+                let group = drain_coalesced(&shared, &first, &policy);
+                serve_native_block(&metrics, first, group);
+            } else {
+                serve_native(&metrics, first);
             }
+            continue;
         };
 
         // form a batch from same-bucket requests, sleeping on the condvar
@@ -325,13 +468,17 @@ fn worker_loop(
         {
             let mut q = shared.queue.lock().unwrap();
             while batch.len() < policy.max_batch {
-                // never absorb a reorth request into an accelerator batch:
-                // it must keep the native-path guarantee (see the bucket
-                // filter above)
+                // never absorb a reorth request (native-path guarantee,
+                // see the bucket filter above) or an argmax batch into an
+                // accelerator batch
                 if let Some(pos) = q.iter().position(|item| {
-                    !item.req.reorth && bucketizer.bucket(item.req.n) == Some(bucket)
+                    matches!(item, Queued::Threshold(t)
+                        if !t.req.reorth && bucketizer.bucket(t.req.n) == Some(bucket))
                 }) {
-                    batch.push(q.remove(pos));
+                    match q.remove(pos) {
+                        Queued::Threshold(t) => batch.push(t),
+                        Queued::Argmax(_) => unreachable!("position matched Threshold"),
+                    }
                     continue;
                 }
                 let now = Instant::now();
@@ -347,6 +494,7 @@ fn worker_loop(
         metrics.batch_size.lock().unwrap().record(batch.len() as f64);
         let (reply_tx, reply_rx) = channel();
         let n_items = batch.len();
+        let dispatched = Instant::now();
         if sender
             .send(ExecJob { bucket, items: batch, reply: reply_tx })
             .is_err()
@@ -361,6 +509,11 @@ fn worker_loop(
         };
         match histories {
             Some(hists) => {
+                // feed the router's path-preference EWMA with the per-
+                // request service latency of this successful dispatch
+                metrics
+                    .pjrt_batch_ns
+                    .record(dispatched.elapsed().as_nanos() as f64 / n_items as f64);
                 for (item, h) in items.into_iter().zip(hists) {
                     if h.is_empty() {
                         // a runtime that records zero iterations has
@@ -406,15 +559,23 @@ fn pop_oldest(q: &mut Vec<Queued>) -> Option<Queued> {
     let idx = q
         .iter()
         .enumerate()
-        .min_by_key(|(_, item)| item.enqueued)
+        .min_by_key(|(_, item)| item.enqueued())
         .map(|(i, _)| i)?;
     Some(q.remove(idx))
 }
 
 /// Coalesce key: requests may share a `BlockGql` panel only when the
 /// operator id, dimension, spectrum window, and reorthogonalization mode
-/// all agree (the engine's `GqlOptions` are panel-wide).
-fn coalesce_key(req: &JudgeRequest) -> Option<(u64, usize, u32, u32, bool)> {
+/// all agree (the engine's `GqlOptions` are panel-wide). Argmax batches
+/// never coalesce (they already are batches).
+fn coalesce_key(item: &Queued) -> Option<(u64, usize, u32, u32, bool)> {
+    match item {
+        Queued::Threshold(t) => thresh_key(&t.req),
+        Queued::Argmax(_) => None,
+    }
+}
+
+fn thresh_key(req: &ThresholdRequest) -> Option<(u64, usize, u32, u32, bool)> {
     req.op_key
         .map(|k| (k, req.n, req.lam_min.to_bits(), req.lam_max.to_bits(), req.reorth))
 }
@@ -425,17 +586,20 @@ fn coalesce_key(req: &JudgeRequest) -> Option<(u64, usize, u32, u32, bool)> {
 /// batchable, so a bounded wait is the right trade, but a lone keyed
 /// request now parks instead of burning a core for the full 200µs
 /// default (the ROADMAP's named latency bug).
-fn drain_coalesced(shared: &Shared, first: &Queued, policy: &BatchPolicy) -> Vec<Queued> {
-    let key = coalesce_key(&first.req).expect("caller checked op_key");
-    let mut group: Vec<Queued> = Vec::new();
+fn drain_coalesced(shared: &Shared, first: &ThreshQueued, policy: &BatchPolicy) -> Vec<ThreshQueued> {
+    let key = thresh_key(&first.req).expect("caller checked op_key");
+    let mut group: Vec<ThreshQueued> = Vec::new();
     let deadline = Instant::now() + policy.max_wait;
     let mut q = shared.queue.lock().unwrap();
     loop {
-        let keys: Vec<_> = q.iter().map(|item| coalesce_key(&item.req)).collect();
+        let keys: Vec<_> = q.iter().map(coalesce_key).collect();
         let want = policy.max_batch - 1 - group.len();
         let pos = Bucketizer::coalesce_positions(&key, &keys, want);
         for p in pos.into_iter().rev() {
-            group.push(q.remove(p));
+            match q.remove(p) {
+                Queued::Threshold(t) => group.push(t),
+                Queued::Argmax(_) => unreachable!("argmax items have no coalesce key"),
+            }
         }
         let now = Instant::now();
         if group.len() + 1 >= policy.max_batch
@@ -453,9 +617,17 @@ fn drain_coalesced(shared: &Shared, first: &Queued, policy: &BatchPolicy) -> Vec
 /// the matrix is converted to f64 once and one panel sweep advances every
 /// lane. Per-lane decisions are identical to the scalar native path (the
 /// block engine's exactness contract).
-fn serve_native_block(metrics: &ServiceMetrics, first: Queued, others: Vec<Queued>) {
+fn serve_native_block(metrics: &ServiceMetrics, first: ThreshQueued, others: Vec<ThreshQueued>) {
+    let served = Instant::now();
     if others.is_empty() {
-        return serve_native(metrics, first);
+        // degenerate group (no co-keyed stragglers arrived): serve scalar,
+        // but still record the native-path EWMA so the router's
+        // exploration sample lands even without real coalescing
+        serve_native(metrics, first);
+        metrics
+            .native_block_ns
+            .record(served.elapsed().as_nanos() as f64);
+        return;
     }
     let mut items = Vec::with_capacity(1 + others.len());
     items.push(first);
@@ -473,13 +645,17 @@ fn serve_native_block(metrics: &ServiceMetrics, first: Queued, others: Vec<Queue
     );
     let a = DMat::from_fn(n, n, |i, j| items[0].req.a[i * n + j] as f64);
     let opts = GqlOptions::new(items[0].req.lam_min as f64, items[0].req.lam_max as f64)
-        .with_reorth(reorth_mode(&items[0].req));
+        .with_reorth(reorth_mode(items[0].req.reorth));
     let mut eng = BlockGql::new(&a, opts, batch);
     for item in &items {
         let u: Vec<f64> = item.req.u.iter().map(|&x| x as f64).collect();
         eng.push(&u, StopRule::Threshold(item.req.t));
     }
     let results = eng.run_all(); // sorted by id == items order
+    // feed the router's path-preference EWMA (per-request service time)
+    metrics
+        .native_block_ns
+        .record(served.elapsed().as_nanos() as f64 / batch as f64);
     for (item, r) in items.into_iter().zip(results) {
         metrics.judge_iters.lock().unwrap().record(r.iters as f64);
         metrics
@@ -496,22 +672,66 @@ fn serve_native_block(metrics: &ServiceMetrics, first: Queued, others: Vec<Queue
     }
 }
 
+/// Serve an argmax batch through the native racing scheduler: all arms
+/// share one operator panel; dominated arms are pruned (when requested)
+/// and the race ends the moment the winner is determined.
+fn serve_argmax(metrics: &ServiceMetrics, item: ArgmaxQueued) {
+    let req = item.req;
+    let arms = req.us.len();
+    metrics.races.inc();
+    let path = RoutePath::NativeRace { arms };
+    let malformed = req.us.iter().any(|u| u.len() != req.n)
+        || req.n == 0
+        || req.a.len() != req.n * req.n
+        || !(req.lam_min > 0.0 && req.lam_max > req.lam_min);
+    if arms == 0 || malformed {
+        let _ = item
+            .reply
+            .send(ArgmaxResponse { winner: None, sweeps: 0, pruned: 0, path });
+        return;
+    }
+    let n = req.n;
+    let a = DMat::from_fn(n, n, |i, j| req.a[i * n + j] as f64);
+    let opts = GqlOptions::new(req.lam_min as f64, req.lam_max as f64)
+        .with_reorth(reorth_mode(req.reorth));
+    let policy = if req.prune { RacePolicy::Prune } else { RacePolicy::Exhaustive };
+    let scale = if req.negate { -1.0 } else { 1.0 };
+    let mut race = Race::new(&a, opts, arms, policy);
+    for (i, u) in req.us.iter().enumerate() {
+        let uf: Vec<f64> = u.iter().map(|&x| x as f64).collect();
+        let offset = req.offsets.get(i).copied().unwrap_or(0.0);
+        race.push_arm(&uf, StopRule::GapRel(req.tol_rel.max(0.0)), offset, scale);
+    }
+    let out = race.run(None);
+    metrics
+        .latency_ns
+        .lock()
+        .unwrap()
+        .record(item.enqueued.elapsed().as_nanos() as f64);
+    let _ = item.reply.send(ArgmaxResponse {
+        winner: out.winner,
+        sweeps: out.stats.sweeps,
+        pruned: out.stats.pruned(),
+        path,
+    });
+}
+
 /// The reorthogonalization mode a request asked for.
-fn reorth_mode(req: &JudgeRequest) -> Reorth {
-    if req.reorth {
+fn reorth_mode(reorth: bool) -> Reorth {
+    if reorth {
         Reorth::Full
     } else {
         Reorth::None
     }
 }
 
-fn serve_native(metrics: &ServiceMetrics, item: Queued) {
+fn serve_native(metrics: &ServiceMetrics, item: ThreshQueued) {
     metrics.native_fallbacks.inc();
     let n = item.req.n;
     let a = DMat::from_fn(n, n, |i, j| item.req.a[i * n + j] as f64);
     let u: Vec<f64> = item.req.u.iter().map(|&x| x as f64).collect();
     let opts = GqlOptions::new(item.req.lam_min as f64, item.req.lam_max as f64)
-        .with_reorth(reorth_mode(&item.req));
+        .with_reorth(reorth_mode(item.req.reorth));
     let (decision, stats) = judge_threshold(&a, &u, item.req.t, opts);
     metrics.judge_iters.lock().unwrap().record(stats.iters as f64);
     metrics
@@ -533,12 +753,12 @@ mod tests {
     use crate::linalg::Cholesky;
     use crate::util::rng::Rng;
 
-    pub fn make_request(rng: &mut Rng, n: usize, t_factor: f64) -> (JudgeRequest, bool) {
+    pub fn make_request(rng: &mut Rng, n: usize, t_factor: f64) -> (ThresholdRequest, bool) {
         let (a, l1, ln) = random_spd_exact(rng, n, 0.6, 0.2);
         let u: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
         let exact = Cholesky::factor(&a).unwrap().bif(&u);
         let t = exact * t_factor;
-        let req = JudgeRequest {
+        let req = ThresholdRequest {
             a: (0..n * n).map(|k| a.get(k / n, k % n) as f32).collect(),
             u: u.iter().map(|&x| x as f32).collect(),
             n,
@@ -644,7 +864,7 @@ mod tests {
             let exact = ch.bif(&u);
             let t = exact * (0.55 + 0.1 * i as f64);
             wants.push(t < exact);
-            rxs.push(svc.submit(JudgeRequest {
+            rxs.push(svc.submit(ThresholdRequest {
                 a: af.clone(),
                 u: u.iter().map(|&x| x as f32).collect(),
                 n,
@@ -669,6 +889,10 @@ mod tests {
             "expected at least one coalesced block run (got {block_served})"
         );
         assert!(svc.metrics.coalesced_blocks.get() >= 1);
+        assert!(
+            svc.metrics.native_block_ns.get().is_some(),
+            "block runs must feed the router EWMA"
+        );
         svc.shutdown();
     }
 
@@ -702,7 +926,7 @@ mod tests {
             let exact = ch.bif(&u);
             let t = exact * (0.6 + 0.1 * i as f64);
             wants.push(t < exact);
-            rxs.push(svc.submit(JudgeRequest {
+            rxs.push(svc.submit(ThresholdRequest {
                 a: af.clone(),
                 u: u.iter().map(|&x| x as f32).collect(),
                 n,
@@ -730,5 +954,95 @@ mod tests {
         assert_eq!(resp.decision, want);
         assert_eq!(resp.path, RoutePath::Native);
         assert_eq!(svc.metrics.coalesced_blocks.get(), 0);
+    }
+
+    /// Build an argmax batch over one random SPD operator; returns the
+    /// request plus the oracle winner (largest `offset − BIF`).
+    fn make_argmax(rng: &mut Rng, n: usize, arms: usize) -> (ArgmaxRequest, Option<usize>) {
+        let (a, l1, ln) = random_spd_exact(rng, n, 0.6, 0.2);
+        let ch = Cholesky::factor(&a).unwrap();
+        let mut us = Vec::new();
+        let mut offsets = Vec::new();
+        let mut best: Option<(usize, f64)> = None;
+        for i in 0..arms {
+            let u: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let off = 2.0 + rng.f64() * 3.0;
+            let val = off - ch.bif(&u);
+            if best.map_or(true, |(_, g)| val > g) {
+                best = Some((i, val));
+            }
+            us.push(u.iter().map(|&x| x as f32).collect());
+            offsets.push(off);
+        }
+        let req = ArgmaxRequest {
+            a: (0..n * n).map(|k| a.get(k / n, k % n) as f32).collect(),
+            n,
+            lam_min: (l1 * 0.99) as f32,
+            lam_max: (ln * 1.01) as f32,
+            us,
+            offsets,
+            negate: true,
+            tol_rel: 1e-10,
+            prune: true,
+            reorth: false,
+        };
+        (req, best.map(|(i, _)| i))
+    }
+
+    #[test]
+    fn argmax_batches_race_to_the_oracle_winner() {
+        let svc = JudgeService::start(None, BatchPolicy::default(), 2).unwrap();
+        let mut rng = Rng::new(0x5E8);
+        for arms in [1usize, 3, 6] {
+            let (req, want) = make_argmax(&mut rng, 16, arms);
+            // pruned and exhaustive must crown the same winner
+            let mut exhaustive = req.clone();
+            exhaustive.prune = false;
+            let pr = svc.argmax_blocking(req);
+            let ex = svc.argmax_blocking(exhaustive);
+            assert_eq!(pr.winner, want, "{arms} arms (prune)");
+            assert_eq!(ex.winner, want, "{arms} arms (exhaustive)");
+            assert_eq!(pr.path, RoutePath::NativeRace { arms });
+            assert!(pr.sweeps <= ex.sweeps, "pruning must not add sweeps");
+        }
+        assert!(svc.metrics.races.get() >= 6);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn malformed_argmax_batches_answer_none() {
+        let svc = JudgeService::start(None, BatchPolicy::default(), 1).unwrap();
+        let mut rng = Rng::new(0x5E9);
+        let (mut req, _) = make_argmax(&mut rng, 12, 3);
+        req.us[1].pop(); // dimension mismatch
+        let resp = svc.argmax_blocking(req);
+        assert_eq!(resp.winner, None);
+        assert_eq!(resp.sweeps, 0);
+        // empty batch
+        let (mut req, _) = make_argmax(&mut rng, 12, 2);
+        req.us.clear();
+        req.offsets.clear();
+        let resp = svc.argmax_blocking(req);
+        assert_eq!(resp.winner, None);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn submit_request_dispatches_both_kinds() {
+        let svc = JudgeService::start(None, BatchPolicy::default(), 1).unwrap();
+        let mut rng = Rng::new(0x5EA);
+        let (treq, twant) = make_request(&mut rng, 12, 0.7);
+        let (areq, awant) = make_argmax(&mut rng, 12, 4);
+        let tp = svc.submit_request(JudgeRequest::Threshold(treq));
+        let ap = svc.submit_request(JudgeRequest::Argmax(areq));
+        match tp {
+            JudgePending::Threshold(rx) => assert_eq!(rx.recv().unwrap().decision, twant),
+            JudgePending::Argmax(_) => panic!("wrong reply kind"),
+        }
+        match ap {
+            JudgePending::Argmax(rx) => assert_eq!(rx.recv().unwrap().winner, awant),
+            JudgePending::Threshold(_) => panic!("wrong reply kind"),
+        }
+        svc.shutdown();
     }
 }

@@ -7,6 +7,7 @@
 pub mod block;
 pub mod fig1;
 pub mod fig2;
+pub mod race;
 pub mod rates;
 pub mod table2;
 

@@ -1,0 +1,176 @@
+//! Racing-vs-exhaustive greedy MAP sweep: the same selection computed
+//! with [`RacePolicy::Exhaustive`] (every candidate refined to `tol_rel`
+//! each round — the pre-racing behavior) and [`RacePolicy::Prune`]
+//! (dominated candidates evicted, rounds ending at first decision),
+//! reporting **panel sweeps** for both. Sweeps — `matvec_multi`
+//! traversals of the shared operator — are the paper-faithful cost model:
+//! they count quadrature work directly instead of wall-clock noise.
+//!
+//! The kernel is *gapped*: a handful of diagonal entries are boosted so a
+//! few candidates clearly dominate each round, which is where racing
+//! shines (Thm. 3.3–3.4: the brackets separate long before `tol_rel`).
+//! Selections must be identical across policies — the sweep doubles as an
+//! end-to-end check of the race's selection-identity guarantee.
+
+use crate::apps::dpp::{greedy_map_stats, GreedyConfig};
+use crate::config::RunConfig;
+use crate::experiments::time_secs;
+use crate::quadrature::race::RacePolicy;
+use crate::quadrature::Reorth;
+use crate::sparse::{gershgorin_bounds, Csr, CsrBuilder, SpectrumBounds};
+use crate::util::rng::Rng;
+
+/// One sweep row: greedy selection of `k` elements over an `n`-dim gapped
+/// kernel, exhaustive vs pruned racing at panel width `width`.
+#[derive(Clone, Debug)]
+pub struct RaceReport {
+    pub n: usize,
+    pub nnz: usize,
+    pub k: usize,
+    pub width: usize,
+    /// panel sweeps spent by the exhaustive policy
+    pub exhaustive_sweeps: usize,
+    /// panel sweeps spent by the pruning policy
+    pub prune_sweeps: usize,
+    /// fraction of sweeps saved by pruning
+    pub saved_frac: f64,
+    /// candidates evicted by interval dominance (all rounds)
+    pub pruned: usize,
+    /// rounds decided before every surviving candidate hit `tol_rel`
+    pub decided_early: usize,
+    /// the two policies selected the same subset (must be true)
+    pub identical: bool,
+    pub exhaustive_s: f64,
+    pub prune_s: f64,
+}
+
+/// Random sparse SPD kernel with the first `boosted` diagonal entries
+/// multiplied by `boost`, so those candidates carry clearly-separated
+/// greedy gains. Boosting a diagonal adds a PSD rank-one term, so the
+/// kernel stays SPD and the refreshed Gershgorin window stays valid.
+pub fn gapped_kernel(
+    rng: &mut Rng,
+    n: usize,
+    density: f64,
+    boosted: usize,
+    boost: f64,
+) -> (Csr, SpectrumBounds) {
+    let (base, _) = crate::datasets::random_sparse_spd(rng, n, density, 1e-2);
+    let mut b = CsrBuilder::new(n);
+    for i in 0..n {
+        for (j, v) in base.row(i) {
+            if i == j && i < boosted {
+                b.push(i, j, v * boost);
+            } else {
+                b.push(i, j, v);
+            }
+        }
+    }
+    let a = b.build();
+    let w = gershgorin_bounds(&a).clamp_lo(5e-3);
+    (a, w)
+}
+
+pub fn run_one(rng: &mut Rng, n: usize, density: f64, k: usize, width: usize) -> RaceReport {
+    let (l, w) = gapped_kernel(rng, n, density, (2 * k).min(n), 50.0);
+    let base = GreedyConfig::new(w, k)
+        .with_block_width(width)
+        .with_reorth(Reorth::None);
+    let ((ex_sel, ex_stats), exhaustive_s) =
+        time_secs(|| greedy_map_stats(&l, &base.with_race(RacePolicy::Exhaustive)));
+    let ((pr_sel, pr_stats), prune_s) =
+        time_secs(|| greedy_map_stats(&l, &base.with_race(RacePolicy::Prune)));
+    let saved_frac = if ex_stats.sweeps > 0 {
+        (ex_stats.sweeps.saturating_sub(pr_stats.sweeps)) as f64 / ex_stats.sweeps as f64
+    } else {
+        0.0
+    };
+    RaceReport {
+        n,
+        nnz: l.nnz(),
+        k,
+        width,
+        exhaustive_sweeps: ex_stats.sweeps,
+        prune_sweeps: pr_stats.sweeps,
+        saved_frac,
+        pruned: pr_stats.pruned,
+        decided_early: pr_stats.decided_early,
+        identical: ex_sel == pr_sel,
+        exhaustive_s,
+        prune_s,
+    }
+}
+
+/// Sweep selection sizes `ks` at the configured panel width; problem size
+/// shrinks with `dataset_scale` for session-budget (and CI smoke) runs.
+pub fn run(cfg: &RunConfig, ks: &[usize]) -> Vec<RaceReport> {
+    let mut rng = Rng::new(cfg.seed ^ 0x9ACE);
+    let n = (2000 / cfg.dataset_scale.max(1)).max(48);
+    let density = 5e-3_f64.max(8.0 / (n as f64 * n as f64));
+    ks.iter()
+        .map(|&k| run_one(&mut rng, n, density, k.min(n / 2), cfg.block_width.max(1)))
+        .collect()
+}
+
+pub const CSV_HEADER: [&str; 11] = [
+    "n",
+    "nnz",
+    "k",
+    "width",
+    "exhaustive_sweeps",
+    "prune_sweeps",
+    "saved_frac",
+    "pruned",
+    "decided_early",
+    "identical",
+    "speedup",
+];
+
+pub fn csv_rows(reports: &[RaceReport]) -> Vec<Vec<String>> {
+    reports
+        .iter()
+        .map(|r| {
+            vec![
+                r.n.to_string(),
+                r.nnz.to_string(),
+                r.k.to_string(),
+                r.width.to_string(),
+                r.exhaustive_sweeps.to_string(),
+                r.prune_sweeps.to_string(),
+                format!("{:.3}", r.saved_frac),
+                r.pruned.to_string(),
+                r.decided_early.to_string(),
+                r.identical.to_string(),
+                format!("{:.2}", r.exhaustive_s / r.prune_s.max(1e-12)),
+            ]
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gapped_rows_prune_and_stay_identical() {
+        let mut rng = Rng::new(0x9ACE1);
+        let rep = run_one(&mut rng, 96, 0.03, 6, 8);
+        assert!(rep.identical, "policies must select the same subset");
+        assert!(
+            rep.prune_sweeps < rep.exhaustive_sweeps,
+            "gapped kernel must save sweeps (prune {} vs exhaustive {})",
+            rep.prune_sweeps,
+            rep.exhaustive_sweeps
+        );
+        assert!(rep.pruned > 0);
+        assert!(rep.saved_frac > 0.0);
+    }
+
+    #[test]
+    fn scaled_run_produces_a_row_per_k() {
+        let cfg = RunConfig { dataset_scale: 40, block_width: 8, ..Default::default() };
+        let rows = run(&cfg, &[2, 4]);
+        assert_eq!(rows.len(), 2);
+        assert!(rows.iter().all(|r| r.identical));
+    }
+}

@@ -7,6 +7,7 @@
 //!   gauss-bif table2 [--seed S] [--out DIR] [--scale K] [--datasets N] [--dg-limit L]
 //!   gauss-bif rates  [--seed S] [--out DIR] [--sizes n1,n2,...]
 //!   gauss-bif block  [--seed S] [--out DIR] [--scale K] [--ks k1,k2,...] [--block-width B]
+//!   gauss-bif race   [--seed S] [--out DIR] [--scale K] [--ks k1,k2,...] [--block-width B]
 //!   gauss-bif serve  [--artifacts DIR] [--requests N] [--workers W] [--block-width B]
 //!   gauss-bif info   [--artifacts DIR]
 //!
@@ -65,6 +66,21 @@ fn main() -> ExitCode {
             return ExitCode::from(2);
         }
     }
+    if let Some(s) = flags.get("race") {
+        // `--race prune` (or true/1) enables interval-dominance pruning
+        // for config-driven greedy scoring; `--race exhaustive` (or
+        // false/0) scores every candidate to tolerance. Selections are
+        // identical either way (quadrature::race's guarantee) — the knob
+        // trades panel sweeps for none.
+        if ["prune", "true", "1"].iter().any(|v| s.eq_ignore_ascii_case(v)) {
+            cfg.race = true;
+        } else if ["exhaustive", "false", "0"].iter().any(|v| s.eq_ignore_ascii_case(v)) {
+            cfg.race = false;
+        } else {
+            eprintln!("invalid --race value '{s}' (expected prune|exhaustive)\n{USAGE}");
+            return ExitCode::from(2);
+        }
+    }
 
     match cmd.as_str() {
         "fig1" => cmd_fig1(&cfg, &flags),
@@ -72,6 +88,7 @@ fn main() -> ExitCode {
         "table2" => cmd_table2(&cfg, &flags),
         "rates" => cmd_rates(&cfg, &flags),
         "block" => cmd_block(&cfg, &flags),
+        "race" => cmd_race(&cfg, &flags),
         "serve" => cmd_serve(&cfg, &flags),
         "info" => cmd_info(&cfg),
         _ => {
@@ -81,9 +98,10 @@ fn main() -> ExitCode {
     }
 }
 
-const USAGE: &str = "usage: gauss-bif <fig1|fig2|table2|rates|block|serve|info> [flags]\n\
+const USAGE: &str = "usage: gauss-bif <fig1|fig2|table2|rates|block|race|serve|info> [flags]\n\
   common flags: --seed S --out DIR --scale K --config cfg.json --artifacts DIR --block-width B\n\
-                --reorth full|none (§5.4 Lanczos reorthogonalization for block/serve runs)";
+                --reorth full|none (§5.4 Lanczos reorthogonalization for block/serve runs)\n\
+                --race prune|exhaustive (candidate racing for greedy scoring; selections identical)";
 
 fn parse_args(args: &[String]) -> Option<(String, HashMap<String, String>)> {
     let mut it = args.iter();
@@ -282,6 +300,54 @@ fn cmd_block(cfg: &RunConfig, flags: &HashMap<String, String>) -> ExitCode {
     ExitCode::SUCCESS
 }
 
+fn cmd_race(cfg: &RunConfig, flags: &HashMap<String, String>) -> ExitCode {
+    use gauss_bif::experiments::race;
+
+    let ks: Vec<usize> = flags
+        .get("ks")
+        .map(|s| parse_list(s))
+        .unwrap_or_else(|| vec![4, 8, 16]);
+    let reports = race::run(cfg, &ks);
+    let mut table = gauss_bif::util::bench::Table::new(&[
+        "n", "nnz", "k", "width", "exhaustive sweeps", "prune sweeps", "saved", "pruned arms",
+        "early rounds",
+    ]);
+    let mut identical = true;
+    let mut saved_any = false;
+    for r in &reports {
+        identical &= r.identical;
+        saved_any |= r.prune_sweeps < r.exhaustive_sweeps;
+        table.row(vec![
+            r.n.to_string(),
+            r.nnz.to_string(),
+            r.k.to_string(),
+            r.width.to_string(),
+            r.exhaustive_sweeps.to_string(),
+            r.prune_sweeps.to_string(),
+            format!("{:.0}%", 100.0 * r.saved_frac),
+            r.pruned.to_string(),
+            r.decided_early.to_string(),
+        ]);
+    }
+    println!("{}", table.render());
+    if !identical {
+        eprintln!("racing changed a greedy selection — dominance pruning is broken");
+        return ExitCode::FAILURE;
+    }
+    if !saved_any {
+        eprintln!("racing saved no panel sweeps on a gapped kernel — scheduler inert");
+        return ExitCode::FAILURE;
+    }
+    match experiments::write_csv(&cfg.out_dir, "race.csv", &race::CSV_HEADER, &race::csv_rows(&reports)) {
+        Ok(p) => println!("wrote {}", p.display()),
+        Err(e) => {
+            eprintln!("write failed: {e}");
+            return ExitCode::FAILURE;
+        }
+    }
+    ExitCode::SUCCESS
+}
+
 fn cmd_serve(cfg: &RunConfig, flags: &HashMap<String, String>) -> ExitCode {
     use gauss_bif::coordinator::{BatchPolicy, JudgeService};
     use gauss_bif::datasets::random_spd_exact;
@@ -327,7 +393,7 @@ fn cmd_serve(cfg: &RunConfig, flags: &HashMap<String, String>) -> ExitCode {
         let exact = ch.bif(&u);
         let t = exact * (0.5 + rng.f64());
         wants.push(t < exact);
-        rxs.push(svc.submit(gauss_bif::coordinator::JudgeRequest {
+        rxs.push(svc.submit(gauss_bif::coordinator::ThresholdRequest {
             a: af.clone(),
             u: u.iter().map(|&x| x as f32).collect(),
             n,
@@ -352,9 +418,42 @@ fn cmd_serve(cfg: &RunConfig, flags: &HashMap<String, String>) -> ExitCode {
         n_requests as f64 / dt,
         correct
     );
+    // argmax demo: one raced batch per shared operator ("which of these
+    // queries has the largest BIF?"), served by the native scheduler
+    let mut races_ok = true;
+    for (n, af, l1, ln, ch) in &ops {
+        let n = *n;
+        let arms: Vec<Vec<f64>> = (0..6)
+            .map(|_| (0..n).map(|_| rng.normal()).collect())
+            .collect();
+        let mut best: Option<(usize, f64)> = None;
+        for (i, u) in arms.iter().enumerate() {
+            let v = ch.bif(u);
+            if best.map_or(true, |(_, g)| v > g) {
+                best = Some((i, v));
+            }
+        }
+        let resp = svc.argmax_blocking(gauss_bif::coordinator::ArgmaxRequest {
+            a: af.clone(),
+            n,
+            lam_min: (*l1 * 0.99) as f32,
+            lam_max: (*ln * 1.01) as f32,
+            us: arms
+                .iter()
+                .map(|u| u.iter().map(|&x| x as f32).collect())
+                .collect(),
+            offsets: vec![0.0; 6],
+            negate: false,
+            tol_rel: 1e-10,
+            prune: cfg.race,
+            reorth: cfg.reorth,
+        });
+        races_ok &= resp.winner == best.map(|(i, _)| i);
+    }
+    println!("argmax races: {} operators, oracle-correct: {races_ok}", ops.len());
     println!("{}", svc.metrics.summary());
     svc.shutdown();
-    if correct == n_requests {
+    if correct == n_requests && races_ok {
         ExitCode::SUCCESS
     } else {
         ExitCode::FAILURE

@@ -32,6 +32,63 @@ impl Counter {
     pub fn get(&self) -> u64 {
         self.0.load(Ordering::Relaxed)
     }
+
+    /// Increment and return the pre-increment value (an atomic ticket).
+    #[inline]
+    pub fn tick(&self) -> u64 {
+        self.0.fetch_add(1, Ordering::Relaxed)
+    }
+}
+
+/// Lock-free exponentially-weighted moving average over an atomic f64
+/// (bit-packed). `None` until the first sample. Used by the coordinator
+/// router to track recent per-request latency of the PJRT and
+/// native-block paths and prefer the faster one (ROADMAP open item).
+#[derive(Debug)]
+pub struct Ewma {
+    bits: AtomicU64,
+    alpha: f64,
+}
+
+impl Ewma {
+    /// `alpha` is the new-sample weight: `ewma ← ewma + α·(x − ewma)`.
+    pub fn new(alpha: f64) -> Self {
+        Ewma { bits: AtomicU64::new(f64::NAN.to_bits()), alpha }
+    }
+
+    pub fn record(&self, x: f64) {
+        let mut cur = self.bits.load(Ordering::Relaxed);
+        loop {
+            let old = f64::from_bits(cur);
+            let new = if old.is_nan() { x } else { old + self.alpha * (x - old) };
+            match self.bits.compare_exchange_weak(
+                cur,
+                new.to_bits(),
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// Current average; `None` before any sample.
+    pub fn get(&self) -> Option<f64> {
+        let v = f64::from_bits(self.bits.load(Ordering::Relaxed));
+        if v.is_nan() {
+            None
+        } else {
+            Some(v)
+        }
+    }
+}
+
+impl Default for Ewma {
+    fn default() -> Self {
+        // a 0.2 weight forgets a stale latency regime in ~10 batches
+        Ewma::new(0.2)
+    }
 }
 
 /// Scope timer: `let _t = Timer::start(&hist);` records on drop (ns).
@@ -61,14 +118,54 @@ pub struct ServiceMetrics {
     pub native_fallbacks: Counter,
     /// coalesced shared-operator block runs on the native path
     pub coalesced_blocks: Counter,
+    /// argmax races served (native racing scheduler)
+    pub races: Counter,
     pub latency_ns: std::sync::Mutex<Histogram>,
     pub batch_size: std::sync::Mutex<Histogram>,
     pub judge_iters: std::sync::Mutex<Histogram>,
+    /// recent per-request service latency of dispatched PJRT batches
+    pub pjrt_batch_ns: Ewma,
+    /// recent per-request service latency of coalesced native block runs
+    pub native_block_ns: Ewma,
+    /// router decisions taken once both path EWMAs are seeded (drives the
+    /// periodic re-exploration ticket)
+    pub route_decisions: Counter,
 }
 
 impl ServiceMetrics {
+    /// One in this many fully-seeded routing decisions re-explores the
+    /// slower path (ε-greedy refresh of its latency EWMA).
+    pub const EXPLORE_EVERY: u64 = 64;
+
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Router heuristic (ROADMAP open item): prefer the native block path
+    /// over a PJRT dispatch for coalescible requests when its recent
+    /// per-request latency EWMA is lower. Self-seeding: an unmeasured
+    /// native path claims the next coalescible request (one exploration
+    /// sample — the coalesced serve path records its EWMA even for a
+    /// degenerate single-request group), while an unmeasured PJRT path is
+    /// left preferred so any bucketed dispatch seeds it. Once both are
+    /// seeded the comparison takes over, except that every
+    /// [`Self::EXPLORE_EVERY`]-th decision deliberately takes the
+    /// currently-unpreferred path — the losing path's EWMA would
+    /// otherwise freeze at its last (possibly cold-start) sample and a
+    /// later regime change could never flip the preference back.
+    pub fn prefer_native_block(&self) -> bool {
+        match (self.native_block_ns.get(), self.pjrt_batch_ns.get()) {
+            (None, _) => true,
+            (Some(_), None) => false,
+            (Some(native), Some(pjrt)) => {
+                let prefer = native < pjrt;
+                if (self.route_decisions.tick() + 1) % Self::EXPLORE_EVERY == 0 {
+                    !prefer
+                } else {
+                    prefer
+                }
+            }
+        }
     }
 
     /// One-line human summary.
@@ -77,11 +174,12 @@ impl ServiceMetrics {
         let bs = self.batch_size.lock().unwrap();
         let it = self.judge_iters.lock().unwrap();
         format!(
-            "requests={} batches={} native={} coalesced={} | latency p50={} p95={} p99={} | batch p50={:.1} | iters p50={:.0} p95={:.0}",
+            "requests={} batches={} native={} coalesced={} races={} | latency p50={} p95={} p99={} | batch p50={:.1} | iters p50={:.0} p95={:.0}",
             self.requests.get(),
             self.batches.get(),
             self.native_fallbacks.get(),
             self.coalesced_blocks.get(),
+            self.races.get(),
             crate::util::bench::Stats::fmt_time(lat.percentile(0.50)),
             crate::util::bench::Stats::fmt_time(lat.percentile(0.95)),
             crate::util::bench::Stats::fmt_time(lat.percentile(0.99)),
@@ -122,5 +220,50 @@ mod tests {
         m.latency_ns.lock().unwrap().record(1000.0);
         let s = m.summary();
         assert!(s.contains("requests=3"), "{s}");
+    }
+
+    #[test]
+    fn ewma_tracks_and_starts_empty() {
+        let e = Ewma::new(0.5);
+        assert_eq!(e.get(), None);
+        e.record(100.0);
+        assert_eq!(e.get(), Some(100.0), "first sample seeds the average");
+        e.record(200.0);
+        assert_eq!(e.get(), Some(150.0));
+        e.record(200.0);
+        assert_eq!(e.get(), Some(175.0));
+    }
+
+    #[test]
+    fn router_explores_then_prefers_the_faster_path() {
+        let m = ServiceMetrics::new();
+        assert!(
+            m.prefer_native_block(),
+            "unmeasured native path claims one exploratory request"
+        );
+        m.native_block_ns.record(1_000.0);
+        assert!(!m.prefer_native_block(), "PJRT unmeasured: let dispatches seed it");
+        m.pjrt_batch_ns.record(5_000.0);
+        assert!(m.prefer_native_block(), "native measured faster");
+        // a long streak of slow native runs flips the preference back
+        for _ in 0..40 {
+            m.native_block_ns.record(50_000.0);
+        }
+        assert!(!m.prefer_native_block());
+    }
+
+    #[test]
+    fn router_periodically_re_explores_the_slower_path() {
+        let m = ServiceMetrics::new();
+        m.native_block_ns.record(1_000.0);
+        m.pjrt_batch_ns.record(500.0); // PJRT faster: native unpreferred
+        let explorations = (0..2 * ServiceMetrics::EXPLORE_EVERY)
+            .filter(|_| m.prefer_native_block())
+            .count();
+        assert_eq!(
+            explorations, 2,
+            "exactly one exploratory native run per {} decisions",
+            ServiceMetrics::EXPLORE_EVERY
+        );
     }
 }

@@ -18,6 +18,25 @@
 //! panels of `B`), and only once the queue drains does the panel compact
 //! to the surviving lanes.
 //!
+//! **Incremental scheduling API** (ISSUE 3 tentpole): besides the one-shot
+//! [`BlockGql::run_all`], the engine exposes [`BlockGql::step_panel`] (one
+//! `matvec_multi` sweep), [`BlockGql::active`] (per-lane bound snapshots),
+//! [`BlockGql::take_done`], and the eviction hooks
+//! [`BlockGql::retire`] / [`BlockGql::suspend`] / [`BlockGql::resume`].
+//! These let a scheduler ([`crate::quadrature::race::Race`]) evict a lane
+//! whose bound bracket is already dominated and refill its panel column
+//! from the pending queue. When no lane is evicted the op sequence — and
+//! therefore every result — is identical to `run_all`, preserving the
+//! exactness contract below.
+//!
+//! **Panel layout:** lanes live interleaved at a stride that is padded up
+//! to a multiple of [`SIMD_LANE_PAD`] whenever more than one lane is
+//! active (pad columns are zero and carry no lane), so the per-nonzero
+//! inner loop of the specialized `matvec_multi` kernels runs over
+//! fixed-width 4-lane chunks the compiler can vectorize. Per-lane
+//! accumulation order is unaffected — a lane's column sees exactly the
+//! scalar op sequence at any stride.
+//!
 //! **Exactness contract:** per lane, the floating-point operation sequence
 //! is identical to a scalar [`Gql`] run *by construction*: both drivers
 //! advance the same [`LaneCore`](crate::quadrature::recurrence::LaneCore)
@@ -34,9 +53,27 @@
 //! extra per lane-iteration, same as scalar).
 
 use super::gql::{Bounds, Gql, GqlOptions};
+use super::is_zero;
 use super::recurrence::LaneCore;
 use crate::sparse::SymOp;
 use std::collections::VecDeque;
+
+/// Panel strides are padded up to a multiple of this lane count (when more
+/// than one lane is active) so the `matvec_multi` inner loops run over
+/// fixed-width chunks (ROADMAP SIMD follow-up). Pad columns are zero.
+pub const SIMD_LANE_PAD: usize = 4;
+
+/// Stride for `lanes` interleaved columns: exactly 1 for a single lane
+/// (the scalar memory layout — the structural bit-identity anchor), else
+/// the next multiple of [`SIMD_LANE_PAD`].
+#[inline]
+fn pad_stride(lanes: usize) -> usize {
+    if lanes <= 1 {
+        lanes
+    } else {
+        lanes.div_ceil(SIMD_LANE_PAD) * SIMD_LANE_PAD
+    }
+}
 
 /// When a lane is allowed to leave the panel.
 ///
@@ -72,6 +109,28 @@ impl StopRule {
             s => s,
         }
     }
+}
+
+/// Why a scheduler evicted a lane before its own stop rule fired.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RetireReason {
+    /// Interval dominance: the lane's upper bound fell below a rival's
+    /// lower bound, so no further refinement can change the surrounding
+    /// decision (Thm. 3.3–3.4 monotonicity is what makes this sound).
+    Dominated,
+    /// The surrounding decision resolved without needing this lane's
+    /// refinement (e.g. a race crowned its winner).
+    Decided,
+}
+
+/// Record of one [`BlockGql::retire`] call.
+#[derive(Clone, Copy, Debug)]
+pub struct RetireEvent {
+    /// Query id (push order) of the evicted lane.
+    pub id: usize,
+    pub reason: RetireReason,
+    /// Quadrature iterations the lane had consumed when evicted.
+    pub iters: usize,
 }
 
 /// Outcome of one lane.
@@ -196,27 +255,60 @@ struct Lane {
 }
 
 impl Lane {
-    /// Placeholder lane; [`BlockGql::write_query`] installs the real core
-    /// once the query vector (and its norm) is in the panel.
+    /// Placeholder lane; [`BlockGql::write_query`] (or a resume) installs
+    /// the real core once the query vector is in the panel.
     fn new(id: usize, stop: StopRule, opts: &GqlOptions) -> Self {
         Lane { id, stop, core: LaneCore::new(opts, 0.0), history: Vec::new() }
     }
 }
 
-struct Pending {
-    id: usize,
-    u: Vec<f64>,
-    stop: StopRule,
+/// A query waiting for a panel column: either fresh (never stepped) or a
+/// suspended lane carrying its full mid-run state (recurrence core and
+/// both Lanczos columns), which re-enters the panel and continues with an
+/// op sequence identical to an uninterrupted run.
+enum Pending {
+    Fresh { id: usize, u: Vec<f64>, stop: StopRule },
+    Suspended(Box<SuspendedLane>),
 }
 
-/// Batched GQL engine: push queries, then [`BlockGql::run_all`].
+impl Pending {
+    fn id(&self) -> usize {
+        match self {
+            Pending::Fresh { id, .. } => *id,
+            Pending::Suspended(s) => s.id,
+        }
+    }
+
+    fn iters(&self) -> usize {
+        match self {
+            Pending::Fresh { .. } => 0,
+            Pending::Suspended(s) => s.core.iterations(),
+        }
+    }
+}
+
+/// Deinterleaved mid-run lane state (see [`BlockGql::suspend`]).
+struct SuspendedLane {
+    id: usize,
+    stop: StopRule,
+    core: LaneCore,
+    v_prev: Vec<f64>,
+    v_curr: Vec<f64>,
+    history: Vec<Bounds>,
+}
+
+/// Batched GQL engine: push queries, then [`BlockGql::run_all`] — or
+/// drive it sweep by sweep with [`BlockGql::step_panel`].
 pub struct BlockGql<'a> {
     op: &'a dyn SymOp,
     opts: GqlOptions,
     n: usize,
-    /// configured maximum panel width B
+    /// configured maximum *lane* count B (the stride may exceed it by
+    /// SIMD padding)
     width: usize,
-    /// current stride (= active lane count = `lanes.len()`)
+    /// current panel stride: `pad_stride(lanes.len())` — equal to the lane
+    /// count for 0 or 1 lanes, padded to a multiple of [`SIMD_LANE_PAD`]
+    /// otherwise (pad columns are zero and carry no lane)
     b: usize,
     // interleaved panels, `n * b`: column `l` of lane `l` at `[i * b + l]`
     v_prev: Vec<f64>,
@@ -224,7 +316,10 @@ pub struct BlockGql<'a> {
     w: Vec<f64>,
     lanes: Vec<Lane>,
     pending: VecDeque<Pending>,
+    /// lanes parked by [`BlockGql::suspend`], re-queued by `resume`
+    parked: Vec<Pending>,
     done: Vec<BlockResult>,
+    retired: Vec<RetireEvent>,
     next_id: usize,
     record_history: bool,
     sweeps: usize,
@@ -257,7 +352,9 @@ impl<'a> BlockGql<'a> {
             w: Vec::new(),
             lanes: Vec::new(),
             pending: VecDeque::new(),
+            parked: Vec::new(),
             done: Vec::new(),
+            retired: Vec::new(),
             next_id: 0,
             record_history: false,
             sweeps: 0,
@@ -280,7 +377,7 @@ impl<'a> BlockGql<'a> {
         if is_zero(u) {
             self.done.push(zero_result(id, &stop));
         } else {
-            self.pending.push_back(Pending { id, u: u.to_vec(), stop });
+            self.pending.push_back(Pending::Fresh { id, u: u.to_vec(), stop });
         }
         id
     }
@@ -291,34 +388,149 @@ impl<'a> BlockGql<'a> {
         self.sweeps
     }
 
-    /// Run until every queued query has completed; results sorted by id.
-    pub fn run_all(&mut self) -> Vec<BlockResult> {
-        loop {
-            self.admit();
-            if self.lanes.is_empty() {
-                break;
-            }
-            self.sweep();
-        }
+    /// True while un-finished queries remain in the panel or the queue
+    /// (suspended lanes do not count until resumed).
+    pub fn has_work(&self) -> bool {
+        !self.lanes.is_empty() || !self.pending.is_empty()
+    }
+
+    /// Ids and latest bounds of the lanes currently in the panel (freshly
+    /// admitted lanes report `None` until their first sweep).
+    pub fn active(&self) -> impl Iterator<Item = (usize, Option<Bounds>)> + '_ {
+        self.lanes.iter().map(|l| (l.id, l.core.last_bounds()))
+    }
+
+    /// Drain the finished results accumulated so far, sorted by id.
+    pub fn take_done(&mut self) -> Vec<BlockResult> {
         let mut out = std::mem::take(&mut self.done);
         out.sort_by_key(|r| r.id);
         out
     }
 
+    /// Eviction log: every [`BlockGql::retire`] call with its reason.
+    pub fn retired(&self) -> &[RetireEvent] {
+        &self.retired
+    }
+
+    /// One scheduler round: admit pending queries up to the configured
+    /// width, then advance every lane by one `matvec_multi` panel sweep.
+    /// Returns `false` (without sweeping) once no lane or pending query
+    /// remains. Completed lanes land in [`BlockGql::take_done`] and their
+    /// columns refill from the queue, exactly as under `run_all`.
+    pub fn step_panel(&mut self) -> bool {
+        self.admit();
+        if self.lanes.is_empty() {
+            return false;
+        }
+        self.sweep();
+        true
+    }
+
+    /// Run until every queued query has completed; results sorted by id.
+    /// Queries evicted by [`BlockGql::retire`] produce no result, and
+    /// suspended lanes are not resumed implicitly.
+    pub fn run_all(&mut self) -> Vec<BlockResult> {
+        while self.step_panel() {}
+        self.take_done()
+    }
+
+    /// Evict the (active or pending) query `id` before its stop rule
+    /// fires, recording the reason; an active lane's panel column refills
+    /// from the pending queue (or the panel compacts). Returns `false` if
+    /// `id` is not currently active or pending. The evicted query yields
+    /// no [`BlockResult`].
+    pub fn retire(&mut self, id: usize, reason: RetireReason) -> bool {
+        if let Some(slot) = self.lanes.iter().position(|l| l.id == id) {
+            let iters = self.lanes[slot].core.iterations();
+            self.retired.push(RetireEvent { id, reason, iters });
+            self.evict_slot(slot);
+            return true;
+        }
+        if let Some(pos) = self.pending.iter().position(|p| p.id() == id) {
+            let p = self.pending.remove(pos).expect("position just found");
+            self.retired.push(RetireEvent { id, reason, iters: p.iters() });
+            return true;
+        }
+        false
+    }
+
+    /// Park the (active or pending) query `id`: its full mid-run state —
+    /// recurrence core, reorth basis, both Lanczos columns — is pulled out
+    /// of the panel so the column can serve another query. A later
+    /// [`BlockGql::resume`] re-queues it and the lane continues with an op
+    /// sequence identical to an uninterrupted run (bit-exactness is
+    /// preserved across the round trip). Returns `false` for unknown ids.
+    pub fn suspend(&mut self, id: usize) -> bool {
+        if let Some(slot) = self.lanes.iter().position(|l| l.id == id) {
+            let b = self.b;
+            let vp: Vec<f64> = (0..self.n).map(|i| self.v_prev[i * b + slot]).collect();
+            let vc: Vec<f64> = (0..self.n).map(|i| self.v_curr[i * b + slot]).collect();
+            let lane = self.evict_slot(slot);
+            self.parked.push(Pending::Suspended(Box::new(SuspendedLane {
+                id: lane.id,
+                stop: lane.stop,
+                core: lane.core,
+                v_prev: vp,
+                v_curr: vc,
+                history: lane.history,
+            })));
+            return true;
+        }
+        if let Some(pos) = self.pending.iter().position(|p| p.id() == id) {
+            let p = self.pending.remove(pos).expect("position just found");
+            self.parked.push(p);
+            return true;
+        }
+        false
+    }
+
+    /// Re-queue a suspended query; it re-enters the panel at the next
+    /// admission round. Returns `false` for ids that are not parked.
+    pub fn resume(&mut self, id: usize) -> bool {
+        if let Some(pos) = self.parked.iter().position(|p| p.id() == id) {
+            let p = self.parked.remove(pos);
+            self.pending.push_back(p);
+            return true;
+        }
+        false
+    }
+
     /// Admit pending queries up to the configured width (growing the
     /// panel stride).
     fn admit(&mut self) {
-        let m = (self.width - self.b).min(self.pending.len());
+        let m = (self.width - self.lanes.len()).min(self.pending.len());
         if m == 0 {
             return;
         }
         self.grow(m);
         for _ in 0..m {
-            let p = self.pending.pop_front().unwrap();
+            let p = self.pending.pop_front().expect("counted above");
             let slot = self.lanes.len();
-            let lane = Lane::new(p.id, p.stop, &self.opts); // core set below
-            self.lanes.push(lane);
-            self.write_query(slot, &p.u);
+            self.lanes.push(Lane::new(p.id(), StopRule::Exhaust, &self.opts));
+            self.install(slot, p);
+        }
+    }
+
+    /// Install a pending query into lane `slot` (which must exist):
+    /// fresh queries get a normalized column and a fresh core, suspended
+    /// lanes get their saved columns and core back verbatim.
+    fn install(&mut self, slot: usize, p: Pending) {
+        match p {
+            Pending::Fresh { id, u, stop } => {
+                self.lanes[slot] = Lane::new(id, stop, &self.opts);
+                self.write_query(slot, &u);
+            }
+            Pending::Suspended(s) => {
+                let b = self.b;
+                for i in 0..self.n {
+                    self.v_prev[i * b + slot] = s.v_prev[i];
+                    self.v_curr[i * b + slot] = s.v_curr[i];
+                }
+                let mut lane = Lane::new(s.id, s.stop, &self.opts);
+                lane.core = s.core;
+                lane.history = s.history;
+                self.lanes[slot] = lane;
+            }
         }
     }
 
@@ -339,13 +551,36 @@ impl<'a> BlockGql<'a> {
         lane.history = Vec::new();
     }
 
-    /// Widen the panels by `m` lanes (in-place backward repack: for each
-    /// row the write offset `i * new_b + l` is ≥ the read offset
+    /// Remove the lane at `slot` from the panel and return it, refilling
+    /// the slot from the pending queue when possible and repacking the
+    /// panels otherwise.
+    fn evict_slot(&mut self, slot: usize) -> Lane {
+        if let Some(p) = self.pending.pop_front() {
+            let placeholder = Lane::new(p.id(), StopRule::Exhaust, &self.opts);
+            let lane = std::mem::replace(&mut self.lanes[slot], placeholder);
+            self.install(slot, p);
+            lane
+        } else {
+            let lane = self.lanes.remove(slot);
+            let old_count = self.lanes.len() + 1;
+            let keep: Vec<usize> = (0..old_count).filter(|&s| s != slot).collect();
+            self.repack_panels(&keep);
+            lane
+        }
+    }
+
+    /// Widen the panels to hold `m` more lanes (in-place backward repack:
+    /// for each row the write offset `i * new_b + l` is ≥ the read offset
     /// `i * b + l`, so iterating rows and lanes in descending order never
-    /// clobbers unread data).
+    /// clobbers unread data). The new stride is SIMD-padded; pad and
+    /// not-yet-admitted columns are zeroed.
     fn grow(&mut self, m: usize) {
         let (n, ob) = (self.n, self.b);
-        let nb = ob + m;
+        let nb = pad_stride(self.lanes.len() + m);
+        debug_assert!(nb >= ob, "stride shrank on grow");
+        if nb == ob {
+            return; // new lanes fit inside the existing pad columns
+        }
         for panel in [&mut self.v_prev, &mut self.v_curr] {
             panel.resize(n * nb, 0.0);
             for i in (0..n).rev() {
@@ -362,28 +597,27 @@ impl<'a> BlockGql<'a> {
         self.b = nb;
     }
 
-    /// Drop the lanes *not* listed in `keep` (ascending old slot indices);
-    /// forward in-place repack — the mirror argument of [`BlockGql::grow`].
-    fn compact(&mut self, keep: &[usize]) {
+    /// Forward in-place repack of the panels onto the lane slots listed in
+    /// `keep` (ascending old slot indices) — the mirror argument of
+    /// [`BlockGql::grow`]. The caller keeps `self.lanes` in sync. Pad
+    /// columns of the (possibly shorter) new stride are zeroed.
+    fn repack_panels(&mut self, keep: &[usize]) {
         let (n, ob) = (self.n, self.b);
-        let nb = keep.len();
+        let nl = keep.len();
+        let nb = pad_stride(nl);
+        debug_assert!(nb <= ob, "stride grew on repack");
         for panel in [&mut self.v_prev, &mut self.v_curr] {
             for i in 0..n {
-                for (nl, &ol) in keep.iter().enumerate() {
-                    panel[i * nb + nl] = panel[i * ob + ol];
+                for (nlane, &ol) in keep.iter().enumerate() {
+                    panel[i * nb + nlane] = panel[i * ob + ol];
+                }
+                for c in nl..nb {
+                    panel[i * nb + c] = 0.0;
                 }
             }
             panel.truncate(n * nb);
         }
         self.w.truncate(n * nb);
-        let old = std::mem::take(&mut self.lanes);
-        let mut it = keep.iter().peekable();
-        for (slot, lane) in old.into_iter().enumerate() {
-            if it.peek() == Some(&&slot) {
-                it.next();
-                self.lanes.push(lane);
-            }
-        }
         self.b = nb;
     }
 
@@ -394,13 +628,14 @@ impl<'a> BlockGql<'a> {
     /// compacted away.
     fn sweep(&mut self) {
         let (n, b) = (self.n, self.b);
-        debug_assert!(b > 0);
+        let nl = self.lanes.len();
+        debug_assert!(nl > 0 && b >= nl);
         self.op.matvec_multi(&self.v_curr, &mut self.w, b);
         self.sweeps += 1;
 
         let max_iters = self.opts.max_iters;
         let mut finished: Vec<(usize, Option<bool>)> = Vec::new();
-        for l in 0..b {
+        for l in 0..nl {
             let lane = &mut self.lanes[l];
             let bounds = lane.core.step_column(
                 &mut self.v_prev,
@@ -432,23 +667,24 @@ impl<'a> BlockGql<'a> {
                 });
             }
             if let Some(p) = self.pending.pop_front() {
-                let lane = Lane::new(p.id, p.stop, &self.opts);
-                self.lanes[slot] = lane;
-                self.write_query(slot, &p.u);
+                self.install(slot, p);
             } else {
                 dead.push(slot);
             }
         }
         if !dead.is_empty() {
-            let keep: Vec<usize> = (0..b).filter(|s| !dead.contains(s)).collect();
-            self.compact(&keep);
+            let keep: Vec<usize> = (0..nl).filter(|s| !dead.contains(s)).collect();
+            let old = std::mem::take(&mut self.lanes);
+            let mut it = keep.iter().peekable();
+            for (slot, lane) in old.into_iter().enumerate() {
+                if it.peek() == Some(&&slot) {
+                    it.next();
+                    self.lanes.push(lane);
+                }
+            }
+            self.repack_panels(&keep);
         }
     }
-}
-
-#[inline]
-fn is_zero(u: &[f64]) -> bool {
-    u.iter().all(|&x| x == 0.0)
 }
 
 /// Immediately-exact result for a zero query (`BIF = 0`).
@@ -615,6 +851,36 @@ mod tests {
     }
 
     #[test]
+    fn padded_stride_is_a_stride_multiple_with_lanes_preserved() {
+        assert_eq!(pad_stride(0), 0);
+        assert_eq!(pad_stride(1), 1, "width-1 keeps the scalar layout");
+        assert_eq!(pad_stride(2), 4);
+        assert_eq!(pad_stride(4), 4);
+        assert_eq!(pad_stride(5), 8);
+        assert_eq!(pad_stride(9), 12);
+        // a width whose stride is padded (5 lanes → stride 8) still
+        // reproduces every scalar run bit-for-bit
+        let mut rng = Rng::new(0xB752);
+        let n = 28;
+        let (a, w) = random_sparse_spd(&mut rng, n, 0.3, 0.05);
+        let opts = GqlOptions::new(w.lo, w.hi);
+        let queries: Vec<Vec<f64>> = (0..5)
+            .map(|_| (0..n).map(|_| rng.normal()).collect())
+            .collect();
+        let out = block_solve(
+            &a,
+            opts,
+            5,
+            queries.iter().map(|u| (u.as_slice(), StopRule::Exhaust)),
+        );
+        for (r, u) in out.iter().zip(&queries) {
+            let s = run_scalar(&a, u, opts, StopRule::Exhaust, false);
+            assert_eq!(r.bounds.gauss.to_bits(), s.bounds.gauss.to_bits());
+            assert_eq!(r.iters, s.iters);
+        }
+    }
+
+    #[test]
     fn reorth_lanes_are_bit_identical_to_scalar_reorth() {
         // every lane of a reorthogonalized panel must reproduce its own
         // scalar Reorth::Full run bit-for-bit — the exactness contract
@@ -687,5 +953,113 @@ mod tests {
         eng.push(&u, StopRule::Exhaust);
         let b = eng.run_all().pop().unwrap();
         assert!(b.history.last().unwrap().exact);
+    }
+
+    #[test]
+    fn step_panel_take_done_matches_run_all() {
+        // the incremental API must accumulate exactly run_all's results
+        let mut rng = Rng::new(0xB795);
+        let n = 30;
+        let (a, w) = random_sparse_spd(&mut rng, n, 0.2, 0.05);
+        let opts = GqlOptions::new(w.lo, w.hi);
+        let queries: Vec<Vec<f64>> = (0..7)
+            .map(|_| (0..n).map(|_| rng.normal()).collect())
+            .collect();
+        let reference = block_solve(
+            &a,
+            opts,
+            3,
+            queries.iter().map(|u| (u.as_slice(), StopRule::GapRel(1e-8))),
+        );
+        let mut eng = BlockGql::new(&a, opts, 3);
+        for u in &queries {
+            eng.push(u, StopRule::GapRel(1e-8));
+        }
+        let mut incremental = Vec::new();
+        while eng.step_panel() {
+            incremental.extend(eng.take_done());
+        }
+        incremental.extend(eng.take_done());
+        incremental.sort_by_key(|r| r.id);
+        assert_eq!(incremental.len(), reference.len());
+        for (i, r) in incremental.iter().zip(&reference) {
+            assert_eq!(i.id, r.id);
+            assert_eq!(i.iters, r.iters);
+            assert_eq!(i.bounds.gauss.to_bits(), r.bounds.gauss.to_bits());
+        }
+        assert!(!eng.has_work());
+    }
+
+    #[test]
+    fn suspend_resume_round_trip_is_bit_identical() {
+        // park a lane mid-run, let the rest of the panel proceed, resume
+        // it: its bound history must match an uninterrupted run exactly
+        let mut rng = Rng::new(0xB7A6);
+        let n = 26;
+        let (a, w) = random_sparse_spd(&mut rng, n, 0.3, 0.05);
+        let opts = GqlOptions::new(w.lo, w.hi);
+        let u0: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let u1: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let reference = run_scalar(&a, &u0, opts, StopRule::Exhaust, true);
+
+        let mut eng = BlockGql::new(&a, opts, 2).record_history(true);
+        let id0 = eng.push(&u0, StopRule::Exhaust);
+        eng.push(&u1, StopRule::Iters(3));
+        for _ in 0..2 {
+            assert!(eng.step_panel());
+        }
+        assert!(eng.suspend(id0), "active lane must suspend");
+        // the other lane finishes alone
+        while eng.step_panel() {}
+        assert!(eng.resume(id0), "parked lane must resume");
+        let mut results = Vec::new();
+        while eng.step_panel() {}
+        results.extend(eng.take_done());
+        let r0 = results.iter().find(|r| r.id == id0).expect("resumed lane finished");
+        assert_eq!(r0.history.len(), reference.history.len());
+        for (got, want) in r0.history.iter().zip(&reference.history) {
+            assert_eq!(got.gauss.to_bits(), want.gauss.to_bits());
+            assert_eq!(got.radau_lower.to_bits(), want.radau_lower.to_bits());
+            assert_eq!(got.radau_upper.to_bits(), want.radau_upper.to_bits());
+            assert_eq!(got.lobatto.to_bits(), want.lobatto.to_bits());
+        }
+    }
+
+    #[test]
+    fn retire_evicts_lane_refills_panel_and_logs_reason() {
+        let mut rng = Rng::new(0xB7B7);
+        let n = 24;
+        let (a, w) = random_sparse_spd(&mut rng, n, 0.3, 0.05);
+        let opts = GqlOptions::new(w.lo, w.hi);
+        let mut eng = BlockGql::new(&a, opts, 2);
+        let ids: Vec<usize> = (0..4)
+            .map(|_| {
+                let u: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+                eng.push(&u, StopRule::Exhaust)
+            })
+            .collect();
+        assert!(eng.step_panel());
+        // evict an active lane: its slot must refill from the queue
+        assert!(eng.retire(ids[0], RetireReason::Dominated));
+        let active: Vec<usize> = eng.active().map(|(id, _)| id).collect();
+        assert!(!active.contains(&ids[0]));
+        assert!(active.contains(&ids[2]), "pending query refilled the slot");
+        // evict a still-pending query
+        assert!(eng.retire(ids[3], RetireReason::Decided));
+        assert!(!eng.retire(ids[3], RetireReason::Decided), "already gone");
+        let out = eng.run_all();
+        // retired queries produce no result
+        let got: Vec<usize> = out.iter().map(|r| r.id).collect();
+        assert_eq!(got, vec![ids[1], ids[2]]);
+        let events = eng.retired();
+        assert_eq!(events.len(), 2);
+        assert_eq!(events[0].id, ids[0]);
+        assert_eq!(events[0].reason, RetireReason::Dominated);
+        assert!(events[0].iters >= 1);
+        assert_eq!(events[1].id, ids[3]);
+        assert_eq!(events[1].iters, 0, "never admitted");
+        // survivors ran to their own stop rules undisturbed (bit-identity
+        // of survivors under eviction is property-tested in prop_race)
+        assert!(out.iter().all(|r| r.bounds.exact || r.iters == n));
     }
 }

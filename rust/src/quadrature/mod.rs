@@ -2,7 +2,8 @@
 //! forms, the shared recurrence module both engines drive
 //! ([`recurrence`] — the single owner of the Sherman–Morrison update,
 //! Radau/Lobatto corrections, and breakdown detection), the block engine
-//! that batches many such runs over one shared operator, the
+//! that batches many such runs over one shared operator, the racing
+//! scheduler ([`race`]) that prunes candidates by interval dominance, the
 //! retrospective judges built on them, conjugate gradients (both a
 //! baseline and the theory cross-check of Thm. 12), and Jacobi
 //! preconditioning (§5.4).
@@ -12,9 +13,12 @@ pub mod cg;
 pub mod gql;
 pub mod judge;
 pub mod precond;
+pub mod race;
 pub mod recurrence;
 
-pub use block::{block_solve, run_scalar, BlockGql, BlockResult, StopRule};
+pub use block::{
+    block_solve, run_scalar, BlockGql, BlockResult, RetireEvent, RetireReason, StopRule,
+};
 pub use cg::{cg_solve, CgResult};
 pub use gql::{bif_bounds, Bounds, Gql, GqlOptions, Reorth};
 pub use judge::{
@@ -22,4 +26,14 @@ pub use judge::{
     judge_threshold_src, BoundSource, JudgeOutcome, JudgeStats, RefinePolicy,
 };
 pub use precond::JacobiPrecond;
+pub use race::{race_dg, Race, RaceOutcome, RacePolicy, RaceStats};
 pub use recurrence::{LaneCore, Recurrence};
+
+/// Exact-zero query detection, shared by the engines, judges, and the
+/// racing scheduler: a zero `u` has BIF exactly 0 (no quadrature lane is
+/// spent on it), and all three callers must agree on what counts as zero
+/// or their exactness contracts diverge.
+#[inline]
+pub(crate) fn is_zero(u: &[f64]) -> bool {
+    u.iter().all(|&x| x == 0.0)
+}

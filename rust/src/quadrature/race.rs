@@ -1,0 +1,659 @@
+//! Bound-driven racing scheduler: prune candidates by interval dominance.
+//!
+//! The paper's bounds *tighten iteratively* (Thm. 3.3–3.4): after every
+//! quadrature step each candidate's value is bracketed, and the brackets
+//! only shrink. That means a surrounding decision — "which candidate is
+//! the argmax?", "does the double-greedy inequality hold?" — is often
+//! determined long before every bracket reaches its stop tolerance. This
+//! module spends panel sweeps only where the decision still needs them
+//! (the same lazy-evaluation pattern as the adaptive truncation in Pleiss
+//! et al., arXiv:2006.11267):
+//!
+//! * **Argmax mode** ([`Race`]): candidates ("arms") race through one
+//!   shared [`BlockGql`] panel; after every sweep, every arm whose upper
+//!   bound has fallen below the best lower bound is evicted
+//!   ([`BlockGql::retire`], reason [`RetireReason::Dominated`]) and its
+//!   panel column refills from the queue. The race ends the moment a
+//!   single possible winner remains.
+//! * **Comparison mode** ([`race_dg`]): the paired Δ⁺/Δ⁻ lanes of the
+//!   double-greedy inclusion test stop the moment their log-gap brackets
+//!   separate (the retrospective Alg. 9 behavior), or — under
+//!   [`RacePolicy::Exhaustive`] — refine both sides to
+//!   exhaustion/budget first and decide identically from the final
+//!   brackets.
+//!
+//! **Selection identity.** Pruning only ever discards *dominated* arms:
+//! an arm is evicted when its current upper bound sits strictly (by
+//! [`PRUNE_MARGIN`]) below another arm's current lower bound. Because
+//! brackets are nested over iterations, the evicted arm's final estimate
+//! would have stayed strictly below that rival's final estimate, so the
+//! argmax over the survivors equals the argmax over all arms —
+//! [`RacePolicy::Prune`] and [`RacePolicy::Exhaustive`] select
+//! *identically* (property-tested in `rust/tests/prop_race.rs`); only the
+//! number of panel sweeps differs.
+
+use super::block::{BlockGql, RetireReason, StopRule};
+use super::gql::{Bounds, Gql, GqlOptions};
+use super::is_zero;
+use super::judge::{JudgeOutcome, JudgeStats};
+use crate::sparse::SymOp;
+
+/// Whether a race may evict dominated arms.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RacePolicy {
+    /// Run every arm to its own stop rule and only then compare — the
+    /// pre-racing behavior, kept as the reference arm of every property
+    /// test and the `race` experiment.
+    Exhaustive,
+    /// Evict dominated arms after every panel sweep and stop as soon as
+    /// the decision is determined. Selections are identical to
+    /// `Exhaustive`; sweeps are not.
+    Prune,
+}
+
+/// Safety margin for dominance tests, relative to the magnitudes
+/// involved: floating-point bound sequences obey the paper's monotonicity
+/// only to rounding error, so an arm is only evicted when its upper bound
+/// is *clearly* below the best lower bound. Costs a negligible amount of
+/// pruning, buys exact selection identity in practice.
+pub const PRUNE_MARGIN: f64 = 1e-9;
+
+#[inline]
+fn dominated(hi: f64, best_lo: f64) -> bool {
+    hi < best_lo - PRUNE_MARGIN * (1.0 + hi.abs() + best_lo.abs())
+}
+
+/// Value bracket of an arm given its BIF bounds: `value = offset +
+/// scale · bif`, so the bracket endpoints swap when `scale < 0`.
+fn value_bracket(offset: f64, scale: f64, b: &Bounds) -> (f64, f64) {
+    let (blo, bhi) = if b.exact { (b.gauss, b.gauss) } else { (b.lower(), b.upper()) };
+    let (v1, v2) = (offset + scale * blo, offset + scale * bhi);
+    if v1 <= v2 {
+        (v1, v2)
+    } else {
+        (v2, v1)
+    }
+}
+
+/// Point estimate of an arm's value from finished bounds: the exact Gauss
+/// value after Krylov exhaustion, the bracket midpoint otherwise — the
+/// same estimator the pre-racing greedy used, so exhaustive races score
+/// candidates bit-identically to the old scoring loop.
+fn value_estimate(offset: f64, scale: f64, b: &Bounds) -> f64 {
+    let bif = if b.exact { b.gauss } else { b.mid() };
+    offset + scale * bif
+}
+
+#[derive(Clone, Copy, Debug)]
+enum ArmStatus {
+    /// In the panel or waiting in the engine queue.
+    Racing,
+    /// Reached its stop rule; final value bracket, estimate, and
+    /// iteration count recorded.
+    Done { est: f64, lo: f64, hi: f64, iters: usize },
+    /// Evicted by interval dominance — provably not the argmax.
+    Pruned,
+}
+
+struct Arm {
+    offset: f64,
+    scale: f64,
+    status: ArmStatus,
+}
+
+/// Accounting for one race.
+#[derive(Clone, Debug, Default)]
+pub struct RaceStats {
+    /// `matvec_multi` panel sweeps actually performed.
+    pub sweeps: usize,
+    /// Number of arms entered.
+    pub arms: usize,
+    /// Arms evicted by dominance, as `(arm index, iteration at eviction)`
+    /// — finished arms that later became dominated report their final
+    /// iteration count.
+    pub pruned_at: Vec<(usize, usize)>,
+    /// True when the race ended before every surviving arm reached its
+    /// stop rule (a lone possible winner remained).
+    pub decided_early: bool,
+}
+
+impl RaceStats {
+    /// Arms evicted by dominance.
+    pub fn pruned(&self) -> usize {
+        self.pruned_at.len()
+    }
+}
+
+/// Result of an argmax race.
+#[derive(Clone, Debug)]
+pub struct RaceOutcome {
+    /// Index (push order) of the winning arm; `None` when every arm's
+    /// value fell at or below the `floor` passed to [`Race::run`].
+    pub winner: Option<usize>,
+    /// Per-arm value estimates: `Some` for arms that reached their stop
+    /// rule (and for a winner crowned early, whose entry holds its
+    /// current bracket midpoint), `None` for pruned arms.
+    pub estimates: Vec<Option<f64>>,
+    pub stats: RaceStats,
+}
+
+/// An argmax race over one shared operator: push arms, then [`Race::run`].
+///
+/// Each arm `i` is a query vector `u_i` with an affine value
+/// `offset_i + scale_i · u_i^T A^{-1} u_i`; the race finds the arm with
+/// the largest value. DPP greedy uses `offset = L_cc, scale = −1` (the
+/// marginal-gain bracket); plain "largest BIF" callers use
+/// `offset = 0, scale = 1`.
+pub struct Race<'a> {
+    eng: BlockGql<'a>,
+    arms: Vec<Arm>,
+    policy: RacePolicy,
+}
+
+impl<'a> Race<'a> {
+    /// A race over `op` scored through a width-`width` panel. `opts` and
+    /// `width` behave exactly as in [`BlockGql::new`].
+    pub fn new(op: &'a dyn SymOp, opts: GqlOptions, width: usize, policy: RacePolicy) -> Self {
+        Race { eng: BlockGql::new(op, opts, width), arms: Vec::new(), policy }
+    }
+
+    /// Enter an arm; returns its index (push order). `stop` is the arm's
+    /// own refinement limit — the bracket tolerance it runs to when the
+    /// race does not prune it first.
+    pub fn push_arm(&mut self, u: &[f64], stop: StopRule, offset: f64, scale: f64) -> usize {
+        let id = self.eng.push(u, stop);
+        debug_assert_eq!(id, self.arms.len(), "arm ids mirror push order");
+        self.arms.push(Arm { offset, scale, status: ArmStatus::Racing });
+        id
+    }
+
+    /// Number of arms entered so far.
+    pub fn arms(&self) -> usize {
+        self.arms.len()
+    }
+
+    /// Run the race to its decision.
+    ///
+    /// `floor`: optional minimum useful value (DPP greedy's PD gain
+    /// floor). Arms whose upper bound falls below it are pruned like any
+    /// dominated arm, and the returned `winner` is `None` unless the
+    /// winning arm's value strictly exceeds the floor — the same strict
+    /// comparison the exhaustive scoring loop applies.
+    pub fn run(mut self, floor: Option<f64>) -> RaceOutcome {
+        let mut stats = RaceStats { arms: self.arms.len(), ..RaceStats::default() };
+        let mut estimates: Vec<Option<f64>> = vec![None; self.arms.len()];
+        loop {
+            let progressed = self.eng.step_panel();
+            for r in self.eng.take_done() {
+                let arm = &mut self.arms[r.id];
+                // an arm pruned in the same round it finished stays pruned
+                if matches!(arm.status, ArmStatus::Racing) {
+                    let (lo, hi) = value_bracket(arm.offset, arm.scale, &r.bounds);
+                    let est = value_estimate(arm.offset, arm.scale, &r.bounds);
+                    arm.status = ArmStatus::Done { est, lo, hi, iters: r.iters };
+                    estimates[r.id] = Some(est);
+                }
+            }
+            if self.policy == RacePolicy::Prune {
+                if let Some(early) =
+                    self.prune_round(floor, &mut stats, &mut estimates)
+                {
+                    stats.sweeps = self.eng.sweeps();
+                    return RaceOutcome { winner: early, estimates, stats };
+                }
+            }
+            if !progressed {
+                break;
+            }
+        }
+        stats.sweeps = self.eng.sweeps();
+        // Exhaustive scoring (or a prune race whose survivors all reached
+        // their stop rules): argmax over surviving estimates in arm order
+        // with a strict-greater tie-break — exactly the pre-racing loop.
+        let mut best: Option<(usize, f64)> = None;
+        for (i, arm) in self.arms.iter().enumerate() {
+            if let ArmStatus::Done { est, .. } = arm.status {
+                if best.map_or(true, |(_, g)| est > g) {
+                    best = Some((i, est));
+                }
+            }
+        }
+        let winner = match (best, floor) {
+            (Some((i, est)), Some(f)) if est > f => Some(i),
+            (Some(_), Some(_)) => None,
+            (Some((i, _)), None) => Some(i),
+            (None, _) => None,
+        };
+        RaceOutcome { winner, estimates, stats }
+    }
+
+    /// One dominance round. Returns `Some(winner)` once the decision is
+    /// determined early: `Some(Some(arm))` when a lone possible winner
+    /// remains (every rival *and* the floor dominated), `Some(None)` when
+    /// the floor dominated every arm. `None` means the race goes on.
+    fn prune_round(
+        &mut self,
+        floor: Option<f64>,
+        stats: &mut RaceStats,
+        estimates: &mut [Option<f64>],
+    ) -> Option<Option<usize>> {
+        // current value brackets of the arms still in the panel
+        let active: Vec<(usize, Option<Bounds>)> = self.eng.active().collect();
+        let mut brackets: Vec<Option<(f64, f64, usize)>> = vec![None; self.arms.len()];
+        for (i, arm) in self.arms.iter().enumerate() {
+            match arm.status {
+                ArmStatus::Done { lo, hi, iters, .. } => brackets[i] = Some((lo, hi, iters)),
+                ArmStatus::Racing => {
+                    if let Some((_, Some(b))) = active.iter().find(|(id, _)| *id == i) {
+                        let (lo, hi) = value_bracket(arm.offset, arm.scale, b);
+                        brackets[i] = Some((lo, hi, b.iter));
+                    }
+                    // arms still waiting in the queue have no bracket yet
+                    // and can be neither pruned nor used for pruning
+                }
+                ArmStatus::Pruned => {}
+            }
+        }
+        let mut best_lo = f64::NEG_INFINITY;
+        for (i, arm) in self.arms.iter().enumerate() {
+            if matches!(arm.status, ArmStatus::Pruned) {
+                continue;
+            }
+            if let Some((lo, _, _)) = brackets[i] {
+                best_lo = best_lo.max(lo);
+            }
+        }
+        let thresh = match floor {
+            Some(f) => best_lo.max(f),
+            None => best_lo,
+        };
+        if thresh.is_finite() {
+            for i in 0..self.arms.len() {
+                if matches!(self.arms[i].status, ArmStatus::Pruned) {
+                    continue;
+                }
+                if let Some((_, hi, iter)) = brackets[i] {
+                    if dominated(hi, thresh) {
+                        if matches!(self.arms[i].status, ArmStatus::Racing) {
+                            self.eng.retire(i, RetireReason::Dominated);
+                        }
+                        // (finished arms have nothing to evict, but marking
+                        // them keeps the survivor count honest for the
+                        // early exit below)
+                        self.arms[i].status = ArmStatus::Pruned;
+                        estimates[i] = None;
+                        stats.pruned_at.push((i, iter));
+                    }
+                }
+            }
+        }
+        // early exit: how many arms can still win?
+        let survivors: Vec<usize> = self
+            .arms
+            .iter()
+            .enumerate()
+            .filter(|(_, a)| !matches!(a.status, ArmStatus::Pruned))
+            .map(|(i, _)| i)
+            .collect();
+        if survivors.is_empty() {
+            // the floor dominated everything: no candidate is feasible
+            return Some(None);
+        }
+        if survivors.len() == 1 {
+            let w = survivors[0];
+            // the floor must be dominated too before the winner can be
+            // crowned without its final estimate
+            let floor_beaten = match floor {
+                None => true,
+                Some(f) => brackets[w].map_or(false, |(lo, _, _)| dominated(f, lo)),
+            };
+            let still_racing = matches!(self.arms[w].status, ArmStatus::Racing);
+            if floor_beaten && still_racing {
+                // stop refining: the surrounding decision is determined
+                // before the winner reached its own stop rule — the only
+                // genuinely early ending (a finished winner below ended
+                // on schedule, it just needs no further sweeps)
+                stats.decided_early = true;
+                if estimates[w].is_none() {
+                    if let Some((lo, hi, _)) = brackets[w] {
+                        estimates[w] = Some(0.5 * (lo + hi));
+                    }
+                }
+                self.eng.retire(w, RetireReason::Decided);
+                return Some(Some(w));
+            }
+            if floor_beaten && !still_racing {
+                // finished winner: identical to the exhaustive exit, but
+                // no need to wait for the loop to notice the empty engine
+                return Some(Some(w));
+            }
+            // lone survivor but the floor still straddles its bracket:
+            // keep refining until its own stop rule resolves the floor
+            // comparison exactly like the exhaustive path
+        }
+        None
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Comparison mode: the double-greedy inclusion race (paper Alg. 9)
+// ---------------------------------------------------------------------------
+
+/// Bracket for `log(t − bif)` given BIF bounds `[lo, hi]`; −∞ when the
+/// argument is non-positive (degenerate gain; `[x]₊` clamps it later).
+fn log_gap_bracket(t: f64, bif_lo: f64, bif_hi: f64) -> (f64, f64) {
+    let lo_arg = t - bif_hi;
+    let hi_arg = t - bif_lo;
+    let lo = if lo_arg > 0.0 { lo_arg.ln() } else { f64::NEG_INFINITY };
+    let hi = if hi_arg > 0.0 { hi_arg.ln() } else { f64::NEG_INFINITY };
+    (lo, hi)
+}
+
+#[inline]
+fn pos(x: f64) -> f64 {
+    x.max(0.0)
+}
+
+/// Double-greedy inclusion test as a two-arm comparison race (paper
+/// Alg. 9): with Δ⁺ = log(l_ii − u_x^T L_X^{-1} u_x) and
+/// Δ⁻ = −log(l_ii − u_y^T L_{Y'}^{-1} u_y), returns true (add `i` to X)
+/// iff `p·[Δ⁻]₊ ≤ (1−p)·[Δ⁺]₊`.
+///
+/// Under [`RacePolicy::Prune`] the race stops the moment the two log-gap
+/// brackets separate — the retrospective behavior
+/// [`crate::quadrature::judge_dg`] has always had. Under
+/// [`RacePolicy::Exhaustive`] both quadratures refine to
+/// exhaustion/budget first and the decision falls out of the final
+/// brackets; because certified separations only ever tighten, the two
+/// policies decide identically (property-tested), differing only in
+/// `JudgeStats::iters`.
+///
+/// `ops` may be `None` when the corresponding set is empty (Δ then
+/// depends on `l_ii` alone and is exact).
+pub fn race_dg(
+    op_x: Option<(&dyn SymOp, &[f64])>,
+    op_y: Option<(&dyn SymOp, &[f64])>,
+    l_ii: f64,
+    p: f64,
+    opts_x: GqlOptions,
+    opts_y: GqlOptions,
+    policy: RacePolicy,
+) -> (bool, JudgeStats) {
+    // Quadrature state (None = exact zero-BIF, incl. zero query vectors)
+    let mut qx = op_x
+        .filter(|(_, u)| !is_zero(u))
+        .map(|(op, u)| Gql::new(op, u, opts_x));
+    let mut qy = op_y
+        .filter(|(_, u)| !is_zero(u))
+        .map(|(op, u)| Gql::new(op, u, opts_y));
+    let mut bx = qx.as_mut().map(|q| q.step());
+    let mut by = qy.as_mut().map(|q| q.step());
+    let mut iters = 0usize;
+
+    loop {
+        let (x_lo, x_hi, x_exact) = match &bx {
+            Some(b) => (b.lower(), b.upper(), b.exact),
+            None => (0.0, 0.0, true),
+        };
+        let (y_lo, y_hi, y_exact) = match &by {
+            Some(b) => (b.lower(), b.upper(), b.exact),
+            None => (0.0, 0.0, true),
+        };
+        // Δ⁺ = log(l_ii − bif_x) ∈ [log(l_ii − x_hi), log(l_ii − x_lo)]
+        let (dp_lo, dp_hi) = log_gap_bracket(l_ii, x_lo, x_hi);
+        // Δ⁻ = −log(l_ii − bif_y) ∈ [−log(l_ii − y_lo), −log(l_ii − y_hi)]
+        let (ly_lo, ly_hi) = log_gap_bracket(l_ii, y_lo, y_hi);
+        let (dm_lo, dm_hi) = (-ly_hi, -ly_lo); // note sign flip reverses order
+
+        if policy == RacePolicy::Prune {
+            // decide early: add i  if p·[Δ⁻]₊ ≤ (1−p)·[Δ⁺]₊ certainly
+            if p * pos(dm_hi) <= (1.0 - p) * pos(dp_lo) {
+                let outcome =
+                    if x_exact && y_exact { JudgeOutcome::Exact } else { JudgeOutcome::Decided };
+                return (true, JudgeStats { iters, outcome });
+            }
+            if p * pos(dm_lo) > (1.0 - p) * pos(dp_hi) {
+                let outcome =
+                    if x_exact && y_exact { JudgeOutcome::Exact } else { JudgeOutcome::Decided };
+                return (false, JudgeStats { iters, outcome });
+            }
+        }
+        if x_exact && y_exact {
+            return (
+                p * pos(dm_lo) <= (1.0 - p) * pos(dp_lo),
+                JudgeStats { iters, outcome: JudgeOutcome::Exact },
+            );
+        }
+        // §5.2 refinement: tighten the side with the larger weighted
+        // log-gap bracket
+        let gx = (1.0 - p) * (pos(dp_hi) - pos(dp_lo));
+        let gy = p * (pos(dm_hi) - pos(dm_lo));
+        let x_can = !x_exact && qx.as_ref().map_or(false, |q| q.iterations() < opts_x.max_iters);
+        let y_can = !y_exact && qy.as_ref().map_or(false, |q| q.iterations() < opts_y.max_iters);
+        if !x_can && !y_can {
+            let dp_mid = 0.5 * (pos(dp_lo) + pos(dp_hi));
+            let dm_mid = 0.5 * (pos(dm_lo) + pos(dm_hi));
+            return (
+                p * dm_mid <= (1.0 - p) * dp_mid,
+                JudgeStats { iters, outcome: JudgeOutcome::Budget },
+            );
+        }
+        if x_can && (gx >= gy || !y_can) {
+            bx = qx.as_mut().map(|q| q.step());
+        } else {
+            by = qy.as_mut().map(|q| q.step());
+        }
+        iters += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::random_sparse_spd;
+    use crate::linalg::Cholesky;
+    use crate::util::prop::forall;
+    use crate::util::rng::Rng;
+
+    /// Oracle argmax of `offset_i − u_i^T A^{-1} u_i` via dense Cholesky.
+    fn oracle_argmax(
+        a: &crate::sparse::Csr,
+        arms: &[(Vec<f64>, f64)],
+        floor: Option<f64>,
+    ) -> Option<usize> {
+        let ch = Cholesky::factor(&a.to_dense()).expect("SPD");
+        let mut best: Option<(usize, f64)> = None;
+        for (i, (u, off)) in arms.iter().enumerate() {
+            let val = off - ch.bif(u);
+            if best.map_or(true, |(_, g)| val > g) {
+                best = Some((i, val));
+            }
+        }
+        match (best, floor) {
+            (Some((i, v)), Some(f)) if v > f => Some(i),
+            (Some(_), Some(_)) => None,
+            (Some((i, _)), None) => Some(i),
+            (None, _) => None,
+        }
+    }
+
+    #[test]
+    fn prune_and_exhaustive_pick_the_same_winner() {
+        forall(12, 0xACE1, |rng| {
+            let n = 10 + rng.below(24);
+            let (a, w) = random_sparse_spd(rng, n, 0.3, 0.05);
+            let m = 3 + rng.below(8);
+            let width = 1 + rng.below(m);
+            let opts = GqlOptions::new(w.lo, w.hi);
+            let arms: Vec<(Vec<f64>, f64)> = (0..m)
+                .map(|_| {
+                    let u: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+                    let off = 2.0 + rng.f64() * 3.0;
+                    (u, off)
+                })
+                .collect();
+            let run = |policy| {
+                let mut race = Race::new(&a, opts, width, policy);
+                for (u, off) in &arms {
+                    race.push_arm(u, StopRule::GapRel(1e-10), *off, -1.0);
+                }
+                race.run(None)
+            };
+            let ex = run(RacePolicy::Exhaustive);
+            let pr = run(RacePolicy::Prune);
+            assert_eq!(ex.winner, pr.winner, "policies disagreed");
+            assert_eq!(ex.winner, oracle_argmax(&a, &arms, None), "wrong argmax");
+            assert!(pr.stats.sweeps <= ex.stats.sweeps, "pruning added sweeps");
+        });
+    }
+
+    #[test]
+    fn floor_semantics_match_strict_comparison() {
+        // every arm's value pushed below the floor ⇒ winner None; floor
+        // below the best arm ⇒ winner unchanged
+        let mut rng = Rng::new(0xACE2);
+        let n = 16;
+        let (a, w) = random_sparse_spd(&mut rng, n, 0.3, 0.05);
+        let opts = GqlOptions::new(w.lo, w.hi);
+        let arms: Vec<(Vec<f64>, f64)> = (0..4)
+            .map(|_| {
+                let u: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+                (u, 1.0)
+            })
+            .collect();
+        let run = |policy, floor| {
+            let mut race = Race::new(&a, opts, 4, policy);
+            for (u, off) in &arms {
+                race.push_arm(u, StopRule::GapRel(1e-10), *off, -1.0);
+            }
+            race.run(floor)
+        };
+        for policy in [RacePolicy::Exhaustive, RacePolicy::Prune] {
+            assert_eq!(
+                run(policy, Some(1e9)).winner,
+                None,
+                "no arm beats an impossible floor"
+            );
+            let want = oracle_argmax(&a, &arms, Some(-1e9));
+            assert_eq!(run(policy, Some(-1e9)).winner, want);
+        }
+    }
+
+    #[test]
+    fn gapped_arms_race_saves_sweeps_and_reports_prunes() {
+        // one arm with a much larger offset dominates almost immediately:
+        // the prune race must spend strictly fewer panel sweeps
+        let mut rng = Rng::new(0xACE3);
+        let n = 48;
+        let (a, w) = random_sparse_spd(&mut rng, n, 0.15, 0.05);
+        let opts = GqlOptions::new(w.lo, w.hi);
+        let mut arms: Vec<(Vec<f64>, f64)> = (0..8)
+            .map(|_| {
+                let u: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+                (u, 1.0)
+            })
+            .collect();
+        arms[3].1 = 1e3; // clear gap
+        let run = |policy| {
+            let mut race = Race::new(&a, opts, 4, policy);
+            for (u, off) in &arms {
+                race.push_arm(u, StopRule::GapRel(1e-12), *off, -1.0);
+            }
+            race.run(None)
+        };
+        let ex = run(RacePolicy::Exhaustive);
+        let pr = run(RacePolicy::Prune);
+        assert_eq!(ex.winner, Some(3));
+        assert_eq!(pr.winner, Some(3));
+        assert!(
+            pr.stats.sweeps < ex.stats.sweeps,
+            "prune {} vs exhaustive {} sweeps",
+            pr.stats.sweeps,
+            ex.stats.sweeps
+        );
+        assert!(pr.stats.pruned() > 0, "no arm was pruned");
+        assert!(pr.stats.decided_early);
+    }
+
+    #[test]
+    fn single_arm_races_degenerate_to_plain_scoring() {
+        let mut rng = Rng::new(0xACE4);
+        let n = 12;
+        let (a, w) = random_sparse_spd(&mut rng, n, 0.4, 0.05);
+        let u: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let opts = GqlOptions::new(w.lo, w.hi);
+        for policy in [RacePolicy::Exhaustive, RacePolicy::Prune] {
+            let mut race = Race::new(&a, opts, 1, policy);
+            race.push_arm(&u, StopRule::GapRel(1e-10), 0.0, 1.0);
+            let out = race.run(None);
+            assert_eq!(out.winner, Some(0));
+            assert!(out.estimates[0].is_some());
+        }
+    }
+
+    #[test]
+    fn zero_arms_yield_no_winner() {
+        let mut rng = Rng::new(0xACE5);
+        let (a, w) = random_sparse_spd(&mut rng, 8, 0.4, 0.05);
+        let race = Race::new(&a, GqlOptions::new(w.lo, w.hi), 2, RacePolicy::Prune);
+        let out = race.run(Some(0.0));
+        assert_eq!(out.winner, None);
+        assert_eq!(out.stats.sweeps, 0);
+    }
+
+    #[test]
+    fn race_dg_policies_agree_with_each_other_and_the_oracle() {
+        forall(20, 0xACE6, |rng| {
+            let n = 8 + rng.below(16);
+            let (l, w) = random_sparse_spd(rng, n, 0.3, 0.05);
+            let k = 2 + rng.below(n / 2);
+            let all = rng.sample_indices(n, n);
+            let (xs, rest) = all.split_at(k);
+            let (ys, _) = rest.split_at(1 + rng.below(rest.len() - 1));
+            let i = *all.last().unwrap();
+            let mut xs = xs.to_vec();
+            let mut ys = ys.to_vec();
+            xs.sort_unstable();
+            ys.sort_unstable();
+            let ax = l.principal_submatrix(&xs);
+            let ay = l.principal_submatrix(&ys);
+            let ux: Vec<f64> = xs.iter().map(|&m| l.get(m, i)).collect();
+            let uy: Vec<f64> = ys.iter().map(|&m| l.get(m, i)).collect();
+            let l_ii = l.get(i, i);
+            let (chx, chy) = match (
+                Cholesky::factor(&ax.to_dense()),
+                Cholesky::factor(&ay.to_dense()),
+            ) {
+                (Ok(a), Ok(b)) => (a, b),
+                _ => return,
+            };
+            let dp = (l_ii - chx.bif(&ux)).max(1e-300).ln();
+            let dm = -(l_ii - chy.bif(&uy)).max(1e-300).ln();
+            let opts = GqlOptions::new(w.lo * 0.5, w.hi * 1.5);
+            for p in [0.25, 0.5, 0.75] {
+                let want = p * dm.max(0.0) <= (1.0 - p) * dp.max(0.0);
+                let (prune, js_p) = race_dg(
+                    Some((&ax, &ux)),
+                    Some((&ay, &uy)),
+                    l_ii,
+                    p,
+                    opts,
+                    opts,
+                    RacePolicy::Prune,
+                );
+                let (exhaust, js_e) = race_dg(
+                    Some((&ax, &ux)),
+                    Some((&ay, &uy)),
+                    l_ii,
+                    p,
+                    opts,
+                    opts,
+                    RacePolicy::Exhaustive,
+                );
+                assert_eq!(prune, want, "prune decision wrong (p={p})");
+                assert_eq!(exhaust, want, "exhaustive decision wrong (p={p})");
+                assert!(js_p.iters <= js_e.iters, "pruning refined more");
+            }
+        });
+    }
+}

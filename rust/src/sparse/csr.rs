@@ -182,6 +182,12 @@ impl SymOp for Csr {
     /// on). Per lane the nonzeros are accumulated in the same order as
     /// the scalar [`SymOp::matvec`], so lane results are bit-identical to
     /// `b` independent matvecs.
+    ///
+    /// The per-nonzero inner loop runs over fixed-width 4-lane chunks
+    /// (plus a scalar remainder), so when the caller pads the panel
+    /// stride to a multiple of 4 — as `BlockGql` does — the whole loop
+    /// vectorizes. Chunking never reorders a lane's accumulation: each
+    /// lane still sums its nonzeros in CSR order, independently.
     fn matvec_multi(&self, x: &[f64], y: &mut [f64], b: usize) {
         debug_assert_eq!(x.len(), self.n * b);
         debug_assert_eq!(y.len(), self.n * b);
@@ -194,9 +200,7 @@ impl SymOp for Csr {
             for k in self.row_ptr[i]..self.row_ptr[i + 1] {
                 let v = self.values[k];
                 let xrow = &x[self.col_idx[k] * b..self.col_idx[k] * b + b];
-                for (yl, &xl) in yrow.iter_mut().zip(xrow) {
-                    *yl += v * xl;
-                }
+                super::axpy_lanes(v, xrow, yrow);
             }
         }
     }

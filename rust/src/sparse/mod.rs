@@ -11,6 +11,29 @@ pub mod spectrum;
 pub mod submatrix;
 
 pub use csr::{Csr, CsrBuilder};
+
+/// The shared per-nonzero panel update `yrow += v * xrow`, one entry per
+/// lane: fixed-width 4-lane chunks (vectorizable when the caller pads the
+/// panel stride to a multiple of 4, as `BlockGql` does) plus a scalar
+/// remainder. Each lane accumulates independently and in caller order, so
+/// using this helper cannot perturb the engines' per-lane bit-identity
+/// contract — both specialized `matvec_multi` kernels call it, keeping
+/// the accumulation pattern defined in exactly one place.
+#[inline]
+pub(crate) fn axpy_lanes(v: f64, xrow: &[f64], yrow: &mut [f64]) {
+    debug_assert_eq!(xrow.len(), yrow.len());
+    let mut yc = yrow.chunks_exact_mut(4);
+    let mut xc = xrow.chunks_exact(4);
+    for (y4, x4) in yc.by_ref().zip(xc.by_ref()) {
+        y4[0] += v * x4[0];
+        y4[1] += v * x4[1];
+        y4[2] += v * x4[2];
+        y4[3] += v * x4[3];
+    }
+    for (yl, &xl) in yc.into_remainder().iter_mut().zip(xc.remainder()) {
+        *yl += v * xl;
+    }
+}
 pub use spectrum::{
     gershgorin_bounds, gershgorin_view, lanczos_bounds, power_iteration_lmax, SpectrumBounds,
 };

@@ -132,7 +132,9 @@ impl SymOp for SubmatrixView<'_> {
     /// Panel sweep through the parent rows: each parent nonzero visited
     /// once per sweep regardless of the lane count (the block-DPP hot
     /// path: scoring many candidates against one working set `Y`). Lane
-    /// accumulation order matches the scalar [`SymOp::matvec`] exactly.
+    /// accumulation order matches the scalar [`SymOp::matvec`] exactly;
+    /// the inner loop runs over fixed-width 4-lane chunks so padded
+    /// panel strides vectorize (see [`Csr::matvec_multi`]).
     fn matvec_multi(&self, x: &[f64], y: &mut [f64], b: usize) {
         let k = self.idx.len();
         debug_assert_eq!(x.len(), k * b);
@@ -147,9 +149,7 @@ impl SymOp for SubmatrixView<'_> {
                 let lj = self.pos[gj];
                 if lj != usize::MAX {
                     let xrow = &x[lj * b..lj * b + b];
-                    for (yl, &xl) in yrow.iter_mut().zip(xrow) {
-                        *yl += v * xl;
-                    }
+                    super::axpy_lanes(v, xrow, yrow);
                 }
             }
         }

@@ -92,6 +92,42 @@ fn block_sweep_writes_csv_and_stays_exact() {
 }
 
 #[test]
+fn race_sweep_saves_sweeps_and_writes_csv() {
+    let out = tmp_out("race");
+    // --scale shrinks the kernel; the command exits nonzero if pruning
+    // changes a selection or saves no panel sweeps
+    let o = bin()
+        .args([
+            "race",
+            "--out",
+            out.to_str().unwrap(),
+            "--scale",
+            "40",
+            "--ks",
+            "2,4",
+            "--block-width",
+            "4",
+        ])
+        .output()
+        .expect("run race");
+    assert!(o.status.success(), "stderr: {}", String::from_utf8_lossy(&o.stderr));
+    let csv = std::fs::read_to_string(out.join("race.csv")).expect("csv");
+    assert!(csv.starts_with("n,nnz,k,width,exhaustive_sweeps,prune_sweeps"));
+    assert_eq!(csv.lines().count(), 1 + 2, "one row per k");
+    for line in csv.lines().skip(1) {
+        let cols: Vec<&str> = line.split(',').collect();
+        assert_eq!(cols[9], "true", "selections must be identical: {line}");
+    }
+}
+
+#[test]
+fn invalid_race_flag_exits_2() {
+    let o = bin().args(["race", "--race", "sideways"]).output().expect("run");
+    assert_eq!(o.status.code(), Some(2));
+    assert!(String::from_utf8_lossy(&o.stderr).contains("--race"));
+}
+
+#[test]
 fn config_file_overrides_defaults() {
     let out = tmp_out("cfg");
     std::fs::create_dir_all(&out).unwrap();

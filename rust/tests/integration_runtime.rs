@@ -3,7 +3,7 @@
 //! tests print a notice and pass vacuously (the Makefile's `test` target
 //! always builds artifacts first, so CI-style runs exercise everything).
 
-use gauss_bif::coordinator::{BatchPolicy, JudgeRequest, JudgeService, RoutePath};
+use gauss_bif::coordinator::{BatchPolicy, JudgeService, RoutePath, ThresholdRequest};
 use gauss_bif::datasets::random_spd_exact;
 use gauss_bif::linalg::Cholesky;
 use gauss_bif::quadrature::{Gql, GqlOptions};
@@ -185,7 +185,7 @@ fn service_with_artifacts_is_oracle_correct_and_uses_pjrt() {
         let u: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
         let exact = Cholesky::factor(&a).unwrap().bif(&u);
         let t = exact * (0.5 + rng.f64());
-        let resp = svc.judge_blocking(JudgeRequest {
+        let resp = svc.judge_blocking(ThresholdRequest {
             a: to_f32_rowmajor(&a),
             u: u.iter().map(|&x| x as f32).collect(),
             n,
