@@ -1,0 +1,59 @@
+//! Mixed-session panel sharing: the same heterogeneous query stream —
+//! thresholds, comparisons, estimates, and an argmax race against one
+//! shared operator — served sequentially (one planner session per query,
+//! the pre-ISSUE-4 shape) vs compiled onto one shared `Session` panel.
+//!
+//! The headline number is **panel sweeps** (counted, deterministic), with
+//! wall-clock alongside; answers are asserted identical — co-scheduling
+//! must never change a decision.
+//!
+//! Run: `cargo bench --bench bench_session`
+
+use gauss_bif::experiments::session::run_one;
+use gauss_bif::util::bench::{Bencher, Table};
+use gauss_bif::util::rng::Rng;
+
+fn main() {
+    let mut b = Bencher::new();
+    let density = 5e-3;
+    println!("gapped kernels, mixed query stream (4 thresholds + 2 compares + 2 estimates + k-arm argmax)\n");
+
+    let mut table = Table::new(&[
+        "n",
+        "k",
+        "queries",
+        "lanes",
+        "sequential sweeps",
+        "session sweeps",
+        "saved",
+        "sequential ms",
+        "session ms",
+    ]);
+    for &(n, k) in &[(400usize, 8usize), (800, 16), (1200, 24)] {
+        b.bench(&format!("n={n} k={k} mixed"), || {
+            let mut r = Rng::new(0x5E55 ^ n as u64);
+            run_one(&mut r, n, density, k).session_sweeps
+        });
+        let mut rng = Rng::new(0x5E55 ^ n as u64);
+        let rep = run_one(&mut rng, n, density, k);
+        assert!(rep.identical, "mixed answers diverged at n={n}");
+        assert!(
+            rep.session_sweeps <= rep.sequential_sweeps,
+            "co-scheduling added sweeps at n={n} ({} vs {})",
+            rep.session_sweeps,
+            rep.sequential_sweeps
+        );
+        table.row(vec![
+            n.to_string(),
+            k.to_string(),
+            rep.queries.to_string(),
+            rep.lanes.to_string(),
+            rep.sequential_sweeps.to_string(),
+            rep.session_sweeps.to_string(),
+            format!("{:.0}%", 100.0 * rep.saved_frac),
+            format!("{:.1}", rep.sequential_s * 1e3),
+            format!("{:.1}", rep.session_s * 1e3),
+        ]);
+    }
+    println!("\n{}", table.render());
+}

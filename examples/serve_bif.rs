@@ -98,7 +98,7 @@ fn main() {
                     batched += 1;
                 }
             }
-            RoutePath::Native | RoutePath::NativeBlock { .. } | RoutePath::NativeRace { .. } => {}
+            RoutePath::Native | RoutePath::NativeSession { .. } | RoutePath::NativeRace { .. } => {}
         }
     }
     let dt = t0.elapsed().as_secs_f64();

@@ -10,9 +10,19 @@
 //! then only needs intervals tight enough to *separate* candidates — the
 //! same retrospective principle as the samplers: refine the widest
 //! overlapping interval until the top-k set is unambiguous.
+//!
+//! Since ISSUE 4 each node's paired ± quadratures run as two estimate
+//! queries on one width-2 [`Session`] panel: a single `matvec_multi`
+//! sweep of `M` advances both polarization terms (they share the
+//! operator), instead of the two independent scalar engines this module
+//! used to drive — per-lane numerics are bit-identical to the scalar
+//! path by the block engine's exactness contract.
 
-use crate::quadrature::{Gql, GqlOptions};
-use crate::sparse::{gershgorin_bounds, Csr, CsrBuilder, SymOp};
+use crate::quadrature::block::StopRule;
+use crate::quadrature::query::{Query, Session};
+use crate::quadrature::race::RacePolicy;
+use crate::quadrature::GqlOptions;
+use crate::sparse::{gershgorin_bounds, Csr, CsrBuilder};
 
 /// Result of a top-k centrality query.
 #[derive(Clone, Debug)]
@@ -25,33 +35,34 @@ pub struct CentralityResult {
     pub iters: usize,
 }
 
-/// Interval tracker for one node's centrality via polarization.
+/// Interval tracker for one node's centrality via polarization: both
+/// terms are estimate queries on one width-2 session panel, so each
+/// refinement costs a single traversal of the shared operator.
 struct NodeBracket<'a> {
     node: usize,
-    q_plus: Gql<'a>,
-    q_minus: Option<Gql<'a>>,
+    session: Session<'a>,
+    q_plus: usize,
+    q_minus: usize,
     lo: f64,
     hi: f64,
 }
 
 impl NodeBracket<'_> {
+    /// One panel sweep (both terms advance together). Returns how many
+    /// lanes could still refine, for iteration accounting.
     fn refine(&mut self) -> usize {
-        let bp = self.q_plus.step();
-        let (mlo, mhi) = match &mut self.q_minus {
-            Some(q) => {
-                let bm = q.step();
-                (bm.lower(), bm.upper())
-            }
-            None => (0.0, 0.0),
-        };
+        let live = [self.q_plus, self.q_minus]
+            .iter()
+            .filter(|&&q| !self.session.is_resolved(q))
+            .count();
+        self.session.step();
+        let bp = self.session.bounds(self.q_plus).expect("plus lane has bounds");
+        let bm = self.session.bounds(self.q_minus).expect("minus lane has bounds");
+        let (mlo, mhi) = (bm.lower(), bm.upper());
         // x = ¼(plus) − ¼(minus): lower needs minus's upper, and vice versa
         self.lo = 0.25 * (bp.lower() - mhi);
         self.hi = 0.25 * (bp.upper() - mlo);
-        if self.q_minus.is_some() {
-            2
-        } else {
-            1
-        }
+        live
     }
 
     fn gap(&self) -> f64 {
@@ -59,8 +70,7 @@ impl NodeBracket<'_> {
     }
 
     fn exhausted(&self) -> bool {
-        self.q_plus.is_exhausted()
-            && self.q_minus.as_ref().map_or(true, |q| q.is_exhausted())
+        self.session.is_resolved(self.q_plus) && self.session.is_resolved(self.q_minus)
     }
 }
 
@@ -97,18 +107,24 @@ pub fn rank_top_k_centrality(
     let mut brackets: Vec<NodeBracket> = cand
         .iter()
         .map(|&i| {
-            // u = e_i, v = 1: u+v and u−v
+            // u = e_i, v = 1: u+v and u−v share the operator M, so both
+            // polarization terms ride one width-2 panel (a zero u−v —
+            // only possible at n = 1 — resolves exactly without a lane)
             let mut plus = ones.clone();
             plus[i] += 1.0;
             let mut minus: Vec<f64> = ones.iter().map(|x| -x).collect();
             minus[i] += 1.0;
-            let q_plus = Gql::new_owned(&m, &plus, opts);
-            let q_minus = if minus.iter().all(|&x| x == 0.0) {
-                None
-            } else {
-                Some(Gql::new_owned(&m, &minus, opts))
-            };
-            NodeBracket { node: i, q_plus, q_minus, lo: f64::NEG_INFINITY, hi: f64::INFINITY }
+            let mut session = Session::new(&m, opts, 2, RacePolicy::Prune);
+            let q_plus = session.submit(Query::Estimate { u: plus, stop: StopRule::Exhaust });
+            let q_minus = session.submit(Query::Estimate { u: minus, stop: StopRule::Exhaust });
+            NodeBracket {
+                node: i,
+                session,
+                q_plus,
+                q_minus,
+                lo: f64::NEG_INFINITY,
+                hi: f64::INFINITY,
+            }
         })
         .collect();
 
@@ -166,15 +182,6 @@ fn finish(top: Vec<usize>, brackets: Vec<NodeBracket>, iters: usize) -> Centrali
         top,
         intervals: brackets.iter().map(|b| (b.node, b.lo, b.hi)).collect(),
         iters,
-    }
-}
-
-// --- owned-vector constructor -------------------------------------------
-// `Gql::new` borrows only the operator; the query vector is copied into the
-// state, so building from a temporary is fine. This shim documents that.
-impl<'a> Gql<'a> {
-    fn new_owned(op: &'a dyn SymOp, u: &[f64], opts: GqlOptions) -> Gql<'a> {
-        Gql::new(op, u, opts)
     }
 }
 

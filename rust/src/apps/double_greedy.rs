@@ -18,7 +18,12 @@
 //!   submatrix views: under the default [`RacePolicy::Prune`] each
 //!   element's two quadratures stop the moment the log-gap brackets
 //!   separate; [`RacePolicy::Exhaustive`] refines both sides fully first
-//!   and decides identically (property-tested).
+//!   and decides identically (property-tested). Since ISSUE 4 the two
+//!   sides run as width-1 sessions of the unified query planner
+//!   ([`crate::quadrature::query::Session`]) — they live on *different*
+//!   operators (`L_X` vs `L_{Y'}`), the one shape that cannot share a
+//!   panel, so the race drives one single-lane session per side with the
+//!   §5.2 looser-side refinement unchanged.
 
 use super::BifStrategy;
 use crate::linalg::{Cholesky, MaintainedInverse};

@@ -24,7 +24,8 @@
 use super::BifStrategy;
 use crate::linalg::{Cholesky, MaintainedInverse};
 use crate::quadrature::block::StopRule;
-use crate::quadrature::race::{Race, RacePolicy};
+use crate::quadrature::query::{Answer, Query, QueryArm, Session};
+use crate::quadrature::race::RacePolicy;
 use crate::quadrature::{judge_threshold, GqlOptions, Reorth};
 use crate::sparse::{Csr, SpectrumBounds, SubmatrixView};
 use crate::util::rng::Rng;
@@ -313,16 +314,17 @@ pub fn greedy_map(l: &Csr, cfg: &GreedyConfig) -> Vec<usize> {
 /// [`greedy_map`] plus per-run racing statistics (the `race` experiment
 /// and `bench_race` count panel sweeps through this entry).
 ///
-/// Every round races *all* remaining candidates against the same operator
-/// `L_Y` through one [`Race`] (candidate `c`'s arm value is the marginal
-/// gain `L_cc − BIF`): under [`RacePolicy::Prune`] a candidate stops
-/// refining the moment its gain bracket falls below the best lower bound
-/// — the paper's "bounds tighten iteratively" turned into best-arm early
-/// termination (ROADMAP item). Selections are **identical** across
-/// policies and panel widths: per-lane scores are bit-identical to scalar
-/// runs (the block engine's exactness contract) and pruning only discards
-/// dominated candidates — asserted in the tests below and in
-/// `rust/tests/prop_race.rs`.
+/// Every round compiles *all* remaining candidates into one
+/// [`Query::Argmax`] on a [`Session`] over the same operator `L_Y`
+/// (candidate `c`'s arm value is the marginal gain `L_cc − BIF`): under
+/// [`RacePolicy::Prune`] a candidate stops refining the moment its gain
+/// bracket falls below the best lower bound — the paper's "bounds tighten
+/// iteratively" turned into best-arm early termination (ROADMAP item).
+/// Selections are **identical** across policies and panel widths:
+/// per-lane scores are bit-identical to scalar runs (the block engine's
+/// exactness contract) and pruning only discards dominated candidates —
+/// asserted in the tests below and in `rust/tests/prop_race.rs` /
+/// `rust/tests/prop_session.rs`.
 pub fn greedy_map_stats(l: &Csr, cfg: &GreedyConfig) -> (Vec<usize>, GreedyStats) {
     let n = l.n;
     let k = cfg.k.min(n);
@@ -351,19 +353,25 @@ pub fn greedy_map_stats(l: &Csr, cfg: &GreedyConfig) -> (Vec<usize>, GreedyStats
             }
         } else {
             let view = SubmatrixView::new(l, &y);
-            let mut race = Race::new(&view, opts, width, cfg.race);
-            for &c in &candidates {
+            let mut session = Session::new(&view, opts, width, cfg.race);
+            let arms: Vec<QueryArm> = candidates
+                .iter()
                 // arm value = L_cc − BIF, the marginal gain bracket
-                race.push_arm(&view.column_of(c), stop, l.get(c, c), -1.0);
-            }
-            let out = race.run(Some(GAIN_FLOOR));
+                .map(|&c| QueryArm::gain(view.column_of(c), stop, l.get(c, c)))
+                .collect();
+            let qid = session.submit(Query::Argmax { arms, floor: Some(GAIN_FLOOR) });
+            let answers = session.run();
+            let (winner, rstats) = match &answers[qid] {
+                Answer::Argmax { winner, stats, .. } => (*winner, stats),
+                _ => unreachable!("argmax queries answer with argmax answers"),
+            };
             stats.rounds += 1;
-            stats.sweeps += out.stats.sweeps;
-            stats.pruned += out.stats.pruned();
-            if out.stats.decided_early {
+            stats.sweeps += rstats.sweeps;
+            stats.pruned += rstats.pruned();
+            if rstats.decided_early {
                 stats.decided_early += 1;
             }
-            out.winner.map(|a| candidates[a])
+            winner.map(|a| candidates[a])
         };
         match chosen {
             Some(c) => {

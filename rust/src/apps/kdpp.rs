@@ -6,15 +6,18 @@
 //! `min{1, (L_uu − L_{u,Y'} L_{Y'}^{-1} L_{Y',u}) / (L_vv − L_{v,Y'} L_{Y'}^{-1} L_{Y',v})}`
 //!
 //! i.e. accept ⟺ `p·L_vv − L_uu < p·BIF_v − BIF_u`, which is exactly
-//! Alg. 7's ratio judgement. The chain routes it through
-//! [`judge_ratio_block`]: both BIFs share the operator `L_{Y'}`, so the
-//! two quadratures advance from *one* width-2 `matvec_multi` panel sweep
-//! per iteration (the block engine's shared-operator speedup, ROADMAP
-//! follow-up) instead of two scalar traversals.
+//! Alg. 7's ratio judgement. The chain submits it as a single
+//! [`Query::Compare`] to a width-2 [`Session`] (ISSUE 4): both BIFs share
+//! the operator `L_{Y'}`, so the two quadratures advance from *one*
+//! width-2 `matvec_multi` panel sweep per iteration instead of two scalar
+//! traversals, and the swap test rides the same comparison machinery as
+//! every other consumer of the planner.
 
 use super::BifStrategy;
 use crate::linalg::Cholesky;
-use crate::quadrature::{judge_ratio_block, GqlOptions};
+use crate::quadrature::query::{Answer, Query, Session};
+use crate::quadrature::race::RacePolicy;
+use crate::quadrature::GqlOptions;
 use crate::sparse::{Csr, SpectrumBounds, SubmatrixView};
 use crate::util::rng::Rng;
 
@@ -64,8 +67,8 @@ impl<'a> KdppSampler<'a> {
     }
 
     /// Start the chain from the greedy MAP subset of size `k` instead of
-    /// a uniform one: candidate scoring runs through the racing scheduler
-    /// ([`crate::quadrature::race::Race`]) over panels of `block_width`
+    /// a uniform one: candidate scoring runs as argmax queries on the
+    /// unified planner ([`Session`]) over panels of `block_width`
     /// lanes, so the warm start costs one greedy sweep of panel matvecs —
     /// with dominated candidates pruned per round (the default
     /// [`crate::quadrature::race::RacePolicy::Prune`], which provably
@@ -136,7 +139,12 @@ impl<'a> KdppSampler<'a> {
                 // accept ⟺ t < p·BIF_v − BIF_u, both sides fed by one
                 // paired panel sweep (§Perf: materialization tried and
                 // reverted — ~2 iterations don't amortize it)
-                let (ans, js) = judge_ratio_block(&view, &uu, &vv, t, p, self.cfg.gql_opts());
+                let mut session = Session::new(&view, self.cfg.gql_opts(), 2, RacePolicy::Prune);
+                let qid = session.submit(Query::Compare { u: uu, v: vv, t, p });
+                let (ans, js) = match session.run().swap_remove(qid) {
+                    Answer::Compare { decision, stats } => (decision, stats),
+                    _ => unreachable!("compare queries answer with compare answers"),
+                };
                 self.stats.judge_iters_total += js.iters;
                 ans
             }

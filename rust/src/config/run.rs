@@ -51,6 +51,8 @@ pub enum ExperimentConfig {
     Rates,
     Block,
     Race,
+    /// Mixed query sessions vs sequential per-query serving (ISSUE 4).
+    Session,
     Serve,
 }
 
@@ -63,6 +65,7 @@ impl ExperimentConfig {
             "rates" => Some(Self::Rates),
             "block" => Some(Self::Block),
             "race" => Some(Self::Race),
+            "session" => Some(Self::Session),
             "serve" => Some(Self::Serve),
             _ => None,
         }
@@ -238,6 +241,10 @@ mod tests {
         assert_eq!(ExperimentConfig::from_name("fig1"), Some(ExperimentConfig::Fig1));
         assert_eq!(ExperimentConfig::from_name("block"), Some(ExperimentConfig::Block));
         assert_eq!(ExperimentConfig::from_name("race"), Some(ExperimentConfig::Race));
+        assert_eq!(
+            ExperimentConfig::from_name("session"),
+            Some(ExperimentConfig::Session)
+        );
         assert_eq!(ExperimentConfig::from_name("nope"), None);
     }
 }

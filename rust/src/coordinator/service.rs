@@ -9,8 +9,8 @@
 //! Requests come in two kinds ([`JudgeRequest`]): classic threshold
 //! judgements (`t < u^T A^{-1} u`?) and **argmax batches**
 //! ([`JudgeRequest::Argmax`]) — N candidate queries against one operator,
-//! raced through the native scheduler
-//! ([`crate::quadrature::race::Race`]) so remote callers get best-arm
+//! raced through the native planner
+//! ([`crate::quadrature::query::Session`]) so remote callers get best-arm
 //! early termination without shipping the kernel N times.
 //!
 //! Routing: threshold requests small enough for a PJRT bucket dispatch
@@ -18,7 +18,11 @@
 //! latency EWMAs ([`ServiceMetrics::prefer_native_block`]) say the native
 //! block path has recently been faster — the ROADMAP "prefer the faster
 //! path" heuristic. Argmax requests always run native (the
-//! fixed-iteration artifacts cannot early-terminate).
+//! fixed-iteration artifacts cannot early-terminate), but since ISSUE 4
+//! they are no longer served alone: the coalesce key excludes the request
+//! *kind*, so co-keyed threshold and argmax traffic drains into **one
+//! shared-operator [`Session`]** whose panel sweeps advance every lane of
+//! every query at once ([`RoutePath::NativeSession`]).
 //!
 //! Lifecycle: [`JudgeService::start`] spawns workers (+ executor); clients
 //! call [`JudgeService::submit`] / [`JudgeService::submit_argmax`] (each
@@ -29,7 +33,8 @@ use super::batcher::{BatchPolicy, Bucketizer};
 use crate::config::run::parse_manifest;
 use crate::linalg::DMat;
 use crate::metrics::ServiceMetrics;
-use crate::quadrature::block::{BlockGql, StopRule};
+use crate::quadrature::block::StopRule;
+use crate::quadrature::query::{Answer, Query, QueryArm, Session};
 use crate::quadrature::race::{Race, RacePolicy};
 use crate::quadrature::{judge_threshold, GqlOptions, Reorth};
 use crate::runtime::{BoundsHistory, GqlRuntime};
@@ -52,9 +57,10 @@ pub struct ThresholdRequest {
     /// Same-operator coalescing key. Clients issuing many queries against
     /// one `a` (a DPP chain, a centrality sweep) tag them with a shared
     /// key; co-keyed native-path requests with equal `n` and spectrum
-    /// window are drained into a single `BlockGql` run. **Contract:**
-    /// requests sharing a key must carry byte-identical `a`. `None`
-    /// disables coalescing for this request.
+    /// window — threshold *and* argmax, the key excludes the kind — are
+    /// drained into a single shared-operator [`Session`] run.
+    /// **Contract:** requests sharing a key must carry byte-identical
+    /// `a`. `None` disables coalescing for this request.
     pub op_key: Option<u64>,
     /// Fully reorthogonalize the Lanczos basis (§5.4): set for
     /// ill-conditioned operators where plain Lanczos loses bound validity.
@@ -89,6 +95,14 @@ pub struct ArgmaxRequest {
     pub prune: bool,
     /// §5.4 full reorthogonalization for every arm
     pub reorth: bool,
+    /// Same-operator coalescing key, sharing the namespace of
+    /// [`ThresholdRequest::op_key`]. The coalesce key deliberately
+    /// excludes the request *kind*: a co-keyed argmax batch drains into
+    /// the same native [`Session`] as co-keyed threshold traffic, so all
+    /// their lanes advance from shared panel sweeps. Same contract:
+    /// requests sharing a key must carry byte-identical `a`. `None`
+    /// races this batch alone.
+    pub op_key: Option<u64>,
 }
 
 /// The coordinator's request kinds.
@@ -105,10 +119,12 @@ pub enum RoutePath {
     Pjrt { bucket: usize, batch: usize },
     /// native rust GQL (big queries, no artifacts, or PJRT failure)
     Native,
-    /// native block GQL: `batch` co-keyed requests coalesced into one
-    /// shared-operator `BlockGql` run
-    NativeBlock { batch: usize },
+    /// native unified planner: `batch` co-keyed requests (threshold
+    /// and/or argmax, the key excludes the kind) compiled onto one
+    /// shared-operator `Session`
+    NativeSession { batch: usize },
     /// native racing scheduler: one argmax batch of `arms` candidates
+    /// served alone (unkeyed, or coalescing disabled)
     NativeRace { arms: usize },
 }
 
@@ -423,11 +439,23 @@ fn worker_loop(
             }
         };
 
+        // The coalesce key deliberately excludes the request kind
+        // (ISSUE 4 satellite): any keyed request — threshold or argmax —
+        // may drain co-keyed traffic of either kind into one session.
+        let coalescible = policy.coalesce && policy.max_batch > 1 && coalesce_key(&first).is_some();
+
         // argmax batches always run native: the fixed-iteration PJRT
         // artifacts cannot prune dominated arms mid-flight
         let first = match first {
             Queued::Argmax(item) => {
-                serve_argmax(&metrics, item);
+                if coalescible {
+                    let key = argmax_key(&item.req).expect("coalescible requires op_key");
+                    let mut group = vec![Queued::Argmax(item)];
+                    group.extend(drain_coalesced(&shared, &key, &policy));
+                    serve_native_session(&metrics, group);
+                } else {
+                    serve_argmax(&metrics, item);
+                }
                 continue;
             }
             Queued::Threshold(item) => item,
@@ -441,7 +469,6 @@ fn worker_loop(
             .bucket(dim)
             .filter(|_| dim <= policy.native_threshold && !first.req.reorth);
         let sender = { exec_tx.lock().unwrap().clone() };
-        let coalescible = policy.coalesce && first.req.op_key.is_some() && policy.max_batch > 1;
         // EWMA routing (ROADMAP): a coalescible request with a viable
         // PJRT bucket goes native anyway when the native block path has
         // recently been faster per request — or is still unmeasured, in
@@ -452,8 +479,10 @@ fn worker_loop(
             (bucket.expect("checked above"), sender.expect("checked above"))
         } else {
             if coalescible {
-                let group = drain_coalesced(&shared, &first, &policy);
-                serve_native_block(&metrics, first, group);
+                let key = thresh_key(&first.req).expect("coalescible requires op_key");
+                let mut group = vec![Queued::Threshold(first)];
+                group.extend(drain_coalesced(&shared, &key, &policy));
+                serve_native_session(&metrics, group);
             } else {
                 serve_native(&metrics, first);
             }
@@ -564,42 +593,49 @@ fn pop_oldest(q: &mut Vec<Queued>) -> Option<Queued> {
     Some(q.remove(idx))
 }
 
-/// Coalesce key: requests may share a `BlockGql` panel only when the
+/// What partitions a session batch: operator id, dimension, spectrum
+/// window, and reorthogonalization mode — the metadata that changes the
+/// numerics (the planner's `GqlOptions` are panel-wide).
+type CoalesceKey = (u64, usize, u32, u32, bool);
+
+/// Coalesce key: requests may share a session panel only when the
 /// operator id, dimension, spectrum window, and reorthogonalization mode
-/// all agree (the engine's `GqlOptions` are panel-wide). Argmax batches
-/// never coalesce (they already are batches).
-fn coalesce_key(item: &Queued) -> Option<(u64, usize, u32, u32, bool)> {
+/// all agree. The request *kind* is deliberately **not** part of the key
+/// (ISSUE 4 satellite): co-keyed argmax and threshold traffic lands in
+/// one native session instead of racing alone.
+fn coalesce_key(item: &Queued) -> Option<CoalesceKey> {
     match item {
         Queued::Threshold(t) => thresh_key(&t.req),
-        Queued::Argmax(_) => None,
+        Queued::Argmax(a) => argmax_key(&a.req),
     }
 }
 
-fn thresh_key(req: &ThresholdRequest) -> Option<(u64, usize, u32, u32, bool)> {
+fn thresh_key(req: &ThresholdRequest) -> Option<CoalesceKey> {
     req.op_key
         .map(|k| (k, req.n, req.lam_min.to_bits(), req.lam_max.to_bits(), req.reorth))
 }
 
-/// The Bucketizer's same-operator coalescing mode: drain queued requests
-/// co-keyed with `first`, sleeping on the shared condvar (woken by
-/// `submit`) up to `max_wait` for stragglers — the client tagged them
-/// batchable, so a bounded wait is the right trade, but a lone keyed
-/// request now parks instead of burning a core for the full 200µs
+fn argmax_key(req: &ArgmaxRequest) -> Option<CoalesceKey> {
+    req.op_key
+        .map(|k| (k, req.n, req.lam_min.to_bits(), req.lam_max.to_bits(), req.reorth))
+}
+
+/// The same-operator coalescing drain: pull queued requests (of either
+/// kind) whose coalesce key equals `key`, sleeping on the shared condvar
+/// (woken by `submit`) up to `max_wait` for stragglers — the client
+/// tagged them batchable, so a bounded wait is the right trade, but a
+/// lone keyed request parks instead of burning a core for the full 200µs
 /// default (the ROADMAP's named latency bug).
-fn drain_coalesced(shared: &Shared, first: &ThreshQueued, policy: &BatchPolicy) -> Vec<ThreshQueued> {
-    let key = thresh_key(&first.req).expect("caller checked op_key");
-    let mut group: Vec<ThreshQueued> = Vec::new();
+fn drain_coalesced(shared: &Shared, key: &CoalesceKey, policy: &BatchPolicy) -> Vec<Queued> {
+    let mut group: Vec<Queued> = Vec::new();
     let deadline = Instant::now() + policy.max_wait;
     let mut q = shared.queue.lock().unwrap();
     loop {
         let keys: Vec<_> = q.iter().map(coalesce_key).collect();
         let want = policy.max_batch - 1 - group.len();
-        let pos = Bucketizer::coalesce_positions(&key, &keys, want);
+        let pos = Bucketizer::coalesce_positions(key, &keys, want);
         for p in pos.into_iter().rev() {
-            match q.remove(p) {
-                Queued::Threshold(t) => group.push(t),
-                Queued::Argmax(_) => unreachable!("argmax items have no coalesce key"),
-            }
+            group.push(q.remove(p));
         }
         let now = Instant::now();
         if group.len() + 1 >= policy.max_batch
@@ -613,78 +649,211 @@ fn drain_coalesced(shared: &Shared, first: &ThreshQueued, policy: &BatchPolicy) 
     }
 }
 
-/// Serve a coalesced group through one shared-operator [`BlockGql`] run:
-/// the matrix is converted to f64 once and one panel sweep advances every
-/// lane. Per-lane decisions are identical to the scalar native path (the
-/// block engine's exactness contract).
-fn serve_native_block(metrics: &ServiceMetrics, first: ThreshQueued, others: Vec<ThreshQueued>) {
+/// A queued request routed into a session, remembering which query id
+/// will answer it (`None`: malformed argmax, answered without a query).
+enum SessionSlot {
+    Thresh(ThreshQueued, usize),
+    Argmax(ArgmaxQueued, Option<usize>),
+}
+
+/// Serve a coalesced group — threshold and/or argmax requests on one
+/// operator — through a single shared-operator [`Session`]: the matrix is
+/// converted to f64 once, every request becomes one query, and one panel
+/// sweep advances every lane of every query. Per-request decisions are
+/// identical to the dedicated paths (the block engine's exactness
+/// contract plus the planner's shared decision ladders).
+fn serve_native_session(metrics: &ServiceMetrics, items: Vec<Queued>) {
     let served = Instant::now();
-    if others.is_empty() {
-        // degenerate group (no co-keyed stragglers arrived): serve scalar,
-        // but still record the native-path EWMA so the router's
-        // exploration sample lands even without real coalescing
-        serve_native(metrics, first);
-        metrics
-            .native_block_ns
-            .record(served.elapsed().as_nanos() as f64);
+    if items.len() == 1 {
+        // degenerate group (no co-keyed stragglers arrived): keep the
+        // specialized paths, but still record the native-path EWMA so the
+        // router's exploration sample lands even without real coalescing
+        match items.into_iter().next().expect("one item") {
+            Queued::Threshold(t) => {
+                serve_native(metrics, t);
+                metrics
+                    .native_block_ns
+                    .record(served.elapsed().as_nanos() as f64);
+            }
+            Queued::Argmax(a) => serve_argmax(metrics, a),
+        }
         return;
     }
-    let mut items = Vec::with_capacity(1 + others.len());
-    items.push(first);
-    items.extend(others);
     let batch = items.len();
-    metrics.native_fallbacks.add(batch as u64);
+    let thresholds = items
+        .iter()
+        .filter(|it| matches!(it, Queued::Threshold(_)))
+        .count();
+    // only threshold requests have a PJRT path to fall back from; argmax
+    // members must not inflate the fallback counter
+    metrics.native_fallbacks.add(thresholds as u64);
     metrics.coalesced_blocks.inc();
     metrics.batch_size.lock().unwrap().record(batch as f64);
-    let n = items[0].req.n;
+    let (n, lam_min, lam_max, reorth) = match &items[0] {
+        Queued::Threshold(t) => (t.req.n, t.req.lam_min, t.req.lam_max, t.req.reorth),
+        Queued::Argmax(a) => (a.req.n, a.req.lam_min, a.req.lam_max, a.req.reorth),
+    };
+    let a_bytes: &[f32] = match &items[0] {
+        Queued::Threshold(t) => &t.req.a,
+        Queued::Argmax(a) => &a.req.a,
+    };
+    // a group led by an unusable operator (malformed argmax metadata)
+    // cannot seed a session; fall back to the dedicated per-request
+    // paths, which answer malformed batches gracefully
+    if n == 0 || a_bytes.len() != n * n || !(lam_min > 0.0 && lam_max > lam_min) {
+        for item in items {
+            match item {
+                Queued::Threshold(t) => serve_native(metrics, t),
+                Queued::Argmax(a) => serve_argmax(metrics, a),
+            }
+        }
+        return;
+    }
     // the op_key contract says co-keyed requests carry byte-identical
     // matrices; cheap to actually check in debug builds
     debug_assert!(
-        items.iter().all(|it| it.req.a == items[0].req.a),
+        items.iter().all(|it| match it {
+            Queued::Threshold(t) => t.req.a == a_bytes,
+            Queued::Argmax(q) => q.req.a == a_bytes,
+        }),
         "co-keyed requests must share an identical operator matrix"
     );
-    let a = DMat::from_fn(n, n, |i, j| items[0].req.a[i * n + j] as f64);
-    let opts = GqlOptions::new(items[0].req.lam_min as f64, items[0].req.lam_max as f64)
-        .with_reorth(reorth_mode(items[0].req.reorth));
-    let mut eng = BlockGql::new(&a, opts, batch);
+    let a = DMat::from_fn(n, n, |i, j| a_bytes[i * n + j] as f64);
+    let opts = GqlOptions::new(lam_min as f64, lam_max as f64).with_reorth(reorth_mode(reorth));
+    // panel width = total lane demand, like the dedicated paths sized
+    // their panels; an exhaustive-scoring argmax member downgrades the
+    // whole session's policy (prune/exhaustive select identically — only
+    // sweeps differ — so correctness is unaffected either way)
+    let mut lanes = 0usize;
     for item in &items {
-        let u: Vec<f64> = item.req.u.iter().map(|&x| x as f64).collect();
-        eng.push(&u, StopRule::Threshold(item.req.t));
+        match item {
+            Queued::Threshold(_) => lanes += 1,
+            Queued::Argmax(q) => {
+                if !argmax_malformed(&q.req) {
+                    lanes += q.req.us.len();
+                }
+            }
+        }
     }
-    let results = eng.run_all(); // sorted by id == items order
-    // feed the router's path-preference EWMA (per-request service time)
-    metrics
-        .native_block_ns
-        .record(served.elapsed().as_nanos() as f64 / batch as f64);
-    for (item, r) in items.into_iter().zip(results) {
-        metrics.judge_iters.lock().unwrap().record(r.iters as f64);
+    let policy = if items.iter().all(|it| match it {
+        Queued::Argmax(q) => q.req.prune,
+        Queued::Threshold(_) => true,
+    }) {
+        RacePolicy::Prune
+    } else {
+        RacePolicy::Exhaustive
+    };
+    let mut session = Session::new(&a, opts, lanes.max(1), policy);
+    let mut slots: Vec<SessionSlot> = Vec::with_capacity(batch);
+    for item in items {
+        match item {
+            Queued::Threshold(t) => {
+                let u: Vec<f64> = t.req.u.iter().map(|&x| x as f64).collect();
+                let qid = session.submit(Query::Threshold { u, t: t.req.t });
+                slots.push(SessionSlot::Thresh(t, qid));
+            }
+            Queued::Argmax(q) => {
+                if argmax_malformed(&q.req) {
+                    slots.push(SessionSlot::Argmax(q, None));
+                    continue;
+                }
+                let scale = if q.req.negate { -1.0 } else { 1.0 };
+                let arms: Vec<QueryArm> = q
+                    .req
+                    .us
+                    .iter()
+                    .enumerate()
+                    .map(|(i, u)| QueryArm {
+                        u: u.iter().map(|&x| x as f64).collect(),
+                        stop: StopRule::GapRel(q.req.tol_rel.max(0.0)),
+                        offset: q.req.offsets.get(i).copied().unwrap_or(0.0),
+                        scale,
+                    })
+                    .collect();
+                let qid = session.submit(Query::Argmax { arms, floor: None });
+                slots.push(SessionSlot::Argmax(q, Some(qid)));
+            }
+        }
+    }
+    let answers = session.run();
+    // feed the router's path-preference EWMA. The EWMA arbitrates
+    // *threshold* routing against PJRT, so the sample is the per-lane
+    // session time (a threshold is one lane): for threshold-only groups
+    // this is exactly the old elapsed/batch figure, and mixed groups
+    // still seed the EWMA — required by prefer_native_block's
+    // self-seeding contract — without letting a wide argmax batch
+    // inflate the apparent per-threshold cost by an order of magnitude
+    if thresholds > 0 {
         metrics
-            .latency_ns
-            .lock()
-            .unwrap()
-            .record(item.enqueued.elapsed().as_nanos() as f64);
-        let decision = r.decision.unwrap_or_else(|| item.req.t < r.bounds.mid());
-        let _ = item.reply.send(JudgeResponse {
-            decision,
-            iters: r.iters,
-            path: RoutePath::NativeBlock { batch },
-        });
+            .native_block_ns
+            .record(served.elapsed().as_nanos() as f64 / lanes.max(1) as f64);
+    }
+    let path = RoutePath::NativeSession { batch };
+    for slot in slots {
+        match slot {
+            SessionSlot::Thresh(item, qid) => match &answers[qid] {
+                Answer::Threshold { decision, stats } => {
+                    metrics.judge_iters.lock().unwrap().record(stats.iters as f64);
+                    metrics
+                        .latency_ns
+                        .lock()
+                        .unwrap()
+                        .record(item.enqueued.elapsed().as_nanos() as f64);
+                    let _ = item.reply.send(JudgeResponse {
+                        decision: *decision,
+                        iters: stats.iters,
+                        path,
+                    });
+                }
+                _ => unreachable!("threshold queries answer with threshold answers"),
+            },
+            SessionSlot::Argmax(item, None) => {
+                metrics.races.inc();
+                let _ = item
+                    .reply
+                    .send(ArgmaxResponse { winner: None, sweeps: 0, pruned: 0, path });
+            }
+            SessionSlot::Argmax(item, Some(qid)) => match &answers[qid] {
+                Answer::Argmax { winner, stats, .. } => {
+                    metrics.races.inc();
+                    metrics
+                        .latency_ns
+                        .lock()
+                        .unwrap()
+                        .record(item.enqueued.elapsed().as_nanos() as f64);
+                    let _ = item.reply.send(ArgmaxResponse {
+                        winner: *winner,
+                        sweeps: stats.sweeps,
+                        pruned: stats.pruned(),
+                        path,
+                    });
+                }
+                _ => unreachable!("argmax queries answer with argmax answers"),
+            },
+        }
     }
 }
 
-/// Serve an argmax batch through the native racing scheduler: all arms
-/// share one operator panel; dominated arms are pruned (when requested)
-/// and the race ends the moment the winner is determined.
+/// A batch the racing scheduler cannot serve: empty, inconsistent
+/// dimensions, or an unusable spectrum window.
+fn argmax_malformed(req: &ArgmaxRequest) -> bool {
+    req.us.is_empty()
+        || req.n == 0
+        || req.a.len() != req.n * req.n
+        || req.us.iter().any(|u| u.len() != req.n)
+        || !(req.lam_min > 0.0 && req.lam_max > req.lam_min)
+}
+
+/// Serve a lone argmax batch through the native racing scheduler (itself
+/// a session wrapper since ISSUE 4): all arms share one operator panel;
+/// dominated arms are pruned (when requested) and the race ends the
+/// moment the winner is determined.
 fn serve_argmax(metrics: &ServiceMetrics, item: ArgmaxQueued) {
     let req = item.req;
     let arms = req.us.len();
     metrics.races.inc();
     let path = RoutePath::NativeRace { arms };
-    let malformed = req.us.iter().any(|u| u.len() != req.n)
-        || req.n == 0
-        || req.a.len() != req.n * req.n
-        || !(req.lam_min > 0.0 && req.lam_max > req.lam_min);
-    if arms == 0 || malformed {
+    if argmax_malformed(&req) {
         let _ = item
             .reply
             .send(ArgmaxResponse { winner: None, sweeps: 0, pruned: 0, path });
@@ -843,7 +1012,7 @@ mod tests {
     }
 
     #[test]
-    fn co_keyed_requests_coalesce_into_one_block_run() {
+    fn co_keyed_requests_coalesce_into_one_session_run() {
         // one shared operator, eight queries tagged with the same op_key;
         // a generous max_wait makes the drain deterministic
         let policy = BatchPolicy {
@@ -875,18 +1044,18 @@ mod tests {
                 reorth: false,
             }));
         }
-        let mut block_served = 0usize;
+        let mut session_served = 0usize;
         for (rx, want) in rxs.into_iter().zip(wants) {
             let resp = rx.recv().unwrap();
             assert_eq!(resp.decision, want);
-            if let RoutePath::NativeBlock { batch } = resp.path {
+            if let RoutePath::NativeSession { batch } = resp.path {
                 assert!(batch >= 2);
-                block_served += 1;
+                session_served += 1;
             }
         }
         assert!(
-            block_served >= 2,
-            "expected at least one coalesced block run (got {block_served})"
+            session_served >= 2,
+            "expected at least one coalesced session run (got {session_served})"
         );
         assert!(svc.metrics.coalesced_blocks.get() >= 1);
         assert!(
@@ -985,8 +1154,95 @@ mod tests {
             tol_rel: 1e-10,
             prune: true,
             reorth: false,
+            op_key: None,
         };
         (req, best.map(|(i, _)| i))
+    }
+
+    #[test]
+    fn co_keyed_argmax_and_threshold_traffic_share_one_session() {
+        // the ISSUE 4 satellite: the coalesce key excludes the request
+        // kind, so an argmax batch lands in the same native session as
+        // co-keyed threshold requests
+        let policy = BatchPolicy {
+            max_batch: 8,
+            max_wait: std::time::Duration::from_millis(50),
+            ..BatchPolicy::default()
+        };
+        let svc = JudgeService::start(None, policy, 1).unwrap();
+        let mut rng = Rng::new(0x5EB);
+        let n = 16;
+        let (a, l1, ln) = random_spd_exact(&mut rng, n, 0.6, 0.2);
+        let af: Vec<f32> = (0..n * n).map(|k| a.get(k / n, k % n) as f32).collect();
+        let ch = Cholesky::factor(&a).unwrap();
+        let key = Some(0xC0A3);
+        let mut t_rxs = Vec::new();
+        let mut t_wants = Vec::new();
+        for i in 0..4 {
+            let u: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let exact = ch.bif(&u);
+            let t = exact * (0.55 + 0.1 * i as f64);
+            t_wants.push(t < exact);
+            t_rxs.push(svc.submit(ThresholdRequest {
+                a: af.clone(),
+                u: u.iter().map(|&x| x as f32).collect(),
+                n,
+                lam_min: (l1 * 0.99) as f32,
+                lam_max: (ln * 1.01) as f32,
+                t,
+                op_key: key,
+                reorth: false,
+            }));
+        }
+        let arms: Vec<Vec<f64>> = (0..3)
+            .map(|_| (0..n).map(|_| rng.normal()).collect())
+            .collect();
+        let mut best: Option<(usize, f64)> = None;
+        for (i, u) in arms.iter().enumerate() {
+            let v = ch.bif(u);
+            if best.map_or(true, |(_, g)| v > g) {
+                best = Some((i, v));
+            }
+        }
+        let a_rx = svc.submit_argmax(ArgmaxRequest {
+            a: af.clone(),
+            n,
+            lam_min: (l1 * 0.99) as f32,
+            lam_max: (ln * 1.01) as f32,
+            us: arms
+                .iter()
+                .map(|u| u.iter().map(|&x| x as f32).collect())
+                .collect(),
+            offsets: vec![0.0; 3],
+            negate: false,
+            tol_rel: 1e-10,
+            prune: true,
+            reorth: false,
+            op_key: key,
+        });
+        let mut session_served = 0usize;
+        for (rx, want) in t_rxs.into_iter().zip(t_wants) {
+            let resp = rx.recv().unwrap();
+            assert_eq!(resp.decision, want);
+            if matches!(resp.path, RoutePath::NativeSession { .. }) {
+                session_served += 1;
+            }
+        }
+        let aresp = a_rx.recv().unwrap();
+        assert_eq!(aresp.winner, best.map(|(i, _)| i), "session argmax wrong");
+        if let RoutePath::NativeSession { batch } = aresp.path {
+            assert!(batch >= 2, "argmax coalesced with co-keyed thresholds");
+            assert!(
+                session_served >= 1,
+                "at least one threshold shared the argmax's session"
+            );
+        } else {
+            // scheduling can race the queue drain; the argmax must then
+            // have been served alone but still natively
+            assert_eq!(aresp.path, RoutePath::NativeRace { arms: 3 });
+        }
+        assert!(svc.metrics.races.get() >= 1);
+        svc.shutdown();
     }
 
     #[test]

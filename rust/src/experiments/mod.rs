@@ -9,6 +9,7 @@ pub mod fig1;
 pub mod fig2;
 pub mod race;
 pub mod rates;
+pub mod session;
 pub mod table2;
 
 use std::io::Write;

@@ -1,0 +1,239 @@
+//! Mixed-session sweep: the same workload — threshold judgements, ratio
+//! comparisons, estimates, and an argmax race, all against one shared
+//! operator — served two ways: **sequentially** (each query in its own
+//! planner session, the pre-ISSUE-4 shape where every entry point drove
+//! its own loop) and **mixed** (every query compiled onto one
+//! [`Session`] panel). The headline number is **panel sweeps** —
+//! `matvec_multi` traversals of the shared operator, the paper-faithful
+//! cost model — saved by co-scheduling; answers must be identical, which
+//! doubles as an end-to-end check of the planner's answer-identity
+//! guarantee.
+//!
+//! The kernel is *gapped* (a boosted diagonal block) so the argmax
+//! decides early and the mixed panel's refill machinery is exercised.
+
+use crate::config::RunConfig;
+use crate::experiments::race::gapped_kernel;
+use crate::experiments::time_secs;
+use crate::quadrature::block::{run_scalar, StopRule};
+use crate::quadrature::query::{Answer, Query, QueryArm, Session};
+use crate::quadrature::race::RacePolicy;
+use crate::quadrature::GqlOptions;
+use crate::util::rng::Rng;
+
+/// One sweep row: a mixed workload over an `n`-dim gapped kernel, served
+/// sequentially vs through one shared session.
+#[derive(Clone, Debug)]
+pub struct SessionReport {
+    pub n: usize,
+    pub nnz: usize,
+    /// queries in the workload
+    pub queries: usize,
+    /// panel lanes those queries compile to
+    pub lanes: usize,
+    /// panel sweeps spent serving each query in its own session
+    pub sequential_sweeps: usize,
+    /// panel sweeps spent by the one mixed session
+    pub session_sweeps: usize,
+    /// fraction of sweeps saved by co-scheduling
+    pub saved_frac: f64,
+    /// argmax arms evicted by dominance inside the mixed session
+    pub pruned: usize,
+    /// every answer identical between the two paths (must be true)
+    pub identical: bool,
+    pub sequential_s: f64,
+    pub session_s: f64,
+}
+
+/// Panel lanes a query compiles to.
+fn lane_demand(q: &Query) -> usize {
+    match q {
+        Query::Estimate { .. } | Query::Threshold { .. } => 1,
+        Query::Compare { .. } => 2,
+        Query::Argmax { arms, .. } => arms.len(),
+    }
+}
+
+/// Answer equality as the acceptance criterion defines it: decisions and
+/// winners bit-equal, estimates bit-equal on their Gauss values.
+fn same_answer(a: &Answer, b: &Answer) -> bool {
+    match (a, b) {
+        (Answer::Threshold { decision: x, .. }, Answer::Threshold { decision: y, .. }) => x == y,
+        (Answer::Compare { decision: x, .. }, Answer::Compare { decision: y, .. }) => x == y,
+        (Answer::Argmax { winner: x, .. }, Answer::Argmax { winner: y, .. }) => x == y,
+        (Answer::Estimate { bounds: x, .. }, Answer::Estimate { bounds: y, .. }) => {
+            x.gauss.to_bits() == y.gauss.to_bits()
+        }
+        _ => false,
+    }
+}
+
+/// Build the mixed workload: 4 thresholds, 2 comparisons, 2 estimates,
+/// and one `k`-arm argmax, all against the same operator.
+fn build_queries(rng: &mut Rng, l: &crate::sparse::Csr, opts: GqlOptions, k: usize) -> Vec<Query> {
+    let n = l.n;
+    let randvec = |rng: &mut Rng| -> Vec<f64> { (0..n).map(|_| rng.normal()).collect() };
+    // a cheap 2-iteration bracket midpoint puts thresholds in the right
+    // decade without an exact solve
+    let rough = |u: &[f64]| run_scalar(l, u, opts, StopRule::Iters(2), false).bounds.mid();
+    let mut queries = Vec::new();
+    for i in 0..4 {
+        let u = randvec(rng);
+        let t = rough(&u) * (0.6 + 0.2 * i as f64);
+        queries.push(Query::Threshold { u, t });
+    }
+    for _ in 0..2 {
+        let (u, v) = (randvec(rng), randvec(rng));
+        let t = 0.5 * rough(&v) - rough(&u) + if rng.bool(0.5) { 0.2 } else { -0.2 };
+        queries.push(Query::Compare { u, v, t, p: 0.5 });
+    }
+    for _ in 0..2 {
+        queries.push(Query::Estimate { u: randvec(rng), stop: StopRule::GapRel(1e-8) });
+    }
+    let arms = (0..k)
+        .map(|i| QueryArm {
+            u: randvec(rng),
+            stop: StopRule::GapRel(1e-10),
+            // one clearly-boosted arm, so dominance pruning has a gap
+            offset: if i == 0 { 50.0 } else { 1.0 + rng.f64() },
+            scale: -1.0,
+        })
+        .collect();
+    queries.push(Query::Argmax { arms, floor: None });
+    queries
+}
+
+pub fn run_one(rng: &mut Rng, n: usize, density: f64, k: usize) -> SessionReport {
+    let (l, w) = gapped_kernel(rng, n, density, (2 * k).min(n), 50.0);
+    let opts = GqlOptions::new(w.lo, w.hi);
+    let queries = build_queries(rng, &l, opts, k);
+    let lanes: usize = queries.iter().map(lane_demand).sum();
+
+    // sequential: each query runs in its own right-sized session — the
+    // pre-redesign shape, one driver loop per entry point
+    let mut sequential_sweeps = 0usize;
+    let (seq_answers, sequential_s) = time_secs(|| {
+        queries
+            .iter()
+            .map(|q| {
+                let mut s = Session::new(&l, opts, lane_demand(q).max(1), RacePolicy::Prune);
+                let qid = s.submit(q.clone());
+                let mut answers = s.run();
+                sequential_sweeps += s.sweeps();
+                answers.swap_remove(qid)
+            })
+            .collect::<Vec<_>>()
+    });
+
+    // mixed: one session, one dense panel over every lane
+    let mut pruned = 0usize;
+    let mut session_sweeps = 0usize;
+    let (mix_answers, session_s) = time_secs(|| {
+        let mut s = Session::new(&l, opts, lanes.max(1), RacePolicy::Prune);
+        for q in &queries {
+            s.submit(q.clone());
+        }
+        let answers = s.run();
+        let st = s.stats();
+        session_sweeps = st.sweeps;
+        pruned = st.pruned;
+        answers
+    });
+
+    let identical = seq_answers.len() == mix_answers.len()
+        && seq_answers
+            .iter()
+            .zip(&mix_answers)
+            .all(|(a, b)| same_answer(a, b));
+    let saved_frac = if sequential_sweeps > 0 {
+        sequential_sweeps.saturating_sub(session_sweeps) as f64 / sequential_sweeps as f64
+    } else {
+        0.0
+    };
+    SessionReport {
+        n,
+        nnz: l.nnz(),
+        queries: queries.len(),
+        lanes,
+        sequential_sweeps,
+        session_sweeps,
+        saved_frac,
+        pruned,
+        identical,
+        sequential_s,
+        session_s,
+    }
+}
+
+/// Sweep argmax arm counts `ks` on a gapped kernel; problem size shrinks
+/// with `dataset_scale` for session-budget (and CI smoke) runs.
+pub fn run(cfg: &RunConfig, ks: &[usize]) -> Vec<SessionReport> {
+    let mut rng = Rng::new(cfg.seed ^ 0x5E55);
+    let n = (2000 / cfg.dataset_scale.max(1)).max(48);
+    let density = 5e-3_f64.max(8.0 / (n as f64 * n as f64));
+    ks.iter()
+        .map(|&k| run_one(&mut rng, n, density, k.clamp(2, n / 2)))
+        .collect()
+}
+
+pub const CSV_HEADER: [&str; 10] = [
+    "n",
+    "nnz",
+    "queries",
+    "lanes",
+    "sequential_sweeps",
+    "session_sweeps",
+    "saved_frac",
+    "pruned",
+    "identical",
+    "speedup",
+];
+
+pub fn csv_rows(reports: &[SessionReport]) -> Vec<Vec<String>> {
+    reports
+        .iter()
+        .map(|r| {
+            vec![
+                r.n.to_string(),
+                r.nnz.to_string(),
+                r.queries.to_string(),
+                r.lanes.to_string(),
+                r.sequential_sweeps.to_string(),
+                r.session_sweeps.to_string(),
+                format!("{:.3}", r.saved_frac),
+                r.pruned.to_string(),
+                r.identical.to_string(),
+                format!("{:.2}", r.sequential_s / r.session_s.max(1e-12)),
+            ]
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mixed_session_is_identical_and_saves_sweeps() {
+        let mut rng = Rng::new(0x5E551);
+        let rep = run_one(&mut rng, 96, 0.03, 6);
+        assert!(rep.identical, "mixed answers diverged from sequential");
+        assert!(
+            rep.session_sweeps < rep.sequential_sweeps,
+            "co-scheduling must save sweeps (session {} vs sequential {})",
+            rep.session_sweeps,
+            rep.sequential_sweeps
+        );
+        assert!(rep.saved_frac > 0.0);
+        assert_eq!(rep.queries, 9);
+        assert_eq!(rep.lanes, 4 + 4 + 2 + 6);
+    }
+
+    #[test]
+    fn scaled_run_produces_a_row_per_k() {
+        let cfg = RunConfig { dataset_scale: 40, ..Default::default() };
+        let rows = run(&cfg, &[2, 4]);
+        assert_eq!(rows.len(), 2);
+        assert!(rows.iter().all(|r| r.identical));
+    }
+}

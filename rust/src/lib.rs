@@ -10,8 +10,10 @@
 //! Layout (three-layer architecture):
 //! * [`sparse`], [`linalg`], [`datasets`] — substrates (CSR, dense Cholesky,
 //!   synthetic dataset builders).
-//! * [`quadrature`] — the paper's core: GQL (Alg. 5), retrospective judges
-//!   (Alg. 4/7/9), CG, preconditioning.
+//! * [`quadrature`] — the paper's core: GQL (Alg. 5), the unified query
+//!   planner (`Session`: mixed estimate/threshold/compare/argmax queries
+//!   compiled onto shared panels), retrospective judges (Alg. 4/7/9), CG,
+//!   preconditioning.
 //! * [`apps`] — DPP, k-DPP, double greedy, centrality: exact baselines and
 //!   quadrature-accelerated variants.
 //! * [`runtime`] — PJRT loader/executor for the AOT JAX+Pallas artifacts.

@@ -8,6 +8,7 @@
 //!   gauss-bif rates  [--seed S] [--out DIR] [--sizes n1,n2,...]
 //!   gauss-bif block  [--seed S] [--out DIR] [--scale K] [--ks k1,k2,...] [--block-width B]
 //!   gauss-bif race   [--seed S] [--out DIR] [--scale K] [--ks k1,k2,...] [--block-width B]
+//!   gauss-bif session [--seed S] [--out DIR] [--scale K] [--ks k1,k2,...]
 //!   gauss-bif serve  [--artifacts DIR] [--requests N] [--workers W] [--block-width B]
 //!   gauss-bif info   [--artifacts DIR]
 //!
@@ -89,6 +90,7 @@ fn main() -> ExitCode {
         "rates" => cmd_rates(&cfg, &flags),
         "block" => cmd_block(&cfg, &flags),
         "race" => cmd_race(&cfg, &flags),
+        "session" => cmd_session(&cfg, &flags),
         "serve" => cmd_serve(&cfg, &flags),
         "info" => cmd_info(&cfg),
         _ => {
@@ -98,7 +100,7 @@ fn main() -> ExitCode {
     }
 }
 
-const USAGE: &str = "usage: gauss-bif <fig1|fig2|table2|rates|block|race|serve|info> [flags]\n\
+const USAGE: &str = "usage: gauss-bif <fig1|fig2|table2|rates|block|race|session|serve|info> [flags]\n\
   common flags: --seed S --out DIR --scale K --config cfg.json --artifacts DIR --block-width B\n\
                 --reorth full|none (§5.4 Lanczos reorthogonalization for block/serve runs)\n\
                 --race prune|exhaustive (candidate racing for greedy scoring; selections identical)";
@@ -348,6 +350,58 @@ fn cmd_race(cfg: &RunConfig, flags: &HashMap<String, String>) -> ExitCode {
     ExitCode::SUCCESS
 }
 
+fn cmd_session(cfg: &RunConfig, flags: &HashMap<String, String>) -> ExitCode {
+    use gauss_bif::experiments::session;
+
+    let ks: Vec<usize> = flags
+        .get("ks")
+        .map(|s| parse_list(s))
+        .unwrap_or_else(|| vec![4, 8, 16]);
+    let reports = session::run(cfg, &ks);
+    let mut table = gauss_bif::util::bench::Table::new(&[
+        "n", "nnz", "queries", "lanes", "sequential sweeps", "session sweeps", "saved",
+        "pruned arms",
+    ]);
+    let mut identical = true;
+    let mut saved_any = false;
+    for r in &reports {
+        identical &= r.identical;
+        saved_any |= r.session_sweeps < r.sequential_sweeps;
+        table.row(vec![
+            r.n.to_string(),
+            r.nnz.to_string(),
+            r.queries.to_string(),
+            r.lanes.to_string(),
+            r.sequential_sweeps.to_string(),
+            r.session_sweeps.to_string(),
+            format!("{:.0}%", 100.0 * r.saved_frac),
+            r.pruned.to_string(),
+        ]);
+    }
+    println!("{}", table.render());
+    if !identical {
+        eprintln!("mixed-session answers diverged from the sequential paths");
+        return ExitCode::FAILURE;
+    }
+    if !saved_any {
+        eprintln!("co-scheduling saved no panel sweeps — the shared panel is inert");
+        return ExitCode::FAILURE;
+    }
+    match experiments::write_csv(
+        &cfg.out_dir,
+        "session.csv",
+        &session::CSV_HEADER,
+        &session::csv_rows(&reports),
+    ) {
+        Ok(p) => println!("wrote {}", p.display()),
+        Err(e) => {
+            eprintln!("write failed: {e}");
+            return ExitCode::FAILURE;
+        }
+    }
+    ExitCode::SUCCESS
+}
+
 fn cmd_serve(cfg: &RunConfig, flags: &HashMap<String, String>) -> ExitCode {
     use gauss_bif::coordinator::{BatchPolicy, JudgeService};
     use gauss_bif::datasets::random_spd_exact;
@@ -421,7 +475,7 @@ fn cmd_serve(cfg: &RunConfig, flags: &HashMap<String, String>) -> ExitCode {
     // argmax demo: one raced batch per shared operator ("which of these
     // queries has the largest BIF?"), served by the native scheduler
     let mut races_ok = true;
-    for (n, af, l1, ln, ch) in &ops {
+    for (op_idx, (n, af, l1, ln, ch)) in ops.iter().enumerate() {
         let n = *n;
         let arms: Vec<Vec<f64>> = (0..6)
             .map(|_| (0..n).map(|_| rng.normal()).collect())
@@ -447,6 +501,9 @@ fn cmd_serve(cfg: &RunConfig, flags: &HashMap<String, String>) -> ExitCode {
             tol_rel: 1e-10,
             prune: cfg.race,
             reorth: cfg.reorth,
+            // co-key with the threshold stream on the same operator so
+            // the coordinator may fold the race into a shared session
+            op_key: Some(op_idx as u64),
         });
         races_ok &= resp.winner == best.map(|(i, _)| i);
     }

@@ -116,16 +116,17 @@ pub struct ServiceMetrics {
     pub requests: Counter,
     pub batches: Counter,
     pub native_fallbacks: Counter,
-    /// coalesced shared-operator block runs on the native path
+    /// coalesced shared-operator session runs on the native path (mixed
+    /// threshold/argmax groups compiled onto one panel)
     pub coalesced_blocks: Counter,
-    /// argmax races served (native racing scheduler)
+    /// argmax batches served natively (lone races and session members)
     pub races: Counter,
     pub latency_ns: std::sync::Mutex<Histogram>,
     pub batch_size: std::sync::Mutex<Histogram>,
     pub judge_iters: std::sync::Mutex<Histogram>,
     /// recent per-request service latency of dispatched PJRT batches
     pub pjrt_batch_ns: Ewma,
-    /// recent per-request service latency of coalesced native block runs
+    /// recent per-request service latency of coalesced native session runs
     pub native_block_ns: Ewma,
     /// router decisions taken once both path EWMAs are seeded (drives the
     /// periodic re-exploration ticket)

@@ -46,7 +46,8 @@
 //! results are therefore bit-identical to scalar results — still asserted
 //! by the `block_width = 1` property tests in `rust/tests/prop_block.rs`.
 //!
-//! Reorthogonalization (§5.4): lanes accept [`Reorth::Full`] — each lane
+//! Reorthogonalization (§5.4): lanes accept
+//! [`Reorth::Full`](crate::quadrature::Reorth) — each lane
 //! stores its own deinterleaved basis and applies the scalar engine's
 //! two-pass Gram–Schmidt column-wise inside the interleaved panel, so the
 //! bit-identity contract extends to the ill-conditioned regime (O(n·i)

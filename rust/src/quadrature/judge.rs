@@ -4,10 +4,23 @@
 //! Each judge returns both the decision and [`JudgeStats`] (iterations
 //! actually spent) — the iteration histograms in EXPERIMENTS.md come from
 //! these.
+//!
+//! **Deprecation note (ISSUE 4).** The one-shot entry points here are
+//! kept as thin compatibility wrappers over the unified query planner
+//! ([`crate::quadrature::query::Session`]): [`judge_threshold`] submits a
+//! single [`Query::Threshold`](crate::quadrature::query::Query) and
+//! [`judge_ratio_block`] a single
+//! [`Query::Compare`](crate::quadrature::query::Query). Prefer the
+//! session for new code — it accepts an arbitrary *mix* of co-keyed
+//! queries against one operator and shares panel sweeps across them,
+//! which a one-query wrapper cannot. The explicit-[`BoundSource`] and
+//! explicit-[`RefinePolicy`] variants remain hand-rolled scalar loops:
+//! they exist to ablate scheduling/bound choices the planner fixes.
 
 use super::gql::{Bounds, Gql, GqlOptions};
 use super::is_zero;
-use super::recurrence::LaneCore;
+use super::query::{Answer, Query, Session};
+use super::race::RacePolicy;
 use crate::sparse::SymOp;
 
 /// How a judgement terminated.
@@ -43,15 +56,32 @@ pub enum BoundSource {
 
 /// Paper Alg. 4 (DPPJudge): is `t < u^T A^{-1} u`?
 ///
-/// Iterates Gauss-Radau (both flavors come for free from one [`Gql`] step)
-/// until `t < g^rr` (true) or `t ≥ g^lr` (false).
+/// Iterates Gauss-Radau until `t < g^rr` (true) or `t ≥ g^lr` (false).
+///
+/// Since ISSUE 4 this is a thin wrapper over the unified planner — a
+/// width-1 [`Session`] carrying one threshold query, whose lane is
+/// bit-identical to the scalar loop (decision, iteration count, and
+/// outcome all match [`judge_threshold_src`] with
+/// [`BoundSource::Radau`], property-tested). Callers with several
+/// queries against one operator should submit them to a single session
+/// instead, where they share panel sweeps.
 pub fn judge_threshold(
     op: &dyn SymOp,
     u: &[f64],
     t: f64,
     opts: GqlOptions,
 ) -> (bool, JudgeStats) {
-    judge_threshold_src(op, u, t, opts, BoundSource::Radau)
+    if is_zero(u) {
+        // u = 0 ⇒ BIF = 0 exactly (disconnected candidate: common on the
+        // paper's very sparse matrices)
+        return (t < 0.0, JudgeStats { iters: 0, outcome: JudgeOutcome::Exact });
+    }
+    let mut session = Session::new(op, opts, 1, RacePolicy::Prune);
+    let qid = session.submit(Query::Threshold { u: u.to_vec(), t });
+    match session.run().swap_remove(qid) {
+        Answer::Threshold { decision, stats } => (decision, stats),
+        _ => unreachable!("threshold queries answer with threshold answers"),
+    }
 }
 
 /// [`judge_threshold`] with an explicit [`BoundSource`] (ablation entry).
@@ -162,18 +192,20 @@ pub fn judge_ratio_policy(
     }
 }
 
-/// [`judge_ratio`] routed through **paired block lanes** (the ROADMAP's
-/// k-DPP follow-up): both quadratures advance in lockstep, one width-2
-/// [`SymOp::matvec_multi`] panel sweep feeding both lanes — a single
-/// traversal of the shared operator per iteration instead of two. Once
-/// one side finishes (exhaustion or budget) the survivor continues on
-/// scalar sweeps, so no dead-lane panel work is paid.
+/// [`judge_ratio`] routed through **paired panel lanes**: both
+/// quadratures advance from one width-2 `matvec_multi` panel sweep — a
+/// single traversal of the shared operator per iteration instead of two —
+/// with the survivor continuing alone once one side finishes.
 ///
-/// Decisions are certified by the same Radau brackets as the scalar
-/// judge, so wherever both variants decide before their budgets they
-/// agree; only the refinement *schedule* differs (lockstep instead of the
-/// §5.1 looser-side heuristic). MH k-DPP chains
-/// ([`crate::apps::KdppSampler`]) use this entry.
+/// Since ISSUE 4 this is a thin wrapper over the unified planner: one
+/// [`Query::Compare`](crate::quadrature::query::Query) on a width-2
+/// [`Session`], which replaced the hand-rolled interleaved panel this
+/// function used to carry. Decisions are certified by the same Radau
+/// brackets (and the same `ratio_verdict` ladder) as the scalar judge,
+/// so wherever both variants decide before their budgets they agree; only
+/// the refinement *schedule* differs (lockstep instead of the §5.1
+/// looser-side heuristic). MH k-DPP chains route the swap test through
+/// the session directly.
 pub fn judge_ratio_block(
     op: &dyn SymOp,
     u: &[f64],
@@ -182,61 +214,11 @@ pub fn judge_ratio_block(
     p: f64,
     opts: GqlOptions,
 ) -> (bool, JudgeStats) {
-    if is_zero(u) || is_zero(v) {
-        // one-sided: there is no panel to share, and the scalar judge
-        // already special-cases exact-zero BIFs
-        return judge_ratio(op, u, v, t, p, opts);
-    }
-    let n = op.dim();
-    let max_iters = opts.max_iters.min(n).max(1);
-
-    // interleaved width-2 panel: lane 0 = u, lane 1 = v
-    let un2: f64 = u.iter().map(|x| x * x).sum();
-    let vn2: f64 = v.iter().map(|x| x * x).sum();
-    let (iu, iv) = (1.0 / un2.sqrt(), 1.0 / vn2.sqrt());
-    let mut v_prev = vec![0.0; 2 * n];
-    let mut v_curr = vec![0.0; 2 * n];
-    let mut w = vec![0.0; 2 * n];
-    for i in 0..n {
-        v_curr[2 * i] = u[i] * iu;
-        v_curr[2 * i + 1] = v[i] * iv;
-    }
-    let mut cu = LaneCore::new(&opts, un2);
-    let mut cv = LaneCore::new(&opts, vn2);
-    let mut bu;
-    let mut bv;
-
-    // --- lockstep phase: both lanes fed by one panel sweep ---
-    loop {
-        op.matvec_multi(&v_curr, &mut w, 2);
-        bu = cu.step_column(&mut v_prev, &mut v_curr, &mut w, n, 2, 0);
-        bv = cv.step_column(&mut v_prev, &mut v_curr, &mut w, n, 2, 1);
-        if let Some(r) = ratio_verdict(&bu, &bv, t, p, max_iters) {
-            return r;
-        }
-        if bu.exact || bu.iter >= max_iters || bv.exact || bv.iter >= max_iters {
-            break;
-        }
-    }
-
-    // --- scalar continuation on the surviving lane ---
-    // (ratio_verdict returned None, so exactly one side is done)
-    let u_done = bu.exact || bu.iter >= max_iters;
-    let (core, lane) = if u_done { (&mut cv, 1usize) } else { (&mut cu, 0usize) };
-    let mut vp: Vec<f64> = (0..n).map(|i| v_prev[2 * i + lane]).collect();
-    let mut vc: Vec<f64> = (0..n).map(|i| v_curr[2 * i + lane]).collect();
-    let mut ws = vec![0.0; n];
-    loop {
-        op.matvec(&vc, &mut ws);
-        let b = core.step_column(&mut vp, &mut vc, &mut ws, n, 1, 0);
-        if lane == 0 {
-            bu = b;
-        } else {
-            bv = b;
-        }
-        if let Some(r) = ratio_verdict(&bu, &bv, t, p, max_iters) {
-            return r;
-        }
+    let mut session = Session::new(op, opts, 2, RacePolicy::Prune);
+    let qid = session.submit(Query::Compare { u: u.to_vec(), v: v.to_vec(), t, p });
+    match session.run().swap_remove(qid) {
+        Answer::Compare { decision, stats } => (decision, stats),
+        _ => unreachable!("compare queries answer with compare answers"),
     }
 }
 
@@ -244,12 +226,13 @@ pub fn judge_ratio_block(
 /// `Some` once decidable *or* once neither side can refine further (so
 /// the drivers always terminate), `None` while at least one side can
 /// still tighten an undecided bracket. Shared by [`judge_ratio_policy`]
-/// and [`judge_ratio_block`] — one ladder, no drift. A side counts as
-/// stuck when it is exact (exhausted: stepping it again cannot move the
-/// bracket) *or* out of budget; requiring both iteration counts to reach
-/// `max_iters` used to livelock the scalar judge when one side exhausted
-/// early while the other sat at its budget (ISSUE 2 edge case).
-fn ratio_verdict(
+/// and the planner's compare queries
+/// ([`crate::quadrature::query::Session`]) — one ladder, no drift. A side
+/// counts as stuck when it is exact (exhausted: stepping it again cannot
+/// move the bracket) *or* out of budget; requiring both iteration counts
+/// to reach `max_iters` used to livelock the scalar judge when one side
+/// exhausted early while the other sat at its budget (ISSUE 2 edge case).
+pub(crate) fn ratio_verdict(
     bu: &Bounds,
     bv: &Bounds,
     t: f64,
@@ -408,7 +391,7 @@ mod tests {
     }
 
     #[test]
-    fn paired_judge_zero_sides_delegate_to_scalar() {
+    fn paired_judge_zero_sides_still_decide_exactly() {
         let mut rng = Rng::new(0x709);
         let (a, u, opts, exact) = setup(&mut rng, 16);
         let z = vec![0.0; 16];

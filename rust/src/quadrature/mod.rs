@@ -2,8 +2,10 @@
 //! forms, the shared recurrence module both engines drive
 //! ([`recurrence`] — the single owner of the Sherman–Morrison update,
 //! Radau/Lobatto corrections, and breakdown detection), the block engine
-//! that batches many such runs over one shared operator, the racing
-//! scheduler ([`race`]) that prunes candidates by interval dominance, the
+//! that batches many such runs over one shared operator, the unified
+//! query planner ([`query`] — a [`Session`] compiles an arbitrary mix of
+//! estimate/threshold/compare/argmax queries onto shared panels), the
+//! racing scheduler ([`race`], now a thin wrapper over the planner), the
 //! retrospective judges built on them, conjugate gradients (both a
 //! baseline and the theory cross-check of Thm. 12), and Jacobi
 //! preconditioning (§5.4).
@@ -13,6 +15,7 @@ pub mod cg;
 pub mod gql;
 pub mod judge;
 pub mod precond;
+pub mod query;
 pub mod race;
 pub mod recurrence;
 
@@ -26,6 +29,7 @@ pub use judge::{
     judge_threshold_src, BoundSource, JudgeOutcome, JudgeStats, RefinePolicy,
 };
 pub use precond::JacobiPrecond;
+pub use query::{Answer, Query, QueryArm, Session, SessionStats};
 pub use race::{race_dg, Race, RaceOutcome, RacePolicy, RaceStats};
 pub use recurrence::{LaneCore, Recurrence};
 

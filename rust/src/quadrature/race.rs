@@ -1,41 +1,47 @@
-//! Bound-driven racing scheduler: prune candidates by interval dominance.
+//! Bound-driven racing: argmax and comparison decisions from iteratively
+//! tightening brackets.
 //!
 //! The paper's bounds *tighten iteratively* (Thm. 3.3–3.4): after every
 //! quadrature step each candidate's value is bracketed, and the brackets
 //! only shrink. That means a surrounding decision — "which candidate is
 //! the argmax?", "does the double-greedy inequality hold?" — is often
 //! determined long before every bracket reaches its stop tolerance. This
-//! module spends panel sweeps only where the decision still needs them
-//! (the same lazy-evaluation pattern as the adaptive truncation in Pleiss
+//! module spends quadrature only where the decision still needs it (the
+//! same lazy-evaluation pattern as the adaptive truncation in Pleiss
 //! et al., arXiv:2006.11267):
 //!
-//! * **Argmax mode** ([`Race`]): candidates ("arms") race through one
-//!   shared [`BlockGql`] panel; after every sweep, every arm whose upper
-//!   bound has fallen below the best lower bound is evicted
-//!   ([`BlockGql::retire`], reason [`RetireReason::Dominated`]) and its
-//!   panel column refills from the queue. The race ends the moment a
-//!   single possible winner remains.
+//! * **Argmax mode** ([`Race`]): since ISSUE 4 a thin wrapper over the
+//!   unified planner — one [`Session`] carrying a single
+//!   [`Query::Argmax`]. Dominated arms are evicted after every panel
+//!   sweep and the race ends the moment a single possible winner remains;
+//!   the scheduling machinery (shared panels, retire/refill, adaptive
+//!   dominance margin) lives in [`crate::quadrature::query`].
 //! * **Comparison mode** ([`race_dg`]): the paired Δ⁺/Δ⁻ lanes of the
-//!   double-greedy inclusion test stop the moment their log-gap brackets
-//!   separate (the retrospective Alg. 9 behavior), or — under
-//!   [`RacePolicy::Exhaustive`] — refine both sides to
-//!   exhaustion/budget first and decide identically from the final
-//!   brackets.
+//!   double-greedy inclusion test — two *different* operators, so the
+//!   sides cannot share one panel; each runs as a width-1 session
+//!   (bit-identical to a scalar [`Gql`](super::Gql) run by the engine's
+//!   exactness contract) and the race stops the moment the log-gap
+//!   brackets separate, or — under [`RacePolicy::Exhaustive`] — refines
+//!   both sides to exhaustion/budget first and decides identically from
+//!   the final brackets.
 //!
 //! **Selection identity.** Pruning only ever discards *dominated* arms:
-//! an arm is evicted when its current upper bound sits strictly (by
+//! an arm is evicted when its current upper bound sits strictly (by the
+//! session's [`prune margin`](Session::prune_margin), floored at
 //! [`PRUNE_MARGIN`]) below another arm's current lower bound. Because
 //! brackets are nested over iterations, the evicted arm's final estimate
 //! would have stayed strictly below that rival's final estimate, so the
 //! argmax over the survivors equals the argmax over all arms —
 //! [`RacePolicy::Prune`] and [`RacePolicy::Exhaustive`] select
-//! *identically* (property-tested in `rust/tests/prop_race.rs`); only the
-//! number of panel sweeps differs.
+//! *identically* (property-tested in `rust/tests/prop_race.rs` and
+//! `rust/tests/prop_session.rs`); only the number of panel sweeps
+//! differs.
 
-use super::block::{BlockGql, RetireReason, StopRule};
-use super::gql::{Bounds, Gql, GqlOptions};
+use super::block::StopRule;
+use super::gql::GqlOptions;
 use super::is_zero;
 use super::judge::{JudgeOutcome, JudgeStats};
+use super::query::{Answer, Query, QueryArm, Session};
 use crate::sparse::SymOp;
 
 /// Whether a race may evict dominated arms.
@@ -51,55 +57,15 @@ pub enum RacePolicy {
     Prune,
 }
 
-/// Safety margin for dominance tests, relative to the magnitudes
+/// Fixed floor of the dominance safety margin, relative to the magnitudes
 /// involved: floating-point bound sequences obey the paper's monotonicity
 /// only to rounding error, so an arm is only evicted when its upper bound
-/// is *clearly* below the best lower bound. Costs a negligible amount of
-/// pruning, buys exact selection identity in practice.
+/// is *clearly* below the best lower bound. The planner scales this floor
+/// up with the worst bracket wiggle it actually observes
+/// ([`Session::prune_margin`]) — the ROADMAP "adaptive PRUNE_MARGIN"
+/// item — so noisy runs get proportionally more protection while
+/// well-behaved runs keep this tight default.
 pub const PRUNE_MARGIN: f64 = 1e-9;
-
-#[inline]
-fn dominated(hi: f64, best_lo: f64) -> bool {
-    hi < best_lo - PRUNE_MARGIN * (1.0 + hi.abs() + best_lo.abs())
-}
-
-/// Value bracket of an arm given its BIF bounds: `value = offset +
-/// scale · bif`, so the bracket endpoints swap when `scale < 0`.
-fn value_bracket(offset: f64, scale: f64, b: &Bounds) -> (f64, f64) {
-    let (blo, bhi) = if b.exact { (b.gauss, b.gauss) } else { (b.lower(), b.upper()) };
-    let (v1, v2) = (offset + scale * blo, offset + scale * bhi);
-    if v1 <= v2 {
-        (v1, v2)
-    } else {
-        (v2, v1)
-    }
-}
-
-/// Point estimate of an arm's value from finished bounds: the exact Gauss
-/// value after Krylov exhaustion, the bracket midpoint otherwise — the
-/// same estimator the pre-racing greedy used, so exhaustive races score
-/// candidates bit-identically to the old scoring loop.
-fn value_estimate(offset: f64, scale: f64, b: &Bounds) -> f64 {
-    let bif = if b.exact { b.gauss } else { b.mid() };
-    offset + scale * bif
-}
-
-#[derive(Clone, Copy, Debug)]
-enum ArmStatus {
-    /// In the panel or waiting in the engine queue.
-    Racing,
-    /// Reached its stop rule; final value bracket, estimate, and
-    /// iteration count recorded.
-    Done { est: f64, lo: f64, hi: f64, iters: usize },
-    /// Evicted by interval dominance — provably not the argmax.
-    Pruned,
-}
-
-struct Arm {
-    offset: f64,
-    scale: f64,
-    status: ArmStatus,
-}
 
 /// Accounting for one race.
 #[derive(Clone, Debug, Default)]
@@ -144,27 +110,30 @@ pub struct RaceOutcome {
 /// the largest value. DPP greedy uses `offset = L_cc, scale = −1` (the
 /// marginal-gain bracket); plain "largest BIF" callers use
 /// `offset = 0, scale = 1`.
+///
+/// This type is a compatibility wrapper: it compiles its arms into a
+/// single [`Query::Argmax`] on a [`Session`]. New code that mixes argmax
+/// traffic with thresholds or comparisons on the same operator should use
+/// the session directly — co-keyed queries then share panel sweeps.
 pub struct Race<'a> {
-    eng: BlockGql<'a>,
-    arms: Vec<Arm>,
-    policy: RacePolicy,
+    session: Session<'a>,
+    arms: Vec<QueryArm>,
 }
 
 impl<'a> Race<'a> {
     /// A race over `op` scored through a width-`width` panel. `opts` and
-    /// `width` behave exactly as in [`BlockGql::new`].
+    /// `width` behave exactly as in
+    /// [`BlockGql::new`](super::block::BlockGql::new).
     pub fn new(op: &'a dyn SymOp, opts: GqlOptions, width: usize, policy: RacePolicy) -> Self {
-        Race { eng: BlockGql::new(op, opts, width), arms: Vec::new(), policy }
+        Race { session: Session::new(op, opts, width, policy), arms: Vec::new() }
     }
 
     /// Enter an arm; returns its index (push order). `stop` is the arm's
     /// own refinement limit — the bracket tolerance it runs to when the
     /// race does not prune it first.
     pub fn push_arm(&mut self, u: &[f64], stop: StopRule, offset: f64, scale: f64) -> usize {
-        let id = self.eng.push(u, stop);
-        debug_assert_eq!(id, self.arms.len(), "arm ids mirror push order");
-        self.arms.push(Arm { offset, scale, status: ArmStatus::Racing });
-        id
+        self.arms.push(QueryArm { u: u.to_vec(), stop, offset, scale });
+        self.arms.len() - 1
     }
 
     /// Number of arms entered so far.
@@ -180,158 +149,15 @@ impl<'a> Race<'a> {
     /// winning arm's value strictly exceeds the floor — the same strict
     /// comparison the exhaustive scoring loop applies.
     pub fn run(mut self, floor: Option<f64>) -> RaceOutcome {
-        let mut stats = RaceStats { arms: self.arms.len(), ..RaceStats::default() };
-        let mut estimates: Vec<Option<f64>> = vec![None; self.arms.len()];
-        loop {
-            let progressed = self.eng.step_panel();
-            for r in self.eng.take_done() {
-                let arm = &mut self.arms[r.id];
-                // an arm pruned in the same round it finished stays pruned
-                if matches!(arm.status, ArmStatus::Racing) {
-                    let (lo, hi) = value_bracket(arm.offset, arm.scale, &r.bounds);
-                    let est = value_estimate(arm.offset, arm.scale, &r.bounds);
-                    arm.status = ArmStatus::Done { est, lo, hi, iters: r.iters };
-                    estimates[r.id] = Some(est);
-                }
+        let arms = std::mem::take(&mut self.arms);
+        let qid = self.session.submit(Query::Argmax { arms, floor });
+        let mut answers = self.session.run();
+        match answers.swap_remove(qid) {
+            Answer::Argmax { winner, estimates, stats } => {
+                RaceOutcome { winner, estimates, stats }
             }
-            if self.policy == RacePolicy::Prune {
-                if let Some(early) =
-                    self.prune_round(floor, &mut stats, &mut estimates)
-                {
-                    stats.sweeps = self.eng.sweeps();
-                    return RaceOutcome { winner: early, estimates, stats };
-                }
-            }
-            if !progressed {
-                break;
-            }
+            _ => unreachable!("argmax queries answer with argmax answers"),
         }
-        stats.sweeps = self.eng.sweeps();
-        // Exhaustive scoring (or a prune race whose survivors all reached
-        // their stop rules): argmax over surviving estimates in arm order
-        // with a strict-greater tie-break — exactly the pre-racing loop.
-        let mut best: Option<(usize, f64)> = None;
-        for (i, arm) in self.arms.iter().enumerate() {
-            if let ArmStatus::Done { est, .. } = arm.status {
-                if best.map_or(true, |(_, g)| est > g) {
-                    best = Some((i, est));
-                }
-            }
-        }
-        let winner = match (best, floor) {
-            (Some((i, est)), Some(f)) if est > f => Some(i),
-            (Some(_), Some(_)) => None,
-            (Some((i, _)), None) => Some(i),
-            (None, _) => None,
-        };
-        RaceOutcome { winner, estimates, stats }
-    }
-
-    /// One dominance round. Returns `Some(winner)` once the decision is
-    /// determined early: `Some(Some(arm))` when a lone possible winner
-    /// remains (every rival *and* the floor dominated), `Some(None)` when
-    /// the floor dominated every arm. `None` means the race goes on.
-    fn prune_round(
-        &mut self,
-        floor: Option<f64>,
-        stats: &mut RaceStats,
-        estimates: &mut [Option<f64>],
-    ) -> Option<Option<usize>> {
-        // current value brackets of the arms still in the panel
-        let active: Vec<(usize, Option<Bounds>)> = self.eng.active().collect();
-        let mut brackets: Vec<Option<(f64, f64, usize)>> = vec![None; self.arms.len()];
-        for (i, arm) in self.arms.iter().enumerate() {
-            match arm.status {
-                ArmStatus::Done { lo, hi, iters, .. } => brackets[i] = Some((lo, hi, iters)),
-                ArmStatus::Racing => {
-                    if let Some((_, Some(b))) = active.iter().find(|(id, _)| *id == i) {
-                        let (lo, hi) = value_bracket(arm.offset, arm.scale, b);
-                        brackets[i] = Some((lo, hi, b.iter));
-                    }
-                    // arms still waiting in the queue have no bracket yet
-                    // and can be neither pruned nor used for pruning
-                }
-                ArmStatus::Pruned => {}
-            }
-        }
-        let mut best_lo = f64::NEG_INFINITY;
-        for (i, arm) in self.arms.iter().enumerate() {
-            if matches!(arm.status, ArmStatus::Pruned) {
-                continue;
-            }
-            if let Some((lo, _, _)) = brackets[i] {
-                best_lo = best_lo.max(lo);
-            }
-        }
-        let thresh = match floor {
-            Some(f) => best_lo.max(f),
-            None => best_lo,
-        };
-        if thresh.is_finite() {
-            for i in 0..self.arms.len() {
-                if matches!(self.arms[i].status, ArmStatus::Pruned) {
-                    continue;
-                }
-                if let Some((_, hi, iter)) = brackets[i] {
-                    if dominated(hi, thresh) {
-                        if matches!(self.arms[i].status, ArmStatus::Racing) {
-                            self.eng.retire(i, RetireReason::Dominated);
-                        }
-                        // (finished arms have nothing to evict, but marking
-                        // them keeps the survivor count honest for the
-                        // early exit below)
-                        self.arms[i].status = ArmStatus::Pruned;
-                        estimates[i] = None;
-                        stats.pruned_at.push((i, iter));
-                    }
-                }
-            }
-        }
-        // early exit: how many arms can still win?
-        let survivors: Vec<usize> = self
-            .arms
-            .iter()
-            .enumerate()
-            .filter(|(_, a)| !matches!(a.status, ArmStatus::Pruned))
-            .map(|(i, _)| i)
-            .collect();
-        if survivors.is_empty() {
-            // the floor dominated everything: no candidate is feasible
-            return Some(None);
-        }
-        if survivors.len() == 1 {
-            let w = survivors[0];
-            // the floor must be dominated too before the winner can be
-            // crowned without its final estimate
-            let floor_beaten = match floor {
-                None => true,
-                Some(f) => brackets[w].map_or(false, |(lo, _, _)| dominated(f, lo)),
-            };
-            let still_racing = matches!(self.arms[w].status, ArmStatus::Racing);
-            if floor_beaten && still_racing {
-                // stop refining: the surrounding decision is determined
-                // before the winner reached its own stop rule — the only
-                // genuinely early ending (a finished winner below ended
-                // on schedule, it just needs no further sweeps)
-                stats.decided_early = true;
-                if estimates[w].is_none() {
-                    if let Some((lo, hi, _)) = brackets[w] {
-                        estimates[w] = Some(0.5 * (lo + hi));
-                    }
-                }
-                self.eng.retire(w, RetireReason::Decided);
-                return Some(Some(w));
-            }
-            if floor_beaten && !still_racing {
-                // finished winner: identical to the exhaustive exit, but
-                // no need to wait for the loop to notice the empty engine
-                return Some(Some(w));
-            }
-            // lone survivor but the floor still straddles its bracket:
-            // keep refining until its own stop rule resolves the floor
-            // comparison exactly like the exhaustive path
-        }
-        None
     }
 }
 
@@ -354,10 +180,48 @@ fn pos(x: f64) -> f64 {
     x.max(0.0)
 }
 
+/// One side of the double-greedy race: a width-1 session holding a single
+/// estimate query, stepped one quadrature iteration at a time. The lane
+/// is bit-identical to a scalar [`Gql`](super::Gql) run by the engine's
+/// exactness contract, so routing the race through the planner changes no
+/// numerics.
+struct DgSide<'a> {
+    session: Session<'a>,
+    qid: usize,
+    /// Iteration budget, clamped like the engines clamp it.
+    max_iters: usize,
+}
+
+impl<'a> DgSide<'a> {
+    fn new(pair: Option<(&'a dyn SymOp, &'a [f64])>, opts: GqlOptions) -> Option<Self> {
+        let (op, u) = pair?;
+        if is_zero(u) {
+            // zero query ⇒ BIF = 0 exactly; treated as an absent side
+            return None;
+        }
+        let max_iters = opts.max_iters.min(op.dim()).max(1);
+        let mut session = Session::new(op, opts, 1, RacePolicy::Prune);
+        let qid = session.submit(Query::Estimate { u: u.to_vec(), stop: StopRule::Exhaust });
+        Some(DgSide { session, qid, max_iters })
+    }
+
+    /// Advance one quadrature iteration and return the updated bounds
+    /// (post-exhaustion steps are no-ops that keep the final bounds).
+    fn step(&mut self) -> super::gql::Bounds {
+        self.session.step();
+        self.session.bounds(self.qid).expect("stepped lane has bounds")
+    }
+}
+
 /// Double-greedy inclusion test as a two-arm comparison race (paper
 /// Alg. 9): with Δ⁺ = log(l_ii − u_x^T L_X^{-1} u_x) and
 /// Δ⁻ = −log(l_ii − u_y^T L_{Y'}^{-1} u_y), returns true (add `i` to X)
 /// iff `p·[Δ⁻]₊ ≤ (1−p)·[Δ⁺]₊`.
+///
+/// The two BIFs live on *different* operators (`L_X` and `L_{Y'}`), so
+/// they cannot share a panel; each side runs as a width-1 [`Session`]
+/// and the §5.2 refinement tightens whichever side contributes the larger
+/// weighted log-gap bracket.
 ///
 /// Under [`RacePolicy::Prune`] the race stops the moment the two log-gap
 /// brackets separate — the retrospective behavior
@@ -379,13 +243,8 @@ pub fn race_dg(
     opts_y: GqlOptions,
     policy: RacePolicy,
 ) -> (bool, JudgeStats) {
-    // Quadrature state (None = exact zero-BIF, incl. zero query vectors)
-    let mut qx = op_x
-        .filter(|(_, u)| !is_zero(u))
-        .map(|(op, u)| Gql::new(op, u, opts_x));
-    let mut qy = op_y
-        .filter(|(_, u)| !is_zero(u))
-        .map(|(op, u)| Gql::new(op, u, opts_y));
+    let mut qx = DgSide::new(op_x, opts_x);
+    let mut qy = DgSide::new(op_y, opts_y);
     let mut bx = qx.as_mut().map(|q| q.step());
     let mut by = qy.as_mut().map(|q| q.step());
     let mut iters = 0usize;
@@ -428,8 +287,10 @@ pub fn race_dg(
         // log-gap bracket
         let gx = (1.0 - p) * (pos(dp_hi) - pos(dp_lo));
         let gy = p * (pos(dm_hi) - pos(dm_lo));
-        let x_can = !x_exact && qx.as_ref().map_or(false, |q| q.iterations() < opts_x.max_iters);
-        let y_can = !y_exact && qy.as_ref().map_or(false, |q| q.iterations() < opts_y.max_iters);
+        let x_can = !x_exact
+            && bx.as_ref().zip(qx.as_ref()).map_or(false, |(b, q)| b.iter < q.max_iters);
+        let y_can = !y_exact
+            && by.as_ref().zip(qy.as_ref()).map_or(false, |(b, q)| b.iter < q.max_iters);
         if !x_can && !y_can {
             let dp_mid = 0.5 * (pos(dp_lo) + pos(dp_hi));
             let dm_mid = 0.5 * (pos(dm_lo) + pos(dm_hi));

@@ -1,0 +1,211 @@
+//! Unified-query-planner invariants (ISSUE 4): a session mixing
+//! `Threshold` + `Compare` + `Argmax` (+ `Estimate`) queries on one
+//! operator must answer **bit-identically** to the sequential scalar
+//! paths it replaced —
+//!
+//! * threshold answers match the hand-rolled scalar judge loop
+//!   (`judge_threshold_src`) in decision, iteration count, *and* outcome,
+//! * compare answers match the exact oracle comparison (and the scalar
+//!   adaptive ratio judge),
+//! * argmax answers match dense-Cholesky oracle argmax and are identical
+//!   across `RacePolicy::{Prune,Exhaustive}` under the adaptive prune
+//!   margin,
+//! * estimate answers are bit-identical to `run_scalar`,
+//!
+//! including under `Reorth::Full` on an ill-conditioned kernel (tiny
+//! ridge ⇒ κ ~ 1e3–1e4, the §5.4 regime).
+
+use gauss_bif::datasets::random_sparse_spd;
+use gauss_bif::linalg::Cholesky;
+use gauss_bif::quadrature::block::{run_scalar, StopRule};
+use gauss_bif::quadrature::judge::{judge_ratio, judge_threshold_src, BoundSource};
+use gauss_bif::quadrature::query::{Answer, Query, QueryArm, Session};
+use gauss_bif::quadrature::race::PRUNE_MARGIN;
+use gauss_bif::quadrature::{GqlOptions, RacePolicy, Reorth};
+use gauss_bif::sparse::Csr;
+use gauss_bif::util::prop::forall;
+use gauss_bif::util::rng::Rng;
+
+fn randvec(rng: &mut Rng, n: usize) -> Vec<f64> {
+    (0..n).map(|_| rng.normal()).collect()
+}
+
+/// Oracle argmax of `offset_i − u_i^T A^{-1} u_i` via dense Cholesky.
+fn oracle_argmax(a: &Csr, arms: &[(Vec<f64>, f64)]) -> Option<usize> {
+    let ch = Cholesky::factor(&a.to_dense()).expect("SPD");
+    let mut best: Option<(usize, f64)> = None;
+    for (i, (u, off)) in arms.iter().enumerate() {
+        let val = off - ch.bif(u);
+        if best.map_or(true, |(_, g)| val > g) {
+            best = Some((i, val));
+        }
+    }
+    best.map(|(i, _)| i)
+}
+
+/// Drive one mixed session and check every answer against its sequential
+/// scalar reference. `opts` carries the reorth knob so the same harness
+/// covers the well- and ill-conditioned regimes.
+fn check_mixed_session(rng: &mut Rng, l: &Csr, opts: GqlOptions) {
+    let n = l.n;
+    let ch = Cholesky::factor(&l.to_dense()).expect("SPD");
+
+    // threshold reference: the hand-rolled scalar loop (kept as the
+    // ablation entry), NOT judge_threshold — that is itself a session
+    // wrapper now, so the comparison would be circular
+    let ut = randvec(rng, n);
+    let t_thresh = ch.bif(&ut) * (0.4 + rng.f64());
+    let (want_t, want_t_stats) = judge_threshold_src(l, &ut, t_thresh, opts, BoundSource::Radau);
+
+    let (cu, cv) = (randvec(rng, n), randvec(rng, n));
+    let p = 0.5;
+    let truth_cmp = p * ch.bif(&cv) - ch.bif(&cu);
+    let t_cmp = truth_cmp + if rng.bool(0.5) { 0.4 } else { -0.4 };
+    let (want_c, _) = judge_ratio(l, &cu, &cv, t_cmp, p, opts);
+    assert_eq!(want_c, t_cmp < truth_cmp, "scalar ratio judge disagrees with oracle");
+
+    let m = 3 + rng.below(5);
+    let arms: Vec<(Vec<f64>, f64)> = (0..m)
+        .map(|_| (randvec(rng, n), 2.0 + rng.f64() * 3.0))
+        .collect();
+    let want_winner = oracle_argmax(l, &arms);
+
+    let ue = randvec(rng, n);
+    let est_ref = run_scalar(l, &ue, opts, StopRule::GapRel(1e-8), false);
+
+    let width = 1 + rng.below(8);
+    for policy in [RacePolicy::Prune, RacePolicy::Exhaustive] {
+        let mut s = Session::new(l, opts, width, policy);
+        let q_t = s.submit(Query::Threshold { u: ut.clone(), t: t_thresh });
+        let q_c = s.submit(Query::Compare { u: cu.clone(), v: cv.clone(), t: t_cmp, p });
+        let q_a = s.submit(Query::Argmax {
+            arms: arms
+                .iter()
+                .map(|(u, off)| QueryArm::gain(u.clone(), StopRule::GapRel(1e-10), *off))
+                .collect(),
+            floor: None,
+        });
+        let q_e = s.submit(Query::Estimate { u: ue.clone(), stop: StopRule::GapRel(1e-8) });
+        let answers = s.run();
+
+        match &answers[q_t] {
+            Answer::Threshold { decision, stats } => {
+                assert_eq!(*decision, want_t, "threshold decision diverged");
+                assert_eq!(stats.iters, want_t_stats.iters, "threshold iters diverged");
+                assert_eq!(stats.outcome, want_t_stats.outcome, "threshold outcome diverged");
+            }
+            other => panic!("wrong answer kind {other:?}"),
+        }
+        assert_eq!(answers[q_c].decision(), Some(want_c), "compare decision diverged");
+        assert_eq!(answers[q_a].winner(), Some(want_winner), "argmax winner diverged");
+        match &answers[q_e] {
+            Answer::Estimate { bounds, iters } => {
+                assert_eq!(*iters, est_ref.iters, "estimate iters diverged");
+                assert_eq!(
+                    bounds.gauss.to_bits(),
+                    est_ref.bounds.gauss.to_bits(),
+                    "estimate bounds diverged"
+                );
+            }
+            other => panic!("wrong answer kind {other:?}"),
+        }
+        assert!(s.prune_margin() >= PRUNE_MARGIN, "margin fell below the fixed floor");
+    }
+}
+
+#[test]
+fn mixed_sessions_answer_identically_to_sequential_scalar_paths() {
+    forall(12, 0x5E5510, |rng| {
+        let n = 12 + rng.below(24);
+        let (l, w) = random_sparse_spd(rng, n, 0.25, 0.05);
+        check_mixed_session(rng, &l, GqlOptions::new(w.lo, w.hi));
+    });
+}
+
+#[test]
+fn mixed_sessions_hold_under_full_reorth_on_ill_conditioned_kernels() {
+    // tiny ridge ⇒ condition number ~1e3–1e4: the §5.4 regime where plain
+    // Lanczos loses bound validity and reorthogonalization matters
+    forall(6, 0x5E5511, |rng| {
+        let n = 14 + rng.below(14);
+        let (l, w) = random_sparse_spd(rng, n, 0.3, 1e-4);
+        let opts = GqlOptions::new(w.lo, w.hi).with_reorth(Reorth::Full);
+        check_mixed_session(rng, &l, opts);
+    });
+}
+
+#[test]
+fn adaptive_prune_margin_preserves_selection_identity() {
+    // the ISSUE 4 satellite: the dominance margin now scales with the
+    // observed per-arm bound wiggle; pruning must still select exactly
+    // what exhaustive scoring selects, on well- and ill-conditioned
+    // kernels alike (the latter is where wiggle actually appears)
+    forall(10, 0x5E5512, |rng| {
+        let n = 16 + rng.below(24);
+        let ridge = if rng.bool(0.5) { 0.05 } else { 1e-4 };
+        let (l, w) = random_sparse_spd(rng, n, 0.25, ridge);
+        // the ill-conditioned arm keeps §5.4 reorthogonalization so its
+        // brackets stay valid — the wiggle the margin adapts to is the
+        // residual floating-point noise, not wholesale bound breakdown
+        let opts = if ridge < 1e-3 {
+            GqlOptions::new(w.lo, w.hi).with_reorth(Reorth::Full)
+        } else {
+            GqlOptions::new(w.lo, w.hi)
+        };
+        let m = 4 + rng.below(6);
+        let arms: Vec<(Vec<f64>, f64)> = (0..m)
+            .map(|_| (randvec(rng, n), 1.0 + rng.f64() * 4.0))
+            .collect();
+        let width = 1 + rng.below(m);
+        let run = |policy| {
+            let mut s = Session::new(&l, opts, width, policy);
+            let qid = s.submit(Query::Argmax {
+                arms: arms
+                    .iter()
+                    .map(|(u, off)| QueryArm::gain(u.clone(), StopRule::GapRel(1e-10), *off))
+                    .collect(),
+                floor: None,
+            });
+            let winner = s.run()[qid].winner().expect("argmax answer");
+            (winner, s.sweeps(), s.prune_margin())
+        };
+        let (w_ex, sweeps_ex, _) = run(RacePolicy::Exhaustive);
+        let (w_pr, sweeps_pr, margin) = run(RacePolicy::Prune);
+        assert_eq!(w_ex, w_pr, "adaptive margin changed the selection");
+        assert_eq!(w_ex, oracle_argmax(&l, &arms), "wrong argmax");
+        assert!(sweeps_pr <= sweeps_ex, "pruning added sweeps");
+        assert!(margin >= PRUNE_MARGIN, "margin fell below the fixed floor");
+    });
+}
+
+#[test]
+fn session_queries_resolve_incrementally_under_step() {
+    // drive a session sweep-by-sweep: thresholds with far-away cutoffs
+    // resolve first while the estimate keeps refining — the scheduling
+    // behavior the coordinator's mixed serving relies on
+    let mut rng = Rng::new(0x5E5513);
+    let n = 32;
+    let (l, w) = random_sparse_spd(&mut rng, n, 0.2, 0.05);
+    let opts = GqlOptions::new(w.lo, w.hi);
+    let ch = Cholesky::factor(&l.to_dense()).unwrap();
+    let u = randvec(&mut rng, n);
+    let easy_t = ch.bif(&u) * 0.01; // decided in very few iterations
+    let mut s = Session::new(&l, opts, 4, RacePolicy::Prune);
+    let q_easy = s.submit(Query::Threshold { u: u.clone(), t: easy_t });
+    let q_est = s.submit(Query::Estimate { u, stop: StopRule::Exhaust });
+    let mut easy_resolved_at = None;
+    let mut steps = 0usize;
+    while s.step() {
+        steps += 1;
+        if easy_resolved_at.is_none() && s.is_resolved(q_easy) {
+            easy_resolved_at = Some(steps);
+        }
+    }
+    assert!(s.is_resolved(q_est));
+    let at = easy_resolved_at.expect("easy threshold resolved");
+    assert!(
+        at < steps,
+        "easy threshold should resolve before the exhaustive estimate ({at} vs {steps})"
+    );
+    assert_eq!(s.run().len(), 2);
+}
