@@ -1,0 +1,132 @@
+//! Multi-operator streaming engine vs per-operator sequential sessions
+//! (ISSUE 5): the same estimate workload — several operators, several
+//! queries each — drained one session at a time vs jointly by the engine
+//! at 1/2/4 sweep workers.
+//!
+//! Answers are asserted bit-identical across every configuration before
+//! timing (the engine is a scheduler, not a numeric path); wall-clock is
+//! the headline here because worker fan-out is the one axis panel-sweep
+//! counts cannot show.
+//!
+//! Run: `cargo bench --bench bench_engine`
+
+use gauss_bif::datasets::random_sparse_spd;
+use gauss_bif::quadrature::block::StopRule;
+use gauss_bif::quadrature::engine::{Engine, EngineConfig, OpKey};
+use gauss_bif::quadrature::query::{Answer, Query, Session};
+use gauss_bif::quadrature::race::RacePolicy;
+use gauss_bif::quadrature::GqlOptions;
+use gauss_bif::sparse::Csr;
+use gauss_bif::util::bench::{Bencher, Stats, Table};
+use gauss_bif::util::rng::Rng;
+
+struct Workload {
+    ops: Vec<(Csr, GqlOptions)>,
+    /// per-operator query vectors
+    queries: Vec<Vec<Vec<f64>>>,
+}
+
+const STOP: StopRule = StopRule::GapRel(1e-8);
+const WIDTH: usize = 8;
+
+fn build(n: usize, ops: usize, per_op: usize, seed: u64) -> Workload {
+    let mut rng = Rng::new(seed);
+    let density = 5e-3_f64.max(8.0 / (n as f64 * n as f64));
+    let mut kernels = Vec::new();
+    let mut queries = Vec::new();
+    for _ in 0..ops {
+        let (a, w) = random_sparse_spd(&mut rng, n, density, 0.05);
+        let qs: Vec<Vec<f64>> = (0..per_op)
+            .map(|_| (0..n).map(|_| rng.normal()).collect())
+            .collect();
+        kernels.push((a, GqlOptions::new(w.lo, w.hi)));
+        queries.push(qs);
+    }
+    Workload { ops: kernels, queries }
+}
+
+/// Per-operator sequential serving: drain each operator's session to
+/// completion before the next starts. Returns the answers' Gauss bits.
+fn run_sequential(w: &Workload) -> Vec<u64> {
+    let mut bits = Vec::new();
+    for ((a, opts), qs) in w.ops.iter().zip(&w.queries) {
+        let mut s = Session::new(a, *opts, WIDTH, RacePolicy::Prune);
+        let qids: Vec<usize> = qs
+            .iter()
+            .map(|u| s.submit(Query::Estimate { u: u.clone(), stop: STOP }))
+            .collect();
+        let answers = s.run();
+        for qid in qids {
+            match &answers[qid] {
+                Answer::Estimate { bounds, .. } => bits.push(bounds.gauss.to_bits()),
+                other => panic!("wrong answer kind {other:?}"),
+            }
+        }
+    }
+    bits
+}
+
+/// Joint serving: every operator's session advances each engine round,
+/// swept by `workers` threads.
+fn run_engine(w: &Workload, workers: usize) -> Vec<u64> {
+    let mut eng = Engine::new(
+        EngineConfig::default()
+            .with_width(WIDTH)
+            .with_lanes(WIDTH * w.ops.len())
+            .with_workers(workers),
+    )
+    .expect("static engine config is valid");
+    let mut tickets = Vec::new();
+    for (k, ((a, opts), qs)) in w.ops.iter().zip(&w.queries).enumerate() {
+        for u in qs {
+            tickets.push(eng.submit(
+                k as OpKey,
+                a,
+                *opts,
+                Query::Estimate { u: u.clone(), stop: STOP },
+            ));
+        }
+    }
+    eng.drain();
+    tickets
+        .iter()
+        .map(|&t| match eng.answer(t).expect("drained") {
+            Answer::Estimate { bounds, .. } => bounds.gauss.to_bits(),
+            other => panic!("wrong answer kind {other:?}"),
+        })
+        .collect()
+}
+
+fn main() {
+    let mut b = Bencher::quick();
+    println!("multi-operator estimate workload: engine (1/2/4 workers) vs sequential sessions\n");
+    let mut table = Table::new(&[
+        "n", "ops", "q/op", "sequential", "engine w=1", "engine w=2", "engine w=4",
+    ]);
+    for &(n, ops, per_op) in &[(400usize, 4usize, 8usize), (900, 6, 8)] {
+        let w = build(n, ops, per_op, 0xE6B ^ n as u64);
+        // identity across every configuration before timing anything
+        let want = run_sequential(&w);
+        for workers in [1usize, 2, 4] {
+            assert_eq!(
+                want,
+                run_engine(&w, workers),
+                "engine answers diverged at {workers} workers"
+            );
+        }
+        let seq = b.bench(&format!("n={n} ops={ops} sequential"), || run_sequential(&w));
+        let e1 = b.bench(&format!("n={n} ops={ops} engine w=1"), || run_engine(&w, 1));
+        let e2 = b.bench(&format!("n={n} ops={ops} engine w=2"), || run_engine(&w, 2));
+        let e4 = b.bench(&format!("n={n} ops={ops} engine w=4"), || run_engine(&w, 4));
+        table.row(vec![
+            n.to_string(),
+            ops.to_string(),
+            per_op.to_string(),
+            Stats::fmt_time(seq.median_ns),
+            Stats::fmt_time(e1.median_ns),
+            Stats::fmt_time(e2.median_ns),
+            Stats::fmt_time(e4.median_ns),
+        ]);
+    }
+    println!("\n{}", table.render());
+}

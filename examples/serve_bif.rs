@@ -98,7 +98,10 @@ fn main() {
                     batched += 1;
                 }
             }
-            RoutePath::Native | RoutePath::NativeSession { .. } | RoutePath::NativeRace { .. } => {}
+            RoutePath::Native
+            | RoutePath::NativeSession { .. }
+            | RoutePath::NativeEngine { .. }
+            | RoutePath::NativeRace { .. } => {}
         }
     }
     let dt = t0.elapsed().as_secs_f64();

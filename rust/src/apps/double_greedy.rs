@@ -27,6 +27,7 @@
 
 use super::BifStrategy;
 use crate::linalg::{Cholesky, MaintainedInverse};
+use crate::quadrature::engine::{race_dg_joint, DgSideSpec, Engine, EngineConfig};
 use crate::quadrature::race::{race_dg, RacePolicy};
 use crate::quadrature::GqlOptions;
 use crate::sparse::{Csr, SpectrumBounds, SubmatrixView};
@@ -47,6 +48,15 @@ pub struct DgConfig {
     /// Δ⁺/Δ⁻ comparison-race policy for the Gauss strategy (decisions are
     /// policy-independent; iteration counts are not)
     pub race: RacePolicy,
+    /// Joint scheduling (ISSUE 5): run each element's Δ⁺/Δ⁻ race through
+    /// a shared multi-operator [`Engine`] — both sides advance one panel
+    /// per engine round and the comparison resolves from per-round
+    /// bracket exchange ([`race_dg_joint`]), finishing in ~max(a, b)
+    /// rounds where the §5.2 alternation spends a + b single-side steps.
+    /// Decisions (and therefore selections) are identical either way;
+    /// `judge_iters_total` then counts both sides' iterations at the
+    /// decision round.
+    pub joint: bool,
 }
 
 impl DgConfig {
@@ -58,11 +68,17 @@ impl DgConfig {
             limit: None,
             stop_after: None,
             race: RacePolicy::Prune,
+            joint: false,
         }
     }
 
     pub fn with_race(mut self, r: RacePolicy) -> Self {
         self.race = r;
+        self
+    }
+
+    pub fn with_joint(mut self, j: bool) -> Self {
+        self.joint = j;
         self
     }
 
@@ -163,12 +179,31 @@ pub fn double_greedy(l: &Csr, cfg: DgConfig, rng: &mut Rng) -> DgResult {
                 let ux = view_x.column_of(i);
                 let view_y = SubmatrixView::new(l, &y_rest);
                 let uy = view_y.column_of(i);
-                let op_x = (!x.is_empty())
-                    .then_some((&view_x as &dyn crate::sparse::SymOp, ux.as_slice()));
-                let op_y = (!y_rest.is_empty())
-                    .then_some((&view_y as &dyn crate::sparse::SymOp, uy.as_slice()));
-                let (ans, js) =
-                    race_dg(op_x, op_y, l_ii, p, cfg.gql_opts(), cfg.gql_opts(), cfg.race);
+                let (ans, js) = if cfg.joint {
+                    // cross-operator scheduling: both sides share one
+                    // engine, one panel per operator per round
+                    let mut eng = Engine::new(
+                        EngineConfig::default().with_width(1).with_lanes(2).with_ttl_rounds(4),
+                    )
+                    .expect("static engine config is valid");
+                    let spec_x = (!x.is_empty()).then_some(DgSideSpec {
+                        op: &view_x as &dyn crate::sparse::SymOp,
+                        u: ux.as_slice(),
+                        opts: cfg.gql_opts(),
+                    });
+                    let spec_y = (!y_rest.is_empty()).then_some(DgSideSpec {
+                        op: &view_y as &dyn crate::sparse::SymOp,
+                        u: uy.as_slice(),
+                        opts: cfg.gql_opts(),
+                    });
+                    race_dg_joint(&mut eng, spec_x, spec_y, l_ii, p, cfg.race)
+                } else {
+                    let op_x = (!x.is_empty())
+                        .then_some((&view_x as &dyn crate::sparse::SymOp, ux.as_slice()));
+                    let op_y = (!y_rest.is_empty())
+                        .then_some((&view_y as &dyn crate::sparse::SymOp, uy.as_slice()));
+                    race_dg(op_x, op_y, l_ii, p, cfg.gql_opts(), cfg.gql_opts(), cfg.race)
+                };
                 judge_iters_total += js.iters;
                 ans
             }
@@ -286,6 +321,32 @@ mod tests {
                 pr.judge_iters_total,
                 ex.judge_iters_total
             );
+        });
+    }
+
+    #[test]
+    fn joint_engine_race_selects_identically_to_sequential() {
+        // the ISSUE 5 cross-operator path: per-round bracket exchange
+        // through a shared engine must pick exactly the set the §5.2
+        // alternation (and the exact baseline) picks
+        forall(5, 0xDC, |rng| {
+            let n = 16 + rng.below(20);
+            let (l, w) = random_sparse_spd(rng, n, 0.25, 0.05);
+            let seed = rng.next_u64();
+            let run = |joint| {
+                let mut r = Rng::new(seed);
+                double_greedy(
+                    &l,
+                    DgConfig::new(BifStrategy::Gauss, w).with_joint(joint),
+                    &mut r,
+                )
+                .chosen
+            };
+            let sequential = run(false);
+            assert_eq!(sequential, run(true), "joint scheduling changed the selection");
+            let mut r = Rng::new(seed);
+            let exact = double_greedy(&l, DgConfig::new(BifStrategy::Exact, w), &mut r).chosen;
+            assert_eq!(sequential, exact);
         });
     }
 

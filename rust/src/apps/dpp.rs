@@ -24,6 +24,7 @@
 use super::BifStrategy;
 use crate::linalg::{Cholesky, MaintainedInverse};
 use crate::quadrature::block::StopRule;
+use crate::quadrature::engine::{Engine, EngineConfig, EngineConfigError};
 use crate::quadrature::query::{Answer, Query, QueryArm, Session};
 use crate::quadrature::race::RacePolicy;
 use crate::quadrature::{judge_threshold, GqlOptions, Reorth};
@@ -385,6 +386,129 @@ pub fn greedy_map_stats(l: &Csr, cfg: &GreedyConfig) -> (Vec<usize>, GreedyStats
     (y, stats)
 }
 
+/// Joint greedy MAP over **several kernels** (ISSUE 5): each selection
+/// round, every unfinished instance compiles its candidate race into one
+/// [`Query::Argmax`] on a shared multi-operator [`Engine`] — one
+/// `matvec_multi` panel per kernel per round — so R instances finish a
+/// greedy round in ~max over instances of per-instance rounds instead of
+/// their sum. Per-instance behavior (panel width, race policy, candidate
+/// order) is exactly [`greedy_map`]'s, and per-lane scores are
+/// bit-identical to scalar runs, so every selection equals its solo
+/// `greedy_map` (asserted in the tests below and
+/// `rust/tests/prop_engine.rs`).
+///
+/// `cfg` applies to every kernel — in particular `cfg.window` must be a
+/// valid spectrum window for **all** of them (take the union of the
+/// per-kernel windows). Returns the per-kernel selections plus the total
+/// joint engine rounds; rejects unusable engine knobs with the typed
+/// admission error.
+pub fn greedy_map_multi(
+    kernels: &[&Csr],
+    cfg: &GreedyConfig,
+    ecfg: EngineConfig,
+) -> Result<(Vec<Vec<usize>>, usize), EngineConfigError> {
+    // per-instance sessions must behave exactly like greedy_map's: same
+    // panel width, same race policy
+    let ecfg = ecfg
+        .with_width(cfg.block_width.max(1))
+        .with_policy(cfg.race);
+    ecfg.validate()?;
+    let opts = GqlOptions::new(cfg.window.lo, cfg.window.hi).with_reorth(cfg.reorth);
+    let stop = StopRule::GapRel(cfg.tol_rel);
+    let m = kernels.len();
+    let mut ys: Vec<Vec<usize>> = vec![Vec::new(); m];
+    let mut in_ys: Vec<Vec<bool>> = kernels.iter().map(|l| vec![false; l.n]).collect();
+    let mut done: Vec<bool> = kernels.iter().map(|l| cfg.k.min(l.n) == 0).collect();
+
+    // round 1: gains are diagonal entries, no quadrature (same free round
+    // as greedy_map)
+    for i in 0..m {
+        if done[i] {
+            continue;
+        }
+        let l = kernels[i];
+        let mut best: Option<(usize, f64)> = None;
+        for c in 0..l.n {
+            let gain = l.get(c, c);
+            if best.map_or(true, |(_, g)| gain > g) {
+                best = Some((c, gain));
+            }
+        }
+        match best {
+            Some((c, gain)) if gain > GAIN_FLOOR => {
+                ys[i].push(c);
+                in_ys[i][c] = true;
+            }
+            _ => done[i] = true,
+        }
+        if ys[i].len() >= cfg.k.min(l.n) {
+            done[i] = true;
+        }
+    }
+
+    let mut rounds_total = 0usize;
+    loop {
+        let active: Vec<usize> = (0..m).filter(|&i| !done[i]).collect();
+        if active.is_empty() {
+            break;
+        }
+        let candidates: Vec<Vec<usize>> = active
+            .iter()
+            .map(|&i| (0..kernels[i].n).filter(|&c| !in_ys[i][c]).collect())
+            .collect();
+        // the engine (and the views it borrows) live only for this round:
+        // winners are pulled out before the selections mutate
+        let winners: Vec<Option<usize>> = {
+            let views: Vec<SubmatrixView> = active
+                .iter()
+                .map(|&i| SubmatrixView::new(kernels[i], &ys[i]))
+                .collect();
+            let mut eng = Engine::new(ecfg).expect("validated above");
+            let tickets: Vec<usize> = views
+                .iter()
+                .zip(&candidates)
+                .zip(&active)
+                .map(|((view, cand), &i)| {
+                    let arms: Vec<QueryArm> = cand
+                        .iter()
+                        .map(|&c| QueryArm::gain(view.column_of(c), stop, kernels[i].get(c, c)))
+                        .collect();
+                    eng.submit(
+                        i as crate::quadrature::engine::OpKey,
+                        view,
+                        opts,
+                        Query::Argmax { arms, floor: Some(GAIN_FLOOR) },
+                    )
+                })
+                .collect();
+            eng.drain();
+            rounds_total += eng.stats().rounds;
+            tickets
+                .iter()
+                .map(|&t| match eng.answer(t).expect("engine drained") {
+                    Answer::Argmax { winner, .. } => *winner,
+                    _ => unreachable!("argmax queries answer with argmax answers"),
+                })
+                .collect()
+        };
+        for ((&i, cand), winner) in active.iter().zip(&candidates).zip(winners) {
+            match winner {
+                Some(a) => {
+                    let c = cand[a];
+                    let pos = ys[i].partition_point(|&x| x < c);
+                    ys[i].insert(pos, c);
+                    in_ys[i][c] = true;
+                    if ys[i].len() >= cfg.k.min(kernels[i].n) {
+                        done[i] = true;
+                    }
+                }
+                None => done[i] = true, // no PD-feasible candidate left
+            }
+        }
+    }
+    Ok((ys, rounds_total))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -581,6 +705,37 @@ mod tests {
                 ex_stats.sweeps
             );
         });
+    }
+
+    #[test]
+    fn joint_multi_kernel_greedy_matches_solo_greedy() {
+        // ISSUE 5: several kernels' greedy rounds raced through one
+        // multi-operator engine must select exactly what each solo
+        // greedy_map selects
+        let mut rng = Rng::new(0xDA5);
+        let mut kernels = Vec::new();
+        for _ in 0..3 {
+            let n = 24 + rng.below(16);
+            kernels.push(random_sparse_spd(&mut rng, n, 0.2, 0.05));
+        }
+        // one window covering every kernel (the documented contract)
+        let window = kernels.iter().fold(
+            crate::sparse::SpectrumBounds { lo: f64::INFINITY, hi: 0.0 },
+            |acc, (_, w)| crate::sparse::SpectrumBounds {
+                lo: acc.lo.min(w.lo),
+                hi: acc.hi.max(w.hi),
+            },
+        );
+        let cfg = GreedyConfig::new(window, 6).with_block_width(8);
+        let refs: Vec<&Csr> = kernels.iter().map(|(l, _)| l).collect();
+        let (joint, rounds) =
+            greedy_map_multi(&refs, &cfg, EngineConfig::default()).expect("valid knobs");
+        assert!(rounds > 0);
+        for (l, sel) in refs.iter().zip(&joint) {
+            assert_eq!(*sel, greedy_map(l, &cfg), "joint selection diverged");
+        }
+        // unusable engine knobs are rejected with the typed error
+        assert!(greedy_map_multi(&refs, &cfg, EngineConfig::default().with_lanes(0)).is_err());
     }
 
     #[test]

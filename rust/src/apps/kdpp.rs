@@ -12,9 +12,15 @@
 //! width-2 `matvec_multi` panel sweep per iteration instead of two scalar
 //! traversals, and the swap test rides the same comparison machinery as
 //! every other consumer of the planner.
+//!
+//! **Chain pools (ISSUE 5):** [`step_chains`] advances several chains —
+//! several live submatrix operators — through one multi-operator
+//! [`Engine`], resolving every swap test from a shared round loop with
+//! trajectories identical to solo stepping.
 
 use super::BifStrategy;
 use crate::linalg::Cholesky;
+use crate::quadrature::engine::{Engine, EngineConfig, EngineConfigError, OpKey};
 use crate::quadrature::query::{Answer, Query, Session};
 use crate::quadrature::race::RacePolicy;
 use crate::quadrature::GqlOptions;
@@ -46,6 +52,18 @@ pub struct KdppStats {
     pub steps: usize,
     pub accepted: usize,
     pub judge_iters_total: usize,
+}
+
+/// One drawn swap proposal: the chain's RNG has already advanced, but the
+/// chain state is untouched until [`KdppSampler::apply`].
+struct Proposal {
+    vi: usize,
+    v: usize,
+    u: usize,
+    p: f64,
+    t: f64,
+    /// Y' = Y∖{v}, sorted — the operator index set of this proposal.
+    idx: Vec<usize>,
 }
 
 /// One MH k-DPP chain.
@@ -114,8 +132,11 @@ impl<'a> KdppSampler<'a> {
         &self.y
     }
 
-    /// One swap proposal. Returns whether it was accepted.
-    pub fn step(&mut self, rng: &mut Rng) -> bool {
+    /// Draw one swap proposal (advancing the chain's RNG exactly as
+    /// [`KdppSampler::step`] does) without judging it — the split that
+    /// lets [`step_chains`] batch many chains' judgements onto one
+    /// multi-operator engine.
+    fn propose(&mut self, rng: &mut Rng) -> Proposal {
         self.stats.steps += 1;
         let n = self.l.n;
         // v ∈ Y uniformly; u ∉ Y uniformly
@@ -130,17 +151,51 @@ impl<'a> KdppSampler<'a> {
         let p = rng.f64();
         let t = p * self.l.get(v, v) - self.l.get(u, u);
         let idx: Vec<usize> = self.y.iter().copied().filter(|&m| m != v).collect();
+        Proposal { vi, v, u, p, t, idx }
+    }
 
+    /// The exact (Cholesky) side of the swap test.
+    fn judge_exact(&self, prop: &Proposal) -> bool {
+        // Exact (and Incremental falls back to exact here: the swap
+        // always needs L_{Y'}^{-1}, not L_Y^{-1})
+        if prop.idx.is_empty() {
+            prop.t < 0.0
+        } else {
+            let sub = self.l.principal_submatrix(&prop.idx).to_dense();
+            let ch = Cholesky::factor(&sub).expect("L_Y' must be PD");
+            let cu: Vec<f64> = prop.idx.iter().map(|&m| self.l.get(m, prop.u)).collect();
+            let cv: Vec<f64> = prop.idx.iter().map(|&m| self.l.get(m, prop.v)).collect();
+            prop.t < prop.p * ch.bif(&cv) - ch.bif(&cu)
+        }
+    }
+
+    /// Apply an already-judged proposal; returns `accept` back.
+    fn apply(&mut self, prop: &Proposal, accept: bool) -> bool {
+        if accept {
+            self.y.remove(prop.vi); // keep sorted (see `new`)
+            let pos = self.y.partition_point(|&m| m < prop.u);
+            self.y.insert(pos, prop.u);
+            self.in_y[prop.v] = false;
+            self.in_y[prop.u] = true;
+            self.stats.accepted += 1;
+        }
+        accept
+    }
+
+    /// One swap proposal. Returns whether it was accepted.
+    pub fn step(&mut self, rng: &mut Rng) -> bool {
+        let prop = self.propose(rng);
         let accept = match self.cfg.strategy {
             BifStrategy::Gauss => {
-                let view = SubmatrixView::new(self.l, &idx); // idx pre-sorted
-                let uu = view.column_of(u);
-                let vv = view.column_of(v);
+                let view = SubmatrixView::new(self.l, &prop.idx); // idx pre-sorted
+                let uu = view.column_of(prop.u);
+                let vv = view.column_of(prop.v);
                 // accept ⟺ t < p·BIF_v − BIF_u, both sides fed by one
                 // paired panel sweep (§Perf: materialization tried and
                 // reverted — ~2 iterations don't amortize it)
                 let mut session = Session::new(&view, self.cfg.gql_opts(), 2, RacePolicy::Prune);
-                let qid = session.submit(Query::Compare { u: uu, v: vv, t, p });
+                let qid =
+                    session.submit(Query::Compare { u: uu, v: vv, t: prop.t, p: prop.p });
                 let (ans, js) = match session.run().swap_remove(qid) {
                     Answer::Compare { decision, stats } => (decision, stats),
                     _ => unreachable!("compare queries answer with compare answers"),
@@ -148,29 +203,9 @@ impl<'a> KdppSampler<'a> {
                 self.stats.judge_iters_total += js.iters;
                 ans
             }
-            _ => {
-                // Exact (and Incremental falls back to exact here: the swap
-                // always needs L_{Y'}^{-1}, not L_Y^{-1})
-                if idx.is_empty() {
-                    t < 0.0
-                } else {
-                    let sub = self.l.principal_submatrix(&idx).to_dense();
-                    let ch = Cholesky::factor(&sub).expect("L_Y' must be PD");
-                    let cu: Vec<f64> = idx.iter().map(|&m| self.l.get(m, u)).collect();
-                    let cv: Vec<f64> = idx.iter().map(|&m| self.l.get(m, v)).collect();
-                    t < p * ch.bif(&cv) - ch.bif(&cu)
-                }
-            }
+            _ => self.judge_exact(&prop),
         };
-        if accept {
-            self.y.remove(vi); // keep sorted (see `new`)
-            let pos = self.y.partition_point(|&m| m < u);
-            self.y.insert(pos, u);
-            self.in_y[v] = false;
-            self.in_y[u] = true;
-            self.stats.accepted += 1;
-        }
-        accept
+        self.apply(&prop, accept)
     }
 
     pub fn run(&mut self, steps: usize, rng: &mut Rng) -> usize {
@@ -182,6 +217,83 @@ impl<'a> KdppSampler<'a> {
         }
         acc
     }
+}
+
+/// Advance a pool of chains by one proposal each, **jointly** (ISSUE 5):
+/// every chain's swap test — one `Query::Compare` per live submatrix
+/// operator `L_{Y'}` — is submitted to one multi-operator [`Engine`] and
+/// resolves from a shared round loop, one `matvec_multi` panel per
+/// operator per round. A pool of C chains finishes a proposal wave in
+/// ~max over chains of per-chain rounds instead of their sum, which is
+/// where the cross-operator batching pays.
+///
+/// Each chain draws from its own RNG exactly as [`KdppSampler::step`]
+/// would, and every decision is certified by the same nested brackets, so
+/// trajectories are identical to stepping the chains one at a time
+/// (asserted in the tests below and `rust/tests/prop_engine.rs`). Chains
+/// with non-Gauss strategies are judged exactly, outside the engine.
+/// Returns the joint engine rounds spent on this wave; unusable engine
+/// knobs are rejected with the typed admission error **before** any
+/// chain's RNG advances (mirroring `greedy_map_multi`), so a failed wave
+/// leaves every chain exactly where it was.
+pub fn step_chains(
+    chains: &mut [KdppSampler<'_>],
+    rngs: &mut [Rng],
+    ecfg: EngineConfig,
+) -> Result<usize, EngineConfigError> {
+    assert_eq!(chains.len(), rngs.len(), "one RNG per chain");
+    ecfg.validate()?;
+    let props: Vec<Proposal> = chains
+        .iter_mut()
+        .zip(rngs.iter_mut())
+        .map(|(c, r)| c.propose(r))
+        .collect();
+    // every proposal's operator must be alive at once: the kernel refs
+    // outlive the samplers' borrows, the views borrow the proposals
+    let ls: Vec<&Csr> = chains.iter().map(|c| c.l).collect();
+    let optss: Vec<GqlOptions> = chains.iter().map(|c| c.cfg.gql_opts()).collect();
+    let gauss: Vec<bool> = chains
+        .iter()
+        .map(|c| c.cfg.strategy == BifStrategy::Gauss)
+        .collect();
+    let views: Vec<SubmatrixView> = props
+        .iter()
+        .zip(&ls)
+        .map(|(p, l)| SubmatrixView::new(l, &p.idx))
+        .collect();
+    let mut eng = Engine::new(ecfg).expect("validated above");
+    let tickets: Vec<Option<usize>> = views
+        .iter()
+        .enumerate()
+        .map(|(i, view)| {
+            gauss[i].then(|| {
+                let uu = view.column_of(props[i].u);
+                let vv = view.column_of(props[i].v);
+                eng.submit(
+                    i as OpKey,
+                    view,
+                    optss[i],
+                    Query::Compare { u: uu, v: vv, t: props[i].t, p: props[i].p },
+                )
+            })
+        })
+        .collect();
+    eng.drain();
+    let rounds = eng.stats().rounds;
+    for (i, prop) in props.iter().enumerate() {
+        let accept = match tickets[i] {
+            Some(t) => match eng.answer(t).expect("engine drained") {
+                Answer::Compare { decision, stats } => {
+                    chains[i].stats.judge_iters_total += stats.iters;
+                    *decision
+                }
+                _ => unreachable!("compare queries answer with compare answers"),
+            },
+            None => chains[i].judge_exact(prop),
+        };
+        chains[i].apply(prop, accept);
+    }
+    Ok(rounds)
 }
 
 #[cfg(test)]
@@ -254,6 +366,61 @@ mod tests {
         for _ in 0..40 {
             s.step(&mut rng);
             assert_eq!(s.current_set().len(), 10);
+        }
+    }
+
+    #[test]
+    fn joint_chain_pool_matches_sequential_trajectories() {
+        // ISSUE 5: a pool of chains advanced through one multi-operator
+        // engine must walk exactly the trajectories of solo stepping —
+        // the engine is a scheduler, not a numeric path
+        let mut rng = Rng::new(0xE6);
+        let mut kernels = Vec::new();
+        for _ in 0..3 {
+            let n = 30 + rng.below(12);
+            kernels.push(random_sparse_spd(&mut rng, n, 0.2, 0.05));
+        }
+        let seeds: Vec<u64> = (0..3).map(|_| rng.next_u64()).collect();
+        let steps = 25usize;
+
+        // sequential reference: each chain stepped alone
+        let sequential: Vec<Vec<usize>> = kernels
+            .iter()
+            .zip(&seeds)
+            .map(|((l, w), &s)| {
+                let mut r = Rng::new(s);
+                let cfg = KdppConfig::new(BifStrategy::Gauss, *w, 8);
+                let mut smp = KdppSampler::new(l, cfg, &mut r);
+                smp.run(steps, &mut r);
+                smp.current_set().to_vec()
+            })
+            .collect();
+
+        // joint pool: same seeds, one engine per proposal wave
+        let mut rngs: Vec<Rng> = seeds.iter().map(|&s| Rng::new(s)).collect();
+        let mut chains: Vec<KdppSampler> = kernels
+            .iter()
+            .zip(rngs.iter_mut())
+            .map(|((l, w), r)| {
+                KdppSampler::new(l, KdppConfig::new(BifStrategy::Gauss, *w, 8), r)
+            })
+            .collect();
+        let mut joint_rounds = 0usize;
+        for _ in 0..steps {
+            joint_rounds += step_chains(&mut chains, &mut rngs, EngineConfig::default())
+                .expect("valid engine knobs");
+        }
+        assert!(joint_rounds > 0);
+        // unusable knobs are rejected before any chain's RNG advances
+        let steps_before: Vec<usize> = chains.iter().map(|c| c.stats.steps).collect();
+        assert!(
+            step_chains(&mut chains, &mut rngs, EngineConfig::default().with_lanes(0)).is_err()
+        );
+        let steps_after: Vec<usize> = chains.iter().map(|c| c.stats.steps).collect();
+        assert_eq!(steps_before, steps_after, "failed wave must not draw proposals");
+        for (c, want) in chains.iter().zip(&sequential) {
+            assert_eq!(c.current_set(), &want[..], "joint pool diverged");
+            assert_eq!(c.stats.steps, steps);
         }
     }
 

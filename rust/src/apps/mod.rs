@@ -23,8 +23,11 @@ pub mod kdpp;
 
 pub use centrality::{rank_top_k_centrality, CentralityResult};
 pub use double_greedy::{double_greedy, DgConfig, DgResult};
-pub use dpp::{greedy_map, greedy_map_stats, DppConfig, DppSampler, DppStats, GreedyConfig, GreedyStats};
-pub use kdpp::{KdppConfig, KdppSampler, KdppStats};
+pub use dpp::{
+    greedy_map, greedy_map_multi, greedy_map_stats, DppConfig, DppSampler, DppStats,
+    GreedyConfig, GreedyStats,
+};
+pub use kdpp::{step_chains, KdppConfig, KdppSampler, KdppStats};
 
 /// How an application evaluates / compares its BIFs.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

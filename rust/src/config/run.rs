@@ -2,6 +2,8 @@
 //! `python/compile/aot.py`) and launcher run configs.
 
 use super::json::{parse, Json, JsonError};
+use crate::quadrature::engine::EngineConfig;
+use crate::quadrature::race::RacePolicy;
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
@@ -53,6 +55,9 @@ pub enum ExperimentConfig {
     Race,
     /// Mixed query sessions vs sequential per-query serving (ISSUE 4).
     Session,
+    /// Multi-operator streaming engine vs per-operator sequential
+    /// scheduling (ISSUE 5).
+    Engine,
     Serve,
 }
 
@@ -66,6 +71,7 @@ impl ExperimentConfig {
             "block" => Some(Self::Block),
             "race" => Some(Self::Race),
             "session" => Some(Self::Session),
+            "engine" => Some(Self::Engine),
             "serve" => Some(Self::Serve),
             _ => None,
         }
@@ -101,6 +107,20 @@ pub struct RunConfig {
     /// only panel sweeps differ. JSON accepts a bool or the strings
     /// "prune"/"exhaustive"
     pub race: bool,
+    /// global live-lane budget of the multi-operator streaming engine
+    /// (ISSUE 5): queries beyond the budget are parked whole and resumed
+    /// bit-identically, priority-ordered. Validated at admission by
+    /// [`EngineConfig::validate_knobs`] — 0 and absurd values are
+    /// rejected with the typed
+    /// [`EngineConfigError`](crate::quadrature::engine::EngineConfigError),
+    /// mirroring `BatchPolicy::validate`.
+    pub engine_lanes: usize,
+    /// rounds an idle engine session survives before TTL eviction;
+    /// validated together with `engine_lanes` at admission
+    pub engine_ttl_rounds: usize,
+    /// sweep workers for the engine's parallel panel fan-out (results
+    /// are bit-identical at any worker count)
+    pub engine_workers: usize,
     /// extra free-form knobs
     pub extra: BTreeMap<String, String>,
 }
@@ -117,6 +137,9 @@ impl Default for RunConfig {
             block_width: 16,
             reorth: false,
             race: true,
+            engine_lanes: 256,
+            engine_ttl_rounds: 32,
+            engine_workers: 1,
             extra: BTreeMap::new(),
         }
     }
@@ -157,6 +180,20 @@ impl RunConfig {
             Some(Json::Str(s)) => c.race = s.eq_ignore_ascii_case("prune"),
             _ => {}
         }
+        if let Some(x) = v.get("engine_lanes").and_then(Json::as_usize) {
+            c.engine_lanes = x;
+        }
+        if let Some(x) = v.get("engine_ttl_rounds").and_then(Json::as_usize) {
+            c.engine_ttl_rounds = x;
+        }
+        if let Some(x) = v.get("engine_workers").and_then(Json::as_usize) {
+            c.engine_workers = x.clamp(1, 1 << 10);
+        }
+        // admission validation with the typed engine error (ISSUE 5
+        // satellite, mirroring BatchPolicy::validate): 0 or absurd values
+        // fail the whole config load instead of deadlocking the engine
+        EngineConfig::validate_knobs(c.engine_lanes, c.engine_ttl_rounds)
+            .map_err(|e| e.to_string())?;
         if let Some(Json::Obj(m)) = v.get("extra") {
             for (k, val) in m {
                 if let Some(s) = val.as_str() {
@@ -165,6 +202,18 @@ impl RunConfig {
             }
         }
         Ok(c)
+    }
+
+    /// The engine configuration this run config describes (width from
+    /// `block_width`, racing policy from `race`). Knobs were validated at
+    /// admission, so this cannot fail for a loaded config.
+    pub fn engine_config(&self) -> EngineConfig {
+        EngineConfig::default()
+            .with_width(self.block_width.max(1))
+            .with_lanes(self.engine_lanes)
+            .with_ttl_rounds(self.engine_ttl_rounds)
+            .with_workers(self.engine_workers.max(1))
+            .with_policy(if self.race { RacePolicy::Prune } else { RacePolicy::Exhaustive })
     }
 
     pub fn load(path: &Path) -> Result<Self, String> {
@@ -237,6 +286,30 @@ mod tests {
     }
 
     #[test]
+    fn engine_knobs_parse_and_validate_at_admission() {
+        let d = RunConfig::default();
+        assert_eq!(d.engine_lanes, 256);
+        assert_eq!(d.engine_ttl_rounds, 32);
+        assert_eq!(d.engine_workers, 1);
+        let c = RunConfig::from_json(
+            r#"{"engine_lanes": 64, "engine_ttl_rounds": 8, "engine_workers": 4}"#,
+        )
+        .unwrap();
+        assert_eq!(c.engine_lanes, 64);
+        assert_eq!(c.engine_ttl_rounds, 8);
+        assert_eq!(c.engine_workers, 4);
+        assert!(c.engine_config().validate().is_ok());
+        // the ISSUE 5 satellite: 0/absurd knobs rejected at admission
+        // with the typed engine error's message
+        let err = RunConfig::from_json(r#"{"engine_lanes": 0}"#).unwrap_err();
+        assert!(err.contains("engine_lanes"), "{err}");
+        let err = RunConfig::from_json(r#"{"engine_ttl_rounds": 0}"#).unwrap_err();
+        assert!(err.contains("engine_ttl_rounds"), "{err}");
+        let err = RunConfig::from_json(r#"{"engine_lanes": 99999999}"#).unwrap_err();
+        assert!(err.contains("exceeds"), "{err}");
+    }
+
+    #[test]
     fn experiment_names() {
         assert_eq!(ExperimentConfig::from_name("fig1"), Some(ExperimentConfig::Fig1));
         assert_eq!(ExperimentConfig::from_name("block"), Some(ExperimentConfig::Block));
@@ -244,6 +317,10 @@ mod tests {
         assert_eq!(
             ExperimentConfig::from_name("session"),
             Some(ExperimentConfig::Session)
+        );
+        assert_eq!(
+            ExperimentConfig::from_name("engine"),
+            Some(ExperimentConfig::Engine)
         );
         assert_eq!(ExperimentConfig::from_name("nope"), None);
     }

@@ -18,9 +18,9 @@ pub struct BatchPolicy {
     pub max_wait: Duration,
     /// queries with dim above this always take the native path
     pub native_threshold: usize,
-    /// drain co-keyed native-path requests (same `op_key`, dim, and
-    /// spectrum window) into one `quadrature::block::BlockGql` run
-    /// instead of N scalar runs
+    /// drain queued keyed native-path requests — any operator, either
+    /// kind — into one multi-operator `quadrature::engine::Engine` run
+    /// (one session per coalesce key) instead of N scalar runs
     pub coalesce: bool,
 }
 
@@ -82,23 +82,11 @@ impl Bucketizer {
             .map(|b| (b * b) as f64 / (dim * dim).max(1) as f64)
     }
 
-    /// Same-operator coalescing mode: positions in `queued` whose
-    /// coalesce key equals `first`'s, oldest-first up to `limit` — the
-    /// requests the drainer folds into one native block run. `None` keys
-    /// (no `op_key`) never coalesce.
-    pub fn coalesce_positions<K: PartialEq>(
-        first: &K,
-        queued: &[Option<K>],
-        limit: usize,
-    ) -> Vec<usize> {
-        queued
-            .iter()
-            .enumerate()
-            .filter(|(_, k)| k.as_ref() == Some(first))
-            .map(|(i, _)| i)
-            .take(limit)
-            .collect()
-    }
+    // `coalesce_positions` lived here while the native drain selected
+    // requests one coalesce key at a time; ISSUE 5 replaced that drain
+    // with the multi-operator engine client (`drain_keyed` pulls every
+    // keyed request and the engine partitions by key), so the helper is
+    // gone rather than left as misleading dead machinery.
 }
 
 #[cfg(test)]
@@ -141,22 +129,4 @@ mod tests {
         assert!(p.validate().unwrap_err().contains("native_threshold"));
     }
 
-    #[test]
-    fn coalesce_positions_matches_keys_oldest_first() {
-        let key = (7u64, 16usize);
-        let queued = vec![
-            Some((7u64, 16usize)), // match
-            Some((7, 32)),         // same op, different dim: no
-            None,                  // unkeyed: no
-            Some((8, 16)),         // different op: no
-            Some((7, 16)),         // match
-            Some((7, 16)),         // match (cut by limit)
-        ];
-        assert_eq!(Bucketizer::coalesce_positions(&key, &queued, 2), vec![0, 4]);
-        assert_eq!(
-            Bucketizer::coalesce_positions(&key, &queued, 8),
-            vec![0, 4, 5]
-        );
-        assert!(Bucketizer::coalesce_positions(&key, &[], 4).is_empty());
-    }
 }

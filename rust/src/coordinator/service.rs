@@ -18,11 +18,16 @@
 //! latency EWMAs ([`ServiceMetrics::prefer_native_block`]) say the native
 //! block path has recently been faster — the ROADMAP "prefer the faster
 //! path" heuristic. Argmax requests always run native (the
-//! fixed-iteration artifacts cannot early-terminate), but since ISSUE 4
-//! they are no longer served alone: the coalesce key excludes the request
-//! *kind*, so co-keyed threshold and argmax traffic drains into **one
-//! shared-operator [`Session`]** whose panel sweeps advance every lane of
-//! every query at once ([`RoutePath::NativeSession`]).
+//! fixed-iteration artifacts cannot early-terminate). Since ISSUE 5 the
+//! native drain is a thin client of the **multi-operator streaming
+//! engine** ([`crate::quadrature::engine::Engine`]): one drain pulls
+//! every queued keyed request — any operator, either kind — and the
+//! engine runs one session per distinct coalesce key from a single round
+//! loop, one `matvec_multi` panel per operator per round. Single-key
+//! groups report [`RoutePath::NativeSession`] exactly as before;
+//! cross-operator groups report [`RoutePath::NativeEngine`]. Lone
+//! (unkeyed) argmax batches run as width-limited engine sessions
+//! ([`RoutePath::NativeRace`]).
 //!
 //! Lifecycle: [`JudgeService::start`] spawns workers (+ executor); clients
 //! call [`JudgeService::submit`] / [`JudgeService::submit_argmax`] (each
@@ -34,8 +39,9 @@ use crate::config::run::parse_manifest;
 use crate::linalg::DMat;
 use crate::metrics::ServiceMetrics;
 use crate::quadrature::block::StopRule;
-use crate::quadrature::query::{Answer, Query, QueryArm, Session};
-use crate::quadrature::race::{Race, RacePolicy};
+use crate::quadrature::engine::{Engine, EngineConfig, OpKey, MAX_ENGINE_LANES};
+use crate::quadrature::query::{Answer, Query, QueryArm};
+use crate::quadrature::race::RacePolicy;
 use crate::quadrature::{judge_threshold, GqlOptions, Reorth};
 use crate::runtime::{BoundsHistory, GqlRuntime};
 use std::path::PathBuf;
@@ -58,7 +64,8 @@ pub struct ThresholdRequest {
     /// one `a` (a DPP chain, a centrality sweep) tag them with a shared
     /// key; co-keyed native-path requests with equal `n` and spectrum
     /// window — threshold *and* argmax, the key excludes the kind — are
-    /// drained into a single shared-operator [`Session`] run.
+    /// drained into a single shared-operator
+    /// [`Session`](crate::quadrature::query::Session) run.
     /// **Contract:** requests sharing a key must carry byte-identical
     /// `a`. `None` disables coalescing for this request.
     pub op_key: Option<u64>,
@@ -98,7 +105,8 @@ pub struct ArgmaxRequest {
     /// Same-operator coalescing key, sharing the namespace of
     /// [`ThresholdRequest::op_key`]. The coalesce key deliberately
     /// excludes the request *kind*: a co-keyed argmax batch drains into
-    /// the same native [`Session`] as co-keyed threshold traffic, so all
+    /// the same native [`Session`](crate::quadrature::query::Session) as
+    /// co-keyed threshold traffic, so all
     /// their lanes advance from shared panel sweeps. Same contract:
     /// requests sharing a key must carry byte-identical `a`. `None`
     /// races this batch alone.
@@ -121,10 +129,16 @@ pub enum RoutePath {
     Native,
     /// native unified planner: `batch` co-keyed requests (threshold
     /// and/or argmax, the key excludes the kind) compiled onto one
-    /// shared-operator `Session`
+    /// shared-operator `Session` — since ISSUE 5 this is the single-
+    /// operator case of the engine drain below
     NativeSession { batch: usize },
+    /// native multi-operator engine (ISSUE 5): `batch` keyed requests
+    /// across `ops` **distinct** operators drained into one
+    /// [`Engine`], one `matvec_multi` panel per operator per round
+    NativeEngine { ops: usize, batch: usize },
     /// native racing scheduler: one argmax batch of `arms` candidates
-    /// served alone (unkeyed, or coalescing disabled)
+    /// served alone (unkeyed, or coalescing disabled) — a width-limited
+    /// single-operator engine session since ISSUE 5
     NativeRace { arms: usize },
 }
 
@@ -439,9 +453,11 @@ fn worker_loop(
             }
         };
 
-        // The coalesce key deliberately excludes the request kind
-        // (ISSUE 4 satellite): any keyed request — threshold or argmax —
-        // may drain co-keyed traffic of either kind into one session.
+        // Any keyed request may lead a native drain: since ISSUE 5 the
+        // drain pulls every queued *keyed* request — any operator, either
+        // kind — and hands the group to one multi-operator engine (one
+        // session per distinct key). The coalesce key still partitions
+        // sessions; it no longer partitions the drain.
         let coalescible = policy.coalesce && policy.max_batch > 1 && coalesce_key(&first).is_some();
 
         // argmax batches always run native: the fixed-iteration PJRT
@@ -449,12 +465,11 @@ fn worker_loop(
         let first = match first {
             Queued::Argmax(item) => {
                 if coalescible {
-                    let key = argmax_key(&item.req).expect("coalescible requires op_key");
                     let mut group = vec![Queued::Argmax(item)];
-                    group.extend(drain_coalesced(&shared, &key, &policy));
-                    serve_native_session(&metrics, group);
+                    group.extend(drain_keyed(&shared, &policy));
+                    serve_native_engine(&metrics, group, &policy);
                 } else {
-                    serve_argmax(&metrics, item);
+                    serve_argmax(&metrics, item, &policy);
                 }
                 continue;
             }
@@ -479,10 +494,9 @@ fn worker_loop(
             (bucket.expect("checked above"), sender.expect("checked above"))
         } else {
             if coalescible {
-                let key = thresh_key(&first.req).expect("coalescible requires op_key");
                 let mut group = vec![Queued::Threshold(first)];
-                group.extend(drain_coalesced(&shared, &key, &policy));
-                serve_native_session(&metrics, group);
+                group.extend(drain_keyed(&shared, &policy));
+                serve_native_engine(&metrics, group, &policy);
             } else {
                 serve_native(&metrics, first);
             }
@@ -620,20 +634,28 @@ fn argmax_key(req: &ArgmaxRequest) -> Option<CoalesceKey> {
         .map(|k| (k, req.n, req.lam_min.to_bits(), req.lam_max.to_bits(), req.reorth))
 }
 
-/// The same-operator coalescing drain: pull queued requests (of either
-/// kind) whose coalesce key equals `key`, sleeping on the shared condvar
-/// (woken by `submit`) up to `max_wait` for stragglers — the client
-/// tagged them batchable, so a bounded wait is the right trade, but a
-/// lone keyed request parks instead of burning a core for the full 200µs
-/// default (the ROADMAP's named latency bug).
-fn drain_coalesced(shared: &Shared, key: &CoalesceKey, policy: &BatchPolicy) -> Vec<Queued> {
+/// The native engine drain (ISSUE 5): pull **every** queued keyed request
+/// — any operator, either kind — sleeping on the shared condvar (woken by
+/// `submit`) up to `max_wait` for stragglers. The old per-key coalescing
+/// drain waited the same bounded time but could only fold one operator's
+/// traffic; the engine client groups by key afterwards, so one drain
+/// feeds all live operators' sessions and the cross-operator round loop
+/// does the rest. A lone keyed request still parks on the condvar instead
+/// of burning a core for the full 200µs default (the ROADMAP's named
+/// latency bug).
+fn drain_keyed(shared: &Shared, policy: &BatchPolicy) -> Vec<Queued> {
     let mut group: Vec<Queued> = Vec::new();
     let deadline = Instant::now() + policy.max_wait;
     let mut q = shared.queue.lock().unwrap();
     loop {
-        let keys: Vec<_> = q.iter().map(coalesce_key).collect();
         let want = policy.max_batch - 1 - group.len();
-        let pos = Bucketizer::coalesce_positions(key, &keys, want);
+        let pos: Vec<usize> = q
+            .iter()
+            .enumerate()
+            .filter(|(_, item)| coalesce_key(item).is_some())
+            .map(|(i, _)| i)
+            .take(want)
+            .collect();
         for p in pos.into_iter().rev() {
             group.push(q.remove(p));
         }
@@ -649,23 +671,42 @@ fn drain_coalesced(shared: &Shared, key: &CoalesceKey, policy: &BatchPolicy) -> 
     }
 }
 
-/// A queued request routed into a session, remembering which query id
-/// will answer it (`None`: malformed argmax, answered without a query).
-enum SessionSlot {
+/// A request routed into the engine, remembering the ticket that answers
+/// it (`None`: malformed argmax, answered without a query).
+enum EngineSlot {
     Thresh(ThreshQueued, usize),
     Argmax(ArgmaxQueued, Option<usize>),
 }
 
-/// Serve a coalesced group — threshold and/or argmax requests on one
-/// operator — through a single shared-operator [`Session`]: the matrix is
-/// converted to f64 once, every request becomes one query, and one panel
-/// sweep advances every lane of every query. Per-request decisions are
-/// identical to the dedicated paths (the block engine's exactness
-/// contract plus the planner's shared decision ladders).
-fn serve_native_session(metrics: &ServiceMetrics, items: Vec<Queued>) {
+/// Lanes a request compiles to (0 for malformed argmax batches).
+fn lane_demand(item: &Queued) -> usize {
+    match item {
+        Queued::Threshold(_) => 1,
+        Queued::Argmax(q) => {
+            if argmax_malformed(&q.req) {
+                0
+            } else {
+                q.req.us.len()
+            }
+        }
+    }
+}
+
+/// Serve a drained group of keyed requests — any mix of operators and
+/// kinds — through one multi-operator [`Engine`] (ISSUE 5): the group is
+/// partitioned by coalesce key, each distinct key gets one session over
+/// its (f64-converted) operator, and a single round loop advances one
+/// `matvec_multi` panel per operator per round. This *is* the old
+/// shared-operator session serve — the single-key case reports
+/// [`RoutePath::NativeSession`] exactly as before — generalized so
+/// cross-operator traffic stops being served one key at a time
+/// ([`RoutePath::NativeEngine`]). Per-request decisions are identical to
+/// the dedicated paths (the block engine's exactness contract plus the
+/// planner's shared decision ladders; the engine never changes numerics).
+fn serve_native_engine(metrics: &ServiceMetrics, items: Vec<Queued>, policy: &BatchPolicy) {
     let served = Instant::now();
     if items.len() == 1 {
-        // degenerate group (no co-keyed stragglers arrived): keep the
+        // degenerate group (no keyed stragglers arrived): keep the
         // specialized paths, but still record the native-path EWMA so the
         // router's exploration sample lands even without real coalescing
         match items.into_iter().next().expect("one item") {
@@ -675,13 +716,97 @@ fn serve_native_session(metrics: &ServiceMetrics, items: Vec<Queued>) {
                     .native_block_ns
                     .record(served.elapsed().as_nanos() as f64);
             }
-            Queued::Argmax(a) => serve_argmax(metrics, a),
+            Queued::Argmax(a) => serve_argmax(metrics, a, policy),
         }
         return;
     }
-    let batch = items.len();
-    let thresholds = items
+    // partition by coalesce key, preserving arrival order inside a group
+    let mut groups: Vec<(CoalesceKey, Vec<Queued>)> = Vec::new();
+    for item in items {
+        let key = coalesce_key(&item).expect("the engine drain only pulls keyed requests");
+        match groups.iter_mut().find(|(k, _)| *k == key) {
+            Some((_, g)) => g.push(item),
+            None => groups.push((key, vec![item])),
+        }
+    }
+
+    // plan each group: an unusable leader operator falls the whole group
+    // back to the dedicated per-request paths (which answer malformed
+    // batches gracefully). The f64 operators live in `ops_store`,
+    // *separate* from the request items, because the engine borrows the
+    // operators for its whole lifetime while the items are consumed at
+    // submission.
+    struct GroupPlan {
+        opts: GqlOptions,
+        width: usize,
+        policy: RacePolicy,
+    }
+    let mut ops_store: Vec<DMat> = Vec::new();
+    let mut plans: Vec<GroupPlan> = Vec::new();
+    let mut group_items: Vec<Vec<Queued>> = Vec::new();
+    let mut fallback: Vec<Queued> = Vec::new();
+    for (_, group) in groups {
+        let (n, lam_min, lam_max, reorth) = match &group[0] {
+            Queued::Threshold(t) => (t.req.n, t.req.lam_min, t.req.lam_max, t.req.reorth),
+            Queued::Argmax(a) => (a.req.n, a.req.lam_min, a.req.lam_max, a.req.reorth),
+        };
+        let a_bytes: &[f32] = match &group[0] {
+            Queued::Threshold(t) => &t.req.a,
+            Queued::Argmax(a) => &a.req.a,
+        };
+        if n == 0 || a_bytes.len() != n * n || !(lam_min > 0.0 && lam_max > lam_min) {
+            fallback.extend(group);
+            continue;
+        }
+        // the op_key contract says co-keyed requests carry byte-identical
+        // matrices; cheap to actually check in debug builds
+        debug_assert!(
+            group.iter().all(|it| match it {
+                Queued::Threshold(t) => t.req.a == a_bytes,
+                Queued::Argmax(q) => q.req.a == a_bytes,
+            }),
+            "co-keyed requests must share an identical operator matrix"
+        );
+        let a = DMat::from_fn(n, n, |i, j| a_bytes[i * n + j] as f64);
+        let opts =
+            GqlOptions::new(lam_min as f64, lam_max as f64).with_reorth(reorth_mode(reorth));
+        // width-limited panels (ISSUE 5 satellite): lane demand capped by
+        // the drain batch cap instead of the unbounded arms-sized panels
+        // the old paths allocated; excess lanes queue and refill, which
+        // changes sweep counts but never decisions. An exhaustive-scoring
+        // argmax member downgrades its group's policy (prune/exhaustive
+        // select identically — only sweeps differ).
+        let demand: usize = group.iter().map(lane_demand).sum();
+        let width = demand.clamp(1, policy.max_batch.max(1));
+        let gpolicy = if group.iter().all(|it| match it {
+            Queued::Argmax(q) => q.req.prune,
+            Queued::Threshold(_) => true,
+        }) {
+            RacePolicy::Prune
+        } else {
+            RacePolicy::Exhaustive
+        };
+        ops_store.push(a);
+        plans.push(GroupPlan { opts, width, policy: gpolicy });
+        group_items.push(group);
+    }
+    // fallback requests answer through the dedicated paths (which keep
+    // their own metrics — serve_native counts its fallback itself), so
+    // the engine accounting below covers engine-served requests only
+    for item in fallback {
+        match item {
+            Queued::Threshold(t) => serve_native(metrics, t),
+            Queued::Argmax(a) => serve_argmax(metrics, a, policy),
+        }
+    }
+    if ops_store.is_empty() {
+        return;
+    }
+
+    let batch: usize = group_items.iter().map(Vec::len).sum();
+    let thresholds = group_items
         .iter()
+        .flatten()
         .filter(|it| matches!(it, Queued::Threshold(_)))
         .count();
     // only threshold requests have a PJRT path to fall back from; argmax
@@ -689,110 +814,76 @@ fn serve_native_session(metrics: &ServiceMetrics, items: Vec<Queued>) {
     metrics.native_fallbacks.add(thresholds as u64);
     metrics.coalesced_blocks.inc();
     metrics.batch_size.lock().unwrap().record(batch as f64);
-    let (n, lam_min, lam_max, reorth) = match &items[0] {
-        Queued::Threshold(t) => (t.req.n, t.req.lam_min, t.req.lam_max, t.req.reorth),
-        Queued::Argmax(a) => (a.req.n, a.req.lam_min, a.req.lam_max, a.req.reorth),
-    };
-    let a_bytes: &[f32] = match &items[0] {
-        Queued::Threshold(t) => &t.req.a,
-        Queued::Argmax(a) => &a.req.a,
-    };
-    // a group led by an unusable operator (malformed argmax metadata)
-    // cannot seed a session; fall back to the dedicated per-request
-    // paths, which answer malformed batches gracefully
-    if n == 0 || a_bytes.len() != n * n || !(lam_min > 0.0 && lam_max > lam_min) {
-        for item in items {
+
+    let ops_count = ops_store.len();
+    let total_lanes: usize = plans.iter().map(|g| g.width).sum();
+    let ecfg = EngineConfig::default()
+        .with_lanes(total_lanes.clamp(1, MAX_ENGINE_LANES))
+        .with_ttl_rounds(1); // sessions die with the drain anyway
+    let mut eng = Engine::new(ecfg).expect("drain-derived engine config is valid");
+    let mut slots: Vec<EngineSlot> = Vec::with_capacity(batch);
+    let mut served_lanes = 0usize;
+    for (g, group) in group_items.into_iter().enumerate() {
+        let plan = &plans[g];
+        let slot = eng.spin_up(g as OpKey, &ops_store[g], plan.opts, plan.width, plan.policy);
+        for item in group {
             match item {
-                Queued::Threshold(t) => serve_native(metrics, t),
-                Queued::Argmax(a) => serve_argmax(metrics, a),
-            }
-        }
-        return;
-    }
-    // the op_key contract says co-keyed requests carry byte-identical
-    // matrices; cheap to actually check in debug builds
-    debug_assert!(
-        items.iter().all(|it| match it {
-            Queued::Threshold(t) => t.req.a == a_bytes,
-            Queued::Argmax(q) => q.req.a == a_bytes,
-        }),
-        "co-keyed requests must share an identical operator matrix"
-    );
-    let a = DMat::from_fn(n, n, |i, j| a_bytes[i * n + j] as f64);
-    let opts = GqlOptions::new(lam_min as f64, lam_max as f64).with_reorth(reorth_mode(reorth));
-    // panel width = total lane demand, like the dedicated paths sized
-    // their panels; an exhaustive-scoring argmax member downgrades the
-    // whole session's policy (prune/exhaustive select identically — only
-    // sweeps differ — so correctness is unaffected either way)
-    let mut lanes = 0usize;
-    for item in &items {
-        match item {
-            Queued::Threshold(_) => lanes += 1,
-            Queued::Argmax(q) => {
-                if !argmax_malformed(&q.req) {
-                    lanes += q.req.us.len();
+                Queued::Threshold(t) => {
+                    let u: Vec<f64> = t.req.u.iter().map(|&x| x as f64).collect();
+                    let ticket = eng.submit_to(slot, Query::Threshold { u, t: t.req.t });
+                    slots.push(EngineSlot::Thresh(t, ticket));
+                    served_lanes += 1;
+                }
+                Queued::Argmax(q) => {
+                    if argmax_malformed(&q.req) {
+                        slots.push(EngineSlot::Argmax(q, None));
+                        continue;
+                    }
+                    let scale = if q.req.negate { -1.0 } else { 1.0 };
+                    let arms: Vec<QueryArm> = q
+                        .req
+                        .us
+                        .iter()
+                        .enumerate()
+                        .map(|(i, u)| QueryArm {
+                            u: u.iter().map(|&x| x as f64).collect(),
+                            stop: StopRule::GapRel(q.req.tol_rel.max(0.0)),
+                            offset: q.req.offsets.get(i).copied().unwrap_or(0.0),
+                            scale,
+                        })
+                        .collect();
+                    served_lanes += q.req.us.len();
+                    let ticket = eng.submit_to(slot, Query::Argmax { arms, floor: None });
+                    slots.push(EngineSlot::Argmax(q, Some(ticket)));
                 }
             }
         }
     }
-    let policy = if items.iter().all(|it| match it {
-        Queued::Argmax(q) => q.req.prune,
-        Queued::Threshold(_) => true,
-    }) {
-        RacePolicy::Prune
-    } else {
-        RacePolicy::Exhaustive
-    };
-    let mut session = Session::new(&a, opts, lanes.max(1), policy);
-    let mut slots: Vec<SessionSlot> = Vec::with_capacity(batch);
-    for item in items {
-        match item {
-            Queued::Threshold(t) => {
-                let u: Vec<f64> = t.req.u.iter().map(|&x| x as f64).collect();
-                let qid = session.submit(Query::Threshold { u, t: t.req.t });
-                slots.push(SessionSlot::Thresh(t, qid));
-            }
-            Queued::Argmax(q) => {
-                if argmax_malformed(&q.req) {
-                    slots.push(SessionSlot::Argmax(q, None));
-                    continue;
-                }
-                let scale = if q.req.negate { -1.0 } else { 1.0 };
-                let arms: Vec<QueryArm> = q
-                    .req
-                    .us
-                    .iter()
-                    .enumerate()
-                    .map(|(i, u)| QueryArm {
-                        u: u.iter().map(|&x| x as f64).collect(),
-                        stop: StopRule::GapRel(q.req.tol_rel.max(0.0)),
-                        offset: q.req.offsets.get(i).copied().unwrap_or(0.0),
-                        scale,
-                    })
-                    .collect();
-                let qid = session.submit(Query::Argmax { arms, floor: None });
-                slots.push(SessionSlot::Argmax(q, Some(qid)));
-            }
-        }
+    eng.drain();
+    if ops_count >= 2 {
+        metrics.engine_drains.inc();
     }
-    let answers = session.run();
     // feed the router's path-preference EWMA. The EWMA arbitrates
     // *threshold* routing against PJRT, so the sample is the per-lane
-    // session time (a threshold is one lane): for threshold-only groups
-    // this is exactly the old elapsed/batch figure, and mixed groups
-    // still seed the EWMA — required by prefer_native_block's
-    // self-seeding contract — without letting a wide argmax batch
-    // inflate the apparent per-threshold cost by an order of magnitude
+    // engine time (a threshold is one lane): for threshold-only groups
+    // this matches the old elapsed/batch figure, and mixed groups still
+    // seed the EWMA — required by prefer_native_block's self-seeding
+    // contract — without letting a wide argmax batch inflate the
+    // apparent per-threshold cost by an order of magnitude
     if thresholds > 0 {
         metrics
             .native_block_ns
-            .record(served.elapsed().as_nanos() as f64 / lanes.max(1) as f64);
+            .record(served.elapsed().as_nanos() as f64 / served_lanes.max(1) as f64);
     }
-    let path = RoutePath::NativeSession { batch };
+    let path = if ops_count == 1 {
+        RoutePath::NativeSession { batch }
+    } else {
+        RoutePath::NativeEngine { ops: ops_count, batch }
+    };
     for slot in slots {
         match slot {
-            SessionSlot::Thresh(item, qid) => match &answers[qid] {
-                Answer::Threshold { decision, stats } => {
+            EngineSlot::Thresh(item, ticket) => match eng.answer(ticket) {
+                Some(Answer::Threshold { decision, stats }) => {
                     metrics.judge_iters.lock().unwrap().record(stats.iters as f64);
                     metrics
                         .latency_ns
@@ -807,14 +898,14 @@ fn serve_native_session(metrics: &ServiceMetrics, items: Vec<Queued>) {
                 }
                 _ => unreachable!("threshold queries answer with threshold answers"),
             },
-            SessionSlot::Argmax(item, None) => {
+            EngineSlot::Argmax(item, None) => {
                 metrics.races.inc();
                 let _ = item
                     .reply
                     .send(ArgmaxResponse { winner: None, sweeps: 0, pruned: 0, path });
             }
-            SessionSlot::Argmax(item, Some(qid)) => match &answers[qid] {
-                Answer::Argmax { winner, stats, .. } => {
+            EngineSlot::Argmax(item, Some(ticket)) => match eng.answer(ticket) {
+                Some(Answer::Argmax { winner, stats, .. }) => {
                     metrics.races.inc();
                     metrics
                         .latency_ns
@@ -844,11 +935,14 @@ fn argmax_malformed(req: &ArgmaxRequest) -> bool {
         || !(req.lam_min > 0.0 && req.lam_max > req.lam_min)
 }
 
-/// Serve a lone argmax batch through the native racing scheduler (itself
-/// a session wrapper since ISSUE 4): all arms share one operator panel;
-/// dominated arms are pruned (when requested) and the race ends the
-/// moment the winner is determined.
-fn serve_argmax(metrics: &ServiceMetrics, item: ArgmaxQueued) {
+/// Serve a lone argmax batch through a **width-limited engine session**
+/// (ISSUE 5 satellite — the standalone `Race` serve arm this replaces
+/// allocated an arms-sized panel, so a 100-arm request panelized 100
+/// lanes at once): the panel width is capped by the drain batch cap and
+/// excess arms queue/refill, which changes sweep counts but never the
+/// winner. Dominated arms are pruned (when requested) and the race ends
+/// the moment the winner is determined.
+fn serve_argmax(metrics: &ServiceMetrics, item: ArgmaxQueued, policy: &BatchPolicy) {
     let req = item.req;
     let arms = req.us.len();
     metrics.races.inc();
@@ -863,26 +957,39 @@ fn serve_argmax(metrics: &ServiceMetrics, item: ArgmaxQueued) {
     let a = DMat::from_fn(n, n, |i, j| req.a[i * n + j] as f64);
     let opts = GqlOptions::new(req.lam_min as f64, req.lam_max as f64)
         .with_reorth(reorth_mode(req.reorth));
-    let policy = if req.prune { RacePolicy::Prune } else { RacePolicy::Exhaustive };
+    let rpolicy = if req.prune { RacePolicy::Prune } else { RacePolicy::Exhaustive };
     let scale = if req.negate { -1.0 } else { 1.0 };
-    let mut race = Race::new(&a, opts, arms, policy);
-    for (i, u) in req.us.iter().enumerate() {
-        let uf: Vec<f64> = u.iter().map(|&x| x as f64).collect();
-        let offset = req.offsets.get(i).copied().unwrap_or(0.0);
-        race.push_arm(&uf, StopRule::GapRel(req.tol_rel.max(0.0)), offset, scale);
-    }
-    let out = race.run(None);
+    let width = arms.clamp(1, policy.max_batch.max(1));
+    let ecfg = EngineConfig::default()
+        .with_lanes(width.clamp(1, MAX_ENGINE_LANES))
+        .with_ttl_rounds(1);
+    let mut eng = Engine::new(ecfg).expect("serve-derived engine config is valid");
+    let slot = eng.spin_up(0, &a, opts, width, rpolicy);
+    let query_arms: Vec<QueryArm> = req
+        .us
+        .iter()
+        .enumerate()
+        .map(|(i, u)| QueryArm {
+            u: u.iter().map(|&x| x as f64).collect(),
+            stop: StopRule::GapRel(req.tol_rel.max(0.0)),
+            offset: req.offsets.get(i).copied().unwrap_or(0.0),
+            scale,
+        })
+        .collect();
+    let ticket = eng.submit_to(slot, Query::Argmax { arms: query_arms, floor: None });
+    eng.drain();
+    let (winner, sweeps, pruned) = match eng.answer(ticket) {
+        Some(Answer::Argmax { winner, stats, .. }) => (*winner, stats.sweeps, stats.pruned()),
+        _ => unreachable!("argmax queries answer with argmax answers"),
+    };
     metrics
         .latency_ns
         .lock()
         .unwrap()
         .record(item.enqueued.elapsed().as_nanos() as f64);
-    let _ = item.reply.send(ArgmaxResponse {
-        winner: out.winner,
-        sweeps: out.stats.sweeps,
-        pruned: out.stats.pruned(),
-        path,
-    });
+    let _ = item
+        .reply
+        .send(ArgmaxResponse { winner, sweeps, pruned, path });
 }
 
 /// The reorthogonalization mode a request asked for.
@@ -1242,6 +1349,79 @@ mod tests {
             assert_eq!(aresp.path, RoutePath::NativeRace { arms: 3 });
         }
         assert!(svc.metrics.races.get() >= 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn cross_keyed_traffic_drains_into_one_engine() {
+        // ISSUE 5: two distinct operators' keyed traffic, submitted
+        // together, is served by one multi-operator engine drain instead
+        // of one coalesce key at a time
+        let policy = BatchPolicy {
+            max_batch: 8,
+            max_wait: std::time::Duration::from_millis(50),
+            ..BatchPolicy::default()
+        };
+        let svc = JudgeService::start(None, policy, 1).unwrap();
+        let mut rng = Rng::new(0x5EC);
+        let mut ops = Vec::new();
+        for n in [14usize, 18] {
+            let (a, l1, ln) = random_spd_exact(&mut rng, n, 0.6, 0.2);
+            let af: Vec<f32> = (0..n * n).map(|k| a.get(k / n, k % n) as f32).collect();
+            let ch = Cholesky::factor(&a).unwrap();
+            ops.push((n, af, l1, ln, ch));
+        }
+        let mut rxs = Vec::new();
+        let mut wants = Vec::new();
+        for i in 0..8 {
+            let (n, af, l1, ln, ch) = &ops[i % 2];
+            let n = *n;
+            let u: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let exact = ch.bif(&u);
+            let t = exact * (0.55 + 0.1 * (i / 2) as f64);
+            wants.push(t < exact);
+            rxs.push(svc.submit(ThresholdRequest {
+                a: af.clone(),
+                u: u.iter().map(|&x| x as f32).collect(),
+                n,
+                lam_min: (*l1 * 0.99) as f32,
+                lam_max: (*ln * 1.01) as f32,
+                t,
+                op_key: Some(100 + (i % 2) as u64),
+                reorth: false,
+            }));
+        }
+        let mut engine_served = 0usize;
+        for (rx, want) in rxs.into_iter().zip(wants) {
+            let resp = rx.recv().unwrap();
+            assert_eq!(resp.decision, want);
+            if let RoutePath::NativeEngine { ops, batch } = resp.path {
+                assert!(ops >= 2, "cross-operator drain must span both keys");
+                assert!(batch >= 2);
+                engine_served += 1;
+            }
+        }
+        assert!(
+            engine_served >= 2,
+            "expected a cross-operator engine drain (got {engine_served})"
+        );
+        assert!(svc.metrics.engine_drains.get() >= 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn lone_argmax_panels_are_width_limited_but_oracle_correct() {
+        // ISSUE 5 satellite: the standalone Race serve arm is gone; a
+        // lone argmax with more arms than the drain batch cap runs as a
+        // width-limited engine session — same winner, bounded panel
+        let policy = BatchPolicy { max_batch: 4, ..BatchPolicy::default() };
+        let svc = JudgeService::start(None, policy, 1).unwrap();
+        let mut rng = Rng::new(0x5ED);
+        let (req, want) = make_argmax(&mut rng, 16, 10);
+        let resp = svc.argmax_blocking(req);
+        assert_eq!(resp.winner, want, "width cap changed the winner");
+        assert_eq!(resp.path, RoutePath::NativeRace { arms: 10 });
+        assert!(resp.sweeps > 0);
         svc.shutdown();
     }
 

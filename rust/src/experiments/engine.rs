@@ -1,0 +1,364 @@
+//! Multi-operator streaming-engine sweep (ISSUE 5): the cross-operator
+//! workloads the engine was built for — double greedy's Δ⁺/Δ⁻ sides, a
+//! pool of k-DPP chains with several live submatrix operators, and joint
+//! greedy MAP over several kernels — served two ways:
+//!
+//! * **per-side / per-operator sequential** — the pre-engine shape: one
+//!   operator advances per scheduling step (`race_dg`'s §5.2 alternation
+//!   refines one side per step; each chain or kernel drains its own
+//!   session to completion before the next starts);
+//! * **joint** — every live operator's panel advances each engine round.
+//!
+//! The headline number is **panel rounds**: scheduling steps in which
+//! work that could run concurrently actually does. The sequential
+//! baseline spends one operator traversal per round by construction; the
+//! engine spends one round per joint sweep of *all* live operators —
+//! `max` over operators instead of their sum. Answers must be identical
+//! (decisions, trajectories, selections), which doubles as an end-to-end
+//! check of the engine's "scheduler, not a numeric path" invariant.
+
+use crate::apps::dpp::{greedy_map, greedy_map_multi, greedy_map_stats, GreedyConfig};
+use crate::apps::kdpp::{step_chains, KdppConfig, KdppSampler};
+use crate::apps::BifStrategy;
+use crate::config::RunConfig;
+use crate::experiments::race::gapped_kernel;
+use crate::quadrature::engine::{race_dg_joint, DgSideSpec, Engine, EngineConfig};
+use crate::quadrature::race::{race_dg, RacePolicy};
+use crate::quadrature::{is_zero, GqlOptions};
+use crate::sparse::{Csr, SpectrumBounds};
+use crate::util::rng::Rng;
+
+/// One sweep row: the three cross-operator workloads at one problem size
+/// and chain count.
+#[derive(Clone, Debug)]
+pub struct EngineReport {
+    pub n: usize,
+    /// double-greedy inclusion tests raced
+    pub dg_elements: usize,
+    /// operator traversals of the §5.2 per-side alternation (one side
+    /// advances per step — the sequential baseline)
+    pub dg_sequential_rounds: usize,
+    /// joint engine rounds (both sides advance per round)
+    pub dg_joint_rounds: usize,
+    pub dg_saved_frac: f64,
+    /// chains in the k-DPP pool (each owns its own kernel/operator)
+    pub kdpp_chains: usize,
+    /// proposals per chain
+    pub kdpp_steps: usize,
+    /// Σ over chains of solo engine rounds (one chain at a time)
+    pub kdpp_sequential_rounds: usize,
+    /// joint pool engine rounds (every chain's compare advances per round)
+    pub kdpp_joint_rounds: usize,
+    pub kdpp_saved_frac: f64,
+    /// kernels in the joint greedy MAP workload
+    pub greedy_kernels: usize,
+    /// Σ over kernels of solo greedy panel sweeps
+    pub greedy_sequential_rounds: usize,
+    /// joint engine rounds across all kernels' greedy races
+    pub greedy_joint_rounds: usize,
+    /// every decision/trajectory/selection identical to sequential (must
+    /// be true)
+    pub identical: bool,
+}
+
+fn saved(seq: usize, joint: usize) -> f64 {
+    if seq > 0 {
+        seq.saturating_sub(joint) as f64 / seq as f64
+    } else {
+        0.0
+    }
+}
+
+/// Workload A — double greedy's Δ⁺/Δ⁻ comparison race: random
+/// (X, Y', i) splits of one kernel, each judged by the §5.2 alternation
+/// (`race_dg`) and by per-round bracket exchange on a shared engine
+/// (`race_dg_joint`). Returns (sequential rounds, joint rounds, identical).
+fn dg_workload(
+    rng: &mut Rng,
+    l: &Csr,
+    w: SpectrumBounds,
+    elements: usize,
+) -> (usize, usize, bool) {
+    let n = l.n;
+    let opts = GqlOptions::new(w.lo * 0.5, w.hi * 1.5);
+    let mut seq_rounds = 0usize;
+    let mut joint_rounds = 0usize;
+    let mut identical = true;
+    for _ in 0..elements {
+        let k = 2 + rng.below(n / 2);
+        let all = rng.sample_indices(n, n);
+        let (xs, rest) = all.split_at(k);
+        let (ys, _) = rest.split_at(1 + rng.below(rest.len() - 1));
+        let i = *all.last().unwrap();
+        let mut xs = xs.to_vec();
+        let mut ys = ys.to_vec();
+        xs.sort_unstable();
+        ys.sort_unstable();
+        let ax = l.principal_submatrix(&xs);
+        let ay = l.principal_submatrix(&ys);
+        let ux: Vec<f64> = xs.iter().map(|&m| l.get(m, i)).collect();
+        let uy: Vec<f64> = ys.iter().map(|&m| l.get(m, i)).collect();
+        let l_ii = l.get(i, i);
+        let p = rng.f64();
+
+        let (seq, js) = race_dg(
+            Some((&ax, &ux)),
+            Some((&ay, &uy)),
+            l_ii,
+            p,
+            opts,
+            opts,
+            RacePolicy::Prune,
+        );
+        // the alternation's traversal count: its counted refinement steps
+        // plus the uncounted initial step of each live side
+        let live = [ux.as_slice(), uy.as_slice()]
+            .iter()
+            .filter(|u| !is_zero(u))
+            .count();
+        seq_rounds += js.iters + live;
+
+        let mut eng = Engine::new(EngineConfig::default().with_width(1))
+            .expect("static engine config is valid");
+        let (joint, _) = race_dg_joint(
+            &mut eng,
+            Some(DgSideSpec { op: &ax, u: &ux, opts }),
+            Some(DgSideSpec { op: &ay, u: &uy, opts }),
+            l_ii,
+            p,
+            RacePolicy::Prune,
+        );
+        joint_rounds += eng.stats().rounds;
+        identical &= seq == joint;
+    }
+    (seq_rounds, joint_rounds, identical)
+}
+
+/// Workload B — a pool of k-DPP chains, each on its own kernel: solo
+/// stepping (reference trajectories via `KdppSampler::step`, solo engine
+/// rounds via single-chain `step_chains`) vs the joint pool. Returns
+/// (sequential rounds, joint rounds, identical).
+fn kdpp_workload(
+    rng: &mut Rng,
+    n: usize,
+    density: f64,
+    chains: usize,
+    steps: usize,
+    ecfg: EngineConfig,
+) -> (usize, usize, bool) {
+    let mut kernels: Vec<(Csr, SpectrumBounds)> = Vec::new();
+    for _ in 0..chains {
+        kernels.push(crate::datasets::random_sparse_spd(rng, n, density, 0.05));
+    }
+    let k = (n / 4).clamp(2, 12);
+    let seeds: Vec<u64> = (0..chains).map(|_| rng.next_u64()).collect();
+    let cfg_of = |w: &SpectrumBounds| KdppConfig::new(BifStrategy::Gauss, *w, k);
+
+    // reference trajectories: plain solo stepping (no engine at all)
+    let reference: Vec<Vec<usize>> = kernels
+        .iter()
+        .zip(&seeds)
+        .map(|((l, w), &s)| {
+            let mut r = Rng::new(s);
+            let mut smp = KdppSampler::new(l, cfg_of(w), &mut r);
+            smp.run(steps, &mut r);
+            smp.current_set().to_vec()
+        })
+        .collect();
+
+    // sequential engine baseline: one chain at a time
+    let mut seq_rounds = 0usize;
+    let mut identical = true;
+    for (ci, ((l, w), &s)) in kernels.iter().zip(&seeds).enumerate() {
+        let mut r = vec![Rng::new(s)];
+        let mut pool = vec![KdppSampler::new(l, cfg_of(w), &mut r[0])];
+        for _ in 0..steps {
+            seq_rounds += step_chains(&mut pool, &mut r, ecfg).expect("validated knobs");
+        }
+        identical &= pool[0].current_set() == reference[ci].as_slice();
+    }
+
+    // joint pool: every chain's swap test advances per engine round
+    let mut rngs: Vec<Rng> = seeds.iter().map(|&s| Rng::new(s)).collect();
+    let mut pool: Vec<KdppSampler> = kernels
+        .iter()
+        .zip(rngs.iter_mut())
+        .map(|((l, w), r)| KdppSampler::new(l, cfg_of(w), r))
+        .collect();
+    let mut joint_rounds = 0usize;
+    for _ in 0..steps {
+        joint_rounds += step_chains(&mut pool, &mut rngs, ecfg).expect("validated knobs");
+    }
+    for (c, want) in pool.iter().zip(&reference) {
+        identical &= c.current_set() == want.as_slice();
+    }
+    (seq_rounds, joint_rounds, identical)
+}
+
+/// Workload C — joint greedy MAP over several gapped kernels vs each
+/// kernel's solo `greedy_map`. Returns (sequential panel sweeps, joint
+/// rounds, identical).
+fn greedy_workload(
+    rng: &mut Rng,
+    n: usize,
+    density: f64,
+    kernels: usize,
+    k: usize,
+    width: usize,
+    ecfg: EngineConfig,
+) -> (usize, usize, bool) {
+    let mut ops: Vec<(Csr, SpectrumBounds)> = Vec::new();
+    for _ in 0..kernels {
+        ops.push(gapped_kernel(rng, n, density, (2 * k).min(n), 50.0));
+    }
+    let window = ops.iter().fold(
+        SpectrumBounds { lo: f64::INFINITY, hi: 0.0 },
+        |acc, (_, w)| SpectrumBounds { lo: acc.lo.min(w.lo), hi: acc.hi.max(w.hi) },
+    );
+    let cfg = GreedyConfig::new(window, k).with_block_width(width);
+    let mut seq_rounds = 0usize;
+    let mut solo: Vec<Vec<usize>> = Vec::new();
+    for (l, _) in &ops {
+        let (sel, stats) = greedy_map_stats(l, &cfg);
+        seq_rounds += stats.sweeps;
+        solo.push(sel);
+    }
+    let refs: Vec<&Csr> = ops.iter().map(|(l, _)| l).collect();
+    let (joint, joint_rounds) =
+        greedy_map_multi(&refs, &cfg, ecfg).expect("engine knobs validated at admission");
+    let mut identical = joint == solo;
+    // sanity: greedy_map and greedy_map_stats agree (same entry point)
+    identical &= refs
+        .iter()
+        .zip(&solo)
+        .all(|(l, sel)| greedy_map(l, &cfg) == *sel);
+    (seq_rounds, joint_rounds, identical)
+}
+
+pub fn run_one(
+    rng: &mut Rng,
+    n: usize,
+    density: f64,
+    chains: usize,
+    ecfg: EngineConfig,
+) -> EngineReport {
+    let (l, w) = crate::datasets::random_sparse_spd(rng, n, density, 0.05);
+    let dg_elements = 12usize.min(n / 2);
+    let (dg_seq, dg_joint, dg_ok) = dg_workload(rng, &l, w, dg_elements);
+
+    let kdpp_steps = 15usize;
+    let (kd_seq, kd_joint, kd_ok) =
+        kdpp_workload(rng, (n / 2).max(16), density * 2.0, chains.max(2), kdpp_steps, ecfg);
+
+    let gk = 3usize;
+    let (gr_seq, gr_joint, gr_ok) = greedy_workload(
+        rng,
+        (n / 2).max(24),
+        (density * 2.0).min(0.3),
+        gk,
+        6.min(n / 4).max(2),
+        ecfg.width,
+        ecfg,
+    );
+
+    EngineReport {
+        n,
+        dg_elements,
+        dg_sequential_rounds: dg_seq,
+        dg_joint_rounds: dg_joint,
+        dg_saved_frac: saved(dg_seq, dg_joint),
+        kdpp_chains: chains.max(2),
+        kdpp_steps,
+        kdpp_sequential_rounds: kd_seq,
+        kdpp_joint_rounds: kd_joint,
+        kdpp_saved_frac: saved(kd_seq, kd_joint),
+        greedy_kernels: gk,
+        greedy_sequential_rounds: gr_seq,
+        greedy_joint_rounds: gr_joint,
+        identical: dg_ok && kd_ok && gr_ok,
+    }
+}
+
+/// Sweep chain-pool sizes `chain_counts` on one problem size; the size
+/// shrinks with `dataset_scale` for session-budget (and CI smoke) runs.
+pub fn run(cfg: &RunConfig, chain_counts: &[usize]) -> Vec<EngineReport> {
+    let mut rng = Rng::new(cfg.seed ^ 0xE61);
+    let n = (800 / cfg.dataset_scale.max(1)).max(32);
+    let density = 0.08_f64.max(8.0 / (n as f64 * n as f64));
+    let ecfg = cfg.engine_config();
+    chain_counts
+        .iter()
+        .map(|&c| run_one(&mut rng, n, density, c.clamp(2, 16), ecfg))
+        .collect()
+}
+
+pub const CSV_HEADER: [&str; 13] = [
+    "n",
+    "dg_elements",
+    "dg_sequential_rounds",
+    "dg_joint_rounds",
+    "dg_saved_frac",
+    "kdpp_chains",
+    "kdpp_steps",
+    "kdpp_sequential_rounds",
+    "kdpp_joint_rounds",
+    "kdpp_saved_frac",
+    "greedy_sequential_rounds",
+    "greedy_joint_rounds",
+    "identical",
+];
+
+pub fn csv_rows(reports: &[EngineReport]) -> Vec<Vec<String>> {
+    reports
+        .iter()
+        .map(|r| {
+            vec![
+                r.n.to_string(),
+                r.dg_elements.to_string(),
+                r.dg_sequential_rounds.to_string(),
+                r.dg_joint_rounds.to_string(),
+                format!("{:.3}", r.dg_saved_frac),
+                r.kdpp_chains.to_string(),
+                r.kdpp_steps.to_string(),
+                r.kdpp_sequential_rounds.to_string(),
+                r.kdpp_joint_rounds.to_string(),
+                format!("{:.3}", r.kdpp_saved_frac),
+                r.greedy_sequential_rounds.to_string(),
+                r.greedy_joint_rounds.to_string(),
+                r.identical.to_string(),
+            ]
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn engine_workloads_are_identical_and_save_rounds() {
+        let mut rng = Rng::new(0xE611);
+        let rep = run_one(&mut rng, 48, 0.1, 3, EngineConfig::default());
+        assert!(rep.identical, "a joint workload diverged from sequential");
+        assert!(
+            rep.dg_joint_rounds < rep.dg_sequential_rounds,
+            "joint DG race must finish in fewer rounds ({} vs {})",
+            rep.dg_joint_rounds,
+            rep.dg_sequential_rounds
+        );
+        assert!(
+            rep.kdpp_joint_rounds < rep.kdpp_sequential_rounds,
+            "joint k-DPP pool must finish in fewer rounds ({} vs {})",
+            rep.kdpp_joint_rounds,
+            rep.kdpp_sequential_rounds
+        );
+    }
+
+    #[test]
+    fn scaled_run_produces_a_row_per_chain_count() {
+        let cfg = RunConfig { dataset_scale: 20, ..Default::default() };
+        let rows = run(&cfg, &[2, 3]);
+        assert_eq!(rows.len(), 2);
+        assert!(rows.iter().all(|r| r.identical));
+    }
+}

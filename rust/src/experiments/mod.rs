@@ -5,6 +5,7 @@
 //! `results/`.
 
 pub mod block;
+pub mod engine;
 pub mod fig1;
 pub mod fig2;
 pub mod race;

@@ -9,6 +9,8 @@
 //!   gauss-bif block  [--seed S] [--out DIR] [--scale K] [--ks k1,k2,...] [--block-width B]
 //!   gauss-bif race   [--seed S] [--out DIR] [--scale K] [--ks k1,k2,...] [--block-width B]
 //!   gauss-bif session [--seed S] [--out DIR] [--scale K] [--ks k1,k2,...]
+//!   gauss-bif engine [--seed S] [--out DIR] [--scale K] [--chains c1,c2,...]
+//!                    [--engine-lanes L] [--engine-ttl T] [--engine-workers W]
 //!   gauss-bif serve  [--artifacts DIR] [--requests N] [--workers W] [--block-width B]
 //!   gauss-bif info   [--artifacts DIR]
 //!
@@ -83,6 +85,25 @@ fn main() -> ExitCode {
         }
     }
 
+    // engine scheduling knobs, validated at admission with the typed
+    // error (ISSUE 5 satellite — mirrors the BatchPolicy rejection path)
+    if let Some(s) = flags.get("engine-lanes").and_then(|s| s.parse::<usize>().ok()) {
+        cfg.engine_lanes = s;
+    }
+    if let Some(s) = flags.get("engine-ttl").and_then(|s| s.parse::<usize>().ok()) {
+        cfg.engine_ttl_rounds = s;
+    }
+    if let Some(s) = flags.get("engine-workers").and_then(|s| s.parse::<usize>().ok()) {
+        cfg.engine_workers = s.clamp(1, 1 << 10);
+    }
+    if let Err(e) = gauss_bif::quadrature::engine::EngineConfig::validate_knobs(
+        cfg.engine_lanes,
+        cfg.engine_ttl_rounds,
+    ) {
+        eprintln!("invalid engine knobs: {e}\n{USAGE}");
+        return ExitCode::from(2);
+    }
+
     match cmd.as_str() {
         "fig1" => cmd_fig1(&cfg, &flags),
         "fig2" => cmd_fig2(&cfg, &flags),
@@ -91,6 +112,7 @@ fn main() -> ExitCode {
         "block" => cmd_block(&cfg, &flags),
         "race" => cmd_race(&cfg, &flags),
         "session" => cmd_session(&cfg, &flags),
+        "engine" => cmd_engine(&cfg, &flags),
         "serve" => cmd_serve(&cfg, &flags),
         "info" => cmd_info(&cfg),
         _ => {
@@ -100,10 +122,12 @@ fn main() -> ExitCode {
     }
 }
 
-const USAGE: &str = "usage: gauss-bif <fig1|fig2|table2|rates|block|race|session|serve|info> [flags]\n\
+const USAGE: &str = "usage: gauss-bif <fig1|fig2|table2|rates|block|race|session|engine|serve|info> [flags]\n\
   common flags: --seed S --out DIR --scale K --config cfg.json --artifacts DIR --block-width B\n\
                 --reorth full|none (§5.4 Lanczos reorthogonalization for block/serve runs)\n\
-                --race prune|exhaustive (candidate racing for greedy scoring; selections identical)";
+                --race prune|exhaustive (candidate racing for greedy scoring; selections identical)\n\
+                --engine-lanes L --engine-ttl T --engine-workers W (multi-operator engine knobs;\n\
+                0/absurd values are rejected at admission)";
 
 fn parse_args(args: &[String]) -> Option<(String, HashMap<String, String>)> {
     let mut it = args.iter();
@@ -392,6 +416,66 @@ fn cmd_session(cfg: &RunConfig, flags: &HashMap<String, String>) -> ExitCode {
         "session.csv",
         &session::CSV_HEADER,
         &session::csv_rows(&reports),
+    ) {
+        Ok(p) => println!("wrote {}", p.display()),
+        Err(e) => {
+            eprintln!("write failed: {e}");
+            return ExitCode::FAILURE;
+        }
+    }
+    ExitCode::SUCCESS
+}
+
+fn cmd_engine(cfg: &RunConfig, flags: &HashMap<String, String>) -> ExitCode {
+    use gauss_bif::experiments::engine;
+
+    let chains: Vec<usize> = flags
+        .get("chains")
+        .map(|s| parse_list(s))
+        .unwrap_or_else(|| vec![2, 4]);
+    let reports = engine::run(cfg, &chains);
+    let mut table = gauss_bif::util::bench::Table::new(&[
+        "n", "dg seq", "dg joint", "saved", "chains", "kdpp seq", "kdpp joint", "saved",
+        "greedy seq", "greedy joint",
+    ]);
+    let mut identical = true;
+    let mut dg_saved = false;
+    let mut kdpp_saved = false;
+    for r in &reports {
+        identical &= r.identical;
+        dg_saved |= r.dg_joint_rounds < r.dg_sequential_rounds;
+        kdpp_saved |= r.kdpp_joint_rounds < r.kdpp_sequential_rounds;
+        table.row(vec![
+            r.n.to_string(),
+            r.dg_sequential_rounds.to_string(),
+            r.dg_joint_rounds.to_string(),
+            format!("{:.0}%", 100.0 * r.dg_saved_frac),
+            r.kdpp_chains.to_string(),
+            r.kdpp_sequential_rounds.to_string(),
+            r.kdpp_joint_rounds.to_string(),
+            format!("{:.0}%", 100.0 * r.kdpp_saved_frac),
+            r.greedy_sequential_rounds.to_string(),
+            r.greedy_joint_rounds.to_string(),
+        ]);
+    }
+    println!("{}", table.render());
+    if !identical {
+        eprintln!("a joint engine workload diverged from its sequential baseline");
+        return ExitCode::FAILURE;
+    }
+    if !dg_saved {
+        eprintln!("joint scheduling saved no rounds on the double-greedy race");
+        return ExitCode::FAILURE;
+    }
+    if !kdpp_saved {
+        eprintln!("joint scheduling saved no rounds on the k-DPP chain pool");
+        return ExitCode::FAILURE;
+    }
+    match experiments::write_csv(
+        &cfg.out_dir,
+        "engine.csv",
+        &engine::CSV_HEADER,
+        &engine::csv_rows(&reports),
     ) {
         Ok(p) => println!("wrote {}", p.display()),
         Err(e) => {

@@ -119,6 +119,9 @@ pub struct ServiceMetrics {
     /// coalesced shared-operator session runs on the native path (mixed
     /// threshold/argmax groups compiled onto one panel)
     pub coalesced_blocks: Counter,
+    /// cross-operator engine drains: native groups spanning ≥ 2 distinct
+    /// operators, served jointly by the multi-operator streaming engine
+    pub engine_drains: Counter,
     /// argmax batches served natively (lone races and session members)
     pub races: Counter,
     pub latency_ns: std::sync::Mutex<Histogram>,
@@ -175,11 +178,12 @@ impl ServiceMetrics {
         let bs = self.batch_size.lock().unwrap();
         let it = self.judge_iters.lock().unwrap();
         format!(
-            "requests={} batches={} native={} coalesced={} races={} | latency p50={} p95={} p99={} | batch p50={:.1} | iters p50={:.0} p95={:.0}",
+            "requests={} batches={} native={} coalesced={} engine={} races={} | latency p50={} p95={} p99={} | batch p50={:.1} | iters p50={:.0} p95={:.0}",
             self.requests.get(),
             self.batches.get(),
             self.native_fallbacks.get(),
             self.coalesced_blocks.get(),
+            self.engine_drains.get(),
             self.races.get(),
             crate::util::bench::Stats::fmt_time(lat.percentile(0.50)),
             crate::util::bench::Stats::fmt_time(lat.percentile(0.95)),

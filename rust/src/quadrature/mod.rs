@@ -5,13 +5,17 @@
 //! that batches many such runs over one shared operator, the unified
 //! query planner ([`query`] — a [`Session`] compiles an arbitrary mix of
 //! estimate/threshold/compare/argmax queries onto shared panels), the
-//! racing scheduler ([`race`], now a thin wrapper over the planner), the
-//! retrospective judges built on them, conjugate gradients (both a
-//! baseline and the theory cross-check of Thm. 12), and Jacobi
-//! preconditioning (§5.4).
+//! multi-operator streaming engine ([`engine`] — an always-on scheduler
+//! running every live session jointly: streaming submission, a global
+//! lane budget with bit-identical query suspend/resume, TTL eviction,
+//! and parallel panel sweeps), the racing scheduler ([`race`], now a
+//! thin wrapper over the planner), the retrospective judges built on
+//! them, conjugate gradients (both a baseline and the theory cross-check
+//! of Thm. 12), and Jacobi preconditioning (§5.4).
 
 pub mod block;
 pub mod cg;
+pub mod engine;
 pub mod gql;
 pub mod judge;
 pub mod precond;
@@ -23,6 +27,9 @@ pub use block::{
     block_solve, run_scalar, BlockGql, BlockResult, RetireEvent, RetireReason, StopRule,
 };
 pub use cg::{cg_solve, CgResult};
+pub use engine::{
+    race_dg_joint, DgSideSpec, Engine, EngineConfig, EngineConfigError, EngineStats, OpKey,
+};
 pub use gql::{bif_bounds, Bounds, Gql, GqlOptions, Reorth};
 pub use judge::{
     judge_dg, judge_ratio, judge_ratio_block, judge_ratio_policy, judge_threshold,

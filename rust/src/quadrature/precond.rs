@@ -12,8 +12,10 @@ pub struct JacobiPrecond<'a> {
     op: &'a dyn SymOp,
     /// d_scale[i] = 1/sqrt(diag[i])
     d_scale: Vec<f64>,
-    /// scratch for the inner matvec
-    scratch: std::cell::RefCell<(Vec<f64>, Vec<f64>)>,
+    /// scratch for the inner matvec; a `Mutex` (not `RefCell`) so the
+    /// wrapper satisfies `SymOp: Sync` — uncontended in every current
+    /// caller, so the lock is a dozen nanoseconds against an O(nnz) matvec
+    scratch: std::sync::Mutex<(Vec<f64>, Vec<f64>)>,
 }
 
 impl<'a> JacobiPrecond<'a> {
@@ -29,7 +31,7 @@ impl<'a> JacobiPrecond<'a> {
         Some(JacobiPrecond {
             op,
             d_scale,
-            scratch: std::cell::RefCell::new((vec![0.0; n], vec![0.0; n])),
+            scratch: std::sync::Mutex::new((vec![0.0; n], vec![0.0; n])),
         })
     }
 
@@ -46,7 +48,7 @@ impl SymOp for JacobiPrecond<'_> {
     }
 
     fn matvec(&self, x: &[f64], y: &mut [f64]) {
-        let mut guard = self.scratch.borrow_mut();
+        let mut guard = self.scratch.lock().expect("scratch lock poisoned");
         let (sx, sy) = &mut *guard;
         for ((t, &xi), &s) in sx.iter_mut().zip(x).zip(&self.d_scale) {
             *t = xi * s;

@@ -220,6 +220,10 @@ enum Spec {
 struct QueryState {
     spec: Spec,
     answer: Option<Answer>,
+    /// Parked by [`Session::suspend_query`]: every lane the query still
+    /// owns sits suspended inside the engine and resolution is deferred
+    /// until [`Session::resume_query`].
+    parked: bool,
 }
 
 /// Value bracket of an arm given its BIF bounds: `value = offset +
@@ -350,7 +354,7 @@ impl<'a> Session<'a> {
                 }
             }
         };
-        self.queries.push(QueryState { spec, answer: None });
+        self.queries.push(QueryState { spec, answer: None, parked: false });
         self.unresolved += 1;
         // zero-vector lanes resolve inside the engine at push; absorb them
         // and resolve the trivially-decidable cases (both-zero compares,
@@ -404,6 +408,126 @@ impl<'a> Session<'a> {
     /// decided-query lane retirements).
     pub fn retired(&self) -> &[RetireEvent] {
         self.eng.retired()
+    }
+
+    /// Queries still without an answer.
+    pub fn unresolved(&self) -> usize {
+        self.unresolved
+    }
+
+    /// True while some lane is racing in the panel or waiting in the
+    /// queue. Suspended lanes (parked queries) do **not** count — a
+    /// session whose every unresolved query is parked reports no work.
+    pub fn has_work(&self) -> bool {
+        self.eng.has_work()
+    }
+
+    /// Lanes of `qid` the engine still owns (racing, queued, or
+    /// suspended), ascending by lane id. Empty once the query resolved.
+    fn live_lanes(&self, qid: usize) -> Vec<usize> {
+        if self.queries[qid].answer.is_some() {
+            return Vec::new();
+        }
+        match &self.queries[qid].spec {
+            Spec::Estimate { lane } | Spec::Threshold { lane, .. } => vec![*lane],
+            Spec::Compare { lane_u, lane_v, live_u, live_v, .. } => {
+                let mut v = Vec::new();
+                if *live_u {
+                    v.push(*lane_u);
+                }
+                if *live_v {
+                    v.push(*lane_v);
+                }
+                v
+            }
+            Spec::Argmax { arms, .. } => arms
+                .iter()
+                .filter(|a| matches!(a.status, ArmStatus::Racing))
+                .map(|a| a.lane)
+                .collect(),
+        }
+    }
+
+    /// Panel lanes query `qid` still needs (0 once resolved): the
+    /// accounting unit of the multi-operator engine's global lane budget
+    /// ([`crate::quadrature::engine`]).
+    pub fn lane_demand(&self, qid: usize) -> usize {
+        self.live_lanes(qid).len()
+    }
+
+    /// True while `qid` is parked by [`Session::suspend_query`].
+    pub fn is_parked(&self, qid: usize) -> bool {
+        self.queries[qid].parked
+    }
+
+    /// Park a whole query: every lane it still owns leaves the panel via
+    /// [`BlockGql::suspend`] (full mid-run state preserved) and resolution
+    /// is deferred, so a parked query neither consumes sweeps nor
+    /// decides. [`Session::resume_query`] re-queues the lanes in push
+    /// order and the query continues **bit-identically** — per-lane op
+    /// sequences are untouched (the engine's suspend contract) and the
+    /// query's own resolution rounds see exactly the bracket sequence an
+    /// uninterrupted run would have seen, just spread over more session
+    /// steps. Returns `false` for resolved or already-parked queries.
+    ///
+    /// This is the [`crate::quadrature::engine`] lane-budget hook; a
+    /// session with parked queries must be driven by [`Session::step`]
+    /// (not [`Session::run`], which expects every query to stay live).
+    pub fn suspend_query(&mut self, qid: usize) -> bool {
+        if self.queries[qid].answer.is_some() || self.queries[qid].parked {
+            return false;
+        }
+        for lane in self.live_lanes(qid) {
+            let ok = self.eng.suspend(lane);
+            debug_assert!(ok, "live lane {lane} of query {qid} must be suspendable");
+        }
+        self.queries[qid].parked = true;
+        true
+    }
+
+    /// Un-park a query suspended by [`Session::suspend_query`]: its lanes
+    /// re-enter the pending queue (push order preserved) and are admitted
+    /// at the next panel round. Returns `false` if `qid` is not parked.
+    pub fn resume_query(&mut self, qid: usize) -> bool {
+        if !self.queries[qid].parked {
+            return false;
+        }
+        for lane in self.live_lanes(qid) {
+            let ok = self.eng.resume(lane);
+            debug_assert!(ok, "parked lane {lane} of query {qid} must resume");
+        }
+        self.queries[qid].parked = false;
+        true
+    }
+
+    /// Scheduler hook: resolve an **estimate** query right now with its
+    /// latest bracket snapshot, retiring its lane. Cross-operator
+    /// consumers ([`crate::quadrature::engine::race_dg_joint`]) decide
+    /// from mid-flight brackets and stop refining the moment the
+    /// surrounding decision lands — without this the abandoned lane would
+    /// keep sweeping to exhaustion. Returns `false` for non-estimate
+    /// kinds, already-resolved queries, or an estimate that has not
+    /// produced a bracket yet.
+    pub fn cancel(&mut self, qid: usize) -> bool {
+        if self.queries[qid].answer.is_some() {
+            return false;
+        }
+        let lane = match &self.queries[qid].spec {
+            Spec::Estimate { lane } => *lane,
+            _ => return false,
+        };
+        let Some(b) = self.latest[lane] else {
+            return false;
+        };
+        if self.queries[qid].parked {
+            // suspended lanes live outside the engine's retire scope;
+            // re-queue them first so the eviction below can find them
+            self.resume_query(qid);
+        }
+        let ok = self.eng.retire(lane, RetireReason::Decided);
+        debug_assert!(ok, "unresolved estimate lane must be retirable");
+        self.resolve(qid, Answer::Estimate { bounds: b, iters: b.iter });
+        true
     }
 
     /// The dominance safety margin currently in force: the fixed floor
@@ -521,10 +645,12 @@ impl<'a> Session<'a> {
         }
     }
 
-    /// Apply each unresolved multi-lane query's bound logic.
+    /// Apply each unresolved multi-lane query's bound logic. Parked
+    /// queries are skipped: their brackets cannot have moved, and deciding
+    /// one would try to retire suspended lanes the engine no longer owns.
     fn resolve_round(&mut self) {
         for qid in 0..self.queries.len() {
-            if self.queries[qid].answer.is_some() {
+            if self.queries[qid].answer.is_some() || self.queries[qid].parked {
                 continue;
             }
             match self.queries[qid].spec {

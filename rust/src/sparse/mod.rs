@@ -41,7 +41,14 @@ pub use submatrix::SubmatrixView;
 
 /// A symmetric linear operator: the only interface the quadrature core
 /// needs. `matvec` must compute `y = A x` with `A` symmetric.
-pub trait SymOp {
+///
+/// `Sync` is a supertrait so `&dyn SymOp` handles can cross threads: the
+/// multi-operator engine ([`crate::quadrature::engine`]) sweeps several
+/// operators' panels from a pool of workers, each holding a shared
+/// reference to its operator. Every implementor in the repo (CSR, dense,
+/// submatrix views, the Jacobi preconditioner) is plain immutable data
+/// during a matvec, so the bound costs nothing.
+pub trait SymOp: Sync {
     fn dim(&self) -> usize;
     fn matvec(&self, x: &[f64], y: &mut [f64]);
     /// The diagonal of the operator (used by Jacobi preconditioning and

@@ -128,6 +128,43 @@ fn invalid_race_flag_exits_2() {
 }
 
 #[test]
+fn engine_sweep_saves_rounds_and_writes_csv() {
+    let out = tmp_out("engine");
+    // --scale shrinks every workload; the command exits nonzero if a
+    // joint schedule diverges from sequential or saves no rounds
+    let o = bin()
+        .args(["engine", "--out", out.to_str().unwrap(), "--scale", "40", "--chains", "2"])
+        .output()
+        .expect("run engine");
+    assert!(o.status.success(), "stderr: {}", String::from_utf8_lossy(&o.stderr));
+    let csv = std::fs::read_to_string(out.join("engine.csv")).expect("csv");
+    assert!(csv.starts_with("n,dg_elements,dg_sequential_rounds"));
+    assert_eq!(csv.lines().count(), 1 + 1, "one row per chain count");
+    for line in csv.lines().skip(1) {
+        let cols: Vec<&str> = line.split(',').collect();
+        assert_eq!(cols[12], "true", "joint workloads must stay identical: {line}");
+    }
+}
+
+#[test]
+fn invalid_engine_knobs_exit_2() {
+    // ISSUE 5 satellite: 0/absurd engine knobs are rejected at admission
+    // with the typed error's message
+    let o = bin()
+        .args(["engine", "--engine-lanes", "0"])
+        .output()
+        .expect("run");
+    assert_eq!(o.status.code(), Some(2));
+    assert!(String::from_utf8_lossy(&o.stderr).contains("engine_lanes"));
+    let o = bin()
+        .args(["engine", "--engine-ttl", "0"])
+        .output()
+        .expect("run");
+    assert_eq!(o.status.code(), Some(2));
+    assert!(String::from_utf8_lossy(&o.stderr).contains("engine_ttl_rounds"));
+}
+
+#[test]
 fn config_file_overrides_defaults() {
     let out = tmp_out("cfg");
     std::fs::create_dir_all(&out).unwrap();

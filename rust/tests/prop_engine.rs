@@ -1,0 +1,387 @@
+//! Multi-operator streaming-engine invariants (ISSUE 5): the engine is a
+//! **scheduler, not a numeric path** — its answers must be bit-identical
+//! to sequential per-operator `Session` runs, in decisions, estimates,
+//! and per-lane iteration counts. Asserted here across:
+//!
+//! * mixed query kinds (threshold + compare + estimate + argmax) over
+//!   several operators at once,
+//! * `Reorth::Full` on ill-conditioned kernels (tiny ridge, the §5.4
+//!   regime),
+//! * streaming submission landing mid-flight,
+//! * query-level suspend/resume under a global lane budget of 1,
+//! * parallel sweeps with ≥ 2 workers.
+
+use gauss_bif::datasets::random_sparse_spd;
+use gauss_bif::quadrature::block::{run_scalar, StopRule};
+use gauss_bif::quadrature::engine::{Engine, EngineConfig, OpKey};
+use gauss_bif::quadrature::query::{Answer, Query, QueryArm, Session};
+use gauss_bif::quadrature::race::RacePolicy;
+use gauss_bif::quadrature::{Bounds, GqlOptions, Reorth};
+use gauss_bif::sparse::Csr;
+use gauss_bif::util::prop::forall;
+use gauss_bif::util::rng::Rng;
+
+fn randvec(rng: &mut Rng, n: usize) -> Vec<f64> {
+    (0..n).map(|_| rng.normal()).collect()
+}
+
+/// A mixed per-operator workload: 2 thresholds, 1 compare, 1 estimate,
+/// and a 3-arm argmax — 8 lanes total, so a width-8 session admits every
+/// lane of an active query at once (the lockstep shape the strict
+/// iteration-count identity is stated for).
+const PER_OP_LANES: usize = 8;
+
+fn mixed_queries(rng: &mut Rng, l: &Csr, opts: GqlOptions) -> Vec<Query> {
+    let n = l.n;
+    // a cheap 2-iteration bracket midpoint puts thresholds in the right
+    // decade without an exact solve
+    let rough = |u: &[f64]| run_scalar(l, u, opts, StopRule::Iters(2), false).bounds.mid();
+    let mut qs = Vec::new();
+    for i in 0..2 {
+        let u = randvec(rng, n);
+        let t = rough(&u) * (0.5 + 0.3 * i as f64);
+        qs.push(Query::Threshold { u, t });
+    }
+    let (u, v) = (randvec(rng, n), randvec(rng, n));
+    let t = 0.5 * rough(&v) - rough(&u) + if rng.bool(0.5) { 0.3 } else { -0.3 };
+    qs.push(Query::Compare { u, v, t, p: 0.5 });
+    qs.push(Query::Estimate { u: randvec(rng, n), stop: StopRule::GapRel(1e-8) });
+    let arms = (0..3)
+        .map(|_| QueryArm {
+            u: randvec(rng, n),
+            stop: StopRule::GapRel(1e-10),
+            offset: 2.0 + rng.f64() * 3.0,
+            scale: -1.0,
+        })
+        .collect();
+    qs.push(Query::Argmax { arms, floor: None });
+    qs
+}
+
+fn assert_bounds_eq(x: &Bounds, y: &Bounds, ctx: &str) {
+    assert_eq!(x.iter, y.iter, "{ctx}: bounds iter");
+    assert_eq!(x.gauss.to_bits(), y.gauss.to_bits(), "{ctx}: gauss bits");
+    assert_eq!(x.radau_lower.to_bits(), y.radau_lower.to_bits(), "{ctx}: radau_lower bits");
+    assert_eq!(x.radau_upper.to_bits(), y.radau_upper.to_bits(), "{ctx}: radau_upper bits");
+    assert_eq!(x.lobatto.to_bits(), y.lobatto.to_bits(), "{ctx}: lobatto bits");
+    assert_eq!(x.exact, y.exact, "{ctx}: exact flag");
+}
+
+/// Strict answer identity: decisions, outcomes, estimates (bitwise), and
+/// per-lane iteration counts. Argmax sweep counts are deliberately
+/// excluded — a session's sweep counter keeps running while one of its
+/// queries is parked, so it measures scheduling, not numerics; the
+/// per-arm eviction iterations (`pruned_at`) are the lane-level facts.
+fn assert_same_answer(a: &Answer, b: &Answer, ctx: &str) {
+    match (a, b) {
+        (
+            Answer::Estimate { bounds: x, iters: xi },
+            Answer::Estimate { bounds: y, iters: yi },
+        ) => {
+            assert_eq!(xi, yi, "{ctx}: estimate iters");
+            assert_bounds_eq(x, y, ctx);
+        }
+        (
+            Answer::Threshold { decision: xd, stats: xs },
+            Answer::Threshold { decision: yd, stats: ys },
+        ) => {
+            assert_eq!(xd, yd, "{ctx}: threshold decision");
+            assert_eq!(xs.iters, ys.iters, "{ctx}: threshold iters");
+            assert_eq!(xs.outcome, ys.outcome, "{ctx}: threshold outcome");
+        }
+        (
+            Answer::Compare { decision: xd, stats: xs },
+            Answer::Compare { decision: yd, stats: ys },
+        ) => {
+            assert_eq!(xd, yd, "{ctx}: compare decision");
+            assert_eq!(xs.iters, ys.iters, "{ctx}: compare iters");
+            assert_eq!(xs.outcome, ys.outcome, "{ctx}: compare outcome");
+        }
+        (
+            Answer::Argmax { winner: xw, estimates: xe, stats: xs },
+            Answer::Argmax { winner: yw, estimates: ye, stats: ys },
+        ) => {
+            assert_eq!(xw, yw, "{ctx}: argmax winner");
+            assert_eq!(xe.len(), ye.len(), "{ctx}: estimate count");
+            for (i, (ex, ey)) in xe.iter().zip(ye).enumerate() {
+                assert_eq!(
+                    ex.map(f64::to_bits),
+                    ey.map(f64::to_bits),
+                    "{ctx}: arm {i} estimate bits"
+                );
+            }
+            assert_eq!(xs.pruned_at, ys.pruned_at, "{ctx}: per-arm eviction iters");
+            assert_eq!(xs.decided_early, ys.decided_early, "{ctx}: early crowning");
+        }
+        _ => panic!("{ctx}: answer kinds differ"),
+    }
+}
+
+/// The sequential reference: one `Session` per operator, same width, same
+/// submission order, drained to completion on its own.
+fn sequential_answers(
+    ops: &[(Csr, GqlOptions)],
+    queries: &[Vec<Query>],
+) -> Vec<Vec<Answer>> {
+    ops.iter()
+        .zip(queries)
+        .map(|((l, opts), qs)| {
+            let mut s = Session::new(l, *opts, PER_OP_LANES, RacePolicy::Prune);
+            for q in qs {
+                s.submit(q.clone());
+            }
+            s.run()
+        })
+        .collect()
+}
+
+/// Drive the same workload through one engine (round-robin submission —
+/// per-operator order is what identity is stated over) and group the
+/// answers back per operator.
+fn engine_answers(
+    ops: &[(Csr, GqlOptions)],
+    queries: &[Vec<Query>],
+    ecfg: EngineConfig,
+) -> Vec<Vec<Answer>> {
+    let mut eng = Engine::new(ecfg).expect("test engine config is valid");
+    let mut tickets: Vec<Vec<usize>> = vec![Vec::new(); ops.len()];
+    let most = queries.iter().map(Vec::len).max().unwrap_or(0);
+    for qi in 0..most {
+        for (k, qs) in queries.iter().enumerate() {
+            if let Some(q) = qs.get(qi) {
+                let (l, opts) = &ops[k];
+                tickets[k].push(eng.submit(k as OpKey, l, *opts, q.clone()));
+            }
+        }
+    }
+    eng.drain();
+    tickets
+        .iter()
+        .map(|ts| {
+            ts.iter()
+                .map(|&t| eng.answer(t).expect("engine drained").clone())
+                .collect()
+        })
+        .collect()
+}
+
+fn check_identity(want: &[Vec<Answer>], got: &[Vec<Answer>], ctx: &str) {
+    assert_eq!(want.len(), got.len(), "{ctx}: operator count");
+    for (k, (w, g)) in want.iter().zip(got).enumerate() {
+        assert_eq!(w.len(), g.len(), "{ctx}: op {k} query count");
+        for (qi, (aw, ag)) in w.iter().zip(g).enumerate() {
+            assert_same_answer(aw, ag, &format!("{ctx}: op {k} query {qi}"));
+        }
+    }
+}
+
+fn build_ops(rng: &mut Rng, count: usize, ridge: f64) -> Vec<(Csr, GqlOptions)> {
+    (0..count)
+        .map(|_| {
+            let n = 14 + rng.below(18);
+            let (l, w) = random_sparse_spd(rng, n, 0.3, ridge);
+            (l, GqlOptions::new(w.lo, w.hi))
+        })
+        .collect()
+}
+
+#[test]
+fn engine_answers_are_bit_identical_to_sequential_sessions() {
+    forall(8, 0xE9E1, |rng| {
+        let ops = build_ops(rng, 2 + rng.below(3), 0.05);
+        let queries: Vec<Vec<Query>> = ops
+            .iter()
+            .map(|(l, opts)| mixed_queries(rng, l, *opts))
+            .collect();
+        let want = sequential_answers(&ops, &queries);
+        let ecfg = EngineConfig::default().with_width(PER_OP_LANES);
+        check_identity(&want, &engine_answers(&ops, &queries, ecfg), "joint");
+    });
+}
+
+#[test]
+fn engine_identity_holds_under_full_reorth_on_ill_conditioned_kernels() {
+    // tiny ridge ⇒ κ ~ 1e3–1e4: §5.4 territory, where plain Lanczos loses
+    // bound validity — reorthogonalized lanes must stay bit-identical
+    // through the joint scheduler too
+    forall(4, 0xE9E2, |rng| {
+        let ops: Vec<(Csr, GqlOptions)> = build_ops(rng, 2, 1e-4)
+            .into_iter()
+            .map(|(l, opts)| (l, opts.with_reorth(Reorth::Full)))
+            .collect();
+        let queries: Vec<Vec<Query>> = ops
+            .iter()
+            .map(|(l, opts)| mixed_queries(rng, l, *opts))
+            .collect();
+        let want = sequential_answers(&ops, &queries);
+        let ecfg = EngineConfig::default().with_width(PER_OP_LANES);
+        check_identity(&want, &engine_answers(&ops, &queries, ecfg), "reorth");
+    });
+}
+
+#[test]
+fn streaming_submission_lands_mid_flight_bit_identically() {
+    // half the queries enter up front, the rest are submitted after three
+    // joint rounds; the reference drives each per-operator session with
+    // the *same* two-phase schedule, so every state transition must match
+    forall(6, 0xE9E3, |rng| {
+        let ops = build_ops(rng, 2 + rng.below(2), 0.05);
+        let queries: Vec<Vec<Query>> = ops
+            .iter()
+            .map(|(l, opts)| mixed_queries(rng, l, *opts))
+            .collect();
+        let split = 2usize; // thresholds first; compare/estimate/argmax stream in
+        let presteps = 3usize;
+
+        let want: Vec<Vec<Answer>> = ops
+            .iter()
+            .zip(&queries)
+            .map(|((l, opts), qs)| {
+                let mut s = Session::new(l, *opts, PER_OP_LANES, RacePolicy::Prune);
+                for q in &qs[..split] {
+                    s.submit(q.clone());
+                }
+                for _ in 0..presteps {
+                    s.step();
+                }
+                for q in &qs[split..] {
+                    s.submit(q.clone());
+                }
+                s.run()
+            })
+            .collect();
+
+        let ecfg = EngineConfig::default().with_width(PER_OP_LANES);
+        let mut eng = Engine::new(ecfg).expect("test engine config is valid");
+        let mut tickets: Vec<Vec<usize>> = vec![Vec::new(); ops.len()];
+        for (k, qs) in queries.iter().enumerate() {
+            for q in &qs[..split] {
+                tickets[k].push(eng.submit(k as OpKey, &ops[k].0, ops[k].1, q.clone()));
+            }
+        }
+        for _ in 0..presteps {
+            eng.step_round();
+        }
+        for (k, qs) in queries.iter().enumerate() {
+            for q in &qs[split..] {
+                tickets[k].push(eng.submit(k as OpKey, &ops[k].0, ops[k].1, q.clone()));
+            }
+        }
+        eng.drain();
+        let got: Vec<Vec<Answer>> = tickets
+            .iter()
+            .map(|ts| {
+                ts.iter()
+                    .map(|&t| eng.answer(t).expect("engine drained").clone())
+                    .collect()
+            })
+            .collect();
+        check_identity(&want, &got, "streaming");
+    });
+}
+
+#[test]
+fn suspend_resume_under_a_lane_budget_of_one_is_bit_identical() {
+    // lanes = 1 forces the engine to park every query behind the
+    // head-of-line one and resume them later; answers must not move a bit
+    // relative to unconstrained sequential sessions
+    forall(6, 0xE9E4, |rng| {
+        let ops = build_ops(rng, 2, 0.05);
+        let queries: Vec<Vec<Query>> = ops
+            .iter()
+            .map(|(l, opts)| mixed_queries(rng, l, *opts))
+            .collect();
+        let want = sequential_answers(&ops, &queries);
+        let ecfg = EngineConfig::default().with_width(PER_OP_LANES).with_lanes(1);
+        let mut eng = Engine::new(ecfg).expect("test engine config is valid");
+        let mut tickets: Vec<Vec<usize>> = vec![Vec::new(); ops.len()];
+        for (k, qs) in queries.iter().enumerate() {
+            for q in qs {
+                tickets[k].push(eng.submit(k as OpKey, &ops[k].0, ops[k].1, q.clone()));
+            }
+        }
+        eng.drain();
+        let st = eng.stats();
+        assert!(st.parks > 0, "budget 1 must park queries");
+        assert!(st.resumes > 0, "parked queries must resume");
+        // the head-of-line query runs whole, so the admitted demand never
+        // exceeds the largest single query (the 3-arm argmax)
+        assert!(st.peak_live_lanes <= 3, "budget 1 admitted {} lanes", st.peak_live_lanes);
+        let got: Vec<Vec<Answer>> = tickets
+            .iter()
+            .map(|ts| {
+                ts.iter()
+                    .map(|&t| eng.answer(t).expect("engine drained").clone())
+                    .collect()
+            })
+            .collect();
+        check_identity(&want, &got, "budget-1");
+    });
+}
+
+#[test]
+fn parallel_workers_preserve_bit_identity_on_mixed_workloads() {
+    // the acceptance bar asks for ≥ 2 parallel workers; sweep 2 and 4
+    forall(4, 0xE9E5, |rng| {
+        let ops = build_ops(rng, 3 + rng.below(2), 0.05);
+        let queries: Vec<Vec<Query>> = ops
+            .iter()
+            .map(|(l, opts)| mixed_queries(rng, l, *opts))
+            .collect();
+        let want = sequential_answers(&ops, &queries);
+        for workers in [2usize, 4] {
+            let ecfg = EngineConfig::default()
+                .with_width(PER_OP_LANES)
+                .with_workers(workers);
+            check_identity(
+                &want,
+                &engine_answers(&ops, &queries, ecfg),
+                &format!("{workers} workers"),
+            );
+        }
+    });
+}
+
+#[test]
+fn streaming_after_an_operator_went_idle_reuses_or_respins_sessions() {
+    // an engine kept alive across bursts: drain one burst, let the TTL
+    // evict the idle session, submit a second burst under the same key —
+    // answers must still match fresh sequential sessions
+    let mut rng = Rng::new(0xE9E6);
+    let ops = build_ops(&mut rng, 2, 0.05);
+    let ecfg = EngineConfig::default().with_width(PER_OP_LANES).with_ttl_rounds(1);
+    let mut eng = Engine::new(ecfg).expect("test engine config is valid");
+    for burst in 0..3 {
+        // thresholds/compares/estimates only: a session reused across
+        // bursts keeps its adaptive prune-margin state, so argmax queries
+        // are excluded here — the reference would start from a fresh
+        // margin (argmax identity across scheduling is covered by the
+        // single-burst tests above)
+        let queries: Vec<Vec<Query>> = ops
+            .iter()
+            .map(|(l, opts)| {
+                let mut qs = mixed_queries(&mut rng, l, *opts);
+                qs.truncate(4); // drop the argmax (last entry)
+                qs
+            })
+            .collect();
+        let want = sequential_answers(&ops, &queries);
+        let mut tickets: Vec<Vec<usize>> = vec![Vec::new(); ops.len()];
+        for (k, qs) in queries.iter().enumerate() {
+            for q in qs {
+                tickets[k].push(eng.submit(k as OpKey, &ops[k].0, ops[k].1, q.clone()));
+            }
+        }
+        eng.drain();
+        let got: Vec<Vec<Answer>> = tickets
+            .iter()
+            .map(|ts| {
+                ts.iter()
+                    .map(|&t| eng.answer(t).expect("engine drained").clone())
+                    .collect()
+            })
+            .collect();
+        check_identity(&want, &got, &format!("burst {burst}"));
+    }
+    assert!(eng.stats().sessions_spun >= 2, "sessions spin up lazily per key");
+}
