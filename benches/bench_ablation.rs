@@ -18,7 +18,7 @@ use gauss_bif::quadrature::{
     block_solve, judge_ratio_policy, judge_threshold_src, run_scalar, BoundSource, Gql,
     GqlOptions, JacobiPrecond, RefinePolicy, Reorth, StopRule,
 };
-use gauss_bif::util::bench::{Bencher, Table};
+use gauss_bif::util::bench::{write_stats_json, Bencher, Stats, Table};
 use gauss_bif::util::rng::Rng;
 
 fn main() {
@@ -175,6 +175,7 @@ fn main() {
     let mut rng3 = Rng::new(0xAB5);
     let (l, w3) = random_sparse_spd(&mut rng3, 700, 5e-3, 1e-2);
     let mut table = Table::new(&["strategy", "ms/step"]);
+    let mut extra: Vec<Stats> = Vec::new();
     for (name, strategy, steps) in [
         ("exact (paper baseline)", BifStrategy::Exact, 4usize),
         ("incremental inverse", BifStrategy::Incremental, 40),
@@ -189,7 +190,15 @@ fn main() {
         let t0 = std::time::Instant::now();
         s.run(steps, &mut r);
         let per = t0.elapsed().as_secs_f64() / steps as f64;
+        extra.push(Stats::single(&format!("dpp_step {name}"), per * 1e9));
         table.row(vec![name.into(), format!("{:.3}", per * 1e3)]);
     }
     println!("{}", table.render());
+
+    let mut all = b.results().to_vec();
+    all.extend(extra);
+    match write_stats_json("ablation", &all) {
+        Ok(p) => println!("perf trajectory: {}", p.display()),
+        Err(e) => eprintln!("BENCH_ablation.json not written: {e}"),
+    }
 }

@@ -77,4 +77,9 @@ fn main() {
         ]);
     }
     println!("\n{}", table.render());
+
+    match b.write_json("block") {
+        Ok(p) => println!("perf trajectory: {}", p.display()),
+        Err(e) => eprintln!("BENCH_block.json not written: {e}"),
+    }
 }

@@ -129,4 +129,9 @@ fn main() {
         ]);
     }
     println!("\n{}", table.render());
+
+    match b.write_json("engine") {
+        Ok(p) => println!("perf trajectory: {}", p.display()),
+        Err(e) => eprintln!("BENCH_engine.json not written: {e}"),
+    }
 }

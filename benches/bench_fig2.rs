@@ -9,7 +9,7 @@
 
 use gauss_bif::config::RunConfig;
 use gauss_bif::experiments::fig2::{self, Fig2Budget};
-use gauss_bif::util::bench::{fmt_sci, Table};
+use gauss_bif::util::bench::{fmt_sci, write_stats_json, Stats, Table};
 
 fn main() {
     let scale: usize = std::env::var("GAUSS_BIF_SCALE")
@@ -54,5 +54,18 @@ fn main() {
         println!(
             "shape[{algo}]: quadrature wins at every density: {all_win}; speedup(sparsest)/speedup(densest) = {sparse_vs_dense:.1} (paper: > 1)"
         );
+    }
+
+    // one end-to-end timing per (algo, density) cell — single-sample
+    // stats, but enough to chart the perf trajectory across commits
+    let stats: Vec<Stats> = rows
+        .iter()
+        .map(|r| {
+            Stats::single(&format!("fig2 {} d={:.0e} gauss s/step", r.algo, r.density), r.gauss_s * 1e9)
+        })
+        .collect();
+    match write_stats_json("fig2", &stats) {
+        Ok(p) => println!("perf trajectory: {}", p.display()),
+        Err(e) => eprintln!("BENCH_fig2.json not written: {e}"),
     }
 }

@@ -85,4 +85,9 @@ fn main() {
         table.row(vec![n.to_string(), format!("{:.2}", stats.mean_ns / 1e6)]);
     }
     println!("\n{}", table.render());
+
+    match b.write_json("quadrature") {
+        Ok(p) => println!("perf trajectory: {}", p.display()),
+        Err(e) => eprintln!("BENCH_quadrature.json not written: {e}"),
+    }
 }

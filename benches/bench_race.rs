@@ -62,4 +62,9 @@ fn main() {
         ]);
     }
     println!("\n{}", table.render());
+
+    match b.write_json("race") {
+        Ok(p) => println!("perf trajectory: {}", p.display()),
+        Err(e) => eprintln!("BENCH_race.json not written: {e}"),
+    }
 }

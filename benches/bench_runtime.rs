@@ -7,7 +7,7 @@
 use gauss_bif::coordinator::{BatchPolicy, JudgeService, ThresholdRequest};
 use gauss_bif::datasets::random_spd_exact;
 use gauss_bif::runtime::GqlRuntime;
-use gauss_bif::util::bench::{Bencher, Stats, Table};
+use gauss_bif::util::bench::{write_stats_json, Bencher, Stats, Table};
 use gauss_bif::util::rng::Rng;
 use std::path::Path;
 
@@ -64,6 +64,7 @@ fn main() {
     // --- service throughput across batch policies ---
     println!("== judge service throughput (200 mixed-size requests) ==");
     let mut table = Table::new(&["max_batch", "max_wait_µs", "req/s", "pjrt %"]);
+    let mut extra: Vec<Stats> = Vec::new();
     for (max_batch, wait_us) in [(1usize, 0u64), (4, 100), (8, 200), (8, 1000)] {
         let policy = BatchPolicy {
             max_batch,
@@ -100,6 +101,10 @@ fn main() {
             }
         }
         let dt = t0.elapsed().as_secs_f64();
+        extra.push(Stats::single(
+            &format!("service mb={max_batch} wait={wait_us}µs ns/req"),
+            dt * 1e9 / n_requests as f64,
+        ));
         table.row(vec![
             max_batch.to_string(),
             wait_us.to_string(),
@@ -109,4 +114,11 @@ fn main() {
         svc.shutdown();
     }
     println!("{}", table.render());
+
+    let mut all = b.results().to_vec();
+    all.extend(extra);
+    match write_stats_json("runtime", &all) {
+        Ok(p) => println!("perf trajectory: {}", p.display()),
+        Err(e) => eprintln!("BENCH_runtime.json not written: {e}"),
+    }
 }

@@ -56,4 +56,9 @@ fn main() {
         ]);
     }
     println!("\n{}", table.render());
+
+    match b.write_json("session") {
+        Ok(p) => println!("perf trajectory: {}", p.display()),
+        Err(e) => eprintln!("BENCH_session.json not written: {e}"),
+    }
 }

@@ -9,7 +9,7 @@
 
 use gauss_bif::config::RunConfig;
 use gauss_bif::experiments::table2::{self, Table2Budget};
-use gauss_bif::util::bench::{fmt_sci, Table};
+use gauss_bif::util::bench::{fmt_sci, write_stats_json, Stats, Table};
 
 fn main() {
     let scale: usize = std::env::var("GAUSS_BIF_SCALE")
@@ -51,4 +51,15 @@ fn main() {
     }
     println!("{}", table.render());
     println!("(DPP/kDPP rows: seconds per chain step; DG rows: full-run seconds; '*' = baseline infeasible, as in the paper)");
+
+    let stats: Vec<Stats> = rows
+        .iter()
+        .map(|r| {
+            Stats::single(&format!("table2 {}/{} gauss s", r.dataset, r.algo), r.gauss_s * 1e9)
+        })
+        .collect();
+    match write_stats_json("table2", &stats) {
+        Ok(p) => println!("perf trajectory: {}", p.display()),
+        Err(e) => eprintln!("BENCH_table2.json not written: {e}"),
+    }
 }

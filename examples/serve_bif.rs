@@ -17,10 +17,13 @@
 use gauss_bif::coordinator::{BatchPolicy, JudgeService, RoutePath, ThresholdRequest};
 use gauss_bif::datasets::random_spd_exact;
 use gauss_bif::linalg::Cholesky;
+use gauss_bif::metrics::{MetricValue, MetricsRegistry};
 use gauss_bif::runtime::GqlRuntime;
 use gauss_bif::util::rng::Rng;
 use std::path::PathBuf;
-use std::time::Instant;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 fn main() {
     let n_requests: usize = std::env::args()
@@ -53,6 +56,34 @@ fn main() {
     // --- Start the service (dedicated PJRT executor + 2 router workers) ---
     let svc =
         JudgeService::start(Some(artifacts), BatchPolicy::default(), 2).expect("valid policy");
+
+    // --- Periodic registry reporter: every 250 ms a background thread
+    // re-exports the live service counters into a MetricsRegistry and
+    // prints a one-line summary — the serving-loop shape of the
+    // `--telemetry` snapshot the CLI writes at exit ---
+    let stop = Arc::new(AtomicBool::new(false));
+    let reporter = {
+        let metrics = Arc::clone(&svc.metrics);
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            let reg = MetricsRegistry::new();
+            let mut tick = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                std::thread::sleep(Duration::from_millis(250));
+                tick += 1;
+                metrics.export_into(&reg);
+                let snap = reg.snapshot();
+                if let Some(MetricValue::Counter(reqs)) = snap.get("service.requests") {
+                    println!(
+                        "[telemetry t+{:>4}ms] {} requests served, {} metrics in registry",
+                        tick * 250,
+                        reqs,
+                        snap.len()
+                    );
+                }
+            }
+        })
+    };
 
     // --- Workload: mixed-size BIF threshold judgements with oracle ---
     let mut rng = Rng::new(0xE2E);
@@ -123,6 +154,16 @@ fn main() {
         iters_total as f64 / n_requests as f64
     );
     println!("metrics    : {}", svc.metrics.summary());
+
+    // final registry snapshot after the reporter loop winds down
+    stop.store(true, Ordering::Relaxed);
+    reporter.join().expect("reporter thread panicked");
+    let reg = MetricsRegistry::new();
+    svc.metrics.export_into(&reg);
+    println!(
+        "registry   : {} metrics exported under service.*",
+        reg.snapshot().len()
+    );
     svc.shutdown();
 
     assert_eq!(correct, n_requests, "all decisions must be oracle-correct");

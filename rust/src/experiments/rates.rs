@@ -6,7 +6,10 @@
 use crate::config::RunConfig;
 use crate::datasets::random_spd_exact;
 use crate::linalg::Cholesky;
-use crate::quadrature::{cg_solve, Gql, GqlOptions};
+use crate::metrics::{theoretical_rate, GapTrace, MetricsRegistry};
+use crate::quadrature::{
+    cg_solve, Answer, Engine, EngineConfig, Gql, GqlOptions, OpKey, Query, StopRule,
+};
 use crate::util::rng::Rng;
 
 /// Worst observed ratio (error / theoretical bound) per rule; ≤ 1 means
@@ -16,6 +19,12 @@ pub struct RateReport {
     pub n: usize,
     pub kappa: f64,
     pub kappa_plus: f64,
+    /// Theoretical per-iteration contraction `(√κ−1)/(√κ+1)` (Thm. 3).
+    pub rho: f64,
+    /// Least-squares geometric rate fitted to the measured bracket-gap
+    /// trajectory ([`GapTrace::fitted_rate`]); `NaN` when the run
+    /// converged too fast to fit (< 3 usable points).
+    pub fitted_rate: f64,
     pub worst_gauss: f64,
     pub worst_radau_lower: f64,
     pub worst_radau_upper: f64,
@@ -68,10 +77,15 @@ pub fn run_one(rng: &mut Rng, n: usize) -> RateReport {
         thm12_residual = thm12_residual.max(((exact - gk) - err_a2).abs() / exact);
     }
 
+    let fitted_rate =
+        GapTrace::from_history(&hist).fitted_rate().unwrap_or(f64::NAN);
+
     RateReport {
         n,
         kappa,
         kappa_plus,
+        rho,
+        fitted_rate,
         worst_gauss: worst[0],
         worst_radau_lower: worst[1],
         worst_radau_upper: worst[2],
@@ -85,9 +99,9 @@ pub fn run(cfg: &RunConfig, sizes: &[usize]) -> Vec<RateReport> {
     sizes.iter().map(|&n| run_one(&mut rng, n)).collect()
 }
 
-pub const CSV_HEADER: [&str; 8] = [
-    "n", "kappa", "kappa_plus", "worst_gauss", "worst_radau_lower",
-    "worst_radau_upper", "worst_lobatto", "thm12_residual",
+pub const CSV_HEADER: [&str; 10] = [
+    "n", "kappa", "kappa_plus", "rho", "fitted_rate", "worst_gauss",
+    "worst_radau_lower", "worst_radau_upper", "worst_lobatto", "thm12_residual",
 ];
 
 pub fn csv_rows(reports: &[RateReport]) -> Vec<Vec<String>> {
@@ -98,6 +112,8 @@ pub fn csv_rows(reports: &[RateReport]) -> Vec<Vec<String>> {
                 r.n.to_string(),
                 format!("{:.3e}", r.kappa),
                 format!("{:.3e}", r.kappa_plus),
+                format!("{:.4}", r.rho),
+                format!("{:.4}", r.fitted_rate),
                 format!("{:.4}", r.worst_gauss),
                 format!("{:.4}", r.worst_radau_lower),
                 format!("{:.4}", r.worst_radau_upper),
@@ -106,6 +122,62 @@ pub fn csv_rows(reports: &[RateReport]) -> Vec<Vec<String>> {
             ]
         })
         .collect()
+}
+
+/// Publish each report's contraction-rate comparison into `reg` as
+/// `rates.n<N>.*` gauges (one group per problem size).
+pub fn export_registry(reports: &[RateReport], reg: &MetricsRegistry) {
+    reg.set_counter("rates.reports", reports.len() as u64);
+    for r in reports {
+        let p = format!("rates.n{}", r.n);
+        reg.set_gauge(&format!("{p}.kappa"), r.kappa);
+        reg.set_gauge(&format!("{p}.rho"), r.rho);
+        reg.set_gauge(&format!("{p}.fitted_rate"), r.fitted_rate);
+        reg.set_gauge(&format!("{p}.worst_gauss"), r.worst_gauss);
+        reg.set_gauge(&format!("{p}.worst_lobatto"), r.worst_lobatto);
+        reg.set_gauge(&format!("{p}.thm12_residual"), r.thm12_residual);
+    }
+}
+
+/// Re-run the rate instances through a profiled, trace-recording
+/// [`Engine`] (2 workers) so the telemetry snapshot also carries round
+/// phase timings, worker busy/idle fractions, and the engine-path fitted
+/// contraction rate per size — the observability half of the `rates`
+/// experiment.
+pub fn profile_engine(cfg: &RunConfig, sizes: &[usize], reg: &MetricsRegistry) {
+    let mut rng = Rng::new(cfg.seed ^ 0x9E7E1);
+    let probs: Vec<_> = sizes
+        .iter()
+        .map(|&n| {
+            let (a, l1, ln) = random_spd_exact(&mut rng, n, 0.3, 0.1);
+            let u: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            (n, a, l1, ln, u)
+        })
+        .collect();
+
+    let ecfg = EngineConfig::default()
+        .with_workers(2)
+        .with_profile(true)
+        .with_record_traces(true);
+    let mut eng = Engine::new(ecfg).expect("default engine knobs are valid");
+    let mut tickets = Vec::new();
+    for (i, (n, a, l1, ln, u)) in probs.iter().enumerate() {
+        let opts = GqlOptions::new(l1 * 0.99, ln * 1.01);
+        let q = Query::Estimate { u: u.clone(), stop: StopRule::GapRel(1e-8) };
+        tickets.push((eng.submit(i as OpKey, a, opts, q), *n, ln / l1));
+    }
+    eng.drain();
+    for (t, n, kappa) in tickets {
+        let fitted = eng
+            .answer(t)
+            .and_then(Answer::trace)
+            .and_then(GapTrace::fitted_rate);
+        if let Some(rate) = fitted {
+            reg.set_gauge(&format!("rates.engine.n{n}.fitted_rate"), rate);
+            reg.set_gauge(&format!("rates.engine.n{n}.rho"), theoretical_rate(kappa));
+        }
+    }
+    eng.export_into(reg);
 }
 
 #[cfg(test)]
@@ -121,6 +193,49 @@ mod tests {
             assert!(rep.worst_radau_upper <= 1.0 + 1e-9, "Thm8 violated: {rep:?}");
             assert!(rep.worst_lobatto <= 1.0 + 1e-9, "Corr9 violated: {rep:?}");
             assert!(rep.thm12_residual < 1e-5, "Thm12 violated: {rep:?}");
+        }
+    }
+
+    #[test]
+    fn fitted_rate_stays_within_the_theoretical_contraction() {
+        let cfg = RunConfig { seed: 0xAB, ..Default::default() };
+        let reports = run(&cfg, &[48, 96]);
+        for rep in &reports {
+            assert!(rep.rho > 0.0 && rep.rho < 1.0, "bad rho: {rep:?}");
+            if rep.fitted_rate.is_finite() {
+                // superlinear adaptation can only beat the envelope, so the
+                // fitted slope sits at or below ρ (small fit-noise slack)
+                assert!(
+                    rep.fitted_rate <= rep.rho * 1.05 + 0.05,
+                    "measured contraction above theory: {rep:?}"
+                );
+                assert!(rep.fitted_rate > 0.0, "degenerate fit: {rep:?}");
+            }
+        }
+        let reg = MetricsRegistry::new();
+        export_registry(&reports, &reg);
+        let snap = reg.snapshot();
+        assert!(snap.get("rates.reports").is_some());
+        assert!(snap.get("rates.n48.rho").is_some());
+        assert!(snap.get("rates.n48.fitted_rate").is_some());
+    }
+
+    #[test]
+    fn profile_engine_publishes_round_phase_and_rate_telemetry() {
+        let cfg = RunConfig { seed: 0xAC, ..Default::default() };
+        let reg = MetricsRegistry::new();
+        profile_engine(&cfg, &[24, 32], &reg);
+        let snap = reg.snapshot();
+        for key in [
+            "engine.rounds",
+            "engine.profile.rounds",
+            "engine.profile.worker_busy_frac",
+            "engine.profile.worker_idle_frac",
+            "engine.profile.step_ns",
+            "rates.engine.n24.fitted_rate",
+            "rates.engine.n24.rho",
+        ] {
+            assert!(snap.get(key).is_some(), "missing {key}");
         }
     }
 }

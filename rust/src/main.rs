@@ -16,9 +16,15 @@
 //!
 //! A JSON run config can seed the defaults: `--config path.json`
 //! (see config::run::RunConfig).
+//!
+//! Any command accepts `--telemetry FILE`: after the run, the process-wide
+//! metrics registry (experiment gauges, engine round profile, service
+//! counters — whatever the command populated) is dumped as a JSON
+//! snapshot to FILE (see metrics::export).
 
 use gauss_bif::config::RunConfig;
 use gauss_bif::experiments::{self, fig1, fig2, rates, table2};
+use gauss_bif::metrics::MetricsRegistry;
 use std::collections::HashMap;
 use std::path::PathBuf;
 use std::process::ExitCode;
@@ -104,22 +110,42 @@ fn main() -> ExitCode {
         return ExitCode::from(2);
     }
 
-    match cmd.as_str() {
+    // one registry for the whole run; commands that have telemetry to
+    // publish receive `Some(&reg)` and the snapshot lands at the flagged
+    // path after the command returns (whatever its exit code)
+    let telemetry = flags.get("telemetry").map(PathBuf::from);
+    let reg = MetricsRegistry::new();
+    let treg = telemetry.as_ref().map(|_| &reg);
+    let t0 = std::time::Instant::now();
+
+    let code = match cmd.as_str() {
         "fig1" => cmd_fig1(&cfg, &flags),
         "fig2" => cmd_fig2(&cfg, &flags),
         "table2" => cmd_table2(&cfg, &flags),
-        "rates" => cmd_rates(&cfg, &flags),
+        "rates" => cmd_rates(&cfg, &flags, treg),
         "block" => cmd_block(&cfg, &flags),
         "race" => cmd_race(&cfg, &flags),
         "session" => cmd_session(&cfg, &flags),
         "engine" => cmd_engine(&cfg, &flags),
-        "serve" => cmd_serve(&cfg, &flags),
+        "serve" => cmd_serve(&cfg, &flags, treg),
         "info" => cmd_info(&cfg),
         _ => {
             eprintln!("unknown command '{cmd}'\n{USAGE}");
-            ExitCode::from(2)
+            return ExitCode::from(2);
+        }
+    };
+
+    if let Some(path) = telemetry {
+        reg.set_gauge("run.wall_time_s", t0.elapsed().as_secs_f64());
+        match gauss_bif::metrics::export::write_json(&path, &reg.snapshot()) {
+            Ok(()) => println!("telemetry snapshot: {}", path.display()),
+            Err(e) => {
+                eprintln!("telemetry write failed: {e}");
+                return ExitCode::FAILURE;
+            }
         }
     }
+    code
 }
 
 const USAGE: &str = "usage: gauss-bif <fig1|fig2|table2|rates|block|race|session|engine|serve|info> [flags]\n\
@@ -127,7 +153,9 @@ const USAGE: &str = "usage: gauss-bif <fig1|fig2|table2|rates|block|race|session
                 --reorth full|none (§5.4 Lanczos reorthogonalization for block/serve runs)\n\
                 --race prune|exhaustive (candidate racing for greedy scoring; selections identical)\n\
                 --engine-lanes L --engine-ttl T --engine-workers W (multi-operator engine knobs;\n\
-                0/absurd values are rejected at admission)";
+                0/absurd values are rejected at admission)\n\
+                --telemetry FILE (dump a metrics-registry JSON snapshot after the run;\n\
+                rates adds a profiled-engine pass, serve exports service counters)";
 
 fn parse_args(args: &[String]) -> Option<(String, HashMap<String, String>)> {
     let mut it = args.iter();
@@ -246,7 +274,11 @@ fn cmd_table2(cfg: &RunConfig, flags: &HashMap<String, String>) -> ExitCode {
     ExitCode::SUCCESS
 }
 
-fn cmd_rates(cfg: &RunConfig, flags: &HashMap<String, String>) -> ExitCode {
+fn cmd_rates(
+    cfg: &RunConfig,
+    flags: &HashMap<String, String>,
+    reg: Option<&MetricsRegistry>,
+) -> ExitCode {
     let sizes: Vec<usize> = flags
         .get("sizes")
         .map(|s| parse_list(s))
@@ -261,9 +293,11 @@ fn cmd_rates(cfg: &RunConfig, flags: &HashMap<String, String>) -> ExitCode {
             && r.thm12_residual < 1e-5;
         ok &= pass;
         println!(
-            "n={:<5} κ={:<10.2e} worst err/envelope: gauss {:.3} | radau↓ {:.3} | radau↑ {:.3} | lobatto {:.3} | thm12 {:.1e} [{}]",
+            "n={:<5} κ={:<10.2e} ρ={:.3} ρ̂={:.3} worst err/envelope: gauss {:.3} | radau↓ {:.3} | radau↑ {:.3} | lobatto {:.3} | thm12 {:.1e} [{}]",
             r.n,
             r.kappa,
+            r.rho,
+            r.fitted_rate,
             r.worst_gauss,
             r.worst_radau_lower,
             r.worst_radau_upper,
@@ -271,6 +305,12 @@ fn cmd_rates(cfg: &RunConfig, flags: &HashMap<String, String>) -> ExitCode {
             r.thm12_residual,
             if pass { "OK" } else { "VIOLATED" }
         );
+    }
+    if let Some(reg) = reg {
+        rates::export_registry(&reports, reg);
+        // re-run the instances through a profiled engine so the snapshot
+        // also carries round-phase timings and worker busy/idle fractions
+        rates::profile_engine(cfg, &sizes, reg);
     }
     let _ = experiments::write_csv(
         &cfg.out_dir,
@@ -486,7 +526,11 @@ fn cmd_engine(cfg: &RunConfig, flags: &HashMap<String, String>) -> ExitCode {
     ExitCode::SUCCESS
 }
 
-fn cmd_serve(cfg: &RunConfig, flags: &HashMap<String, String>) -> ExitCode {
+fn cmd_serve(
+    cfg: &RunConfig,
+    flags: &HashMap<String, String>,
+    reg: Option<&MetricsRegistry>,
+) -> ExitCode {
     use gauss_bif::coordinator::{BatchPolicy, JudgeService};
     use gauss_bif::datasets::random_spd_exact;
     use gauss_bif::linalg::Cholesky;
@@ -593,6 +637,12 @@ fn cmd_serve(cfg: &RunConfig, flags: &HashMap<String, String>) -> ExitCode {
     }
     println!("argmax races: {} operators, oracle-correct: {races_ok}", ops.len());
     println!("{}", svc.metrics.summary());
+    if let Some(reg) = reg {
+        svc.metrics.export_into(reg);
+        reg.set_counter("serve.requests", n_requests as u64);
+        reg.set_counter("serve.correct", correct as u64);
+        reg.set_gauge("serve.requests_per_s", n_requests as f64 / dt);
+    }
     svc.shutdown();
     if correct == n_requests && races_ok {
         ExitCode::SUCCESS

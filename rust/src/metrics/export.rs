@@ -1,0 +1,221 @@
+//! Snapshot serializers: JSON (for `--telemetry <path>` dumps and CI
+//! validation) and Prometheus exposition text (for scrape endpoints).
+//!
+//! Both formats are hand-rolled — the crate carries no serde — and the JSON
+//! form is round-trip tested against the crate's own parser
+//! ([`crate::config::json::parse`]), so a snapshot written by
+//! [`write_json`] is guaranteed loadable by any tool that reads the
+//! `config` JSON dialect.
+
+use super::registry::{MetricValue, Snapshot};
+use std::io::Write;
+use std::path::Path;
+
+/// Schema version stamped into every JSON snapshot.
+const SNAPSHOT_VERSION: u64 = 1;
+
+fn fin(v: f64) -> f64 {
+    if v.is_finite() {
+        v
+    } else {
+        0.0
+    }
+}
+
+pub(crate) fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+pub(crate) fn json_num(v: f64) -> String {
+    let v = fin(v);
+    if v == v.trunc() && v.abs() < 1e15 {
+        format!("{:.1}", v)
+    } else {
+        format!("{v}")
+    }
+}
+
+/// Serialize a snapshot as a JSON object:
+/// `{"version":1,"metrics":{"<name>":{"type":"counter","value":N}|…}}`.
+/// Non-finite values are clamped to 0 so the output always parses.
+pub fn to_json(snap: &Snapshot) -> String {
+    let mut out = String::from("{\n  \"version\": ");
+    out.push_str(&SNAPSHOT_VERSION.to_string());
+    out.push_str(",\n  \"metrics\": {");
+    for (i, (name, value)) in snap.entries.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str("\n    \"");
+        out.push_str(&json_escape(name));
+        out.push_str("\": ");
+        match value {
+            MetricValue::Counter(c) => {
+                out.push_str(&format!("{{\"type\": \"counter\", \"value\": {c}}}"));
+            }
+            MetricValue::Gauge(g) => {
+                out.push_str(&format!(
+                    "{{\"type\": \"gauge\", \"value\": {}}}",
+                    json_num(*g)
+                ));
+            }
+            MetricValue::Hist(h) => {
+                out.push_str(&format!(
+                    "{{\"type\": \"histogram\", \"count\": {}, \"mean\": {}, \
+                     \"min\": {}, \"max\": {}, \"p50\": {}, \"p90\": {}, \"p99\": {}}}",
+                    h.count,
+                    json_num(h.mean),
+                    json_num(h.min),
+                    json_num(h.max),
+                    json_num(h.p50),
+                    json_num(h.p90),
+                    json_num(h.p99),
+                ));
+            }
+        }
+    }
+    out.push_str("\n  }\n}\n");
+    out
+}
+
+/// Sanitize a dotted metric name into a legal Prometheus metric name
+/// (`[a-zA-Z_:][a-zA-Z0-9_:]*`).
+fn prom_name(name: &str) -> String {
+    let mut out: String = name
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '_' || c == ':' { c } else { '_' })
+        .collect();
+    match out.chars().next() {
+        Some(c) if c.is_ascii_digit() => out.insert(0, '_'),
+        None => out.push('_'),
+        _ => {}
+    }
+    out
+}
+
+/// Serialize a snapshot in Prometheus exposition text format. Histograms
+/// are rendered as summaries (`quantile` labels plus `_sum`/`_count`).
+pub fn to_prometheus(snap: &Snapshot) -> String {
+    let mut out = String::new();
+    for (name, value) in &snap.entries {
+        let p = prom_name(name);
+        match value {
+            MetricValue::Counter(c) => {
+                out.push_str(&format!("# TYPE {p} counter\n{p} {c}\n"));
+            }
+            MetricValue::Gauge(g) => {
+                out.push_str(&format!("# TYPE {p} gauge\n{p} {}\n", fin(*g)));
+            }
+            MetricValue::Hist(h) => {
+                out.push_str(&format!("# TYPE {p} summary\n"));
+                for (q, v) in
+                    [("0.5", h.p50), ("0.9", h.p90), ("0.99", h.p99)]
+                {
+                    out.push_str(&format!("{p}{{quantile=\"{q}\"}} {}\n", fin(v)));
+                }
+                out.push_str(&format!(
+                    "{p}_sum {}\n{p}_count {}\n",
+                    fin(h.mean) * h.count as f64,
+                    h.count
+                ));
+            }
+        }
+    }
+    out
+}
+
+/// Write the JSON form of `snap` to `path`, creating parent directories.
+pub fn write_json(path: &Path, snap: &Snapshot) -> std::io::Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(to_json(snap).as_bytes())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::json::{parse, Json};
+    use crate::metrics::MetricsRegistry;
+
+    fn sample_registry() -> MetricsRegistry {
+        let reg = MetricsRegistry::new();
+        reg.inc_counter("engine.rounds", 12);
+        reg.set_gauge("engine.busy_frac", 0.875);
+        reg.set_gauge("weird name-with/chars", f64::NAN);
+        for v in [5.0, 50.0, 500.0] {
+            reg.record("sweep.step_ns", v);
+        }
+        reg
+    }
+
+    #[test]
+    fn json_round_trips_through_own_parser() {
+        let text = to_json(&sample_registry().snapshot());
+        let doc = parse(&text).expect("snapshot JSON must parse");
+        assert_eq!(doc.get("version").and_then(Json::as_f64), Some(1.0));
+        let metrics = doc.get("metrics").expect("metrics object");
+        let rounds = metrics.get("engine.rounds").expect("counter present");
+        assert_eq!(rounds.get("type").and_then(Json::as_str), Some("counter"));
+        assert_eq!(rounds.get("value").and_then(Json::as_f64), Some(12.0));
+        let busy = metrics.get("engine.busy_frac").expect("gauge present");
+        assert_eq!(busy.get("value").and_then(Json::as_f64), Some(0.875));
+        let hist = metrics.get("sweep.step_ns").expect("histogram present");
+        assert_eq!(hist.get("type").and_then(Json::as_str), Some("histogram"));
+        assert_eq!(hist.get("count").and_then(Json::as_f64), Some(3.0));
+        for key in ["mean", "min", "max", "p50", "p90", "p99"] {
+            assert!(
+                hist.get(key).and_then(Json::as_f64).is_some(),
+                "missing histogram key {key}"
+            );
+        }
+        // NaN gauge clamps to a parseable 0
+        let weird = metrics.get("weird name-with/chars").expect("gauge");
+        assert_eq!(weird.get("value").and_then(Json::as_f64), Some(0.0));
+    }
+
+    #[test]
+    fn prometheus_output_has_legal_names_and_type_lines() {
+        let text = to_prometheus(&sample_registry().snapshot());
+        assert!(text.contains("# TYPE engine_rounds counter"));
+        assert!(text.contains("engine_rounds 12"));
+        assert!(text.contains("# TYPE engine_busy_frac gauge"));
+        assert!(text.contains("# TYPE sweep_step_ns summary"));
+        assert!(text.contains("sweep_step_ns{quantile=\"0.5\"}"));
+        assert!(text.contains("sweep_step_ns_count 3"));
+        assert!(text.contains("weird_name_with_chars 0"));
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            let name = line.split([' ', '{']).next().unwrap();
+            assert!(
+                name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':'),
+                "illegal prometheus name {name:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn write_json_creates_parent_dirs() {
+        let dir = std::env::temp_dir().join("gauss_bif_export_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("nested").join("telemetry.json");
+        write_json(&path, &sample_registry().snapshot()).expect("write");
+        let text = std::fs::read_to_string(&path).expect("read back");
+        assert!(parse(&text).is_ok());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -153,4 +153,86 @@ mod tests {
         assert_eq!(h.count(), 1);
         assert!(h.percentile(0.5) > 0.0);
     }
+
+    #[test]
+    fn sub_unit_values_share_the_first_bucket() {
+        let mut h = Histogram::new();
+        for v in [0.0, 0.25, 0.5, 0.999] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 4);
+        assert_eq!(h.min(), 0.0);
+        assert_eq!(h.max(), 0.999);
+        // all land in bucket 0, so every percentile is clamped into
+        // [min, max] rather than reporting the bucket edge (BASE^1 > 1)
+        for p in [0.0, 0.5, 1.0] {
+            let q = h.percentile(p);
+            assert!((0.0..=0.999).contains(&q), "p{p} = {q} escaped [min, max]");
+        }
+    }
+
+    #[test]
+    fn percentiles_are_monotone_in_p() {
+        let mut h = Histogram::new();
+        // spread over several decades plus duplicates and sub-1.0 samples
+        for v in [0.5, 2.0, 2.0, 17.0, 300.0, 300.0, 4_000.0, 90_000.0] {
+            h.record(v);
+        }
+        let mut prev = f64::NEG_INFINITY;
+        for i in 0..=100 {
+            let q = h.percentile(i as f64 / 100.0);
+            assert!(q >= prev, "p{} = {q} < p{} = {prev}", i, i - 1);
+            prev = q;
+        }
+        assert!(h.percentile(0.0) >= h.min());
+        assert!(h.percentile(1.0) <= h.max());
+    }
+
+    #[test]
+    fn merge_is_associative_on_derived_stats() {
+        // float `sum` is not bit-associative, so compare the stats that the
+        // exporters actually report: count, min, max, and the percentile
+        // ladder (bucket counts are integers — those merge associatively)
+        let mk = |vals: &[f64]| {
+            let mut h = Histogram::new();
+            for &v in vals {
+                h.record(v);
+            }
+            h
+        };
+        let a = mk(&[1.0, 5.0, 2_000.0]);
+        let b = mk(&[0.3, 77.0]);
+        let c = mk(&[9.0, 9.0, 1e9]);
+
+        let mut ab_c = a.clone();
+        ab_c.merge(&b);
+        ab_c.merge(&c);
+
+        let mut bc = b.clone();
+        bc.merge(&c);
+        let mut a_bc = a.clone();
+        a_bc.merge(&bc);
+
+        assert_eq!(ab_c.count(), a_bc.count());
+        assert_eq!(ab_c.count(), 8);
+        assert_eq!(ab_c.min(), a_bc.min());
+        assert_eq!(ab_c.max(), a_bc.max());
+        for p in [0.0, 0.1, 0.25, 0.5, 0.75, 0.9, 0.99, 1.0] {
+            assert_eq!(
+                ab_c.percentile(p),
+                a_bc.percentile(p),
+                "percentile p={p} differs between merge orders"
+            );
+        }
+    }
+
+    #[test]
+    fn merge_with_empty_is_identity_on_derived_stats() {
+        let mut h = Histogram::new();
+        h.record(10.0);
+        h.record(250.0);
+        let before = (h.count(), h.min(), h.max(), h.percentile(0.5));
+        h.merge(&Histogram::new());
+        assert_eq!((h.count(), h.min(), h.max(), h.percentile(0.5)), before);
+    }
 }

@@ -2,13 +2,36 @@
 //! and iteration-count histograms (how many quadrature iterations each
 //! retrospective judgement actually needed — the paper's speedups live or
 //! die on this distribution staying tiny).
+//!
+//! The telemetry layer on top of these primitives:
+//! - [`registry`] — a named [`MetricsRegistry`] of counters / gauges /
+//!   histograms that every subsystem exports into at harvest points;
+//! - [`export`] — JSON and Prometheus-exposition serializers for registry
+//!   snapshots (behind the `--telemetry <path>` CLI flag);
+//! - [`trace`] — opt-in convergence tracing: per-query four-bound gap
+//!   trajectories and fitted geometric contraction rates, compared
+//!   against the paper's `(√κ−1)/(√κ+1)` prediction.
 
+pub mod export;
 pub mod histogram;
+pub mod registry;
+pub mod trace;
 
 pub use histogram::Histogram;
+pub use registry::{HistSummary, MetricValue, MetricsRegistry, Snapshot};
+pub use trace::{theoretical_rate, GapTrace};
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard};
 use std::time::Instant;
+
+/// Poison-tolerant lock: a thread that panicked while holding a metrics
+/// mutex poisons it, but metrics are advisory — recording into or reading
+/// a possibly-inconsistent histogram is strictly better than cascading the
+/// panic into every other thread that touches telemetry.
+pub(crate) fn lock_tolerant<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
 
 /// Monotonic counter, shareable across threads.
 #[derive(Debug, Default)]
@@ -106,7 +129,9 @@ impl<'a> Timer<'a> {
 impl Drop for Timer<'_> {
     fn drop(&mut self) {
         let ns = self.start.elapsed().as_nanos() as f64;
-        self.hist.lock().unwrap().record(ns);
+        // Poison-tolerant: Timer drops during unwinding too, and a second
+        // panic inside a Drop aborts the process.
+        lock_tolerant(self.hist).record(ns);
     }
 }
 
@@ -172,11 +197,12 @@ impl ServiceMetrics {
         }
     }
 
-    /// One-line human summary.
+    /// One-line human summary. Poison-tolerant: a panicked worker must not
+    /// take the shutdown report down with it.
     pub fn summary(&self) -> String {
-        let lat = self.latency_ns.lock().unwrap();
-        let bs = self.batch_size.lock().unwrap();
-        let it = self.judge_iters.lock().unwrap();
+        let lat = lock_tolerant(&self.latency_ns);
+        let bs = lock_tolerant(&self.batch_size);
+        let it = lock_tolerant(&self.judge_iters);
         format!(
             "requests={} batches={} native={} coalesced={} engine={} races={} | latency p50={} p95={} p99={} | batch p50={:.1} | iters p50={:.0} p95={:.0}",
             self.requests.get(),
@@ -192,6 +218,28 @@ impl ServiceMetrics {
             it.percentile(0.50),
             it.percentile(0.95),
         )
+    }
+
+    /// Publish the current cumulative values into `reg` under `service.*`
+    /// names. Uses set-style (idempotent) registry writes, so periodic
+    /// re-export never double-counts.
+    pub fn export_into(&self, reg: &MetricsRegistry) {
+        reg.set_counter("service.requests", self.requests.get());
+        reg.set_counter("service.batches", self.batches.get());
+        reg.set_counter("service.native_fallbacks", self.native_fallbacks.get());
+        reg.set_counter("service.coalesced_blocks", self.coalesced_blocks.get());
+        reg.set_counter("service.engine_drains", self.engine_drains.get());
+        reg.set_counter("service.races", self.races.get());
+        reg.set_counter("service.route_decisions", self.route_decisions.get());
+        reg.set_histogram("service.latency_ns", lock_tolerant(&self.latency_ns).clone());
+        reg.set_histogram("service.batch_size", lock_tolerant(&self.batch_size).clone());
+        reg.set_histogram("service.judge_iters", lock_tolerant(&self.judge_iters).clone());
+        if let Some(v) = self.pjrt_batch_ns.get() {
+            reg.set_gauge("service.pjrt_batch_ns_ewma", v);
+        }
+        if let Some(v) = self.native_block_ns.get() {
+            reg.set_gauge("service.native_block_ns_ewma", v);
+        }
     }
 }
 
@@ -255,6 +303,87 @@ mod tests {
             m.native_block_ns.record(50_000.0);
         }
         assert!(!m.prefer_native_block());
+    }
+
+    #[test]
+    fn ewma_is_sound_under_concurrent_recording() {
+        // constant samples from many threads must converge to exactly that
+        // constant (every CAS update maps v → v)
+        let e = Ewma::new(0.2);
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    for _ in 0..500 {
+                        e.record(42.0);
+                    }
+                });
+            }
+        });
+        assert_eq!(e.get(), Some(42.0));
+
+        // mixed samples: the average must stay finite and inside the
+        // sample range regardless of interleaving
+        let m = Ewma::new(0.2);
+        std::thread::scope(|s| {
+            for t in 0..4u64 {
+                let m = &m;
+                s.spawn(move || {
+                    for i in 0..500u64 {
+                        m.record(10.0 + ((t * 500 + i) % 90) as f64);
+                    }
+                });
+            }
+        });
+        let v = m.get().expect("seeded");
+        assert!(v.is_finite());
+        assert!((10.0..=100.0).contains(&v), "ewma {v} escaped sample range");
+    }
+
+    #[test]
+    fn timer_and_summary_tolerate_a_poisoned_lock() {
+        let m = std::sync::Arc::new(ServiceMetrics::new());
+        // poison every histogram mutex by panicking while holding it
+        for hist in [&m.latency_ns, &m.batch_size, &m.judge_iters] {
+            let _ = std::thread::scope(|s| {
+                s.spawn(|| {
+                    let _g = hist.lock().unwrap();
+                    panic!("poison");
+                })
+                .join()
+            });
+        }
+        assert!(m.latency_ns.lock().is_err(), "lock must actually be poisoned");
+        // Timer::drop still records…
+        {
+            let _t = Timer::start(&m.latency_ns);
+        }
+        assert_eq!(lock_tolerant(&m.latency_ns).count(), 1);
+        // …and summary still renders
+        let s = m.summary();
+        assert!(s.contains("requests=0"), "{s}");
+    }
+
+    #[test]
+    fn export_into_publishes_service_names_idempotently() {
+        let m = ServiceMetrics::new();
+        m.requests.add(7);
+        lock_tolerant(&m.latency_ns).record(1_000.0);
+        let reg = MetricsRegistry::new();
+        m.export_into(&reg);
+        m.export_into(&reg); // idempotent re-export
+        let snap = reg.snapshot();
+        assert_eq!(snap.get("service.requests"), Some(&MetricValue::Counter(7)));
+        match snap.get("service.latency_ns") {
+            Some(MetricValue::Hist(h)) => assert_eq!(h.count, 1),
+            other => panic!("wrong kind {other:?}"),
+        }
+        assert!(snap.get("service.pjrt_batch_ns_ewma").is_none(), "unseeded ewma omitted");
+        m.pjrt_batch_ns.record(5.0);
+        m.export_into(&reg);
+        assert_eq!(
+            reg.snapshot().get("service.pjrt_batch_ns_ewma"),
+            Some(&MetricValue::Gauge(5.0))
+        );
     }
 
     #[test]

@@ -1,0 +1,300 @@
+//! Named metrics registry: the aggregation point of the telemetry layer.
+//!
+//! Every instrumented subsystem ([`ServiceMetrics`](super::ServiceMetrics),
+//! [`Engine`](crate::quadrature::engine::Engine),
+//! [`Session`](crate::quadrature::query::Session)) publishes its counters,
+//! gauges, and histograms into one [`MetricsRegistry`] under dotted names
+//! (`engine.rounds`, `service.latency_ns`, ...). A [`Snapshot`] freezes the
+//! registry into plain values that the exporters in
+//! [`export`](super::export) serialize as JSON or Prometheus exposition
+//! text — the `--telemetry <path>` CLI flag is a thin wrapper around
+//! `snapshot()` + `write_json`.
+//!
+//! The registry itself sits **off** the hot paths: subsystems keep their
+//! own lock-free/thread-local instruments (atomic counters, per-worker
+//! histograms) and export into the registry at harvest points, so
+//! registering costs one coarse mutex acquisition per export — never per
+//! sample. The mutex is poison-tolerant ([`super::lock_tolerant`]): a
+//! panicking exporter cannot take the whole telemetry layer down with it.
+
+use super::{lock_tolerant, Histogram};
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+/// One registered instrument.
+#[derive(Clone, Debug)]
+enum Metric {
+    Counter(u64),
+    Gauge(f64),
+    Hist(Histogram),
+}
+
+/// Frozen value of one instrument at snapshot time.
+#[derive(Clone, Debug, PartialEq)]
+pub enum MetricValue {
+    /// Monotonic count.
+    Counter(u64),
+    /// Point-in-time value.
+    Gauge(f64),
+    /// Summary of a histogram's distribution.
+    Hist(HistSummary),
+}
+
+/// Percentile summary of a histogram (what the exporters serialize;
+/// the full bucket vector never leaves the registry).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct HistSummary {
+    pub count: u64,
+    pub mean: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+}
+
+impl HistSummary {
+    fn of(h: &Histogram) -> Self {
+        HistSummary {
+            count: h.count(),
+            mean: h.mean(),
+            min: h.min(),
+            max: h.max(),
+            p50: h.percentile(0.50),
+            p90: h.percentile(0.90),
+            p99: h.percentile(0.99),
+        }
+    }
+}
+
+/// Frozen registry contents, sorted by metric name.
+#[derive(Clone, Debug, Default)]
+pub struct Snapshot {
+    pub entries: Vec<(String, MetricValue)>,
+}
+
+impl Snapshot {
+    /// Look up one metric by exact name.
+    pub fn get(&self, name: &str) -> Option<&MetricValue> {
+        self.entries
+            .binary_search_by(|(n, _)| n.as_str().cmp(name))
+            .ok()
+            .map(|i| &self.entries[i].1)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+/// Registry of named counters / gauges / histograms. Shareable across
+/// threads (`&self` everywhere); see the module docs for the intended
+/// export-at-harvest usage pattern.
+///
+/// A name's kind is fixed by its first use — writing a gauge value to an
+/// existing counter name (or vice versa) replaces the instrument, last
+/// writer wins, so exporters that re-publish cumulative stats under the
+/// same names stay idempotent.
+#[derive(Debug, Default)]
+pub struct MetricsRegistry {
+    inner: Mutex<BTreeMap<String, Metric>>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add `delta` to the counter `name` (created at zero on first use).
+    pub fn inc_counter(&self, name: &str, delta: u64) {
+        let mut m = lock_tolerant(&self.inner);
+        match m.get_mut(name) {
+            Some(Metric::Counter(c)) => *c += delta,
+            _ => {
+                m.insert(name.to_string(), Metric::Counter(delta));
+            }
+        }
+    }
+
+    /// Set the counter `name` to an absolute cumulative value (the
+    /// idempotent form used when re-exporting subsystem stats).
+    pub fn set_counter(&self, name: &str, value: u64) {
+        lock_tolerant(&self.inner).insert(name.to_string(), Metric::Counter(value));
+    }
+
+    /// Set the gauge `name`.
+    pub fn set_gauge(&self, name: &str, value: f64) {
+        lock_tolerant(&self.inner).insert(name.to_string(), Metric::Gauge(value));
+    }
+
+    /// Record one sample into the histogram `name`.
+    pub fn record(&self, name: &str, value: f64) {
+        let mut m = lock_tolerant(&self.inner);
+        match m.get_mut(name) {
+            Some(Metric::Hist(h)) => h.record(value),
+            _ => {
+                let mut h = Histogram::new();
+                h.record(value);
+                m.insert(name.to_string(), Metric::Hist(h));
+            }
+        }
+    }
+
+    /// Merge `other` into the histogram `name` (additive).
+    pub fn merge_histogram(&self, name: &str, other: &Histogram) {
+        let mut m = lock_tolerant(&self.inner);
+        match m.get_mut(name) {
+            Some(Metric::Hist(h)) => h.merge(other),
+            _ => {
+                m.insert(name.to_string(), Metric::Hist(other.clone()));
+            }
+        }
+    }
+
+    /// Replace the histogram `name` wholesale (the idempotent form: a
+    /// periodic exporter re-publishing a cumulative histogram must not
+    /// double-count earlier exports).
+    pub fn set_histogram(&self, name: &str, h: Histogram) {
+        lock_tolerant(&self.inner).insert(name.to_string(), Metric::Hist(h));
+    }
+
+    /// Registered metric count.
+    pub fn len(&self) -> usize {
+        lock_tolerant(&self.inner).len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        lock_tolerant(&self.inner).is_empty()
+    }
+
+    /// Freeze the current contents (sorted by name — `BTreeMap` order).
+    pub fn snapshot(&self) -> Snapshot {
+        let m = lock_tolerant(&self.inner);
+        Snapshot {
+            entries: m
+                .iter()
+                .map(|(name, metric)| {
+                    let v = match metric {
+                        Metric::Counter(c) => MetricValue::Counter(*c),
+                        Metric::Gauge(g) => MetricValue::Gauge(*g),
+                        Metric::Hist(h) => MetricValue::Hist(HistSummary::of(h)),
+                    };
+                    (name.clone(), v)
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_gauges_and_histograms_round_trip() {
+        let reg = MetricsRegistry::new();
+        reg.inc_counter("engine.rounds", 3);
+        reg.inc_counter("engine.rounds", 2);
+        reg.set_gauge("engine.busy_frac", 0.75);
+        for v in [10.0, 100.0, 1000.0] {
+            reg.record("engine.step_ns", v);
+        }
+        assert_eq!(reg.len(), 3);
+        let snap = reg.snapshot();
+        assert_eq!(snap.get("engine.rounds"), Some(&MetricValue::Counter(5)));
+        assert_eq!(snap.get("engine.busy_frac"), Some(&MetricValue::Gauge(0.75)));
+        match snap.get("engine.step_ns") {
+            Some(MetricValue::Hist(h)) => {
+                assert_eq!(h.count, 3);
+                assert_eq!(h.min, 10.0);
+                assert_eq!(h.max, 1000.0);
+            }
+            other => panic!("wrong kind {other:?}"),
+        }
+        assert_eq!(snap.get("missing"), None);
+    }
+
+    #[test]
+    fn snapshot_is_sorted_by_name() {
+        let reg = MetricsRegistry::new();
+        reg.set_gauge("zz", 1.0);
+        reg.set_counter("aa", 1);
+        reg.set_counter("mm", 1);
+        let names: Vec<&str> =
+            reg.snapshot().entries.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(names, vec!["aa", "mm", "zz"]);
+    }
+
+    #[test]
+    fn set_forms_are_idempotent() {
+        let reg = MetricsRegistry::new();
+        let mut h = Histogram::new();
+        h.record(5.0);
+        for _ in 0..3 {
+            reg.set_counter("c", 7);
+            reg.set_gauge("g", 2.5);
+            reg.set_histogram("h", h.clone());
+        }
+        let snap = reg.snapshot();
+        assert_eq!(snap.get("c"), Some(&MetricValue::Counter(7)));
+        assert_eq!(snap.get("g"), Some(&MetricValue::Gauge(2.5)));
+        match snap.get("h") {
+            Some(MetricValue::Hist(s)) => assert_eq!(s.count, 1, "no double counting"),
+            other => panic!("wrong kind {other:?}"),
+        }
+    }
+
+    #[test]
+    fn merge_histogram_accumulates() {
+        let reg = MetricsRegistry::new();
+        let mut a = Histogram::new();
+        a.record(10.0);
+        let mut b = Histogram::new();
+        b.record(1000.0);
+        reg.merge_histogram("h", &a);
+        reg.merge_histogram("h", &b);
+        match reg.snapshot().get("h") {
+            Some(MetricValue::Hist(s)) => {
+                assert_eq!(s.count, 2);
+                assert_eq!(s.max, 1000.0);
+            }
+            other => panic!("wrong kind {other:?}"),
+        }
+    }
+
+    #[test]
+    fn kind_conflicts_take_the_last_writer() {
+        let reg = MetricsRegistry::new();
+        reg.inc_counter("x", 4);
+        reg.set_gauge("x", 1.5);
+        assert_eq!(reg.snapshot().get("x"), Some(&MetricValue::Gauge(1.5)));
+        // and an inc on a gauge restarts it as a counter
+        reg.inc_counter("x", 2);
+        assert_eq!(reg.snapshot().get("x"), Some(&MetricValue::Counter(2)));
+    }
+
+    #[test]
+    fn registry_is_shareable_across_threads() {
+        let reg = MetricsRegistry::new();
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    for _ in 0..100 {
+                        reg.inc_counter("hits", 1);
+                        reg.record("lat", 50.0);
+                    }
+                });
+            }
+        });
+        let snap = reg.snapshot();
+        assert_eq!(snap.get("hits"), Some(&MetricValue::Counter(400)));
+        match snap.get("lat") {
+            Some(MetricValue::Hist(h)) => assert_eq!(h.count, 400),
+            other => panic!("wrong kind {other:?}"),
+        }
+    }
+}

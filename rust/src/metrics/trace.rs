@@ -1,0 +1,194 @@
+//! Convergence tracing: recording the four-bound gap trajectory of a GQL
+//! query and fitting its geometric contraction rate.
+//!
+//! Theorem 1 of the paper predicts the Gauss/Radau/Lobatto brackets tighten
+//! like `ρ^i` with `ρ = (√κ − 1)/(√κ + 1)` (see
+//! [`theoretical_rate`]). A [`GapTrace`] captures the measured relative gap
+//! `(upper − lower)/|upper|` per iteration from a `Vec<Bounds>` history and
+//! [`GapTrace::fitted_rate`] least-squares-fits `ln(gap)` against the
+//! iteration index, so experiments (the `rates` command) and `Answer`
+//! metadata can report *measured vs. predicted* contraction directly.
+//!
+//! Tracing is opt-in (`Session::record_traces`, `BlockGql`'s
+//! `record_history`) and happens outside the recurrence arithmetic, so it
+//! cannot perturb the bit-identity contracts.
+
+use crate::quadrature::gql::Bounds;
+
+/// Relative gaps below this are treated as the floating-point noise floor
+/// and excluded from the rate fit (a converged plateau would otherwise
+/// flatten the fitted slope).
+const NOISE_FLOOR: f64 = 1e-13;
+
+/// Measured bracket-gap trajectory of one query.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct GapTrace {
+    /// 1-based Lanczos iteration indices (as reported by `Bounds::iter`).
+    pub iters: Vec<usize>,
+    /// Relative gap `(upper − lower)/|upper|` at each recorded iteration.
+    pub gaps: Vec<f64>,
+}
+
+impl GapTrace {
+    /// Build a trace from a bounds history, stopping at the first exact
+    /// bound or once the relative gap falls under the noise floor.
+    pub fn from_history(history: &[Bounds]) -> Self {
+        let mut iters = Vec::new();
+        let mut gaps = Vec::new();
+        for b in history {
+            if b.exact {
+                break;
+            }
+            let denom = b.upper().abs();
+            if denom <= 0.0 || !denom.is_finite() {
+                break;
+            }
+            let rel = b.gap() / denom;
+            if !rel.is_finite() || rel <= NOISE_FLOOR {
+                break;
+            }
+            iters.push(b.iter);
+            gaps.push(rel);
+        }
+        GapTrace { iters, gaps }
+    }
+
+    /// Number of recorded points.
+    pub fn len(&self) -> usize {
+        self.iters.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.iters.is_empty()
+    }
+
+    /// Final recorded relative gap, if any.
+    pub fn final_gap(&self) -> Option<f64> {
+        self.gaps.last().copied()
+    }
+
+    /// Fitted per-iteration geometric contraction rate: the least-squares
+    /// slope of `ln(gap)` against the iteration index, exponentiated.
+    /// Needs at least 3 points; returns `None` otherwise (too short to
+    /// distinguish a trend from startup transients).
+    pub fn fitted_rate(&self) -> Option<f64> {
+        if self.len() < 3 {
+            return None;
+        }
+        let n = self.len() as f64;
+        let xs = self.iters.iter().map(|&i| i as f64);
+        let ys = self.gaps.iter().map(|g| g.ln());
+        let sx: f64 = xs.clone().sum();
+        let sy: f64 = ys.clone().sum();
+        let sxx: f64 = xs.clone().map(|x| x * x).sum();
+        let sxy: f64 = xs.zip(ys).map(|(x, y)| x * y).sum();
+        let denom = n * sxx - sx * sx;
+        if denom.abs() < f64::EPSILON {
+            return None;
+        }
+        let slope = (n * sxy - sx * sy) / denom;
+        let rate = slope.exp();
+        rate.is_finite().then_some(rate)
+    }
+
+    /// Ratio of the measured rate to the paper's prediction for condition
+    /// number `kappa` — ≤ 1 means converging at least as fast as Theorem 1
+    /// promises. `None` when either rate is unavailable.
+    pub fn rate_vs_theory(&self, kappa: f64) -> Option<f64> {
+        let theory = theoretical_rate(kappa);
+        if theory.is_nan() || theory <= 0.0 {
+            return None;
+        }
+        Some(self.fitted_rate()? / theory)
+    }
+}
+
+/// The paper's predicted per-iteration contraction factor
+/// `ρ = (√κ − 1)/(√κ + 1)` for condition number `κ ≥ 1`.
+pub fn theoretical_rate(kappa: f64) -> f64 {
+    if kappa < 1.0 || !kappa.is_finite() {
+        return f64::NAN;
+    }
+    let s = kappa.sqrt();
+    (s - 1.0) / (s + 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn synthetic_bounds(iter: usize, gap: f64) -> Bounds {
+        // mid-value 1.0; the four bounds bracket it with the given gap
+        Bounds {
+            iter,
+            gauss: 1.0 - gap / 2.0,
+            radau_lower: 1.0 - gap / 2.0,
+            radau_upper: 1.0 + gap / 2.0,
+            lobatto: 1.0 + gap / 2.0,
+            exact: false,
+        }
+    }
+
+    #[test]
+    fn recovers_a_pure_geometric_rate() {
+        let rho = 0.6;
+        let hist: Vec<Bounds> = (1..=20)
+            .map(|i| synthetic_bounds(i, 0.4 * rho.powi(i as i32)))
+            .collect();
+        let t = GapTrace::from_history(&hist);
+        assert_eq!(t.len(), 20);
+        let fitted = t.fitted_rate().expect("enough points");
+        // relative gap = gap/upper ≈ gap/(1+gap/2); slope still → ln ρ
+        assert!((fitted - rho).abs() < 0.02, "fitted {fitted} vs {rho}");
+    }
+
+    #[test]
+    fn truncates_at_exact_and_noise_floor() {
+        let mut hist: Vec<Bounds> =
+            (1..=5).map(|i| synthetic_bounds(i, 0.1 / i as f64)).collect();
+        let mut exact = synthetic_bounds(6, 0.0);
+        exact.exact = true;
+        hist.push(exact);
+        hist.push(synthetic_bounds(7, 0.05));
+        let t = GapTrace::from_history(&hist);
+        assert_eq!(t.len(), 5, "stops at the exact entry");
+
+        let hist2: Vec<Bounds> = vec![
+            synthetic_bounds(1, 1e-2),
+            synthetic_bounds(2, 1e-14), // below noise floor
+            synthetic_bounds(3, 1e-3),
+        ];
+        let t2 = GapTrace::from_history(&hist2);
+        assert_eq!(t2.len(), 1, "stops at the noise floor");
+    }
+
+    #[test]
+    fn short_traces_have_no_rate() {
+        let hist: Vec<Bounds> = (1..=2).map(|i| synthetic_bounds(i, 0.1)).collect();
+        let t = GapTrace::from_history(&hist);
+        assert_eq!(t.fitted_rate(), None);
+        assert!(GapTrace::default().is_empty());
+        assert_eq!(GapTrace::default().final_gap(), None);
+    }
+
+    #[test]
+    fn theoretical_rate_matches_formula() {
+        assert_eq!(theoretical_rate(1.0), 0.0);
+        let r = theoretical_rate(9.0); // √κ = 3 → (3−1)/(3+1) = 0.5
+        assert!((r - 0.5).abs() < 1e-15);
+        assert!(theoretical_rate(0.5).is_nan());
+        assert!(theoretical_rate(f64::INFINITY).is_nan());
+    }
+
+    #[test]
+    fn rate_vs_theory_flags_fast_convergence() {
+        let rho = 0.3;
+        let hist: Vec<Bounds> = (1..=15)
+            .map(|i| synthetic_bounds(i, 0.2 * rho.powi(i as i32)))
+            .collect();
+        let t = GapTrace::from_history(&hist);
+        // κ chosen so theory predicts ~0.5: measured 0.3 → ratio < 1
+        let ratio = t.rate_vs_theory(9.0).expect("rates available");
+        assert!(ratio < 1.0, "ratio {ratio}");
+    }
+}

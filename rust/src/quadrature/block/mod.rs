@@ -368,6 +368,15 @@ impl<'a> BlockGql<'a> {
         self
     }
 
+    /// In-place form of [`BlockGql::record_history`], for owners that
+    /// hold the engine behind a field (the convergence-tracing hook of
+    /// [`Session`](super::query::Session)). History recording sits
+    /// outside the recurrence arithmetic, so toggling it cannot change
+    /// any lane's floating-point op sequence.
+    pub fn set_record_history(&mut self, yes: bool) {
+        self.record_history = yes;
+    }
+
     /// Queue a query `u^T op^{-1} u`; returns its id (push order). Zero
     /// queries resolve immediately (BIF = 0 exactly) without taking a lane.
     pub fn push(&mut self, u: &[f64], stop: StopRule) -> usize {

@@ -52,13 +52,16 @@
 //! including streaming submission, a lane budget of 1, `Reorth::Full` on
 //! ill-conditioned kernels, and multi-worker sweeps.
 
+use super::block::RetireReason;
 use super::gql::{Bounds, GqlOptions};
 use super::is_zero;
 use super::judge::{JudgeOutcome, JudgeStats};
 use super::query::{Answer, Query, Session};
 use super::race::RacePolicy;
+use crate::metrics::{Histogram, MetricsRegistry};
 use crate::sparse::SymOp;
 use std::fmt;
+use std::time::Instant;
 
 /// Identifies one operator (and therefore one session) inside an engine.
 /// Callers pick keys; co-keyed submissions must target the *same*
@@ -155,6 +158,16 @@ pub struct EngineConfig {
     pub workers: usize,
     /// Default race policy for sessions spun up by [`Engine::submit`].
     pub policy: RacePolicy,
+    /// Collect a [`RoundProfile`] (per-round phase timings, per-worker
+    /// busy/idle accounting, per-session step-time histogram). Off by
+    /// default: the unprofiled round loop carries zero instrumentation.
+    /// Timing reads never touch panel math, so profiled answers stay
+    /// bit-identical.
+    pub profile: bool,
+    /// Sessions spun up by this engine record per-query convergence
+    /// traces ([`Session::record_traces`]); resolved estimate answers
+    /// then carry a [`GapTrace`](crate::metrics::GapTrace).
+    pub record_traces: bool,
 }
 
 impl Default for EngineConfig {
@@ -165,6 +178,8 @@ impl Default for EngineConfig {
             ttl_rounds: 32,
             workers: 1,
             policy: RacePolicy::Prune,
+            profile: false,
+            record_traces: false,
         }
     }
 }
@@ -192,6 +207,16 @@ impl EngineConfig {
 
     pub fn with_policy(mut self, p: RacePolicy) -> Self {
         self.policy = p;
+        self
+    }
+
+    pub fn with_profile(mut self, on: bool) -> Self {
+        self.profile = on;
+        self
+    }
+
+    pub fn with_record_traces(mut self, on: bool) -> Self {
+        self.record_traces = on;
         self
     }
 
@@ -252,6 +277,64 @@ pub struct EngineStats {
     pub resumes: usize,
     /// Largest per-round live-lane demand actually admitted.
     pub peak_live_lanes: usize,
+    /// Lanes retired by interval dominance across every session
+    /// (harvested from the [`RetireEvent`](super::block::RetireEvent)
+    /// log — sweeps the pruning saved).
+    pub retired_dominated: usize,
+    /// Lanes retired because the surrounding decision resolved first.
+    pub retired_decided: usize,
+}
+
+/// Cumulative round-loop profile, collected when
+/// [`EngineConfig::profile`] is set (see [`Engine::profile`]).
+///
+/// Phase timings split each round into its three serial phases —
+/// scheduling/refill ([`Engine`]'s lane-budget pass), the panel sweep
+/// (every live session's `matvec_multi` panel + bound updates), and
+/// harvest (answer pulling + TTL eviction). Worker utilization compares
+/// the summed per-session step time (`busy_ns`) against what the engaged
+/// workers *could* have done during the sweep wall time (`capacity_ns`),
+/// so the static-`chunks_mut` tail idleness is a measured number instead
+/// of folklore. `step_ns` aggregates per-session step times from
+/// per-worker thread-local histograms merged at round end — profiling
+/// adds no shared mutable state to the sweep.
+#[derive(Clone, Debug, Default)]
+pub struct RoundProfile {
+    /// Rounds that contributed to this profile.
+    pub rounds: usize,
+    /// Total ns in the lane-budget scheduling pass.
+    pub schedule_ns: u64,
+    /// Total wall-clock ns in the panel sweep phase.
+    pub sweep_ns: u64,
+    /// Total ns in answer harvest + TTL eviction.
+    pub harvest_ns: u64,
+    /// Summed per-session step time across all workers.
+    pub busy_ns: u64,
+    /// Sweep wall time × engaged workers: the time the sweep *bought*.
+    pub capacity_ns: u64,
+    /// Distribution of individual `Session::step` times (ns).
+    pub step_ns: Histogram,
+}
+
+impl RoundProfile {
+    /// Fraction of bought worker time spent stepping sessions.
+    pub fn busy_frac(&self) -> f64 {
+        if self.capacity_ns == 0 {
+            0.0
+        } else {
+            (self.busy_ns as f64 / self.capacity_ns as f64).min(1.0)
+        }
+    }
+
+    /// Fraction of bought worker time spent idle — for the static chunk
+    /// split this is the measured tail-idleness of the sweep fan-out.
+    pub fn idle_frac(&self) -> f64 {
+        if self.capacity_ns == 0 {
+            0.0
+        } else {
+            1.0 - self.busy_frac()
+        }
+    }
 }
 
 /// One live operator: its session plus the tickets still pointing at it.
@@ -264,6 +347,9 @@ struct OpSlot<'a> {
     idle_rounds: usize,
     /// Session sweep count at the last harvest (delta accounting).
     last_sweeps: usize,
+    /// Retire-log length at the last harvest (delta accounting for the
+    /// dominated/decided counters).
+    last_retired: usize,
     /// Set by the planner each round; read by the sweep workers.
     live: bool,
 }
@@ -296,6 +382,10 @@ pub struct Engine<'a> {
     /// start here; advanced by `harvest`).
     first_open: usize,
     stats: EngineStats,
+    /// Round-loop profile, allocated iff [`EngineConfig::profile`] —
+    /// `None` keeps the unprofiled hot path free of even a branch-y
+    /// accumulation.
+    profile: Option<Box<RoundProfile>>,
     next_anon: OpKey,
 }
 
@@ -309,6 +399,7 @@ impl<'a> Engine<'a> {
             tickets: Vec::new(),
             first_open: 0,
             stats: EngineStats::default(),
+            profile: cfg.profile.then(|| Box::new(RoundProfile::default())),
             next_anon: ANON_KEY_BASE,
         })
     }
@@ -320,6 +411,40 @@ impl<'a> Engine<'a> {
     /// Accounting snapshot.
     pub fn stats(&self) -> EngineStats {
         self.stats
+    }
+
+    /// The collected round profile ([`EngineConfig::profile`] engines
+    /// only).
+    pub fn profile(&self) -> Option<&RoundProfile> {
+        self.profile.as_deref()
+    }
+
+    /// Publish stats (and the round profile, when collected) into `reg`
+    /// under `engine.*` names. Idempotent set-style writes.
+    pub fn export_into(&self, reg: &MetricsRegistry) {
+        let st = &self.stats;
+        reg.set_counter("engine.rounds", st.rounds as u64);
+        reg.set_counter("engine.sweeps", st.sweeps as u64);
+        reg.set_counter("engine.submitted", st.submitted as u64);
+        reg.set_counter("engine.sessions_spun", st.sessions_spun as u64);
+        reg.set_counter("engine.sessions_evicted", st.sessions_evicted as u64);
+        reg.set_counter("engine.parks", st.parks as u64);
+        reg.set_counter("engine.resumes", st.resumes as u64);
+        reg.set_counter("engine.retired_dominated", st.retired_dominated as u64);
+        reg.set_counter("engine.retired_decided", st.retired_decided as u64);
+        reg.set_gauge("engine.peak_live_lanes", st.peak_live_lanes as f64);
+        reg.set_gauge("engine.live_sessions", self.slots.len() as f64);
+        if let Some(p) = self.profile.as_deref() {
+            reg.set_counter("engine.profile.rounds", p.rounds as u64);
+            reg.set_counter("engine.profile.schedule_ns", p.schedule_ns);
+            reg.set_counter("engine.profile.sweep_ns", p.sweep_ns);
+            reg.set_counter("engine.profile.harvest_ns", p.harvest_ns);
+            reg.set_counter("engine.profile.busy_ns", p.busy_ns);
+            reg.set_counter("engine.profile.capacity_ns", p.capacity_ns);
+            reg.set_gauge("engine.profile.worker_busy_frac", p.busy_frac());
+            reg.set_gauge("engine.profile.worker_idle_frac", p.idle_frac());
+            reg.set_histogram("engine.profile.step_ns", p.step_ns.clone());
+        }
     }
 
     /// Live (not yet evicted) sessions.
@@ -359,13 +484,17 @@ impl<'a> Engine<'a> {
             // `policy` of later calls are ignored for an existing session
             return i;
         }
-        let session = Session::new(op, opts, width.max(1), policy);
+        let mut session = Session::new(op, opts, width.max(1), policy);
+        if self.cfg.record_traces {
+            session = session.record_traces(true);
+        }
         self.slots.push(OpSlot {
             key,
             session,
             open: Vec::new(),
             idle_rounds: 0,
             last_sweeps: 0,
+            last_retired: 0,
             live: false,
         });
         self.stats.sessions_spun += 1;
@@ -445,6 +574,9 @@ impl<'a> Engine<'a> {
         debug_assert!(ans.is_some(), "cancel resolved the query");
         self.tickets[ticket].answer = ans;
         self.slots[i].open.retain(|&t| t != ticket);
+        // the cancel retired a lane; account it now — no harvest may
+        // follow if this was the engine's last open ticket
+        drain_retire_log(&mut self.slots[i], &mut self.stats);
         true
     }
 
@@ -502,6 +634,9 @@ impl<'a> Engine<'a> {
                 let sw = slot.session.sweeps();
                 self.stats.sweeps += sw - slot.last_sweeps;
                 slot.last_sweeps = sw;
+                // retire-log delta: counted every harvest, so events are
+                // never lost to a same-round TTL eviction
+                drain_retire_log(slot, &mut self.stats);
                 let session = &slot.session;
                 let tickets = &mut self.tickets;
                 slot.open.retain(|&tk| {
@@ -543,6 +678,9 @@ impl<'a> Engine<'a> {
     /// and TTL eviction. Returns `false` (after still harvesting) once no
     /// session has work — every remaining ticket is then resolved.
     pub fn step_round(&mut self) -> bool {
+        if self.profile.is_some() {
+            return self.step_round_profiled();
+        }
         self.schedule();
         let mut live = 0usize;
         for s in &mut self.slots {
@@ -570,6 +708,67 @@ impl<'a> Engine<'a> {
         true
     }
 
+    /// [`Engine::step_round`] with phase timing and worker accounting.
+    /// Kept as a separate body so the unprofiled loop carries zero
+    /// instrumentation; the scheduling/sweep/harvest logic is identical
+    /// (timing only reads clocks — it cannot perturb panel math, so
+    /// profiled answers stay bit-identical).
+    fn step_round_profiled(&mut self) -> bool {
+        let t_sched = Instant::now();
+        self.schedule();
+        let schedule_ns = t_sched.elapsed().as_nanos() as u64;
+
+        let mut live = 0usize;
+        for s in &mut self.slots {
+            s.live = s.session.has_work();
+            if s.live {
+                live += 1;
+            }
+        }
+        if live == 0 {
+            let t_h = Instant::now();
+            self.harvest();
+            if let Some(p) = self.profile.as_deref_mut() {
+                p.schedule_ns += schedule_ns;
+                p.harvest_ns += t_h.elapsed().as_nanos() as u64;
+            }
+            return false;
+        }
+        let workers = self.cfg.workers;
+        let t_sweep = Instant::now();
+        let (steps, busy_ns, engaged) = if workers > 1 && live > 1 {
+            sweep_parallel_profiled(&mut self.slots, workers)
+        } else {
+            let mut h = Histogram::new();
+            let mut busy = 0u64;
+            for s in &mut self.slots {
+                if s.live {
+                    let t = Instant::now();
+                    s.session.step();
+                    let ns = t.elapsed().as_nanos() as u64;
+                    h.record(ns as f64);
+                    busy += ns;
+                }
+            }
+            (h, busy, 1)
+        };
+        let sweep_ns = t_sweep.elapsed().as_nanos() as u64;
+        self.stats.rounds += 1;
+        let t_h = Instant::now();
+        self.harvest();
+        let harvest_ns = t_h.elapsed().as_nanos() as u64;
+        if let Some(p) = self.profile.as_deref_mut() {
+            p.rounds += 1;
+            p.schedule_ns += schedule_ns;
+            p.sweep_ns += sweep_ns;
+            p.harvest_ns += harvest_ns;
+            p.busy_ns += busy_ns;
+            p.capacity_ns += sweep_ns * engaged as u64;
+            p.step_ns.merge(&steps);
+        }
+        true
+    }
+
     /// Drive every submitted query to its answer.
     pub fn drain(&mut self) {
         while self.has_work() {
@@ -579,6 +778,20 @@ impl<'a> Engine<'a> {
         }
         debug_assert!(!self.has_work(), "engine idle with unresolved tickets");
     }
+}
+
+/// Pull new [`RetireEvent`](super::block::RetireEvent)s out of a slot's
+/// session log into the engine counters (delta via the slot's
+/// `last_retired` cursor — each event is counted exactly once).
+fn drain_retire_log(slot: &mut OpSlot<'_>, stats: &mut EngineStats) {
+    let events = slot.session.retired();
+    for e in &events[slot.last_retired..] {
+        match e.reason {
+            RetireReason::Dominated => stats.retired_dominated += 1,
+            RetireReason::Decided => stats.retired_decided += 1,
+        }
+    }
+    slot.last_retired = events.len();
 }
 
 /// The hand-rolled parallel panel sweep (the PR 1 follow-up): fan the
@@ -601,6 +814,49 @@ fn sweep_parallel(slots: &mut [OpSlot<'_>], workers: usize) {
             });
         }
     });
+}
+
+/// [`sweep_parallel`] with per-worker accounting: each worker records its
+/// own step-time histogram and busy nanoseconds thread-locally (no shared
+/// mutable state touches the sweep), merged on the driving thread after
+/// the scope joins. Returns `(step histogram, Σ busy ns, engaged
+/// workers)` — engaged × sweep-wall-time is the capacity the busy
+/// fraction is measured against.
+fn sweep_parallel_profiled(
+    slots: &mut [OpSlot<'_>],
+    workers: usize,
+) -> (Histogram, u64, usize) {
+    let w = workers.min(slots.len()).max(1);
+    let chunk = slots.len().div_ceil(w);
+    let mut steps = Histogram::new();
+    let mut busy_ns = 0u64;
+    let mut engaged = 0usize;
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for part in slots.chunks_mut(chunk) {
+            handles.push(scope.spawn(move || {
+                let mut h = Histogram::new();
+                let mut busy = 0u64;
+                for slot in part {
+                    if slot.live {
+                        let t = Instant::now();
+                        slot.session.step();
+                        let ns = t.elapsed().as_nanos() as u64;
+                        h.record(ns as f64);
+                        busy += ns;
+                    }
+                }
+                (h, busy)
+            }));
+        }
+        engaged = handles.len();
+        for handle in handles {
+            let (h, busy) = handle.join().unwrap();
+            steps.merge(&h);
+            busy_ns += busy;
+        }
+    });
+    (steps, busy_ns, engaged)
 }
 
 // ---------------------------------------------------------------------------
@@ -881,8 +1137,8 @@ mod tests {
         for (a1, a2) in wide.iter().zip(&narrow) {
             match (a1, a2) {
                 (
-                    Answer::Estimate { bounds: b1, iters: i1 },
-                    Answer::Estimate { bounds: b2, iters: i2 },
+                    Answer::Estimate { bounds: b1, iters: i1, .. },
+                    Answer::Estimate { bounds: b2, iters: i2, .. },
                 ) => {
                     assert_eq!(i1, i2, "suspension changed an iteration count");
                     assert_eq!(b1.gauss.to_bits(), b2.gauss.to_bits());
@@ -1001,11 +1257,134 @@ mod tests {
             tickets
                 .iter()
                 .map(|&t| match eng.answer(t).unwrap() {
-                    Answer::Estimate { bounds, iters } => (bounds.gauss.to_bits(), *iters),
+                    Answer::Estimate { bounds, iters, .. } => (bounds.gauss.to_bits(), *iters),
                     other => panic!("wrong answer kind {other:?}"),
                 })
                 .collect::<Vec<_>>()
         };
         assert_eq!(run(1), run(4), "worker count changed a result");
+    }
+
+    #[test]
+    fn profiled_engine_answers_bit_identically_and_measures_phases() {
+        let mut rng = Rng::new(0xE9615);
+        let ops: Vec<_> = (0..4)
+            .map(|_| random_sparse_spd(&mut rng, 16 + rng.below(16), 0.3, 0.05))
+            .collect();
+        let queries: Vec<Vec<f64>> = ops
+            .iter()
+            .map(|(a, _)| (0..a.n).map(|_| rng.normal()).collect())
+            .collect();
+        let run = |cfg: EngineConfig| {
+            let mut eng = Engine::new(cfg).unwrap();
+            let tickets: Vec<usize> = ops
+                .iter()
+                .zip(&queries)
+                .enumerate()
+                .map(|(k, ((a, w), u))| {
+                    eng.submit(
+                        k as OpKey,
+                        a,
+                        GqlOptions::new(w.lo, w.hi),
+                        Query::Estimate { u: u.clone(), stop: StopRule::Exhaust },
+                    )
+                })
+                .collect();
+            eng.drain();
+            let bits: Vec<(u64, usize)> = tickets
+                .iter()
+                .map(|&t| match eng.answer(t).unwrap() {
+                    Answer::Estimate { bounds, iters, .. } => {
+                        (bounds.gauss.to_bits(), *iters)
+                    }
+                    other => panic!("wrong answer kind {other:?}"),
+                })
+                .collect();
+            let profile = eng.profile().cloned();
+            let stats = eng.stats();
+            (bits, profile, stats)
+        };
+        let base = EngineConfig::default().with_workers(2);
+        let (plain, no_profile, _) = run(base);
+        assert!(no_profile.is_none(), "profile off by default");
+        let (profiled, profile, stats) = run(base.with_profile(true));
+        assert_eq!(plain, profiled, "profiling changed an answer bit");
+        let p = profile.expect("profile collected");
+        assert_eq!(p.rounds, stats.rounds, "every round profiled");
+        assert!(p.sweep_ns > 0, "sweep phase timed");
+        assert_eq!(
+            p.step_ns.count() as usize, stats.sweeps,
+            "one step sample per session sweep"
+        );
+        assert!(p.busy_ns <= p.capacity_ns, "busy cannot exceed capacity");
+        let busy = p.busy_frac();
+        assert!((0.0..=1.0).contains(&busy), "busy_frac {busy}");
+        assert!((p.idle_frac() - (1.0 - busy)).abs() < 1e-12);
+
+        // registry export surfaces the acceptance-criteria names
+        let reg = MetricsRegistry::new();
+        let mut eng = Engine::new(base.with_profile(true)).unwrap();
+        let (a, w) = &ops[0];
+        eng.submit(
+            0,
+            a,
+            GqlOptions::new(w.lo, w.hi),
+            Query::Estimate { u: queries[0].clone(), stop: StopRule::Exhaust },
+        );
+        eng.drain();
+        eng.export_into(&reg);
+        let snap = reg.snapshot();
+        for name in [
+            "engine.rounds",
+            "engine.sweeps",
+            "engine.profile.sweep_ns",
+            "engine.profile.schedule_ns",
+            "engine.profile.harvest_ns",
+            "engine.profile.worker_busy_frac",
+            "engine.profile.worker_idle_frac",
+        ] {
+            assert!(snap.get(name).is_some(), "missing exported metric {name}");
+        }
+    }
+
+    #[test]
+    fn retire_counters_pull_from_the_session_retire_log() {
+        use crate::quadrature::query::QueryArm;
+        let mut rng = Rng::new(0xE9616);
+        let (a, w) = random_sparse_spd(&mut rng, 24, 0.3, 0.05);
+        let opts = GqlOptions::new(w.lo, w.hi);
+        let mut eng = Engine::new(EngineConfig::default()).unwrap();
+
+        // a cancelled estimate retires its lane with RetireReason::Decided
+        // and must be counted even though no harvest follows the cancel
+        let u = randvec(&mut rng, 24);
+        let t = eng.submit(3, &a, opts, Query::Estimate { u, stop: StopRule::Exhaust });
+        assert!(eng.step_round());
+        assert!(eng.cancel(t), "mid-flight estimate cancels");
+        assert_eq!(eng.stats().retired_decided, 1);
+        assert_eq!(eng.stats().retired_dominated, 0);
+
+        // an argmax whose offsets are separated far beyond any BIF value
+        // prunes every losing arm by dominance in the first resolution
+        // round and crowns the still-racing winner (Decided)
+        let arms: Vec<QueryArm> = (0..5)
+            .map(|k| QueryArm {
+                u: randvec(&mut rng, 24),
+                stop: StopRule::Exhaust,
+                offset: 1e6 * k as f64,
+                scale: 1.0,
+            })
+            .collect();
+        let t2 = eng.submit(3, &a, opts, Query::Argmax { arms, floor: None });
+        eng.drain();
+        assert!(eng.is_resolved(t2));
+        let st = eng.stats();
+        assert_eq!(st.retired_dominated, 4, "four arms dominated");
+        assert_eq!(st.retired_decided, 2, "cancelled lane + crowned winner");
+        // counters are deltas over the log, never double counted
+        eng.drain();
+        let again = eng.stats();
+        assert_eq!(again.retired_dominated, 4);
+        assert_eq!(again.retired_decided, 2);
     }
 }

@@ -56,6 +56,7 @@ use super::block::{BlockGql, RetireEvent, RetireReason, StopRule};
 use super::gql::{Bounds, GqlOptions};
 use super::judge::{ratio_verdict, JudgeOutcome, JudgeStats};
 use super::race::{PRUNE_MARGIN, RacePolicy, RaceStats};
+use crate::metrics::{GapTrace, MetricsRegistry};
 use crate::sparse::SymOp;
 
 /// One candidate of a [`Query::Argmax`]: the arm's value is the affine
@@ -104,7 +105,11 @@ pub enum Query {
 #[derive(Clone, Debug)]
 pub enum Answer {
     /// Final bounds of an estimate lane and the iterations it consumed.
-    Estimate { bounds: Bounds, iters: usize },
+    /// `trace` carries the lane's gap trajectory when the session records
+    /// convergence traces ([`Session::record_traces`]); `None` otherwise
+    /// (and for cancelled estimates, whose history is lost with the
+    /// retired lane). Boxed so the common untraced answer stays small.
+    Estimate { bounds: Bounds, iters: usize, trace: Option<Box<GapTrace>> },
     /// Threshold decision plus the judge accounting.
     Threshold { decision: bool, stats: JudgeStats },
     /// Compare decision plus the judge accounting (`iters` sums both
@@ -131,6 +136,15 @@ impl Answer {
     pub fn winner(&self) -> Option<Option<usize>> {
         match self {
             Answer::Argmax { winner, .. } => Some(*winner),
+            _ => None,
+        }
+    }
+
+    /// The convergence trace of a traced estimate answer (`None` for
+    /// other kinds or untraced sessions).
+    pub fn trace(&self) -> Option<&GapTrace> {
+        match self {
+            Answer::Estimate { trace, .. } => trace.as_deref(),
             _ => None,
         }
     }
@@ -285,6 +299,9 @@ pub struct Session<'a> {
     unresolved: usize,
     /// Worst observed relative bracket non-monotonicity (see module docs).
     wiggle: f64,
+    /// Estimate answers carry a [`GapTrace`] (see
+    /// [`Session::record_traces`]).
+    trace_enabled: bool,
 }
 
 impl<'a> Session<'a> {
@@ -303,7 +320,20 @@ impl<'a> Session<'a> {
             latest: Vec::new(),
             unresolved: 0,
             wiggle: 0.0,
+            trace_enabled: false,
         }
+    }
+
+    /// Opt into convergence tracing: every lane records its per-iteration
+    /// bound history and resolved [`Answer::Estimate`]s carry a
+    /// [`GapTrace`] of the bracket-gap trajectory. Recording happens
+    /// outside the recurrence arithmetic, so traced runs stay
+    /// bit-identical to untraced ones (the cost is the history `Vec` per
+    /// lane). Set it before submitting queries.
+    pub fn record_traces(mut self, yes: bool) -> Self {
+        self.trace_enabled = yes;
+        self.eng.set_record_history(yes);
+        self
     }
 
     fn push_lane(&mut self, u: &[f64], stop: StopRule, qid: usize, role: Role) -> usize {
@@ -526,7 +556,8 @@ impl<'a> Session<'a> {
         }
         let ok = self.eng.retire(lane, RetireReason::Decided);
         debug_assert!(ok, "unresolved estimate lane must be retirable");
-        self.resolve(qid, Answer::Estimate { bounds: b, iters: b.iter });
+        // no trace even when enabled: the lane's history is gone with it
+        self.resolve(qid, Answer::Estimate { bounds: b, iters: b.iter, trace: None });
         true
     }
 
@@ -562,6 +593,36 @@ impl<'a> Session<'a> {
             pruned,
             decided_early,
             prune_margin: self.prune_margin(),
+        }
+    }
+
+    /// Publish the session accounting into `reg` under `session.*` names
+    /// (idempotent set-style writes), plus per-resolved-query fitted
+    /// contraction rates when tracing is enabled.
+    pub fn export_into(&self, reg: &MetricsRegistry) {
+        let st = self.stats();
+        reg.set_counter("session.queries", st.queries as u64);
+        reg.set_counter("session.lanes", st.lanes as u64);
+        reg.set_counter("session.sweeps", st.sweeps as u64);
+        reg.set_counter("session.pruned", st.pruned as u64);
+        reg.set_counter("session.decided_early", st.decided_early as u64);
+        reg.set_gauge("session.prune_margin", st.prune_margin);
+        reg.set_gauge("session.unresolved", self.unresolved as f64);
+        if self.trace_enabled {
+            let mut rates = crate::metrics::Histogram::new();
+            for q in &self.queries {
+                if let Some(rate) = q
+                    .answer
+                    .as_ref()
+                    .and_then(Answer::trace)
+                    .and_then(GapTrace::fitted_rate)
+                {
+                    rates.record(rate);
+                }
+            }
+            if rates.count() > 0 {
+                reg.set_histogram("session.fitted_contraction_rate", rates);
+            }
         }
     }
 
@@ -607,7 +668,13 @@ impl<'a> Session<'a> {
             let mut answered: Option<Answer> = None;
             match (&mut self.queries[qid].spec, role) {
                 (Spec::Estimate { .. }, Role::Single) => {
-                    answered = Some(Answer::Estimate { bounds: r.bounds, iters: r.iters });
+                    let trace = if self.trace_enabled && !r.history.is_empty() {
+                        Some(Box::new(GapTrace::from_history(&r.history)))
+                    } else {
+                        None
+                    };
+                    answered =
+                        Some(Answer::Estimate { bounds: r.bounds, iters: r.iters, trace });
                 }
                 (Spec::Threshold { t, .. }, Role::Single) => {
                     let t = *t;
@@ -902,7 +969,7 @@ mod tests {
             let mut s = Session::new(&a, opts, 1, RacePolicy::Prune);
             let qid = s.submit(Query::Estimate { u, stop: StopRule::GapRel(1e-8) });
             match &s.run()[qid] {
-                Answer::Estimate { bounds, iters } => {
+                Answer::Estimate { bounds, iters, .. } => {
                     assert_eq!(*iters, reference.iters);
                     assert_eq!(bounds.gauss.to_bits(), reference.bounds.gauss.to_bits());
                     assert_eq!(
@@ -913,6 +980,52 @@ mod tests {
                 other => panic!("wrong answer kind {other:?}"),
             }
         });
+    }
+
+    #[test]
+    fn traced_session_is_bit_identical_and_carries_a_gap_trace() {
+        let mut rng = Rng::new(0x5E5509);
+        let n = 24;
+        let (a, w) = random_sparse_spd(&mut rng, n, 0.3, 0.05);
+        let opts = GqlOptions::new(w.lo, w.hi);
+        let u = randvec(&mut rng, n);
+
+        let mut plain = Session::new(&a, opts, 1, RacePolicy::Prune);
+        let p = plain.submit(Query::Estimate { u: u.clone(), stop: StopRule::GapRel(1e-8) });
+        let plain_ans = plain.run();
+
+        let mut traced =
+            Session::new(&a, opts, 1, RacePolicy::Prune).record_traces(true);
+        let t = traced.submit(Query::Estimate { u, stop: StopRule::GapRel(1e-8) });
+        let traced_ans = traced.run();
+
+        // tracing must not perturb the arithmetic
+        let (pb, tb) = match (&plain_ans[p], &traced_ans[t]) {
+            (
+                Answer::Estimate { bounds: pb, trace: none, .. },
+                Answer::Estimate { bounds: tb, .. },
+            ) => {
+                assert!(none.is_none(), "untraced session must not record");
+                (*pb, *tb)
+            }
+            other => panic!("wrong answer kinds {other:?}"),
+        };
+        assert_eq!(pb.gauss.to_bits(), tb.gauss.to_bits());
+        assert_eq!(pb.radau_upper.to_bits(), tb.radau_upper.to_bits());
+
+        let trace = traced_ans[t].trace().expect("traced answer carries a trace");
+        assert!(trace.len() >= 3, "expected a multi-point trace, got {}", trace.len());
+        let rate = trace.fitted_rate().expect("fit succeeds on a real trajectory");
+        assert!(rate > 0.0 && rate < 1.0, "contraction rate {rate} not in (0, 1)");
+
+        let reg = MetricsRegistry::new();
+        traced.export_into(&reg);
+        let snap = reg.snapshot();
+        assert!(snap.get("session.queries").is_some());
+        assert!(
+            snap.get("session.fitted_contraction_rate").is_some(),
+            "traced session export publishes the rate histogram"
+        );
     }
 
     #[test]

@@ -3,6 +3,8 @@
 //! mean / median / p95 / stddev, and renders aligned tables so each
 //! `benches/bench_*.rs` can print the same rows the paper's tables report.
 
+use std::io::Write;
+use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
 /// One benchmark measurement summary (nanoseconds).
@@ -21,6 +23,22 @@ pub struct Stats {
 impl Stats {
     pub fn mean_secs(&self) -> f64 {
         self.mean_ns / 1e9
+    }
+
+    /// A one-sample summary for drivers that time a single end-to-end run
+    /// (the figure/table reproductions) but still want to land in the
+    /// perf-trajectory JSON next to the sampled benches.
+    pub fn single(name: &str, ns: f64) -> Stats {
+        Stats {
+            name: name.to_string(),
+            samples: 1,
+            mean_ns: ns,
+            median_ns: ns,
+            p95_ns: ns,
+            stddev_ns: 0.0,
+            min_ns: ns,
+            max_ns: ns,
+        }
     }
 
     /// Human units: "123.4 ns", "4.56 µs", "7.8 ms", "1.2 s".
@@ -76,8 +94,15 @@ impl Default for Bencher {
 }
 
 impl Bencher {
+    /// Default profile — except under `BENCH_QUICK=1` (the CI smoke
+    /// setting), which swaps in the [`Bencher::quick`] knobs so a full
+    /// bench suite finishes in seconds.
     pub fn new() -> Self {
-        Self::default()
+        if std::env::var_os("BENCH_QUICK").is_some() {
+            Self::quick()
+        } else {
+            Self::default()
+        }
     }
 
     /// Quick profile for expensive end-to-end drivers (few samples).
@@ -137,6 +162,52 @@ impl Bencher {
     pub fn results(&self) -> &[Stats] {
         &self.results
     }
+
+    /// Write every result this runner has accumulated as the
+    /// `BENCH_<bench>.json` perf-trajectory artifact (see
+    /// [`write_stats_json`]).
+    pub fn write_json(&self, bench: &str) -> std::io::Result<PathBuf> {
+        write_stats_json(bench, &self.results)
+    }
+}
+
+/// Emit a perf-trajectory artifact `BENCH_<bench>.json` under the
+/// directory named by the `BENCH_OUT` env var (default `results/`),
+/// creating the directory if needed. Returns the path written.
+///
+/// Schema (version 1), times in nanoseconds:
+/// `{"bench": "...", "version": 1, "results":
+///   [{"name": "...", "mean": ns, "median": ns, "p95": ns, "n": samples}]}`
+///
+/// The output round-trips through the crate's own `config::json` parser,
+/// so CI can validate emitted artifacts without external tooling.
+pub fn write_stats_json(bench: &str, stats: &[Stats]) -> std::io::Result<PathBuf> {
+    use crate::metrics::export::{json_escape, json_num};
+    let dir = std::env::var_os("BENCH_OUT")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("results"));
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join(format!("BENCH_{bench}.json"));
+    let mut out = String::from("{\n");
+    out.push_str(&format!("  \"bench\": \"{}\",\n", json_escape(bench)));
+    out.push_str("  \"version\": 1,\n  \"results\": [");
+    for (i, s) in stats.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "\n    {{\"name\": \"{}\", \"mean\": {}, \"median\": {}, \"p95\": {}, \"n\": {}}}",
+            json_escape(&s.name),
+            json_num(s.mean_ns),
+            json_num(s.median_ns),
+            json_num(s.p95_ns),
+            s.samples
+        ));
+    }
+    out.push_str("\n  ]\n}\n");
+    let mut f = std::fs::File::create(&path)?;
+    f.write_all(out.as_bytes())?;
+    Ok(path)
 }
 
 /// Aligned markdown-ish table printer used by the table-reproduction benches.
@@ -238,6 +309,33 @@ mod tests {
         assert_eq!(lines.len(), 4);
         assert_eq!(lines[0].len(), lines[2].len());
         assert!(lines[0].contains("data"));
+    }
+
+    #[test]
+    fn stats_json_round_trips_through_our_own_parser() {
+        let dir = std::env::temp_dir().join("gauss_bif_bench_json_test");
+        // the env var is process-global; tests in this binary run in
+        // threads, so scope the override to this one writer call order
+        std::env::set_var("BENCH_OUT", &dir);
+        let stats =
+            vec![Stats::single("scalar n=64", 1234.5), Stats::single("panel \"w8\"", 8e6)];
+        let path = write_stats_json("smoke", &stats).expect("write succeeds");
+        std::env::remove_var("BENCH_OUT");
+        assert!(path.ends_with("BENCH_smoke.json"), "unexpected path {path:?}");
+        let text = std::fs::read_to_string(&path).expect("artifact readable");
+        let doc = crate::config::json::parse(&text).expect("artifact parses");
+        assert_eq!(doc.get("bench").and_then(|b| b.as_str()), Some("smoke"));
+        assert_eq!(doc.get("version").and_then(|v| v.as_f64()), Some(1.0));
+        let results =
+            doc.get("results").and_then(|r| r.as_arr()).expect("results array");
+        assert_eq!(results.len(), 2);
+        let first = &results[0];
+        assert_eq!(first.get("name").and_then(|n| n.as_str()), Some("scalar n=64"));
+        assert_eq!(first.get("mean").and_then(|m| m.as_f64()), Some(1234.5));
+        assert_eq!(first.get("n").and_then(|n| n.as_f64()), Some(1.0));
+        let second = &results[1];
+        assert_eq!(second.get("name").and_then(|n| n.as_str()), Some("panel \"w8\""));
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

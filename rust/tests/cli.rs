@@ -44,6 +44,43 @@ fn rates_passes_and_writes_csv() {
 }
 
 #[test]
+fn rates_telemetry_flag_dumps_a_registry_snapshot() {
+    let out = tmp_out("telemetry");
+    let snap_path = out.join("telemetry.json");
+    let o = bin()
+        .args([
+            "rates",
+            "--out",
+            out.to_str().unwrap(),
+            "--sizes",
+            "24",
+            "--telemetry",
+            snap_path.to_str().unwrap(),
+        ])
+        .output()
+        .expect("run rates with telemetry");
+    assert!(o.status.success(), "stderr: {}", String::from_utf8_lossy(&o.stderr));
+    let stdout = String::from_utf8_lossy(&o.stdout);
+    assert!(stdout.contains("telemetry snapshot:"), "{stdout}");
+    let text = std::fs::read_to_string(&snap_path).expect("snapshot written");
+    // spot-check the acceptance names: version header, experiment gauges,
+    // engine round profile, worker accounting, contraction rates
+    for key in [
+        "\"version\"",
+        "\"rates.n24.rho\"",
+        "\"rates.n24.fitted_rate\"",
+        "\"engine.profile.schedule_ns\"",
+        "\"engine.profile.sweep_ns\"",
+        "\"engine.profile.worker_busy_frac\"",
+        "\"engine.profile.worker_idle_frac\"",
+        "\"engine.profile.step_ns\"",
+        "\"run.wall_time_s\"",
+    ] {
+        assert!(text.contains(key), "snapshot missing {key}:\n{text}");
+    }
+}
+
+#[test]
 fn info_lists_datasets_and_artifacts() {
     let o = bin().arg("info").output().expect("run info");
     assert!(o.status.success());

@@ -75,8 +75,8 @@ fn assert_bounds_eq(x: &Bounds, y: &Bounds, ctx: &str) {
 fn assert_same_answer(a: &Answer, b: &Answer, ctx: &str) {
     match (a, b) {
         (
-            Answer::Estimate { bounds: x, iters: xi },
-            Answer::Estimate { bounds: y, iters: yi },
+            Answer::Estimate { bounds: x, iters: xi, .. },
+            Answer::Estimate { bounds: y, iters: yi, .. },
         ) => {
             assert_eq!(xi, yi, "{ctx}: estimate iters");
             assert_bounds_eq(x, y, ctx);

@@ -99,7 +99,7 @@ fn check_mixed_session(rng: &mut Rng, l: &Csr, opts: GqlOptions) {
         assert_eq!(answers[q_c].decision(), Some(want_c), "compare decision diverged");
         assert_eq!(answers[q_a].winner(), Some(want_winner), "argmax winner diverged");
         match &answers[q_e] {
-            Answer::Estimate { bounds, iters } => {
+            Answer::Estimate { bounds, iters, .. } => {
                 assert_eq!(*iters, est_ref.iters, "estimate iters diverged");
                 assert_eq!(
                     bounds.gauss.to_bits(),
