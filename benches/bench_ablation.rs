@@ -174,6 +174,7 @@ fn main() {
     println!("== ablation 5: DPP step cost — exact vs incremental vs gauss ==");
     let mut rng3 = Rng::new(0xAB5);
     let (l, w3) = random_sparse_spd(&mut rng3, 700, 5e-3, 1e-2);
+    let l = std::sync::Arc::new(l);
     let mut table = Table::new(&["strategy", "ms/step"]);
     let mut extra: Vec<Stats> = Vec::new();
     for (name, strategy, steps) in [

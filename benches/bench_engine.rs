@@ -19,9 +19,10 @@ use gauss_bif::quadrature::GqlOptions;
 use gauss_bif::sparse::Csr;
 use gauss_bif::util::bench::{Bencher, Stats, Table};
 use gauss_bif::util::rng::Rng;
+use std::sync::Arc;
 
 struct Workload {
-    ops: Vec<(Csr, GqlOptions)>,
+    ops: Vec<(Arc<Csr>, GqlOptions)>,
     /// per-operator query vectors
     queries: Vec<Vec<Vec<f64>>>,
 }
@@ -39,7 +40,7 @@ fn build(n: usize, ops: usize, per_op: usize, seed: u64) -> Workload {
         let qs: Vec<Vec<f64>> = (0..per_op)
             .map(|_| (0..n).map(|_| rng.normal()).collect())
             .collect();
-        kernels.push((a, GqlOptions::new(w.lo, w.hi)));
+        kernels.push((Arc::new(a), GqlOptions::new(w.lo, w.hi)));
         queries.push(qs);
     }
     Workload { ops: kernels, queries }
@@ -50,12 +51,12 @@ fn build(n: usize, ops: usize, per_op: usize, seed: u64) -> Workload {
 fn run_sequential(w: &Workload) -> Vec<u64> {
     let mut bits = Vec::new();
     for ((a, opts), qs) in w.ops.iter().zip(&w.queries) {
-        let mut s = Session::new(a, *opts, WIDTH, RacePolicy::Prune);
+        let mut s = Session::new(&**a, *opts, WIDTH, RacePolicy::Prune);
         let qids: Vec<usize> = qs
             .iter()
             .map(|u| s.submit(Query::Estimate { u: u.clone(), stop: STOP }))
             .collect();
-        let answers = s.run();
+        let answers = s.run(&**a);
         for qid in qids {
             match &answers[qid] {
                 Answer::Estimate { bounds, .. } => bits.push(bounds.gauss.to_bits()),
@@ -81,7 +82,7 @@ fn run_engine(w: &Workload, workers: usize) -> Vec<u64> {
         for u in qs {
             tickets.push(eng.submit(
                 k as OpKey,
-                a,
+                Arc::clone(a),
                 *opts,
                 Query::Estimate { u: u.clone(), stop: STOP },
             ));

@@ -27,6 +27,7 @@ fn main() {
     ]);
     for &(k, width) in &[(4usize, 8usize), (8, 16), (16, 32)] {
         let (l, w) = gapped_kernel(&mut rng, n, density, 2 * k, 50.0);
+        let l = std::sync::Arc::new(l);
         let base = GreedyConfig::new(w, k).with_block_width(width);
         let mut sweeps = [0usize; 2];
         let mut sel: [Vec<usize>; 2] = [Vec::new(), Vec::new()];

@@ -10,6 +10,7 @@ use gauss_bif::datasets::{table1_specs, RIDGE};
 use gauss_bif::sparse::gershgorin_bounds;
 use gauss_bif::util::bench::{fmt_sci, fmt_speedup};
 use gauss_bif::util::rng::Rng;
+use std::sync::Arc;
 use std::time::Instant;
 
 fn main() {
@@ -18,7 +19,7 @@ fn main() {
     // for a live demo (Table 2's full-scale run lives in EXPERIMENTS.md).
     let spec = &table1_specs()[0];
     let scale = 8;
-    let l = spec.build(&mut rng, scale);
+    let l = Arc::new(spec.build(&mut rng, scale));
     let window = gershgorin_bounds(&l).clamp_lo(RIDGE * 0.5);
     let n = l.n;
     let k = n / 3;

@@ -6,6 +6,7 @@ fn main() {
     for &n in &[5000usize, 20000, 50000] {
         let mut rng = Rng::new(0xFEED);
         let (l, w) = random_sparse_spd(&mut rng, n, 2e-4, 1e-2);
+        let l = std::sync::Arc::new(l);
         let mut r = Rng::new(1);
         let mut s = DppSampler::new(&l, DppConfig::new(BifStrategy::Gauss, w).with_init_size(n/3), &mut r);
         let steps = 300;

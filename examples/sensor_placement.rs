@@ -14,6 +14,7 @@ use gauss_bif::datasets::{rbf_kernel_csr, PointCloud, RIDGE};
 use gauss_bif::sparse::gershgorin_bounds;
 use gauss_bif::util::bench::{fmt_sci, fmt_speedup};
 use gauss_bif::util::rng::Rng;
+use std::sync::Arc;
 use std::time::Instant;
 
 fn main() {
@@ -23,7 +24,7 @@ fn main() {
     // with hard locality (as in GP-based spatial monitoring).
     let n = 600;
     let cloud = PointCloud::synthetic(&mut rng, n, 2);
-    let l = rbf_kernel_csr(&cloud, 0.12, 0.36, 0.02).with_diag_shift(RIDGE);
+    let l = Arc::new(rbf_kernel_csr(&cloud, 0.12, 0.36, 0.02).with_diag_shift(RIDGE));
     let window = gershgorin_bounds(&l).clamp_lo(RIDGE * 0.5);
     println!(
         "sensor field: {} candidate locations, kernel nnz = {} (density {:.2e})",

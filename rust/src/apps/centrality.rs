@@ -38,24 +38,25 @@ pub struct CentralityResult {
 /// Interval tracker for one node's centrality via polarization: both
 /// terms are estimate queries on one width-2 session panel, so each
 /// refinement costs a single traversal of the shared operator.
-struct NodeBracket<'a> {
+struct NodeBracket {
     node: usize,
-    session: Session<'a>,
+    session: Session,
     q_plus: usize,
     q_minus: usize,
     lo: f64,
     hi: f64,
 }
 
-impl NodeBracket<'_> {
-    /// One panel sweep (both terms advance together). Returns how many
-    /// lanes could still refine, for iteration accounting.
-    fn refine(&mut self) -> usize {
+impl NodeBracket {
+    /// One panel sweep of the shared operator `m` (both terms advance
+    /// together). Returns how many lanes could still refine, for
+    /// iteration accounting.
+    fn refine(&mut self, m: &Csr) -> usize {
         let live = [self.q_plus, self.q_minus]
             .iter()
             .filter(|&&q| !self.session.is_resolved(q))
             .count();
-        self.session.step();
+        self.session.step(m);
         let bp = self.session.bounds(self.q_plus).expect("plus lane has bounds");
         let bm = self.session.bounds(self.q_minus).expect("minus lane has bounds");
         let (mlo, mhi) = (bm.lower(), bm.upper());
@@ -130,7 +131,7 @@ pub fn rank_top_k_centrality(
 
     let mut iters = 0usize;
     for b in brackets.iter_mut() {
-        iters += b.refine();
+        iters += b.refine(&m);
     }
 
     // Refine until the k-th and (k+1)-th intervals separate.
@@ -168,7 +169,7 @@ pub fn rank_top_k_centrality(
             .filter(|&i| brackets[i].hi >= kth_lo && brackets[i].lo <= rest_hi)
             .max_by(|&x, &y| brackets[x].gap().partial_cmp(&brackets[y].gap()).unwrap());
         match widest {
-            Some(i) => iters += brackets[i].refine(),
+            Some(i) => iters += brackets[i].refine(&m),
             None => {
                 let top = order[..k].iter().map(|&i| brackets[i].node).collect();
                 return finish(top, brackets, iters);

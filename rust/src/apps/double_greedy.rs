@@ -32,6 +32,7 @@ use crate::quadrature::race::{race_dg, RacePolicy};
 use crate::quadrature::GqlOptions;
 use crate::sparse::{Csr, SpectrumBounds, SubmatrixView};
 use crate::util::rng::Rng;
+use std::sync::Arc;
 
 /// Configuration for a double-greedy run.
 #[derive(Clone, Copy, Debug)]
@@ -118,8 +119,10 @@ fn exact_bif(l: &Csr, idx: &[usize], v: usize) -> f64 {
     Cholesky::factor(&sub).expect("submatrix must be PD").bif(&col)
 }
 
-/// Run double greedy on the kernel `l`.
-pub fn double_greedy(l: &Csr, cfg: DgConfig, rng: &mut Rng) -> DgResult {
+/// Run double greedy on the kernel `l` (shared behind an [`Arc`] so the
+/// joint path's submatrix views can move into the engine's operator
+/// store).
+pub fn double_greedy(l: &Arc<Csr>, cfg: DgConfig, rng: &mut Rng) -> DgResult {
     let n = cfg.limit.unwrap_or(l.n).min(l.n);
     let mut x: Vec<usize> = Vec::new();
     let mut y: Vec<usize> = (0..n).collect();
@@ -181,19 +184,21 @@ pub fn double_greedy(l: &Csr, cfg: DgConfig, rng: &mut Rng) -> DgResult {
                 let uy = view_y.column_of(i);
                 let (ans, js) = if cfg.joint {
                     // cross-operator scheduling: both sides share one
-                    // engine, one panel per operator per round
+                    // engine, one panel per operator per round; the specs
+                    // own their views (the engine's store pins them for
+                    // the race and drops them when the tickets compact)
                     let mut eng = Engine::new(
                         EngineConfig::default().with_width(1).with_lanes(2).with_ttl_rounds(4),
                     )
                     .expect("static engine config is valid");
                     let spec_x = (!x.is_empty()).then_some(DgSideSpec {
-                        op: &view_x as &dyn crate::sparse::SymOp,
-                        u: ux.as_slice(),
+                        op: Arc::new(view_x),
+                        u: ux,
                         opts: cfg.gql_opts(),
                     });
                     let spec_y = (!y_rest.is_empty()).then_some(DgSideSpec {
-                        op: &view_y as &dyn crate::sparse::SymOp,
-                        u: uy.as_slice(),
+                        op: Arc::new(view_y),
+                        u: uy,
                         opts: cfg.gql_opts(),
                     });
                     race_dg_joint(&mut eng, spec_x, spec_y, l_ii, p, cfg.race)
@@ -242,11 +247,16 @@ mod tests {
     use crate::datasets::random_sparse_spd;
     use crate::util::prop::forall;
 
+    fn setup(rng: &mut Rng, n: usize, density: f64) -> (Arc<Csr>, SpectrumBounds) {
+        let (l, w) = random_sparse_spd(rng, n, density, 0.05);
+        (Arc::new(l), w)
+    }
+
     #[test]
     fn gauss_and_exact_choose_identical_sets() {
         forall(6, 0xD6, |rng| {
             let n = 16 + rng.below(24);
-            let (l, w) = random_sparse_spd(rng, n, 0.2, 0.05);
+            let (l, w) = setup(rng, n, 0.2);
             let seed = rng.next_u64();
             let run = |strategy| {
                 let mut r = Rng::new(seed);
@@ -260,7 +270,7 @@ mod tests {
     fn incremental_matches_exact() {
         forall(5, 0xD7, |rng| {
             let n = 12 + rng.below(16);
-            let (l, w) = random_sparse_spd(rng, n, 0.3, 0.05);
+            let (l, w) = setup(rng, n, 0.3);
             let seed = rng.next_u64();
             let run = |strategy| {
                 let mut r = Rng::new(seed);
@@ -273,7 +283,7 @@ mod tests {
     #[test]
     fn objective_reported_matches_selection() {
         let mut rng = Rng::new(0xD8);
-        let (l, w) = random_sparse_spd(&mut rng, 30, 0.2, 0.05);
+        let (l, w) = setup(&mut rng, 30, 0.2);
         let res = double_greedy(&l, DgConfig::new(BifStrategy::Exact, w), &mut rng);
         if !res.chosen.is_empty() {
             let want = Cholesky::factor(&l.principal_submatrix(&res.chosen).to_dense())
@@ -286,7 +296,7 @@ mod tests {
     #[test]
     fn limit_restricts_ground_set() {
         let mut rng = Rng::new(0xD9);
-        let (l, w) = random_sparse_spd(&mut rng, 40, 0.2, 0.05);
+        let (l, w) = setup(&mut rng, 40, 0.2);
         let res = double_greedy(
             &l,
             DgConfig::new(BifStrategy::Gauss, w).with_limit(10),
@@ -302,7 +312,7 @@ mod tests {
         // stops at first bracket separation or refines both sides fully
         forall(6, 0xDB, |rng| {
             let n = 16 + rng.below(20);
-            let (l, w) = random_sparse_spd(rng, n, 0.25, 0.05);
+            let (l, w) = setup(rng, n, 0.25);
             let seed = rng.next_u64();
             let run = |race| {
                 let mut r = Rng::new(seed);
@@ -331,7 +341,7 @@ mod tests {
         // alternation (and the exact baseline) picks
         forall(5, 0xDC, |rng| {
             let n = 16 + rng.below(20);
-            let (l, w) = random_sparse_spd(rng, n, 0.25, 0.05);
+            let (l, w) = setup(rng, n, 0.25);
             let seed = rng.next_u64();
             let run = |joint| {
                 let mut r = Rng::new(seed);
@@ -353,7 +363,7 @@ mod tests {
     #[test]
     fn deterministic_under_seed() {
         let mut rng = Rng::new(0xDA);
-        let (l, w) = random_sparse_spd(&mut rng, 25, 0.25, 0.05);
+        let (l, w) = setup(&mut rng, 25, 0.25);
         let r1 = {
             let mut r = Rng::new(7);
             double_greedy(&l, DgConfig::new(BifStrategy::Gauss, w), &mut r)

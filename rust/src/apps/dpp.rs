@@ -24,12 +24,13 @@
 use super::BifStrategy;
 use crate::linalg::{Cholesky, MaintainedInverse};
 use crate::quadrature::block::StopRule;
-use crate::quadrature::engine::{Engine, EngineConfig, EngineConfigError};
+use crate::quadrature::engine::{Engine, EngineConfig, EngineConfigError, Ticket};
 use crate::quadrature::query::{Answer, Query, QueryArm, Session};
 use crate::quadrature::race::RacePolicy;
 use crate::quadrature::{judge_threshold, GqlOptions, Reorth};
 use crate::sparse::{Csr, SpectrumBounds, SubmatrixView};
 use crate::util::rng::Rng;
+use std::sync::Arc;
 
 /// Configuration for a DPP chain.
 #[derive(Clone, Copy, Debug)]
@@ -68,9 +69,11 @@ pub struct DppStats {
     pub decisions: usize,
 }
 
-/// One MH DPP chain.
-pub struct DppSampler<'a> {
-    l: &'a Csr,
+/// One MH DPP chain. The kernel is held behind an [`Arc`] (shared with
+/// the caller and with every [`SubmatrixView`] the chain spins up), so
+/// samplers are `'static` and can be parked in resident services.
+pub struct DppSampler {
+    l: Arc<Csr>,
     cfg: DppConfig,
     y: Vec<usize>,
     in_y: Vec<bool>,
@@ -79,8 +82,8 @@ pub struct DppSampler<'a> {
     pub stats: DppStats,
 }
 
-impl<'a> DppSampler<'a> {
-    pub fn new(l: &'a Csr, cfg: DppConfig, rng: &mut Rng) -> Self {
+impl DppSampler {
+    pub fn new(l: &Arc<Csr>, cfg: DppConfig, rng: &mut Rng) -> Self {
         let n = l.n;
         let k = cfg.init_size.min(n);
         let mut y = rng.sample_indices(n, k);
@@ -100,7 +103,7 @@ impl<'a> DppSampler<'a> {
                 assert!(minv.insert(v, &col, l.get(v, v)), "init set not PD");
             }
         }
-        DppSampler { l, cfg, y, in_y, minv, stats: DppStats::default() }
+        DppSampler { l: Arc::clone(l), cfg, y, in_y, minv, stats: DppStats::default() }
     }
 
     pub fn current_set(&self) -> &[usize] {
@@ -153,7 +156,7 @@ impl<'a> DppSampler<'a> {
                 if idx.is_empty() {
                     return t < 0.0;
                 }
-                let view = SubmatrixView::new(self.l, idx); // idx pre-sorted
+                let view = SubmatrixView::new(&self.l, idx); // idx pre-sorted
                 let u = view.column_of(v);
                 // NOTE §Perf: materializing the view (`to_csr`) was tried
                 // and reverted — judges decide in ~1-2 iterations on these
@@ -308,7 +311,7 @@ pub struct GreedyStats {
 /// Schur complement `s_c = L_cc − L_{c,Y} L_Y^{-1} L_{Y,c}` (equivalently
 /// the largest log-det gain `log s_c`) until `cfg.k` elements are chosen
 /// or no candidate keeps `L_Y` positive definite.
-pub fn greedy_map(l: &Csr, cfg: &GreedyConfig) -> Vec<usize> {
+pub fn greedy_map(l: &Arc<Csr>, cfg: &GreedyConfig) -> Vec<usize> {
     greedy_map_stats(l, cfg).0
 }
 
@@ -326,7 +329,7 @@ pub fn greedy_map(l: &Csr, cfg: &GreedyConfig) -> Vec<usize> {
 /// exactness contract) and pruning only discards dominated candidates —
 /// asserted in the tests below and in `rust/tests/prop_race.rs` /
 /// `rust/tests/prop_session.rs`.
-pub fn greedy_map_stats(l: &Csr, cfg: &GreedyConfig) -> (Vec<usize>, GreedyStats) {
+pub fn greedy_map_stats(l: &Arc<Csr>, cfg: &GreedyConfig) -> (Vec<usize>, GreedyStats) {
     let n = l.n;
     let k = cfg.k.min(n);
     // clamp like Gql::new clamps max_iters: width 0 means "no batching",
@@ -361,7 +364,7 @@ pub fn greedy_map_stats(l: &Csr, cfg: &GreedyConfig) -> (Vec<usize>, GreedyStats
                 .map(|&c| QueryArm::gain(view.column_of(c), stop, l.get(c, c)))
                 .collect();
             let qid = session.submit(Query::Argmax { arms, floor: Some(GAIN_FLOOR) });
-            let answers = session.run();
+            let answers = session.run(&view);
             let (winner, rstats) = match &answers[qid] {
                 Answer::Argmax { winner, stats, .. } => (*winner, stats),
                 _ => unreachable!("argmax queries answer with argmax answers"),
@@ -403,7 +406,7 @@ pub fn greedy_map_stats(l: &Csr, cfg: &GreedyConfig) -> (Vec<usize>, GreedyStats
 /// joint engine rounds; rejects unusable engine knobs with the typed
 /// admission error.
 pub fn greedy_map_multi(
-    kernels: &[&Csr],
+    kernels: &[Arc<Csr>],
     cfg: &GreedyConfig,
     ecfg: EngineConfig,
 ) -> Result<(Vec<Vec<usize>>, usize), EngineConfigError> {
@@ -426,7 +429,7 @@ pub fn greedy_map_multi(
         if done[i] {
             continue;
         }
-        let l = kernels[i];
+        let l = &kernels[i];
         let mut best: Option<(usize, f64)> = None;
         for c in 0..l.n {
             let gain = l.get(c, c);
@@ -456,26 +459,22 @@ pub fn greedy_map_multi(
             .iter()
             .map(|&i| (0..kernels[i].n).filter(|&c| !in_ys[i][c]).collect())
             .collect();
-        // the engine (and the views it borrows) live only for this round:
-        // winners are pulled out before the selections mutate
+        // the engine (and the views its store owns) lives only for this
+        // round: winners are pulled out before the selections mutate
         let winners: Vec<Option<usize>> = {
-            let views: Vec<SubmatrixView> = active
-                .iter()
-                .map(|&i| SubmatrixView::new(kernels[i], &ys[i]))
-                .collect();
             let mut eng = Engine::new(ecfg).expect("validated above");
-            let tickets: Vec<usize> = views
+            let tickets: Vec<Ticket> = active
                 .iter()
                 .zip(&candidates)
-                .zip(&active)
-                .map(|((view, cand), &i)| {
+                .map(|(&i, cand)| {
+                    let view = SubmatrixView::new(&kernels[i], &ys[i]);
                     let arms: Vec<QueryArm> = cand
                         .iter()
                         .map(|&c| QueryArm::gain(view.column_of(c), stop, kernels[i].get(c, c)))
                         .collect();
                     eng.submit(
                         i as crate::quadrature::engine::OpKey,
-                        view,
+                        Arc::new(view),
                         opts,
                         Query::Argmax { arms, floor: Some(GAIN_FLOOR) },
                     )
@@ -515,8 +514,9 @@ mod tests {
     use crate::datasets::random_sparse_spd;
     use crate::util::prop::forall;
 
-    fn setup(rng: &mut Rng, n: usize, density: f64) -> (Csr, SpectrumBounds) {
-        random_sparse_spd(rng, n, density, 0.05)
+    fn setup(rng: &mut Rng, n: usize, density: f64) -> (Arc<Csr>, SpectrumBounds) {
+        let (l, w) = random_sparse_spd(rng, n, density, 0.05);
+        (Arc::new(l), w)
     }
 
     #[test]
@@ -716,7 +716,7 @@ mod tests {
         let mut kernels = Vec::new();
         for _ in 0..3 {
             let n = 24 + rng.below(16);
-            kernels.push(random_sparse_spd(&mut rng, n, 0.2, 0.05));
+            kernels.push(setup(&mut rng, n, 0.2));
         }
         // one window covering every kernel (the documented contract)
         let window = kernels.iter().fold(
@@ -727,7 +727,7 @@ mod tests {
             },
         );
         let cfg = GreedyConfig::new(window, 6).with_block_width(8);
-        let refs: Vec<&Csr> = kernels.iter().map(|(l, _)| l).collect();
+        let refs: Vec<Arc<Csr>> = kernels.iter().map(|(l, _)| Arc::clone(l)).collect();
         let (joint, rounds) =
             greedy_map_multi(&refs, &cfg, EngineConfig::default()).expect("valid knobs");
         assert!(rounds > 0);

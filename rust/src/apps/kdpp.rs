@@ -20,12 +20,13 @@
 
 use super::BifStrategy;
 use crate::linalg::Cholesky;
-use crate::quadrature::engine::{Engine, EngineConfig, EngineConfigError, OpKey};
+use crate::quadrature::engine::{Engine, EngineConfig, EngineConfigError, OpKey, Ticket};
 use crate::quadrature::query::{Answer, Query, Session};
 use crate::quadrature::race::RacePolicy;
 use crate::quadrature::GqlOptions;
 use crate::sparse::{Csr, SpectrumBounds, SubmatrixView};
 use crate::util::rng::Rng;
+use std::sync::Arc;
 
 /// Configuration for a k-DPP chain.
 #[derive(Clone, Copy, Debug)]
@@ -66,17 +67,20 @@ struct Proposal {
     idx: Vec<usize>,
 }
 
-/// One MH k-DPP chain.
-pub struct KdppSampler<'a> {
-    l: &'a Csr,
+/// One MH k-DPP chain. The kernel is held behind an [`Arc`] (shared
+/// with the caller, with sibling chains in a pool, and with every
+/// [`SubmatrixView`] a proposal spins up), so chains are `'static` and
+/// can be parked in resident services.
+pub struct KdppSampler {
+    l: Arc<Csr>,
     cfg: KdppConfig,
     y: Vec<usize>,
     in_y: Vec<bool>,
     pub stats: KdppStats,
 }
 
-impl<'a> KdppSampler<'a> {
-    pub fn new(l: &'a Csr, cfg: KdppConfig, rng: &mut Rng) -> Self {
+impl KdppSampler {
+    pub fn new(l: &Arc<Csr>, cfg: KdppConfig, rng: &mut Rng) -> Self {
         let n = l.n;
         assert!(cfg.k >= 1 && cfg.k < n, "need 1 ≤ k < n");
         let mut y = rng.sample_indices(n, cfg.k);
@@ -98,7 +102,7 @@ impl<'a> KdppSampler<'a> {
     /// candidate keeps a usable marginal gain); the set is then topped up
     /// with the smallest unused indices — any size-`k` start state is a
     /// valid MH start, so this degrades gracefully instead of failing.
-    pub fn new_greedy(l: &'a Csr, cfg: KdppConfig, block_width: usize) -> Self {
+    pub fn new_greedy(l: &Arc<Csr>, cfg: KdppConfig, block_width: usize) -> Self {
         let n = l.n;
         assert!(cfg.k >= 1 && cfg.k < n, "need 1 ≤ k < n");
         let gcfg = crate::apps::dpp::GreedyConfig::new(cfg.window, cfg.k)
@@ -118,14 +122,14 @@ impl<'a> KdppSampler<'a> {
     }
 
     /// `y` must be sorted, duplicate-free, and of size `cfg.k`.
-    fn from_set(l: &'a Csr, cfg: KdppConfig, y: Vec<usize>) -> Self {
+    fn from_set(l: &Arc<Csr>, cfg: KdppConfig, y: Vec<usize>) -> Self {
         debug_assert_eq!(y.len(), cfg.k);
         debug_assert!(y.windows(2).all(|p| p[0] < p[1]));
         let mut in_y = vec![false; l.n];
         for &v in &y {
             in_y[v] = true;
         }
-        KdppSampler { l, cfg, y, in_y, stats: KdppStats::default() }
+        KdppSampler { l: Arc::clone(l), cfg, y, in_y, stats: KdppStats::default() }
     }
 
     pub fn current_set(&self) -> &[usize] {
@@ -187,7 +191,7 @@ impl<'a> KdppSampler<'a> {
         let prop = self.propose(rng);
         let accept = match self.cfg.strategy {
             BifStrategy::Gauss => {
-                let view = SubmatrixView::new(self.l, &prop.idx); // idx pre-sorted
+                let view = SubmatrixView::new(&self.l, &prop.idx); // idx pre-sorted
                 let uu = view.column_of(prop.u);
                 let vv = view.column_of(prop.v);
                 // accept ⟺ t < p·BIF_v − BIF_u, both sides fed by one
@@ -196,7 +200,7 @@ impl<'a> KdppSampler<'a> {
                 let mut session = Session::new(&view, self.cfg.gql_opts(), 2, RacePolicy::Prune);
                 let qid =
                     session.submit(Query::Compare { u: uu, v: vv, t: prop.t, p: prop.p });
-                let (ans, js) = match session.run().swap_remove(qid) {
+                let (ans, js) = match session.run(&view).swap_remove(qid) {
                     Answer::Compare { decision, stats } => (decision, stats),
                     _ => unreachable!("compare queries answer with compare answers"),
                 };
@@ -237,7 +241,7 @@ impl<'a> KdppSampler<'a> {
 /// chain's RNG advances (mirroring `greedy_map_multi`), so a failed wave
 /// leaves every chain exactly where it was.
 pub fn step_chains(
-    chains: &mut [KdppSampler<'_>],
+    chains: &mut [KdppSampler],
     rngs: &mut [Rng],
     ecfg: EngineConfig,
 ) -> Result<usize, EngineConfigError> {
@@ -248,32 +252,27 @@ pub fn step_chains(
         .zip(rngs.iter_mut())
         .map(|(c, r)| c.propose(r))
         .collect();
-    // every proposal's operator must be alive at once: the kernel refs
-    // outlive the samplers' borrows, the views borrow the proposals
-    let ls: Vec<&Csr> = chains.iter().map(|c| c.l).collect();
+    // every proposal's operator must be alive at once: each view shares
+    // its chain's kernel Arc and moves into the engine's operator store
     let optss: Vec<GqlOptions> = chains.iter().map(|c| c.cfg.gql_opts()).collect();
     let gauss: Vec<bool> = chains
         .iter()
         .map(|c| c.cfg.strategy == BifStrategy::Gauss)
         .collect();
-    let views: Vec<SubmatrixView> = props
-        .iter()
-        .zip(&ls)
-        .map(|(p, l)| SubmatrixView::new(l, &p.idx))
-        .collect();
     let mut eng = Engine::new(ecfg).expect("validated above");
-    let tickets: Vec<Option<usize>> = views
+    let tickets: Vec<Option<Ticket>> = props
         .iter()
         .enumerate()
-        .map(|(i, view)| {
+        .map(|(i, prop)| {
             gauss[i].then(|| {
-                let uu = view.column_of(props[i].u);
-                let vv = view.column_of(props[i].v);
+                let view = SubmatrixView::new(&chains[i].l, &prop.idx);
+                let uu = view.column_of(prop.u);
+                let vv = view.column_of(prop.v);
                 eng.submit(
                     i as OpKey,
-                    view,
+                    Arc::new(view),
                     optss[i],
-                    Query::Compare { u: uu, v: vv, t: props[i].t, p: props[i].p },
+                    Query::Compare { u: uu, v: vv, t: prop.t, p: prop.p },
                 )
             })
         })
@@ -302,10 +301,15 @@ mod tests {
     use crate::datasets::random_sparse_spd;
     use crate::util::prop::forall;
 
+    fn setup(rng: &mut Rng, n: usize, density: f64) -> (Arc<Csr>, SpectrumBounds) {
+        let (l, w) = random_sparse_spd(rng, n, density, 0.05);
+        (Arc::new(l), w)
+    }
+
     #[test]
     fn cardinality_is_invariant() {
         let mut rng = Rng::new(0xE1);
-        let (l, w) = random_sparse_spd(&mut rng, 50, 0.15, 0.05);
+        let (l, w) = setup(&mut rng, 50, 0.15);
         let cfg = KdppConfig::new(BifStrategy::Gauss, w, 12);
         let mut s = KdppSampler::new(&l, cfg, &mut rng);
         for _ in 0..100 {
@@ -322,7 +326,7 @@ mod tests {
     fn gauss_and_exact_identical_trajectories() {
         forall(6, 0xE2, |rng| {
             let n = 24 + rng.below(26);
-            let (l, w) = random_sparse_spd(rng, n, 0.2, 0.05);
+            let (l, w) = setup(rng, n, 0.2);
             let k = 4 + rng.below(n / 3);
             let seed = rng.next_u64();
             let run = |strategy| {
@@ -341,7 +345,7 @@ mod tests {
     #[test]
     fn stats_accumulate() {
         let mut rng = Rng::new(0xE3);
-        let (l, w) = random_sparse_spd(&mut rng, 40, 0.2, 0.05);
+        let (l, w) = setup(&mut rng, 40, 0.2);
         let cfg = KdppConfig::new(BifStrategy::Gauss, w, 8);
         let mut s = KdppSampler::new(&l, cfg, &mut rng);
         let acc = s.run(80, &mut rng);
@@ -353,7 +357,7 @@ mod tests {
     #[test]
     fn greedy_init_matches_greedy_map_and_chain_runs() {
         let mut rng = Rng::new(0xE5);
-        let (l, w) = random_sparse_spd(&mut rng, 48, 0.2, 0.05);
+        let (l, w) = setup(&mut rng, 48, 0.2);
         let cfg = KdppConfig::new(BifStrategy::Gauss, w, 10);
         let s = KdppSampler::new_greedy(&l, cfg, 8);
         let want = crate::apps::dpp::greedy_map(
@@ -378,7 +382,7 @@ mod tests {
         let mut kernels = Vec::new();
         for _ in 0..3 {
             let n = 30 + rng.below(12);
-            kernels.push(random_sparse_spd(&mut rng, n, 0.2, 0.05));
+            kernels.push(setup(&mut rng, n, 0.2));
         }
         let seeds: Vec<u64> = (0..3).map(|_| rng.next_u64()).collect();
         let steps = 25usize;
@@ -428,7 +432,7 @@ mod tests {
     #[should_panic(expected = "need 1 ≤ k < n")]
     fn k_must_be_feasible() {
         let mut rng = Rng::new(0xE4);
-        let (l, w) = random_sparse_spd(&mut rng, 10, 0.3, 0.05);
+        let (l, w) = setup(&mut rng, 10, 0.3);
         let cfg = KdppConfig::new(BifStrategy::Gauss, w, 10);
         let _ = KdppSampler::new(&l, cfg, &mut rng);
     }

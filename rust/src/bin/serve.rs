@@ -1,0 +1,386 @@
+//! `serve` — resident multi-tenant serving demo (ISSUE 7).
+//!
+//! One resident [`Engine`] serves a sustained mixed workload end to end:
+//! a load generator streams estimate / threshold / compare queries
+//! against hundreds of keyed tenant operators, tagging a fraction with
+//! round deadlines; the engine admits them through the deadline-checked
+//! path (shedding the least-urgent in-flight estimate at the queue cap —
+//! every shed answer is still a certified four-bound bracket), runs the
+//! joint round loop a few steps per tick (streaming, never a full
+//! stop-the-world drain), and retires answers with
+//! [`Engine::take_answer`] so the resident ticket log compacts. Idle
+//! tenant operators demote to the byte-budgeted warm store and re-admit
+//! by key alone — the load generator counts how often the cold
+//! (operator-shipping) path was actually needed.
+//!
+//! A reporter thread prints live counters from the shared metrics
+//! registry. SIGINT/SIGTERM — or the `--seconds` timer — triggers a
+//! graceful shutdown: stop admitting, drain in-flight queries, join the
+//! reporter, export the final `engine.*`/`serve.*` snapshot, and exit
+//! nonzero if any harvested bracket was invalid or any ticket was lost.
+//!
+//! ```text
+//! serve [--seconds S] [--keys K] [--dim N] [--queue-cap C]
+//!       [--store-kb KB] [--burst B] [--seed X] [--telemetry FILE]
+//! ```
+//!
+//! `BENCH_QUICK=1` shrinks every default to CI-smoke scale.
+
+use gauss_bif::datasets::random_spd_exact;
+use gauss_bif::metrics::export::write_json;
+use gauss_bif::metrics::MetricsRegistry;
+use gauss_bif::quadrature::engine::{Engine, EngineConfig, OpKey, SubmitError, Ticket};
+use gauss_bif::quadrature::query::{Answer, Query};
+use gauss_bif::quadrature::{GqlOptions, StopRule};
+use gauss_bif::sparse::SymOp;
+use gauss_bif::util::rng::Rng;
+use std::path::PathBuf;
+use std::process::ExitCode;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Set by the signal handler (and only ever read elsewhere): the load
+/// loop checks it every tick, so delivery-to-drain latency is one tick.
+static STOP: AtomicBool = AtomicBool::new(false);
+
+extern "C" fn on_signal(_sig: i32) {
+    STOP.store(true, Ordering::SeqCst);
+}
+
+#[cfg(unix)]
+fn install_signal_handlers() {
+    // libc `signal` declared directly: the crate is dependency-free and
+    // an AtomicBool store is async-signal-safe.
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+    unsafe {
+        signal(SIGINT, on_signal as extern "C" fn(i32) as usize);
+        signal(SIGTERM, on_signal as extern "C" fn(i32) as usize);
+    }
+}
+
+#[cfg(not(unix))]
+fn install_signal_handlers() {}
+
+struct Opts {
+    seconds: f64,
+    keys: usize,
+    dim: usize,
+    queue_cap: usize,
+    store_kb: usize,
+    burst: usize,
+    seed: u64,
+    telemetry: Option<PathBuf>,
+}
+
+const USAGE: &str = "usage: serve [--seconds S] [--keys K] [--dim N] [--queue-cap C]\n\
+                     \x20            [--store-kb KB] [--burst B] [--seed X] [--telemetry FILE]\n\
+                     BENCH_QUICK=1 shrinks the defaults to CI-smoke scale";
+
+fn parse_opts() -> Result<Opts, String> {
+    let quick = std::env::var("BENCH_QUICK").map(|v| v != "0").unwrap_or(false);
+    let mut o = if quick {
+        Opts {
+            seconds: 2.0,
+            keys: 64,
+            dim: 16,
+            queue_cap: 48,
+            store_kb: 0, // filled below from keys × dim
+            burst: 8,
+            seed: 0x5EB1F,
+            telemetry: None,
+        }
+    } else {
+        Opts {
+            seconds: 10.0,
+            keys: 256,
+            dim: 32,
+            queue_cap: 192,
+            store_kb: 0,
+            burst: 16,
+            seed: 0x5EB1F,
+            telemetry: None,
+        }
+    };
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        let mut val = |name: &str| args.next().ok_or(format!("{name} needs a value"));
+        match a.as_str() {
+            "--seconds" => o.seconds = val("--seconds")?.parse().map_err(|e| format!("{e}"))?,
+            "--keys" => o.keys = val("--keys")?.parse().map_err(|e| format!("{e}"))?,
+            "--dim" => o.dim = val("--dim")?.parse().map_err(|e| format!("{e}"))?,
+            "--queue-cap" => o.queue_cap = val("--queue-cap")?.parse().map_err(|e| format!("{e}"))?,
+            "--store-kb" => o.store_kb = val("--store-kb")?.parse().map_err(|e| format!("{e}"))?,
+            "--burst" => o.burst = val("--burst")?.parse().map_err(|e| format!("{e}"))?,
+            "--seed" => o.seed = val("--seed")?.parse().map_err(|e| format!("{e}"))?,
+            "--telemetry" => o.telemetry = Some(PathBuf::from(val("--telemetry")?)),
+            "--help" | "-h" => return Err(USAGE.to_string()),
+            other => return Err(format!("unknown flag {other}\n{USAGE}")),
+        }
+    }
+    o.keys = o.keys.max(2);
+    o.dim = o.dim.max(4);
+    o.queue_cap = o.queue_cap.max(1);
+    o.burst = o.burst.max(1);
+    if o.store_kb == 0 {
+        // budget ~a quarter of the tenant population so the soak
+        // actually exercises LRU eviction and warm re-admission
+        o.store_kb = (o.keys * o.dim * o.dim * 8 / 4 / 1024).max(4);
+    }
+    Ok(o)
+}
+
+/// One tenant: a keyed SPD operator the load generator queries again and
+/// again. The `Arc` here is the *cold-path* copy — after first admission
+/// the engine's store owns its own clone and warm submissions ship no
+/// operator at all.
+struct Tenant {
+    key: OpKey,
+    op: Arc<gauss_bif::linalg::DMat>,
+    opts: GqlOptions,
+    dim: usize,
+    lam_max: f64,
+}
+
+fn make_query(rng: &mut Rng, t: &Tenant) -> Query {
+    let u: Vec<f64> = (0..t.dim).map(|_| rng.normal()).collect();
+    match rng.below(3) {
+        0 => Query::Estimate { u, stop: StopRule::GapRel(1e-3) },
+        1 => {
+            // u^T A^{-1} u ≥ |u|²/λmax, so thresholds drawn around that
+            // scale split both ways instead of being trivially decided
+            let floor = u.iter().map(|x| x * x).sum::<f64>() / t.lam_max;
+            let tv = floor * rng.range_f64(0.5, 2.5);
+            Query::Threshold { u, t: tv }
+        }
+        _ => {
+            let v: Vec<f64> = (0..t.dim).map(|_| rng.normal()).collect();
+            Query::Compare { u, v, t: 0.0, p: rng.range_f64(0.5, 1.5) }
+        }
+    }
+}
+
+/// `lower ≤ upper`, both finite: what every harvested estimate — shed or
+/// fully run — must satisfy (the anytime property the admission layer
+/// leans on).
+fn bracket_valid(b: &gauss_bif::quadrature::Bounds) -> bool {
+    let tol = 1e-9 * b.upper().abs().max(1.0);
+    b.lower().is_finite() && b.upper().is_finite() && b.lower() <= b.upper() + tol
+}
+
+fn main() -> ExitCode {
+    let o = match parse_opts() {
+        Ok(o) => o,
+        Err(msg) => {
+            eprintln!("{msg}");
+            return ExitCode::from(2);
+        }
+    };
+    install_signal_handlers();
+    let reg = Arc::new(MetricsRegistry::new());
+    let mut rng = Rng::new(o.seed);
+
+    println!(
+        "serve: {} tenants (dim {}..{}), queue cap {}, store budget {} KiB, {:.1}s",
+        o.keys,
+        o.dim,
+        o.dim + 12,
+        o.queue_cap,
+        o.store_kb,
+        o.seconds
+    );
+
+    // tenant pool: hundreds of distinct keyed operators, dims jittered so
+    // panels differ and the store budget bites unevenly
+    let tenants: Vec<Tenant> = (0..o.keys)
+        .map(|k| {
+            let dim = o.dim + 4 * (k % 4);
+            let (a, l1, ln) = random_spd_exact(&mut rng, dim, 0.5, 0.2);
+            Tenant {
+                key: k as OpKey,
+                op: Arc::new(a),
+                opts: GqlOptions::new(l1 * 0.99, ln * 1.01),
+                dim,
+                lam_max: ln * 1.01,
+            }
+        })
+        .collect();
+
+    let ecfg = EngineConfig::default()
+        .with_width(8)
+        .with_lanes(128)
+        .with_ttl_rounds(64)
+        .with_store_bytes(o.store_kb * 1024)
+        .with_queue_cap(o.queue_cap);
+    let mut eng = match Engine::new(ecfg) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("engine config rejected: {e}");
+            return ExitCode::from(2);
+        }
+    };
+
+    // reporter thread (satellite b: it must stop *before* the final
+    // snapshot so the exported JSON is the post-drain state)
+    let report_stop = Arc::new(AtomicBool::new(false));
+    let reporter = {
+        let reg = Arc::clone(&reg);
+        let stop = Arc::clone(&report_stop);
+        std::thread::spawn(move || {
+            while !stop.load(Ordering::SeqCst) {
+                std::thread::sleep(Duration::from_millis(500));
+                if stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                let snap = reg.snapshot();
+                let g = |name: &str| -> f64 {
+                    match snap.get(name) {
+                        Some(gauss_bif::metrics::MetricValue::Gauge(v)) => *v,
+                        Some(gauss_bif::metrics::MetricValue::Counter(c)) => *c as f64,
+                        _ => 0.0,
+                    }
+                };
+                println!(
+                    "  [report] rounds={} open={} resident={} ({:.0} KiB) evicted={} shed={} compactions={}",
+                    g("engine.rounds"),
+                    g("engine.open_tickets"),
+                    g("engine.store.resident"),
+                    g("engine.store.resident_bytes") / 1024.0,
+                    g("engine.store.evicted"),
+                    g("engine.admission.shed"),
+                    g("engine.admission.compactions"),
+                );
+            }
+        })
+    };
+
+    let deadline_t = Instant::now() + Duration::from_secs_f64(o.seconds);
+    let mut inflight: Vec<Ticket> = Vec::new();
+    let (mut submitted, mut refused, mut answered) = (0u64, 0u64, 0u64);
+    let (mut warm, mut cold) = (0u64, 0u64);
+    let mut bracket_bad = 0u64;
+
+    while !STOP.load(Ordering::SeqCst) && Instant::now() < deadline_t {
+        // streaming submission: a burst of keyed queries, warm path first
+        // (no operator crosses the API), cold path ships the Arc once
+        for _ in 0..o.burst {
+            let t = &tenants[rng.below(tenants.len())];
+            let q = make_query(&mut rng, t);
+            let dl = if rng.bool(0.5) { Some(8 + rng.below(64) as u64) } else { None };
+            let res = match eng.submit_keyed(t.key, t.opts, q.clone(), dl) {
+                Err(SubmitError::UnknownKey(_)) => {
+                    cold += 1;
+                    eng.try_submit(t.key, Arc::clone(&t.op) as Arc<dyn SymOp>, t.opts, q, dl)
+                }
+                other => {
+                    if other.is_ok() {
+                        warm += 1;
+                    }
+                    other
+                }
+            };
+            match res {
+                Ok(tk) => {
+                    submitted += 1;
+                    inflight.push(tk);
+                }
+                Err(SubmitError::Saturated) => refused += 1,
+                Err(SubmitError::UnknownKey(k)) => {
+                    unreachable!("cold path preloads key {k}")
+                }
+            }
+        }
+        // advance the joint schedule a few rounds — never a full drain,
+        // so admission, shedding, and eviction interleave with progress
+        for _ in 0..4 {
+            if !eng.step_round() {
+                break;
+            }
+        }
+        // harvest what resolved; take_answer compacts the ticket log
+        inflight.retain(|&tk| {
+            if eng.answer(tk).is_none() {
+                return true;
+            }
+            match eng.take_answer(tk) {
+                Ok(Answer::Estimate { bounds, .. }) => {
+                    answered += 1;
+                    if !bracket_valid(&bounds) {
+                        bracket_bad += 1;
+                    }
+                }
+                Ok(_) => answered += 1,
+                Err(e) => unreachable!("freshly answered ticket turned {e:?}"),
+            }
+            false
+        });
+        eng.export_into(&reg);
+        reg.set_gauge("serve.inflight", inflight.len() as f64);
+        reg.set_counter("serve.submitted", submitted);
+        reg.set_counter("serve.refused", refused);
+        reg.set_counter("serve.answered", answered);
+    }
+
+    // graceful shutdown: stop admitting, run the engine dry, harvest the
+    // stragglers (shed ones resolved early — their brackets count too)
+    let reason = if STOP.load(Ordering::SeqCst) { "signal" } else { "timer" };
+    println!("shutdown ({reason}): draining {} in-flight queries", inflight.len());
+    eng.drain();
+    let mut lost = 0u64;
+    for tk in inflight.drain(..) {
+        match eng.take_answer(tk) {
+            Ok(Answer::Estimate { bounds, .. }) => {
+                answered += 1;
+                if !bracket_valid(&bounds) {
+                    bracket_bad += 1;
+                }
+            }
+            Ok(_) => answered += 1,
+            Err(_) => lost += 1,
+        }
+    }
+    report_stop.store(true, Ordering::SeqCst);
+    let _ = reporter.join();
+
+    let st = eng.stats();
+    eng.export_into(&reg);
+    reg.set_counter("serve.submitted", submitted);
+    reg.set_counter("serve.refused", refused);
+    reg.set_counter("serve.answered", answered);
+    reg.set_counter("serve.warm_submits", warm);
+    reg.set_counter("serve.cold_submits", cold);
+    reg.set_counter("serve.bracket_violations", bracket_bad);
+    reg.set_counter("serve.lost_tickets", lost);
+    reg.set_gauge("serve.inflight", 0.0);
+    if let Some(path) = &o.telemetry {
+        match write_json(path, &reg.snapshot()) {
+            Ok(()) => println!("telemetry snapshot: {}", path.display()),
+            Err(e) => {
+                eprintln!("telemetry write failed: {e}");
+                return ExitCode::from(1);
+            }
+        }
+    }
+
+    println!(
+        "served {answered}/{submitted} ({warm} warm, {cold} cold admissions, {refused} refused at cap)"
+    );
+    println!(
+        "engine: {} rounds, {} sweeps, shed {} (anytime brackets), store evicted {}, compacted {}",
+        st.rounds,
+        st.sweeps,
+        st.shed,
+        eng.store().evicted(),
+        st.compactions,
+    );
+    if bracket_bad > 0 || lost > 0 {
+        eprintln!("FAILED: {bracket_bad} invalid brackets, {lost} lost tickets");
+        return ExitCode::from(1);
+    }
+    println!("clean shutdown");
+    ExitCode::SUCCESS
+}

@@ -121,6 +121,16 @@ pub struct RunConfig {
     /// sweep workers for the engine's parallel panel fan-out (results
     /// are bit-identical at any worker count)
     pub engine_workers: usize,
+    /// byte budget of the engine's resident operator store (ISSUE 7):
+    /// idle, unpinned operators LRU-evict past it; pinned (live-session)
+    /// operators never count against correctness, only memory
+    pub engine_store_bytes: usize,
+    /// open-ticket cap for deadline-checked admission
+    /// ([`Engine::try_submit`](crate::quadrature::engine::Engine::try_submit)):
+    /// at the cap the least-urgent sheddable estimate resolves early to
+    /// its current four-bound bracket, or the submission is refused.
+    /// Clamped to >= 1 at parse (0 would shed every submission)
+    pub engine_queue_cap: usize,
     /// extra free-form knobs
     pub extra: BTreeMap<String, String>,
 }
@@ -140,6 +150,8 @@ impl Default for RunConfig {
             engine_lanes: 256,
             engine_ttl_rounds: 32,
             engine_workers: 1,
+            engine_store_bytes: 64 << 20,
+            engine_queue_cap: usize::MAX,
             extra: BTreeMap::new(),
         }
     }
@@ -189,6 +201,12 @@ impl RunConfig {
         if let Some(x) = v.get("engine_workers").and_then(Json::as_usize) {
             c.engine_workers = x.clamp(1, 1 << 10);
         }
+        if let Some(x) = v.get("engine_store_bytes").and_then(Json::as_usize) {
+            c.engine_store_bytes = x;
+        }
+        if let Some(x) = v.get("engine_queue_cap").and_then(Json::as_usize) {
+            c.engine_queue_cap = x.max(1);
+        }
         // admission validation with the typed engine error (ISSUE 5
         // satellite, mirroring BatchPolicy::validate): 0 or absurd values
         // fail the whole config load instead of deadlocking the engine
@@ -213,6 +231,8 @@ impl RunConfig {
             .with_lanes(self.engine_lanes)
             .with_ttl_rounds(self.engine_ttl_rounds)
             .with_workers(self.engine_workers.max(1))
+            .with_store_bytes(self.engine_store_bytes)
+            .with_queue_cap(self.engine_queue_cap.max(1))
             .with_policy(if self.race { RacePolicy::Prune } else { RacePolicy::Exhaustive })
     }
 

@@ -29,6 +29,14 @@
 //! (unkeyed) argmax batches run as width-limited engine sessions
 //! ([`RoutePath::NativeRace`]).
 //!
+//! Since ISSUE 7 that engine is **resident** ([`ResidentEngine`]): one
+//! instance per service, shared by every worker, never constructed per
+//! drain. Operators it has seen stay pinned while sessions live and then
+//! demote to a byte-budgeted LRU warm store, so repeat tenants skip the
+//! f32→f64 operator conversion; answers are harvested with
+//! [`Engine::take_answer`] so the resident ticket log compacts instead
+//! of growing with service uptime.
+//!
 //! Lifecycle: [`JudgeService::start`] spawns workers (+ executor); clients
 //! call [`JudgeService::submit`] / [`JudgeService::submit_argmax`] (each
 //! returns a receiver) or the blocking wrappers. Drop/`shutdown` drains
@@ -39,11 +47,12 @@ use crate::config::run::parse_manifest;
 use crate::linalg::DMat;
 use crate::metrics::ServiceMetrics;
 use crate::quadrature::block::StopRule;
-use crate::quadrature::engine::{Engine, EngineConfig, OpKey, MAX_ENGINE_LANES};
+use crate::quadrature::engine::{Engine, EngineConfig, OpKey, Ticket, MAX_ENGINE_LANES};
 use crate::quadrature::query::{Answer, Query, QueryArm};
 use crate::quadrature::race::RacePolicy;
 use crate::quadrature::{judge_threshold, GqlOptions, Reorth};
 use crate::runtime::{BoundsHistory, GqlRuntime};
+use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -209,6 +218,72 @@ struct Shared {
     queue: Mutex<Vec<Queued>>,
     cv: Condvar,
     shutdown: AtomicBool,
+    /// The service's one resident engine (ISSUE 7): see
+    /// [`ResidentEngine`]. Workers lock it for the duration of a native
+    /// drain — the engine *is* the single scheduler, so serializing
+    /// serves through it is the point, not a compromise.
+    resident: Mutex<ResidentEngine>,
+}
+
+/// Byte budget for resident operators: enough to keep a working set of
+/// drain-scale dense operators warm across drains without letting a
+/// many-tenant workload grow without bound — past it the store LRU-evicts
+/// idle, unpinned entries ([`crate::quadrature::engine::OpStore`]).
+const RESIDENT_STORE_BYTES: usize = 64 << 20;
+
+/// Idle rounds before a resident session is torn down. Deliberately
+/// small: a session only needs to survive the drain that spun it up, and
+/// eviction demotes the operator to the *warm store* (still resident,
+/// re-admitted by key with no f32→f64 re-conversion) rather than
+/// discarding it.
+const RESIDENT_TTL_ROUNDS: usize = 2;
+
+/// The coordinator's one resident multi-tenant engine (ISSUE 7). It
+/// outlives every drain: the worker threads share it behind a mutex and
+/// each native drain is a thin client — spin up (or find warm) the
+/// sessions its groups need, stream the queries in, run the joint round
+/// loop, harvest with [`Engine::take_answer`] so the ticket log compacts.
+///
+/// Repeat tenants are the payoff: a coalesce key seen in an earlier
+/// drain maps to the same [`OpKey`], and if the operator is still
+/// resident (live session *or* warm store entry) the drain skips the
+/// f32→f64 operator conversion entirely. The [`ThresholdRequest::op_key`]
+/// contract extends across drains: requests reusing a key (with equal
+/// dimension, spectrum window, and reorth mode) must carry the same
+/// operator bytes, or the store serves the original — the resident
+/// engine cannot re-check a type-erased stored operator against a new
+/// upload.
+///
+/// A warm hit also keeps the live session's original panel width and
+/// race policy; per the engine's exactness contract both change sweep
+/// counts only, never decisions.
+struct ResidentEngine {
+    eng: Engine,
+    /// Stable coalesce-key → operator-store key mapping, grown only.
+    /// Anonymous one-shot serves bypass it via [`Engine::fresh_key`].
+    keys: HashMap<CoalesceKey, OpKey>,
+}
+
+impl ResidentEngine {
+    fn new() -> Self {
+        let ecfg = EngineConfig::default()
+            .with_lanes(MAX_ENGINE_LANES)
+            .with_ttl_rounds(RESIDENT_TTL_ROUNDS)
+            .with_store_bytes(RESIDENT_STORE_BYTES);
+        ResidentEngine {
+            eng: Engine::new(ecfg).expect("static resident engine config is valid"),
+            keys: HashMap::new(),
+        }
+    }
+
+    /// The operator-store key for `ck`, allocating the next dense key on
+    /// first sight. Dense keys stay below
+    /// [`crate::quadrature::engine::ANON_KEY_BASE`], so they never
+    /// collide with the anonymous keys lone serves draw.
+    fn key_for(&mut self, ck: CoalesceKey) -> OpKey {
+        let next = self.keys.len() as OpKey;
+        *self.keys.entry(ck).or_insert(next)
+    }
 }
 
 /// The running service.
@@ -236,6 +311,7 @@ impl JudgeService {
             queue: Mutex::new(Vec::new()),
             cv: Condvar::new(),
             shutdown: AtomicBool::new(false),
+            resident: Mutex::new(ResidentEngine::new()),
         });
         let metrics = Arc::new(ServiceMetrics::new());
 
@@ -467,9 +543,9 @@ fn worker_loop(
                 if coalescible {
                     let mut group = vec![Queued::Argmax(item)];
                     group.extend(drain_keyed(&shared, &policy));
-                    serve_native_engine(&metrics, group, &policy);
+                    serve_native_engine(&metrics, group, &policy, &shared.resident);
                 } else {
-                    serve_argmax(&metrics, item, &policy);
+                    serve_argmax(&metrics, item, &policy, &shared.resident);
                 }
                 continue;
             }
@@ -496,7 +572,7 @@ fn worker_loop(
             if coalescible {
                 let mut group = vec![Queued::Threshold(first)];
                 group.extend(drain_keyed(&shared, &policy));
-                serve_native_engine(&metrics, group, &policy);
+                serve_native_engine(&metrics, group, &policy, &shared.resident);
             } else {
                 serve_native(&metrics, first);
             }
@@ -674,8 +750,8 @@ fn drain_keyed(shared: &Shared, policy: &BatchPolicy) -> Vec<Queued> {
 /// A request routed into the engine, remembering the ticket that answers
 /// it (`None`: malformed argmax, answered without a query).
 enum EngineSlot {
-    Thresh(ThreshQueued, usize),
-    Argmax(ArgmaxQueued, Option<usize>),
+    Thresh(ThreshQueued, Ticket),
+    Argmax(ArgmaxQueued, Option<Ticket>),
 }
 
 /// Lanes a request compiles to (0 for malformed argmax batches).
@@ -693,9 +769,11 @@ fn lane_demand(item: &Queued) -> usize {
 }
 
 /// Serve a drained group of keyed requests — any mix of operators and
-/// kinds — through one multi-operator [`Engine`] (ISSUE 5): the group is
-/// partitioned by coalesce key, each distinct key gets one session over
-/// its (f64-converted) operator, and a single round loop advances one
+/// kinds — through the service's **resident** multi-operator [`Engine`]
+/// (ISSUE 5, resident since ISSUE 7): the group is partitioned by
+/// coalesce key, each distinct key gets one session over its operator —
+/// found warm in the resident store for repeat tenants, f64-converted
+/// once for cold ones — and a single round loop advances one
 /// `matvec_multi` panel per operator per round. This *is* the old
 /// shared-operator session serve — the single-key case reports
 /// [`RoutePath::NativeSession`] exactly as before — generalized so
@@ -703,7 +781,12 @@ fn lane_demand(item: &Queued) -> usize {
 /// ([`RoutePath::NativeEngine`]). Per-request decisions are identical to
 /// the dedicated paths (the block engine's exactness contract plus the
 /// planner's shared decision ladders; the engine never changes numerics).
-fn serve_native_engine(metrics: &ServiceMetrics, items: Vec<Queued>, policy: &BatchPolicy) {
+fn serve_native_engine(
+    metrics: &ServiceMetrics,
+    items: Vec<Queued>,
+    policy: &BatchPolicy,
+    resident: &Mutex<ResidentEngine>,
+) {
     let served = Instant::now();
     if items.len() == 1 {
         // degenerate group (no keyed stragglers arrived): keep the
@@ -716,7 +799,7 @@ fn serve_native_engine(metrics: &ServiceMetrics, items: Vec<Queued>, policy: &Ba
                     .native_block_ns
                     .record(served.elapsed().as_nanos() as f64);
             }
-            Queued::Argmax(a) => serve_argmax(metrics, a, policy),
+            Queued::Argmax(a) => serve_argmax(metrics, a, policy, resident),
         }
         return;
     }
@@ -732,20 +815,19 @@ fn serve_native_engine(metrics: &ServiceMetrics, items: Vec<Queued>, policy: &Ba
 
     // plan each group: an unusable leader operator falls the whole group
     // back to the dedicated per-request paths (which answer malformed
-    // batches gracefully). The f64 operators live in `ops_store`,
-    // *separate* from the request items, because the engine borrows the
-    // operators for its whole lifetime while the items are consumed at
-    // submission.
+    // batches gracefully). No operator is converted here — the resident
+    // engine's store decides per key below whether a conversion is even
+    // needed (warm tenants skip it).
     struct GroupPlan {
+        ck: CoalesceKey,
         opts: GqlOptions,
         width: usize,
         policy: RacePolicy,
     }
-    let mut ops_store: Vec<DMat> = Vec::new();
     let mut plans: Vec<GroupPlan> = Vec::new();
     let mut group_items: Vec<Vec<Queued>> = Vec::new();
     let mut fallback: Vec<Queued> = Vec::new();
-    for (_, group) in groups {
+    for (ck, group) in groups {
         let (n, lam_min, lam_max, reorth) = match &group[0] {
             Queued::Threshold(t) => (t.req.n, t.req.lam_min, t.req.lam_max, t.req.reorth),
             Queued::Argmax(a) => (a.req.n, a.req.lam_min, a.req.lam_max, a.req.reorth),
@@ -767,7 +849,6 @@ fn serve_native_engine(metrics: &ServiceMetrics, items: Vec<Queued>, policy: &Ba
             }),
             "co-keyed requests must share an identical operator matrix"
         );
-        let a = DMat::from_fn(n, n, |i, j| a_bytes[i * n + j] as f64);
         let opts =
             GqlOptions::new(lam_min as f64, lam_max as f64).with_reorth(reorth_mode(reorth));
         // width-limited panels (ISSUE 5 satellite): lane demand capped by
@@ -786,8 +867,7 @@ fn serve_native_engine(metrics: &ServiceMetrics, items: Vec<Queued>, policy: &Ba
         } else {
             RacePolicy::Exhaustive
         };
-        ops_store.push(a);
-        plans.push(GroupPlan { opts, width, policy: gpolicy });
+        plans.push(GroupPlan { ck, opts, width, policy: gpolicy });
         group_items.push(group);
     }
     // fallback requests answer through the dedicated paths (which keep
@@ -796,10 +876,10 @@ fn serve_native_engine(metrics: &ServiceMetrics, items: Vec<Queued>, policy: &Ba
     for item in fallback {
         match item {
             Queued::Threshold(t) => serve_native(metrics, t),
-            Queued::Argmax(a) => serve_argmax(metrics, a, policy),
+            Queued::Argmax(a) => serve_argmax(metrics, a, policy, resident),
         }
     }
-    if ops_store.is_empty() {
+    if plans.is_empty() {
         return;
     }
 
@@ -815,22 +895,39 @@ fn serve_native_engine(metrics: &ServiceMetrics, items: Vec<Queued>, policy: &Ba
     metrics.coalesced_blocks.inc();
     metrics.batch_size.lock().unwrap().record(batch as f64);
 
-    let ops_count = ops_store.len();
-    let total_lanes: usize = plans.iter().map(|g| g.width).sum();
-    let ecfg = EngineConfig::default()
-        .with_lanes(total_lanes.clamp(1, MAX_ENGINE_LANES))
-        .with_ttl_rounds(1); // sessions die with the drain anyway
-    let mut eng = Engine::new(ecfg).expect("drain-derived engine config is valid");
+    let ops_count = plans.len();
+    // ISSUE 7: the drain is a thin client of the service's one resident
+    // engine — held for the serve, never constructed per drain. Warm
+    // tenants (live session, or operator still in the store) skip the
+    // f32→f64 conversion; cold tenants convert once and hand the engine
+    // the owned operator.
+    let resident = &mut *resident.lock().unwrap();
     let mut slots: Vec<EngineSlot> = Vec::with_capacity(batch);
     let mut served_lanes = 0usize;
     for (g, group) in group_items.into_iter().enumerate() {
         let plan = &plans[g];
-        let slot = eng.spin_up(g as OpKey, &ops_store[g], plan.opts, plan.width, plan.policy);
+        let key = resident.key_for(plan.ck);
+        let slot = match resident
+            .eng
+            .spin_up_keyed(key, plan.opts, plan.width, plan.policy)
+        {
+            Some(slot) => slot,
+            None => {
+                let (n, a_bytes): (usize, &[f32]) = match &group[0] {
+                    Queued::Threshold(t) => (t.req.n, &t.req.a),
+                    Queued::Argmax(a) => (a.req.n, &a.req.a),
+                };
+                let a = DMat::from_fn(n, n, |i, j| a_bytes[i * n + j] as f64);
+                resident
+                    .eng
+                    .spin_up(key, Arc::new(a), plan.opts, plan.width, plan.policy)
+            }
+        };
         for item in group {
             match item {
                 Queued::Threshold(t) => {
                     let u: Vec<f64> = t.req.u.iter().map(|&x| x as f64).collect();
-                    let ticket = eng.submit_to(slot, Query::Threshold { u, t: t.req.t });
+                    let ticket = resident.eng.submit_to(slot, Query::Threshold { u, t: t.req.t });
                     slots.push(EngineSlot::Thresh(t, ticket));
                     served_lanes += 1;
                 }
@@ -853,13 +950,13 @@ fn serve_native_engine(metrics: &ServiceMetrics, items: Vec<Queued>, policy: &Ba
                         })
                         .collect();
                     served_lanes += q.req.us.len();
-                    let ticket = eng.submit_to(slot, Query::Argmax { arms, floor: None });
+                    let ticket = resident.eng.submit_to(slot, Query::Argmax { arms, floor: None });
                     slots.push(EngineSlot::Argmax(q, Some(ticket)));
                 }
             }
         }
     }
-    eng.drain();
+    resident.eng.drain();
     if ops_count >= 2 {
         metrics.engine_drains.inc();
     }
@@ -880,10 +977,12 @@ fn serve_native_engine(metrics: &ServiceMetrics, items: Vec<Queued>, policy: &Ba
     } else {
         RoutePath::NativeEngine { ops: ops_count, batch }
     };
+    // harvest with take_answer so the resident ticket log compacts (a
+    // drain leaves no tombstone build-up behind; see Engine::take_answer)
     for slot in slots {
         match slot {
-            EngineSlot::Thresh(item, ticket) => match eng.answer(ticket) {
-                Some(Answer::Threshold { decision, stats }) => {
+            EngineSlot::Thresh(item, ticket) => match resident.eng.take_answer(ticket) {
+                Ok(Answer::Threshold { decision, stats }) => {
                     metrics.judge_iters.lock().unwrap().record(stats.iters as f64);
                     metrics
                         .latency_ns
@@ -891,7 +990,7 @@ fn serve_native_engine(metrics: &ServiceMetrics, items: Vec<Queued>, policy: &Ba
                         .unwrap()
                         .record(item.enqueued.elapsed().as_nanos() as f64);
                     let _ = item.reply.send(JudgeResponse {
-                        decision: *decision,
+                        decision,
                         iters: stats.iters,
                         path,
                     });
@@ -904,8 +1003,8 @@ fn serve_native_engine(metrics: &ServiceMetrics, items: Vec<Queued>, policy: &Ba
                     .reply
                     .send(ArgmaxResponse { winner: None, sweeps: 0, pruned: 0, path });
             }
-            EngineSlot::Argmax(item, Some(ticket)) => match eng.answer(ticket) {
-                Some(Answer::Argmax { winner, stats, .. }) => {
+            EngineSlot::Argmax(item, Some(ticket)) => match resident.eng.take_answer(ticket) {
+                Ok(Answer::Argmax { winner, stats, .. }) => {
                     metrics.races.inc();
                     metrics
                         .latency_ns
@@ -913,7 +1012,7 @@ fn serve_native_engine(metrics: &ServiceMetrics, items: Vec<Queued>, policy: &Ba
                         .unwrap()
                         .record(item.enqueued.elapsed().as_nanos() as f64);
                     let _ = item.reply.send(ArgmaxResponse {
-                        winner: *winner,
+                        winner,
                         sweeps: stats.sweeps,
                         pruned: stats.pruned(),
                         path,
@@ -941,8 +1040,17 @@ fn argmax_malformed(req: &ArgmaxRequest) -> bool {
 /// lanes at once): the panel width is capped by the drain batch cap and
 /// excess arms queue/refill, which changes sweep counts but never the
 /// winner. Dominated arms are pruned (when requested) and the race ends
-/// the moment the winner is determined.
-fn serve_argmax(metrics: &ServiceMetrics, item: ArgmaxQueued, policy: &BatchPolicy) {
+/// the moment the winner is determined. Since ISSUE 7 the session runs
+/// on the service's resident engine under an **anonymous** key
+/// ([`Engine::fresh_key`]): the one-shot operator is dropped from the
+/// store on eviction instead of competing with keyed tenants for the
+/// resident byte budget.
+fn serve_argmax(
+    metrics: &ServiceMetrics,
+    item: ArgmaxQueued,
+    policy: &BatchPolicy,
+    resident: &Mutex<ResidentEngine>,
+) {
     let req = item.req;
     let arms = req.us.len();
     metrics.races.inc();
@@ -960,11 +1068,6 @@ fn serve_argmax(metrics: &ServiceMetrics, item: ArgmaxQueued, policy: &BatchPoli
     let rpolicy = if req.prune { RacePolicy::Prune } else { RacePolicy::Exhaustive };
     let scale = if req.negate { -1.0 } else { 1.0 };
     let width = arms.clamp(1, policy.max_batch.max(1));
-    let ecfg = EngineConfig::default()
-        .with_lanes(width.clamp(1, MAX_ENGINE_LANES))
-        .with_ttl_rounds(1);
-    let mut eng = Engine::new(ecfg).expect("serve-derived engine config is valid");
-    let slot = eng.spin_up(0, &a, opts, width, rpolicy);
     let query_arms: Vec<QueryArm> = req
         .us
         .iter()
@@ -976,10 +1079,15 @@ fn serve_argmax(metrics: &ServiceMetrics, item: ArgmaxQueued, policy: &BatchPoli
             scale,
         })
         .collect();
-    let ticket = eng.submit_to(slot, Query::Argmax { arms: query_arms, floor: None });
-    eng.drain();
-    let (winner, sweeps, pruned) = match eng.answer(ticket) {
-        Some(Answer::Argmax { winner, stats, .. }) => (*winner, stats.sweeps, stats.pruned()),
+    let resident = &mut *resident.lock().unwrap();
+    let key = resident.eng.fresh_key();
+    let slot = resident.eng.spin_up(key, Arc::new(a), opts, width, rpolicy);
+    let ticket = resident
+        .eng
+        .submit_to(slot, Query::Argmax { arms: query_arms, floor: None });
+    resident.eng.drain();
+    let (winner, sweeps, pruned) = match resident.eng.take_answer(ticket) {
+        Ok(Answer::Argmax { winner, stats, .. }) => (winner, stats.sweeps, stats.pruned()),
         _ => unreachable!("argmax queries answer with argmax answers"),
     };
     metrics

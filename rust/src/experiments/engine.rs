@@ -27,6 +27,7 @@ use crate::quadrature::race::{race_dg, RacePolicy};
 use crate::quadrature::{is_zero, GqlOptions};
 use crate::sparse::{Csr, SpectrumBounds};
 use crate::util::rng::Rng;
+use std::sync::Arc;
 
 /// One sweep row: the three cross-operator workloads at one problem size
 /// and chain count.
@@ -122,8 +123,8 @@ fn dg_workload(
             .expect("static engine config is valid");
         let (joint, _) = race_dg_joint(
             &mut eng,
-            Some(DgSideSpec { op: &ax, u: &ux, opts }),
-            Some(DgSideSpec { op: &ay, u: &uy, opts }),
+            Some(DgSideSpec { op: Arc::new(ax), u: ux, opts }),
+            Some(DgSideSpec { op: Arc::new(ay), u: uy, opts }),
             l_ii,
             p,
             RacePolicy::Prune,
@@ -146,9 +147,10 @@ fn kdpp_workload(
     steps: usize,
     ecfg: EngineConfig,
 ) -> (usize, usize, bool) {
-    let mut kernels: Vec<(Csr, SpectrumBounds)> = Vec::new();
+    let mut kernels: Vec<(Arc<Csr>, SpectrumBounds)> = Vec::new();
     for _ in 0..chains {
-        kernels.push(crate::datasets::random_sparse_spd(rng, n, density, 0.05));
+        let (l, w) = crate::datasets::random_sparse_spd(rng, n, density, 0.05);
+        kernels.push((Arc::new(l), w));
     }
     let k = (n / 4).clamp(2, 12);
     let seeds: Vec<u64> = (0..chains).map(|_| rng.next_u64()).collect();
@@ -207,9 +209,10 @@ fn greedy_workload(
     width: usize,
     ecfg: EngineConfig,
 ) -> (usize, usize, bool) {
-    let mut ops: Vec<(Csr, SpectrumBounds)> = Vec::new();
+    let mut ops: Vec<(Arc<Csr>, SpectrumBounds)> = Vec::new();
     for _ in 0..kernels {
-        ops.push(gapped_kernel(rng, n, density, (2 * k).min(n), 50.0));
+        let (l, w) = gapped_kernel(rng, n, density, (2 * k).min(n), 50.0);
+        ops.push((Arc::new(l), w));
     }
     let window = ops.iter().fold(
         SpectrumBounds { lo: f64::INFINITY, hi: 0.0 },
@@ -223,7 +226,7 @@ fn greedy_workload(
         seq_rounds += stats.sweeps;
         solo.push(sel);
     }
-    let refs: Vec<&Csr> = ops.iter().map(|(l, _)| l).collect();
+    let refs: Vec<Arc<Csr>> = ops.iter().map(|(l, _)| Arc::clone(l)).collect();
     let (joint, joint_rounds) =
         greedy_map_multi(&refs, &cfg, ecfg).expect("engine knobs validated at admission");
     let mut identical = joint == solo;

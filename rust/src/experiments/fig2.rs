@@ -57,6 +57,7 @@ pub fn run(cfg: &RunConfig, budget: Fig2Budget, densities: &[f64]) -> Vec<Fig2Ro
     for &density in densities {
         // --- DPP / kDPP ---
         let (l, w) = random_sparse_spd(&mut rng, n_dpp, density, 1e-2);
+        let l = std::sync::Arc::new(l);
         let k = n_dpp / 3;
 
         // DPP baseline (exact Cholesky per decision)
@@ -107,6 +108,7 @@ pub fn run(cfg: &RunConfig, budget: Fig2Budget, densities: &[f64]) -> Vec<Fig2Ro
 
         // --- double greedy (2000², per-element times) ---
         let (l, w) = random_sparse_spd(&mut rng, n_dg, density, 1e-2);
+        let l = std::sync::Arc::new(l);
         let mut r = rng.fork();
         // full ground set in Y, but only the first few elements processed:
         // the Y-side Cholesky at |Y| ≈ n dominates every step of the real

@@ -73,6 +73,7 @@ pub fn gapped_kernel(
 
 pub fn run_one(rng: &mut Rng, n: usize, density: f64, k: usize, width: usize) -> RaceReport {
     let (l, w) = gapped_kernel(rng, n, density, (2 * k).min(n), 50.0);
+    let l = std::sync::Arc::new(l);
     let base = GreedyConfig::new(w, k)
         .with_block_width(width)
         .with_reorth(Reorth::None);

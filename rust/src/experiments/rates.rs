@@ -11,6 +11,7 @@ use crate::quadrature::{
     cg_solve, Answer, Engine, EngineConfig, Gql, GqlOptions, OpKey, Query, StopRule,
 };
 use crate::util::rng::Rng;
+use std::sync::Arc;
 
 /// Worst observed ratio (error / theoretical bound) per rule; ≤ 1 means
 /// the theorem holds on this instance.
@@ -151,7 +152,7 @@ pub fn profile_engine(cfg: &RunConfig, sizes: &[usize], reg: &MetricsRegistry) {
         .map(|&n| {
             let (a, l1, ln) = random_spd_exact(&mut rng, n, 0.3, 0.1);
             let u: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
-            (n, a, l1, ln, u)
+            (n, Arc::new(a), l1, ln, u)
         })
         .collect();
 
@@ -164,7 +165,7 @@ pub fn profile_engine(cfg: &RunConfig, sizes: &[usize], reg: &MetricsRegistry) {
     for (i, (n, a, l1, ln, u)) in probs.iter().enumerate() {
         let opts = GqlOptions::new(l1 * 0.99, ln * 1.01);
         let q = Query::Estimate { u: u.clone(), stop: StopRule::GapRel(1e-8) };
-        tickets.push((eng.submit(i as OpKey, a, opts, q), *n, ln / l1));
+        tickets.push((eng.submit(i as OpKey, Arc::clone(a), opts, q), *n, ln / l1));
     }
     eng.drain();
     for (t, n, kappa) in tickets {

@@ -118,7 +118,7 @@ pub fn run_one(rng: &mut Rng, n: usize, density: f64, k: usize) -> SessionReport
             .map(|q| {
                 let mut s = Session::new(&l, opts, lane_demand(q).max(1), RacePolicy::Prune);
                 let qid = s.submit(q.clone());
-                let mut answers = s.run();
+                let mut answers = s.run(&l);
                 sequential_sweeps += s.sweeps();
                 answers.swap_remove(qid)
             })
@@ -133,7 +133,7 @@ pub fn run_one(rng: &mut Rng, n: usize, density: f64, k: usize) -> SessionReport
         for q in &queries {
             s.submit(q.clone());
         }
-        let answers = s.run();
+        let answers = s.run(&l);
         let st = s.stats();
         session_sweeps = st.sweeps;
         pruned = st.pruned;

@@ -16,6 +16,7 @@ use crate::datasets::{table1_specs, DatasetSpec, RIDGE};
 use crate::experiments::time_secs;
 use crate::sparse::{gershgorin_bounds, Csr, SpectrumBounds};
 use crate::util::rng::Rng;
+use std::sync::Arc;
 
 /// One (dataset, algorithm) cell pair of Table 2.
 #[derive(Clone, Debug)]
@@ -28,6 +29,12 @@ pub struct Table2Row {
     pub baseline_s: Option<f64>,
     pub gauss_s: f64,
     pub speedup: Option<f64>,
+    /// §5.2 alternation judge iterations (the `dg_joint` row only —
+    /// ROADMAP item 6 batches the engine experiment's double-greedy
+    /// workload into this table)
+    pub seq_iters: Option<usize>,
+    /// joint-engine judge iterations at the decision rounds (ditto)
+    pub joint_iters: Option<usize>,
 }
 
 /// Execution budget for the drivers.
@@ -68,7 +75,7 @@ pub fn run_dataset(
     budget: Table2Budget,
 ) -> Vec<Table2Row> {
     let mut rng = Rng::new(cfg.seed ^ spec.n as u64);
-    let l = spec.build(&mut rng, cfg.dataset_scale);
+    let l = Arc::new(spec.build(&mut rng, cfg.dataset_scale));
     let n = l.n;
     let w = window_for(&l);
     let k = (n / 3).max(1);
@@ -108,6 +115,8 @@ pub fn run_dataset(
         baseline_s: baseline_dpp,
         gauss_s: gauss_dpp,
         speedup: baseline_dpp.map(|b| b / gauss_dpp),
+        seq_iters: None,
+        joint_iters: None,
     });
 
     // --- kDPP (per-step seconds) ---
@@ -135,16 +144,19 @@ pub fn run_dataset(
         baseline_s: baseline_kdpp,
         gauss_s: gauss_kdpp,
         speedup: baseline_kdpp.map(|b| b / gauss_kdpp),
+        seq_iters: None,
+        joint_iters: None,
     });
 
     // --- DG (full-run seconds) ---
     let dg_n = budget.dg_limit.map_or(n, |lim| lim.min(n));
-    let mut r = rng.fork();
+    let r_dg = rng.fork();
+    let mut r = r_dg.clone();
     let mut cfg_g = DgConfig::new(BifStrategy::Gauss, w);
     if dg_n < n {
         cfg_g = cfg_g.with_limit(dg_n);
     }
-    let (_, t_g) = time_secs(|| crate::apps::double_greedy(&l, cfg_g, &mut r));
+    let (res_seq, t_g) = time_secs(|| crate::apps::double_greedy(&l, cfg_g, &mut r));
     let gauss_dg = t_g;
 
     let baseline_dg = {
@@ -170,6 +182,29 @@ pub fn run_dataset(
         baseline_s: baseline_dg,
         gauss_s: gauss_dg,
         speedup: baseline_dg.map(|b| b / gauss_dg),
+        seq_iters: None,
+        joint_iters: None,
+    });
+
+    // --- DG, joint engine scheduling (ROADMAP item 6): the engine
+    // experiment's joint-vs-alternation comparison on the paper's
+    // datasets. Same seed as the alternation run, so the two walks make
+    // identical decisions and the iteration counts compare like for like
+    // (baseline column = the §5.2 alternation's wall time). ---
+    let mut r = r_dg.clone();
+    let (res_joint, t_j) =
+        time_secs(|| crate::apps::double_greedy(&l, cfg_g.with_joint(true), &mut r));
+    debug_assert_eq!(res_seq.chosen, res_joint.chosen, "joint DG diverged");
+    rows.push(Table2Row {
+        dataset: spec.name,
+        algo: "dg_joint",
+        n: dg_n,
+        nnz: l.nnz(),
+        baseline_s: Some(t_g),
+        gauss_s: t_j,
+        speedup: Some(t_g / t_j),
+        seq_iters: Some(res_seq.judge_iters_total),
+        joint_iters: Some(res_joint.judge_iters_total),
     });
     rows
 }
@@ -196,8 +231,10 @@ pub fn run_window(
         .collect()
 }
 
-pub const CSV_HEADER: [&str; 7] =
-    ["dataset", "algo", "n", "nnz", "baseline_s", "gauss_s", "speedup"];
+pub const CSV_HEADER: [&str; 9] = [
+    "dataset", "algo", "n", "nnz", "baseline_s", "gauss_s", "speedup", "seq_iters",
+    "joint_iters",
+];
 
 pub fn csv_rows(rows: &[Table2Row]) -> Vec<Vec<String>> {
     rows.iter()
@@ -210,6 +247,8 @@ pub fn csv_rows(rows: &[Table2Row]) -> Vec<Vec<String>> {
                 r.baseline_s.map_or("*".into(), |b| format!("{b:.6e}")),
                 format!("{:.6e}", r.gauss_s),
                 r.speedup.map_or("*".into(), |s| format!("{s:.1}")),
+                r.seq_iters.map_or("*".into(), |i| i.to_string()),
+                r.joint_iters.map_or("*".into(), |i| i.to_string()),
             ]
         })
         .collect()
@@ -229,7 +268,7 @@ mod tests {
             dg_limit: Some(60),
         };
         let rows = run_dataset(&table1_specs()[0], &cfg, budget);
-        assert_eq!(rows.len(), 3);
+        assert_eq!(rows.len(), 4);
         for r in &rows {
             assert!(r.gauss_s > 0.0);
             assert_eq!(r.dataset, "Abalone");
@@ -237,6 +276,11 @@ mod tests {
         // at 1/16 scale the dense baseline is feasible and slower
         let dpp = &rows[0];
         assert!(dpp.baseline_s.is_some());
+        // the ROADMAP-6 joint row compares like for like: same seed, and
+        // both iteration counters populated
+        let joint = rows.iter().find(|r| r.algo == "dg_joint").expect("dg_joint row");
+        assert!(joint.seq_iters.is_some() && joint.joint_iters.is_some());
+        assert!(joint.baseline_s.is_some());
     }
 
     #[test]
@@ -250,8 +294,16 @@ mod tests {
             dg_limit: Some(30),
         };
         let rows = run_dataset(&table1_specs()[2], &cfg, budget);
-        assert!(rows.iter().all(|r| r.baseline_s.is_none()));
+        // the dg_joint row's "baseline" is the alternation run itself, so
+        // it is always feasible; every exact baseline must be starred
+        assert!(rows
+            .iter()
+            .filter(|r| r.algo != "dg_joint")
+            .all(|r| r.baseline_s.is_none()));
         let csv = csv_rows(&rows);
-        assert!(csv.iter().all(|r| r[4] == "*" && r[6] == "*"));
+        assert!(csv
+            .iter()
+            .filter(|r| r[1] != "dg_joint")
+            .all(|r| r[4] == "*" && r[6] == "*"));
     }
 }

@@ -131,6 +131,10 @@ impl SymOp for DMat {
     fn diagonal(&self) -> Vec<f64> {
         (0..self.nrows).map(|i| self.get(i, i)).collect()
     }
+
+    fn nbytes(&self) -> usize {
+        std::mem::size_of::<DMat>() + self.data.capacity() * std::mem::size_of::<f64>()
+    }
 }
 
 /// x · y

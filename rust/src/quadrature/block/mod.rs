@@ -300,8 +300,16 @@ struct SuspendedLane {
 
 /// Batched GQL engine: push queries, then [`BlockGql::run_all`] — or
 /// drive it sweep by sweep with [`BlockGql::step_panel`].
-pub struct BlockGql<'a> {
-    op: &'a dyn SymOp,
+///
+/// The engine does not own (or borrow) its operator: the caller passes
+/// `&dyn SymOp` into every sweeping call ([`BlockGql::step_panel`] /
+/// [`BlockGql::run_all`]), which is what lets owners of panel state — the
+/// resident multi-tenant engine, app structs — be `'static` while the
+/// operator lives in a shared store. **Caller contract:** every sweep of
+/// one `BlockGql` must receive the same operator it was constructed
+/// against (same dimension, same matrix); the constructor records the
+/// dimension and sweeps debug-assert it.
+pub struct BlockGql {
     opts: GqlOptions,
     n: usize,
     /// configured maximum *lane* count B (the stride may exceed it by
@@ -326,12 +334,14 @@ pub struct BlockGql<'a> {
     sweeps: usize,
 }
 
-impl<'a> BlockGql<'a> {
-    /// Engine over `op` with panel width `width`. Like [`Gql::new`],
-    /// `opts.max_iters` is clamped to the operator dimension (no lane can
-    /// usefully iterate past Krylov exhaustion). `opts.reorth` applies to
-    /// every lane (per-lane basis storage; see the module docs).
-    pub fn new(op: &'a dyn SymOp, opts: GqlOptions, width: usize) -> Self {
+impl BlockGql {
+    /// Engine sized for `op` with panel width `width` (`op` is only read
+    /// for its dimension here — the same operator must then be passed to
+    /// every sweep). Like [`Gql::new`], `opts.max_iters` is clamped to the
+    /// operator dimension (no lane can usefully iterate past Krylov
+    /// exhaustion). `opts.reorth` applies to every lane (per-lane basis
+    /// storage; see the module docs).
+    pub fn new(op: &dyn SymOp, opts: GqlOptions, width: usize) -> Self {
         let n = op.dim();
         assert!(width >= 1, "block width must be at least 1");
         assert!(
@@ -343,7 +353,6 @@ impl<'a> BlockGql<'a> {
         let mut opts = opts;
         opts.max_iters = opts.max_iters.min(n).max(1);
         BlockGql {
-            op,
             opts,
             n,
             width,
@@ -422,25 +431,27 @@ impl<'a> BlockGql<'a> {
         &self.retired
     }
 
-    /// One scheduler round: admit pending queries up to the configured
-    /// width, then advance every lane by one `matvec_multi` panel sweep.
-    /// Returns `false` (without sweeping) once no lane or pending query
-    /// remains. Completed lanes land in [`BlockGql::take_done`] and their
-    /// columns refill from the queue, exactly as under `run_all`.
-    pub fn step_panel(&mut self) -> bool {
+    /// One scheduler round against `op` (which must be the operator this
+    /// engine was constructed for): admit pending queries up to the
+    /// configured width, then advance every lane by one `matvec_multi`
+    /// panel sweep. Returns `false` (without sweeping) once no lane or
+    /// pending query remains. Completed lanes land in
+    /// [`BlockGql::take_done`] and their columns refill from the queue,
+    /// exactly as under `run_all`.
+    pub fn step_panel(&mut self, op: &dyn SymOp) -> bool {
         self.admit();
         if self.lanes.is_empty() {
             return false;
         }
-        self.sweep();
+        self.sweep(op);
         true
     }
 
     /// Run until every queued query has completed; results sorted by id.
     /// Queries evicted by [`BlockGql::retire`] produce no result, and
     /// suspended lanes are not resumed implicitly.
-    pub fn run_all(&mut self) -> Vec<BlockResult> {
-        while self.step_panel() {}
+    pub fn run_all(&mut self, op: &dyn SymOp) -> Vec<BlockResult> {
+        while self.step_panel(op) {}
         self.take_done()
     }
 
@@ -636,11 +647,12 @@ impl<'a> BlockGql<'a> {
     /// op sequence on each column — see `quadrature::recurrence`).
     /// Completed lanes are emitted, refilled from the queue in place, or
     /// compacted away.
-    fn sweep(&mut self) {
+    fn sweep(&mut self, op: &dyn SymOp) {
         let (n, b) = (self.n, self.b);
         let nl = self.lanes.len();
         debug_assert!(nl > 0 && b >= nl);
-        self.op.matvec_multi(&self.v_curr, &mut self.w, b);
+        debug_assert_eq!(op.dim(), n, "sweep operator must match construction");
+        op.matvec_multi(&self.v_curr, &mut self.w, b);
         self.sweeps += 1;
 
         let max_iters = self.opts.max_iters;
@@ -728,7 +740,7 @@ pub fn block_solve<'q>(
     for (u, stop) in queries {
         engine.push(u, stop);
     }
-    engine.run_all()
+    engine.run_all(op)
 }
 
 #[cfg(test)]
@@ -750,7 +762,7 @@ mod tests {
             let scalar = run_scalar(&a, &u, opts, StopRule::Exhaust, true);
             let mut eng = BlockGql::new(&a, opts, 1).record_history(true);
             eng.push(&u, StopRule::Exhaust);
-            let block = eng.run_all().pop().unwrap();
+            let block = eng.run_all(&a).pop().unwrap();
             assert_eq!(scalar.history.len(), block.history.len());
             for (s, b) in scalar.history.iter().zip(&block.history) {
                 assert_eq!(s.gauss.to_bits(), b.gauss.to_bits());
@@ -778,7 +790,7 @@ mod tests {
                 eng.push(&u, StopRule::Threshold(t));
                 want.push(dec);
             }
-            let got = eng.run_all();
+            let got = eng.run_all(&a);
             assert_eq!(got.len(), want.len());
             for (r, w) in got.iter().zip(&want) {
                 assert_eq!(r.decision, Some(*w), "lane {}", r.id);
@@ -827,7 +839,7 @@ mod tests {
         let id = eng.push(&vec![0.0; 10], StopRule::Threshold(-1.0));
         let u: Vec<f64> = (0..10).map(|_| rng.normal()).collect();
         eng.push(&u, StopRule::Exhaust);
-        let out = eng.run_all();
+        let out = eng.run_all(&a);
         assert_eq!(out.len(), 2);
         assert_eq!(out[0].id, id);
         assert_eq!(out[0].iters, 0);
@@ -855,7 +867,7 @@ mod tests {
             let u: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
             eng.push(&u, StopRule::Iters(1));
         }
-        let out = eng.run_all();
+        let out = eng.run_all(&a);
         assert_eq!(out.len(), 8);
         assert_eq!(eng.sweeps(), 2, "refill must keep the panel dense");
     }
@@ -908,7 +920,7 @@ mod tests {
             for u in &queries {
                 eng.push(u, StopRule::Exhaust);
             }
-            for (r, u) in eng.run_all().iter().zip(&queries) {
+            for (r, u) in eng.run_all(&a).iter().zip(&queries) {
                 let scalar = run_scalar(&a, u, opts, StopRule::Exhaust, true);
                 assert_eq!(scalar.history.len(), r.history.len(), "query {}", r.id);
                 for (s, b) in scalar.history.iter().zip(&r.history) {
@@ -940,7 +952,7 @@ mod tests {
         assert_eq!(zero.bounds.gauss.to_bits(), one.bounds.gauss.to_bits());
         let mut eng = BlockGql::new(&a, opts, 2);
         eng.push(&u, StopRule::Iters(0));
-        let r = eng.run_all().pop().unwrap();
+        let r = eng.run_all(&a).pop().unwrap();
         assert_eq!(r.iters, 1);
         assert_eq!(r.bounds.gauss.to_bits(), one.bounds.gauss.to_bits());
     }
@@ -961,7 +973,7 @@ mod tests {
         // block path agrees
         let mut eng = BlockGql::new(&a, opts, 1).record_history(true);
         eng.push(&u, StopRule::Exhaust);
-        let b = eng.run_all().pop().unwrap();
+        let b = eng.run_all(&a).pop().unwrap();
         assert!(b.history.last().unwrap().exact);
     }
 
@@ -986,7 +998,7 @@ mod tests {
             eng.push(u, StopRule::GapRel(1e-8));
         }
         let mut incremental = Vec::new();
-        while eng.step_panel() {
+        while eng.step_panel(&a) {
             incremental.extend(eng.take_done());
         }
         incremental.extend(eng.take_done());
@@ -1016,14 +1028,14 @@ mod tests {
         let id0 = eng.push(&u0, StopRule::Exhaust);
         eng.push(&u1, StopRule::Iters(3));
         for _ in 0..2 {
-            assert!(eng.step_panel());
+            assert!(eng.step_panel(&a));
         }
         assert!(eng.suspend(id0), "active lane must suspend");
         // the other lane finishes alone
-        while eng.step_panel() {}
+        while eng.step_panel(&a) {}
         assert!(eng.resume(id0), "parked lane must resume");
         let mut results = Vec::new();
-        while eng.step_panel() {}
+        while eng.step_panel(&a) {}
         results.extend(eng.take_done());
         let r0 = results.iter().find(|r| r.id == id0).expect("resumed lane finished");
         assert_eq!(r0.history.len(), reference.history.len());
@@ -1048,7 +1060,7 @@ mod tests {
                 eng.push(&u, StopRule::Exhaust)
             })
             .collect();
-        assert!(eng.step_panel());
+        assert!(eng.step_panel(&a));
         // evict an active lane: its slot must refill from the queue
         assert!(eng.retire(ids[0], RetireReason::Dominated));
         let active: Vec<usize> = eng.active().map(|(id, _)| id).collect();
@@ -1057,7 +1069,7 @@ mod tests {
         // evict a still-pending query
         assert!(eng.retire(ids[3], RetireReason::Decided));
         assert!(!eng.retire(ids[3], RetireReason::Decided), "already gone");
-        let out = eng.run_all();
+        let out = eng.run_all(&a);
         // retired queries produce no result
         let got: Vec<usize> = out.iter().map(|r| r.id).collect();
         assert_eq!(got, vec![ids[1], ids[2]]);

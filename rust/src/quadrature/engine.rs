@@ -1,5 +1,5 @@
-//! Multi-operator streaming engine: one always-on scheduler that runs
-//! every live [`Session`] jointly.
+//! Resident multi-tenant engine: one always-on scheduler that owns its
+//! operators and runs every live [`Session`] jointly.
 //!
 //! The paper's central economy is that Gauss/Radau/Lobatto brackets
 //! tighten at a linear rate (Thm. 3/5/8), so decisions resolve long
@@ -13,46 +13,67 @@
 //! exactly the monotone-bound structure the pruning relies on, so nothing
 //! stops scheduling *all* live operators' panels in one joint round loop.
 //!
-//! The [`Engine`] owns a pool of live sessions keyed by operator
-//! ([`OpKey`]) and drives them from a single round loop — one
+//! The [`Engine`] owns an [`OpStore`] of ref-counted operators keyed by
+//! [`OpKey`] and drives the live sessions from a single round loop — one
 //! `matvec_multi` panel per operator per round, sessions swept in
-//! parallel by a small hand-rolled worker fan-out
-//! (the PR 1 "parallel panel sweep" item: scoped threads over disjoint
-//! session chunks, no locks, bit-identical at any worker count because
-//! each session is an independent state machine stepped exactly once per
-//! round). It adds three scheduling capabilities:
+//! parallel by a small hand-rolled worker fan-out (scoped threads over
+//! disjoint session chunks, no locks, bit-identical at any worker count
+//! because each session is an independent state machine stepped exactly
+//! once per round). Residency adds four capabilities on top of the
+//! original joint scheduling:
 //!
-//! * **Streaming submission** — [`Engine::submit`] is accepted mid-flight
-//!   and lands in the next round's panel for that operator; sessions spin
-//!   up lazily on first use of a key and idle sessions are evicted after
-//!   [`EngineConfig::ttl_rounds`] workless rounds (a later submission
-//!   under the same key spins a fresh session).
-//! * **Query-level suspend/resume** — a global lane budget
-//!   ([`EngineConfig::lanes`]) parks whole queries
-//!   ([`Session::suspend_query`], which carries full mid-run lane state
-//!   through [`BlockGql::suspend`](super::block::BlockGql::suspend))
-//!   under pressure and resumes them bit-identically, priority-ordered by
-//!   submission: the oldest unresolved query always keeps its lanes (and
-//!   is never split), younger ones park until capacity frees.
+//! * **Owned operator store** — [`Engine::submit`] takes an
+//!   `Arc<dyn SymOp>`; the engine pins it in the [`OpStore`] while its
+//!   session is live, releases it at TTL eviction, and LRU-evicts
+//!   released operators once the store exceeds
+//!   [`EngineConfig::store_bytes`]. A later submission under a still-
+//!   resident key reuses the stored operator ([`Engine::submit_keyed`]
+//!   needs no operator at all), so the engine has no borrowed-operator
+//!   lifetime and can outlive every caller.
+//! * **Ticket compaction** — submissions return a generation-tagged
+//!   [`Ticket`]; [`Engine::take_answer`] frees the ticket's slot for
+//!   reuse (a tombstone), and a stale ticket — one whose slot was
+//!   compacted — errors with [`TicketError::Stale`] instead of aliasing
+//!   a younger query's answer. A resident engine's ticket log is thereby
+//!   bounded by its open queries, not its history.
+//! * **Deadline admission & backpressure** — [`Engine::try_submit`]
+//!   estimates a query's sweeps from its dimension, width and
+//!   [`StopRule`] and schedules by slack (deadline minus estimate);
+//!   when open tickets hit [`EngineConfig::queue_cap`] it sheds the
+//!   least-urgent estimate mid-flight. Shed responses are *answers*, not
+//!   errors: the anytime property means the cancelled lane's current
+//!   four-bound bracket is still a valid certified enclosure.
 //! * **Joint scheduling for cross-operator consumers** —
 //!   [`race_dg_joint`] submits the double-greedy Δ⁺/Δ⁻ sides as two
 //!   estimate queries on two operators and decides from per-round bracket
 //!   exchange; `apps::kdpp::step_chains` advances a pool of k-DPP chains'
 //!   swap tests jointly; `apps::dpp::greedy_map_multi` races several
 //!   kernels' greedy rounds at once; the coordinator's native drain is a
-//!   thin engine client.
+//!   thin client of one shared resident engine.
+//!
+//! * **Streaming submission** (unchanged) — submissions are accepted
+//!   mid-flight and land in the next round's panel for their operator;
+//!   sessions spin up lazily on first use of a key and idle sessions are
+//!   evicted after [`EngineConfig::ttl_rounds`] workless rounds.
+//! * **Query-level suspend/resume** (unchanged) — a global lane budget
+//!   ([`EngineConfig::lanes`]) parks whole queries under pressure and
+//!   resumes them bit-identically, ordered by urgency then submission:
+//!   the head-of-line query always keeps its lanes.
 //!
 //! **Invariant — a scheduler, not a numeric path.** Engine answers are
 //! bit-identical to sequential per-operator [`Session`] runs: the engine
 //! never touches panel math, it only decides *when* each session steps.
 //! Per-lane op sequences are fixed by the block engine's exactness
 //! contract regardless of interleaving, suspended queries resume with
-//! their exact mid-run state, and every decision is certified by the same
-//! nested brackets — property-tested in `rust/tests/prop_engine.rs`,
-//! including streaming submission, a lane budget of 1, `Reorth::Full` on
-//! ill-conditioned kernels, and multi-worker sweeps.
+//! their exact mid-run state, evicted-and-readmitted operators rebuild
+//! the identical Krylov sequence (the store returns the same `Arc`, and
+//! a fresh session replays the same deterministic recurrence), and every
+//! decision is certified by the same nested brackets — property-tested
+//! in `rust/tests/prop_engine.rs`, including streaming submission, a
+//! lane budget of 1, LRU eviction + re-admission, stale-ticket
+//! generations, and shed answers carrying valid brackets.
 
-use super::block::RetireReason;
+use super::block::{RetireReason, StopRule};
 use super::gql::{Bounds, GqlOptions};
 use super::is_zero;
 use super::judge::{JudgeOutcome, JudgeStats};
@@ -61,6 +82,7 @@ use super::race::RacePolicy;
 use crate::metrics::{Histogram, MetricsRegistry};
 use crate::sparse::SymOp;
 use std::fmt;
+use std::sync::Arc;
 use std::time::Instant;
 
 /// Identifies one operator (and therefore one session) inside an engine.
@@ -70,7 +92,9 @@ use std::time::Instant;
 pub type OpKey = u64;
 
 /// Keys handed out by [`Engine::fresh_key`] start here; user keys should
-/// stay below to avoid collisions.
+/// stay below to avoid collisions. Anonymous operators can never be
+/// re-addressed, so the store drops them outright when their session is
+/// evicted instead of keeping them warm.
 pub const ANON_KEY_BASE: OpKey = 1 << 63;
 
 /// Ceiling for [`EngineConfig::lanes`]: a budget above this cannot be a
@@ -105,6 +129,9 @@ pub enum EngineConfigError {
     ZeroWorkers,
     /// Worker count beyond [`MAX_ENGINE_WORKERS`].
     AbsurdWorkers(usize),
+    /// `engine_queue_cap == 0`: every submission would be shed on
+    /// arrival — nothing could ever run.
+    ZeroQueueCap,
 }
 
 impl fmt::Display for EngineConfigError {
@@ -131,6 +158,10 @@ impl fmt::Display for EngineConfigError {
                 f,
                 "engine workers = {v} exceeds the sanity ceiling {MAX_ENGINE_WORKERS}"
             ),
+            EngineConfigError::ZeroQueueCap => write!(
+                f,
+                "engine_queue_cap must be >= 1 (0 would shed every submission on arrival)"
+            ),
         }
     }
 }
@@ -146,12 +177,14 @@ pub struct EngineConfig {
     /// ([`Engine::spin_up`] can override per key).
     pub width: usize,
     /// Global live-lane budget across every session: when the demand of
-    /// unresolved queries exceeds it, younger queries are parked whole
-    /// (suspend/resume, bit-identical) until capacity frees. The
+    /// unresolved queries exceeds it, less urgent queries are parked
+    /// whole (suspend/resume, bit-identical) until capacity frees. The
     /// head-of-line query always runs, so the budget can never deadlock.
     pub lanes: usize,
     /// Idle sessions (no unresolved query, no queued lane) are evicted
-    /// after this many consecutive workless rounds.
+    /// after this many consecutive workless rounds. Eviction releases the
+    /// session's operator pin in the [`OpStore`]; the operator itself
+    /// stays warm until the byte budget pushes it out.
     pub ttl_rounds: usize,
     /// Sweep workers: sessions are stepped in parallel chunks when more
     /// than one is live. Results are bit-identical at any worker count.
@@ -168,6 +201,18 @@ pub struct EngineConfig {
     /// traces ([`Session::record_traces`]); resolved estimate answers
     /// then carry a [`GapTrace`](crate::metrics::GapTrace).
     pub record_traces: bool,
+    /// Byte budget for *released* (no live session) operators kept warm
+    /// in the [`OpStore`]. Pinned operators never count against
+    /// eviction; the budget only bounds the warm cache. `usize::MAX`
+    /// (the default) keeps everything resident.
+    pub store_bytes: usize,
+    /// Backpressure bound for [`Engine::try_submit`]: when this many
+    /// tickets are open, admission sheds the least-urgent in-flight
+    /// estimate (its answer is its current four-bound bracket) to make
+    /// room, or refuses with [`SubmitError::Saturated`] when no query
+    /// has a bracket to answer with yet. `usize::MAX` (the default)
+    /// never sheds; [`Engine::submit`] bypasses the cap entirely.
+    pub queue_cap: usize,
 }
 
 impl Default for EngineConfig {
@@ -180,6 +225,8 @@ impl Default for EngineConfig {
             policy: RacePolicy::Prune,
             profile: false,
             record_traces: false,
+            store_bytes: usize::MAX,
+            queue_cap: usize::MAX,
         }
     }
 }
@@ -220,6 +267,16 @@ impl EngineConfig {
         self
     }
 
+    pub fn with_store_bytes(mut self, b: usize) -> Self {
+        self.store_bytes = b;
+        self
+    }
+
+    pub fn with_queue_cap(mut self, c: usize) -> Self {
+        self.queue_cap = c;
+        self
+    }
+
     /// Validate the pair of config-file knobs (`engine_lanes`,
     /// `engine_ttl_rounds`) — shared by [`EngineConfig::validate`] and
     /// `RunConfig` JSON/CLI admission so both reject the same values with
@@ -252,6 +309,9 @@ impl EngineConfig {
         if self.workers > MAX_ENGINE_WORKERS {
             return Err(EngineConfigError::AbsurdWorkers(self.workers));
         }
+        if self.queue_cap == 0 {
+            return Err(EngineConfigError::ZeroQueueCap);
+        }
         Ok(())
     }
 }
@@ -283,6 +343,13 @@ pub struct EngineStats {
     pub retired_dominated: usize,
     /// Lanes retired because the surrounding decision resolved first.
     pub retired_decided: usize,
+    /// In-flight queries shed by backpressure ([`Engine::try_submit`]
+    /// over [`EngineConfig::queue_cap`]); each shed query still resolved
+    /// to its current valid bracket.
+    pub shed: usize,
+    /// Ticket slots freed by [`Engine::take_answer`] — the compaction
+    /// rate that keeps a resident engine's ticket log bounded.
+    pub compactions: usize,
 }
 
 /// Cumulative round-loop profile, collected when
@@ -337,12 +404,267 @@ impl RoundProfile {
     }
 }
 
-/// One live operator: its session plus the tickets still pointing at it.
-struct OpSlot<'a> {
+// ---------------------------------------------------------------------------
+// Operator store
+// ---------------------------------------------------------------------------
+
+/// One resident operator: the shared handle, its byte cost (via
+/// [`SymOp::nbytes`]), and its LRU/pin state.
+struct StoreEntry {
     key: OpKey,
-    session: Session<'a>,
-    /// Tickets not yet harvested into [`Engine`]`::tickets` answers.
-    open: Vec<usize>,
+    op: Arc<dyn SymOp>,
+    bytes: usize,
+    /// Engine round of the last release/touch — the LRU clock.
+    last_used: u64,
+    /// Pinned while a live session runs on this operator; pinned entries
+    /// are immune to the byte budget.
+    pinned: bool,
+}
+
+/// The engine's owned operator cache: `Arc<dyn SymOp>` entries keyed by
+/// [`OpKey`], pinned while their session is live and LRU-evicted (oldest
+/// release first) once the resident bytes of *released* operators exceed
+/// the [`EngineConfig::store_bytes`] budget.
+///
+/// The store is what frees [`Engine`] from borrowed-operator lifetimes:
+/// callers hand over a ref-counted operator once and may drop their own
+/// handle; re-submissions under a warm key ([`Engine::submit_keyed`])
+/// need no operator at all. Anonymous keys ([`ANON_KEY_BASE`] and above)
+/// can never be re-addressed, so they are dropped outright — not kept
+/// warm — when their session is evicted.
+pub struct OpStore {
+    entries: Vec<StoreEntry>,
+    budget: usize,
+    inserted: u64,
+    evicted: u64,
+}
+
+impl OpStore {
+    fn new(budget: usize) -> Self {
+        OpStore { entries: Vec::new(), budget, inserted: 0, evicted: 0 }
+    }
+
+    fn find(&self, key: OpKey) -> Option<usize> {
+        self.entries.iter().position(|e| e.key == key)
+    }
+
+    /// Make `op` resident under `key` and pin it; an already-resident
+    /// key re-pins the *stored* operator and ignores `op` (the co-keyed
+    /// submission contract: one operator per key). Returns the canonical
+    /// handle the session should run on.
+    fn insert(&mut self, key: OpKey, op: Arc<dyn SymOp>, now: u64) -> Arc<dyn SymOp> {
+        if let Some(i) = self.find(key) {
+            let e = &mut self.entries[i];
+            e.pinned = true;
+            e.last_used = now;
+            return Arc::clone(&e.op);
+        }
+        let bytes = op.nbytes();
+        self.entries.push(StoreEntry {
+            key,
+            op: Arc::clone(&op),
+            bytes,
+            last_used: now,
+            pinned: true,
+        });
+        self.inserted += 1;
+        op
+    }
+
+    /// Make `op` resident without pinning (no session spun): later
+    /// keyed submissions find it warm, and the byte budget may evict it.
+    fn preload(&mut self, key: OpKey, op: Arc<dyn SymOp>, now: u64) {
+        if let Some(i) = self.find(key) {
+            self.entries[i].last_used = now;
+            return;
+        }
+        let bytes = op.nbytes();
+        self.entries.push(StoreEntry { key, op, bytes, last_used: now, pinned: false });
+        self.inserted += 1;
+        self.enforce_budget();
+    }
+
+    /// Refresh the LRU clock of a key whose session is still live.
+    fn touch(&mut self, key: OpKey, now: u64) {
+        if let Some(i) = self.find(key) {
+            self.entries[i].last_used = now;
+        }
+    }
+
+    /// Unpin `key` (its session was evicted). User keys stay warm under
+    /// the LRU clock; anonymous keys are dropped outright.
+    fn release(&mut self, key: OpKey, now: u64) {
+        if key >= ANON_KEY_BASE {
+            let before = self.entries.len();
+            self.entries.retain(|e| e.key != key);
+            self.evicted += (before - self.entries.len()) as u64;
+            return;
+        }
+        if let Some(i) = self.find(key) {
+            let e = &mut self.entries[i];
+            e.pinned = false;
+            e.last_used = now;
+        }
+    }
+
+    /// Evict released operators, oldest first, until the resident bytes
+    /// fit the budget. Pinned entries never move: the budget bounds the
+    /// warm cache, not live work.
+    fn enforce_budget(&mut self) {
+        while self.resident_bytes() > self.budget {
+            let victim = self
+                .entries
+                .iter()
+                .enumerate()
+                .filter(|(_, e)| !e.pinned)
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(i, _)| i);
+            match victim {
+                Some(i) => {
+                    self.entries.remove(i);
+                    self.evicted += 1;
+                }
+                None => break, // everything resident is pinned
+            }
+        }
+    }
+
+    /// Resident operators (pinned + warm).
+    pub fn resident(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Operators pinned by a live session.
+    pub fn pinned(&self) -> usize {
+        self.entries.iter().filter(|e| e.pinned).count()
+    }
+
+    /// Total bytes of resident operators ([`SymOp::nbytes`] at insert).
+    pub fn resident_bytes(&self) -> usize {
+        self.entries.iter().map(|e| e.bytes).sum()
+    }
+
+    /// Operators ever inserted.
+    pub fn inserted(&self) -> u64 {
+        self.inserted
+    }
+
+    /// Operators evicted (budget LRU + dropped anonymous keys).
+    pub fn evicted(&self) -> u64 {
+        self.evicted
+    }
+
+    /// True while `key` is resident (pinned or warm).
+    pub fn contains(&self, key: OpKey) -> bool {
+        self.find(key).is_some()
+    }
+
+    /// The resident operator behind `key`, if any.
+    pub fn get(&self, key: OpKey) -> Option<Arc<dyn SymOp>> {
+        self.find(key).map(|i| Arc::clone(&self.entries[i].op))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tickets
+// ---------------------------------------------------------------------------
+
+/// Handle to one submitted query: a slab index plus the generation the
+/// slot carried at submission. [`Engine::take_answer`] compacts the slot
+/// and bumps its generation, so a retained stale ticket errors instead
+/// of aliasing whatever query reuses the slot.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Ticket {
+    idx: u32,
+    gen: u32,
+}
+
+/// Why a [`Ticket`] could not produce an answer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TicketError {
+    /// The ticket's slot was compacted (its answer was already taken) or
+    /// the ticket never came from this engine — its generation does not
+    /// match the slot.
+    Stale,
+    /// The query behind the ticket has not resolved yet.
+    Unresolved,
+}
+
+impl fmt::Display for TicketError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TicketError::Stale => write!(f, "stale ticket: its slot was compacted or reused"),
+            TicketError::Unresolved => write!(f, "ticket not resolved yet"),
+        }
+    }
+}
+
+impl std::error::Error for TicketError {}
+
+/// Why an admission-checked submission was not accepted.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// [`Engine::submit_keyed`] addressed a key with no resident
+    /// operator (never submitted, or evicted from the store).
+    UnknownKey(OpKey),
+    /// The queue is at [`EngineConfig::queue_cap`] and no in-flight
+    /// query has a bracket to shed with yet — the caller should retry
+    /// after a round or drop the request.
+    Saturated,
+}
+
+impl fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SubmitError::UnknownKey(k) => write!(f, "no resident operator under key {k}"),
+            SubmitError::Saturated => {
+                write!(f, "engine saturated: queue at capacity with nothing sheddable")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// Ticket bookkeeping: which session/query answers it, its admission
+/// priority, and the harvested answer once resolved (sessions may be
+/// evicted afterwards).
+struct TicketState {
+    key: OpKey,
+    qid: usize,
+    /// Global submission order — the FIFO tiebreak.
+    seq: u64,
+    /// Scheduling slack: engine round by which work must *start* to make
+    /// the deadline, given the sweep estimate. `u64::MAX` for deadline-
+    /// free submissions, which therefore run FIFO after every deadline.
+    urgency: u64,
+    /// Estimated lane cost (admission accounting; 1 per estimate lane).
+    cost: u64,
+    /// Estimates may be shed mid-flight (their bracket is an answer);
+    /// decision queries may not.
+    sheddable: bool,
+    answer: Option<Answer>,
+}
+
+/// One slab slot: the current generation plus the live state, `None`
+/// once compacted (a tombstone awaiting reuse).
+struct TicketSlot {
+    gen: u32,
+    state: Option<TicketState>,
+}
+
+// ---------------------------------------------------------------------------
+// Engine
+// ---------------------------------------------------------------------------
+
+/// One live operator: its session, the canonical store handle it runs
+/// on, and the tickets still pointing at it.
+struct OpSlot {
+    key: OpKey,
+    op: Arc<dyn SymOp>,
+    session: Session,
+    /// Tickets not yet harvested into answers.
+    open: Vec<Ticket>,
     /// Consecutive workless harvests (drives TTL eviction).
     idle_rounds: usize,
     /// Session sweep count at the last harvest (delta accounting).
@@ -354,33 +676,40 @@ struct OpSlot<'a> {
     live: bool,
 }
 
-/// Ticket bookkeeping: which session/query answers it, and the harvested
-/// answer once resolved (sessions may be evicted afterwards).
-struct TicketState {
-    key: OpKey,
-    qid: usize,
-    answer: Option<Answer>,
+impl OpSlot {
+    /// One panel sweep of this slot's session against its own operator
+    /// (disjoint-field borrow: the session steps while the op is read).
+    fn step(&mut self) {
+        let OpSlot { session, op, .. } = self;
+        session.step(&**op);
+    }
 }
 
 /// The always-on scheduler. See the module docs for the design; the
-/// lifecycle is: [`Engine::submit`] (any time, including mid-flight) →
-/// [`Engine::step_round`] / [`Engine::drain`] → [`Engine::answer`].
+/// lifecycle is: [`Engine::submit`] / [`Engine::try_submit`] (any time,
+/// including mid-flight) → [`Engine::step_round`] / [`Engine::drain`] →
+/// [`Engine::take_answer`].
 ///
-/// Resolved tickets stay addressable for the engine's lifetime —
-/// [`Engine::answer`] is the API — so the ticket log only grows. The
-/// scheduling and liveness passes skip the fully-resolved prefix through
-/// a cursor, keeping per-round cost O(open tickets) regardless of
-/// history; the retained answers themselves are the price of the stable
-/// ticket ids. Every current consumer builds a per-burst engine, which
-/// bounds that price; a truly service-resident engine wants the
-/// ticket-log compaction listed as a ROADMAP follow-up.
-pub struct Engine<'a> {
+/// Tickets live in a generation-tagged slab: [`Engine::take_answer`]
+/// tombstones the slot for reuse, so a resident engine's ticket memory
+/// is bounded by its open queries. [`Engine::answer`] peeks without
+/// compacting for callers that want the borrow; per-burst consumers that
+/// never call `take_answer` simply grow the slab for the burst's
+/// lifetime, same as before.
+pub struct Engine {
     cfg: EngineConfig,
-    slots: Vec<OpSlot<'a>>,
-    tickets: Vec<TicketState>,
-    /// Every ticket below this index is resolved (the scheduling passes
-    /// start here; advanced by `harvest`).
-    first_open: usize,
+    store: OpStore,
+    slots: Vec<OpSlot>,
+    tickets: Vec<TicketSlot>,
+    /// Compacted slab slots awaiting reuse.
+    free: Vec<u32>,
+    /// Unresolved tickets in scheduling order: stale/answered entries
+    /// drop out each round and the rest stable-sort by (urgency, seq).
+    order: Vec<Ticket>,
+    /// Monotone submission counter (the FIFO tiebreak).
+    seq: u64,
+    /// Open (unanswered) tickets — the backpressure measure.
+    open: usize,
     stats: EngineStats,
     /// Round-loop profile, allocated iff [`EngineConfig::profile`] —
     /// `None` keeps the unprofiled hot path free of even a branch-y
@@ -389,15 +718,19 @@ pub struct Engine<'a> {
     next_anon: OpKey,
 }
 
-impl<'a> Engine<'a> {
+impl Engine {
     /// Build an engine, rejecting unusable knobs with a typed error.
     pub fn new(cfg: EngineConfig) -> Result<Self, EngineConfigError> {
         cfg.validate()?;
         Ok(Engine {
             cfg,
+            store: OpStore::new(cfg.store_bytes),
             slots: Vec::new(),
             tickets: Vec::new(),
-            first_open: 0,
+            free: Vec::new(),
+            order: Vec::new(),
+            seq: 0,
+            open: 0,
             stats: EngineStats::default(),
             profile: cfg.profile.then(|| Box::new(RoundProfile::default())),
             next_anon: ANON_KEY_BASE,
@@ -411,6 +744,11 @@ impl<'a> Engine<'a> {
     /// Accounting snapshot.
     pub fn stats(&self) -> EngineStats {
         self.stats
+    }
+
+    /// The operator store (residency/eviction accounting).
+    pub fn store(&self) -> &OpStore {
+        &self.store
     }
 
     /// The collected round profile ([`EngineConfig::profile`] engines
@@ -434,6 +772,16 @@ impl<'a> Engine<'a> {
         reg.set_counter("engine.retired_decided", st.retired_decided as u64);
         reg.set_gauge("engine.peak_live_lanes", st.peak_live_lanes as f64);
         reg.set_gauge("engine.live_sessions", self.slots.len() as f64);
+        reg.set_gauge("engine.open_tickets", self.open as f64);
+        reg.set_gauge("engine.store.resident", self.store.resident() as f64);
+        reg.set_gauge("engine.store.pinned", self.store.pinned() as f64);
+        reg.set_gauge("engine.store.resident_bytes", self.store.resident_bytes() as f64);
+        reg.set_counter("engine.store.inserted", self.store.inserted());
+        reg.set_counter("engine.store.evicted", self.store.evicted());
+        reg.set_counter("engine.admission.admitted", st.submitted as u64);
+        reg.set_counter("engine.admission.parked", st.parks as u64);
+        reg.set_counter("engine.admission.shed", st.shed as u64);
+        reg.set_counter("engine.admission.compactions", st.compactions as u64);
         if let Some(p) = self.profile.as_deref() {
             reg.set_counter("engine.profile.rounds", p.rounds as u64);
             reg.set_counter("engine.profile.schedule_ns", p.schedule_ns);
@@ -452,6 +800,18 @@ impl<'a> Engine<'a> {
         self.slots.len()
     }
 
+    /// Open (unanswered) tickets — what [`EngineConfig::queue_cap`]
+    /// bounds.
+    pub fn open_tickets(&self) -> usize {
+        self.open
+    }
+
+    /// Slab slots currently holding a query or retained answer (total
+    /// minus compacted) — the measure [`Engine::take_answer`] bounds.
+    pub fn live_tickets(&self) -> usize {
+        self.tickets.len() - self.free.len()
+    }
+
     /// A key guaranteed not to collide with other [`Engine::fresh_key`]
     /// keys (consumers without a natural operator id — `race_dg_joint`'s
     /// per-element sides — use these; keep user keys below
@@ -466,30 +826,61 @@ impl<'a> Engine<'a> {
         self.slots.iter().position(|s| s.key == key)
     }
 
+    fn ticket_state(&self, t: Ticket) -> Option<&TicketState> {
+        self.tickets
+            .get(t.idx as usize)
+            .filter(|s| s.gen == t.gen)
+            .and_then(|s| s.state.as_ref())
+    }
+
+    fn alloc_ticket(&mut self, st: TicketState) -> Ticket {
+        if let Some(idx) = self.free.pop() {
+            let slot = &mut self.tickets[idx as usize];
+            debug_assert!(slot.state.is_none(), "free list held a live slot");
+            slot.state = Some(st);
+            return Ticket { idx, gen: slot.gen };
+        }
+        let idx = self.tickets.len() as u32;
+        self.tickets.push(TicketSlot { gen: 0, state: Some(st) });
+        Ticket { idx, gen: 0 }
+    }
+
+    /// Make `op` resident under `key` without spinning a session: later
+    /// [`Engine::submit_keyed`] calls find it warm. The entry is
+    /// unpinned, so the store budget may evict it before use.
+    pub fn preload(&mut self, key: OpKey, op: Arc<dyn SymOp>) {
+        let now = self.stats.rounds as u64;
+        self.store.preload(key, op, now);
+    }
+
     /// Look up — or lazily spin up — the session for `key`, with an
     /// explicit panel width and race policy for the spin-up case (an
-    /// existing session keeps its own). Returns the slot index for
+    /// existing session keeps its own). The operator is pinned in the
+    /// store for the session's lifetime; if `key` is already resident
+    /// the *stored* operator is canonical and `op` is ignored (co-keyed
+    /// submissions target one operator). Returns the slot index for
     /// [`Engine::submit_to`].
     pub fn spin_up(
         &mut self,
         key: OpKey,
-        op: &'a dyn SymOp,
+        op: Arc<dyn SymOp>,
         opts: GqlOptions,
         width: usize,
         policy: RacePolicy,
     ) -> usize {
+        let now = self.stats.rounds as u64;
         if let Some(i) = self.slot_index(key) {
-            // key contract (same as the coordinator's `op_key`): co-keyed
-            // submissions target one operator; `op`/`opts`/`width`/
-            // `policy` of later calls are ignored for an existing session
+            self.store.touch(key, now);
             return i;
         }
-        let mut session = Session::new(op, opts, width.max(1), policy);
+        let canonical = self.store.insert(key, op, now);
+        let mut session = Session::new(&*canonical, opts, width.max(1), policy);
         if self.cfg.record_traces {
             session = session.record_traces(true);
         }
         self.slots.push(OpSlot {
             key,
+            op: canonical,
             session,
             open: Vec::new(),
             idle_rounds: 0,
@@ -501,22 +892,105 @@ impl<'a> Engine<'a> {
         self.slots.len() - 1
     }
 
-    /// Streaming submission: enter `q` against the operator behind `key`,
-    /// spinning up a session lazily (with the engine-default width and
-    /// policy). Accepted mid-flight — the query's lanes land in the next
-    /// round's panel for that operator. Returns a ticket for
-    /// [`Engine::answer`].
-    pub fn submit(&mut self, key: OpKey, op: &'a dyn SymOp, opts: GqlOptions, q: Query) -> usize {
+    /// [`Engine::spin_up`] from the warm store alone: succeeds iff `key`
+    /// is already resident (live session or warm operator). The keyed
+    /// re-admission path — no operator crosses the API.
+    pub fn spin_up_keyed(
+        &mut self,
+        key: OpKey,
+        opts: GqlOptions,
+        width: usize,
+        policy: RacePolicy,
+    ) -> Option<usize> {
+        if let Some(i) = self.slot_index(key) {
+            return Some(i);
+        }
+        let op = self.store.get(key)?;
+        Some(self.spin_up(key, op, opts, width, policy))
+    }
+
+    /// Streaming submission: enter `q` against the operator behind
+    /// `key`, spinning up a session lazily (with the engine-default
+    /// width and policy) and pinning `op` in the store. Accepted
+    /// mid-flight — the query's lanes land in the next round's panel for
+    /// that operator. Infallible and deadline-free: this is the trusted
+    /// in-process path that bypasses [`EngineConfig::queue_cap`];
+    /// service front ends use [`Engine::try_submit`]. Returns a ticket
+    /// for [`Engine::take_answer`].
+    pub fn submit(
+        &mut self,
+        key: OpKey,
+        op: Arc<dyn SymOp>,
+        opts: GqlOptions,
+        q: Query,
+    ) -> Ticket {
         let (width, policy) = (self.cfg.width, self.cfg.policy);
         let slot = self.spin_up(key, op, opts, width, policy);
-        self.submit_to(slot, q)
+        self.submit_to_with(slot, q, None)
+    }
+
+    /// Admission-checked submission with an optional deadline (engine
+    /// rounds from now the caller is willing to wait). Scheduling runs
+    /// most-urgent-first — urgency is the slack between the deadline and
+    /// the estimated sweeps ([`estimate_cost`]) — and when open tickets
+    /// reach [`EngineConfig::queue_cap`] the least-urgent in-flight
+    /// estimate is shed to make room: it resolves *now* to its current
+    /// four-bound bracket (the anytime property — still a certified
+    /// enclosure, just wider than a full run's). With nothing sheddable
+    /// the submission is refused as [`SubmitError::Saturated`].
+    pub fn try_submit(
+        &mut self,
+        key: OpKey,
+        op: Arc<dyn SymOp>,
+        opts: GqlOptions,
+        q: Query,
+        deadline: Option<u64>,
+    ) -> Result<Ticket, SubmitError> {
+        if self.open >= self.cfg.queue_cap {
+            self.shed_one()?;
+        }
+        let (width, policy) = (self.cfg.width, self.cfg.policy);
+        let slot = self.spin_up(key, op, opts, width, policy);
+        Ok(self.submit_to_with(slot, q, deadline))
+    }
+
+    /// [`Engine::try_submit`] against a key whose operator is already
+    /// resident — the warm path a service front end uses for repeat
+    /// tenants (no operator crosses the API).
+    pub fn submit_keyed(
+        &mut self,
+        key: OpKey,
+        opts: GqlOptions,
+        q: Query,
+        deadline: Option<u64>,
+    ) -> Result<Ticket, SubmitError> {
+        if self.open >= self.cfg.queue_cap {
+            self.shed_one()?;
+        }
+        let (width, policy) = (self.cfg.width, self.cfg.policy);
+        let slot = self
+            .spin_up_keyed(key, opts, width, policy)
+            .ok_or(SubmitError::UnknownKey(key))?;
+        Ok(self.submit_to_with(slot, q, deadline))
     }
 
     /// [`Engine::submit`] against a slot obtained from
     /// [`Engine::spin_up`] (callers that pick per-operator widths or
     /// policies, like the coordinator's native drain).
-    pub fn submit_to(&mut self, slot: usize, q: Query) -> usize {
-        let ticket = self.tickets.len();
+    pub fn submit_to(&mut self, slot: usize, q: Query) -> Ticket {
+        self.submit_to_with(slot, q, None)
+    }
+
+    /// [`Engine::submit_to`] with an optional deadline (see
+    /// [`Engine::try_submit`] for the semantics).
+    pub fn submit_to_with(&mut self, slot: usize, q: Query, deadline: Option<u64>) -> Ticket {
+        let n = self.slots[slot].op.dim();
+        let (est_rounds, cost) = estimate_cost(&q, n);
+        let sheddable = matches!(q, Query::Estimate { .. });
+        let urgency = match deadline {
+            Some(d) => (self.stats.rounds as u64 + d).saturating_sub(est_rounds),
+            None => u64::MAX,
+        };
         let (key, qid, answer) = {
             let s = &mut self.slots[slot];
             let qid = s.session.submit(q);
@@ -525,45 +999,106 @@ impl<'a> Engine<'a> {
             (s.key, qid, s.session.answer(qid).cloned())
         };
         let resolved = answer.is_some();
-        self.tickets.push(TicketState { key, qid, answer });
+        let seq = self.seq;
+        self.seq += 1;
+        let ticket =
+            self.alloc_ticket(TicketState { key, qid, seq, urgency, cost, sheddable, answer });
         if !resolved {
             let s = &mut self.slots[slot];
             s.open.push(ticket);
             s.idle_rounds = 0;
+            self.order.push(ticket);
+            self.open += 1;
         }
         self.stats.submitted += 1;
         ticket
     }
 
-    /// The harvested answer of `ticket`, if resolved.
-    pub fn answer(&self, ticket: usize) -> Option<&Answer> {
-        self.tickets[ticket].answer.as_ref()
+    /// Shed the least-urgent in-flight estimate (largest slack, then
+    /// youngest) that already carries a bracket: it resolves to that
+    /// bracket and frees its queue slot. `Err(Saturated)` when nothing
+    /// qualifies — decision queries and not-yet-swept estimates have no
+    /// valid answer to shed with.
+    fn shed_one(&mut self) -> Result<(), SubmitError> {
+        let mut victim: Option<((u64, u64), Ticket)> = None;
+        for &t in &self.order {
+            let Some(st) = self.ticket_state(t) else { continue };
+            if st.answer.is_some() || !st.sheddable {
+                continue;
+            }
+            if self.bounds(t).is_none() {
+                continue; // no bracket yet: nothing valid to answer with
+            }
+            let rank = (st.urgency, st.seq);
+            if victim.map_or(true, |(best, _)| rank > best) {
+                victim = Some((rank, t));
+            }
+        }
+        match victim {
+            Some((_, t)) => {
+                let ok = self.cancel(t);
+                debug_assert!(ok, "shed victim had a bracket but would not cancel");
+                self.stats.shed += 1;
+                Ok(())
+            }
+            None => Err(SubmitError::Saturated),
+        }
     }
 
-    /// True once `ticket` carries an answer.
-    pub fn is_resolved(&self, ticket: usize) -> bool {
-        self.tickets[ticket].answer.is_some()
+    /// The harvested answer of `ticket`, if resolved — a peek that
+    /// leaves the slot intact (stale tickets read as `None`).
+    pub fn answer(&self, ticket: Ticket) -> Option<&Answer> {
+        self.ticket_state(ticket).and_then(|st| st.answer.as_ref())
+    }
+
+    /// True once `ticket` carries an answer (stale tickets read false).
+    pub fn is_resolved(&self, ticket: Ticket) -> bool {
+        self.ticket_state(ticket).is_some_and(|st| st.answer.is_some())
+    }
+
+    /// Move the answer out and compact the ticket slot: the slot's
+    /// generation bumps and the index returns to the free list, so the
+    /// taken ticket — and any copy of it — is permanently stale. The
+    /// compaction path that keeps a resident engine's ticket log bounded
+    /// by its open queries.
+    pub fn take_answer(&mut self, ticket: Ticket) -> Result<Answer, TicketError> {
+        let slot = self
+            .tickets
+            .get_mut(ticket.idx as usize)
+            .filter(|s| s.gen == ticket.gen)
+            .ok_or(TicketError::Stale)?;
+        match &slot.state {
+            None => Err(TicketError::Stale),
+            Some(st) if st.answer.is_none() => Err(TicketError::Unresolved),
+            Some(_) => {
+                let st = slot.state.take().expect("checked above");
+                slot.gen = slot.gen.wrapping_add(1);
+                self.free.push(ticket.idx);
+                self.stats.compactions += 1;
+                Ok(st.answer.expect("checked above"))
+            }
+        }
     }
 
     /// Latest bracket of a single-lane (estimate/threshold) ticket:
     /// mid-flight snapshot while racing, final bounds after resolution.
     /// Cross-operator consumers decide from these between rounds.
-    pub fn bounds(&self, ticket: usize) -> Option<Bounds> {
-        let t = &self.tickets[ticket];
-        if let Some(Answer::Estimate { bounds, .. }) = &t.answer {
+    pub fn bounds(&self, ticket: Ticket) -> Option<Bounds> {
+        let st = self.ticket_state(ticket)?;
+        if let Some(Answer::Estimate { bounds, .. }) = &st.answer {
             return Some(*bounds);
         }
-        self.slot_index(t.key)
-            .and_then(|i| self.slots[i].session.bounds(t.qid))
+        self.slot_index(st.key)
+            .and_then(|i| self.slots[i].session.bounds(st.qid))
     }
 
     /// Resolve an estimate ticket right now with its latest bracket
     /// (see [`Session::cancel`]); its lane stops consuming sweeps.
-    pub fn cancel(&mut self, ticket: usize) -> bool {
-        if self.tickets[ticket].answer.is_some() {
-            return false;
-        }
-        let (key, qid) = (self.tickets[ticket].key, self.tickets[ticket].qid);
+    pub fn cancel(&mut self, ticket: Ticket) -> bool {
+        let (key, qid) = match self.ticket_state(ticket) {
+            Some(st) if st.answer.is_none() => (st.key, st.qid),
+            _ => return false,
+        };
         let Some(i) = self.slot_index(key) else {
             return false;
         };
@@ -572,7 +1107,12 @@ impl<'a> Engine<'a> {
         }
         let ans = self.slots[i].session.answer(qid).cloned();
         debug_assert!(ans.is_some(), "cancel resolved the query");
-        self.tickets[ticket].answer = ans;
+        self.tickets[ticket.idx as usize]
+            .state
+            .as_mut()
+            .expect("ticket_state checked the slot")
+            .answer = ans;
+        self.open -= 1;
         self.slots[i].open.retain(|&t| t != ticket);
         // the cancel retired a lane; account it now — no harvest may
         // follow if this was the engine's last open ticket
@@ -582,23 +1122,38 @@ impl<'a> Engine<'a> {
 
     /// True while some ticket has no answer yet.
     pub fn has_work(&self) -> bool {
-        self.tickets[self.first_open..]
-            .iter()
-            .any(|t| t.answer.is_none())
+        self.open > 0
     }
 
-    /// The lane-budget pass: walk unresolved queries in submission order
-    /// (the priority order), keep them live while the budget holds, park
+    /// The admission-priority lane-budget pass: drop stale/answered
+    /// tickets out of the order, stable-sort the rest by (urgency, seq)
+    /// — deadline slack first, submission order as the tiebreak — then
+    /// walk it keeping queries live while the budget holds and parking
     /// the rest. The head-of-line query always runs whole — the budget
     /// never splits a query's lanes, so a width-2 compare under
     /// `lanes = 1` runs alone rather than deadlocking.
     fn schedule(&mut self) {
+        let tickets = &self.tickets;
+        self.order.retain(|t| {
+            tickets
+                .get(t.idx as usize)
+                .filter(|s| s.gen == t.gen)
+                .and_then(|s| s.state.as_ref())
+                .is_some_and(|st| st.answer.is_none())
+        });
+        self.order.sort_by_key(|t| {
+            let st = tickets[t.idx as usize].state.as_ref().expect("retained above");
+            (st.urgency, st.seq)
+        });
         let budget = self.cfg.lanes;
         let mut used = 0usize;
-        let pending: Vec<(OpKey, usize)> = self.tickets[self.first_open..]
+        let pending: Vec<(OpKey, usize)> = self
+            .order
             .iter()
-            .filter(|t| t.answer.is_none())
-            .map(|t| (t.key, t.qid))
+            .map(|t| {
+                let st = self.tickets[t.idx as usize].state.as_ref().expect("retained");
+                (st.key, st.qid)
+            })
             .collect();
         for (key, qid) in pending {
             let Some(i) = self.slot_index(key) else {
@@ -624,9 +1179,11 @@ impl<'a> Engine<'a> {
     }
 
     /// Pull freshly-resolved answers out of every session, account
-    /// sweeps, and evict sessions idle past the TTL.
+    /// sweeps, evict sessions idle past the TTL (releasing their store
+    /// pins), and enforce the store byte budget.
     fn harvest(&mut self) {
         let ttl = self.cfg.ttl_rounds;
+        let now = self.stats.rounds as u64;
         let mut i = 0;
         while i < self.slots.len() {
             let evict = {
@@ -639,11 +1196,15 @@ impl<'a> Engine<'a> {
                 drain_retire_log(slot, &mut self.stats);
                 let session = &slot.session;
                 let tickets = &mut self.tickets;
-                slot.open.retain(|&tk| {
-                    let st = &mut tickets[tk];
+                let open_count = &mut self.open;
+                slot.open.retain(|tk| {
+                    let ts = &mut tickets[tk.idx as usize];
+                    debug_assert_eq!(ts.gen, tk.gen, "open ticket went stale");
+                    let st = ts.state.as_mut().expect("open ticket compacted");
                     match session.answer(st.qid) {
                         Some(a) => {
                             st.answer = Some(a.clone());
+                            *open_count -= 1;
                             false
                         }
                         None => true,
@@ -658,25 +1219,21 @@ impl<'a> Engine<'a> {
                 }
             };
             if evict {
-                self.slots.remove(i);
+                let dead = self.slots.remove(i);
+                self.store.release(dead.key, now);
                 self.stats.sessions_evicted += 1;
             } else {
                 i += 1;
             }
         }
-        // advance the resolved-prefix cursor so liveness and budget
-        // passes never rescan history
-        while self.first_open < self.tickets.len()
-            && self.tickets[self.first_open].answer.is_some()
-        {
-            self.first_open += 1;
-        }
+        self.store.enforce_budget();
     }
 
-    /// One joint round: the lane-budget pass, then one panel sweep per
-    /// live operator (in parallel when configured), then answer harvest
-    /// and TTL eviction. Returns `false` (after still harvesting) once no
-    /// session has work — every remaining ticket is then resolved.
+    /// One joint round: the admission-priority lane-budget pass, then
+    /// one panel sweep per live operator (in parallel when configured),
+    /// then answer harvest, TTL eviction and store budget enforcement.
+    /// Returns `false` (after still harvesting) once no session has work
+    /// — every remaining ticket is then resolved.
     pub fn step_round(&mut self) -> bool {
         if self.profile.is_some() {
             return self.step_round_profiled();
@@ -699,7 +1256,7 @@ impl<'a> Engine<'a> {
         } else {
             for s in &mut self.slots {
                 if s.live {
-                    s.session.step();
+                    s.step();
                 }
             }
         }
@@ -744,7 +1301,7 @@ impl<'a> Engine<'a> {
             for s in &mut self.slots {
                 if s.live {
                     let t = Instant::now();
-                    s.session.step();
+                    s.step();
                     let ns = t.elapsed().as_nanos() as u64;
                     h.record(ns as f64);
                     busy += ns;
@@ -780,10 +1337,36 @@ impl<'a> Engine<'a> {
     }
 }
 
+/// Planning estimate for one query on an `n`-dim operator: (rounds to
+/// resolve, lane cost). Deliberately crude — admission needs an ordering
+/// signal, not a forecast: `Iters(k)` is exact, `Exhaust` is the Krylov
+/// dimension, and tolerance/threshold stops are taken at half the
+/// Krylov budget (the linear bracket rate of Thm. 3/5/8 means most
+/// decisions resolve well before exhaustion).
+fn estimate_cost(q: &Query, n: usize) -> (u64, u64) {
+    let n = n.max(1);
+    let stop_rounds = |stop: &StopRule| -> u64 {
+        match stop {
+            StopRule::Iters(k) => (*k).clamp(1, n) as u64,
+            StopRule::Exhaust => n as u64,
+            _ => (n / 2 + 1) as u64,
+        }
+    };
+    match q {
+        Query::Estimate { stop, .. } => (stop_rounds(stop), 1),
+        Query::Threshold { .. } => ((n / 2 + 1) as u64, 1),
+        Query::Compare { .. } => ((n / 2 + 1) as u64, 2),
+        Query::Argmax { arms, .. } => (
+            arms.iter().map(|a| stop_rounds(&a.stop)).max().unwrap_or(1),
+            arms.len().max(1) as u64,
+        ),
+    }
+}
+
 /// Pull new [`RetireEvent`](super::block::RetireEvent)s out of a slot's
 /// session log into the engine counters (delta via the slot's
 /// `last_retired` cursor — each event is counted exactly once).
-fn drain_retire_log(slot: &mut OpSlot<'_>, stats: &mut EngineStats) {
+fn drain_retire_log(slot: &mut OpSlot, stats: &mut EngineStats) {
     let events = slot.session.retired();
     for e in &events[slot.last_retired..] {
         match e.reason {
@@ -794,13 +1377,13 @@ fn drain_retire_log(slot: &mut OpSlot<'_>, stats: &mut EngineStats) {
     slot.last_retired = events.len();
 }
 
-/// The hand-rolled parallel panel sweep (the PR 1 follow-up): fan the
-/// live sessions out over scoped worker threads in disjoint `chunks_mut`
-/// slices — no locks, no work queue, and exactly one `Session::step` per
-/// live session per round, so the result is bit-identical to the
-/// sequential loop at any worker count. Engine bookkeeping (scheduling,
-/// harvest, eviction) stays on the driving thread between rounds.
-fn sweep_parallel(slots: &mut [OpSlot<'_>], workers: usize) {
+/// The hand-rolled parallel panel sweep: fan the live sessions out over
+/// scoped worker threads in disjoint `chunks_mut` slices — no locks, no
+/// work queue, and exactly one session step per live session per round,
+/// so the result is bit-identical to the sequential loop at any worker
+/// count. Engine bookkeeping (scheduling, harvest, eviction) stays on
+/// the driving thread between rounds.
+fn sweep_parallel(slots: &mut [OpSlot], workers: usize) {
     let w = workers.min(slots.len()).max(1);
     let chunk = slots.len().div_ceil(w);
     std::thread::scope(|scope| {
@@ -808,7 +1391,7 @@ fn sweep_parallel(slots: &mut [OpSlot<'_>], workers: usize) {
             scope.spawn(move || {
                 for slot in part {
                     if slot.live {
-                        slot.session.step();
+                        slot.step();
                     }
                 }
             });
@@ -822,10 +1405,7 @@ fn sweep_parallel(slots: &mut [OpSlot<'_>], workers: usize) {
 /// the scope joins. Returns `(step histogram, Σ busy ns, engaged
 /// workers)` — engaged × sweep-wall-time is the capacity the busy
 /// fraction is measured against.
-fn sweep_parallel_profiled(
-    slots: &mut [OpSlot<'_>],
-    workers: usize,
-) -> (Histogram, u64, usize) {
+fn sweep_parallel_profiled(slots: &mut [OpSlot], workers: usize) -> (Histogram, u64, usize) {
     let w = workers.min(slots.len()).max(1);
     let chunk = slots.len().div_ceil(w);
     let mut steps = Histogram::new();
@@ -840,7 +1420,7 @@ fn sweep_parallel_profiled(
                 for slot in part {
                     if slot.live {
                         let t = Instant::now();
-                        slot.session.step();
+                        slot.step();
                         let ns = t.elapsed().as_nanos() as u64;
                         h.record(ns as f64);
                         busy += ns;
@@ -865,15 +1445,17 @@ fn sweep_parallel_profiled(
 
 /// One side of a joint double-greedy race: the operator (`L_X` or
 /// `L_{Y'}`), the query column of the candidate element against it, and
-/// the side's spectrum options.
-pub struct DgSideSpec<'a> {
-    pub op: &'a dyn SymOp,
-    pub u: &'a [f64],
+/// the side's spectrum options. Owned — the operator enters the engine's
+/// store and the query column moves into the submitted query, so the
+/// race borrows nothing from the caller.
+pub struct DgSideSpec {
+    pub op: Arc<dyn SymOp>,
+    pub u: Vec<f64>,
     pub opts: GqlOptions,
 }
 
 struct DgSideRun {
-    ticket: usize,
+    ticket: Ticket,
     max_iters: usize,
 }
 
@@ -896,18 +1478,21 @@ struct DgSideRun {
 /// first and decides identically from the final brackets.
 ///
 /// Sides may be `None` (empty set: Δ is exact from `l_ii` alone) — zero
-/// query columns are treated the same way, mirroring `race_dg`.
-pub fn race_dg_joint<'a>(
-    eng: &mut Engine<'a>,
-    x: Option<DgSideSpec<'a>>,
-    y: Option<DgSideSpec<'a>>,
+/// query columns are treated the same way, mirroring `race_dg`. Both
+/// tickets are compacted ([`Engine::take_answer`]) before returning, so
+/// per-element reuse of one resident engine does not grow its ticket
+/// log.
+pub fn race_dg_joint(
+    eng: &mut Engine,
+    x: Option<DgSideSpec>,
+    y: Option<DgSideSpec>,
     l_ii: f64,
     p: f64,
     policy: RacePolicy,
 ) -> (bool, JudgeStats) {
-    let mut enter = |side: Option<DgSideSpec<'a>>| -> Option<DgSideRun> {
+    let mut enter = |side: Option<DgSideSpec>| -> Option<DgSideRun> {
         let s = side?;
-        if is_zero(s.u) {
+        if is_zero(&s.u) {
             return None; // zero query ⇒ BIF = 0 exactly; an absent side
         }
         let max_iters = s.opts.max_iters.min(s.op.dim()).max(1);
@@ -916,10 +1501,7 @@ pub fn race_dg_joint<'a>(
             key,
             s.op,
             s.opts,
-            Query::Estimate {
-                u: s.u.to_vec(),
-                stop: super::block::StopRule::Exhaust,
-            },
+            Query::Estimate { u: s.u, stop: StopRule::Exhaust },
         );
         Some(DgSideRun { ticket, max_iters })
     };
@@ -938,7 +1520,7 @@ pub fn race_dg_joint<'a>(
     let mut stalled = false;
     loop {
         // (lo, hi, exact, stuck, iter, known) of a side this round
-        let side_state = |run: &Option<DgSideRun>, eng: &Engine<'a>| match run {
+        let side_state = |run: &Option<DgSideRun>, eng: &Engine| match run {
             None => (0.0, 0.0, true, true, 0usize, true),
             Some(r) => match eng.bounds(r.ticket) {
                 Some(b) => (
@@ -996,8 +1578,11 @@ pub fn race_dg_joint<'a>(
             };
             if let Some(d) = decision {
                 for run in [&tx, &ty].into_iter().flatten() {
-                    // abandon refinement the decision no longer needs
+                    // abandon refinement the decision no longer needs,
+                    // then compact the ticket so a resident engine's
+                    // slab stays bounded across many races
                     let _ = eng.cancel(run.ticket);
+                    let _ = eng.take_answer(run.ticket);
                 }
                 return (d, JudgeStats { iters, outcome });
             }
@@ -1055,10 +1640,15 @@ mod tests {
             EngineConfig::default().with_workers(0).validate(),
             Err(EngineConfigError::ZeroWorkers)
         );
+        assert_eq!(
+            EngineConfig::default().with_queue_cap(0).validate(),
+            Err(EngineConfigError::ZeroQueueCap)
+        );
         assert!(Engine::new(EngineConfig::default().with_lanes(0)).is_err());
         // the typed error names the config knob for admission messages
         assert!(EngineConfigError::ZeroLanes.to_string().contains("engine_lanes"));
         assert!(EngineConfigError::ZeroTtl.to_string().contains("engine_ttl_rounds"));
+        assert!(EngineConfigError::ZeroQueueCap.to_string().contains("engine_queue_cap"));
     }
 
     #[test]
@@ -1066,6 +1656,7 @@ mod tests {
         let mut rng = Rng::new(0xE9610);
         let (a, wa) = random_sparse_spd(&mut rng, 30, 0.2, 0.05);
         let (b, wb) = random_sparse_spd(&mut rng, 12, 0.4, 0.05);
+        let (a, b) = (Arc::new(a), Arc::new(b));
         let opts_a = GqlOptions::new(wa.lo, wa.hi);
         let opts_b = GqlOptions::new(wb.lo, wb.hi);
         let mut eng = Engine::new(EngineConfig::default().with_ttl_rounds(2)).unwrap();
@@ -1075,8 +1666,10 @@ mod tests {
         // B's idle session to age past the TTL
         let ua = randvec(&mut rng, 30);
         let ub = randvec(&mut rng, 12);
-        let ta = eng.submit(1, &a, opts_a, Query::Estimate { u: ua, stop: StopRule::Exhaust });
-        let tb = eng.submit(2, &b, opts_b, Query::Estimate { u: ub, stop: StopRule::Iters(1) });
+        let ta =
+            eng.submit(1, a.clone(), opts_a, Query::Estimate { u: ua, stop: StopRule::Exhaust });
+        let tb =
+            eng.submit(2, b.clone(), opts_b, Query::Estimate { u: ub, stop: StopRule::Iters(1) });
         assert_eq!(eng.sessions(), 2);
 
         // streaming: a second op-B query submitted mid-flight lands in a
@@ -1085,7 +1678,8 @@ mod tests {
             assert!(eng.step_round());
         }
         let ub2 = randvec(&mut rng, 12);
-        let tb2 = eng.submit(2, &b, opts_b, Query::Estimate { u: ub2, stop: StopRule::Iters(2) });
+        let tb2 =
+            eng.submit(2, b.clone(), opts_b, Query::Estimate { u: ub2, stop: StopRule::Iters(2) });
         eng.drain();
         assert!(eng.is_resolved(ta) && eng.is_resolved(tb) && eng.is_resolved(tb2));
         let st = eng.stats();
@@ -1094,30 +1688,40 @@ mod tests {
         assert_eq!(st.sessions_evicted, 1, "idle op-B session evicted by TTL");
         assert_eq!(eng.sessions(), 1, "op A's session survives");
         assert!(st.sweeps >= st.rounds);
+        // the evicted session's operator stays warm under the default
+        // (unbounded) store budget
+        assert!(eng.store().contains(2), "released op stays resident");
+        assert_eq!(eng.store().resident(), 2);
+        assert_eq!(eng.store().pinned(), 1, "only op A's session still pins");
 
         // a fresh submission under the evicted key spins a new session
+        // on the warm stored operator — no operator crosses the API
         let ub3 = randvec(&mut rng, 12);
-        let tb3 = eng.submit(2, &b, opts_b, Query::Estimate { u: ub3, stop: StopRule::Iters(1) });
+        let tb3 = eng
+            .submit_keyed(2, opts_b, Query::Estimate { u: ub3, stop: StopRule::Iters(1) }, None)
+            .expect("warm key re-admits");
         eng.drain();
         assert!(eng.is_resolved(tb3));
         assert_eq!(eng.stats().sessions_spun, 3);
+        assert_eq!(eng.store().inserted(), 2, "re-admission reused the stored op");
     }
 
     #[test]
     fn lane_budget_parks_and_resumes_priority_ordered() {
         let mut rng = Rng::new(0xE9611);
         let (a, w) = random_sparse_spd(&mut rng, 24, 0.25, 0.05);
+        let a = Arc::new(a);
         let opts = GqlOptions::new(w.lo, w.hi);
         let queries: Vec<Vec<f64>> = (0..4).map(|_| randvec(&mut rng, 24)).collect();
 
         let run = |lanes: usize| {
             let mut eng = Engine::new(EngineConfig::default().with_lanes(lanes)).unwrap();
-            let tickets: Vec<usize> = queries
+            let tickets: Vec<Ticket> = queries
                 .iter()
                 .map(|u| {
                     eng.submit(
                         7,
-                        &a,
+                        a.clone(),
                         opts,
                         Query::Estimate { u: u.clone(), stop: StopRule::Exhaust },
                     )
@@ -1150,6 +1754,139 @@ mod tests {
     }
 
     #[test]
+    fn ticket_compaction_and_stale_generation() {
+        let mut rng = Rng::new(0xE9617);
+        let (a, w) = random_sparse_spd(&mut rng, 12, 0.4, 0.05);
+        let a = Arc::new(a);
+        let opts = GqlOptions::new(w.lo, w.hi);
+        let mut eng = Engine::new(EngineConfig::default()).unwrap();
+        let u = randvec(&mut rng, 12);
+        let t = eng.submit(1, a.clone(), opts, Query::Estimate { u, stop: StopRule::Iters(2) });
+        assert!(matches!(eng.take_answer(t), Err(TicketError::Unresolved)));
+        eng.drain();
+        assert_eq!(eng.live_tickets(), 1);
+        let ans = eng.take_answer(t).expect("resolved ticket yields its answer");
+        assert!(matches!(ans, Answer::Estimate { .. }));
+        assert_eq!(eng.stats().compactions, 1);
+        assert_eq!(eng.live_tickets(), 0, "compaction freed the slot");
+        // the slot is compacted: the old ticket is stale in every API
+        assert!(matches!(eng.take_answer(t), Err(TicketError::Stale)));
+        assert!(eng.answer(t).is_none());
+        assert!(!eng.is_resolved(t));
+        assert!(eng.bounds(t).is_none());
+        assert!(!eng.cancel(t));
+        // the freed slot is reused under a bumped generation
+        let u2 = randvec(&mut rng, 12);
+        let t2 = eng.submit(1, a.clone(), opts, Query::Estimate { u: u2, stop: StopRule::Iters(1) });
+        assert_eq!(t2.idx, t.idx, "slab slot reused");
+        assert_ne!(t2.gen, t.gen, "generation bumped");
+        eng.drain();
+        assert!(eng.take_answer(t2).is_ok());
+        assert!(
+            matches!(eng.take_answer(t), Err(TicketError::Stale)),
+            "old ticket cannot alias the reused slot"
+        );
+    }
+
+    #[test]
+    fn store_budget_evicts_released_operators_lru() {
+        let mut rng = Rng::new(0xE9618);
+        let (a, wa) = random_sparse_spd(&mut rng, 30, 0.2, 0.05);
+        let (b, wb) = random_sparse_spd(&mut rng, 10, 0.4, 0.05);
+        let (a, b) = (Arc::new(a), Arc::new(b));
+        let opts_a = GqlOptions::new(wa.lo, wa.hi);
+        let opts_b = GqlOptions::new(wb.lo, wb.hi);
+        // a 1-byte budget: nothing released can stay warm
+        let mut eng = Engine::new(
+            EngineConfig::default().with_ttl_rounds(2).with_store_bytes(1),
+        )
+        .unwrap();
+        let ua = randvec(&mut rng, 30);
+        let ub = randvec(&mut rng, 10);
+        eng.submit(1, a.clone(), opts_a, Query::Estimate { u: ua, stop: StopRule::Exhaust });
+        let tb =
+            eng.submit(2, b.clone(), opts_b, Query::Estimate { u: ub, stop: StopRule::Iters(1) });
+        assert_eq!(eng.store().resident(), 2);
+        assert!(eng.store().resident_bytes() > 0);
+        eng.drain();
+        assert!(eng.is_resolved(tb));
+        // op B's session idled past the TTL; with a 1-byte budget its
+        // released operator cannot stay resident either
+        assert_eq!(eng.stats().sessions_evicted, 1);
+        assert!(!eng.store().contains(2), "LRU evicted the released operator");
+        assert!(eng.store().contains(1), "pinned operator is immune to the budget");
+        assert_eq!(eng.store().evicted(), 1);
+        // the evicted key is now unknown to the keyed path…
+        let ub2 = randvec(&mut rng, 10);
+        assert_eq!(
+            eng.submit_keyed(
+                2,
+                opts_b,
+                Query::Estimate { u: ub2.clone(), stop: StopRule::Iters(1) },
+                None
+            )
+            .unwrap_err(),
+            SubmitError::UnknownKey(2)
+        );
+        // …but a full submission re-inserts and still answers
+        let t = eng.submit(2, b.clone(), opts_b, Query::Estimate { u: ub2, stop: StopRule::Iters(1) });
+        eng.drain();
+        assert!(eng.is_resolved(t));
+        assert_eq!(eng.store().inserted(), 3);
+    }
+
+    #[test]
+    fn queue_cap_sheds_least_urgent_with_a_valid_bracket() {
+        let mut rng = Rng::new(0xE9619);
+        let (a, w) = random_sparse_spd(&mut rng, 20, 0.3, 0.05);
+        let a = Arc::new(a);
+        let opts = GqlOptions::new(w.lo, w.hi);
+        let mut eng = Engine::new(EngineConfig::default().with_queue_cap(1)).unwrap();
+        let u1 = randvec(&mut rng, 20);
+        let t1 = eng
+            .try_submit(1, a.clone(), opts, Query::Estimate { u: u1, stop: StopRule::Exhaust }, None)
+            .unwrap();
+        // nothing swept yet: the only candidate has no bracket to answer
+        // with, so admission refuses rather than shedding garbage
+        let u2 = randvec(&mut rng, 20);
+        assert_eq!(
+            eng.try_submit(
+                1,
+                a.clone(),
+                opts,
+                Query::Estimate { u: u2.clone(), stop: StopRule::Exhaust },
+                Some(4)
+            )
+            .unwrap_err(),
+            SubmitError::Saturated
+        );
+        assert!(eng.step_round());
+        // now t1 carries a live bracket: the deadline submission sheds it
+        let t2 = eng
+            .try_submit(
+                1,
+                a.clone(),
+                opts,
+                Query::Estimate { u: u2, stop: StopRule::Exhaust },
+                Some(4),
+            )
+            .unwrap();
+        assert_eq!(eng.stats().shed, 1);
+        match eng.answer(t1).expect("shed ticket resolves immediately") {
+            Answer::Estimate { bounds, iters, .. } => {
+                assert!(*iters >= 1);
+                assert!(
+                    bounds.lower() <= bounds.upper(),
+                    "shed answer must still be a valid bracket"
+                );
+            }
+            other => panic!("wrong answer kind {other:?}"),
+        }
+        eng.drain();
+        assert!(eng.is_resolved(t2));
+    }
+
+    #[test]
     fn race_dg_joint_agrees_with_race_dg_and_the_oracle() {
         forall(15, 0xE9612, |rng| {
             let n = 8 + rng.below(16);
@@ -1163,8 +1900,8 @@ mod tests {
             let mut ys = ys.to_vec();
             xs.sort_unstable();
             ys.sort_unstable();
-            let ax = l.principal_submatrix(&xs);
-            let ay = l.principal_submatrix(&ys);
+            let ax = Arc::new(l.principal_submatrix(&xs));
+            let ay = Arc::new(l.principal_submatrix(&ys));
             let ux: Vec<f64> = xs.iter().map(|&m| l.get(m, i)).collect();
             let uy: Vec<f64> = ys.iter().map(|&m| l.get(m, i)).collect();
             let l_ii = l.get(i, i);
@@ -1181,14 +1918,14 @@ mod tests {
             for p in [0.25, 0.5, 0.75] {
                 let want = p * dm.max(0.0) <= (1.0 - p) * dp.max(0.0);
                 let (seq, _) =
-                    race_dg(Some((&ax, &ux)), Some((&ay, &uy)), l_ii, p, opts, opts,
+                    race_dg(Some((&*ax, &ux)), Some((&*ay, &uy)), l_ii, p, opts, opts,
                         RacePolicy::Prune);
                 for policy in [RacePolicy::Prune, RacePolicy::Exhaustive] {
                     let mut eng = Engine::new(EngineConfig::default().with_width(1)).unwrap();
                     let (joint, js) = race_dg_joint(
                         &mut eng,
-                        Some(DgSideSpec { op: &ax, u: &ux, opts }),
-                        Some(DgSideSpec { op: &ay, u: &uy, opts }),
+                        Some(DgSideSpec { op: ax.clone(), u: ux.clone(), opts }),
+                        Some(DgSideSpec { op: ay.clone(), u: uy.clone(), opts }),
                         l_ii,
                         p,
                         policy,
@@ -1197,6 +1934,7 @@ mod tests {
                     assert_eq!(joint, seq, "joint diverged from race_dg (p={p})");
                     assert!(js.iters <= 2 * n + 2, "runaway refinement");
                     assert!(!eng.has_work(), "decided race left work behind");
+                    assert_eq!(eng.live_tickets(), 0, "race compacted its tickets");
                 }
             }
         });
@@ -1217,7 +1955,7 @@ mod tests {
         let z = vec![0.0; 10];
         let (ans, stats) = race_dg_joint(
             &mut eng,
-            Some(DgSideSpec { op: &a, u: &z, opts }),
+            Some(DgSideSpec { op: Arc::new(a), u: z, opts }),
             None,
             2.0,
             0.3,
@@ -1231,7 +1969,10 @@ mod tests {
     fn parallel_workers_answer_bit_identically_to_one_worker() {
         let mut rng = Rng::new(0xE9614);
         let ops: Vec<_> = (0..5)
-            .map(|_| random_sparse_spd(&mut rng, 16 + rng.below(20), 0.3, 0.05))
+            .map(|_| {
+                let (a, w) = random_sparse_spd(&mut rng, 16 + rng.below(20), 0.3, 0.05);
+                (Arc::new(a), w)
+            })
             .collect();
         let queries: Vec<Vec<f64>> = ops
             .iter()
@@ -1240,14 +1981,14 @@ mod tests {
         let run = |workers: usize| {
             let mut eng =
                 Engine::new(EngineConfig::default().with_workers(workers)).unwrap();
-            let tickets: Vec<usize> = ops
+            let tickets: Vec<Ticket> = ops
                 .iter()
                 .zip(&queries)
                 .enumerate()
                 .map(|(k, ((a, w), u))| {
                     eng.submit(
                         k as OpKey,
-                        a,
+                        a.clone(),
                         GqlOptions::new(w.lo, w.hi),
                         Query::Estimate { u: u.clone(), stop: StopRule::Exhaust },
                     )
@@ -1269,7 +2010,10 @@ mod tests {
     fn profiled_engine_answers_bit_identically_and_measures_phases() {
         let mut rng = Rng::new(0xE9615);
         let ops: Vec<_> = (0..4)
-            .map(|_| random_sparse_spd(&mut rng, 16 + rng.below(16), 0.3, 0.05))
+            .map(|_| {
+                let (a, w) = random_sparse_spd(&mut rng, 16 + rng.below(16), 0.3, 0.05);
+                (Arc::new(a), w)
+            })
             .collect();
         let queries: Vec<Vec<f64>> = ops
             .iter()
@@ -1277,14 +2021,14 @@ mod tests {
             .collect();
         let run = |cfg: EngineConfig| {
             let mut eng = Engine::new(cfg).unwrap();
-            let tickets: Vec<usize> = ops
+            let tickets: Vec<Ticket> = ops
                 .iter()
                 .zip(&queries)
                 .enumerate()
                 .map(|(k, ((a, w), u))| {
                     eng.submit(
                         k as OpKey,
-                        a,
+                        a.clone(),
                         GqlOptions::new(w.lo, w.hi),
                         Query::Estimate { u: u.clone(), stop: StopRule::Exhaust },
                     )
@@ -1327,7 +2071,7 @@ mod tests {
         let (a, w) = &ops[0];
         eng.submit(
             0,
-            a,
+            a.clone(),
             GqlOptions::new(w.lo, w.hi),
             Query::Estimate { u: queries[0].clone(), stop: StopRule::Exhaust },
         );
@@ -1337,6 +2081,15 @@ mod tests {
         for name in [
             "engine.rounds",
             "engine.sweeps",
+            "engine.store.resident",
+            "engine.store.pinned",
+            "engine.store.resident_bytes",
+            "engine.store.inserted",
+            "engine.store.evicted",
+            "engine.admission.admitted",
+            "engine.admission.parked",
+            "engine.admission.shed",
+            "engine.admission.compactions",
             "engine.profile.sweep_ns",
             "engine.profile.schedule_ns",
             "engine.profile.harvest_ns",
@@ -1352,13 +2105,14 @@ mod tests {
         use crate::quadrature::query::QueryArm;
         let mut rng = Rng::new(0xE9616);
         let (a, w) = random_sparse_spd(&mut rng, 24, 0.3, 0.05);
+        let a = Arc::new(a);
         let opts = GqlOptions::new(w.lo, w.hi);
         let mut eng = Engine::new(EngineConfig::default()).unwrap();
 
         // a cancelled estimate retires its lane with RetireReason::Decided
         // and must be counted even though no harvest follows the cancel
         let u = randvec(&mut rng, 24);
-        let t = eng.submit(3, &a, opts, Query::Estimate { u, stop: StopRule::Exhaust });
+        let t = eng.submit(3, a.clone(), opts, Query::Estimate { u, stop: StopRule::Exhaust });
         assert!(eng.step_round());
         assert!(eng.cancel(t), "mid-flight estimate cancels");
         assert_eq!(eng.stats().retired_decided, 1);
@@ -1375,7 +2129,7 @@ mod tests {
                 scale: 1.0,
             })
             .collect();
-        let t2 = eng.submit(3, &a, opts, Query::Argmax { arms, floor: None });
+        let t2 = eng.submit(3, a.clone(), opts, Query::Argmax { arms, floor: None });
         eng.drain();
         assert!(eng.is_resolved(t2));
         let st = eng.stats();

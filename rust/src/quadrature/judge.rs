@@ -78,7 +78,7 @@ pub fn judge_threshold(
     }
     let mut session = Session::new(op, opts, 1, RacePolicy::Prune);
     let qid = session.submit(Query::Threshold { u: u.to_vec(), t });
-    match session.run().swap_remove(qid) {
+    match session.run(op).swap_remove(qid) {
         Answer::Threshold { decision, stats } => (decision, stats),
         _ => unreachable!("threshold queries answer with threshold answers"),
     }
@@ -216,7 +216,7 @@ pub fn judge_ratio_block(
 ) -> (bool, JudgeStats) {
     let mut session = Session::new(op, opts, 2, RacePolicy::Prune);
     let qid = session.submit(Query::Compare { u: u.to_vec(), v: v.to_vec(), t, p });
-    match session.run().swap_remove(qid) {
+    match session.run(op).swap_remove(qid) {
         Answer::Compare { decision, stats } => (decision, stats),
         _ => unreachable!("compare queries answer with compare answers"),
     }

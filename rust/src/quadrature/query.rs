@@ -286,8 +286,15 @@ fn threshold_outcome(b: &Bounds, t: f64) -> JudgeOutcome {
 /// [`Session::step`]). Lanes share `matvec_multi` panel sweeps across
 /// query kinds; each query resolves by its own bound logic and its lanes
 /// retire immediately, refilling the panel from pending queries.
-pub struct Session<'a> {
-    eng: BlockGql<'a>,
+///
+/// Like [`BlockGql`], a session does not hold its operator: the caller
+/// passes `&dyn SymOp` into every sweeping call ([`Session::step`] /
+/// [`Session::run`]) and must pass the same operator the session was
+/// constructed against. This keeps sessions `'static`, which is what lets
+/// the resident engine ([`crate::quadrature::engine`]) own them alongside
+/// `Arc<dyn SymOp>` entries in its operator store.
+pub struct Session {
+    eng: BlockGql,
     policy: RacePolicy,
     /// Iteration budget, clamped like the engines clamp it.
     max_iters: usize,
@@ -304,12 +311,14 @@ pub struct Session<'a> {
     trace_enabled: bool,
 }
 
-impl<'a> Session<'a> {
-    /// A session over `op` scheduling through a width-`width` panel.
+impl Session {
+    /// A session sized for `op`, scheduling through a width-`width` panel
+    /// (`op` is only read for its dimension here — the same operator must
+    /// then be passed to every [`Session::step`] / [`Session::run`]).
     /// `opts` and `width` behave exactly as in [`BlockGql::new`];
     /// `policy` governs argmax dominance pruning
     /// ([`RacePolicy::Exhaustive`] scores every arm to its stop rule).
-    pub fn new(op: &'a dyn SymOp, opts: GqlOptions, width: usize, policy: RacePolicy) -> Self {
+    pub fn new(op: &dyn SymOp, opts: GqlOptions, width: usize, policy: RacePolicy) -> Self {
         let max_iters = opts.max_iters.min(op.dim()).max(1);
         Session {
             eng: BlockGql::new(op, opts, width),
@@ -626,12 +635,13 @@ impl<'a> Session<'a> {
         }
     }
 
-    /// One scheduler round: a panel sweep plus a resolution pass. Returns
+    /// One scheduler round against `op` (the operator this session was
+    /// constructed for): a panel sweep plus a resolution pass. Returns
     /// `false` (without sweeping) once the engine has no lane or pending
     /// query left — resolution still runs, so immediately-decidable
     /// queries answer even then.
-    pub fn step(&mut self) -> bool {
-        let progressed = self.eng.step_panel();
+    pub fn step(&mut self, op: &dyn SymOp) -> bool {
+        let progressed = self.eng.step_panel(op);
         self.absorb_done();
         self.refresh_active();
         self.resolve_round();
@@ -639,9 +649,9 @@ impl<'a> Session<'a> {
     }
 
     /// Drive every query to its answer; answers in submission order.
-    pub fn run(&mut self) -> Vec<Answer> {
+    pub fn run(&mut self, op: &dyn SymOp) -> Vec<Answer> {
         while self.unresolved > 0 {
-            if !self.step() {
+            if !self.step(op) {
                 break;
             }
         }
@@ -968,7 +978,7 @@ mod tests {
             let reference = run_scalar(&a, &u, opts, StopRule::GapRel(1e-8), false);
             let mut s = Session::new(&a, opts, 1, RacePolicy::Prune);
             let qid = s.submit(Query::Estimate { u, stop: StopRule::GapRel(1e-8) });
-            match &s.run()[qid] {
+            match &s.run(&a)[qid] {
                 Answer::Estimate { bounds, iters, .. } => {
                     assert_eq!(*iters, reference.iters);
                     assert_eq!(bounds.gauss.to_bits(), reference.bounds.gauss.to_bits());
@@ -992,12 +1002,12 @@ mod tests {
 
         let mut plain = Session::new(&a, opts, 1, RacePolicy::Prune);
         let p = plain.submit(Query::Estimate { u: u.clone(), stop: StopRule::GapRel(1e-8) });
-        let plain_ans = plain.run();
+        let plain_ans = plain.run(&a);
 
         let mut traced =
             Session::new(&a, opts, 1, RacePolicy::Prune).record_traces(true);
         let t = traced.submit(Query::Estimate { u, stop: StopRule::GapRel(1e-8) });
-        let traced_ans = traced.run();
+        let traced_ans = traced.run(&a);
 
         // tracing must not perturb the arithmetic
         let (pb, tb) = match (&plain_ans[p], &traced_ans[t]) {
@@ -1041,7 +1051,7 @@ mod tests {
                 let (want, want_stats) = judge_threshold_src(&a, &u, t, opts, BoundSource::Radau);
                 let mut s = Session::new(&a, opts, 1, RacePolicy::Prune);
                 let qid = s.submit(Query::Threshold { u: u.clone(), t });
-                match &s.run()[qid] {
+                match &s.run(&a)[qid] {
                     Answer::Threshold { decision, stats } => {
                         assert_eq!(*decision, want, "factor {factor}");
                         assert_eq!(stats.iters, want_stats.iters, "factor {factor}");
@@ -1068,7 +1078,7 @@ mod tests {
                     let mut s = Session::new(&a, opts, 2, RacePolicy::Prune);
                     let qid = s.submit(Query::Compare { u: u.clone(), v: v.clone(), t, p });
                     assert_eq!(
-                        s.run()[qid].decision(),
+                        s.run(&a)[qid].decision(),
                         Some(t < truth),
                         "p={p} t={t} truth={truth}"
                     );
@@ -1116,7 +1126,7 @@ mod tests {
                     .collect(),
                 floor: None,
             });
-            let answers = s.run();
+            let answers = s.run(&a);
             assert_eq!(answers[q1].decision(), Some(want_thresh));
             assert_eq!(answers[q2].decision(), Some(want_cmp));
             assert_eq!(answers[q3].winner(), Some(want_winner));
@@ -1137,7 +1147,7 @@ mod tests {
         let q2 = s.submit(Query::Compare { u: z.clone(), v: z, t: 0.5, p: 0.3 });
         let q3 = s.submit(Query::Argmax { arms: Vec::new(), floor: Some(0.0) });
         assert!(s.is_resolved(q1) && s.is_resolved(q2) && s.is_resolved(q3));
-        let answers = s.run();
+        let answers = s.run(&a);
         assert_eq!(s.sweeps(), 0);
         assert_eq!(answers[q1].decision(), Some(true), "-1 < 0 exactly");
         assert_eq!(answers[q2].decision(), Some(false), "0.5 < 0 is false");
@@ -1161,7 +1171,7 @@ mod tests {
             let (want, _) = judge_ratio(&a, &uu, &vv, t, p, opts);
             let mut s = Session::new(&a, opts, 2, RacePolicy::Prune);
             let qid = s.submit(Query::Compare { u: uu, v: vv, t, p });
-            assert_eq!(s.run()[qid].decision(), Some(want));
+            assert_eq!(s.run(&a)[qid].decision(), Some(want));
         }
     }
 
@@ -1185,7 +1195,7 @@ mod tests {
             .map(|q| {
                 let mut s = Session::new(&a, opts, 8, RacePolicy::Prune);
                 s.submit(q.clone());
-                s.run();
+                s.run(&a);
                 s.sweeps()
             })
             .sum();
@@ -1193,7 +1203,7 @@ mod tests {
         for q in queries {
             s.submit(q);
         }
-        s.run();
+        s.run(&a);
         assert!(
             s.sweeps() < sequential,
             "shared panel must save sweeps ({} vs {sequential})",
@@ -1218,7 +1228,7 @@ mod tests {
             })
             .collect();
         s.submit(Query::Argmax { arms, floor: None });
-        s.run();
+        s.run(&a);
         assert!(s.prune_margin() >= PRUNE_MARGIN);
         assert_eq!(s.stats().prune_margin, s.prune_margin());
     }

@@ -116,7 +116,8 @@ pub struct RaceOutcome {
 /// traffic with thresholds or comparisons on the same operator should use
 /// the session directly — co-keyed queries then share panel sweeps.
 pub struct Race<'a> {
-    session: Session<'a>,
+    op: &'a dyn SymOp,
+    session: Session,
     arms: Vec<QueryArm>,
 }
 
@@ -125,7 +126,7 @@ impl<'a> Race<'a> {
     /// `width` behave exactly as in
     /// [`BlockGql::new`](super::block::BlockGql::new).
     pub fn new(op: &'a dyn SymOp, opts: GqlOptions, width: usize, policy: RacePolicy) -> Self {
-        Race { session: Session::new(op, opts, width, policy), arms: Vec::new() }
+        Race { op, session: Session::new(op, opts, width, policy), arms: Vec::new() }
     }
 
     /// Enter an arm; returns its index (push order). `stop` is the arm's
@@ -151,7 +152,7 @@ impl<'a> Race<'a> {
     pub fn run(mut self, floor: Option<f64>) -> RaceOutcome {
         let arms = std::mem::take(&mut self.arms);
         let qid = self.session.submit(Query::Argmax { arms, floor });
-        let mut answers = self.session.run();
+        let mut answers = self.session.run(self.op);
         match answers.swap_remove(qid) {
             Answer::Argmax { winner, estimates, stats } => {
                 RaceOutcome { winner, estimates, stats }
@@ -186,7 +187,8 @@ fn pos(x: f64) -> f64 {
 /// exactness contract, so routing the race through the planner changes no
 /// numerics.
 struct DgSide<'a> {
-    session: Session<'a>,
+    op: &'a dyn SymOp,
+    session: Session,
     qid: usize,
     /// Iteration budget, clamped like the engines clamp it.
     max_iters: usize,
@@ -202,13 +204,13 @@ impl<'a> DgSide<'a> {
         let max_iters = opts.max_iters.min(op.dim()).max(1);
         let mut session = Session::new(op, opts, 1, RacePolicy::Prune);
         let qid = session.submit(Query::Estimate { u: u.to_vec(), stop: StopRule::Exhaust });
-        Some(DgSide { session, qid, max_iters })
+        Some(DgSide { op, session, qid, max_iters })
     }
 
     /// Advance one quadrature iteration and return the updated bounds
     /// (post-exhaustion steps are no-ops that keep the final bounds).
     fn step(&mut self) -> super::gql::Bounds {
-        self.session.step();
+        self.session.step(self.op);
         self.session.bounds(self.qid).expect("stepped lane has bounds")
     }
 }

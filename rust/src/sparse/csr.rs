@@ -176,6 +176,13 @@ impl SymOp for Csr {
         (0..self.n).map(|i| self.get(i, i)).collect()
     }
 
+    fn nbytes(&self) -> usize {
+        std::mem::size_of::<Csr>()
+            + self.row_ptr.capacity() * std::mem::size_of::<usize>()
+            + self.col_idx.capacity() * std::mem::size_of::<usize>()
+            + self.values.capacity() * std::mem::size_of::<f64>()
+    }
+
     /// True spmm over an interleaved panel: one CSR traversal feeds all
     /// `b` lanes, turning `b` row-value loads into one load reused across
     /// a contiguous lane row (the cache win `quadrature::block` is built

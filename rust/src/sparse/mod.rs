@@ -42,18 +42,28 @@ pub use submatrix::SubmatrixView;
 /// A symmetric linear operator: the only interface the quadrature core
 /// needs. `matvec` must compute `y = A x` with `A` symmetric.
 ///
-/// `Sync` is a supertrait so `&dyn SymOp` handles can cross threads: the
-/// multi-operator engine ([`crate::quadrature::engine`]) sweeps several
-/// operators' panels from a pool of workers, each holding a shared
-/// reference to its operator. Every implementor in the repo (CSR, dense,
-/// submatrix views, the Jacobi preconditioner) is plain immutable data
-/// during a matvec, so the bound costs nothing.
-pub trait SymOp: Sync {
+/// `Send + Sync` are supertraits so operator handles can cross threads:
+/// the multi-operator engine ([`crate::quadrature::engine`]) keeps
+/// operators resident as `Arc<dyn SymOp>` entries in its
+/// [`OpStore`](crate::quadrature::engine::OpStore) and sweeps their
+/// panels from a pool of workers. Every implementor in the repo (CSR,
+/// dense, submatrix views, the Jacobi preconditioner) is plain immutable
+/// data during a matvec, so the bounds cost nothing.
+pub trait SymOp: Send + Sync {
     fn dim(&self) -> usize;
     fn matvec(&self, x: &[f64], y: &mut [f64]);
     /// The diagonal of the operator (used by Jacobi preconditioning and
     /// Gershgorin bounds).
     fn diagonal(&self) -> Vec<f64>;
+
+    /// Approximate resident size in bytes, used by the engine's operator
+    /// store for LRU byte-budget accounting. The default charges one
+    /// `f64` per dimension (a floor: any operator at least answers
+    /// [`SymOp::diagonal`]); storage-backed implementors ([`Csr`],
+    /// [`crate::linalg::DMat`]) override with their actual footprint.
+    fn nbytes(&self) -> usize {
+        self.dim() * std::mem::size_of::<f64>()
+    }
 
     /// Multi-vector product `Y = A X` over an interleaved panel of `b`
     /// column vectors: `x[i * b + l]` is component `i` of lane `l`, and

@@ -9,25 +9,31 @@
 
 use super::csr::Csr;
 use super::SymOp;
+use std::sync::Arc;
 
 /// View of `parent[idx, idx]` implementing [`SymOp`] without materializing.
-pub struct SubmatrixView<'a> {
-    parent: &'a Csr,
+///
+/// The view holds the parent behind an [`Arc`], so it is `'static` and can
+/// be submitted to the resident engine's operator store
+/// ([`crate::quadrature::engine::OpStore`]) like any owned operator; many
+/// views over one parent share the same storage.
+pub struct SubmatrixView {
+    parent: Arc<Csr>,
     /// global indices of the view, defining the local ordering
     idx: Vec<usize>,
     /// global -> local position map; usize::MAX = not in view
     pos: Vec<usize>,
 }
 
-impl<'a> SubmatrixView<'a> {
-    pub fn new(parent: &'a Csr, idx: &[usize]) -> Self {
+impl SubmatrixView {
+    pub fn new(parent: &Arc<Csr>, idx: &[usize]) -> Self {
         let mut pos = vec![usize::MAX; parent.n];
         for (local, &g) in idx.iter().enumerate() {
             debug_assert!(g < parent.n, "index {g} out of range");
             debug_assert!(pos[g] == usize::MAX, "duplicate index {g}");
             pos[g] = local;
         }
-        SubmatrixView { parent, idx: idx.to_vec(), pos }
+        SubmatrixView { parent: Arc::clone(parent), idx: idx.to_vec(), pos }
     }
 
     /// Like [`SubmatrixView::new`] but with the local ordering sorted
@@ -36,7 +42,7 @@ impl<'a> SubmatrixView<'a> {
     /// parent-row visits into a streaming access pattern the hardware
     /// prefetcher can follow — ~10× faster on large sparse parents
     /// (EXPERIMENTS.md §Perf). Judges should prefer this constructor.
-    pub fn new_sorted(parent: &'a Csr, idx: &[usize]) -> Self {
+    pub fn new_sorted(parent: &Arc<Csr>, idx: &[usize]) -> Self {
         let mut sorted = idx.to_vec();
         sorted.sort_unstable();
         let mut pos = vec![usize::MAX; parent.n];
@@ -45,7 +51,12 @@ impl<'a> SubmatrixView<'a> {
             debug_assert!(pos[g] == usize::MAX, "duplicate index {g}");
             pos[g] = local;
         }
-        SubmatrixView { parent, idx: sorted, pos }
+        SubmatrixView { parent: Arc::clone(parent), idx: sorted, pos }
+    }
+
+    /// The shared parent kernel this view indexes into.
+    pub fn parent(&self) -> &Arc<Csr> {
+        &self.parent
     }
 
     pub fn indices(&self) -> &[usize] {
@@ -105,9 +116,17 @@ impl<'a> SubmatrixView<'a> {
     }
 }
 
-impl SymOp for SubmatrixView<'_> {
+impl SymOp for SubmatrixView {
     fn dim(&self) -> usize {
         self.idx.len()
+    }
+
+    /// Charges the view's own index structures only: the parent kernel is
+    /// shared by every view over it (and by the caller), so attributing
+    /// its bytes to each view would multiply-count resident memory.
+    fn nbytes(&self) -> usize {
+        std::mem::size_of::<SubmatrixView>()
+            + (self.idx.capacity() + self.pos.capacity()) * std::mem::size_of::<usize>()
     }
 
     fn matvec(&self, x: &[f64], y: &mut [f64]) {
@@ -180,7 +199,7 @@ mod tests {
     fn view_matvec_matches_materialized() {
         forall(25, 0x5AB, |rng| {
             let n = 4 + rng.below(40);
-            let a = random_sym_csr(rng, n, 0.3);
+            let a = Arc::new(random_sym_csr(rng, n, 0.3));
             let k = 1 + rng.below(n - 1);
             let idx = rng.sample_indices(n, k);
             let view = SubmatrixView::new(&a, &idx);
@@ -202,7 +221,7 @@ mod tests {
     fn view_matvec_multi_matches_scalar_lanes() {
         forall(25, 0x5AC, |rng| {
             let n = 4 + rng.below(40);
-            let a = random_sym_csr(rng, n, 0.3);
+            let a = Arc::new(random_sym_csr(rng, n, 0.3));
             let k = 1 + rng.below(n - 1);
             let b = 1 + rng.below(7);
             let idx = rng.sample_indices(n, k);
@@ -228,7 +247,7 @@ mod tests {
     fn column_of_matches_submatrix_column() {
         forall(25, 0xC01, |rng| {
             let n = 5 + rng.below(30);
-            let a = random_sym_csr(rng, n, 0.4);
+            let a = Arc::new(random_sym_csr(rng, n, 0.4));
             let k = 1 + rng.below(n - 2);
             let idx = rng.sample_indices(n, k);
             // v outside the view (the DPP proposal)
@@ -247,7 +266,7 @@ mod tests {
         b.push(0, 0, 1.0);
         b.push(1, 1, 2.0);
         b.push(2, 2, 3.0);
-        let a = b.build();
+        let a = Arc::new(b.build());
         let view = SubmatrixView::new(&a, &[2, 0]);
         assert_eq!(view.diagonal(), vec![3.0, 1.0]);
     }

@@ -10,12 +10,13 @@ use gauss_bif::datasets::{table1_specs, RIDGE};
 use gauss_bif::linalg::Cholesky;
 use gauss_bif::sparse::gershgorin_bounds;
 use gauss_bif::util::rng::Rng;
+use std::sync::Arc;
 
 #[test]
 fn dpp_chain_on_rbf_substitute_matches_exact() {
     let mut rng = Rng::new(0x3001);
     let spec = &table1_specs()[0]; // Abalone-like RBF kernel
-    let l = spec.build(&mut rng, 32); // ~130 nodes
+    let l = Arc::new(spec.build(&mut rng, 32)); // ~130 nodes
     let w = gershgorin_bounds(&l).clamp_lo(RIDGE * 0.5);
     let k = l.n / 3;
     let seed = 0xAB;
@@ -38,7 +39,7 @@ fn dpp_chain_on_rbf_substitute_matches_exact() {
 fn kdpp_chain_on_laplacian_substitute_matches_exact() {
     let mut rng = Rng::new(0x3002);
     let spec = &table1_specs()[2]; // GR-like Laplacian
-    let l = spec.build(&mut rng, 32);
+    let l = Arc::new(spec.build(&mut rng, 32));
     let w = gershgorin_bounds(&l).clamp_lo(RIDGE * 0.5);
     let k = (l.n / 4).max(3);
     let seed = 0xCD;
@@ -57,7 +58,7 @@ fn kdpp_chain_on_laplacian_substitute_matches_exact() {
 fn dg_on_substitutes_matches_exact_and_has_sane_objective() {
     let mut rng = Rng::new(0x3003);
     for spec in table1_specs().iter().take(3) {
-        let l = spec.build(&mut rng, 64);
+        let l = Arc::new(spec.build(&mut rng, 64));
         let w = gershgorin_bounds(&l).clamp_lo(RIDGE * 0.5);
         let seed = 0xEF ^ spec.n as u64;
         let run = |strategy| {
@@ -79,6 +80,7 @@ fn judge_effort_scales_with_conditioning_not_size() {
     let mut avg_iters = Vec::new();
     for &n in &[120usize, 240] {
         let (l, w) = gauss_bif::datasets::random_sparse_spd(&mut rng, n, 0.05, 1e-2);
+        let l = Arc::new(l);
         let mut r = Rng::new(9);
         let mut s = DppSampler::new(
             &l,
@@ -111,7 +113,7 @@ fn dg_half_approximation_on_bruteforced_optimum() {
             }
         }
     }
-    let l = b.build();
+    let l = Arc::new(b.build());
     let w = gershgorin_bounds(&l).clamp_lo(0.5);
     let obj = |idx: &[usize]| -> f64 {
         if idx.is_empty() {
@@ -160,7 +162,7 @@ fn dpp_sampler_respects_kernel_structure() {
             b.push_sym(i, j, 0.98);
         }
     }
-    let l = b.build().with_diag_shift(1e-3);
+    let l = Arc::new(b.build().with_diag_shift(1e-3));
     let w = gershgorin_bounds(&l).clamp_lo(5e-4);
     let cfg = DppConfig::new(BifStrategy::Gauss, w).with_init_size(0);
     let mut s = DppSampler::new(&l, cfg, &mut rng);

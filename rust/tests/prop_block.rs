@@ -23,7 +23,7 @@ fn width_one_reproduces_scalar_gql_sequences_sparse() {
 
         let mut eng = BlockGql::new(&a, opts, 1).record_history(true);
         eng.push(&u, StopRule::Exhaust);
-        let block = eng.run_all().pop().expect("one result");
+        let block = eng.run_all(&a).pop().expect("one result");
 
         assert_eq!(scalar.len(), block.history.len(), "sequence lengths differ");
         for (s, b) in scalar.iter().zip(&block.history) {
@@ -52,7 +52,7 @@ fn width_one_reproduces_scalar_gql_sequences_dense_fallback() {
         let op: &dyn SymOp = &a;
         let mut eng = BlockGql::new(op, opts, 1).record_history(true);
         eng.push(&u, StopRule::Exhaust);
-        let block = eng.run_all().pop().unwrap();
+        let block = eng.run_all(&a).pop().unwrap();
 
         assert_eq!(scalar.len(), block.history.len());
         for (s, b) in scalar.iter().zip(&block.history) {
@@ -81,7 +81,7 @@ fn wide_panels_reproduce_scalar_sequences_exactly() {
         for u in &queries {
             eng.push(u, StopRule::Exhaust);
         }
-        let results = eng.run_all();
+        let results = eng.run_all(&a);
         assert_eq!(results.len(), m);
         for (r, u) in results.iter().zip(&queries) {
             let scalar = run_scalar(&a, u, opts, StopRule::Exhaust, true);
@@ -126,7 +126,7 @@ fn mixed_convergence_with_queue_refill_matches_scalar_references() {
         for (u, stop) in &queries {
             eng.push(u, *stop);
         }
-        let results = eng.run_all();
+        let results = eng.run_all(&a);
         assert_eq!(results.len(), m);
 
         let mut iters_seen = std::collections::BTreeSet::new();
@@ -165,7 +165,7 @@ fn block_threshold_decisions_agree_with_scalar_judges() {
             eng.push(&u, StopRule::Threshold(t));
             want.push((dec, stats.iters));
         }
-        for (r, (dec, iters)) in eng.run_all().iter().zip(&want) {
+        for (r, (dec, iters)) in eng.run_all(&a).iter().zip(&want) {
             assert_eq!(r.decision, Some(*dec), "query {} decision", r.id);
             assert_eq!(r.iters, *iters, "query {} judge iterations", r.id);
         }

@@ -12,14 +12,18 @@
 //! * parallel sweeps with ≥ 2 workers.
 
 use gauss_bif::datasets::random_sparse_spd;
+use gauss_bif::metrics::{MetricValue, MetricsRegistry};
 use gauss_bif::quadrature::block::{run_scalar, StopRule};
-use gauss_bif::quadrature::engine::{Engine, EngineConfig, OpKey};
+use gauss_bif::quadrature::engine::{
+    Engine, EngineConfig, OpKey, SubmitError, Ticket, TicketError,
+};
 use gauss_bif::quadrature::query::{Answer, Query, QueryArm, Session};
 use gauss_bif::quadrature::race::RacePolicy;
 use gauss_bif::quadrature::{Bounds, GqlOptions, Reorth};
 use gauss_bif::sparse::Csr;
 use gauss_bif::util::prop::forall;
 use gauss_bif::util::rng::Rng;
+use std::sync::Arc;
 
 fn randvec(rng: &mut Rng, n: usize) -> Vec<f64> {
     (0..n).map(|_| rng.normal()).collect()
@@ -120,17 +124,17 @@ fn assert_same_answer(a: &Answer, b: &Answer, ctx: &str) {
 /// The sequential reference: one `Session` per operator, same width, same
 /// submission order, drained to completion on its own.
 fn sequential_answers(
-    ops: &[(Csr, GqlOptions)],
+    ops: &[(Arc<Csr>, GqlOptions)],
     queries: &[Vec<Query>],
 ) -> Vec<Vec<Answer>> {
     ops.iter()
         .zip(queries)
         .map(|((l, opts), qs)| {
-            let mut s = Session::new(l, *opts, PER_OP_LANES, RacePolicy::Prune);
+            let mut s = Session::new(&**l, *opts, PER_OP_LANES, RacePolicy::Prune);
             for q in qs {
                 s.submit(q.clone());
             }
-            s.run()
+            s.run(&**l)
         })
         .collect()
 }
@@ -139,18 +143,18 @@ fn sequential_answers(
 /// per-operator order is what identity is stated over) and group the
 /// answers back per operator.
 fn engine_answers(
-    ops: &[(Csr, GqlOptions)],
+    ops: &[(Arc<Csr>, GqlOptions)],
     queries: &[Vec<Query>],
     ecfg: EngineConfig,
 ) -> Vec<Vec<Answer>> {
     let mut eng = Engine::new(ecfg).expect("test engine config is valid");
-    let mut tickets: Vec<Vec<usize>> = vec![Vec::new(); ops.len()];
+    let mut tickets: Vec<Vec<Ticket>> = vec![Vec::new(); ops.len()];
     let most = queries.iter().map(Vec::len).max().unwrap_or(0);
     for qi in 0..most {
         for (k, qs) in queries.iter().enumerate() {
             if let Some(q) = qs.get(qi) {
                 let (l, opts) = &ops[k];
-                tickets[k].push(eng.submit(k as OpKey, l, *opts, q.clone()));
+                tickets[k].push(eng.submit(k as OpKey, Arc::clone(l), *opts, q.clone()));
             }
         }
     }
@@ -175,12 +179,12 @@ fn check_identity(want: &[Vec<Answer>], got: &[Vec<Answer>], ctx: &str) {
     }
 }
 
-fn build_ops(rng: &mut Rng, count: usize, ridge: f64) -> Vec<(Csr, GqlOptions)> {
+fn build_ops(rng: &mut Rng, count: usize, ridge: f64) -> Vec<(Arc<Csr>, GqlOptions)> {
     (0..count)
         .map(|_| {
             let n = 14 + rng.below(18);
             let (l, w) = random_sparse_spd(rng, n, 0.3, ridge);
-            (l, GqlOptions::new(w.lo, w.hi))
+            (Arc::new(l), GqlOptions::new(w.lo, w.hi))
         })
         .collect()
 }
@@ -205,7 +209,7 @@ fn engine_identity_holds_under_full_reorth_on_ill_conditioned_kernels() {
     // bound validity — reorthogonalized lanes must stay bit-identical
     // through the joint scheduler too
     forall(4, 0xE9E2, |rng| {
-        let ops: Vec<(Csr, GqlOptions)> = build_ops(rng, 2, 1e-4)
+        let ops: Vec<(Arc<Csr>, GqlOptions)> = build_ops(rng, 2, 1e-4)
             .into_iter()
             .map(|(l, opts)| (l, opts.with_reorth(Reorth::Full)))
             .collect();
@@ -237,34 +241,36 @@ fn streaming_submission_lands_mid_flight_bit_identically() {
             .iter()
             .zip(&queries)
             .map(|((l, opts), qs)| {
-                let mut s = Session::new(l, *opts, PER_OP_LANES, RacePolicy::Prune);
+                let mut s = Session::new(&**l, *opts, PER_OP_LANES, RacePolicy::Prune);
                 for q in &qs[..split] {
                     s.submit(q.clone());
                 }
                 for _ in 0..presteps {
-                    s.step();
+                    s.step(&**l);
                 }
                 for q in &qs[split..] {
                     s.submit(q.clone());
                 }
-                s.run()
+                s.run(&**l)
             })
             .collect();
 
         let ecfg = EngineConfig::default().with_width(PER_OP_LANES);
         let mut eng = Engine::new(ecfg).expect("test engine config is valid");
-        let mut tickets: Vec<Vec<usize>> = vec![Vec::new(); ops.len()];
+        let mut tickets: Vec<Vec<Ticket>> = vec![Vec::new(); ops.len()];
         for (k, qs) in queries.iter().enumerate() {
+            let (l, opts) = &ops[k];
             for q in &qs[..split] {
-                tickets[k].push(eng.submit(k as OpKey, &ops[k].0, ops[k].1, q.clone()));
+                tickets[k].push(eng.submit(k as OpKey, Arc::clone(l), *opts, q.clone()));
             }
         }
         for _ in 0..presteps {
             eng.step_round();
         }
         for (k, qs) in queries.iter().enumerate() {
+            let (l, opts) = &ops[k];
             for q in &qs[split..] {
-                tickets[k].push(eng.submit(k as OpKey, &ops[k].0, ops[k].1, q.clone()));
+                tickets[k].push(eng.submit(k as OpKey, Arc::clone(l), *opts, q.clone()));
             }
         }
         eng.drain();
@@ -294,10 +300,11 @@ fn suspend_resume_under_a_lane_budget_of_one_is_bit_identical() {
         let want = sequential_answers(&ops, &queries);
         let ecfg = EngineConfig::default().with_width(PER_OP_LANES).with_lanes(1);
         let mut eng = Engine::new(ecfg).expect("test engine config is valid");
-        let mut tickets: Vec<Vec<usize>> = vec![Vec::new(); ops.len()];
+        let mut tickets: Vec<Vec<Ticket>> = vec![Vec::new(); ops.len()];
         for (k, qs) in queries.iter().enumerate() {
+            let (l, opts) = &ops[k];
             for q in qs {
-                tickets[k].push(eng.submit(k as OpKey, &ops[k].0, ops[k].1, q.clone()));
+                tickets[k].push(eng.submit(k as OpKey, Arc::clone(l), *opts, q.clone()));
             }
         }
         eng.drain();
@@ -366,10 +373,11 @@ fn streaming_after_an_operator_went_idle_reuses_or_respins_sessions() {
             })
             .collect();
         let want = sequential_answers(&ops, &queries);
-        let mut tickets: Vec<Vec<usize>> = vec![Vec::new(); ops.len()];
+        let mut tickets: Vec<Vec<Ticket>> = vec![Vec::new(); ops.len()];
         for (k, qs) in queries.iter().enumerate() {
+            let (l, opts) = &ops[k];
             for q in qs {
-                tickets[k].push(eng.submit(k as OpKey, &ops[k].0, ops[k].1, q.clone()));
+                tickets[k].push(eng.submit(k as OpKey, Arc::clone(l), *opts, q.clone()));
             }
         }
         eng.drain();
@@ -384,4 +392,199 @@ fn streaming_after_an_operator_went_idle_reuses_or_respins_sessions() {
         check_identity(&want, &got, &format!("burst {burst}"));
     }
     assert!(eng.stats().sessions_spun >= 2, "sessions spin up lazily per key");
+}
+
+// ---------------------------------------------------------------------------
+// Resident-engine invariants (ISSUE 7): store eviction, ticket
+// compaction, shed admission.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn lru_eviction_and_readmission_preserve_bit_identity() {
+    // a resident engine under a 1-byte store budget: every drained burst
+    // is followed by idle rounds that TTL-evict the sessions and LRU-drop
+    // their released operators; the next burst re-admits the operators
+    // cold and must still answer bit-identically to fresh sequential
+    // sessions
+    let mut rng = Rng::new(0xE9E7);
+    let ops = build_ops(&mut rng, 2, 0.05);
+    let ecfg = EngineConfig::default()
+        .with_width(PER_OP_LANES)
+        .with_ttl_rounds(1)
+        .with_store_bytes(1);
+    let mut eng = Engine::new(ecfg).expect("test engine config is valid");
+    for burst in 0..2 {
+        let queries: Vec<Vec<Query>> = ops
+            .iter()
+            .map(|(l, opts)| mixed_queries(&mut rng, l, *opts))
+            .collect();
+        let want = sequential_answers(&ops, &queries);
+        let mut tickets: Vec<Vec<Ticket>> = vec![Vec::new(); ops.len()];
+        for (k, qs) in queries.iter().enumerate() {
+            let (l, opts) = &ops[k];
+            for q in qs {
+                tickets[k].push(eng.submit(k as OpKey, Arc::clone(l), *opts, q.clone()));
+            }
+        }
+        eng.drain();
+        let got: Vec<Vec<Answer>> = tickets
+            .iter()
+            .map(|ts| {
+                ts.iter()
+                    .map(|&t| eng.take_answer(t).expect("engine drained"))
+                    .collect()
+            })
+            .collect();
+        check_identity(&want, &got, &format!("evict burst {burst}"));
+        // idle rounds past the TTL: sessions evict, pins release, and the
+        // 1-byte budget drops the operators from the store entirely
+        for _ in 0..3 {
+            eng.step_round();
+        }
+        assert_eq!(eng.store().resident(), 0, "burst {burst}: budget evicts released ops");
+        assert!(!eng.store().contains(0) && !eng.store().contains(1));
+    }
+    assert!(eng.store().evicted() >= 4, "both ops evicted after each burst");
+    assert!(eng.store().inserted() >= 4, "re-admission re-inserts evicted ops");
+    assert!(eng.stats().sessions_spun >= 4, "each burst re-spins evicted sessions");
+}
+
+#[test]
+fn compacted_tickets_go_stale_instead_of_aliasing() {
+    let mut rng = Rng::new(0xE9E8);
+    let ops = build_ops(&mut rng, 1, 0.05);
+    let (l, opts) = &ops[0];
+    let mut eng = Engine::new(EngineConfig::default().with_width(PER_OP_LANES))
+        .expect("test engine config is valid");
+    let u = randvec(&mut rng, l.n);
+    let t0 = eng.submit(
+        0,
+        Arc::clone(l),
+        *opts,
+        Query::Estimate { u, stop: StopRule::GapRel(1e-8) },
+    );
+    // unresolved tickets refuse without compacting
+    assert!(matches!(eng.take_answer(t0), Err(TicketError::Unresolved)));
+    eng.drain();
+    assert!(matches!(eng.take_answer(t0), Ok(Answer::Estimate { .. })));
+    // the slot compacted: the taken ticket (and any retained copy) is
+    // permanently stale, for reads and takes alike
+    assert!(matches!(eng.take_answer(t0), Err(TicketError::Stale)));
+    assert!(eng.answer(t0).is_none(), "stale tickets read as unanswered");
+    assert!(!eng.is_resolved(t0));
+    // a later submission reuses the compacted slab slot under a bumped
+    // generation — the stale ticket must keep erroring, never alias the
+    // query that now lives in its old index
+    let u2 = randvec(&mut rng, l.n);
+    let t1 = eng.submit(
+        0,
+        Arc::clone(l),
+        *opts,
+        Query::Estimate { u: u2, stop: StopRule::GapRel(1e-8) },
+    );
+    eng.drain();
+    assert!(matches!(eng.take_answer(t0), Err(TicketError::Stale)));
+    assert!(matches!(eng.take_answer(t1), Ok(Answer::Estimate { .. })));
+    assert!(eng.stats().compactions >= 2, "every take_answer compacts its slot");
+}
+
+#[test]
+fn shed_answers_carry_a_valid_four_bound_bracket() {
+    let mut rng = Rng::new(0xE9E9);
+    let ops = build_ops(&mut rng, 1, 0.05);
+    let (l, opts) = &ops[0];
+    let n = l.n;
+    let ecfg = EngineConfig::default().with_width(PER_OP_LANES).with_queue_cap(2);
+    let mut eng = Engine::new(ecfg).expect("test engine config is valid");
+    // two slow estimates fill the cap; one round gives each a bracket
+    let q0 = Query::Estimate { u: randvec(&mut rng, n), stop: StopRule::GapRel(1e-12) };
+    let t0 = eng
+        .try_submit(0, Arc::clone(l), *opts, q0, Some(1_000))
+        .expect("below cap admits");
+    let q1 = Query::Estimate { u: randvec(&mut rng, n), stop: StopRule::GapRel(1e-12) };
+    let t1 = eng
+        .try_submit(0, Arc::clone(l), *opts, q1, Some(1))
+        .expect("below cap admits");
+    eng.step_round();
+    // at cap: admission sheds the least-urgent in-flight estimate (the
+    // loose-deadline t0), which resolves NOW to its current bracket —
+    // the anytime property of the Gauss/Radau/Lobatto sweep
+    let q2 = Query::Estimate { u: randvec(&mut rng, n), stop: StopRule::GapRel(1e-12) };
+    let t2 = eng
+        .try_submit(0, Arc::clone(l), *opts, q2, Some(1))
+        .expect("shed makes room");
+    assert_eq!(eng.stats().shed, 1, "exactly one victim shed");
+    assert!(eng.is_resolved(t0), "the shed victim resolves immediately");
+    match eng.take_answer(t0).expect("shed answer is harvestable") {
+        Answer::Estimate { bounds, iters, .. } => {
+            assert!(iters >= 1, "shed after a sweep: bracket is real, not a placeholder");
+            assert!(bounds.lower().is_finite() && bounds.upper().is_finite());
+            assert!(bounds.lower() <= bounds.upper(), "shed bracket still encloses");
+            assert!(!bounds.exact, "a mid-flight bracket is not an exact solve");
+        }
+        _ => panic!("shed victim was an estimate"),
+    }
+    eng.drain();
+    assert!(matches!(eng.take_answer(t1), Ok(Answer::Estimate { .. })));
+    assert!(matches!(eng.take_answer(t2), Ok(Answer::Estimate { .. })));
+
+    // refill the cap with decision queries: nothing sheddable carries a
+    // bracket to answer with, so admission refuses instead of lying
+    for _ in 0..2 {
+        let u = randvec(&mut rng, n);
+        eng.try_submit(0, Arc::clone(l), *opts, Query::Threshold { u, t: 0.0 }, Some(1))
+            .expect("below cap admits");
+    }
+    let u = randvec(&mut rng, n);
+    let refused = eng.try_submit(0, Arc::clone(l), *opts, Query::Threshold { u, t: 0.0 }, Some(1));
+    assert!(matches!(refused, Err(SubmitError::Saturated)));
+    eng.drain();
+}
+
+#[test]
+fn export_publishes_the_store_and_admission_schema() {
+    // satellite of the PR-6 telemetry layer: the resident-engine series
+    // (`engine.store.*`, `engine.admission.*`) must appear in a snapshot
+    // with stable names and kinds — the CI soak step validates the same
+    // schema out of the serve binary's JSON
+    let mut rng = Rng::new(0xE9EA);
+    let ops = build_ops(&mut rng, 2, 0.05);
+    let mut eng = Engine::new(EngineConfig::default().with_width(PER_OP_LANES))
+        .expect("test engine config is valid");
+    for (k, (l, opts)) in ops.iter().enumerate() {
+        let u = randvec(&mut rng, l.n);
+        let q = Query::Estimate { u, stop: StopRule::GapRel(1e-6) };
+        eng.submit(k as OpKey, Arc::clone(l), *opts, q);
+    }
+    eng.drain();
+    let reg = MetricsRegistry::new();
+    eng.export_into(&reg);
+    let snap = reg.snapshot();
+    for name in [
+        "engine.store.inserted",
+        "engine.store.evicted",
+        "engine.admission.admitted",
+        "engine.admission.parked",
+        "engine.admission.shed",
+        "engine.admission.compactions",
+    ] {
+        assert!(
+            matches!(snap.get(name), Some(MetricValue::Counter(_))),
+            "snapshot missing counter {name}"
+        );
+    }
+    for name in ["engine.store.resident", "engine.store.pinned", "engine.store.resident_bytes"] {
+        assert!(
+            matches!(snap.get(name), Some(MetricValue::Gauge(_))),
+            "snapshot missing gauge {name}"
+        );
+    }
+    match snap.get("engine.admission.admitted") {
+        Some(MetricValue::Counter(c)) => assert_eq!(*c, 2, "one admit per submission"),
+        _ => unreachable!(),
+    }
+    match snap.get("engine.store.resident") {
+        Some(MetricValue::Gauge(g)) => assert!(*g >= 1.0, "ops stay resident after drain"),
+        _ => unreachable!(),
+    }
 }

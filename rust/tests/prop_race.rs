@@ -17,12 +17,14 @@ use gauss_bif::quadrature::block::{BlockGql, RetireReason, StopRule};
 use gauss_bif::quadrature::{GqlOptions, RacePolicy, Reorth};
 use gauss_bif::util::prop::forall;
 use gauss_bif::util::rng::Rng;
+use std::sync::Arc;
 
 #[test]
 fn greedy_prune_and_exhaustive_select_identical_sets() {
     forall(10, 0x9A5E01, |rng| {
         let n = 20 + rng.below(36);
         let (l, w) = random_sparse_spd(rng, n, 0.15, 0.05);
+        let l = Arc::new(l);
         let k = 3 + rng.below(8);
         for width in [1usize, 4, 9] {
             let base = GreedyConfig::new(w, k).with_block_width(width);
@@ -46,6 +48,7 @@ fn greedy_policies_agree_under_full_reorth_on_ill_conditioned_kernels() {
     forall(5, 0x9A5E02, |rng| {
         let n = 18 + rng.below(14);
         let (l, w) = random_sparse_spd(rng, n, 0.3, 1e-4);
+        let l = Arc::new(l);
         let k = 3 + rng.below(4);
         let base = GreedyConfig::new(w, k)
             .with_block_width(1 + rng.below(6))
@@ -61,6 +64,7 @@ fn double_greedy_policies_choose_identical_sets() {
     forall(8, 0x9A5E03, |rng| {
         let n = 16 + rng.below(24);
         let (l, w) = random_sparse_spd(rng, n, 0.2, 0.05);
+        let l = Arc::new(l);
         let seed = rng.next_u64();
         let run = |race| {
             let mut r = Rng::new(seed);
@@ -84,6 +88,7 @@ fn regression_gapped_kernel_saves_sweeps() {
     let mut rng = Rng::new(0x9A5E04);
     let n = 120;
     let (l, w) = gapped_kernel(&mut rng, n, 0.03, 10, 50.0);
+    let l = Arc::new(l);
     let base = GreedyConfig::new(w, 5).with_block_width(8);
     let (ex, ex_stats) = greedy_map_stats(&l, &base.with_race(RacePolicy::Exhaustive));
     let (pr, pr_stats) = greedy_map_stats(&l, &base.with_race(RacePolicy::Prune));
@@ -119,7 +124,7 @@ fn eviction_never_disturbs_surviving_lanes() {
             for u in &queries {
                 eng.push(u, StopRule::Exhaust);
             }
-            eng.run_all()
+            eng.run_all(&a)
         };
         let victims: Vec<usize> = (0..m).filter(|_| rng.bool(0.4)).collect();
         let mut eng = BlockGql::new(&a, opts, width);
@@ -129,7 +134,7 @@ fn eviction_never_disturbs_surviving_lanes() {
         let mut steps = 0usize;
         let mut evicted: Vec<usize> = Vec::new();
         loop {
-            if !eng.step_panel() {
+            if !eng.step_panel(&a) {
                 break;
             }
             steps += 1;
@@ -178,16 +183,16 @@ fn suspended_lanes_resume_into_identical_results() {
         let reference = {
             let mut eng = BlockGql::new(&a, opts, 2);
             eng.push(&u0, StopRule::Exhaust);
-            eng.run_all().pop().unwrap()
+            eng.run_all(&a).pop().unwrap()
         };
         let mut eng = BlockGql::new(&a, opts, 2);
         let id0 = eng.push(&u0, StopRule::Exhaust);
         eng.push(&u1, StopRule::Exhaust);
-        assert!(eng.step_panel());
+        assert!(eng.step_panel(&a));
         assert!(eng.suspend(id0));
-        while eng.step_panel() {}
+        while eng.step_panel(&a) {}
         assert!(eng.resume(id0));
-        while eng.step_panel() {}
+        while eng.step_panel(&a) {}
         let out = eng.take_done();
         let r0 = out.iter().find(|r| r.id == id0).expect("resumed lane");
         assert_eq!(r0.iters, reference.iters);

@@ -226,7 +226,7 @@ fn width_one_reorth_block_is_bit_identical_to_scalar_reorth() {
 
         let mut eng = BlockGql::new(&a, opts, 1).record_history(true);
         eng.push(&u, StopRule::Exhaust);
-        let block = eng.run_all().pop().expect("one result");
+        let block = eng.run_all(&a).pop().expect("one result");
 
         assert_eq!(scalar.len(), block.history.len(), "sequence lengths differ");
         for (s, b) in scalar.iter().zip(&block.history) {
@@ -278,7 +278,7 @@ fn ill_conditioned_block_lanes_sandwich_with_reorth() {
     for u in &queries {
         eng.push(u, StopRule::Exhaust);
     }
-    let results = eng.run_all();
+    let results = eng.run_all(&a);
     assert_eq!(results.len(), queries.len());
     for ((r, u), e) in results.iter().zip(&queries).zip(&exact) {
         // tight at exhaustion (mirror of reorthogonalization_stays_valid_longer)

@@ -86,7 +86,7 @@ fn check_mixed_session(rng: &mut Rng, l: &Csr, opts: GqlOptions) {
             floor: None,
         });
         let q_e = s.submit(Query::Estimate { u: ue.clone(), stop: StopRule::GapRel(1e-8) });
-        let answers = s.run();
+        let answers = s.run(l);
 
         match &answers[q_t] {
             Answer::Threshold { decision, stats } => {
@@ -166,7 +166,7 @@ fn adaptive_prune_margin_preserves_selection_identity() {
                     .collect(),
                 floor: None,
             });
-            let winner = s.run()[qid].winner().expect("argmax answer");
+            let winner = s.run(&l)[qid].winner().expect("argmax answer");
             (winner, s.sweeps(), s.prune_margin())
         };
         let (w_ex, sweeps_ex, _) = run(RacePolicy::Exhaustive);
@@ -195,7 +195,7 @@ fn session_queries_resolve_incrementally_under_step() {
     let q_est = s.submit(Query::Estimate { u, stop: StopRule::Exhaust });
     let mut easy_resolved_at = None;
     let mut steps = 0usize;
-    while s.step() {
+    while s.step(&l) {
         steps += 1;
         if easy_resolved_at.is_none() && s.is_resolved(q_easy) {
             easy_resolved_at = Some(steps);
@@ -207,5 +207,5 @@ fn session_queries_resolve_incrementally_under_step() {
         at < steps,
         "easy threshold should resolve before the exhaustive estimate ({at} vs {steps})"
     );
-    assert_eq!(s.run().len(), 2);
+    assert_eq!(s.run(&l).len(), 2);
 }
