@@ -6,6 +6,7 @@
 
 use gauss_bif::datasets::random_sparse_spd;
 use gauss_bif::quadrature::{block_solve, run_scalar, GqlOptions, StopRule};
+use gauss_bif::sparse::SymOp;
 use gauss_bif::util::bench::{Bencher, Table};
 use gauss_bif::util::rng::Rng;
 
@@ -74,6 +75,40 @@ fn main() {
             width.to_string(),
             format!("{:.0}", block.mean_ns / (k * iters) as f64),
             format!("{:.2}x", scalar.mean_ns / block.mean_ns),
+        ]);
+    }
+    println!("\n{}", table.render());
+
+    // Raw spmm kernel: the register-tiled 8-wide panel traversal against
+    // the fixed-4 kernel it replaced, bit-identity asserted before any
+    // timing. b = 64 pushes the interleaved panel past the cache-blocking
+    // threshold, so that row also covers the column-windowed traversal.
+    println!("== spmm kernel: register-tiled 8-wide panel vs fixed-4 reference ==");
+    let mut table = Table::new(&["b", "ref4 ns/nnz-lane", "tiled ns/nnz-lane", "speedup"]);
+    for &width in &[4usize, 8, 16, 64] {
+        let x: Vec<f64> = (0..n * width).map(|_| rng.normal()).collect();
+        let mut y = vec![0.0; n * width];
+        let mut y4 = vec![0.0; n * width];
+        a.matvec_multi(&x, &mut y, width);
+        a.matvec_multi_ref4(&x, &mut y4, width);
+        assert!(
+            y.iter().zip(&y4).all(|(p, q)| p.to_bits() == q.to_bits()),
+            "kernels diverged at b={width}"
+        );
+        let tiled = b.bench(&format!("spmm tiled b={width}"), || {
+            a.matvec_multi(&x, &mut y, width);
+            y[0]
+        });
+        let ref4 = b.bench(&format!("spmm ref4  b={width}"), || {
+            a.matvec_multi_ref4(&x, &mut y4, width);
+            y4[0]
+        });
+        let per = (a.nnz() * width) as f64;
+        table.row(vec![
+            width.to_string(),
+            format!("{:.2}", ref4.mean_ns / per),
+            format!("{:.2}", tiled.mean_ns / per),
+            format!("{:.2}x", ref4.mean_ns / tiled.mean_ns),
         ]);
     }
     println!("\n{}", table.render());

@@ -12,7 +12,7 @@
 
 use gauss_bif::datasets::random_sparse_spd;
 use gauss_bif::quadrature::block::StopRule;
-use gauss_bif::quadrature::engine::{Engine, EngineConfig, OpKey};
+use gauss_bif::quadrature::engine::{Engine, EngineConfig, OpKey, SweepMode};
 use gauss_bif::quadrature::query::{Answer, Query, Session};
 use gauss_bif::quadrature::race::RacePolicy;
 use gauss_bif::quadrature::GqlOptions;
@@ -31,11 +31,18 @@ const STOP: StopRule = StopRule::GapRel(1e-8);
 const WIDTH: usize = 8;
 
 fn build(n: usize, ops: usize, per_op: usize, seed: u64) -> Workload {
+    build_sizes(&vec![n; ops], per_op, seed)
+}
+
+/// Mixed operator sizes (the skewed-workload builder): one entry per
+/// operator, so a single oversized entry models the straggler that makes
+/// static chunked fan-out idle at the tail.
+fn build_sizes(sizes: &[usize], per_op: usize, seed: u64) -> Workload {
     let mut rng = Rng::new(seed);
-    let density = 5e-3_f64.max(8.0 / (n as f64 * n as f64));
     let mut kernels = Vec::new();
     let mut queries = Vec::new();
-    for _ in 0..ops {
+    for &n in sizes {
+        let density = 5e-3_f64.max(8.0 / (n as f64 * n as f64));
         let (a, w) = random_sparse_spd(&mut rng, n, density, 0.05);
         let qs: Vec<Vec<f64>> = (0..per_op)
             .map(|_| (0..n).map(|_| rng.normal()).collect())
@@ -68,13 +75,18 @@ fn run_sequential(w: &Workload) -> Vec<u64> {
 }
 
 /// Joint serving: every operator's session advances each engine round,
-/// swept by `workers` threads.
+/// swept by `workers` threads under the default (work-stealing) fan-out.
 fn run_engine(w: &Workload, workers: usize) -> Vec<u64> {
+    run_engine_mode(w, workers, SweepMode::Stealing)
+}
+
+fn run_engine_mode(w: &Workload, workers: usize, sweep: SweepMode) -> Vec<u64> {
     let mut eng = Engine::new(
         EngineConfig::default()
             .with_width(WIDTH)
             .with_lanes(WIDTH * w.ops.len())
-            .with_workers(workers),
+            .with_workers(workers)
+            .with_sweep_mode(sweep),
     )
     .expect("static engine config is valid");
     let mut tickets = Vec::new();
@@ -96,6 +108,33 @@ fn run_engine(w: &Workload, workers: usize) -> Vec<u64> {
             other => panic!("wrong answer kind {other:?}"),
         })
         .collect()
+}
+
+/// Drain the workload once with round profiling on; returns the measured
+/// sweep tail idleness and how many slot claims crossed chunk boundaries.
+fn profile_drain(w: &Workload, workers: usize, sweep: SweepMode) -> (f64, usize) {
+    let mut eng = Engine::new(
+        EngineConfig::default()
+            .with_width(WIDTH)
+            .with_lanes(WIDTH * w.ops.len())
+            .with_workers(workers)
+            .with_sweep_mode(sweep)
+            .with_profile(true),
+    )
+    .expect("static engine config is valid");
+    for (k, ((a, opts), qs)) in w.ops.iter().zip(&w.queries).enumerate() {
+        for u in qs {
+            eng.submit(
+                k as OpKey,
+                Arc::clone(a),
+                *opts,
+                Query::Estimate { u: u.clone(), stop: STOP },
+            );
+        }
+    }
+    eng.drain();
+    let idle = eng.profile().map(|p| p.idle_frac()).unwrap_or(0.0);
+    (idle, eng.stats().steals)
 }
 
 fn main() {
@@ -129,6 +168,35 @@ fn main() {
             Stats::fmt_time(e4.median_ns),
         ]);
     }
+    println!("\n{}", table.render());
+
+    // Skewed workload: one operator 8x the dimension of the rest, so a
+    // static chunked fan-out parks three workers behind the straggler.
+    // Bit-identity across both sweep modes is asserted before timing; the
+    // profiled drains report the measured tail idleness each mode leaves.
+    println!("== skewed workload: one operator 8x larger, 4 sweep workers ==");
+    let w = build_sizes(&[300, 300, 300, 2400], 8, 0x5E1F);
+    let want = run_sequential(&w);
+    for mode in [SweepMode::Static, SweepMode::Stealing] {
+        assert_eq!(want, run_engine_mode(&w, 4, mode), "skewed answers diverged ({mode:?})");
+    }
+    let st = b.bench("skew static w=4", || run_engine_mode(&w, 4, SweepMode::Static));
+    let sw = b.bench("skew stealing w=4", || run_engine_mode(&w, 4, SweepMode::Stealing));
+    let (idle_static, _) = profile_drain(&w, 4, SweepMode::Static);
+    let (idle_steal, steals) = profile_drain(&w, 4, SweepMode::Stealing);
+    let mut table = Table::new(&["sweep", "median", "worker_idle_frac", "steals"]);
+    table.row(vec![
+        "static".into(),
+        Stats::fmt_time(st.median_ns),
+        format!("{idle_static:.3}"),
+        "0".into(),
+    ]);
+    table.row(vec![
+        "stealing".into(),
+        Stats::fmt_time(sw.median_ns),
+        format!("{idle_steal:.3}"),
+        steals.to_string(),
+    ]);
     println!("\n{}", table.render());
 
     match b.write_json("engine") {

@@ -1,0 +1,142 @@
+#!/usr/bin/env python3
+"""Validate BENCH_*.json perf-trajectory artifacts and gate regressions.
+
+Every artifact in the given directory is checked against the version-1
+stats schema emitted by ``rust/src/util/bench.rs::write_stats_json``:
+
+    {"bench": str, "version": 1, "results":
+      [{"name": str, "mean": ns, "median": ns, "p95": ns, "n": samples}]}
+
+If a baseline directory is given, each artifact with a same-named
+committed baseline is additionally compared row by row: a row whose
+median exceeds ``baseline_median * tolerance`` fails the gate. Rows
+missing from the baseline are skipped (new benches never fail the gate),
+as are artifacts without a committed baseline — so the baseline set is
+opt-in per bench and can stay deliberately loose.
+
+Usage:
+    python3 python/validate_bench.py <artifact-dir> \
+        [--baseline benches/baselines] [--tolerance 1.25]
+
+Exit status is nonzero on any schema violation or regression.
+"""
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+ROW_KEYS = ("name", "mean", "median", "p95", "n")
+
+
+def validate_schema(path):
+    """Return the parsed artifact, raising ValueError on schema breaks."""
+    with open(path) as f:
+        doc = json.load(f)
+    if not isinstance(doc.get("bench"), str) or not doc["bench"]:
+        raise ValueError(f"{path.name}: 'bench' must be a non-empty string")
+    if doc.get("version") != 1:
+        raise ValueError(f"{path.name}: unsupported version {doc.get('version')!r}")
+    rows = doc.get("results")
+    if not isinstance(rows, list) or not rows:
+        raise ValueError(f"{path.name}: 'results' must be a non-empty list")
+    seen = set()
+    for row in rows:
+        for key in ROW_KEYS:
+            if key not in row:
+                raise ValueError(f"{path.name}: row {row!r} missing '{key}'")
+        name = row["name"]
+        if not isinstance(name, str) or not name:
+            raise ValueError(f"{path.name}: row name must be a non-empty string")
+        if name in seen:
+            raise ValueError(f"{path.name}: duplicate row name {name!r}")
+        seen.add(name)
+        for key in ("mean", "median", "p95"):
+            v = row[key]
+            if not isinstance(v, (int, float)) or v <= 0:
+                raise ValueError(f"{path.name}: {name!r} {key}={v!r} not > 0")
+        if not isinstance(row["n"], (int, float)) or row["n"] < 1:
+            raise ValueError(f"{path.name}: {name!r} n={row['n']!r} not >= 1")
+    return doc
+
+
+def compare_to_baseline(path, doc, base_doc, tolerance):
+    """Return (checked, skipped, failures) for one artifact/baseline pair."""
+    base = {r["name"]: r for r in base_doc["results"]}
+    checked, skipped, failures = 0, [], []
+    for row in doc["results"]:
+        ref = base.get(row["name"])
+        if ref is None:
+            skipped.append(row["name"])
+            continue
+        checked += 1
+        limit = ref["median"] * tolerance
+        if row["median"] > limit:
+            failures.append(
+                f"{path.name}: {row['name']!r} median {row['median']:.0f} ns "
+                f"exceeds baseline {ref['median']:.0f} ns * {tolerance:g} "
+                f"= {limit:.0f} ns"
+            )
+    return checked, skipped, failures
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("artifact_dir", type=Path, help="directory holding BENCH_*.json")
+    ap.add_argument(
+        "--baseline",
+        type=Path,
+        default=None,
+        help="directory of committed baseline BENCH_*.json files",
+    )
+    ap.add_argument(
+        "--tolerance",
+        type=float,
+        default=1.25,
+        help="fail a row whose median exceeds baseline * tolerance (default 1.25)",
+    )
+    args = ap.parse_args()
+
+    artifacts = sorted(args.artifact_dir.glob("BENCH_*.json"))
+    if not artifacts:
+        print(f"no BENCH_*.json artifacts under {args.artifact_dir}", file=sys.stderr)
+        return 1
+
+    failures = []
+    for path in artifacts:
+        try:
+            doc = validate_schema(path)
+        except (ValueError, json.JSONDecodeError, OSError) as e:
+            failures.append(f"{path.name}: {e}")
+            continue
+        print(f"{path.name}: schema OK ({len(doc['results'])} rows)")
+        if args.baseline is None:
+            continue
+        base_path = args.baseline / path.name
+        if not base_path.exists():
+            print(f"{path.name}: no committed baseline, gate skipped")
+            continue
+        try:
+            base_doc = validate_schema(base_path)
+        except (ValueError, json.JSONDecodeError, OSError) as e:
+            failures.append(f"baseline {base_path}: {e}")
+            continue
+        checked, skipped, row_failures = compare_to_baseline(
+            path, doc, base_doc, args.tolerance
+        )
+        failures.extend(row_failures)
+        note = f", {len(skipped)} new rows skipped" if skipped else ""
+        print(
+            f"{path.name}: {checked} rows within {args.tolerance:g}x "
+            f"of baseline{note}"
+            if not row_failures
+            else f"{path.name}: {len(row_failures)} regressions"
+        )
+
+    for f in failures:
+        print(f"FAIL {f}", file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

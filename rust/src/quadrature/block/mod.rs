@@ -30,10 +30,11 @@
 //! exactness contract below.
 //!
 //! **Panel layout:** lanes live interleaved at a stride that is padded up
-//! to a multiple of [`SIMD_LANE_PAD`] whenever more than one lane is
-//! active (pad columns are zero and carry no lane), so the per-nonzero
-//! inner loop of the specialized `matvec_multi` kernels runs over
-//! fixed-width 4-lane chunks the compiler can vectorize. Per-lane
+//! to a multiple of [`PANEL_PAD`] (half of it for narrow 2–4 lane
+//! panels) whenever more than one lane is active (pad columns are zero
+//! and carry no lane), so the per-nonzero inner loop of the specialized
+//! `matvec_multi` kernels runs over fixed-width chunks — eight `f64`
+//! lanes at a time — the compiler can vectorize. Per-lane
 //! accumulation order is unaffected — a lane's column sees exactly the
 //! scalar op sequence at any stride.
 //!
@@ -59,20 +60,24 @@ use super::recurrence::LaneCore;
 use crate::sparse::SymOp;
 use std::collections::VecDeque;
 
-/// Panel strides are padded up to a multiple of this lane count (when more
-/// than one lane is active) so the `matvec_multi` inner loops run over
-/// fixed-width chunks (ROADMAP SIMD follow-up). Pad columns are zero.
-pub const SIMD_LANE_PAD: usize = 4;
+pub use crate::sparse::PANEL_PAD;
 
 /// Stride for `lanes` interleaved columns: exactly 1 for a single lane
-/// (the scalar memory layout — the structural bit-identity anchor), else
-/// the next multiple of [`SIMD_LANE_PAD`].
+/// (the scalar memory layout — the structural bit-identity anchor), the
+/// half-chunk width `PANEL_PAD / 2` for 2..=4 lanes (narrow compare /
+/// threshold panels would double their memory under full-width padding
+/// for no extra vector throughput — the kernels carry a 4-lane
+/// half-chunk path), else the next multiple of [`PANEL_PAD`]. Pad
+/// columns are zero and carry no lane, so padding never perturbs a
+/// lane's accumulation.
 #[inline]
 fn pad_stride(lanes: usize) -> usize {
     if lanes <= 1 {
         lanes
+    } else if lanes <= PANEL_PAD / 2 {
+        PANEL_PAD / 2
     } else {
-        lanes.div_ceil(SIMD_LANE_PAD) * SIMD_LANE_PAD
+        lanes.div_ceil(PANEL_PAD) * PANEL_PAD
     }
 }
 
@@ -316,8 +321,9 @@ pub struct BlockGql {
     /// SIMD padding)
     width: usize,
     /// current panel stride: `pad_stride(lanes.len())` — equal to the lane
-    /// count for 0 or 1 lanes, padded to a multiple of [`SIMD_LANE_PAD`]
-    /// otherwise (pad columns are zero and carry no lane)
+    /// count for 0 or 1 lanes, padded to a multiple of [`PANEL_PAD`] (or
+    /// its 4-lane half-chunk) otherwise (pad columns are zero and carry
+    /// no lane)
     b: usize,
     // interleaved panels, `n * b`: column `l` of lane `l` at `[i * b + l]`
     v_prev: Vec<f64>,
@@ -876,10 +882,12 @@ mod tests {
     fn padded_stride_is_a_stride_multiple_with_lanes_preserved() {
         assert_eq!(pad_stride(0), 0);
         assert_eq!(pad_stride(1), 1, "width-1 keeps the scalar layout");
-        assert_eq!(pad_stride(2), 4);
+        assert_eq!(pad_stride(2), 4, "narrow panels pad to the half-chunk");
         assert_eq!(pad_stride(4), 4);
         assert_eq!(pad_stride(5), 8);
-        assert_eq!(pad_stride(9), 12);
+        assert_eq!(pad_stride(8), 8);
+        assert_eq!(pad_stride(9), 16, "above one chunk: full PANEL_PAD multiples");
+        assert_eq!(pad_stride(17), 24);
         // a width whose stride is padded (5 lanes → stride 8) still
         // reproduces every scalar run bit-for-bit
         let mut rng = Rng::new(0xB752);

@@ -16,11 +16,20 @@
 //! The [`Engine`] owns an [`OpStore`] of ref-counted operators keyed by
 //! [`OpKey`] and drives the live sessions from a single round loop — one
 //! `matvec_multi` panel per operator per round, sessions swept in
-//! parallel by a small hand-rolled worker fan-out (scoped threads over
-//! disjoint session chunks, no locks, bit-identical at any worker count
-//! because each session is an independent state machine stepped exactly
-//! once per round). Residency adds four capabilities on top of the
-//! original joint scheduling:
+//! parallel by a small hand-rolled worker fan-out. The default
+//! [`SweepMode::Stealing`] fan-out is an index-claiming work-stealing
+//! sweep: a persistent pool of parked workers (spawned once, reused
+//! every round — `engine.profile.pool_reuse`) races a shared atomic
+//! cursor down the slot list, so a skewed round — one slow operator next
+//! to many fast ones — no longer idles every other worker through the
+//! tail of a static partition. [`SweepMode::Static`] keeps the PR-5
+//! `chunks_mut` split (scoped threads over disjoint session chunks) as a
+//! measurable baseline. Either way there are no locks on the step path
+//! and exactly one step per live session per round, so answers are
+//! bit-identical to the sequential loop at any worker count — each
+//! session is an independent state machine; only *which thread* steps it
+//! varies. Residency adds four capabilities on top of the original joint
+//! scheduling:
 //!
 //! * **Owned operator store** — [`Engine::submit`] takes an
 //!   `Arc<dyn SymOp>`; the engine pins it in the [`OpStore`] while its
@@ -79,10 +88,13 @@ use super::is_zero;
 use super::judge::{JudgeOutcome, JudgeStats};
 use super::query::{Answer, Query, Session};
 use super::race::RacePolicy;
-use crate::metrics::{Histogram, MetricsRegistry};
+use crate::metrics::{lock_tolerant, Histogram, MetricsRegistry};
 use crate::sparse::SymOp;
+use std::any::Any;
 use std::fmt;
-use std::sync::Arc;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
 
 /// Identifies one operator (and therefore one session) inside an engine.
@@ -104,9 +116,39 @@ pub const MAX_ENGINE_LANES: usize = 1 << 20;
 /// Ceiling for [`EngineConfig::ttl_rounds`]: beyond this an "idle"
 /// session would outlive any realistic run — rejected as a typo.
 pub const MAX_ENGINE_TTL: usize = 1 << 20;
-/// Ceiling for [`EngineConfig::workers`]: the sweep fan-out spawns scoped
-/// threads, so absurd worker counts are rejected rather than honored.
+/// Ceiling for [`EngineConfig::workers`]: the sweep fan-out backs every
+/// worker with a real OS thread (persistent pool helpers in
+/// [`SweepMode::Stealing`], scoped threads in [`SweepMode::Static`]), so
+/// absurd worker counts are rejected rather than honored.
 pub const MAX_ENGINE_WORKERS: usize = 1 << 10;
+
+/// How [`Engine::step_round`] fans a multi-session round out over its
+/// [`EngineConfig::workers`]. Both modes step every live session exactly
+/// once per round on *some* thread, and a session's panel math never
+/// depends on which thread runs it — so answers are bit-identical across
+/// modes and worker counts (pinned by `rust/tests/prop_engine.rs`). The
+/// modes differ only in wall-clock shape, measured by
+/// `engine.profile.worker_idle_frac`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SweepMode {
+    /// Index-claiming work stealing (the default): a persistent pool of
+    /// parked worker threads (plus the driving thread) races one shared
+    /// atomic cursor down the slot list, each claim taking the next
+    /// un-stepped session. A worker that lands a slow session simply
+    /// stops claiming while the rest drain the remainder, so the round's
+    /// tail is one session long instead of one *chunk* long. Claims that
+    /// land outside a worker's fair static share are counted as
+    /// `engine.profile.steal_count`; pool reuse across rounds as
+    /// `engine.profile.pool_reuse`.
+    #[default]
+    Stealing,
+    /// The PR-5 static split: `chunks_mut` partitions the slot list into
+    /// one contiguous chunk per worker under per-round scoped threads.
+    /// Kept as the measurable baseline the stealing sweep is judged
+    /// against (`benches/bench_engine.rs` skewed-workload rows) and as a
+    /// fallback with strictly simpler machinery.
+    Static,
+}
 
 /// Typed rejection of unusable engine knobs, mirroring
 /// [`BatchPolicy::validate`](crate::coordinator::BatchPolicy): checked at
@@ -186,9 +228,13 @@ pub struct EngineConfig {
     /// session's operator pin in the [`OpStore`]; the operator itself
     /// stays warm until the byte budget pushes it out.
     pub ttl_rounds: usize,
-    /// Sweep workers: sessions are stepped in parallel chunks when more
+    /// Sweep workers: live sessions are stepped in parallel when more
     /// than one is live. Results are bit-identical at any worker count.
     pub workers: usize,
+    /// How the sweep fans out over the workers: index-claiming work
+    /// stealing from a persistent pool (default) or the static
+    /// `chunks_mut` split. Never changes answers, only wall-clock.
+    pub sweep: SweepMode,
     /// Default race policy for sessions spun up by [`Engine::submit`].
     pub policy: RacePolicy,
     /// Collect a [`RoundProfile`] (per-round phase timings, per-worker
@@ -222,6 +268,7 @@ impl Default for EngineConfig {
             lanes: 256,
             ttl_rounds: 32,
             workers: 1,
+            sweep: SweepMode::Stealing,
             policy: RacePolicy::Prune,
             profile: false,
             record_traces: false,
@@ -249,6 +296,11 @@ impl EngineConfig {
 
     pub fn with_workers(mut self, w: usize) -> Self {
         self.workers = w;
+        self
+    }
+
+    pub fn with_sweep_mode(mut self, m: SweepMode) -> Self {
+        self.sweep = m;
         self
     }
 
@@ -350,6 +402,16 @@ pub struct EngineStats {
     /// Ticket slots freed by [`Engine::take_answer`] — the compaction
     /// rate that keeps a resident engine's ticket log bounded.
     pub compactions: usize,
+    /// Work-stealing sweep claims that landed outside the claiming
+    /// worker's fair static share ([`SweepMode::Stealing`] only) — each
+    /// one is a session a static split would have left waiting behind a
+    /// slower neighbor. Exported as `engine.profile.steal_count`.
+    pub steals: usize,
+    /// Rounds dispatched to an already-warm persistent sweep pool
+    /// (every stealing fan-out after the first): the thread-spawn
+    /// overhead the pool saved versus per-round scoped threads.
+    /// Exported as `engine.profile.pool_reuse`.
+    pub pool_reuse: usize,
 }
 
 /// Cumulative round-loop profile, collected when
@@ -361,10 +423,12 @@ pub struct EngineStats {
 /// harvest (answer pulling + TTL eviction). Worker utilization compares
 /// the summed per-session step time (`busy_ns`) against what the engaged
 /// workers *could* have done during the sweep wall time (`capacity_ns`),
-/// so the static-`chunks_mut` tail idleness is a measured number instead
-/// of folklore. `step_ns` aggregates per-session step times from
-/// per-worker thread-local histograms merged at round end — profiling
-/// adds no shared mutable state to the sweep.
+/// so fan-out tail idleness is a measured number instead of folklore —
+/// the skewed-workload drop from [`SweepMode::Static`] to
+/// [`SweepMode::Stealing`] shows up directly in
+/// `engine.profile.worker_idle_frac`. `step_ns` aggregates per-session
+/// step times from per-worker thread-local histograms merged at round
+/// end — profiling adds no shared mutable state to the sweep.
 #[derive(Clone, Debug, Default)]
 pub struct RoundProfile {
     /// Rounds that contributed to this profile.
@@ -393,8 +457,10 @@ impl RoundProfile {
         }
     }
 
-    /// Fraction of bought worker time spent idle — for the static chunk
-    /// split this is the measured tail-idleness of the sweep fan-out.
+    /// Fraction of bought worker time spent idle — the measured
+    /// tail-idleness of the sweep fan-out (the number the work-stealing
+    /// sweep exists to drive down on skewed rounds; compare
+    /// [`SweepMode`] variants on the same workload to see the gap).
     pub fn idle_frac(&self) -> f64 {
         if self.capacity_ns == 0 {
             0.0
@@ -715,6 +781,12 @@ pub struct Engine {
     /// `None` keeps the unprofiled hot path free of even a branch-y
     /// accumulation.
     profile: Option<Box<RoundProfile>>,
+    /// Persistent sweep workers for [`SweepMode::Stealing`]: spawned
+    /// lazily on the first multi-session parallel round, then parked on
+    /// a condvar between rounds and reused until the engine drops
+    /// (`stats.pool_reuse` counts the reuses). `None` until then, so
+    /// single-worker engines never pay for a pool.
+    pool: Option<SweepPool>,
     next_anon: OpKey,
 }
 
@@ -733,6 +805,7 @@ impl Engine {
             open: 0,
             stats: EngineStats::default(),
             profile: cfg.profile.then(|| Box::new(RoundProfile::default())),
+            pool: None,
             next_anon: ANON_KEY_BASE,
         })
     }
@@ -782,6 +855,9 @@ impl Engine {
         reg.set_counter("engine.admission.parked", st.parks as u64);
         reg.set_counter("engine.admission.shed", st.shed as u64);
         reg.set_counter("engine.admission.compactions", st.compactions as u64);
+        reg.set_counter("engine.profile.steal_count", st.steals as u64);
+        reg.set_counter("engine.profile.pool_reuse", st.pool_reuse as u64);
+        reg.set_gauge("engine.profile.kernel_lane_width", crate::sparse::PANEL_PAD as f64);
         if let Some(p) = self.profile.as_deref() {
             reg.set_counter("engine.profile.rounds", p.rounds as u64);
             reg.set_counter("engine.profile.schedule_ns", p.schedule_ns);
@@ -1250,10 +1326,11 @@ impl Engine {
             self.harvest();
             return false;
         }
-        let workers = self.cfg.workers;
-        if workers > 1 && live > 1 {
-            sweep_parallel(&mut self.slots, workers);
+        if self.cfg.workers > 1 && live > 1 {
+            self.sweep_fanout(live, false);
         } else {
+            // single worker or a single live session: step inline on the
+            // driving thread — no scope, no spawn, no pool
             for s in &mut self.slots {
                 if s.live {
                     s.step();
@@ -1263,6 +1340,35 @@ impl Engine {
         self.stats.rounds += 1;
         self.harvest();
         true
+    }
+
+    /// Fan one multi-session round out over the sweep workers in the
+    /// configured [`SweepMode`], merge the per-worker accounting into
+    /// the engine stats, and rethrow any worker panic on the driving
+    /// thread with the panicking slot's [`OpKey`] attached. Returns
+    /// `(step histogram, Σ busy ns, engaged workers)`; the histogram and
+    /// busy time are empty/zero when `profiled` is false. `engaged` is
+    /// `min(workers, live)` — workers beyond the live-session count can
+    /// never hold work, so they don't inflate the capacity the busy
+    /// fraction is measured against.
+    fn sweep_fanout(&mut self, live: usize, profiled: bool) -> (Histogram, u64, usize) {
+        let engaged = self.cfg.workers.min(live).max(1);
+        let outcome = match self.cfg.sweep {
+            SweepMode::Static => sweep_static(&mut self.slots, self.cfg.workers, profiled),
+            SweepMode::Stealing => {
+                let helpers = self.cfg.workers - 1;
+                let Engine { pool, slots, stats, .. } = self;
+                if pool.is_some() {
+                    stats.pool_reuse += 1;
+                }
+                pool.get_or_insert_with(|| SweepPool::new(helpers)).sweep(slots, engaged, profiled)
+            }
+        };
+        self.stats.steals += outcome.steals;
+        if let Some((key, payload)) = outcome.panic {
+            rethrow_with_slot(key, payload);
+        }
+        (outcome.steps, outcome.busy_ns, engaged)
     }
 
     /// [`Engine::step_round`] with phase timing and worker accounting.
@@ -1294,7 +1400,7 @@ impl Engine {
         let workers = self.cfg.workers;
         let t_sweep = Instant::now();
         let (steps, busy_ns, engaged) = if workers > 1 && live > 1 {
-            sweep_parallel_profiled(&mut self.slots, workers)
+            self.sweep_fanout(live, true)
         } else {
             let mut h = Histogram::new();
             let mut busy = 0u64;
@@ -1377,66 +1483,311 @@ fn drain_retire_log(slot: &mut OpSlot, stats: &mut EngineStats) {
     slot.last_retired = events.len();
 }
 
-/// The hand-rolled parallel panel sweep: fan the live sessions out over
-/// scoped worker threads in disjoint `chunks_mut` slices — no locks, no
-/// work queue, and exactly one session step per live session per round,
-/// so the result is bit-identical to the sequential loop at any worker
-/// count. Engine bookkeeping (scheduling, harvest, eviction) stays on
-/// the driving thread between rounds.
-fn sweep_parallel(slots: &mut [OpSlot], workers: usize) {
-    let w = workers.min(slots.len()).max(1);
-    let chunk = slots.len().div_ceil(w);
-    std::thread::scope(|scope| {
-        for part in slots.chunks_mut(chunk) {
-            scope.spawn(move || {
-                for slot in part {
-                    if slot.live {
-                        slot.step();
-                    }
-                }
-            });
-        }
-    });
+// ---------------------------------------------------------------------------
+// Parallel sweep fan-out (work-stealing pool + static baseline)
+// ---------------------------------------------------------------------------
+
+/// One worker's thread-local accounting for one sweep fan-out. Workers
+/// never share mutable state during the sweep — each fills its own
+/// report, and the driver merges them after every claimant is done.
+struct SweepReport {
+    steps: Histogram,
+    busy_ns: u64,
+    steals: usize,
+    /// The first caught step panic: the slot's key plus the payload,
+    /// rethrown with context by the driving thread.
+    panic: Option<(OpKey, Box<dyn Any + Send>)>,
 }
 
-/// [`sweep_parallel`] with per-worker accounting: each worker records its
-/// own step-time histogram and busy nanoseconds thread-locally (no shared
-/// mutable state touches the sweep), merged on the driving thread after
-/// the scope joins. Returns `(step histogram, Σ busy ns, engaged
-/// workers)` — engaged × sweep-wall-time is the capacity the busy
-/// fraction is measured against.
-fn sweep_parallel_profiled(slots: &mut [OpSlot], workers: usize) -> (Histogram, u64, usize) {
-    let w = workers.min(slots.len()).max(1);
-    let chunk = slots.len().div_ceil(w);
-    let mut steps = Histogram::new();
-    let mut busy_ns = 0u64;
-    let mut engaged = 0usize;
-    std::thread::scope(|scope| {
-        let mut handles = Vec::new();
-        for part in slots.chunks_mut(chunk) {
-            handles.push(scope.spawn(move || {
-                let mut h = Histogram::new();
-                let mut busy = 0u64;
-                for slot in part {
-                    if slot.live {
-                        let t = Instant::now();
-                        slot.step();
-                        let ns = t.elapsed().as_nanos() as u64;
-                        h.record(ns as f64);
-                        busy += ns;
+impl SweepReport {
+    fn new() -> Self {
+        SweepReport { steps: Histogram::new(), busy_ns: 0, steals: 0, panic: None }
+    }
+}
+
+/// Merged result of one fanned-out sweep.
+struct SweepOutcome {
+    steps: Histogram,
+    busy_ns: u64,
+    steals: usize,
+    panic: Option<(OpKey, Box<dyn Any + Send>)>,
+}
+
+fn merge_reports(reports: Vec<SweepReport>) -> SweepOutcome {
+    let mut out = SweepOutcome { steps: Histogram::new(), busy_ns: 0, steals: 0, panic: None };
+    for rep in reports {
+        out.steps.merge(&rep.steps);
+        out.busy_ns += rep.busy_ns;
+        out.steals += rep.steals;
+        if out.panic.is_none() {
+            out.panic = rep.panic;
+        }
+    }
+    out
+}
+
+/// Rethrow a caught sweep-worker panic on the driving thread with the
+/// operator key attached, so a panicking kernel names its session
+/// instead of surfacing as an opaque cross-thread unwrap.
+fn rethrow_with_slot(key: OpKey, payload: Box<dyn Any + Send>) -> ! {
+    let msg = if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    };
+    resume_unwind(Box::new(format!(
+        "engine sweep worker panicked stepping the session for operator key {key}: {msg}"
+    )));
+}
+
+/// Step one live slot under `catch_unwind`, recording the step time into
+/// `rep` when `profiled`. Returns `false` when the step panicked (the
+/// payload is recorded in `rep.panic` with the slot's key) — the caller
+/// stops taking work so the driver can rethrow promptly.
+fn step_slot_caught(slot: &mut OpSlot, profiled: bool, rep: &mut SweepReport) -> bool {
+    let res = if profiled {
+        let t = Instant::now();
+        let r = catch_unwind(AssertUnwindSafe(|| slot.step()));
+        let ns = t.elapsed().as_nanos() as u64;
+        rep.steps.record(ns as f64);
+        rep.busy_ns += ns;
+        r
+    } else {
+        catch_unwind(AssertUnwindSafe(|| slot.step()))
+    };
+    match res {
+        Ok(()) => true,
+        Err(payload) => {
+            rep.panic = Some((slot.key, payload));
+            false
+        }
+    }
+}
+
+/// One round's work-stealing sweep job: a raw view of the engine's slot
+/// table plus the shared claim cursor the workers race down. `chunk` is
+/// the fair static share used only for steal *accounting* (a claim at
+/// index `i` with `i / chunk != wid` is work a static split would have
+/// assigned elsewhere).
+struct SweepJob {
+    slots: *mut OpSlot,
+    len: usize,
+    cursor: AtomicUsize,
+    chunk: usize,
+    profiled: bool,
+    /// Helper reports, pushed as each helper finishes its claims.
+    reports: Mutex<Vec<SweepReport>>,
+    /// Helpers that have not yet finished claiming this job.
+    pending: AtomicUsize,
+}
+
+// SAFETY: the only aliasing hazard is `slots`. The cursor's fetch_add
+// hands out each index at most once, so at any moment each `OpSlot` has
+// at most one `&mut` across all workers; the driver participates in the
+// sweep and then blocks until `pending` hits zero before returning, so
+// the raw pointer never outlives the `&mut [OpSlot]` borrow it was made
+// from. Everything else in the job is `Sync` by construction
+// (atomics + mutex).
+unsafe impl Send for SweepJob {}
+unsafe impl Sync for SweepJob {}
+
+/// Claim-and-step loop shared by the driver (worker 0) and every pool
+/// helper: race the job cursor down the slot list, stepping each claimed
+/// live slot exactly once. Steps are bit-identical to the sequential
+/// loop regardless of claim interleaving because sessions are
+/// independent state machines — the cursor only decides *which thread*
+/// runs a given session, never the order of one session's panel math.
+fn sweep_claims(job: &SweepJob, wid: usize) -> SweepReport {
+    let mut rep = SweepReport::new();
+    loop {
+        let i = job.cursor.fetch_add(1, Ordering::Relaxed);
+        if i >= job.len {
+            break;
+        }
+        // SAFETY: the cursor hands out `i` exactly once, so this is the
+        // only live `&mut` to slot `i` (see the Send/Sync note above).
+        let slot = unsafe { &mut *job.slots.add(i) };
+        if !slot.live {
+            continue;
+        }
+        if i / job.chunk != wid {
+            rep.steals += 1;
+        }
+        if !step_slot_caught(slot, job.profiled, &mut rep) {
+            break;
+        }
+    }
+    rep
+}
+
+/// Body of one persistent pool helper: park on the condvar until a new
+/// job epoch (or shutdown), run the claim loop, report, and notify the
+/// driver when the last helper finishes.
+fn sweep_worker(sh: Arc<PoolShared>, wid: usize) {
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut st = lock_tolerant(&sh.state);
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch > seen {
+                    if let Some(job) = &st.job {
+                        seen = st.epoch;
+                        break Arc::clone(job);
                     }
                 }
-                (h, busy)
+                st = sh.go.wait(st).unwrap_or_else(|e| e.into_inner());
+            }
+        };
+        let rep = sweep_claims(&job, wid);
+        lock_tolerant(&job.reports).push(rep);
+        if job.pending.fetch_sub(1, Ordering::AcqRel) == 1 {
+            // take the state lock around the notify so it cannot slip
+            // between the driver's pending check and its wait
+            let _guard = lock_tolerant(&sh.state);
+            sh.done.notify_all();
+        }
+    }
+}
+
+/// State shared between the driving thread and the pool helpers.
+struct PoolShared {
+    state: Mutex<PoolState>,
+    /// Helpers park here between rounds, woken by a new epoch/shutdown.
+    go: Condvar,
+    /// The driver parks here until the last helper finishes a job.
+    done: Condvar,
+}
+
+struct PoolState {
+    /// Monotone dispatch counter: a helper runs each epoch's job once.
+    epoch: u64,
+    job: Option<Arc<SweepJob>>,
+    shutdown: bool,
+}
+
+/// The persistent work-stealing sweep pool ([`SweepMode::Stealing`]):
+/// `workers - 1` parked helper threads spawned once and reused for every
+/// fan-out (the driving thread is always worker 0), replacing the
+/// per-round `thread::scope` spawn/join of the static split.
+struct SweepPool {
+    shared: Arc<PoolShared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl SweepPool {
+    fn new(helpers: usize) -> Self {
+        let shared = Arc::new(PoolShared {
+            state: Mutex::new(PoolState { epoch: 0, job: None, shutdown: false }),
+            go: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let handles = (0..helpers)
+            .map(|h| {
+                let sh = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("gql-sweep-{}", h + 1))
+                    .spawn(move || sweep_worker(sh, h + 1))
+                    .expect("spawn sweep worker")
+            })
+            .collect();
+        SweepPool { shared, handles }
+    }
+
+    /// Run one work-stealing sweep over `slots`. Publishes the job to
+    /// the parked helpers, claims alongside them as worker 0, then
+    /// blocks until every helper has finished — so the raw slot pointer
+    /// inside the job never outlives this call's `&mut` borrow.
+    fn sweep(&self, slots: &mut [OpSlot], engaged: usize, profiled: bool) -> SweepOutcome {
+        let job = Arc::new(SweepJob {
+            slots: slots.as_mut_ptr(),
+            len: slots.len(),
+            cursor: AtomicUsize::new(0),
+            chunk: slots.len().div_ceil(engaged.max(1)),
+            profiled,
+            reports: Mutex::new(Vec::with_capacity(self.handles.len() + 1)),
+            pending: AtomicUsize::new(self.handles.len()),
+        });
+        {
+            let mut st = lock_tolerant(&self.shared.state);
+            st.epoch += 1;
+            st.job = Some(Arc::clone(&job));
+        }
+        self.shared.go.notify_all();
+        let mine = sweep_claims(&job, 0);
+        {
+            let mut st = lock_tolerant(&self.shared.state);
+            while job.pending.load(Ordering::Acquire) > 0 {
+                st = self.shared.done.wait(st).unwrap_or_else(|e| e.into_inner());
+            }
+            st.job = None;
+        }
+        let mut reports = std::mem::take(&mut *lock_tolerant(&job.reports));
+        reports.push(mine);
+        merge_reports(reports)
+    }
+}
+
+impl Drop for SweepPool {
+    fn drop(&mut self) {
+        {
+            let mut st = lock_tolerant(&self.shared.state);
+            st.shutdown = true;
+        }
+        self.shared.go.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// The PR-5 static fan-out ([`SweepMode::Static`]): disjoint
+/// `chunks_mut` slices under per-round scoped threads. Kept as the
+/// baseline the stealing sweep is benchmarked against. A single
+/// effective worker steps inline on the driving thread — no scope, no
+/// spawn. Worker panics are caught per step and surface in the returned
+/// outcome (the driver rethrows them with slot context) instead of
+/// poisoning the engine through a bare cross-thread `unwrap`.
+fn sweep_static(slots: &mut [OpSlot], workers: usize, profiled: bool) -> SweepOutcome {
+    let w = workers.min(slots.len()).max(1);
+    if w <= 1 {
+        let mut rep = SweepReport::new();
+        for slot in slots {
+            if slot.live && !step_slot_caught(slot, profiled, &mut rep) {
+                break;
+            }
+        }
+        return merge_reports(vec![rep]);
+    }
+    let chunk = slots.len().div_ceil(w);
+    let mut reports: Vec<SweepReport> = Vec::with_capacity(w);
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(w);
+        for part in slots.chunks_mut(chunk) {
+            handles.push(scope.spawn(move || {
+                let mut rep = SweepReport::new();
+                for slot in part {
+                    if slot.live && !step_slot_caught(slot, profiled, &mut rep) {
+                        break;
+                    }
+                }
+                rep
             }));
         }
-        engaged = handles.len();
         for handle in handles {
-            let (h, busy) = handle.join().unwrap();
-            steps.merge(&h);
-            busy_ns += busy;
+            match handle.join() {
+                Ok(rep) => reports.push(rep),
+                // unreachable in practice (every step is caught), but a
+                // panic in the accounting itself still propagates
+                Err(payload) => resume_unwind(payload),
+            }
         }
     });
-    (steps, busy_ns, engaged)
+    merge_reports(reports)
 }
 
 // ---------------------------------------------------------------------------
@@ -2095,8 +2446,120 @@ mod tests {
             "engine.profile.harvest_ns",
             "engine.profile.worker_busy_frac",
             "engine.profile.worker_idle_frac",
+            "engine.profile.steal_count",
+            "engine.profile.pool_reuse",
+            "engine.profile.kernel_lane_width",
         ] {
             assert!(snap.get(name).is_some(), "missing exported metric {name}");
+        }
+        match snap.get("engine.profile.kernel_lane_width") {
+            Some(crate::metrics::MetricValue::Gauge(v)) => {
+                assert_eq!(*v, crate::sparse::PANEL_PAD as f64, "gauge reports PANEL_PAD");
+            }
+            other => panic!("kernel_lane_width gauge missing or mistyped: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn sweep_modes_agree_and_the_stealing_pool_is_reused() {
+        let mut rng = Rng::new(0xE9617);
+        let ops: Vec<_> = (0..6)
+            .map(|_| {
+                let (a, w) = random_sparse_spd(&mut rng, 12 + rng.below(24), 0.3, 0.05);
+                (Arc::new(a), w)
+            })
+            .collect();
+        let queries: Vec<Vec<f64>> = ops
+            .iter()
+            .map(|(a, _)| (0..a.n).map(|_| rng.normal()).collect())
+            .collect();
+        let run = |mode: SweepMode| {
+            let cfg = EngineConfig::default().with_workers(4).with_sweep_mode(mode);
+            let mut eng = Engine::new(cfg).unwrap();
+            let tickets: Vec<Ticket> = ops
+                .iter()
+                .zip(&queries)
+                .enumerate()
+                .map(|(k, ((a, w), u))| {
+                    eng.submit(
+                        k as OpKey,
+                        a.clone(),
+                        GqlOptions::new(w.lo, w.hi),
+                        Query::Estimate { u: u.clone(), stop: StopRule::Exhaust },
+                    )
+                })
+                .collect();
+            eng.drain();
+            let bits: Vec<u64> = tickets
+                .iter()
+                .map(|&t| match eng.answer(t).unwrap() {
+                    Answer::Estimate { bounds, .. } => bounds.gauss.to_bits(),
+                    other => panic!("wrong answer kind {other:?}"),
+                })
+                .collect();
+            (bits, eng.stats())
+        };
+        let (stealing, st) = run(SweepMode::Stealing);
+        let (static_, ss) = run(SweepMode::Static);
+        assert_eq!(stealing, static_, "sweep mode changed a result");
+        // six Exhaust sessions run many multi-live rounds: every round
+        // after the first reuses the warm pool instead of respawning
+        assert!(st.pool_reuse >= 1, "pool never reused: {}", st.pool_reuse);
+        assert_eq!(ss.pool_reuse, 0, "static mode must not touch the pool");
+        assert_eq!(ss.steals, 0, "static mode cannot steal");
+    }
+
+    /// A deliberately panicking operator: the engine's sweep must carry
+    /// the panic back to the driving thread tagged with the slot's key.
+    struct PanicOp {
+        n: usize,
+    }
+
+    impl SymOp for PanicOp {
+        fn dim(&self) -> usize {
+            self.n
+        }
+        fn matvec(&self, _x: &[f64], _y: &mut [f64]) {
+            panic!("synthetic kernel failure");
+        }
+        fn diagonal(&self) -> Vec<f64> {
+            vec![2.0; self.n]
+        }
+    }
+
+    #[test]
+    fn sweep_worker_panics_carry_slot_context() {
+        for mode in [SweepMode::Stealing, SweepMode::Static] {
+            let mut rng = Rng::new(0xE9618);
+            let (a, w) = random_sparse_spd(&mut rng, 16, 0.3, 0.05);
+            let healthy = Arc::new(a);
+            let u = randvec(&mut rng, 16);
+            let cfg = EngineConfig::default().with_workers(2).with_sweep_mode(mode);
+            let mut eng = Engine::new(cfg).unwrap();
+            eng.submit(
+                1,
+                healthy,
+                GqlOptions::new(w.lo, w.hi),
+                Query::Estimate { u, stop: StopRule::Exhaust },
+            );
+            eng.submit(
+                9,
+                Arc::new(PanicOp { n: 12 }),
+                GqlOptions::new(0.5, 4.0),
+                Query::Estimate { u: vec![1.0; 12], stop: StopRule::Exhaust },
+            );
+            let err = catch_unwind(AssertUnwindSafe(|| {
+                eng.step_round();
+            }))
+            .expect_err("a panicking operator must fail the round");
+            let msg = err
+                .downcast_ref::<String>()
+                .expect("rethrown payload is the formatted context string");
+            assert!(msg.contains("operator key 9"), "missing slot context: {msg}");
+            assert!(
+                msg.contains("synthetic kernel failure"),
+                "missing original payload: {msg}"
+            );
         }
     }
 

@@ -29,7 +29,7 @@ pub use block::{
 pub use cg::{cg_solve, CgResult};
 pub use engine::{
     race_dg_joint, DgSideSpec, Engine, EngineConfig, EngineConfigError, EngineStats, OpKey,
-    OpStore, RoundProfile, SubmitError, Ticket, TicketError,
+    OpStore, RoundProfile, SubmitError, SweepMode, Ticket, TicketError,
 };
 pub use gql::{bif_bounds, Bounds, Gql, GqlOptions, Reorth};
 pub use judge::{

@@ -12,15 +12,63 @@ pub mod submatrix;
 
 pub use csr::{Csr, CsrBuilder};
 
+/// The unified SIMD lane width of the panel kernels: strides padded to a
+/// multiple of this (see `quadrature::block`'s `pad_stride`) let every
+/// per-nonzero inner loop run over full fixed-width chunks of `f64`
+/// lanes — eight per chunk, one AVX-512 register or two AVX2/NEON
+/// registers, the width the shared `axpy_lanes` helper and the
+/// register-tiled [`Csr`] `matvec_multi` accumulators are written
+/// against.
+///
+/// **Contract for kernel authors:** a panel kernel may assume nothing
+/// about alignment, but when the caller pads lane strides to a multiple
+/// of `PANEL_PAD` (pad columns all-zero, carrying no lane) the chunked
+/// fast path covers the whole row. Chunking must never reorder a lane's
+/// accumulation: each lane sums its nonzeros in caller order,
+/// independently — the bit-identity contract every block/engine property
+/// test pins.
+pub const PANEL_PAD: usize = 8;
+
 /// The shared per-nonzero panel update `yrow += v * xrow`, one entry per
-/// lane: fixed-width 4-lane chunks (vectorizable when the caller pads the
-/// panel stride to a multiple of 4, as `BlockGql` does) plus a scalar
-/// remainder. Each lane accumulates independently and in caller order, so
-/// using this helper cannot perturb the engines' per-lane bit-identity
-/// contract — both specialized `matvec_multi` kernels call it, keeping
-/// the accumulation pattern defined in exactly one place.
+/// lane: fixed-width 8-lane chunks ([`PANEL_PAD`] — vectorizable when
+/// the caller pads the panel stride, as `BlockGql` does), then one
+/// 4-lane half-chunk (narrow compare/threshold panels), then a scalar
+/// remainder. Each lane accumulates independently and in caller order,
+/// so using this helper cannot perturb the engines' per-lane
+/// bit-identity contract — the specialized `matvec_multi` kernels call
+/// it, keeping the accumulation pattern defined in exactly one place.
 #[inline]
 pub(crate) fn axpy_lanes(v: f64, xrow: &[f64], yrow: &mut [f64]) {
+    debug_assert_eq!(xrow.len(), yrow.len());
+    let mut yc = yrow.chunks_exact_mut(PANEL_PAD);
+    let mut xc = xrow.chunks_exact(PANEL_PAD);
+    for (y8, x8) in yc.by_ref().zip(xc.by_ref()) {
+        for (yl, &xl) in y8.iter_mut().zip(x8) {
+            *yl += v * xl;
+        }
+    }
+    let yr = yc.into_remainder();
+    let xr = xc.remainder();
+    let mut yh = yr.chunks_exact_mut(4);
+    let mut xh = xr.chunks_exact(4);
+    for (y4, x4) in yh.by_ref().zip(xh.by_ref()) {
+        for (yl, &xl) in y4.iter_mut().zip(x4) {
+            *yl += v * xl;
+        }
+    }
+    for (yl, &xl) in yh.into_remainder().iter_mut().zip(xh.remainder()) {
+        *yl += v * xl;
+    }
+}
+
+/// The PR-3 fixed-width 4-lane reference kernel, kept public (but hidden
+/// from docs) so the kernel benches can measure the widened
+/// `axpy_lanes` against the exact code it replaced and the tests can
+/// assert the two stay bit-identical (both sum per lane in caller
+/// order, so chunk width cannot change a result bit).
+#[doc(hidden)]
+#[inline]
+pub fn axpy_lanes_ref4(v: f64, xrow: &[f64], yrow: &mut [f64]) {
     debug_assert_eq!(xrow.len(), yrow.len());
     let mut yc = yrow.chunks_exact_mut(4);
     let mut xc = xrow.chunks_exact(4);

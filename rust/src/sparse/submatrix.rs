@@ -88,7 +88,9 @@ impl SubmatrixView {
         row_ptr.push(0usize);
         let mut col_idx = Vec::new();
         let mut values = Vec::new();
+        let mut cols_sorted = true;
         for &gi in &self.idx {
+            let row_start = col_idx.len();
             for (gj, v) in self.parent.row(gi) {
                 let lj = self.pos[gj];
                 if lj != usize::MAX {
@@ -96,9 +98,15 @@ impl SubmatrixView {
                     values.push(v);
                 }
             }
+            // the parent's columns are ascending, but the view's local
+            // relabeling need not be monotone unless idx is sorted
+            // (SubmatrixView::new_sorted); record what we actually built
+            // so Csr::matvec_multi only takes its cursor-based blocked
+            // path when it is valid
+            cols_sorted = cols_sorted && col_idx[row_start..].windows(2).all(|w| w[0] <= w[1]);
             row_ptr.push(col_idx.len());
         }
-        Csr { n: k, row_ptr, col_idx, values }
+        Csr { n: k, row_ptr, col_idx, values, cols_sorted }
     }
 
     /// The kernel column `parent[idx, v]` in local ordering — the `u`
@@ -152,8 +160,9 @@ impl SymOp for SubmatrixView {
     /// once per sweep regardless of the lane count (the block-DPP hot
     /// path: scoring many candidates against one working set `Y`). Lane
     /// accumulation order matches the scalar [`SymOp::matvec`] exactly;
-    /// the inner loop runs over fixed-width 4-lane chunks so padded
-    /// panel strides vectorize (see [`Csr::matvec_multi`]).
+    /// the inner loop runs over fixed-width
+    /// [`PANEL_PAD`](super::PANEL_PAD)-lane chunks so padded panel
+    /// strides vectorize (see `Csr`'s `matvec_multi`).
     fn matvec_multi(&self, x: &[f64], y: &mut [f64], b: usize) {
         let k = self.idx.len();
         debug_assert_eq!(x.len(), k * b);

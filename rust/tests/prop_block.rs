@@ -7,8 +7,9 @@
 use gauss_bif::datasets::{random_sparse_spd, random_spd_exact};
 use gauss_bif::quadrature::block::{run_scalar, BlockGql, StopRule};
 use gauss_bif::quadrature::{judge_threshold, Gql, GqlOptions};
-use gauss_bif::sparse::SymOp;
+use gauss_bif::sparse::{SubmatrixView, SymOp};
 use gauss_bif::util::prop::{assert_close, forall};
+use std::sync::Arc;
 
 #[test]
 fn width_one_reproduces_scalar_gql_sequences_sparse() {
@@ -146,6 +147,62 @@ fn mixed_convergence_with_queue_refill_matches_scalar_references() {
             iters_seen.len() > 1,
             "test should exercise lanes exiting at different iterations"
         );
+    });
+}
+
+#[test]
+fn panel_widths_one_through_nine_are_bit_identical_to_scalar_lanes() {
+    // ISSUE 8: the widened panel kernels (8-lane chunks + 4-lane
+    // half-chunk + scalar tail) must not move a bit for any remainder
+    // width 1..=9 — covering the full chunk (8), the half-chunk path
+    // (widths 2..=4 and remainders 4..=7), every scalar tail, and one
+    // width past the chunk boundary (9). Checked against per-lane scalar
+    // matvecs and against the retired fixed-4 reference kernel, on both
+    // the CSR spmm and the submatrix-view scatter path (`axpy_lanes`).
+    forall(8, 0xB10C06, |rng| {
+        let n = 8 + rng.below(48);
+        let (a, _w) = random_sparse_spd(rng, n, 0.25, 0.05);
+        for b in 1..=9usize {
+            let x: Vec<f64> = (0..n * b).map(|_| rng.normal()).collect();
+            let mut y = vec![0.0; n * b];
+            a.matvec_multi(&x, &mut y, b);
+            let mut y4 = vec![0.0; n * b];
+            a.matvec_multi_ref4(&x, &mut y4, b);
+            let mut xs = vec![0.0; n];
+            let mut ys = vec![0.0; n];
+            for l in 0..b {
+                for i in 0..n {
+                    xs[i] = x[i * b + l];
+                }
+                a.matvec(&xs, &mut ys);
+                for i in 0..n {
+                    let want = ys[i].to_bits();
+                    assert_eq!(y[i * b + l].to_bits(), want, "csr b={b} lane {l} row {i}");
+                    assert_eq!(y4[i * b + l].to_bits(), want, "ref4 b={b} lane {l} row {i}");
+                }
+            }
+        }
+        // the submatrix view drives axpy_lanes through the parent-row
+        // scatter; a full-size sorted view visits every parent nonzero
+        let parent = Arc::new(a);
+        let idx: Vec<usize> = (0..n).collect();
+        let view = SubmatrixView::new_sorted(&parent, &idx);
+        for b in 1..=9usize {
+            let x: Vec<f64> = (0..n * b).map(|_| rng.normal()).collect();
+            let mut y = vec![0.0; n * b];
+            view.matvec_multi(&x, &mut y, b);
+            let mut xs = vec![0.0; n];
+            let mut ys = vec![0.0; n];
+            for l in 0..b {
+                for i in 0..n {
+                    xs[i] = x[i * b + l];
+                }
+                view.matvec(&xs, &mut ys);
+                for i in 0..n {
+                    assert_eq!(y[i * b + l].to_bits(), ys[i].to_bits(), "view b={b} lane {l}");
+                }
+            }
+        }
     });
 }
 

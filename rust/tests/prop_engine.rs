@@ -9,13 +9,16 @@
 //!   regime),
 //! * streaming submission landing mid-flight,
 //! * query-level suspend/resume under a global lane budget of 1,
-//! * parallel sweeps with ≥ 2 workers.
+//! * parallel sweeps with ≥ 2 workers, in both [`SweepMode`]s (the
+//!   ISSUE 8 work-stealing fan-out and the static chunk baseline),
+//!   profiled and unprofiled, across random worker counts, skewed
+//!   operator sizes, and mid-flight submissions.
 
 use gauss_bif::datasets::random_sparse_spd;
 use gauss_bif::metrics::{MetricValue, MetricsRegistry};
 use gauss_bif::quadrature::block::{run_scalar, StopRule};
 use gauss_bif::quadrature::engine::{
-    Engine, EngineConfig, OpKey, SubmitError, Ticket, TicketError,
+    Engine, EngineConfig, OpKey, SubmitError, SweepMode, Ticket, TicketError,
 };
 use gauss_bif::quadrature::query::{Answer, Query, QueryArm, Session};
 use gauss_bif::quadrature::race::RacePolicy;
@@ -347,6 +350,155 @@ fn parallel_workers_preserve_bit_identity_on_mixed_workloads() {
             );
         }
     });
+}
+
+#[test]
+fn sweep_modes_match_sequential_across_worker_counts_and_skewed_sizes() {
+    // ISSUE 8 tentpole identity: the index-claiming work-stealing sweep
+    // (plain and profiled) must answer bit-identically to sequential
+    // per-operator sessions at any worker count — including the skewed
+    // shape stealing exists to balance, one operator dwarfing the rest —
+    // and so must the static baseline it replaced as the default
+    forall(3, 0xE9EB, |rng| {
+        let mut ops = build_ops(rng, 3, 0.05);
+        // skew: one operator several times the panel dimension of the
+        // others, so its session's steps dominate every round
+        let n = 90 + rng.below(30);
+        let (l, w) = random_sparse_spd(rng, n, 0.1, 0.05);
+        ops.push((Arc::new(l), GqlOptions::new(w.lo, w.hi)));
+        let queries: Vec<Vec<Query>> = ops
+            .iter()
+            .map(|(l, opts)| mixed_queries(rng, l, *opts))
+            .collect();
+        let want = sequential_answers(&ops, &queries);
+        let workers = 2 + rng.below(7); // random 2..=8 per case
+        for (mode, tag) in [(SweepMode::Stealing, "stealing"), (SweepMode::Static, "static")] {
+            for profiled in [false, true] {
+                let ecfg = EngineConfig::default()
+                    .with_width(PER_OP_LANES)
+                    .with_workers(workers)
+                    .with_sweep_mode(mode)
+                    .with_profile(profiled);
+                check_identity(
+                    &want,
+                    &engine_answers(&ops, &queries, ecfg),
+                    &format!("{tag} w={workers} profiled={profiled}"),
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn work_stealing_handles_mid_flight_submissions_bit_identically() {
+    // streaming submission under the stealing fan-out: queries landing
+    // between rounds must not perturb a single step of the sessions
+    // already in flight, at any worker count, profiled or not
+    forall(4, 0xE9EC, |rng| {
+        let ops = build_ops(rng, 3, 0.05);
+        let queries: Vec<Vec<Query>> = ops
+            .iter()
+            .map(|(l, opts)| mixed_queries(rng, l, *opts))
+            .collect();
+        let split = 2usize;
+        let presteps = 3usize;
+        let want: Vec<Vec<Answer>> = ops
+            .iter()
+            .zip(&queries)
+            .map(|((l, opts), qs)| {
+                let mut s = Session::new(&**l, *opts, PER_OP_LANES, RacePolicy::Prune);
+                for q in &qs[..split] {
+                    s.submit(q.clone());
+                }
+                for _ in 0..presteps {
+                    s.step(&**l);
+                }
+                for q in &qs[split..] {
+                    s.submit(q.clone());
+                }
+                s.run(&**l)
+            })
+            .collect();
+
+        let workers = 2 + rng.below(7);
+        let profiled = rng.bool(0.5);
+        let ecfg = EngineConfig::default()
+            .with_width(PER_OP_LANES)
+            .with_workers(workers)
+            .with_sweep_mode(SweepMode::Stealing)
+            .with_profile(profiled);
+        let mut eng = Engine::new(ecfg).expect("test engine config is valid");
+        let mut tickets: Vec<Vec<Ticket>> = vec![Vec::new(); ops.len()];
+        for (k, qs) in queries.iter().enumerate() {
+            let (l, opts) = &ops[k];
+            for q in &qs[..split] {
+                tickets[k].push(eng.submit(k as OpKey, Arc::clone(l), *opts, q.clone()));
+            }
+        }
+        for _ in 0..presteps {
+            eng.step_round();
+        }
+        for (k, qs) in queries.iter().enumerate() {
+            let (l, opts) = &ops[k];
+            for q in &qs[split..] {
+                tickets[k].push(eng.submit(k as OpKey, Arc::clone(l), *opts, q.clone()));
+            }
+        }
+        eng.drain();
+        let got: Vec<Vec<Answer>> = tickets
+            .iter()
+            .map(|ts| {
+                ts.iter()
+                    .map(|&t| eng.answer(t).expect("engine drained").clone())
+                    .collect()
+            })
+            .collect();
+        check_identity(&want, &got, &format!("mid-flight w={workers} profiled={profiled}"));
+    });
+}
+
+#[test]
+fn skewed_profiled_round_reports_sane_worker_accounting() {
+    // the profiler's utilization numbers must stay internally consistent
+    // under the stealing sweep (busy ≤ capacity, fracs in [0,1]) and the
+    // steal counter must actually fire on a skewed multi-operator round
+    let mut rng = Rng::new(0xE9ED);
+    let mut ops = build_ops(&mut rng, 3, 0.05);
+    let (l, w) = random_sparse_spd(&mut rng, 110, 0.1, 0.05);
+    ops.push((Arc::new(l), GqlOptions::new(w.lo, w.hi)));
+    let queries: Vec<Vec<Query>> = ops
+        .iter()
+        .map(|(l, opts)| mixed_queries(&mut rng, l, *opts))
+        .collect();
+    let ecfg = EngineConfig::default()
+        .with_width(PER_OP_LANES)
+        .with_workers(4)
+        .with_profile(true);
+    let mut eng = Engine::new(ecfg).expect("test engine config is valid");
+    for (k, qs) in queries.iter().enumerate() {
+        let (l, opts) = &ops[k];
+        for q in qs {
+            eng.submit(k as OpKey, Arc::clone(l), *opts, q.clone());
+        }
+    }
+    eng.drain();
+    let p = eng.profile().expect("profiled engine collects a profile").clone();
+    assert!(p.busy_ns <= p.capacity_ns, "busy cannot exceed capacity");
+    assert!((0.0..=1.0).contains(&p.busy_frac()));
+    assert!((0.0..=1.0).contains(&p.idle_frac()));
+    let st = eng.stats();
+    assert!(st.pool_reuse >= 1, "multi-round stealing run reuses the pool");
+    let reg = MetricsRegistry::new();
+    eng.export_into(&reg);
+    let snap = reg.snapshot();
+    assert!(
+        matches!(snap.get("engine.profile.steal_count"), Some(MetricValue::Counter(_))),
+        "steal counter exported"
+    );
+    assert!(
+        matches!(snap.get("engine.profile.pool_reuse"), Some(MetricValue::Counter(c)) if *c >= 1),
+        "pool reuse exported"
+    );
 }
 
 #[test]
