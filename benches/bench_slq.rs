@@ -1,0 +1,130 @@
+//! Stochastic trace / logdet through the streaming engine (ISSUE 9):
+//! wall-clock of a full SLQ drain — every probe lane on one shared
+//! panel — at 1 and 4 sweep workers.
+//!
+//! Before timing anything, the harness asserts the stochastic contract
+//! end to end: the report is bit-identical across worker counts and
+//! both sweep modes (probes are seeded at submission, so scheduling
+//! must not leak into the answer), and on the smaller instance the
+//! dense-Cholesky oracle value lies inside the reported combined
+//! interval (4× guard band over the 95% t-interval).
+//!
+//! Run: `cargo bench --bench bench_slq`
+
+use gauss_bif::datasets::random_sparse_spd;
+use gauss_bif::linalg::Cholesky;
+use gauss_bif::quadrature::engine::{Engine, EngineConfig, SweepMode};
+use gauss_bif::quadrature::query::{Answer, Query};
+use gauss_bif::quadrature::stochastic::{SlqConfig, SpectralFn, StochasticReport};
+use gauss_bif::quadrature::GqlOptions;
+use gauss_bif::sparse::{Csr, SymOp};
+use gauss_bif::util::bench::{Bencher, Stats, Table};
+use gauss_bif::util::rng::Rng;
+use std::sync::Arc;
+
+const PROBES: usize = 16;
+const TOL: f64 = 1e-2;
+
+struct Instance {
+    a: Arc<Csr>,
+    opts: GqlOptions,
+    slq: SlqConfig,
+}
+
+fn build(n: usize, seed: u64) -> Instance {
+    let mut rng = Rng::new(seed);
+    let density = 5e-3_f64.max(8.0 / (n as f64 * n as f64));
+    let (a, w) = random_sparse_spd(&mut rng, n, density, 0.5);
+    Instance {
+        a: Arc::new(a),
+        opts: GqlOptions::new(w.lo, w.hi),
+        slq: SlqConfig::new(PROBES, seed ^ 0x51D, TOL),
+    }
+}
+
+fn query(inst: &Instance, kind: &str) -> Query {
+    match kind {
+        "trace_inv" => Query::Trace { f: SpectralFn::Inverse, cfg: inst.slq },
+        "logdet" => Query::LogDet { cfg: inst.slq },
+        other => panic!("unknown kind {other}"),
+    }
+}
+
+fn drain(inst: &Instance, q: &Query, workers: usize, mode: SweepMode) -> StochasticReport {
+    let cfg = EngineConfig::default().with_workers(workers).with_sweep_mode(mode);
+    let mut eng = Engine::new(cfg).expect("bench engine config is valid");
+    let t = eng.submit(1, Arc::clone(&inst.a) as Arc<dyn SymOp>, inst.opts, q.clone());
+    eng.drain();
+    eng.answer(t)
+        .and_then(Answer::stochastic)
+        .expect("stochastic queries answer stochastically")
+        .clone()
+}
+
+fn same(a: &StochasticReport, b: &StochasticReport) -> bool {
+    a.estimate.to_bits() == b.estimate.to_bits()
+        && a.combined.lo.to_bits() == b.combined.lo.to_bits()
+        && a.combined.hi.to_bits() == b.combined.hi.to_bits()
+}
+
+fn main() {
+    let mut b = Bencher::quick();
+    println!("stochastic trace/logdet drains: {PROBES} probes, tol {TOL:.0e}, 1 vs 4 workers\n");
+
+    // oracle check on an instance small enough to densify
+    let small = build(200, 0xB51);
+    let ch = Cholesky::factor(&small.a.to_dense()).expect("generator output is PD");
+    let exact_tr: f64 = (0..small.a.n)
+        .map(|i| {
+            let mut e = vec![0.0; small.a.n];
+            e[i] = 1.0;
+            ch.bif(&e)
+        })
+        .sum();
+    for (kind, exact) in [("trace_inv", exact_tr), ("logdet", ch.logdet())] {
+        let r = drain(&small, &query(&small, kind), 1, SweepMode::Stealing);
+        let guard = 4.0 * (r.combined.width() / 2.0) + 1e-9 * (1.0 + exact.abs());
+        assert!(
+            (exact - r.combined.mid()).abs() <= guard,
+            "{kind}: exact {exact} outside guarded interval [{}, {}]",
+            r.combined.lo,
+            r.combined.hi
+        );
+    }
+
+    let mut table = Table::new(&["n", "kind", "w=1", "w=4"]);
+    for &n in &[400usize, 800] {
+        let inst = build(n, 0xB51 ^ n as u64);
+        for kind in ["trace_inv", "logdet"] {
+            let q = query(&inst, kind);
+            // scheduling must not leak into a pinned-seed answer
+            let want = drain(&inst, &q, 1, SweepMode::Stealing);
+            for workers in [2usize, 4] {
+                for mode in [SweepMode::Stealing, SweepMode::Static] {
+                    assert!(
+                        same(&want, &drain(&inst, &q, workers, mode)),
+                        "n={n} {kind}: answer changed at {workers} workers ({mode:?})"
+                    );
+                }
+            }
+            let w1 = b.bench(&format!("n={n} {kind} w=1"), || {
+                drain(&inst, &q, 1, SweepMode::Stealing)
+            });
+            let w4 = b.bench(&format!("n={n} {kind} w=4"), || {
+                drain(&inst, &q, 4, SweepMode::Stealing)
+            });
+            table.row(vec![
+                n.to_string(),
+                kind.into(),
+                Stats::fmt_time(w1.median_ns),
+                Stats::fmt_time(w4.median_ns),
+            ]);
+        }
+    }
+    println!("\n{}", table.render());
+
+    match b.write_json("slq") {
+        Ok(p) => println!("perf trajectory: {}", p.display()),
+        Err(e) => eprintln!("BENCH_slq.json not written: {e}"),
+    }
+}

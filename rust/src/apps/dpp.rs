@@ -27,6 +27,7 @@ use crate::quadrature::block::StopRule;
 use crate::quadrature::engine::{Engine, EngineConfig, EngineConfigError, Ticket};
 use crate::quadrature::query::{Answer, Query, QueryArm, Session};
 use crate::quadrature::race::RacePolicy;
+use crate::quadrature::stochastic::{Interval, SlqConfig, SlqConfigError, StochasticReport};
 use crate::quadrature::{judge_threshold, GqlOptions, Reorth};
 use crate::sparse::{Csr, SpectrumBounds, SubmatrixView};
 use crate::util::rng::Rng;
@@ -508,6 +509,61 @@ pub fn greedy_map_multi(
     Ok((ys, rounds_total))
 }
 
+/// DPP log-likelihood of a subset, with the normalization constant
+/// estimated by stochastic Lanczos quadrature.
+#[derive(Clone, Debug)]
+pub struct DppLikelihood {
+    /// `logdet(L_Y)` — exact (dense Cholesky on the `|Y|×|Y|` submatrix;
+    /// `|Y| ≪ N` in every DPP workload here).
+    pub logdet_subset: f64,
+    /// The SLQ report for the normalizer `logdet(L + I)`.
+    pub normalizer: StochasticReport,
+    /// Point estimate `logdet(L_Y) − logdet(L + I)`.
+    pub log_likelihood: f64,
+    /// Interval on the log-likelihood induced by the normalizer's
+    /// combined interval (the subset term is exact).
+    pub interval: Interval,
+}
+
+/// `log P(Y) = logdet(L_Y) − logdet(L + I)` for a DPP with kernel `L`.
+///
+/// The subset determinant is exact; the `N`-dimensional normalizer — the
+/// term the "original algorithms" pay O(N³) for — goes through
+/// [`Query::LogDet`] on the shifted operator `L + I` (built without
+/// densifying via [`Csr::with_diag_shift`]; the spectrum window shifts by
+/// exactly `+1`). Rejects an invalid probe config with the same typed
+/// error the engine's admission path uses.
+pub fn dpp_log_likelihood(
+    l: &Arc<Csr>,
+    subset: &[usize],
+    window: SpectrumBounds,
+    slq: SlqConfig,
+) -> Result<DppLikelihood, SlqConfigError> {
+    slq.validate()?;
+    let logdet_subset = if subset.is_empty() {
+        0.0 // det of the empty matrix is 1
+    } else {
+        let sub = l.principal_submatrix(subset).to_dense();
+        Cholesky::factor(&sub).expect("subset kernel must be PD").logdet()
+    };
+    let shifted = l.with_diag_shift(1.0);
+    let opts = GqlOptions::new(window.lo + 1.0, window.hi + 1.0);
+    let width = slq.probes.clamp(1, 16);
+    let mut session = Session::new(&shifted, opts, width, RacePolicy::Prune);
+    let qid = session.submit(Query::LogDet { cfg: slq });
+    let answers = session.run(&shifted);
+    let normalizer = answers[qid]
+        .stochastic()
+        .expect("logdet queries answer stochastically")
+        .clone();
+    let log_likelihood = logdet_subset - normalizer.estimate;
+    let interval = Interval {
+        lo: logdet_subset - normalizer.combined.hi,
+        hi: logdet_subset - normalizer.combined.lo,
+    };
+    Ok(DppLikelihood { logdet_subset, normalizer, log_likelihood, interval })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -736,6 +792,43 @@ mod tests {
         }
         // unusable engine knobs are rejected with the typed error
         assert!(greedy_map_multi(&refs, &cfg, EngineConfig::default().with_lanes(0)).is_err());
+    }
+
+    #[test]
+    fn dpp_log_likelihood_brackets_the_exact_value() {
+        let mut rng = Rng::new(0xDA6);
+        let n = 26;
+        let (l, w) = setup(&mut rng, n, 0.2);
+        let subset: Vec<usize> = {
+            let mut s = rng.sample_indices(n, 6);
+            s.sort_unstable();
+            s
+        };
+        let slq = SlqConfig::new(12, 0xDA6_0001, 2e-2);
+        let got = dpp_log_likelihood(&l, &subset, w, slq).expect("valid config");
+        // exact reference: dense logdets
+        let exact_sub =
+            Cholesky::factor(&l.principal_submatrix(&subset).to_dense()).unwrap().logdet();
+        let exact_norm =
+            Cholesky::factor(&l.with_diag_shift(1.0).to_dense()).unwrap().logdet();
+        let exact = exact_sub - exact_norm;
+        assert!((got.logdet_subset - exact_sub).abs() < 1e-9, "subset term is exact");
+        let guard = 4.0 * (got.interval.width() / 2.0) + 1e-9;
+        assert!(
+            (exact - got.interval.mid()).abs() <= guard,
+            "exact {exact} vs interval [{}, {}]",
+            got.interval.lo,
+            got.interval.hi
+        );
+        assert!(got.interval.contains(got.log_likelihood));
+        // empty subset: the subset term vanishes exactly
+        let empty = dpp_log_likelihood(&l, &[], w, slq).unwrap();
+        assert_eq!(empty.logdet_subset, 0.0);
+        // typed rejection mirrors the engine's admission path
+        assert_eq!(
+            dpp_log_likelihood(&l, &subset, w, SlqConfig::new(0, 1, 1e-2)).unwrap_err(),
+            SlqConfigError::ZeroProbes
+        );
     }
 
     #[test]

@@ -1,6 +1,9 @@
 //! The paper's applications (§5): Markov-chain sampling from (k-)DPPs,
 //! the double-greedy algorithm for non-monotone submodular maximization
-//! of log-det, and BIF-based centrality ranking (§2).
+//! of log-det, BIF-based centrality ranking (§2), and the stochastic
+//! quadrature consumers — DPP log-likelihood ([`dpp_log_likelihood`])
+//! and GP marginal likelihood ([`gp_log_marginal`]) — whose logdet terms
+//! go through [`crate::quadrature::stochastic`].
 //!
 //! Every application ships in (at least) two variants driven by
 //! [`BifStrategy`]:
@@ -19,14 +22,16 @@
 pub mod centrality;
 pub mod double_greedy;
 pub mod dpp;
+pub mod gp;
 pub mod kdpp;
 
 pub use centrality::{rank_top_k_centrality, CentralityResult};
 pub use double_greedy::{double_greedy, DgConfig, DgResult};
 pub use dpp::{
-    greedy_map, greedy_map_multi, greedy_map_stats, DppConfig, DppSampler, DppStats,
-    GreedyConfig, GreedyStats,
+    dpp_log_likelihood, greedy_map, greedy_map_multi, greedy_map_stats, DppConfig,
+    DppLikelihood, DppSampler, DppStats, GreedyConfig, GreedyStats,
 };
+pub use gp::{gp_log_marginal, GpConfig, GpError, GpEvidence};
 pub use kdpp::{step_chains, KdppConfig, KdppSampler, KdppStats};
 
 /// How an application evaluates / compares its BIFs.

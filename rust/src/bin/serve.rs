@@ -19,9 +19,16 @@
 //! reporter, export the final `engine.*`/`serve.*` snapshot, and exit
 //! nonzero if any harvested bracket was invalid or any ticket was lost.
 //!
+//! A `--trace-frac` slice of the stream is stochastic (ISSUE 9):
+//! `Trace`/`LogDet` queries whose probe panels coalesce with the
+//! bilinear traffic on the same tenant key. Their answers — shed or
+//! fully run — must carry a valid combined interval, audited exactly
+//! like the estimate brackets.
+//!
 //! ```text
 //! serve [--seconds S] [--keys K] [--dim N] [--queue-cap C]
-//!       [--store-kb KB] [--burst B] [--seed X] [--telemetry FILE]
+//!       [--store-kb KB] [--burst B] [--trace-frac F] [--seed X]
+//!       [--telemetry FILE]
 //! ```
 //!
 //! `BENCH_QUICK=1` shrinks every default to CI-smoke scale.
@@ -31,6 +38,7 @@ use gauss_bif::metrics::export::write_json;
 use gauss_bif::metrics::MetricsRegistry;
 use gauss_bif::quadrature::engine::{Engine, EngineConfig, OpKey, SubmitError, Ticket};
 use gauss_bif::quadrature::query::{Answer, Query};
+use gauss_bif::quadrature::stochastic::{SlqConfig, SpectralFn, StochasticReport};
 use gauss_bif::quadrature::{GqlOptions, StopRule};
 use gauss_bif::sparse::SymOp;
 use gauss_bif::util::rng::Rng;
@@ -73,12 +81,15 @@ struct Opts {
     queue_cap: usize,
     store_kb: usize,
     burst: usize,
+    /// Fraction of the query stream that is stochastic (Trace/LogDet).
+    trace_frac: f64,
     seed: u64,
     telemetry: Option<PathBuf>,
 }
 
 const USAGE: &str = "usage: serve [--seconds S] [--keys K] [--dim N] [--queue-cap C]\n\
-                     \x20            [--store-kb KB] [--burst B] [--seed X] [--telemetry FILE]\n\
+                     \x20            [--store-kb KB] [--burst B] [--trace-frac F] [--seed X]\n\
+                     \x20            [--telemetry FILE]\n\
                      BENCH_QUICK=1 shrinks the defaults to CI-smoke scale";
 
 fn parse_opts() -> Result<Opts, String> {
@@ -91,6 +102,7 @@ fn parse_opts() -> Result<Opts, String> {
             queue_cap: 48,
             store_kb: 0, // filled below from keys × dim
             burst: 8,
+            trace_frac: 0.15,
             seed: 0x5EB1F,
             telemetry: None,
         }
@@ -102,6 +114,7 @@ fn parse_opts() -> Result<Opts, String> {
             queue_cap: 192,
             store_kb: 0,
             burst: 16,
+            trace_frac: 0.15,
             seed: 0x5EB1F,
             telemetry: None,
         }
@@ -116,6 +129,9 @@ fn parse_opts() -> Result<Opts, String> {
             "--queue-cap" => o.queue_cap = val("--queue-cap")?.parse().map_err(|e| format!("{e}"))?,
             "--store-kb" => o.store_kb = val("--store-kb")?.parse().map_err(|e| format!("{e}"))?,
             "--burst" => o.burst = val("--burst")?.parse().map_err(|e| format!("{e}"))?,
+            "--trace-frac" => {
+                o.trace_frac = val("--trace-frac")?.parse().map_err(|e| format!("{e}"))?
+            }
             "--seed" => o.seed = val("--seed")?.parse().map_err(|e| format!("{e}"))?,
             "--telemetry" => o.telemetry = Some(PathBuf::from(val("--telemetry")?)),
             "--help" | "-h" => return Err(USAGE.to_string()),
@@ -126,6 +142,9 @@ fn parse_opts() -> Result<Opts, String> {
     o.dim = o.dim.max(4);
     o.queue_cap = o.queue_cap.max(1);
     o.burst = o.burst.max(1);
+    if !(0.0..=1.0).contains(&o.trace_frac) {
+        return Err(format!("--trace-frac must lie in [0, 1] (got {})\n{USAGE}", o.trace_frac));
+    }
     if o.store_kb == 0 {
         // budget ~a quarter of the tenant population so the soak
         // actually exercises LRU eviction and warm re-admission
@@ -146,7 +165,18 @@ struct Tenant {
     lam_max: f64,
 }
 
-fn make_query(rng: &mut Rng, t: &Tenant) -> Query {
+fn make_query(rng: &mut Rng, t: &Tenant, trace_frac: f64) -> Query {
+    if rng.f64() < trace_frac {
+        // stochastic slice: few probes, loose tolerance — serving wants
+        // the anytime interval, not a tight estimate. A fresh seed per
+        // query keeps tenant panels decorrelated.
+        let cfg = SlqConfig::new(4, rng.next_u64(), 5e-2);
+        return if rng.bool(0.5) {
+            Query::Trace { f: SpectralFn::Inverse, cfg }
+        } else {
+            Query::LogDet { cfg }
+        };
+    }
     let u: Vec<f64> = (0..t.dim).map(|_| rng.normal()).collect();
     match rng.below(3) {
         0 => Query::Estimate { u, stop: StopRule::GapRel(1e-3) },
@@ -170,6 +200,19 @@ fn make_query(rng: &mut Rng, t: &Tenant) -> Query {
 fn bracket_valid(b: &gauss_bif::quadrature::Bounds) -> bool {
     let tol = 1e-9 * b.upper().abs().max(1.0);
     b.lower().is_finite() && b.upper().is_finite() && b.lower() <= b.upper() + tol
+}
+
+/// The stochastic analogue: every harvested Trace/LogDet answer — shed
+/// mid-flight or run to its stop rule — must carry a finite, ordered
+/// combined interval containing its own estimate, fed by ≥ 1 probe.
+fn interval_valid(r: &StochasticReport) -> bool {
+    let tol = 1e-9 * r.combined.hi.abs().max(1.0);
+    r.combined.lo.is_finite()
+        && r.combined.hi.is_finite()
+        && r.combined.lo <= r.combined.hi + tol
+        && r.combined.lo - tol <= r.estimate
+        && r.estimate <= r.combined.hi + tol
+        && r.probes_contributing >= 1
 }
 
 fn main() -> ExitCode {
@@ -263,13 +306,14 @@ fn main() -> ExitCode {
     let (mut submitted, mut refused, mut answered) = (0u64, 0u64, 0u64);
     let (mut warm, mut cold) = (0u64, 0u64);
     let mut bracket_bad = 0u64;
+    let mut stochastic = 0u64;
 
     while !STOP.load(Ordering::SeqCst) && Instant::now() < deadline_t {
         // streaming submission: a burst of keyed queries, warm path first
         // (no operator crosses the API), cold path ships the Arc once
         for _ in 0..o.burst {
             let t = &tenants[rng.below(tenants.len())];
-            let q = make_query(&mut rng, t);
+            let q = make_query(&mut rng, t, o.trace_frac);
             let dl = if rng.bool(0.5) { Some(8 + rng.below(64) as u64) } else { None };
             let res = match eng.submit_keyed(t.key, t.opts, q.clone(), dl) {
                 Err(SubmitError::UnknownKey(_)) => {
@@ -313,6 +357,13 @@ fn main() -> ExitCode {
                         bracket_bad += 1;
                     }
                 }
+                Ok(Answer::Stochastic(r)) => {
+                    answered += 1;
+                    stochastic += 1;
+                    if !interval_valid(&r) {
+                        bracket_bad += 1;
+                    }
+                }
                 Ok(_) => answered += 1,
                 Err(e) => unreachable!("freshly answered ticket turned {e:?}"),
             }
@@ -339,6 +390,13 @@ fn main() -> ExitCode {
                     bracket_bad += 1;
                 }
             }
+            Ok(Answer::Stochastic(r)) => {
+                answered += 1;
+                stochastic += 1;
+                if !interval_valid(&r) {
+                    bracket_bad += 1;
+                }
+            }
             Ok(_) => answered += 1,
             Err(_) => lost += 1,
         }
@@ -353,6 +411,7 @@ fn main() -> ExitCode {
     reg.set_counter("serve.answered", answered);
     reg.set_counter("serve.warm_submits", warm);
     reg.set_counter("serve.cold_submits", cold);
+    reg.set_counter("serve.stochastic_answers", stochastic);
     reg.set_counter("serve.bracket_violations", bracket_bad);
     reg.set_counter("serve.lost_tickets", lost);
     reg.set_gauge("serve.inflight", 0.0);
@@ -367,7 +426,7 @@ fn main() -> ExitCode {
     }
 
     println!(
-        "served {answered}/{submitted} ({warm} warm, {cold} cold admissions, {refused} refused at cap)"
+        "served {answered}/{submitted} ({warm} warm, {cold} cold admissions, {refused} refused at cap, {stochastic} stochastic)"
     );
     println!(
         "engine: {} rounds, {} sweeps, shed {} (anytime brackets), store evicted {}, compacted {}",

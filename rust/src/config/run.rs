@@ -4,6 +4,7 @@
 use super::json::{parse, Json, JsonError};
 use crate::quadrature::engine::EngineConfig;
 use crate::quadrature::race::RacePolicy;
+use crate::quadrature::stochastic::SlqConfig;
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
@@ -59,6 +60,9 @@ pub enum ExperimentConfig {
     /// scheduling (ISSUE 5).
     Engine,
     Serve,
+    /// Stochastic Lanczos quadrature: trace/logdet estimates vs dense
+    /// exact references (ISSUE 9).
+    Slq,
 }
 
 impl ExperimentConfig {
@@ -73,6 +77,7 @@ impl ExperimentConfig {
             "session" => Some(Self::Session),
             "engine" => Some(Self::Engine),
             "serve" => Some(Self::Serve),
+            "slq" => Some(Self::Slq),
             _ => None,
         }
     }
@@ -131,6 +136,20 @@ pub struct RunConfig {
     /// its current four-bound bracket, or the submission is refused.
     /// Clamped to >= 1 at parse (0 would shed every submission)
     pub engine_queue_cap: usize,
+    /// Hutchinson probe count for stochastic trace/logdet queries driven
+    /// from this config (the `slq` experiment, `serve` stochastic
+    /// traffic). Validated at admission by
+    /// [`SlqConfig::validate`](crate::quadrature::stochastic::SlqConfig::validate)
+    /// — 0 is rejected with the typed
+    /// [`SlqConfigError`](crate::quadrature::stochastic::SlqConfigError),
+    /// mirroring the `engine_*` knobs.
+    pub slq_probes: usize,
+    /// seed of the splittable probe stream (deterministic under any
+    /// worker count or sweep mode)
+    pub slq_seed: u64,
+    /// relative tolerance on the combined stochastic interval; must be
+    /// finite and > 0 (validated at admission)
+    pub slq_tol: f64,
     /// extra free-form knobs
     pub extra: BTreeMap<String, String>,
 }
@@ -152,6 +171,9 @@ impl Default for RunConfig {
             engine_workers: 1,
             engine_store_bytes: 64 << 20,
             engine_queue_cap: usize::MAX,
+            slq_probes: 16,
+            slq_seed: 0x51D,
+            slq_tol: 1e-2,
             extra: BTreeMap::new(),
         }
     }
@@ -207,11 +229,24 @@ impl RunConfig {
         if let Some(x) = v.get("engine_queue_cap").and_then(Json::as_usize) {
             c.engine_queue_cap = x.max(1);
         }
+        if let Some(x) = v.get("slq_probes").and_then(Json::as_usize) {
+            c.slq_probes = x;
+        }
+        if let Some(x) = v.get("slq_seed").and_then(Json::as_f64) {
+            c.slq_seed = x as u64;
+        }
+        if let Some(x) = v.get("slq_tol").and_then(Json::as_f64) {
+            c.slq_tol = x;
+        }
         // admission validation with the typed engine error (ISSUE 5
         // satellite, mirroring BatchPolicy::validate): 0 or absurd values
         // fail the whole config load instead of deadlocking the engine
         EngineConfig::validate_knobs(c.engine_lanes, c.engine_ttl_rounds)
             .map_err(|e| e.to_string())?;
+        // same treatment for the stochastic knobs: zero probes or a
+        // non-finite/non-positive tolerance fail the load with the typed
+        // SlqConfigError's message
+        c.slq_config().validate().map_err(|e| e.to_string())?;
         if let Some(Json::Obj(m)) = v.get("extra") {
             for (k, val) in m {
                 if let Some(s) = val.as_str() {
@@ -234,6 +269,14 @@ impl RunConfig {
             .with_store_bytes(self.engine_store_bytes)
             .with_queue_cap(self.engine_queue_cap.max(1))
             .with_policy(if self.race { RacePolicy::Prune } else { RacePolicy::Exhaustive })
+    }
+
+    /// The stochastic query configuration this run config describes.
+    /// Validated at admission for loaded configs; call
+    /// [`SlqConfig::validate`] before use when the fields were set by
+    /// hand (the CLI override path does).
+    pub fn slq_config(&self) -> SlqConfig {
+        SlqConfig::new(self.slq_probes, self.slq_seed, self.slq_tol)
     }
 
     pub fn load(path: &Path) -> Result<Self, String> {
@@ -330,6 +373,30 @@ mod tests {
     }
 
     #[test]
+    fn slq_knobs_parse_and_validate_at_admission() {
+        let d = RunConfig::default();
+        assert_eq!(d.slq_probes, 16);
+        assert_eq!(d.slq_seed, 0x51D);
+        assert!(d.slq_tol > 0.0);
+        assert!(d.slq_config().validate().is_ok());
+        let c = RunConfig::from_json(
+            r#"{"slq_probes": 32, "slq_seed": 99, "slq_tol": 0.05}"#,
+        )
+        .unwrap();
+        assert_eq!(c.slq_probes, 32);
+        assert_eq!(c.slq_seed, 99);
+        assert_eq!(c.slq_tol, 0.05);
+        // the ISSUE 9 satellite: invalid stochastic knobs rejected at
+        // admission with the typed SlqConfigError's message
+        let err = RunConfig::from_json(r#"{"slq_probes": 0}"#).unwrap_err();
+        assert!(err.contains("slq_probes"), "{err}");
+        let err = RunConfig::from_json(r#"{"slq_tol": 0.0}"#).unwrap_err();
+        assert!(err.contains("slq_tol"), "{err}");
+        let err = RunConfig::from_json(r#"{"slq_tol": -0.5}"#).unwrap_err();
+        assert!(err.contains("slq_tol"), "{err}");
+    }
+
+    #[test]
     fn experiment_names() {
         assert_eq!(ExperimentConfig::from_name("fig1"), Some(ExperimentConfig::Fig1));
         assert_eq!(ExperimentConfig::from_name("block"), Some(ExperimentConfig::Block));
@@ -342,6 +409,7 @@ mod tests {
             ExperimentConfig::from_name("engine"),
             Some(ExperimentConfig::Engine)
         );
+        assert_eq!(ExperimentConfig::from_name("slq"), Some(ExperimentConfig::Slq));
         assert_eq!(ExperimentConfig::from_name("nope"), None);
     }
 }

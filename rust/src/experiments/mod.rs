@@ -11,6 +11,7 @@ pub mod fig2;
 pub mod race;
 pub mod rates;
 pub mod session;
+pub mod slq;
 pub mod table2;
 
 use std::io::Write;

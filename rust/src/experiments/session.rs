@@ -51,6 +51,7 @@ fn lane_demand(q: &Query) -> usize {
         Query::Estimate { .. } | Query::Threshold { .. } => 1,
         Query::Compare { .. } => 2,
         Query::Argmax { arms, .. } => arms.len(),
+        Query::Trace { cfg, .. } | Query::LogDet { cfg } => cfg.probes,
     }
 }
 

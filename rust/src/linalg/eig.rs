@@ -85,6 +85,88 @@ fn householder_tridiag(a_in: &DMat) -> (Vec<f64>, Vec<f64>) {
     (d, off)
 }
 
+/// Eigenvalues (ascending) of a symmetric tridiagonal matrix plus the
+/// *squared first components* of the corresponding orthonormal
+/// eigenvectors — exactly the Gauss-quadrature weights of the Jacobi
+/// matrix (Golub–Welsch). Same implicit-shift QL as
+/// [`tridiag_eigenvalues`], but each plane rotation is also applied to a
+/// single carried row (initialized to `e1`), so the cost stays O(k²)
+/// instead of the O(k³) of a full eigenvector accumulation. Used by the
+/// stochastic Lanczos quadrature layer, which turns recorded lane
+/// recurrence coefficients into `Σ wⱼ f(λⱼ)` for arbitrary spectral `f`.
+pub fn tridiag_eig_weights(d_in: &[f64], e_in: &[f64]) -> (Vec<f64>, Vec<f64>) {
+    let n = d_in.len();
+    assert_eq!(e_in.len(), n.saturating_sub(1));
+    if n == 0 {
+        return (vec![], vec![]);
+    }
+    let mut d = d_in.to_vec();
+    let mut e = e_in.to_vec();
+    e.push(0.0);
+    // first row of the accumulated rotation product: z[j] converges to
+    // the first component of eigenvector j
+    let mut z = vec![0.0; n];
+    z[0] = 1.0;
+
+    for l in 0..n {
+        let mut iter = 0;
+        loop {
+            let mut m = l;
+            while m + 1 < n {
+                let dd = d[m].abs() + d[m + 1].abs();
+                if e[m].abs() <= f64::EPSILON * dd {
+                    break;
+                }
+                m += 1;
+            }
+            if m == l {
+                break;
+            }
+            iter += 1;
+            assert!(iter < 64, "QL failed to converge");
+            let mut g = (d[l + 1] - d[l]) / (2.0 * e[l]);
+            let mut r = g.hypot(1.0);
+            g = d[m] - d[l] + e[l] / (g + r.copysign(g));
+            let (mut s, mut c) = (1.0, 1.0);
+            let mut p = 0.0;
+            let mut underflow = false;
+            for i in (l..m).rev() {
+                let mut f = s * e[i];
+                let b = c * e[i];
+                r = f.hypot(g);
+                e[i + 1] = r;
+                if r == 0.0 {
+                    d[i + 1] -= p;
+                    e[m] = 0.0;
+                    underflow = true;
+                    break;
+                }
+                s = f / r;
+                c = g / r;
+                g = d[i + 1] - p;
+                r = (d[i] - g) * s + 2.0 * c * b;
+                p = s * r;
+                d[i + 1] = g + p;
+                g = c * r - b;
+                f = z[i + 1];
+                z[i + 1] = s * z[i] + c * f;
+                z[i] = c * z[i] - s * f;
+            }
+            if underflow {
+                continue;
+            }
+            d[l] -= p;
+            e[l] = g;
+            e[m] = 0.0;
+        }
+    }
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| d[a].partial_cmp(&d[b]).unwrap());
+    let lam: Vec<f64> = idx.iter().map(|&i| d[i]).collect();
+    let w: Vec<f64> = idx.iter().map(|&i| z[i] * z[i]).collect();
+    (lam, w)
+}
+
 /// Eigenvalues (ascending) of a symmetric tridiagonal matrix with diagonal
 /// `d` and off-diagonal `e` (`e[i]` couples i and i+1). Implicit-shift QL
 /// with Wilkinson shift; eigenvalue-only variant of `tqli`.
@@ -231,6 +313,31 @@ mod tests {
                 let scale: f64 = ev.iter().map(|x| x.abs()).fold(1.0, f64::max);
                 assert!(det.abs() < 1e-8 * scale.powi(3) + 1e-8, "det={det}");
             }
+        });
+    }
+
+    #[test]
+    fn weights_match_eigenvalues_and_sum_to_one() {
+        forall(20, 0x71D, |rng| {
+            let n = 1 + rng.below(14);
+            let d: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let e: Vec<f64> = (0..n.saturating_sub(1)).map(|_| rng.normal()).collect();
+            let (lam, w) = tridiag_eig_weights(&d, &e);
+            let plain = tridiag_eigenvalues(&d, &e);
+            assert_eq!(lam.len(), n);
+            for (a, b) in lam.iter().zip(&plain) {
+                assert_close(*a, *b, 1e-10, 1e-10);
+            }
+            // the carried row is a unit vector under orthogonal rotations
+            assert_close(w.iter().sum::<f64>(), 1.0, 1e-10, 1e-10);
+            assert!(w.iter().all(|&x| x >= 0.0));
+            // moment check: Σ wⱼ λⱼ = e₁ᵀ T e₁ = d[0]
+            assert_close(
+                lam.iter().zip(&w).map(|(l, wi)| l * wi).sum::<f64>(),
+                d[0],
+                1e-9,
+                1e-9,
+            );
         });
     }
 

@@ -11,5 +11,5 @@ pub mod inverse;
 
 pub use chol::Cholesky;
 pub use dense::DMat;
-pub use eig::{sym_eigenvalues, tridiag_eigenvalues};
+pub use eig::{sym_eigenvalues, tridiag_eig_weights, tridiag_eigenvalues};
 pub use inverse::MaintainedInverse;

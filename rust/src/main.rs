@@ -11,6 +11,8 @@
 //!   gauss-bif session [--seed S] [--out DIR] [--scale K] [--ks k1,k2,...]
 //!   gauss-bif engine [--seed S] [--out DIR] [--scale K] [--chains c1,c2,...]
 //!                    [--engine-lanes L] [--engine-ttl T] [--engine-workers W]
+//!   gauss-bif slq    [--seed S] [--out DIR] [--sizes n1,n2,...]
+//!                    [--slq-probes P] [--slq-seed S] [--slq-tol T]
 //!   gauss-bif serve  [--artifacts DIR] [--requests N] [--workers W] [--block-width B]
 //!   gauss-bif info   [--artifacts DIR]
 //!
@@ -110,6 +112,23 @@ fn main() -> ExitCode {
         return ExitCode::from(2);
     }
 
+    // stochastic quadrature knobs (ISSUE 9 satellite): overrides land on
+    // the config, then the combined SlqConfig is validated once with the
+    // typed error — the same rejection the engine applies at admission
+    if let Some(s) = flags.get("slq-probes").and_then(|s| s.parse::<usize>().ok()) {
+        cfg.slq_probes = s;
+    }
+    if let Some(s) = flags.get("slq-seed").and_then(|s| s.parse::<u64>().ok()) {
+        cfg.slq_seed = s;
+    }
+    if let Some(s) = flags.get("slq-tol").and_then(|s| s.parse::<f64>().ok()) {
+        cfg.slq_tol = s;
+    }
+    if let Err(e) = cfg.slq_config().validate() {
+        eprintln!("invalid stochastic knobs: {e}\n{USAGE}");
+        return ExitCode::from(2);
+    }
+
     // one registry for the whole run; commands that have telemetry to
     // publish receive `Some(&reg)` and the snapshot lands at the flagged
     // path after the command returns (whatever its exit code)
@@ -127,6 +146,7 @@ fn main() -> ExitCode {
         "race" => cmd_race(&cfg, &flags),
         "session" => cmd_session(&cfg, &flags),
         "engine" => cmd_engine(&cfg, &flags),
+        "slq" => cmd_slq(&cfg, &flags, treg),
         "serve" => cmd_serve(&cfg, &flags, treg),
         "info" => cmd_info(&cfg),
         _ => {
@@ -148,12 +168,14 @@ fn main() -> ExitCode {
     code
 }
 
-const USAGE: &str = "usage: gauss-bif <fig1|fig2|table2|rates|block|race|session|engine|serve|info> [flags]\n\
+const USAGE: &str = "usage: gauss-bif <fig1|fig2|table2|rates|block|race|session|engine|slq|serve|info> [flags]\n\
   common flags: --seed S --out DIR --scale K --config cfg.json --artifacts DIR --block-width B\n\
                 --reorth full|none (§5.4 Lanczos reorthogonalization for block/serve runs)\n\
                 --race prune|exhaustive (candidate racing for greedy scoring; selections identical)\n\
                 --engine-lanes L --engine-ttl T --engine-workers W (multi-operator engine knobs;\n\
                 0/absurd values are rejected at admission)\n\
+                --slq-probes P --slq-seed S --slq-tol T (stochastic trace/logdet knobs;\n\
+                0 probes / non-positive tolerance are rejected at admission)\n\
                 --telemetry FILE (dump a metrics-registry JSON snapshot after the run;\n\
                 rates adds a profiled-engine pass, serve exports service counters)";
 
@@ -516,6 +538,73 @@ fn cmd_engine(cfg: &RunConfig, flags: &HashMap<String, String>) -> ExitCode {
         "engine.csv",
         &engine::CSV_HEADER,
         &engine::csv_rows(&reports),
+    ) {
+        Ok(p) => println!("wrote {}", p.display()),
+        Err(e) => {
+            eprintln!("write failed: {e}");
+            return ExitCode::FAILURE;
+        }
+    }
+    ExitCode::SUCCESS
+}
+
+fn cmd_slq(
+    cfg: &RunConfig,
+    flags: &HashMap<String, String>,
+    reg: Option<&MetricsRegistry>,
+) -> ExitCode {
+    use gauss_bif::experiments::slq;
+
+    let sizes: Vec<usize> = flags
+        .get("sizes")
+        .map(|s| parse_list(s))
+        .unwrap_or_else(|| vec![32, 48]);
+    let reports = slq::run(cfg, &sizes);
+    let mut table = gauss_bif::util::bench::Table::new(&[
+        "n", "kind", "probes", "estimate", "interval", "exact", "rel err", "tol met", "early",
+        "det",
+    ]);
+    let mut contained = true;
+    let mut deterministic = true;
+    for r in &reports {
+        contained &= r.contained;
+        deterministic &= r.deterministic;
+        table.row(vec![
+            r.n.to_string(),
+            r.kind.into(),
+            r.probes.to_string(),
+            format!("{:.6e}", r.estimate),
+            format!("[{:.4e}, {:.4e}]", r.lo, r.hi),
+            format!("{:.6e}", r.exact),
+            format!("{:.1e}", r.rel_err),
+            r.tol_met.to_string(),
+            r.retired_early.to_string(),
+            r.deterministic.to_string(),
+        ]);
+    }
+    println!("{}", table.render());
+    if let Some(reg) = reg {
+        reg.set_counter("slq.rows", reports.len() as u64);
+        reg.set_counter("slq.contained", reports.iter().filter(|r| r.contained).count() as u64);
+        reg.set_counter("slq.tol_met", reports.iter().filter(|r| r.tol_met).count() as u64);
+        reg.set_counter(
+            "slq.retired_early",
+            reports.iter().map(|r| r.retired_early as u64).sum(),
+        );
+    }
+    if !contained {
+        eprintln!("an exact spectral sum fell outside its reported combined interval");
+        return ExitCode::FAILURE;
+    }
+    if !deterministic {
+        eprintln!("a pinned-seed stochastic answer changed with worker count or sweep mode");
+        return ExitCode::FAILURE;
+    }
+    match experiments::write_csv(
+        &cfg.out_dir,
+        "slq.csv",
+        &slq::CSV_HEADER,
+        &slq::csv_rows(&reports),
     ) {
         Ok(p) => println!("wrote {}", p.display()),
         Err(e) => {

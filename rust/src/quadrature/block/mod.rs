@@ -155,6 +155,11 @@ pub struct BlockResult {
     /// Per-iteration bound history (empty unless recording was enabled
     /// via [`BlockGql::record_history`]).
     pub history: Vec<Bounds>,
+    /// Recorded `(alpha, beta)` Lanczos coefficients (empty unless the
+    /// query was admitted via [`BlockGql::push_recorded`]). `beta_i` is
+    /// the off-diagonal produced by step `i`, so the k-step Jacobi matrix
+    /// reads `alpha_1..alpha_k` over `beta_1..beta_{k-1}`.
+    pub jacobi: Vec<(f64, f64)>,
 }
 
 /// Should a run with these bounds stop, and with what threshold decision?
@@ -245,7 +250,14 @@ pub fn run_scalar(
             history.push(b);
         }
         if let Some(decision) = stop_decision(&b, &stop, n, max_iters) {
-            return BlockResult { id: 0, bounds: b, decision, iters: b.iter, history };
+            return BlockResult {
+                id: 0,
+                bounds: b,
+                decision,
+                iters: b.iter,
+                history,
+                jacobi: Vec::new(),
+            };
         }
     }
 }
@@ -273,7 +285,7 @@ impl Lane {
 /// both Lanczos columns), which re-enters the panel and continues with an
 /// op sequence identical to an uninterrupted run.
 enum Pending {
-    Fresh { id: usize, u: Vec<f64>, stop: StopRule },
+    Fresh { id: usize, u: Vec<f64>, stop: StopRule, record_jacobi: bool },
     Suspended(Box<SuspendedLane>),
 }
 
@@ -395,6 +407,19 @@ impl BlockGql {
     /// Queue a query `u^T op^{-1} u`; returns its id (push order). Zero
     /// queries resolve immediately (BIF = 0 exactly) without taking a lane.
     pub fn push(&mut self, u: &[f64], stop: StopRule) -> usize {
+        self.push_with(u, stop, false)
+    }
+
+    /// [`BlockGql::push`] with per-iteration `(alpha, beta)` Jacobi
+    /// recording enabled for this lane (see [`LaneCore::jacobi`]):
+    /// [`BlockResult::jacobi`] carries the full transcript and
+    /// [`BlockGql::lane_jacobi`] exposes it mid-run. Recording is pure
+    /// observation — it cannot change any bound bit.
+    pub fn push_recorded(&mut self, u: &[f64], stop: StopRule) -> usize {
+        self.push_with(u, stop, true)
+    }
+
+    fn push_with(&mut self, u: &[f64], stop: StopRule, record_jacobi: bool) -> usize {
         assert_eq!(u.len(), self.n, "dimension mismatch");
         let stop = stop.normalized();
         let id = self.next_id;
@@ -402,9 +427,34 @@ impl BlockGql {
         if is_zero(u) {
             self.done.push(zero_result(id, &stop));
         } else {
-            self.pending.push_back(Pending::Fresh { id, u: u.to_vec(), stop });
+            self.pending.push_back(Pending::Fresh { id, u: u.to_vec(), stop, record_jacobi });
         }
         id
+    }
+
+    /// Operator dimension this engine was constructed for.
+    #[inline]
+    pub fn dim(&self) -> usize {
+        self.n
+    }
+
+    /// Mid-run Jacobi transcript of the (active or parked) lane `id`, if
+    /// it was admitted with [`BlockGql::push_recorded`]. `None` for
+    /// unknown ids, non-recording lanes, and lanes still in the fresh
+    /// pending queue.
+    pub fn lane_jacobi(&self, id: usize) -> Option<&[(f64, f64)]> {
+        if let Some(l) = self.lanes.iter().find(|l| l.id == id) {
+            return l.core.jacobi();
+        }
+        let parked_or_pending = self.parked.iter().chain(self.pending.iter());
+        for p in parked_or_pending {
+            if let Pending::Suspended(s) = p {
+                if s.id == id {
+                    return s.core.jacobi();
+                }
+            }
+        }
+        None
     }
 
     /// Panel sweeps performed so far (each = one `matvec_multi`, i.e. one
@@ -543,9 +593,9 @@ impl BlockGql {
     /// lanes get their saved columns and core back verbatim.
     fn install(&mut self, slot: usize, p: Pending) {
         match p {
-            Pending::Fresh { id, u, stop } => {
+            Pending::Fresh { id, u, stop, record_jacobi } => {
                 self.lanes[slot] = Lane::new(id, stop, &self.opts);
-                self.write_query(slot, &u);
+                self.write_query(slot, &u, record_jacobi);
             }
             Pending::Suspended(s) => {
                 let b = self.b;
@@ -563,7 +613,7 @@ impl BlockGql {
 
     /// Install `u` into lane `slot`: `v_curr` column = normalized query,
     /// `v_prev` column = 0, recurrence core fresh.
-    fn write_query(&mut self, slot: usize, u: &[f64]) {
+    fn write_query(&mut self, slot: usize, u: &[f64], record_jacobi: bool) {
         let b = self.b;
         let unorm2: f64 = u.iter().map(|x| x * x).sum();
         debug_assert!(unorm2 > 0.0, "zero queries never reach a lane");
@@ -575,6 +625,7 @@ impl BlockGql {
         let opts = self.opts;
         let lane = &mut self.lanes[slot];
         lane.core = LaneCore::new(&opts, unorm2);
+        lane.core.set_record_jacobi(record_jacobi);
         lane.history = Vec::new();
     }
 
@@ -692,6 +743,7 @@ impl BlockGql {
                     decision,
                     iters: lane.core.iterations(),
                     history: std::mem::take(&mut lane.history),
+                    jacobi: lane.core.jacobi().map(<[_]>::to_vec).unwrap_or_default(),
                 });
             }
             if let Some(p) = self.pending.pop_front() {
@@ -729,7 +781,7 @@ fn zero_result(id: usize, stop: &StopRule) -> BlockResult {
         StopRule::Threshold(t) => Some(t < 0.0),
         _ => None,
     };
-    BlockResult { id, bounds, decision, iters: 0, history: Vec::new() }
+    BlockResult { id, bounds, decision, iters: 0, history: Vec::new(), jacobi: Vec::new() }
 }
 
 /// One-shot convenience: run `queries` (pairs of query vector and stop

@@ -88,6 +88,7 @@ use super::is_zero;
 use super::judge::{JudgeOutcome, JudgeStats};
 use super::query::{Answer, Query, Session};
 use super::race::RacePolicy;
+use super::stochastic::SlqConfigError;
 use crate::metrics::{lock_tolerant, Histogram, MetricsRegistry};
 use crate::sparse::SymOp;
 use std::any::Any;
@@ -668,7 +669,7 @@ impl fmt::Display for TicketError {
 impl std::error::Error for TicketError {}
 
 /// Why an admission-checked submission was not accepted.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub enum SubmitError {
     /// [`Engine::submit_keyed`] addressed a key with no resident
     /// operator (never submitted, or evicted from the store).
@@ -677,6 +678,11 @@ pub enum SubmitError {
     /// query has a bracket to shed with yet — the caller should retry
     /// after a round or drop the request.
     Saturated,
+    /// The query carries a structurally invalid stochastic config
+    /// (zero probes, non-finite tolerance, unsupported power) — refused
+    /// at admission before any lane or shed is spent, mirroring
+    /// [`EngineConfigError`].
+    Invalid(SlqConfigError),
 }
 
 impl fmt::Display for SubmitError {
@@ -686,6 +692,7 @@ impl fmt::Display for SubmitError {
             SubmitError::Saturated => {
                 write!(f, "engine saturated: queue at capacity with nothing sheddable")
             }
+            SubmitError::Invalid(e) => write!(f, "invalid stochastic query config: {e}"),
         }
     }
 }
@@ -1022,6 +1029,7 @@ impl Engine {
         q: Query,
         deadline: Option<u64>,
     ) -> Result<Ticket, SubmitError> {
+        q.validate().map_err(SubmitError::Invalid)?;
         if self.open >= self.cfg.queue_cap {
             self.shed_one()?;
         }
@@ -1040,6 +1048,7 @@ impl Engine {
         q: Query,
         deadline: Option<u64>,
     ) -> Result<Ticket, SubmitError> {
+        q.validate().map_err(SubmitError::Invalid)?;
         if self.open >= self.cfg.queue_cap {
             self.shed_one()?;
         }
@@ -1062,7 +1071,8 @@ impl Engine {
     pub fn submit_to_with(&mut self, slot: usize, q: Query, deadline: Option<u64>) -> Ticket {
         let n = self.slots[slot].op.dim();
         let (est_rounds, cost) = estimate_cost(&q, n);
-        let sheddable = matches!(q, Query::Estimate { .. });
+        let sheddable =
+            matches!(q, Query::Estimate { .. } | Query::Trace { .. } | Query::LogDet { .. });
         let urgency = match deadline {
             Some(d) => (self.stats.rounds as u64 + d).saturating_sub(est_rounds),
             None => u64::MAX,
@@ -1090,11 +1100,13 @@ impl Engine {
         ticket
     }
 
-    /// Shed the least-urgent in-flight estimate (largest slack, then
-    /// youngest) that already carries a bracket: it resolves to that
-    /// bracket and frees its queue slot. `Err(Saturated)` when nothing
-    /// qualifies — decision queries and not-yet-swept estimates have no
-    /// valid answer to shed with.
+    /// Shed the least-urgent in-flight anytime query (largest slack,
+    /// then youngest) that already carries a bracket: estimates resolve
+    /// to their four-bound snapshot, stochastic trace/logdet queries to
+    /// the combined interval over the probes that have contributed so
+    /// far. `Err(Saturated)` when nothing qualifies — decision queries
+    /// and not-yet-swept anytime queries have no valid answer to shed
+    /// with.
     fn shed_one(&mut self) -> Result<(), SubmitError> {
         let mut victim: Option<((u64, u64), Ticket)> = None;
         for &t in &self.order {
@@ -1102,7 +1114,10 @@ impl Engine {
             if st.answer.is_some() || !st.sheddable {
                 continue;
             }
-            if self.bounds(t).is_none() {
+            let ready = self
+                .slot_index(st.key)
+                .is_some_and(|i| self.slots[i].session.can_cancel(st.qid));
+            if !ready {
                 continue; // no bracket yet: nothing valid to answer with
             }
             let rank = (st.urgency, st.seq);
@@ -1168,8 +1183,9 @@ impl Engine {
             .and_then(|i| self.slots[i].session.bounds(st.qid))
     }
 
-    /// Resolve an estimate ticket right now with its latest bracket
-    /// (see [`Session::cancel`]); its lane stops consuming sweeps.
+    /// Resolve an anytime (estimate or stochastic) ticket right now with
+    /// its latest snapshot (see [`Session::cancel`]); its lanes stop
+    /// consuming sweeps.
     pub fn cancel(&mut self, ticket: Ticket) -> bool {
         let (key, qid) = match self.ticket_state(ticket) {
             Some(st) if st.answer.is_none() => (st.key, st.qid),
@@ -1466,6 +1482,12 @@ fn estimate_cost(q: &Query, n: usize) -> (u64, u64) {
             arms.iter().map(|a| stop_rounds(&a.stop)).max().unwrap_or(1),
             arms.len().max(1) as u64,
         ),
+        // probe lanes run toward exhaustion; early retirement makes the
+        // Krylov dimension an upper estimate, which is what admission
+        // ordering wants for the widest query kind
+        Query::Trace { cfg, .. } | Query::LogDet { cfg } => {
+            (n as u64, cfg.probes.max(1) as u64)
+        }
     }
 }
 
@@ -2603,5 +2625,141 @@ mod tests {
         let again = eng.stats();
         assert_eq!(again.retired_dominated, 4);
         assert_eq!(again.retired_decided, 2);
+    }
+
+    #[test]
+    fn stochastic_queries_flow_through_the_streaming_engine() {
+        use crate::quadrature::stochastic::{SlqConfig, SpectralFn};
+        let mut rng = Rng::new(0xE9620);
+        let n = 18;
+        let (a, w) = random_sparse_spd(&mut rng, n, 0.3, 0.05);
+        let ch = Cholesky::factor(&a.to_dense()).unwrap();
+        let exact_logdet = ch.logdet();
+        let a = Arc::new(a);
+        let opts = GqlOptions::new(w.lo, w.hi);
+        let mut eng = Engine::new(EngineConfig::default()).unwrap();
+        let cfg = SlqConfig::new(8, 0xE962_0001, 5e-2);
+        let tl = eng.submit(1, a.clone(), opts, Query::LogDet { cfg });
+        // co-keyed with a bilinear estimate on the same operator: one
+        // panel serves both kinds
+        let u = randvec(&mut rng, n);
+        let te = eng
+            .try_submit(1, a.clone(), opts, Query::Estimate { u, stop: StopRule::GapRel(1e-8) }, None)
+            .unwrap();
+        eng.drain();
+        let r = eng
+            .answer(tl)
+            .and_then(Answer::stochastic)
+            .expect("logdet ticket resolves to a stochastic report")
+            .clone();
+        assert_eq!(r.f, SpectralFn::Log);
+        assert_eq!(r.probes_issued, 8);
+        let guard = 4.0 * (r.combined.width() / 2.0) + 1e-9;
+        assert!(
+            (exact_logdet - r.combined.mid()).abs() <= guard,
+            "exact {exact_logdet} vs [{}, {}]",
+            r.combined.lo,
+            r.combined.hi
+        );
+        assert!(matches!(eng.answer(te), Some(Answer::Estimate { .. })));
+        // keyed warm path accepts stochastic queries too
+        let t2 = eng
+            .submit_keyed(1, opts, Query::Trace { f: SpectralFn::Inverse, cfg }, Some(64))
+            .unwrap();
+        eng.drain();
+        assert!(eng.answer(t2).and_then(Answer::stochastic).is_some());
+    }
+
+    #[test]
+    fn invalid_stochastic_configs_are_refused_at_admission() {
+        use crate::quadrature::stochastic::{SlqConfig, SlqConfigError, SpectralFn};
+        let mut rng = Rng::new(0xE9621);
+        let (a, w) = random_sparse_spd(&mut rng, 10, 0.4, 0.05);
+        let a = Arc::new(a);
+        let opts = GqlOptions::new(w.lo, w.hi);
+        let mut eng = Engine::new(EngineConfig::default()).unwrap();
+        assert_eq!(
+            eng.try_submit(
+                1,
+                a.clone(),
+                opts,
+                Query::LogDet { cfg: SlqConfig::new(0, 1, 1e-2) },
+                None
+            )
+            .unwrap_err(),
+            SubmitError::Invalid(SlqConfigError::ZeroProbes)
+        );
+        assert!(matches!(
+            eng.try_submit(
+                1,
+                a.clone(),
+                opts,
+                Query::LogDet { cfg: SlqConfig::new(4, 1, f64::NAN) },
+                None
+            ),
+            Err(SubmitError::Invalid(SlqConfigError::NonFiniteTol(_)))
+        ));
+        assert!(matches!(
+            eng.try_submit(
+                1,
+                a.clone(),
+                opts,
+                Query::Trace { f: SpectralFn::Power(1.5), cfg: SlqConfig::new(4, 1, 1e-2) },
+                None
+            ),
+            Err(SubmitError::Invalid(SlqConfigError::UnsupportedPower(_)))
+        ));
+        // refusal happens before any session spins up or ticket opens
+        assert_eq!(eng.stats().submitted, 0);
+        assert!(!eng.has_work());
+    }
+
+    #[test]
+    fn queue_cap_sheds_stochastic_queries_to_a_partial_interval() {
+        use crate::quadrature::stochastic::{SlqConfig, SpectralFn};
+        let mut rng = Rng::new(0xE9622);
+        let n = 24;
+        let (a, w) = random_sparse_spd(&mut rng, n, 0.3, 0.05);
+        let a = Arc::new(a);
+        let opts = GqlOptions::new(w.lo, w.hi);
+        let mut eng = Engine::new(EngineConfig::default().with_queue_cap(1)).unwrap();
+        // an effectively-unreachable tolerance keeps the query in flight
+        let cfg = SlqConfig::new(6, 0xE962_0002, 1e-15);
+        let t1 = eng
+            .try_submit(1, a.clone(), opts, Query::Trace { f: SpectralFn::Inverse, cfg }, None)
+            .unwrap();
+        // no sweep yet: no probe has a bracket, nothing valid to shed
+        let u = randvec(&mut rng, n);
+        assert_eq!(
+            eng.try_submit(
+                1,
+                a.clone(),
+                opts,
+                Query::Estimate { u: u.clone(), stop: StopRule::Exhaust },
+                Some(4)
+            )
+            .unwrap_err(),
+            SubmitError::Saturated
+        );
+        assert!(eng.step_round());
+        // with brackets absorbed, the deadline submission sheds it to a
+        // valid (tolerance-short) combined interval — anytime semantics
+        eng.try_submit(
+            1,
+            a.clone(),
+            opts,
+            Query::Estimate { u, stop: StopRule::Exhaust },
+            Some(4),
+        )
+        .unwrap();
+        assert_eq!(eng.stats().shed, 1);
+        let r = eng
+            .answer(t1)
+            .and_then(Answer::stochastic)
+            .expect("shed stochastic ticket resolves immediately");
+        assert!(r.probes_contributing >= 1);
+        assert!(r.combined.lo <= r.combined.hi);
+        assert!(r.combined.lo.is_finite() && r.combined.hi.is_finite());
+        assert!(!r.tol_met, "a 1e-15 tolerance cannot be met mid-flight");
     }
 }

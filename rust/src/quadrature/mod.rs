@@ -9,9 +9,12 @@
 //! running every live session jointly: streaming submission, a global
 //! lane budget with bit-identical query suspend/resume, TTL eviction,
 //! and parallel panel sweeps), the racing scheduler ([`race`], now a
-//! thin wrapper over the planner), the retrospective judges built on
-//! them, conjugate gradients (both a baseline and the theory cross-check
-//! of Thm. 12), and Jacobi preconditioning (§5.4).
+//! thin wrapper over the planner), the stochastic Lanczos quadrature
+//! layer ([`stochastic`] — trace/logdet/spectral-sum estimation over
+//! panels of random probes with a two-interval error report), the
+//! retrospective judges built on them, conjugate gradients (both a
+//! baseline and the theory cross-check of Thm. 12), and Jacobi
+//! preconditioning (§5.4).
 
 pub mod block;
 pub mod cg;
@@ -22,6 +25,7 @@ pub mod precond;
 pub mod query;
 pub mod race;
 pub mod recurrence;
+pub mod stochastic;
 
 pub use block::{
     block_solve, run_scalar, BlockGql, BlockResult, RetireEvent, RetireReason, StopRule,
@@ -40,6 +44,10 @@ pub use precond::JacobiPrecond;
 pub use query::{Answer, Query, QueryArm, Session, SessionStats};
 pub use race::{race_dg, Race, RaceOutcome, RacePolicy, RaceStats};
 pub use recurrence::{LaneCore, Recurrence};
+pub use stochastic::{
+    probe_vector, summarize, t_critical_95, Interval, ProbeBracket, ProbeDist, SlqConfig,
+    SlqConfigError, SlqSummary, SpectralFn, StochasticReport,
+};
 
 /// Exact-zero query detection, shared by the engines, judges, and the
 /// racing scheduler: a zero `u` has BIF exactly 0 (no quadrature lane is

@@ -76,6 +76,14 @@ impl Recurrence {
         self.beta_prev
     }
 
+    /// Squared norm of the query vector this lane was seeded with. The
+    /// stochastic quadrature layer scales `e₁ᵀ f(T_k) e₁` by this to
+    /// recover `uᵀ f(A) u`.
+    #[inline]
+    pub fn unorm2(&self) -> f64 {
+        self.unorm2
+    }
+
     /// Advance one iteration given the fresh Lanczos coefficients
     /// `(alpha, beta)`: update the Sherman–Morrison state, detect
     /// breakdown, and return the four-bound snapshot plus the breakdown
@@ -165,6 +173,11 @@ pub struct LaneCore {
     basis: Vec<Vec<f64>>,
     exhausted: bool,
     last: Option<Bounds>,
+    /// opt-in `(alpha, beta)` transcript of the Jacobi matrix built so
+    /// far; `None` (the default) records nothing. Recording is pure
+    /// observation — the recurrence arithmetic is untouched, so enabling
+    /// it cannot move a bit in any bound.
+    jacobi: Option<Vec<(f64, f64)>>,
 }
 
 impl LaneCore {
@@ -178,7 +191,36 @@ impl LaneCore {
             basis: Vec::new(),
             exhausted: false,
             last: None,
+            jacobi: None,
         }
+    }
+
+    /// Start (or stop) recording the per-step Lanczos coefficients. The
+    /// stochastic quadrature layer needs the full tridiagonal `T_k` to
+    /// evaluate `e₁ᵀ f(T_k) e₁` for non-inverse spectral functions; lanes
+    /// that never ask pay nothing.
+    pub fn set_record_jacobi(&mut self, yes: bool) {
+        if yes {
+            self.jacobi.get_or_insert_with(Vec::new);
+        } else {
+            self.jacobi = None;
+        }
+    }
+
+    /// The recorded `(alpha_i, beta_i)` Jacobi coefficients, if recording
+    /// was enabled. `beta_i` is the off-diagonal *produced by* step `i`
+    /// (the residual norm), so the k-step tridiagonal uses
+    /// `alpha_1..alpha_k` and `beta_1..beta_{k-1}`.
+    #[inline]
+    pub fn jacobi(&self) -> Option<&[(f64, f64)]> {
+        self.jacobi.as_deref()
+    }
+
+    /// Squared norm of this lane's query vector (see
+    /// [`Recurrence::unorm2`]).
+    #[inline]
+    pub fn unorm2(&self) -> f64 {
+        self.rec.unorm2()
     }
 
     /// Quadrature iterations performed.
@@ -252,6 +294,9 @@ impl LaneCore {
             beta2 += wk * wk;
         }
         let beta = beta2.sqrt();
+        if let Some(j) = self.jacobi.as_mut() {
+            j.push((alpha, beta));
+        }
 
         let (mut bounds, breakdown) = self.rec.step(alpha, beta);
         if breakdown {

@@ -1,0 +1,703 @@
+//! Stochastic Lanczos quadrature (SLQ): Hutchinson estimators for
+//! `tr f(A)` — trace of the inverse, log-determinant, and general
+//! spectral sums — built from the same per-lane Gauss/Radau/Lobatto
+//! machinery the bilinear-form queries use.
+//!
+//! A probe vector `z` with `E[zzᵀ] = I` (Rademacher or Gaussian) gives
+//! `E[zᵀ f(A) z] = tr f(A)`, and each quadratic form `zᵀ f(A) z` is a
+//! Riemann–Stieltjes integral the lane's Jacobi matrix brackets from
+//! both sides (Golub–Meurant; the monotone block-Gauss view of
+//! Zimmerling–Druskin–Simoncini, arXiv 2407.21505). The subsystem
+//! therefore reports **two nested intervals** per query:
+//!
+//! * a *deterministic envelope* — the mean of the per-probe quadrature
+//!   brackets, which certainly contains the mean of the probes' exact
+//!   quadratic forms, and
+//! * a *combined interval* — the envelope widened by a two-sided 95%
+//!   Student-t confidence radius on the per-probe midpoints, which
+//!   covers `tr f(A)` itself up to the Monte-Carlo confidence level.
+//!
+//! For `f = 1/x` the lane's own Sherman–Morrison bounds are reused
+//! directly ([`bracket_from_bounds`]). For other spectral functions the
+//! lane records its recurrence coefficients
+//! ([`LaneCore::set_record_jacobi`](super::recurrence::LaneCore)) and
+//! [`bracket_from_transcript`] rebuilds the Gauss rule plus the
+//! Radau/Lobatto modifications from the transcript: prescribed-node
+//! extensions of the Jacobi matrix evaluated through the O(k²)
+//! first-row eigensolver ([`tridiag_eig_weights`]). Which rule bounds
+//! from which side depends on the derivative signs of `f`
+//! ([`SpectralFn::sides`]); the module's property tests pin each
+//! orientation against exact diagonal references.
+//!
+//! Probe vectors are a pure function of `(seed, probe index)` through
+//! [`Rng::stream`], so an SLQ answer is bit-identical under any worker
+//! count or sweep mode — determinism is inherited from the block
+//! engine's exactness contract, not re-established per run.
+
+use super::gql::Bounds;
+use crate::linalg::tridiag_eig_weights;
+use crate::util::rng::Rng;
+use std::fmt;
+
+/// Spectral function inside `tr f(A)` / `zᵀ f(A) z`. All variants are
+/// smooth on `(0, ∞)`, the spectrum of the SPD operators the engine
+/// serves.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SpectralFn {
+    /// `f(x) = 1/x` — trace of the inverse (paper's bilinear form with
+    /// random probes).
+    Inverse,
+    /// `f(x) = ln x` — `tr log A = logdet A`.
+    Log,
+    /// `f(x) = eˣ` — heat-kernel / Estrada-style sums.
+    Exp,
+    /// `f(x) = xᵖ` for `p ∈ (−∞, 0) ∪ (0, 1)` (Schatten-type sums;
+    /// other exponents are rejected by [`SpectralFn::validate`] because
+    /// the quadrature error signs are not constant there).
+    Power(f64),
+}
+
+impl SpectralFn {
+    /// Evaluate `f` at `x`.
+    #[inline]
+    pub fn eval(&self, x: f64) -> f64 {
+        match *self {
+            SpectralFn::Inverse => 1.0 / x,
+            SpectralFn::Log => x.ln(),
+            SpectralFn::Exp => x.exp(),
+            SpectralFn::Power(p) => x.powf(p),
+        }
+    }
+
+    /// Which side each quadrature rule bounds from, encoded as
+    /// `(gauss_is_lower, left_radau_is_lower)`. The Gauss error carries
+    /// the sign of the even derivatives of `f`, the Radau error the
+    /// sign of the odd ones (left node) or its negation (right node),
+    /// and the Lobatto error the negated even sign — so Gauss/Lobatto
+    /// and left/right Radau always sit on opposite sides:
+    ///
+    /// * `1/x` (and `xᵖ`, p < 0): even > 0, odd < 0 → Gauss and right
+    ///   Radau are lower bounds (the classical BIF orientation);
+    /// * `ln x` (and `xᵖ`, 0 < p < 1): even < 0, odd > 0 → fully
+    ///   flipped;
+    /// * `eˣ`: all derivatives > 0 → Gauss and *left* Radau are lower.
+    fn sides(&self) -> (bool, bool) {
+        match *self {
+            SpectralFn::Inverse => (true, false),
+            SpectralFn::Log => (false, true),
+            SpectralFn::Exp => (true, true),
+            SpectralFn::Power(p) => {
+                if p < 0.0 {
+                    (true, false)
+                } else {
+                    (false, true)
+                }
+            }
+        }
+    }
+
+    /// Reject exponents whose quadrature error signs are not constant.
+    pub fn validate(&self) -> Result<(), SlqConfigError> {
+        if let SpectralFn::Power(p) = *self {
+            if !p.is_finite() || p == 0.0 || p >= 1.0 {
+                return Err(SlqConfigError::UnsupportedPower(p));
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Display for SpectralFn {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match *self {
+            SpectralFn::Inverse => write!(f, "inverse"),
+            SpectralFn::Log => write!(f, "log"),
+            SpectralFn::Exp => write!(f, "exp"),
+            SpectralFn::Power(p) => write!(f, "power({p})"),
+        }
+    }
+}
+
+/// Probe-vector distribution. Both satisfy `E[zzᵀ] = I`; Rademacher has
+/// the smaller variance for trace estimation (Hutchinson) and is the
+/// default.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum ProbeDist {
+    /// Entries ±1 with equal probability.
+    #[default]
+    Rademacher,
+    /// Standard normal entries.
+    Gaussian,
+}
+
+/// Configuration of one stochastic query.
+#[derive(Clone, Copy, Debug)]
+pub struct SlqConfig {
+    /// Hutchinson probe count (≥ 1). All probes are issued at
+    /// submission; adaptivity comes from early per-probe and whole-query
+    /// retirement, not probe growth.
+    pub probes: usize,
+    /// Seed of the splittable probe stream — probe `i` is a pure
+    /// function of `(seed, i)`.
+    pub seed: u64,
+    /// Relative tolerance on the combined interval: the query retires
+    /// once `width ≤ tol · max(|estimate|, 1)` (the absolute floor
+    /// protects near-zero targets such as `logdet ≈ 0`).
+    pub tol: f64,
+    /// Probe distribution.
+    pub dist: ProbeDist,
+}
+
+impl SlqConfig {
+    /// Config with the default (Rademacher) probe distribution.
+    pub fn new(probes: usize, seed: u64, tol: f64) -> Self {
+        SlqConfig { probes, seed, tol, dist: ProbeDist::Rademacher }
+    }
+
+    pub fn with_dist(mut self, dist: ProbeDist) -> Self {
+        self.dist = dist;
+        self
+    }
+
+    /// Typed validation, mirroring
+    /// [`EngineConfigError`](super::engine::EngineConfigError): the
+    /// engine's admission paths refuse invalid configs before a lane is
+    /// spent.
+    pub fn validate(&self) -> Result<(), SlqConfigError> {
+        if self.probes == 0 {
+            return Err(SlqConfigError::ZeroProbes);
+        }
+        if !self.tol.is_finite() {
+            return Err(SlqConfigError::NonFiniteTol(self.tol));
+        }
+        if self.tol <= 0.0 {
+            return Err(SlqConfigError::NonPositiveTol(self.tol));
+        }
+        Ok(())
+    }
+}
+
+/// Rejection reasons for a stochastic query config.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SlqConfigError {
+    /// `probes == 0`: an estimator with no samples has no answer.
+    ZeroProbes,
+    /// Tolerance is NaN or infinite.
+    NonFiniteTol(f64),
+    /// Tolerance must be strictly positive.
+    NonPositiveTol(f64),
+    /// `Power(p)` outside `(−∞, 0) ∪ (0, 1)` — quadrature bound
+    /// orientation is not constant for those exponents.
+    UnsupportedPower(f64),
+}
+
+impl fmt::Display for SlqConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SlqConfigError::ZeroProbes => write!(f, "slq_probes must be >= 1"),
+            SlqConfigError::NonFiniteTol(t) => write!(f, "slq_tol must be finite (got {t})"),
+            SlqConfigError::NonPositiveTol(t) => {
+                write!(f, "slq_tol must be > 0 (got {t})")
+            }
+            SlqConfigError::UnsupportedPower(p) => {
+                write!(f, "spectral power must lie in (-inf,0) or (0,1) (got {p})")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SlqConfigError {}
+
+/// Probe vector `i` of the stream: a pure function of
+/// `(dist, seed, i, n)` — deterministic under any worker count, sweep
+/// mode, or probe-issue order.
+pub fn probe_vector(dist: ProbeDist, seed: u64, index: u64, n: usize) -> Vec<f64> {
+    let mut rng = Rng::stream(seed, index);
+    match dist {
+        ProbeDist::Rademacher => {
+            (0..n).map(|_| if rng.next_u64() & 1 == 0 { 1.0 } else { -1.0 }).collect()
+        }
+        ProbeDist::Gaussian => (0..n).map(|_| rng.normal()).collect(),
+    }
+}
+
+/// Deterministic two-sided bracket on one probe's quadratic form
+/// `zᵀ f(A) z`.
+#[derive(Clone, Copy, Debug)]
+pub struct ProbeBracket {
+    pub lo: f64,
+    pub hi: f64,
+    /// Krylov space exhausted: `lo == hi` is the exact value.
+    pub exact: bool,
+}
+
+impl ProbeBracket {
+    #[inline]
+    pub fn mid(&self) -> f64 {
+        0.5 * (self.lo + self.hi)
+    }
+
+    #[inline]
+    pub fn gap(&self) -> f64 {
+        self.hi - self.lo
+    }
+}
+
+/// Fraction of the query tolerance at which an individual probe's
+/// bracket is tight enough to retire its lane: more Lanczos iterations
+/// on that probe cannot reduce the Monte-Carlo term, so its sweeps are
+/// better spent elsewhere in the panel.
+pub const PROBE_GAP_FRACTION: f64 = 0.25;
+
+/// True once `b` is tight enough (relative to its own midpoint, with
+/// the same absolute floor the query tolerance uses) that refining the
+/// probe further cannot help the combined interval meaningfully.
+#[inline]
+pub fn probe_converged(b: &ProbeBracket, tol: f64) -> bool {
+    b.exact || b.gap() <= PROBE_GAP_FRACTION * tol * b.mid().abs().max(1.0)
+}
+
+/// Bracket for `f = 1/x` straight from a lane's Sherman–Morrison
+/// bounds — the two computations agree (same quadrature rules), this
+/// path just skips the transcript eigen-solves.
+pub fn bracket_from_bounds(b: &Bounds) -> ProbeBracket {
+    if b.exact {
+        ProbeBracket { lo: b.gauss, hi: b.gauss, exact: true }
+    } else {
+        ProbeBracket { lo: b.lower(), hi: b.upper(), exact: false }
+    }
+}
+
+/// Last pivot of the LDLᵀ elimination of `T − shift·I`: the only
+/// quantity the Radau/Lobatto modified-matrix constructions need from
+/// the shifted solves `(T − shift·I) x = e_k`, since the right-hand
+/// side touches nothing until the final row.
+fn last_pivot(alpha: &[f64], inner: &[f64], shift: f64) -> f64 {
+    let mut c = alpha[0] - shift;
+    for i in 1..alpha.len() {
+        c = (alpha[i] - shift) - inner[i - 1] * inner[i - 1] / c;
+    }
+    c
+}
+
+/// `unorm² · Σⱼ wⱼ f(λⱼ)` over the tridiagonal `(diag, off)` — one
+/// quadrature rule evaluated through the first-row eigensolver.
+fn quad_sum(f: SpectralFn, diag: &[f64], off: &[f64], unorm2: f64) -> f64 {
+    let (lam, w) = tridiag_eig_weights(diag, off);
+    let mut s = 0.0;
+    for (l, wi) in lam.iter().zip(&w) {
+        s += wi * f.eval(*l);
+    }
+    unorm2 * s
+}
+
+/// Rebuild the four-rule bracket on `zᵀ f(A) z` from a lane's recorded
+/// recurrence transcript (`jacobi[i] = (αᵢ₊₁, βᵢ₊₁)`, the coefficients
+/// *produced by* step i+1 — so a k-step transcript yields `T_k` from
+/// `α₁..α_k` and `β₁..β_{k−1}`, with `β_k` feeding the Radau/Lobatto
+/// extensions). `lam_min`/`lam_max` are the prescribed nodes (the
+/// session's [`GqlOptions`](super::gql::GqlOptions) spectrum
+/// estimates); `unorm2 = ‖z‖²` scales the normalized-measure rules
+/// back to the quadratic form. Returns `None` when no rule produced a
+/// finite value (a not-yet-swept or numerically degenerate lane).
+pub fn bracket_from_transcript(
+    f: SpectralFn,
+    jacobi: &[(f64, f64)],
+    unorm2: f64,
+    lam_min: f64,
+    lam_max: f64,
+    exact: bool,
+) -> Option<ProbeBracket> {
+    let k = jacobi.len();
+    if k == 0 {
+        return None;
+    }
+    let alpha: Vec<f64> = jacobi.iter().map(|p| p.0).collect();
+    let beta: Vec<f64> = jacobi.iter().map(|p| p.1).collect();
+    let inner = &beta[..k - 1];
+    let gauss = quad_sum(f, &alpha, inner, unorm2);
+    if exact {
+        return gauss.is_finite().then_some(ProbeBracket { lo: gauss, hi: gauss, exact: true });
+    }
+    let beta_k = beta[k - 1];
+
+    // Gauss–Radau at prescribed node z: solve (T_k − zI)δ = β_k² e_k and
+    // append α̃ = z + δ_k with coupling β_k (Golub–Meurant).
+    let radau = |z: f64| -> f64 {
+        let delta_k = beta_k * beta_k / last_pivot(&alpha, inner, z);
+        let mut diag = alpha.clone();
+        diag.push(z + delta_k);
+        let mut off = inner.to_vec();
+        off.push(beta_k);
+        quad_sum(f, &diag, &off, unorm2)
+    };
+    let r_left = radau(lam_min);
+    let r_right = radau(lam_max);
+
+    // Gauss–Lobatto: prescribe both ends via the two e_k solves.
+    let lobatto = {
+        let dk = 1.0 / last_pivot(&alpha, inner, lam_min);
+        let mk = 1.0 / last_pivot(&alpha, inner, lam_max);
+        let denom = dk - mk;
+        let a_lo = (dk * lam_max - mk * lam_min) / denom;
+        let b_lo2 = (lam_max - lam_min) / denom;
+        let mut diag = alpha.clone();
+        diag.push(a_lo);
+        let mut off = inner.to_vec();
+        off.push(b_lo2.max(0.0).sqrt());
+        quad_sum(f, &diag, &off, unorm2)
+    };
+
+    let (gauss_lower, left_radau_lower) = f.sides();
+    let mut lo: Option<f64> = None;
+    let mut hi: Option<f64> = None;
+    let mut put = |v: f64, is_lower: bool| {
+        if !v.is_finite() {
+            return;
+        }
+        let side = if is_lower { &mut lo } else { &mut hi };
+        *side = Some(match *side {
+            Some(cur) => {
+                if is_lower {
+                    cur.max(v)
+                } else {
+                    cur.min(v)
+                }
+            }
+            None => v,
+        });
+    };
+    put(gauss, gauss_lower);
+    put(lobatto, !gauss_lower);
+    put(r_left, left_radau_lower);
+    put(r_right, !left_radau_lower);
+    match (lo, hi) {
+        // a crossed bracket means rounding collapsed the enclosure; keep
+        // the interval valid by sorting the endpoints
+        (Some(l), Some(h)) if l <= h => Some(ProbeBracket { lo: l, hi: h, exact: false }),
+        (Some(l), Some(h)) => Some(ProbeBracket { lo: h, hi: l, exact: false }),
+        _ => None,
+    }
+}
+
+/// Two-sided 95% Student-t critical value by degrees of freedom
+/// (`df = probes − 1`); the standard table, converging to the normal
+/// 1.96 for large samples.
+pub fn t_critical_95(df: usize) -> f64 {
+    const T95: [f64; 30] = [
+        12.706, 4.303, 3.182, 2.776, 2.571, 2.447, 2.365, 2.306, 2.262, 2.228, 2.201, 2.179,
+        2.160, 2.145, 2.131, 2.120, 2.110, 2.101, 2.093, 2.086, 2.080, 2.074, 2.069, 2.064,
+        2.060, 2.056, 2.052, 2.048, 2.045, 2.042,
+    ];
+    match df {
+        0 => f64::INFINITY,
+        1..=30 => T95[df - 1],
+        31..=40 => 2.030,
+        41..=60 => 2.000,
+        61..=120 => 1.980,
+        _ => 1.960,
+    }
+}
+
+/// A closed interval.
+#[derive(Clone, Copy, Debug)]
+pub struct Interval {
+    pub lo: f64,
+    pub hi: f64,
+}
+
+impl Interval {
+    #[inline]
+    pub fn width(&self) -> f64 {
+        self.hi - self.lo
+    }
+
+    #[inline]
+    pub fn mid(&self) -> f64 {
+        0.5 * (self.lo + self.hi)
+    }
+
+    #[inline]
+    pub fn contains(&self, x: f64) -> bool {
+        self.lo <= x && x <= self.hi
+    }
+}
+
+/// Snapshot of the estimator over the probes that currently carry a
+/// bracket.
+#[derive(Clone, Copy, Debug)]
+pub struct SlqSummary {
+    /// Mean of the per-probe bracket midpoints — the point estimate.
+    pub estimate: f64,
+    /// Deterministic envelope: means of the per-probe lower and upper
+    /// quadrature bounds. Contains the mean of the probes' exact
+    /// quadratic forms by construction.
+    pub envelope: Interval,
+    /// Envelope widened by the t-interval confidence radius on the
+    /// midpoints — the interval reported against `tr f(A)`. With a
+    /// single probe the Monte-Carlo radius is undefined and the
+    /// combined interval equals the envelope (quadrature error only).
+    pub combined: Interval,
+    /// Standard error of the midpoint mean (`s/√m`; 0 for one probe).
+    pub stderr: f64,
+    /// Probes contributing a bracket.
+    pub probes: usize,
+    /// True once `combined.width() ≤ tol · max(|estimate|, 1)`.
+    pub tol_met: bool,
+}
+
+/// Fold the current per-probe brackets into the two-interval summary.
+/// `None` when no probe has produced a bracket yet.
+pub fn summarize(brackets: &[ProbeBracket], tol: f64) -> Option<SlqSummary> {
+    let m = brackets.len();
+    if m == 0 {
+        return None;
+    }
+    let mf = m as f64;
+    let (mut lo_sum, mut hi_sum, mut mid_sum) = (0.0, 0.0, 0.0);
+    for b in brackets {
+        lo_sum += b.lo;
+        hi_sum += b.hi;
+        mid_sum += b.mid();
+    }
+    let envelope = Interval { lo: lo_sum / mf, hi: hi_sum / mf };
+    let estimate = mid_sum / mf;
+    let (stderr, radius) = if m > 1 {
+        let var = brackets
+            .iter()
+            .map(|b| {
+                let d = b.mid() - estimate;
+                d * d
+            })
+            .sum::<f64>()
+            / (mf - 1.0);
+        let se = (var / mf).sqrt();
+        (se, t_critical_95(m - 1) * se)
+    } else {
+        (0.0, 0.0)
+    };
+    let combined = Interval { lo: envelope.lo - radius, hi: envelope.hi + radius };
+    let tol_met = combined.width() <= tol * estimate.abs().max(1.0);
+    Some(SlqSummary { estimate, envelope, combined, stderr, probes: m, tol_met })
+}
+
+/// Resolved stochastic answer: the final summary plus the query's
+/// accounting — carried by
+/// [`Answer::Stochastic`](super::query::Answer).
+#[derive(Clone, Debug)]
+pub struct StochasticReport {
+    /// Spectral function the query evaluated.
+    pub f: SpectralFn,
+    /// Point estimate of `tr f(A)`.
+    pub estimate: f64,
+    /// Deterministic quadrature envelope (see [`SlqSummary::envelope`]).
+    pub envelope: Interval,
+    /// Combined quadrature + Monte-Carlo interval (see
+    /// [`SlqSummary::combined`]).
+    pub combined: Interval,
+    /// Standard error of the midpoint mean.
+    pub stderr: f64,
+    /// Probes the query issued (the configured count).
+    pub probes_issued: usize,
+    /// Probes whose brackets back this answer — the full count for a
+    /// naturally resolved query, possibly fewer for a shed/cancelled one
+    /// (the anytime property: the interval is valid over whatever
+    /// contributed).
+    pub probes_contributing: usize,
+    /// Probes retired before Krylov exhaustion because their own bracket
+    /// met [`PROBE_GAP_FRACTION`] of the tolerance.
+    pub probes_retired_early: usize,
+    /// Requested relative tolerance.
+    pub tol: f64,
+    /// Whether the combined interval met the tolerance.
+    pub tol_met: bool,
+    /// Resolution round at which the tolerance was met (`None` when the
+    /// query resolved by exhaustion or shedding instead).
+    pub hit_round: Option<usize>,
+    /// Resolution rounds the query lived through.
+    pub rounds: usize,
+    /// Total Lanczos iterations across all probe lanes.
+    pub iters: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quadrature::block::{BlockGql, StopRule};
+    use crate::quadrature::gql::GqlOptions;
+    use crate::sparse::CsrBuilder;
+
+    /// Diagonal SPD test matrix: `zᵀ f(A) z = Σ f(dᵢ) zᵢ²` exactly, for
+    /// every spectral function — the reference the orientation tests
+    /// pin against.
+    fn diag_csr(d: &[f64]) -> crate::sparse::Csr {
+        let mut b = CsrBuilder::new(d.len());
+        for (i, &v) in d.iter().enumerate() {
+            b.push(i, i, v);
+        }
+        b.build()
+    }
+
+    fn run_transcript(
+        a: &crate::sparse::Csr,
+        u: &[f64],
+        opts: GqlOptions,
+        stop: StopRule,
+    ) -> (Vec<(f64, f64)>, Bounds) {
+        let mut eng = BlockGql::new(a, opts, 1);
+        eng.push_recorded(u, stop);
+        while eng.has_work() {
+            if !eng.step_panel(a) {
+                break;
+            }
+        }
+        let r = eng.take_done().pop().expect("one lane finished");
+        (r.jacobi, r.bounds)
+    }
+
+    #[test]
+    fn probe_vectors_are_pure_and_distribution_shaped() {
+        let a = probe_vector(ProbeDist::Rademacher, 7, 3, 64);
+        let b = probe_vector(ProbeDist::Rademacher, 7, 3, 64);
+        assert_eq!(a, b, "pure in (seed, index)");
+        assert!(a.iter().all(|&x| x == 1.0 || x == -1.0));
+        let c = probe_vector(ProbeDist::Rademacher, 7, 4, 64);
+        assert_ne!(a, c, "indices decorrelate");
+        let g = probe_vector(ProbeDist::Gaussian, 7, 3, 4096);
+        let mean = g.iter().sum::<f64>() / g.len() as f64;
+        assert!(mean.abs() < 0.1, "gaussian mean={mean}");
+    }
+
+    #[test]
+    fn transcript_brackets_contain_exact_value_for_every_spectral_fn() {
+        let d = [0.7, 1.3, 2.1, 2.9, 3.6, 4.4, 5.2, 6.1];
+        let a = diag_csr(&d);
+        let opts = GqlOptions::new(0.5, 7.0);
+        let u = probe_vector(ProbeDist::Gaussian, 0xF00D, 0, d.len());
+        let unorm2: f64 = u.iter().map(|x| x * x).sum();
+        for f in [
+            SpectralFn::Inverse,
+            SpectralFn::Log,
+            SpectralFn::Exp,
+            SpectralFn::Power(0.5),
+            SpectralFn::Power(-0.5),
+        ] {
+            let exact: f64 = d.iter().zip(&u).map(|(&di, &ui)| f.eval(di) * ui * ui).sum();
+            for k in 1..d.len() {
+                let (jac, b) = run_transcript(&a, &u, opts, StopRule::Iters(k));
+                let br = bracket_from_transcript(f, &jac, unorm2, 0.5, 7.0, b.exact)
+                    .expect("k-step transcript brackets");
+                let slack = 1e-9 * (1.0 + exact.abs());
+                assert!(
+                    br.lo - slack <= exact && exact <= br.hi + slack,
+                    "{f} k={k}: exact {exact} outside [{}, {}]",
+                    br.lo,
+                    br.hi
+                );
+            }
+            // exhaustion collapses the bracket onto the exact value
+            let (jac, b) = run_transcript(&a, &u, opts, StopRule::Exhaust);
+            assert!(b.exact);
+            let br = bracket_from_transcript(f, &jac, unorm2, 0.5, 7.0, true).unwrap();
+            assert!(br.exact);
+            assert!(
+                (br.lo - exact).abs() <= 1e-8 * (1.0 + exact.abs()),
+                "{f}: exhausted value {} vs exact {exact}",
+                br.lo
+            );
+        }
+    }
+
+    #[test]
+    fn inverse_transcript_bracket_matches_lane_bounds() {
+        let d = [0.9, 1.7, 2.4, 3.8, 5.0, 6.3];
+        let a = diag_csr(&d);
+        let opts = GqlOptions::new(0.7, 7.0);
+        let u = probe_vector(ProbeDist::Rademacher, 0xBEEF, 1, d.len());
+        let unorm2: f64 = u.iter().map(|x| x * x).sum();
+        for k in 1..d.len() {
+            let (jac, b) = run_transcript(&a, &u, opts, StopRule::Iters(k));
+            if b.exact {
+                break;
+            }
+            let br =
+                bracket_from_transcript(SpectralFn::Inverse, &jac, unorm2, 0.7, 7.0, false)
+                    .unwrap();
+            let direct = bracket_from_bounds(&b);
+            let tol = 1e-7 * (1.0 + direct.hi.abs());
+            assert!(
+                (br.lo - direct.lo).abs() < tol && (br.hi - direct.hi).abs() < tol,
+                "k={k}: transcript [{}, {}] vs lane [{}, {}]",
+                br.lo,
+                br.hi,
+                direct.lo,
+                direct.hi
+            );
+        }
+    }
+
+    #[test]
+    fn summarize_combines_envelope_and_t_interval() {
+        // three probes with exact (degenerate) brackets: pure MC spread
+        let brs = [
+            ProbeBracket { lo: 1.0, hi: 1.0, exact: true },
+            ProbeBracket { lo: 2.0, hi: 2.0, exact: true },
+            ProbeBracket { lo: 3.0, hi: 3.0, exact: true },
+        ];
+        let s = summarize(&brs, 0.1).unwrap();
+        assert_eq!(s.probes, 3);
+        assert!((s.estimate - 2.0).abs() < 1e-12);
+        assert!((s.envelope.width()).abs() < 1e-12);
+        // s = 1, stderr = 1/√3, radius = t(2)·stderr
+        let want_se = 1.0 / 3.0_f64.sqrt();
+        assert!((s.stderr - want_se).abs() < 1e-12);
+        let radius = t_critical_95(2) * want_se;
+        assert!((s.combined.lo - (2.0 - radius)).abs() < 1e-9);
+        assert!((s.combined.hi - (2.0 + radius)).abs() < 1e-9);
+        assert!(!s.tol_met);
+
+        // one probe: combined falls back to the envelope
+        let one = [ProbeBracket { lo: 4.0, hi: 4.4, exact: false }];
+        let s1 = summarize(&one, 0.2).unwrap();
+        assert_eq!(s1.stderr, 0.0);
+        assert!((s1.combined.lo - 4.0).abs() < 1e-12);
+        assert!((s1.combined.hi - 4.4).abs() < 1e-12);
+        assert!(s1.tol_met, "0.4 <= 0.2 * 4.2");
+        assert!(summarize(&[], 0.1).is_none());
+    }
+
+    #[test]
+    fn config_validation_is_typed() {
+        assert!(SlqConfig::new(8, 1, 1e-2).validate().is_ok());
+        assert_eq!(SlqConfig::new(0, 1, 1e-2).validate(), Err(SlqConfigError::ZeroProbes));
+        assert!(matches!(
+            SlqConfig::new(4, 1, f64::NAN).validate(),
+            Err(SlqConfigError::NonFiniteTol(_))
+        ));
+        assert_eq!(
+            SlqConfig::new(4, 1, -1.0).validate(),
+            Err(SlqConfigError::NonPositiveTol(-1.0))
+        );
+        assert!(SpectralFn::Power(0.5).validate().is_ok());
+        assert!(SpectralFn::Power(-2.0).validate().is_ok());
+        assert_eq!(
+            SpectralFn::Power(1.5).validate(),
+            Err(SlqConfigError::UnsupportedPower(1.5))
+        );
+        assert_eq!(
+            SpectralFn::Power(0.0).validate(),
+            Err(SlqConfigError::UnsupportedPower(0.0))
+        );
+    }
+
+    #[test]
+    fn t_table_is_monotone_toward_the_normal_limit() {
+        let mut prev = f64::INFINITY;
+        for df in 1..200 {
+            let t = t_critical_95(df);
+            assert!(t <= prev, "df={df}");
+            prev = t;
+        }
+        assert!((t_critical_95(10_000) - 1.96).abs() < 1e-12);
+    }
+}

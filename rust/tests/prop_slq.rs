@@ -1,0 +1,192 @@
+//! Stochastic Lanczos quadrature invariants (ISSUE 9), stated against a
+//! dense oracle:
+//!
+//! * for every supported spectral function, the exact spectral sum lies
+//!   inside the reported combined interval (deterministic quadrature
+//!   envelope ⊕ Monte-Carlo t-interval; checked with a 4× guard band so
+//!   a 95% confidence statement gates at an effective ≫99.99% level);
+//! * a pinned [`SlqConfig`] seed makes the whole report bit-identical
+//!   across worker counts and both [`SweepMode`]s — probes are seeded at
+//!   submission, so scheduling cannot leak into the answer;
+//! * a `Trace` query shed mid-flight under backpressure resolves to its
+//!   current combined interval (the anytime property), never to garbage.
+
+use gauss_bif::datasets::random_sparse_spd;
+use gauss_bif::linalg::{sym_eigenvalues, Cholesky};
+use gauss_bif::quadrature::block::StopRule;
+use gauss_bif::quadrature::engine::{Engine, EngineConfig, SubmitError, SweepMode};
+use gauss_bif::quadrature::query::{Answer, Query, Session};
+use gauss_bif::quadrature::race::RacePolicy;
+use gauss_bif::quadrature::stochastic::{SlqConfig, SpectralFn, StochasticReport};
+use gauss_bif::quadrature::GqlOptions;
+use gauss_bif::sparse::{Csr, SymOp};
+use gauss_bif::util::prop::forall;
+use gauss_bif::util::rng::Rng;
+use std::sync::Arc;
+
+/// `|exact − mid| ≤ 4·half-width`: containment with enough guard that a
+/// pinned-seed run cannot flake on the 95% t-interval.
+fn guarded_containment(r: &StochasticReport, exact: f64, what: &str) {
+    let half = r.combined.width() / 2.0;
+    let slack = 1e-9 * (1.0 + exact.abs());
+    assert!(
+        (exact - r.combined.mid()).abs() <= 4.0 * half + slack,
+        "{what}: exact {exact} outside guarded [{}, {}]",
+        r.combined.lo,
+        r.combined.hi
+    );
+    assert!(
+        r.combined.lo <= r.envelope.lo + slack && r.envelope.hi <= r.combined.hi + slack,
+        "{what}: envelope [{}, {}] escapes combined [{}, {}]",
+        r.envelope.lo,
+        r.envelope.hi,
+        r.combined.lo,
+        r.combined.hi
+    );
+    assert!(
+        r.combined.contains(r.estimate),
+        "{what}: estimate {} outside its own interval",
+        r.estimate
+    );
+}
+
+#[test]
+fn dense_oracle_lies_in_the_reported_interval_for_every_spectral_fn() {
+    forall(4, 0x51AB1, |rng| {
+        let n = 16 + rng.below(12);
+        let (a, w) = random_sparse_spd(rng, n, 0.1, 0.5);
+        let dense = a.to_dense();
+        let ev = sym_eigenvalues(&dense);
+        let ch = Cholesky::factor(&dense).expect("generator output is PD");
+        let exact_tr: f64 = (0..n)
+            .map(|i| {
+                let mut e = vec![0.0; n];
+                e[i] = 1.0;
+                ch.bif(&e)
+            })
+            .sum();
+        let opts = GqlOptions::new(w.lo, w.hi);
+        let cfg = SlqConfig::new(12, rng.next_u64(), 2e-2);
+        let cases: [(Query, f64, &str); 4] = [
+            (Query::Trace { f: SpectralFn::Inverse, cfg }, exact_tr, "tr(A^-1)"),
+            (Query::LogDet { cfg }, ch.logdet(), "logdet"),
+            (
+                Query::Trace { f: SpectralFn::Exp, cfg },
+                ev.iter().map(|l| l.exp()).sum(),
+                "tr(exp(A))",
+            ),
+            (
+                Query::Trace { f: SpectralFn::Power(0.5), cfg },
+                ev.iter().map(|l| l.sqrt()).sum(),
+                "tr(A^0.5)",
+            ),
+        ];
+        for (q, exact, what) in cases {
+            let mut s = Session::new(&a, opts, cfg.probes, RacePolicy::Prune);
+            let qid = s.submit(q);
+            let answers = s.run(&a);
+            let r = answers[qid].stochastic().expect("stochastic answer");
+            guarded_containment(r, exact, what);
+            assert_eq!(r.probes_issued, cfg.probes);
+            assert!(r.probes_contributing == cfg.probes, "{what}: a probe vanished");
+        }
+    });
+}
+
+fn drain_one(
+    a: &Arc<Csr>,
+    opts: GqlOptions,
+    q: &Query,
+    workers: usize,
+    mode: SweepMode,
+) -> StochasticReport {
+    let cfg = EngineConfig::default().with_workers(workers).with_sweep_mode(mode);
+    let mut eng = Engine::new(cfg).expect("valid engine config");
+    let t = eng.submit(1, Arc::clone(a) as Arc<dyn SymOp>, opts, q.clone());
+    eng.drain();
+    eng.answer(t)
+        .and_then(Answer::stochastic)
+        .expect("stochastic queries answer stochastically")
+        .clone()
+}
+
+#[test]
+fn pinned_seed_reports_are_bit_identical_across_scheduling() {
+    forall(3, 0x51AB2, |rng| {
+        let n = 24 + rng.below(16);
+        let (a, w) = random_sparse_spd(rng, n, 0.08, 0.5);
+        let a = Arc::new(a);
+        let opts = GqlOptions::new(w.lo, w.hi);
+        let cfg = SlqConfig::new(8, rng.next_u64(), 5e-2);
+        for q in [Query::Trace { f: SpectralFn::Inverse, cfg }, Query::LogDet { cfg }] {
+            let want = drain_one(&a, opts, &q, 1, SweepMode::Stealing);
+            for workers in [1usize, 2, 4] {
+                for mode in [SweepMode::Stealing, SweepMode::Static] {
+                    let got = drain_one(&a, opts, &q, workers, mode);
+                    assert_eq!(
+                        want.estimate.to_bits(),
+                        got.estimate.to_bits(),
+                        "estimate drifted at {workers} workers ({mode:?})"
+                    );
+                    assert_eq!(want.combined.lo.to_bits(), got.combined.lo.to_bits());
+                    assert_eq!(want.combined.hi.to_bits(), got.combined.hi.to_bits());
+                    assert_eq!(want.iters, got.iters);
+                    assert_eq!(want.rounds, got.rounds);
+                    assert_eq!(want.probes_retired_early, got.probes_retired_early);
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn shed_trace_queries_resolve_to_their_current_interval() {
+    let mut rng = Rng::new(0x51AB3);
+    let n = 32;
+    let (a, w) = random_sparse_spd(&mut rng, n, 0.08, 0.5);
+    let a = Arc::new(a);
+    let opts = GqlOptions::new(w.lo, w.hi);
+    // a tolerance no finite panel meets: the query can only finish by
+    // exhaustion or by being shed
+    let cfg = SlqConfig::new(6, 0x51AB4, 1e-15);
+    let u: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let estimate = Query::Estimate { u, stop: StopRule::GapRel(1e-6) };
+
+    let mut eng =
+        Engine::new(EngineConfig::default().with_queue_cap(1)).expect("valid engine config");
+    let t = eng.submit(
+        1,
+        Arc::clone(&a) as Arc<dyn SymOp>,
+        opts,
+        Query::Trace { f: SpectralFn::Inverse, cfg },
+    );
+    // before any sweep there is no bracket to answer with — admission
+    // must refuse rather than shed garbage
+    let err = eng
+        .try_submit(2, Arc::clone(&a) as Arc<dyn SymOp>, opts, estimate.clone(), None)
+        .expect_err("nothing sheddable before the first sweep");
+    assert_eq!(err, SubmitError::Saturated);
+
+    for _ in 0..3 {
+        assert!(eng.step_round(), "trace query still in flight");
+    }
+    let t2 = eng
+        .try_submit(2, Arc::clone(&a) as Arc<dyn SymOp>, opts, estimate, None)
+        .expect("an in-flight bracketed trace query is sheddable");
+    let r = eng
+        .answer(t)
+        .and_then(Answer::stochastic)
+        .expect("shed trace query resolves immediately")
+        .clone();
+    assert!(r.combined.lo.is_finite() && r.combined.hi.is_finite());
+    assert!(r.combined.lo <= r.estimate && r.estimate <= r.combined.hi);
+    assert!(r.probes_contributing >= 1, "shed answer must carry at least one probe");
+    assert!(!r.tol_met, "1e-15 cannot have been met");
+    assert_eq!(eng.stats().shed, 1);
+
+    eng.drain();
+    assert!(
+        matches!(eng.answer(t2), Some(Answer::Estimate { .. })),
+        "the admitted estimate must still complete"
+    );
+}
