@@ -81,14 +81,18 @@ fn run_engine(w: &Workload, workers: usize) -> Vec<u64> {
 }
 
 fn run_engine_mode(w: &Workload, workers: usize, sweep: SweepMode) -> Vec<u64> {
-    let mut eng = Engine::new(
+    run_engine_cfg(
+        w,
         EngineConfig::default()
             .with_width(WIDTH)
             .with_lanes(WIDTH * w.ops.len())
             .with_workers(workers)
             .with_sweep_mode(sweep),
     )
-    .expect("static engine config is valid");
+}
+
+fn run_engine_cfg(w: &Workload, cfg: EngineConfig) -> Vec<u64> {
+    let mut eng = Engine::new(cfg).expect("static engine config is valid");
     let mut tickets = Vec::new();
     for (k, ((a, opts), qs)) in w.ops.iter().zip(&w.queries).enumerate() {
         for u in qs {
@@ -197,6 +201,30 @@ fn main() {
         format!("{idle_steal:.3}"),
         steals.to_string(),
     ]);
+    println!("\n{}", table.render());
+
+    // Flight-recorder overhead (ISSUE 10): the same workload drained with
+    // the query-lifecycle recorder armed vs dropped. Bit-identity is
+    // asserted first — events hook only the scheduling phases — and the
+    // CI gate holds the recorder-on median to within 5% of recorder-off
+    // (validate_bench.py --overhead).
+    println!("== flight recorder overhead: same workload, recorder on vs off ==");
+    let w = build(400, 4, 8, 0xF119);
+    let base = EngineConfig::default()
+        .with_width(WIDTH)
+        .with_lanes(WIDTH * w.ops.len())
+        .with_workers(2);
+    assert_eq!(
+        run_engine_cfg(&w, base.with_flight(true)),
+        run_engine_cfg(&w, base.with_flight(false)),
+        "flight recorder changed an answer bit"
+    );
+    let on = b.bench("flight on w=2", || run_engine_cfg(&w, base.with_flight(true)));
+    let off = b.bench("flight off w=2", || run_engine_cfg(&w, base.with_flight(false)));
+    let ratio = on.median_ns / off.median_ns.max(1.0);
+    let mut table = Table::new(&["recorder", "median", "vs off"]);
+    table.row(vec!["on".into(), Stats::fmt_time(on.median_ns), format!("{ratio:.3}x")]);
+    table.row(vec!["off".into(), Stats::fmt_time(off.median_ns), "1.000x".into()]);
     println!("\n{}", table.render());
 
     match b.write_json("engine") {

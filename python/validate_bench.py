@@ -14,11 +14,26 @@ missing from the baseline are skipped (new benches never fail the gate),
 as are artifacts without a committed baseline — so the baseline set is
 opt-in per bench and can stay deliberately loose.
 
+``--require NAME`` (repeatable) hardens that opt-in for the artifacts the
+gate is expected to cover: a required artifact that is missing from the
+artifact directory, or whose committed baseline is missing from the
+baseline directory, fails the run instead of being silently skipped — a
+renamed bench or a dropped baseline file can no longer turn the gate into
+a no-op.
+
+``--overhead ARTIFACT:NUM_ROW:DEN_ROW:LIMIT`` (repeatable) checks a
+within-artifact ratio: the NUM_ROW median must stay within LIMIT times
+the DEN_ROW median (e.g. the flight-recorder-on row vs the recorder-off
+row at 1.05). Missing artifact or rows fail the gate.
+
 Usage:
     python3 python/validate_bench.py <artifact-dir> \
-        [--baseline benches/baselines] [--tolerance 1.25]
+        [--baseline benches/baselines] [--tolerance 1.25] \
+        [--require BENCH_engine.json] \
+        [--overhead "BENCH_engine.json:flight on w=2:flight off w=2:1.05"]
 
-Exit status is nonzero on any schema violation or regression.
+Exit status is nonzero on any schema violation, regression, missing
+required artifact/baseline, or overhead-ceiling breach.
 """
 
 import argparse
@@ -80,6 +95,47 @@ def compare_to_baseline(path, doc, base_doc, tolerance):
     return checked, skipped, failures
 
 
+def parse_overhead_spec(spec):
+    """Split 'ARTIFACT:NUM_ROW:DEN_ROW:LIMIT' into its typed parts."""
+    parts = spec.split(":")
+    if len(parts) != 4:
+        raise ValueError(
+            f"--overhead {spec!r}: expected ARTIFACT:NUM_ROW:DEN_ROW:LIMIT"
+        )
+    artifact, num_row, den_row, limit = parts
+    try:
+        limit = float(limit)
+    except ValueError:
+        raise ValueError(f"--overhead {spec!r}: limit {limit!r} is not a number")
+    if limit <= 0:
+        raise ValueError(f"--overhead {spec!r}: limit must be > 0")
+    return artifact, num_row, den_row, limit
+
+
+def check_overhead(docs, spec):
+    """Return a failure string for one overhead spec, or None if it holds."""
+    artifact, num_row, den_row, limit = parse_overhead_spec(spec)
+    doc = docs.get(artifact)
+    if doc is None:
+        return f"--overhead: artifact {artifact!r} missing or failed validation"
+    rows = {r["name"]: r for r in doc["results"]}
+    for name in (num_row, den_row):
+        if name not in rows:
+            return f"--overhead: {artifact}: row {name!r} not found"
+    num, den = rows[num_row]["median"], rows[den_row]["median"]
+    ceiling = den * limit
+    if num > ceiling:
+        return (
+            f"--overhead: {artifact}: {num_row!r} median {num:.0f} ns exceeds "
+            f"{den_row!r} median {den:.0f} ns * {limit:g} = {ceiling:.0f} ns"
+        )
+    print(
+        f"{artifact}: overhead OK — {num_row!r} {num:.0f} ns <= "
+        f"{den_row!r} {den:.0f} ns * {limit:g}"
+    )
+    return None
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("artifact_dir", type=Path, help="directory holding BENCH_*.json")
@@ -95,6 +151,21 @@ def main():
         default=1.25,
         help="fail a row whose median exceeds baseline * tolerance (default 1.25)",
     )
+    ap.add_argument(
+        "--require",
+        action="append",
+        default=[],
+        metavar="NAME",
+        help="artifact that must exist (and, with --baseline, must have a "
+        "committed baseline); repeatable",
+    )
+    ap.add_argument(
+        "--overhead",
+        action="append",
+        default=[],
+        metavar="ARTIFACT:NUM_ROW:DEN_ROW:LIMIT",
+        help="within-artifact median ratio ceiling; repeatable",
+    )
     args = ap.parse_args()
 
     artifacts = sorted(args.artifact_dir.glob("BENCH_*.json"))
@@ -103,12 +174,25 @@ def main():
         return 1
 
     failures = []
+    docs = {}
+    present = {p.name for p in artifacts}
+    for name in args.require:
+        if name not in present:
+            failures.append(
+                f"--require: artifact {name!r} missing from {args.artifact_dir}"
+            )
+        elif args.baseline is not None and not (args.baseline / name).exists():
+            failures.append(
+                f"--require: {name!r} has no committed baseline under "
+                f"{args.baseline} — the regression gate would silently skip it"
+            )
     for path in artifacts:
         try:
             doc = validate_schema(path)
         except (ValueError, json.JSONDecodeError, OSError) as e:
             failures.append(f"{path.name}: {e}")
             continue
+        docs[path.name] = doc
         print(f"{path.name}: schema OK ({len(doc['results'])} rows)")
         if args.baseline is None:
             continue
@@ -132,6 +216,14 @@ def main():
             if not row_failures
             else f"{path.name}: {len(row_failures)} regressions"
         )
+
+    for spec in args.overhead:
+        try:
+            fail = check_overhead(docs, spec)
+        except ValueError as e:
+            fail = str(e)
+        if fail:
+            failures.append(fail)
 
     for f in failures:
         print(f"FAIL {f}", file=sys.stderr)

@@ -14,10 +14,11 @@
 //! (operator-shipping) path was actually needed.
 //!
 //! A reporter thread prints live counters from the shared metrics
-//! registry. SIGINT/SIGTERM — or the `--seconds` timer — triggers a
-//! graceful shutdown: stop admitting, drain in-flight queries, join the
-//! reporter, export the final `engine.*`/`serve.*` snapshot, and exit
-//! nonzero if any harvested bracket was invalid or any ticket was lost.
+//! registry, including one final post-drain line at shutdown.
+//! SIGINT/SIGTERM — or the `--seconds` timer — triggers a graceful
+//! shutdown: stop admitting, drain in-flight queries, export the final
+//! `engine.*`/`serve.*` snapshot, join the reporter, and exit nonzero if
+//! any harvested bracket was invalid or any ticket was lost.
 //!
 //! A `--trace-frac` slice of the stream is stochastic (ISSUE 9):
 //! `Trace`/`LogDet` queries whose probe panels coalesce with the
@@ -25,16 +26,30 @@
 //! fully run — must carry a valid combined interval, audited exactly
 //! like the estimate brackets.
 //!
+//! Observability (ISSUE 10): the engine's query-lifecycle flight
+//! recorder is on by default (`--flight false` disables it), and a
+//! std-only HTTP listener (`--http ADDR`, default an ephemeral localhost
+//! port, `off` disables) exposes `/metrics` (Prometheus text),
+//! `/healthz`, and `/queries` (live in-flight spans with their current
+//! four-bound brackets and rounds-elapsed). On a bracket violation, a
+//! worker panic, or SIGUSR1 the recorder is dumped as JSON — to
+//! `--flight-dump FILE` when given, stderr otherwise — naming the
+//! offending span. `--inject-violation N` fires a synthetic violation on
+//! the Nth answer so the post-mortem path can be exercised end to end
+//! (injected violations dump but do not fail the run).
+//!
 //! ```text
 //! serve [--seconds S] [--keys K] [--dim N] [--queue-cap C]
 //!       [--store-kb KB] [--burst B] [--trace-frac F] [--seed X]
-//!       [--telemetry FILE]
+//!       [--telemetry FILE] [--http ADDR|off] [--flight true|false]
+//!       [--flight-dump FILE] [--inject-violation N]
 //! ```
 //!
 //! `BENCH_QUICK=1` shrinks every default to CI-smoke scale.
 
 use gauss_bif::datasets::random_spd_exact;
-use gauss_bif::metrics::export::write_json;
+use gauss_bif::metrics::export::{to_prometheus, write_json};
+use gauss_bif::metrics::flight::{FlightEventKind, FlightRecorder, SpanId};
 use gauss_bif::metrics::MetricsRegistry;
 use gauss_bif::quadrature::engine::{Engine, EngineConfig, OpKey, SubmitError, Ticket};
 use gauss_bif::quadrature::query::{Answer, Query};
@@ -42,18 +57,28 @@ use gauss_bif::quadrature::stochastic::{SlqConfig, SpectralFn, StochasticReport}
 use gauss_bif::quadrature::{GqlOptions, StopRule};
 use gauss_bif::sparse::SymOp;
 use gauss_bif::util::rng::Rng;
-use std::path::PathBuf;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
 use std::process::ExitCode;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// Set by the signal handler (and only ever read elsewhere): the load
 /// loop checks it every tick, so delivery-to-drain latency is one tick.
 static STOP: AtomicBool = AtomicBool::new(false);
 
+/// Set by SIGUSR1: the load loop dumps the flight recorder on the next
+/// tick without stopping.
+static DUMP: AtomicBool = AtomicBool::new(false);
+
 extern "C" fn on_signal(_sig: i32) {
     STOP.store(true, Ordering::SeqCst);
+}
+
+extern "C" fn on_usr1(_sig: i32) {
+    DUMP.store(true, Ordering::SeqCst);
 }
 
 #[cfg(unix)]
@@ -65,9 +90,11 @@ fn install_signal_handlers() {
     }
     const SIGINT: i32 = 2;
     const SIGTERM: i32 = 15;
+    const SIGUSR1: i32 = 10;
     unsafe {
         signal(SIGINT, on_signal as extern "C" fn(i32) as usize);
         signal(SIGTERM, on_signal as extern "C" fn(i32) as usize);
+        signal(SIGUSR1, on_usr1 as extern "C" fn(i32) as usize);
     }
 }
 
@@ -85,12 +112,29 @@ struct Opts {
     trace_frac: f64,
     seed: u64,
     telemetry: Option<PathBuf>,
+    /// Scrape listener address, or `off`.
+    http: String,
+    /// Query-lifecycle flight recorder on/off.
+    flight: bool,
+    /// Post-mortem dump destination (stderr when unset).
+    flight_dump: Option<PathBuf>,
+    /// Fire a synthetic bracket violation on the Nth answer (0 = never).
+    inject_violation: u64,
 }
 
 const USAGE: &str = "usage: serve [--seconds S] [--keys K] [--dim N] [--queue-cap C]\n\
                      \x20            [--store-kb KB] [--burst B] [--trace-frac F] [--seed X]\n\
-                     \x20            [--telemetry FILE]\n\
+                     \x20            [--telemetry FILE] [--http ADDR|off] [--flight true|false]\n\
+                     \x20            [--flight-dump FILE] [--inject-violation N]\n\
                      BENCH_QUICK=1 shrinks the defaults to CI-smoke scale";
+
+fn parse_bool(name: &str, v: &str) -> Result<bool, String> {
+    match v {
+        "true" | "1" | "on" => Ok(true),
+        "false" | "0" | "off" => Ok(false),
+        other => Err(format!("{name} wants true|false (got {other})\n{USAGE}")),
+    }
+}
 
 fn parse_opts() -> Result<Opts, String> {
     let quick = std::env::var("BENCH_QUICK").map(|v| v != "0").unwrap_or(false);
@@ -105,6 +149,10 @@ fn parse_opts() -> Result<Opts, String> {
             trace_frac: 0.15,
             seed: 0x5EB1F,
             telemetry: None,
+            http: "127.0.0.1:0".to_string(),
+            flight: true,
+            flight_dump: None,
+            inject_violation: 0,
         }
     } else {
         Opts {
@@ -117,6 +165,10 @@ fn parse_opts() -> Result<Opts, String> {
             trace_frac: 0.15,
             seed: 0x5EB1F,
             telemetry: None,
+            http: "127.0.0.1:0".to_string(),
+            flight: true,
+            flight_dump: None,
+            inject_violation: 0,
         }
     };
     let mut args = std::env::args().skip(1);
@@ -134,6 +186,13 @@ fn parse_opts() -> Result<Opts, String> {
             }
             "--seed" => o.seed = val("--seed")?.parse().map_err(|e| format!("{e}"))?,
             "--telemetry" => o.telemetry = Some(PathBuf::from(val("--telemetry")?)),
+            "--http" => o.http = val("--http")?,
+            "--flight" => o.flight = parse_bool("--flight", &val("--flight")?)?,
+            "--flight-dump" => o.flight_dump = Some(PathBuf::from(val("--flight-dump")?)),
+            "--inject-violation" => {
+                o.inject_violation =
+                    val("--inject-violation")?.parse().map_err(|e| format!("{e}"))?
+            }
             "--help" | "-h" => return Err(USAGE.to_string()),
             other => return Err(format!("unknown flag {other}\n{USAGE}")),
         }
@@ -215,6 +274,132 @@ fn interval_valid(r: &StochasticReport) -> bool {
         && r.probes_contributing >= 1
 }
 
+/// One-shot injection check: fire once, on the first bracket-carrying
+/// answer at or past the target count.
+fn inject_due(target: u64, answered: u64, fired: &mut bool) -> bool {
+    if target == 0 || *fired || answered < target {
+        return false;
+    }
+    *fired = true;
+    true
+}
+
+/// Write the post-mortem: the recorder dump wrapped with the trigger
+/// reason and (when known) the offending span — to `path` when given,
+/// stderr otherwise. Non-fatal on IO errors: the run's verdict comes
+/// from the bracket audit, not the dump.
+fn dump_flight(
+    flight: Option<&FlightRecorder>,
+    path: Option<&Path>,
+    reason: &str,
+    span: Option<SpanId>,
+) {
+    let Some(f) = flight else {
+        eprintln!("flight dump requested ({reason}) but the recorder is off (--flight false)");
+        return;
+    };
+    let mut out = String::from("{\"reason\": \"");
+    out.push_str(reason);
+    out.push_str("\", \"violation_span\": ");
+    match span {
+        Some(s) => out.push_str(&s.to_string()),
+        None => out.push_str("null"),
+    }
+    out.push_str(", \"recorder\": ");
+    out.push_str(&f.to_json());
+    out.push_str("}\n");
+    match path {
+        Some(p) => {
+            if let Some(dir) = p.parent() {
+                if !dir.as_os_str().is_empty() {
+                    let _ = std::fs::create_dir_all(dir);
+                }
+            }
+            match std::fs::write(p, &out) {
+                Ok(()) => println!("flight dump ({reason}): {}", p.display()),
+                Err(e) => eprintln!("flight dump ({reason}) write failed: {e}"),
+            }
+        }
+        None => eprintln!("flight dump ({reason}): {out}"),
+    }
+}
+
+/// Render the engine's in-flight spans as the `/queries` JSON payload.
+/// Multi-lane kinds have no single bracket: their bound fields are null.
+fn render_live(eng: &Engine) -> String {
+    let jnum = |v: f64| -> String {
+        if v.is_finite() {
+            format!("{v}")
+        } else {
+            "null".to_string()
+        }
+    };
+    let mut out = String::from("{\"version\": 1, \"rounds\": ");
+    out.push_str(&eng.stats().rounds.to_string());
+    out.push_str(", \"spans\": [");
+    for (i, s) in eng.live_spans().iter().enumerate() {
+        if i > 0 {
+            out.push_str(", ");
+        }
+        out.push_str(&format!(
+            "{{\"span\": {}, \"key\": {}, \"rounds_elapsed\": {}, \"parked\": {}",
+            s.span, s.key, s.rounds_elapsed, s.parked
+        ));
+        match &s.bounds {
+            Some(b) => out.push_str(&format!(
+                ", \"iter\": {}, \"gauss\": {}, \"radau_lower\": {}, \"radau_upper\": {}, \
+                 \"lobatto\": {}}}",
+                b.iter,
+                jnum(b.gauss),
+                jnum(b.radau_lower),
+                jnum(b.radau_upper),
+                jnum(b.lobatto)
+            )),
+            None => out.push_str(
+                ", \"iter\": null, \"gauss\": null, \"radau_lower\": null, \
+                 \"radau_upper\": null, \"lobatto\": null}",
+            ),
+        }
+    }
+    out.push_str("]}\n");
+    out
+}
+
+/// Answer one scrape connection: `/metrics` (Prometheus text),
+/// `/healthz`, `/queries` (pre-rendered live-span JSON). Std-only
+/// HTTP/1.1, one request per connection.
+fn serve_http(mut sock: TcpStream, reg: &MetricsRegistry, queries: &Mutex<String>) {
+    let _ = sock.set_nonblocking(false);
+    let _ = sock.set_read_timeout(Some(Duration::from_millis(500)));
+    let mut buf = [0u8; 1024];
+    let n = match sock.read(&mut buf) {
+        Ok(n) if n > 0 => n,
+        _ => return,
+    };
+    let req = String::from_utf8_lossy(&buf[..n]);
+    let target = req.split_whitespace().nth(1).unwrap_or("/");
+    let (status, ctype, body) = match target {
+        "/metrics" => ("200 OK", "text/plain; version=0.0.4", to_prometheus(&reg.snapshot())),
+        "/healthz" => ("200 OK", "text/plain", "ok\n".to_string()),
+        "/queries" => (
+            "200 OK",
+            "application/json",
+            match queries.lock() {
+                Ok(g) => g.clone(),
+                Err(poisoned) => poisoned.into_inner().clone(),
+            },
+        ),
+        _ => ("404 Not Found", "text/plain", "not found\n".to_string()),
+    };
+    let head = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\n\
+         Connection: close\r\n\r\n",
+        body.len()
+    );
+    let _ = sock.write_all(head.as_bytes());
+    let _ = sock.write_all(body.as_bytes());
+}
+
 fn main() -> ExitCode {
     let o = match parse_opts() {
         Ok(o) => o,
@@ -258,7 +443,8 @@ fn main() -> ExitCode {
         .with_lanes(128)
         .with_ttl_rounds(64)
         .with_store_bytes(o.store_kb * 1024)
-        .with_queue_cap(o.queue_cap);
+        .with_queue_cap(o.queue_cap)
+        .with_flight(o.flight);
     let mut eng = match Engine::new(ecfg) {
         Ok(e) => e,
         Err(e) => {
@@ -266,19 +452,27 @@ fn main() -> ExitCode {
             return ExitCode::from(2);
         }
     };
+    // the recorder outlives every engine borrow: dumps and scrapes read
+    // it through this clone while the round loop mutates the engine
+    let flight = eng.flight().cloned();
 
-    // reporter thread (satellite b: it must stop *before* the final
-    // snapshot so the exported JSON is the post-drain state)
+    // reporter thread (satellite b: on stop it flushes one final
+    // post-drain report line before exiting, so the console log ends
+    // with the state the telemetry snapshot was written from)
     let report_stop = Arc::new(AtomicBool::new(false));
     let reporter = {
         let reg = Arc::clone(&reg);
         let stop = Arc::clone(&report_stop);
         std::thread::spawn(move || {
-            while !stop.load(Ordering::SeqCst) {
-                std::thread::sleep(Duration::from_millis(500));
-                if stop.load(Ordering::SeqCst) {
-                    break;
+            let mut slept_ms = 0u64;
+            loop {
+                std::thread::sleep(Duration::from_millis(50));
+                let stopped = stop.load(Ordering::SeqCst);
+                slept_ms += 50;
+                if !stopped && slept_ms < 500 {
+                    continue;
                 }
+                slept_ms = 0;
                 let snap = reg.snapshot();
                 let g = |name: &str| -> f64 {
                     match snap.get(name) {
@@ -288,7 +482,8 @@ fn main() -> ExitCode {
                     }
                 };
                 println!(
-                    "  [report] rounds={} open={} resident={} ({:.0} KiB) evicted={} shed={} compactions={}",
+                    "  [report{}] rounds={} open={} resident={} ({:.0} KiB) evicted={} shed={} compactions={}",
+                    if stopped { " final" } else { "" },
                     g("engine.rounds"),
                     g("engine.open_tickets"),
                     g("engine.store.resident"),
@@ -297,9 +492,50 @@ fn main() -> ExitCode {
                     g("engine.admission.shed"),
                     g("engine.admission.compactions"),
                 );
+                if stopped {
+                    break;
+                }
             }
         })
     };
+
+    // scrape listener: ephemeral port by default (the bound address is
+    // printed for scrapers to pick up), `--http off` disables
+    let queries_json =
+        Arc::new(Mutex::new(String::from("{\"version\": 1, \"rounds\": 0, \"spans\": []}\n")));
+    let http = if o.http == "off" {
+        None
+    } else {
+        match TcpListener::bind(&o.http) {
+            Ok(listener) => {
+                let addr = listener
+                    .local_addr()
+                    .map(|a| a.to_string())
+                    .unwrap_or_else(|_| o.http.clone());
+                println!("http: listening on {addr} (/metrics /healthz /queries)");
+                let _ = listener.set_nonblocking(true);
+                let reg = Arc::clone(&reg);
+                let queries = Arc::clone(&queries_json);
+                let stop = Arc::clone(&report_stop);
+                Some(std::thread::spawn(move || {
+                    while !stop.load(Ordering::SeqCst) {
+                        match listener.accept() {
+                            Ok((sock, _)) => serve_http(sock, &reg, &queries),
+                            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                                std::thread::sleep(Duration::from_millis(25));
+                            }
+                            Err(_) => std::thread::sleep(Duration::from_millis(25)),
+                        }
+                    }
+                }))
+            }
+            Err(e) => {
+                eprintln!("http: bind {} failed ({e}); introspection disabled", o.http);
+                None
+            }
+        }
+    };
+    let http_on = http.is_some();
 
     let deadline_t = Instant::now() + Duration::from_secs_f64(o.seconds);
     let mut inflight: Vec<Ticket> = Vec::new();
@@ -307,8 +543,12 @@ fn main() -> ExitCode {
     let (mut warm, mut cold) = (0u64, 0u64);
     let mut bracket_bad = 0u64;
     let mut stochastic = 0u64;
+    let mut injected_fired = false;
 
     while !STOP.load(Ordering::SeqCst) && Instant::now() < deadline_t {
+        if DUMP.swap(false, Ordering::SeqCst) {
+            dump_flight(flight.as_deref(), o.flight_dump.as_deref(), "sigusr1", None);
+        }
         // streaming submission: a burst of keyed queries, warm path first
         // (no operator crosses the API), cold path ships the Arc once
         for _ in 0..o.burst {
@@ -339,29 +579,51 @@ fn main() -> ExitCode {
             }
         }
         // advance the joint schedule a few rounds — never a full drain,
-        // so admission, shedding, and eviction interleave with progress
-        for _ in 0..4 {
-            if !eng.step_round() {
-                break;
+        // so admission, shedding, and eviction interleave with progress.
+        // A worker panic dumps the recorder before propagating: the
+        // post-mortem survives even when the process does not.
+        let stepped = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            for _ in 0..4 {
+                if !eng.step_round() {
+                    break;
+                }
             }
+        }));
+        if let Err(payload) = stepped {
+            dump_flight(flight.as_deref(), o.flight_dump.as_deref(), "worker_panic", None);
+            std::panic::resume_unwind(payload);
         }
-        // harvest what resolved; take_answer compacts the ticket log
+        // harvest what resolved; take_answer compacts the ticket log. A
+        // violated bracket (or the --inject-violation drill) records a
+        // BracketViolation on the span and dumps the recorder.
+        let mut violation: Option<(Option<SpanId>, &'static str)> = None;
         inflight.retain(|&tk| {
             if eng.answer(tk).is_none() {
                 return true;
             }
+            let span = eng.span_of(tk);
             match eng.take_answer(tk) {
                 Ok(Answer::Estimate { bounds, .. }) => {
                     answered += 1;
-                    if !bracket_valid(&bounds) {
+                    let bad = !bracket_valid(&bounds);
+                    if bad {
                         bracket_bad += 1;
+                    }
+                    if bad || inject_due(o.inject_violation, answered, &mut injected_fired) {
+                        let why = if bad { "bracket_violation" } else { "injected_violation" };
+                        violation = Some((span, why));
                     }
                 }
                 Ok(Answer::Stochastic(r)) => {
                     answered += 1;
                     stochastic += 1;
-                    if !interval_valid(&r) {
+                    let bad = !interval_valid(&r);
+                    if bad {
                         bracket_bad += 1;
+                    }
+                    if bad || inject_due(o.inject_violation, answered, &mut injected_fired) {
+                        let why = if bad { "bracket_violation" } else { "injected_violation" };
+                        violation = Some((span, why));
                     }
                 }
                 Ok(_) => answered += 1,
@@ -369,11 +631,24 @@ fn main() -> ExitCode {
             }
             false
         });
+        if let Some((span, reason)) = violation.take() {
+            if let (Some(f), Some(s)) = (flight.as_ref(), span) {
+                f.record(s, FlightEventKind::BracketViolation);
+            }
+            dump_flight(flight.as_deref(), o.flight_dump.as_deref(), reason, span);
+        }
         eng.export_into(&reg);
         reg.set_gauge("serve.inflight", inflight.len() as f64);
         reg.set_counter("serve.submitted", submitted);
         reg.set_counter("serve.refused", refused);
         reg.set_counter("serve.answered", answered);
+        if http_on {
+            let rendered = render_live(&eng);
+            match queries_json.lock() {
+                Ok(mut g) => *g = rendered,
+                Err(poisoned) => *poisoned.into_inner() = rendered,
+            }
+        }
     }
 
     // graceful shutdown: stop admitting, run the engine dry, harvest the
@@ -382,12 +657,15 @@ fn main() -> ExitCode {
     println!("shutdown ({reason}): draining {} in-flight queries", inflight.len());
     eng.drain();
     let mut lost = 0u64;
+    let mut violation: Option<(Option<SpanId>, &'static str)> = None;
     for tk in inflight.drain(..) {
+        let span = eng.span_of(tk);
         match eng.take_answer(tk) {
             Ok(Answer::Estimate { bounds, .. }) => {
                 answered += 1;
                 if !bracket_valid(&bounds) {
                     bracket_bad += 1;
+                    violation = Some((span, "bracket_violation"));
                 }
             }
             Ok(Answer::Stochastic(r)) => {
@@ -395,14 +673,19 @@ fn main() -> ExitCode {
                 stochastic += 1;
                 if !interval_valid(&r) {
                     bracket_bad += 1;
+                    violation = Some((span, "bracket_violation"));
                 }
             }
             Ok(_) => answered += 1,
             Err(_) => lost += 1,
         }
     }
-    report_stop.store(true, Ordering::SeqCst);
-    let _ = reporter.join();
+    if let Some((span, why)) = violation.take() {
+        if let (Some(f), Some(s)) = (flight.as_ref(), span) {
+            f.record(s, FlightEventKind::BracketViolation);
+        }
+        dump_flight(flight.as_deref(), o.flight_dump.as_deref(), why, span);
+    }
 
     let st = eng.stats();
     eng.export_into(&reg);
@@ -415,6 +698,20 @@ fn main() -> ExitCode {
     reg.set_counter("serve.bracket_violations", bracket_bad);
     reg.set_counter("serve.lost_tickets", lost);
     reg.set_gauge("serve.inflight", 0.0);
+    if http_on {
+        let rendered = render_live(&eng);
+        match queries_json.lock() {
+            Ok(mut g) => *g = rendered,
+            Err(poisoned) => *poisoned.into_inner() = rendered,
+        }
+    }
+    // stop the side threads only now: the reporter's final line and any
+    // last scrape see the post-drain exported state
+    report_stop.store(true, Ordering::SeqCst);
+    let _ = reporter.join();
+    if let Some(h) = http {
+        let _ = h.join();
+    }
     if let Some(path) = &o.telemetry {
         match write_json(path, &reg.snapshot()) {
             Ok(()) => println!("telemetry snapshot: {}", path.display()),
@@ -436,6 +733,9 @@ fn main() -> ExitCode {
         eng.store().evicted(),
         st.compactions,
     );
+    if injected_fired {
+        println!("injected violation drill fired (see flight dump)");
+    }
     if bracket_bad > 0 || lost > 0 {
         eprintln!("FAILED: {bracket_bad} invalid brackets, {lost} lost tickets");
         return ExitCode::from(1);

@@ -150,6 +150,11 @@ pub struct RunConfig {
     /// relative tolerance on the combined stochastic interval; must be
     /// finite and > 0 (validated at admission)
     pub slq_tol: f64,
+    /// query-lifecycle flight recorder of the streaming engine (ISSUE
+    /// 10): on by default — events hook only the scheduling phases, so
+    /// answers are bit-identical either way. JSON accepts a bool or the
+    /// strings "on"/"off"
+    pub flight: bool,
     /// extra free-form knobs
     pub extra: BTreeMap<String, String>,
 }
@@ -174,6 +179,7 @@ impl Default for RunConfig {
             slq_probes: 16,
             slq_seed: 0x51D,
             slq_tol: 1e-2,
+            flight: true,
             extra: BTreeMap::new(),
         }
     }
@@ -238,6 +244,13 @@ impl RunConfig {
         if let Some(x) = v.get("slq_tol").and_then(Json::as_f64) {
             c.slq_tol = x;
         }
+        match v.get("flight") {
+            Some(Json::Bool(b)) => c.flight = *b,
+            Some(Json::Str(s)) => {
+                c.flight = s.eq_ignore_ascii_case("on") || s.eq_ignore_ascii_case("true")
+            }
+            _ => {}
+        }
         // admission validation with the typed engine error (ISSUE 5
         // satellite, mirroring BatchPolicy::validate): 0 or absurd values
         // fail the whole config load instead of deadlocking the engine
@@ -268,6 +281,7 @@ impl RunConfig {
             .with_workers(self.engine_workers.max(1))
             .with_store_bytes(self.engine_store_bytes)
             .with_queue_cap(self.engine_queue_cap.max(1))
+            .with_flight(self.flight)
             .with_policy(if self.race { RacePolicy::Prune } else { RacePolicy::Exhaustive })
     }
 
@@ -346,6 +360,22 @@ mod tests {
         assert!(!RunConfig::from_json(r#"{"race": "exhaustive"}"#).unwrap().race);
         assert!(!RunConfig::from_json(r#"{"race": false}"#).unwrap().race);
         assert!(RunConfig::from_json(r#"{}"#).unwrap().race);
+    }
+
+    #[test]
+    fn flight_knob_parses_bool_and_string_forms() {
+        assert!(RunConfig::default().flight, "the flight recorder is on by default");
+        assert!(RunConfig::from_json(r#"{"flight": true}"#).unwrap().flight);
+        assert!(RunConfig::from_json(r#"{"flight": "on"}"#).unwrap().flight);
+        assert!(RunConfig::from_json(r#"{"flight": "On"}"#).unwrap().flight);
+        assert!(!RunConfig::from_json(r#"{"flight": "off"}"#).unwrap().flight);
+        assert!(!RunConfig::from_json(r#"{"flight": false}"#).unwrap().flight);
+        assert!(RunConfig::from_json(r#"{}"#).unwrap().flight);
+        assert!(RunConfig::from_json(r#"{"flight": "off"}"#)
+            .unwrap()
+            .engine_config()
+            .validate()
+            .is_ok());
     }
 
     #[test]

@@ -93,6 +93,21 @@ fn main() -> ExitCode {
         }
     }
 
+    if let Some(s) = flags.get("flight") {
+        // `--flight on` (or true/1) keeps the engine's query-lifecycle
+        // flight recorder armed for config-driven runs; `--flight off`
+        // (or false/0) drops it. Answers are bit-identical either way —
+        // the knob only trades a bounded event ring for its overhead.
+        if ["on", "true", "1"].iter().any(|v| s.eq_ignore_ascii_case(v)) {
+            cfg.flight = true;
+        } else if ["off", "false", "0"].iter().any(|v| s.eq_ignore_ascii_case(v)) {
+            cfg.flight = false;
+        } else {
+            eprintln!("invalid --flight value '{s}' (expected on|off)\n{USAGE}");
+            return ExitCode::from(2);
+        }
+    }
+
     // engine scheduling knobs, validated at admission with the typed
     // error (ISSUE 5 satellite — mirrors the BatchPolicy rejection path)
     if let Some(s) = flags.get("engine-lanes").and_then(|s| s.parse::<usize>().ok()) {
@@ -176,6 +191,7 @@ const USAGE: &str = "usage: gauss-bif <fig1|fig2|table2|rates|block|race|session
                 0/absurd values are rejected at admission)\n\
                 --slq-probes P --slq-seed S --slq-tol T (stochastic trace/logdet knobs;\n\
                 0 probes / non-positive tolerance are rejected at admission)\n\
+                --flight on|off (engine query-lifecycle flight recorder; answers identical)\n\
                 --telemetry FILE (dump a metrics-registry JSON snapshot after the run;\n\
                 rates adds a profiled-engine pass, serve exports service counters)";
 

@@ -105,6 +105,22 @@ fn prom_name(name: &str) -> String {
     out
 }
 
+/// Escape a Prometheus label *value* per the exposition format: inside
+/// the double quotes, backslash, double-quote, and line-feed must be
+/// written `\\`, `\"`, and `\n`.
+pub(crate) fn prom_label_escape(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
 /// Serialize a snapshot in Prometheus exposition text format. Histograms
 /// are rendered as summaries (`quantile` labels plus `_sum`/`_count`).
 pub fn to_prometheus(snap: &Snapshot) -> String {
@@ -123,7 +139,11 @@ pub fn to_prometheus(snap: &Snapshot) -> String {
                 for (q, v) in
                     [("0.5", h.p50), ("0.9", h.p90), ("0.99", h.p99)]
                 {
-                    out.push_str(&format!("{p}{{quantile=\"{q}\"}} {}\n", fin(v)));
+                    out.push_str(&format!(
+                        "{p}{{quantile=\"{}\"}} {}\n",
+                        prom_label_escape(q),
+                        fin(v)
+                    ));
                 }
                 out.push_str(&format!(
                     "{p}_sum {}\n{p}_count {}\n",
@@ -206,6 +226,37 @@ mod tests {
                 "illegal prometheus name {name:?}"
             );
         }
+    }
+
+    #[test]
+    fn prom_name_rewrites_dots_and_guards_leading_digits() {
+        assert_eq!(super::prom_name("engine.admission.shed"), "engine_admission_shed");
+        assert_eq!(super::prom_name("rates.n24.rho"), "rates_n24_rho");
+        assert_eq!(super::prom_name("weird name-with/chars"), "weird_name_with_chars");
+        assert_eq!(super::prom_name("0starts.with.digit"), "_0starts_with_digit");
+        assert_eq!(super::prom_name(""), "_");
+        assert_eq!(super::prom_name("already_legal:name"), "already_legal:name");
+    }
+
+    #[test]
+    fn prom_label_escape_handles_quotes_backslashes_and_newlines() {
+        assert_eq!(prom_label_escape("plain"), "plain");
+        assert_eq!(prom_label_escape("say \"hi\""), "say \\\"hi\\\"");
+        assert_eq!(prom_label_escape("a\\b"), "a\\\\b");
+        assert_eq!(prom_label_escape("line1\nline2"), "line1\\nline2");
+        assert_eq!(
+            prom_label_escape("\"\\\n"),
+            "\\\"\\\\\\n",
+            "all three specials in sequence"
+        );
+        // escaped values embed in an exposition line without breaking the
+        // quoting: the rendered label stays on one physical line and the
+        // only raw quotes are the delimiters
+        let line = format!("m{{k=\"{}\"}} 1", prom_label_escape("v\"w\nx\\y"));
+        assert_eq!(line.lines().count(), 1, "newline must not split the sample line");
+        let unescaped_quotes =
+            line.match_indices('"').filter(|(i, _)| *i == 0 || line.as_bytes()[i - 1] != b'\\');
+        assert_eq!(unescaped_quotes.count(), 2, "only the delimiting quotes survive");
     }
 
     #[test]

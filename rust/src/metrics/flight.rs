@@ -1,0 +1,498 @@
+//! Query-lifecycle flight recorder: a bounded, lock-striped ring buffer
+//! of typed per-span events (ISSUE 10).
+//!
+//! Aggregate counters (the [`MetricsRegistry`]) answer *how much*; the
+//! flight recorder answers *what happened to this query* — every
+//! submission gets a [`SpanId`] at admission and the engine appends typed
+//! lifecycle events ([`FlightEventKind`]) with nanosecond timestamps as
+//! the query moves through admission, planning, rounds, parking,
+//! shedding, retirement, and answering. The buffer is bounded (old
+//! events are overwritten, never reallocated) and striped across several
+//! mutexes keyed by span, so concurrent recorders — the engine's driving
+//! thread, a serving binary's audit path — contend only when two spans
+//! hash to the same stripe.
+//!
+//! **Hot-path discipline.** Recording allocates nothing: every event is
+//! a `Copy` struct written into a slot preallocated at construction, and
+//! a global ordering sequence comes from one relaxed `fetch_add`. The
+//! recorder is driven entirely from the engine's *scheduling* phases
+//! (admission, lane-budget pass, harvest) — never from inside
+//! `Session::step` — so panel math runs exactly the same instructions
+//! with the recorder on or off and answers stay bit-identical
+//! (property-tested in `rust/tests/prop_engine.rs`).
+//!
+//! Post-mortem dumps serialize the surviving window as JSON
+//! ([`FlightRecorder::to_json`], schema version [`FLIGHT_DUMP_VERSION`])
+//! ordered by the global sequence — wraparound cannot reorder events,
+//! only truncate the oldest ([`FlightRecorder::dropped`] counts what the
+//! window lost).
+
+use super::registry::MetricsRegistry;
+use super::{export, lock_tolerant};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Identifies one query across its lifecycle events: the engine's global
+/// submission sequence number, unique for the engine's lifetime.
+pub type SpanId = u64;
+
+/// Span id attached to events that describe no particular query (e.g. a
+/// violation audit that could not resolve its ticket).
+pub const NO_SPAN: SpanId = u64::MAX;
+
+/// Schema version of [`FlightRecorder::to_json`] dumps.
+pub const FLIGHT_DUMP_VERSION: u64 = 1;
+
+/// Default total event capacity of an engine's recorder.
+pub const FLIGHT_DEFAULT_CAPACITY: usize = 4096;
+
+/// Default stripe count (capacity is split evenly across stripes).
+pub const FLIGHT_DEFAULT_STRIPES: usize = 8;
+
+/// One typed lifecycle event. All payloads are `Copy` scalars — recording
+/// never allocates.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FlightEventKind {
+    /// The query entered the engine (a session accepted it).
+    Submitted,
+    /// Admission accounting: estimated lane cost and the caller's round
+    /// deadline (`u64::MAX` for deadline-free submissions).
+    Admitted { cost: u64, deadline: u64 },
+    /// The query's lanes were planned onto its operator's panel.
+    PlannedOntoPanel { op_key: u64, lanes: u32 },
+    /// The query survived a joint round still unresolved; `gap` is its
+    /// current four-bound bracket width (NaN for multi-lane kinds whose
+    /// bracket is not a single interval).
+    SweptRound { round: u64, gap: f64 },
+    /// Parked whole by the global lane budget.
+    Parked,
+    /// Resumed from a park, bit-identically.
+    Resumed,
+    /// Shed by backpressure; the answer is the bracket `[lo, hi]` the
+    /// query had tightened to (NaN for stochastic sheds, whose combined
+    /// interval lives in the answer).
+    Shed { lo: f64, hi: f64 },
+    /// A lane retired by interval dominance.
+    RetiredDominated,
+    /// A lane retired because the surrounding decision resolved first.
+    RetiredDecided,
+    /// A stochastic probe lane retired early (its own bracket met the
+    /// tolerance before exhaustion).
+    ProbeRetired { probe: u32 },
+    /// The query resolved: rounds spent in the engine and wall time from
+    /// submission to harvest.
+    Answered { rounds: u64, wall_ns: u64 },
+    /// An auditor observed an invalid answer bracket for this span — the
+    /// post-mortem trigger `serve` dumps on.
+    BracketViolation,
+}
+
+impl FlightEventKind {
+    /// Stable snake_case name used by the JSON dump.
+    pub fn name(&self) -> &'static str {
+        match self {
+            FlightEventKind::Submitted => "submitted",
+            FlightEventKind::Admitted { .. } => "admitted",
+            FlightEventKind::PlannedOntoPanel { .. } => "planned_onto_panel",
+            FlightEventKind::SweptRound { .. } => "swept_round",
+            FlightEventKind::Parked => "parked",
+            FlightEventKind::Resumed => "resumed",
+            FlightEventKind::Shed { .. } => "shed",
+            FlightEventKind::RetiredDominated => "retired_dominated",
+            FlightEventKind::RetiredDecided => "retired_decided",
+            FlightEventKind::ProbeRetired { .. } => "probe_retired",
+            FlightEventKind::Answered { .. } => "answered",
+            FlightEventKind::BracketViolation => "bracket_violation",
+        }
+    }
+}
+
+/// One recorded event: global order, timestamp (ns since the recorder
+/// was built), owning span, and the typed payload.
+#[derive(Clone, Copy, Debug)]
+pub struct FlightEvent {
+    /// Global recording order (monotone across stripes) — the dump sort
+    /// key, immune to ring wraparound.
+    pub seq: u64,
+    /// Nanoseconds since the recorder's construction.
+    pub ts_ns: u64,
+    pub span: SpanId,
+    pub kind: FlightEventKind,
+}
+
+/// One stripe's bounded window: a preallocated slot vector written as a
+/// ring once full.
+struct Ring {
+    buf: Vec<FlightEvent>,
+    cap: usize,
+    /// Events ever written to this stripe; `written > cap` means the
+    /// oldest `written - cap` were overwritten.
+    written: u64,
+}
+
+impl Ring {
+    fn new(cap: usize) -> Self {
+        Ring { buf: Vec::with_capacity(cap), cap, written: 0 }
+    }
+
+    /// Append, overwriting the stripe's oldest slot once full. Returns
+    /// `true` when an old event was dropped to make room.
+    fn push(&mut self, ev: FlightEvent) -> bool {
+        if self.buf.len() < self.cap {
+            self.buf.push(ev); // within the preallocated capacity
+            self.written += 1;
+            false
+        } else {
+            let slot = (self.written % self.cap as u64) as usize;
+            self.buf[slot] = ev;
+            self.written += 1;
+            true
+        }
+    }
+}
+
+/// The bounded, lock-striped event ring. Shareable (`&self` recording,
+/// typically behind an `Arc`): the engine records from its driving
+/// thread while a serving binary's scrape/audit threads snapshot or dump
+/// concurrently.
+pub struct FlightRecorder {
+    stripes: Vec<Mutex<Ring>>,
+    seq: AtomicU64,
+    dropped: AtomicU64,
+    epoch: Instant,
+}
+
+/// Float serializer for event payloads: unlike the registry exporter
+/// (which clamps to 0 so gauges always chart), a post-mortem must not
+/// disguise an undefined gap as a converged one — non-finite becomes
+/// `null`.
+fn flight_num(v: f64) -> String {
+    if v.is_finite() {
+        export::json_num(v)
+    } else {
+        "null".to_string()
+    }
+}
+
+impl FlightRecorder {
+    /// A recorder with the default window ([`FLIGHT_DEFAULT_CAPACITY`]
+    /// events over [`FLIGHT_DEFAULT_STRIPES`] stripes).
+    pub fn new() -> Self {
+        Self::with_capacity(FLIGHT_DEFAULT_CAPACITY, FLIGHT_DEFAULT_STRIPES)
+    }
+
+    /// A recorder holding (up to) `capacity` events split evenly over
+    /// `stripes` mutexes. Both are floored to 1.
+    pub fn with_capacity(capacity: usize, stripes: usize) -> Self {
+        let stripes = stripes.max(1);
+        let per = (capacity.max(1)).div_ceil(stripes);
+        FlightRecorder {
+            stripes: (0..stripes).map(|_| Mutex::new(Ring::new(per))).collect(),
+            seq: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+            epoch: Instant::now(),
+        }
+    }
+
+    /// Nanoseconds since construction — the timestamp base every event
+    /// uses, exposed so callers can stamp correlated data (submission
+    /// times) on the same clock.
+    #[inline]
+    pub fn now_ns(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
+    }
+
+    /// Record one event for `span`. Allocation-free: one relaxed
+    /// `fetch_add` for the order, one stripe mutex, one slot write.
+    #[inline]
+    pub fn record(&self, span: SpanId, kind: FlightEventKind) {
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        let ev = FlightEvent { seq, ts_ns: self.now_ns(), span, kind };
+        let stripe = (span % self.stripes.len() as u64) as usize;
+        if lock_tolerant(&self.stripes[stripe]).push(ev) {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Events ever recorded (including any since overwritten).
+    pub fn recorded(&self) -> u64 {
+        self.seq.load(Ordering::Relaxed)
+    }
+
+    /// Events overwritten by the bounded window.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Total event capacity across every stripe.
+    pub fn capacity(&self) -> usize {
+        self.stripes.len() * lock_tolerant(&self.stripes[0]).cap
+    }
+
+    /// Snapshot the surviving window in recording order (ascending
+    /// `seq`). Wraparound drops the oldest events per stripe but never
+    /// reorders survivors.
+    pub fn events(&self) -> Vec<FlightEvent> {
+        let mut out = Vec::new();
+        for s in &self.stripes {
+            out.extend(lock_tolerant(s).buf.iter().copied());
+        }
+        out.sort_by_key(|e| e.seq);
+        out
+    }
+
+    /// Every surviving event for one span, in recording order — the
+    /// post-mortem view of a single query's lifecycle.
+    pub fn span_events(&self, span: SpanId) -> Vec<FlightEvent> {
+        let stripe = (span % self.stripes.len() as u64) as usize;
+        let mut out: Vec<FlightEvent> = lock_tolerant(&self.stripes[stripe])
+            .buf
+            .iter()
+            .filter(|e| e.span == span)
+            .copied()
+            .collect();
+        out.sort_by_key(|e| e.seq);
+        out
+    }
+
+    /// Publish recorder accounting into `reg` under `flight.*` names
+    /// (idempotent set-style writes, like every other exporter).
+    pub fn export_into(&self, reg: &MetricsRegistry) {
+        reg.set_counter("flight.recorded", self.recorded());
+        reg.set_counter("flight.dropped", self.dropped());
+        reg.set_gauge("flight.capacity", self.capacity() as f64);
+        reg.set_gauge("flight.window", self.events().len() as f64);
+    }
+
+    /// Serialize the surviving window as the version-1 post-mortem dump:
+    ///
+    /// ```json
+    /// {"version": 1, "recorded": N, "dropped": D, "events":
+    ///   [{"seq": 0, "ts_ns": 123, "span": 7, "event": "submitted"}, ...]}
+    /// ```
+    ///
+    /// Event payload fields are flattened next to `"event"`; floats use
+    /// the same serializer as the registry exporter (NaN/inf degrade to
+    /// `null`).
+    pub fn to_json(&self) -> String {
+        let events = self.events();
+        let mut out = String::with_capacity(64 + events.len() * 96);
+        out.push_str(&format!(
+            "{{\"version\": {FLIGHT_DUMP_VERSION}, \"recorded\": {}, \"dropped\": {}, \"events\": [",
+            self.recorded(),
+            self.dropped()
+        ));
+        for (i, e) in events.iter().enumerate() {
+            if i > 0 {
+                out.push_str(", ");
+            }
+            out.push_str(&format!(
+                "{{\"seq\": {}, \"ts_ns\": {}, \"span\": {}, \"event\": \"{}\"",
+                e.seq,
+                e.ts_ns,
+                e.span,
+                export::json_escape(e.kind.name())
+            ));
+            match e.kind {
+                FlightEventKind::Admitted { cost, deadline } => {
+                    out.push_str(&format!(", \"cost\": {cost}, \"deadline\": {deadline}"));
+                }
+                FlightEventKind::PlannedOntoPanel { op_key, lanes } => {
+                    out.push_str(&format!(", \"op_key\": {op_key}, \"lanes\": {lanes}"));
+                }
+                FlightEventKind::SweptRound { round, gap } => {
+                    out.push_str(&format!(", \"round\": {round}, \"gap\": {}", flight_num(gap)));
+                }
+                FlightEventKind::Shed { lo, hi } => {
+                    out.push_str(&format!(
+                        ", \"lo\": {}, \"hi\": {}",
+                        flight_num(lo),
+                        flight_num(hi)
+                    ));
+                }
+                FlightEventKind::ProbeRetired { probe } => {
+                    out.push_str(&format!(", \"probe\": {probe}"));
+                }
+                FlightEventKind::Answered { rounds, wall_ns } => {
+                    out.push_str(&format!(", \"rounds\": {rounds}, \"wall_ns\": {wall_ns}"));
+                }
+                FlightEventKind::Submitted
+                | FlightEventKind::Parked
+                | FlightEventKind::Resumed
+                | FlightEventKind::RetiredDominated
+                | FlightEventKind::RetiredDecided
+                | FlightEventKind::BracketViolation => {}
+            }
+            out.push('}');
+        }
+        out.push_str("]}");
+        out
+    }
+}
+
+impl Default for FlightRecorder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::json::{parse, Json};
+
+    #[test]
+    fn records_and_orders_events_across_stripes() {
+        let rec = FlightRecorder::with_capacity(64, 4);
+        for span in 0..8u64 {
+            rec.record(span, FlightEventKind::Submitted);
+            rec.record(span, FlightEventKind::Admitted { cost: 1, deadline: u64::MAX });
+        }
+        let evs = rec.events();
+        assert_eq!(evs.len(), 16);
+        assert_eq!(rec.recorded(), 16);
+        assert_eq!(rec.dropped(), 0);
+        for (i, e) in evs.iter().enumerate() {
+            assert_eq!(e.seq, i as u64, "global order survives striping");
+        }
+        let span3 = rec.span_events(3);
+        assert_eq!(span3.len(), 2);
+        assert_eq!(span3[0].kind, FlightEventKind::Submitted);
+        assert!(matches!(span3[1].kind, FlightEventKind::Admitted { cost: 1, .. }));
+    }
+
+    #[test]
+    fn ring_wraparound_keeps_the_newest_events_in_order() {
+        // one stripe, capacity 8: write 20 single-span events so the ring
+        // wraps more than once — the window must hold exactly the last 8,
+        // ascending by seq with no reordering across the wrap point
+        let rec = FlightRecorder::with_capacity(8, 1);
+        for i in 0..20u64 {
+            rec.record(0, FlightEventKind::SweptRound { round: i, gap: 0.5 });
+        }
+        let evs = rec.events();
+        assert_eq!(evs.len(), 8, "window bounded at capacity");
+        assert_eq!(rec.dropped(), 12);
+        assert_eq!(rec.recorded(), 20);
+        let seqs: Vec<u64> = evs.iter().map(|e| e.seq).collect();
+        assert_eq!(seqs, (12..20).collect::<Vec<_>>(), "oldest dropped, order kept");
+        for (e, want) in evs.iter().zip(12u64..) {
+            match e.kind {
+                FlightEventKind::SweptRound { round, .. } => assert_eq!(round, want),
+                other => panic!("wrong kind {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn wraparound_order_holds_with_many_stripes_and_spans() {
+        let rec = FlightRecorder::with_capacity(16, 4);
+        for i in 0..100u64 {
+            rec.record(i % 5, FlightEventKind::SweptRound { round: i, gap: 1.0 });
+        }
+        let evs = rec.events();
+        assert!(evs.len() <= rec.capacity());
+        assert!(!evs.is_empty());
+        for w in evs.windows(2) {
+            assert!(w[0].seq < w[1].seq, "strictly ascending across stripes");
+            assert!(w[0].ts_ns <= w[1].ts_ns, "timestamps monotone with seq");
+        }
+    }
+
+    #[test]
+    fn timestamps_are_monotone() {
+        let rec = FlightRecorder::new();
+        let a = rec.now_ns();
+        rec.record(1, FlightEventKind::Submitted);
+        rec.record(1, FlightEventKind::Answered { rounds: 3, wall_ns: 10 });
+        let evs = rec.span_events(1);
+        assert!(evs[0].ts_ns >= a);
+        assert!(evs[1].ts_ns >= evs[0].ts_ns);
+    }
+
+    #[test]
+    fn dump_round_trips_through_the_crate_json_parser() {
+        let rec = FlightRecorder::with_capacity(32, 2);
+        rec.record(7, FlightEventKind::Submitted);
+        rec.record(7, FlightEventKind::Admitted { cost: 2, deadline: 40 });
+        rec.record(7, FlightEventKind::PlannedOntoPanel { op_key: 9, lanes: 2 });
+        rec.record(7, FlightEventKind::SweptRound { round: 1, gap: 0.25 });
+        rec.record(7, FlightEventKind::Shed { lo: 1.0, hi: 2.0 });
+        rec.record(7, FlightEventKind::ProbeRetired { probe: 3 });
+        rec.record(7, FlightEventKind::Answered { rounds: 5, wall_ns: 1234 });
+        rec.record(7, FlightEventKind::BracketViolation);
+        let doc = parse(&rec.to_json()).expect("dump parses");
+        assert_eq!(doc.get("version").and_then(Json::as_usize), Some(1));
+        assert_eq!(doc.get("recorded").and_then(Json::as_usize), Some(8));
+        let evs = doc.get("events").and_then(Json::as_arr).expect("events array");
+        assert_eq!(evs.len(), 8);
+        let names: Vec<&str> =
+            evs.iter().map(|e| e.get("event").and_then(Json::as_str).unwrap()).collect();
+        assert_eq!(
+            names,
+            vec![
+                "submitted",
+                "admitted",
+                "planned_onto_panel",
+                "swept_round",
+                "shed",
+                "probe_retired",
+                "answered",
+                "bracket_violation"
+            ]
+        );
+        assert_eq!(evs[1].get("cost").and_then(Json::as_usize), Some(2));
+        assert_eq!(evs[2].get("op_key").and_then(Json::as_usize), Some(9));
+        assert_eq!(evs[3].get("gap").and_then(Json::as_f64), Some(0.25));
+        assert_eq!(evs[6].get("wall_ns").and_then(Json::as_usize), Some(1234));
+        for e in evs {
+            assert_eq!(e.get("span").and_then(Json::as_usize), Some(7));
+        }
+    }
+
+    #[test]
+    fn nan_gap_degrades_to_null_in_the_dump() {
+        let rec = FlightRecorder::with_capacity(4, 1);
+        rec.record(0, FlightEventKind::SweptRound { round: 1, gap: f64::NAN });
+        let doc = parse(&rec.to_json()).expect("dump with NaN still parses");
+        let evs = doc.get("events").and_then(Json::as_arr).unwrap();
+        assert!(matches!(evs[0].get("gap"), Some(Json::Null)));
+    }
+
+    #[test]
+    fn exports_accounting_into_the_registry() {
+        let rec = FlightRecorder::with_capacity(4, 1);
+        for _ in 0..6 {
+            rec.record(0, FlightEventKind::Submitted);
+        }
+        let reg = MetricsRegistry::new();
+        rec.export_into(&reg);
+        let snap = reg.snapshot();
+        assert_eq!(snap.get("flight.recorded"), Some(&crate::metrics::MetricValue::Counter(6)));
+        assert_eq!(snap.get("flight.dropped"), Some(&crate::metrics::MetricValue::Counter(2)));
+        assert_eq!(snap.get("flight.capacity"), Some(&crate::metrics::MetricValue::Gauge(4.0)));
+    }
+
+    #[test]
+    fn concurrent_recording_is_safe_and_complete() {
+        let rec = std::sync::Arc::new(FlightRecorder::with_capacity(4096, 8));
+        std::thread::scope(|s| {
+            for t in 0..4u64 {
+                let rec = std::sync::Arc::clone(&rec);
+                s.spawn(move || {
+                    for i in 0..100 {
+                        rec.record(t * 100 + i, FlightEventKind::Submitted);
+                    }
+                });
+            }
+        });
+        assert_eq!(rec.recorded(), 400);
+        assert_eq!(rec.dropped(), 0);
+        let evs = rec.events();
+        assert_eq!(evs.len(), 400);
+        for w in evs.windows(2) {
+            assert!(w[0].seq < w[1].seq);
+        }
+    }
+}

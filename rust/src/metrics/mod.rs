@@ -10,13 +10,19 @@
 //!   snapshots (behind the `--telemetry <path>` CLI flag);
 //! - [`trace`] — opt-in convergence tracing: per-query four-bound gap
 //!   trajectories and fitted geometric contraction rates, compared
-//!   against the paper's `(√κ−1)/(√κ+1)` prediction.
+//!   against the paper's `(√κ−1)/(√κ+1)` prediction;
+//! - [`flight`] — the query-lifecycle flight recorder: typed per-span
+//!   events (admission → planning → rounds → answer) in a bounded
+//!   lock-striped ring, dumped as JSON for post-mortems and scraped live
+//!   by the `serve` binary's introspection endpoints.
 
 pub mod export;
+pub mod flight;
 pub mod histogram;
 pub mod registry;
 pub mod trace;
 
+pub use flight::{FlightEvent, FlightEventKind, FlightRecorder, SpanId};
 pub use histogram::Histogram;
 pub use registry::{HistSummary, MetricValue, MetricsRegistry, Snapshot};
 pub use trace::{theoretical_rate, GapTrace};

@@ -69,19 +69,30 @@ impl GapTrace {
 
     /// Fitted per-iteration geometric contraction rate: the least-squares
     /// slope of `ln(gap)` against the iteration index, exponentiated.
-    /// Needs at least 3 points; returns `None` otherwise (too short to
+    ///
+    /// Only *usable* points enter the fit — finite gaps above the noise
+    /// floor. [`from_history`](Self::from_history) already truncates at
+    /// the floor, but the fields are public and hand-built traces (or
+    /// histories spliced from several sources) can carry converged or
+    /// degenerate entries whose `ln` would poison the regression. Needs
+    /// at least 3 usable points; returns `None` otherwise (too short to
     /// distinguish a trend from startup transients).
     pub fn fitted_rate(&self) -> Option<f64> {
-        if self.len() < 3 {
+        let usable: Vec<(f64, f64)> = self
+            .iters
+            .iter()
+            .zip(&self.gaps)
+            .filter(|(_, &g)| g.is_finite() && g > NOISE_FLOOR)
+            .map(|(&i, &g)| (i as f64, g.ln()))
+            .collect();
+        if usable.len() < 3 {
             return None;
         }
-        let n = self.len() as f64;
-        let xs = self.iters.iter().map(|&i| i as f64);
-        let ys = self.gaps.iter().map(|g| g.ln());
-        let sx: f64 = xs.clone().sum();
-        let sy: f64 = ys.clone().sum();
-        let sxx: f64 = xs.clone().map(|x| x * x).sum();
-        let sxy: f64 = xs.zip(ys).map(|(x, y)| x * y).sum();
+        let n = usable.len() as f64;
+        let sx: f64 = usable.iter().map(|&(x, _)| x).sum();
+        let sy: f64 = usable.iter().map(|&(_, y)| y).sum();
+        let sxx: f64 = usable.iter().map(|&(x, _)| x * x).sum();
+        let sxy: f64 = usable.iter().map(|&(x, y)| x * y).sum();
         let denom = n * sxx - sx * sx;
         if denom.abs() < f64::EPSILON {
             return None;
@@ -169,6 +180,27 @@ mod tests {
         assert_eq!(t.fitted_rate(), None);
         assert!(GapTrace::default().is_empty());
         assert_eq!(GapTrace::default().final_gap(), None);
+    }
+
+    #[test]
+    fn degenerate_points_do_not_count_toward_the_fit() {
+        // hand-built trace (the fields are public): 5 recorded points but
+        // only 2 survive the usability filter — no fit
+        let t = GapTrace {
+            iters: vec![1, 2, 3, 4, 5],
+            gaps: vec![1e-1, 1e-2, 0.0, 1e-15, f64::NAN],
+        };
+        assert_eq!(t.len(), 5);
+        assert_eq!(t.fitted_rate(), None, "2 usable points is not a trend");
+
+        // with a third usable point the fit returns, and the degenerate
+        // tail does not drag the slope: the rate matches the clean prefix
+        let t3 = GapTrace {
+            iters: vec![1, 2, 3, 4, 5],
+            gaps: vec![4e-1, 2e-1, 1e-1, 0.0, f64::NEG_INFINITY],
+        };
+        let fitted = t3.fitted_rate().expect("3 usable points");
+        assert!((fitted - 0.5).abs() < 1e-9, "fitted {fitted}");
     }
 
     #[test]

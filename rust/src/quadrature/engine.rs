@@ -89,6 +89,7 @@ use super::judge::{JudgeOutcome, JudgeStats};
 use super::query::{Answer, Query, Session};
 use super::race::RacePolicy;
 use super::stochastic::SlqConfigError;
+use crate::metrics::flight::{FlightEventKind, FlightRecorder, SpanId};
 use crate::metrics::{lock_tolerant, Histogram, MetricsRegistry};
 use crate::sparse::SymOp;
 use std::any::Any;
@@ -260,6 +261,14 @@ pub struct EngineConfig {
     /// has a bracket to answer with yet. `usize::MAX` (the default)
     /// never sheds; [`Engine::submit`] bypasses the cap entirely.
     pub queue_cap: usize,
+    /// Record per-query lifecycle events into the engine's
+    /// [`FlightRecorder`] (span at admission; typed events at
+    /// admission/planning/rounds/park/shed/retire/answer). On by
+    /// default: recording happens only in the scheduling phases — never
+    /// inside `Session::step` — so panel math and answers are
+    /// bit-identical with the recorder on or off (property-tested), and
+    /// the bounded ring keeps memory constant.
+    pub flight: bool,
 }
 
 impl Default for EngineConfig {
@@ -275,6 +284,7 @@ impl Default for EngineConfig {
             record_traces: false,
             store_bytes: usize::MAX,
             queue_cap: usize::MAX,
+            flight: true,
         }
     }
 }
@@ -327,6 +337,11 @@ impl EngineConfig {
 
     pub fn with_queue_cap(mut self, c: usize) -> Self {
         self.queue_cap = c;
+        self
+    }
+
+    pub fn with_flight(mut self, on: bool) -> Self {
+        self.flight = on;
         self
     }
 
@@ -716,6 +731,11 @@ struct TicketState {
     /// Estimates may be shed mid-flight (their bracket is an answer);
     /// decision queries may not.
     sheddable: bool,
+    /// Engine round at submission — flight-recorder rounds accounting.
+    submit_round: u64,
+    /// Recorder timestamp at submission (0 with the recorder off) — the
+    /// `Answered` event's wall-time base.
+    submit_ns: u64,
     answer: Option<Answer>,
 }
 
@@ -794,6 +814,10 @@ pub struct Engine {
     /// (`stats.pool_reuse` counts the reuses). `None` until then, so
     /// single-worker engines never pay for a pool.
     pool: Option<SweepPool>,
+    /// Query-lifecycle flight recorder, allocated iff
+    /// [`EngineConfig::flight`]. Shared (`Arc`) so serving binaries can
+    /// scrape and dump it while the engine runs.
+    flight: Option<Arc<FlightRecorder>>,
     next_anon: OpKey,
 }
 
@@ -813,8 +837,25 @@ impl Engine {
             stats: EngineStats::default(),
             profile: cfg.profile.then(|| Box::new(RoundProfile::default())),
             pool: None,
+            flight: cfg.flight.then(|| Arc::new(FlightRecorder::new())),
             next_anon: ANON_KEY_BASE,
         })
+    }
+
+    /// Record one lifecycle event for `span` (no-op with the recorder
+    /// off).
+    #[inline]
+    fn emit(&self, span: SpanId, kind: FlightEventKind) {
+        if let Some(f) = &self.flight {
+            f.record(span, kind);
+        }
+    }
+
+    /// The engine's flight recorder, for scrape/dump consumers (`None`
+    /// when [`EngineConfig::flight`] is off). Clone the `Arc` to read it
+    /// from other threads while the engine runs.
+    pub fn flight(&self) -> Option<&Arc<FlightRecorder>> {
+        self.flight.as_ref()
     }
 
     pub fn config(&self) -> &EngineConfig {
@@ -876,6 +917,9 @@ impl Engine {
             reg.set_gauge("engine.profile.worker_idle_frac", p.idle_frac());
             reg.set_histogram("engine.profile.step_ns", p.step_ns.clone());
         }
+        if let Some(f) = &self.flight {
+            f.export_into(reg);
+        }
     }
 
     /// Live (not yet evicted) sessions.
@@ -893,6 +937,40 @@ impl Engine {
     /// minus compacted) — the measure [`Engine::take_answer`] bounds.
     pub fn live_tickets(&self) -> usize {
         self.tickets.len() - self.free.len()
+    }
+
+    /// Snapshot every in-flight (unanswered) ticket as a [`LiveSpan`],
+    /// sorted by span id (= admission order). Read-only: walks the open
+    /// lists and asks each session for its latest bracket, so it is safe
+    /// to call between rounds from an introspection endpoint.
+    pub fn live_spans(&self) -> Vec<LiveSpan> {
+        let now = self.stats.rounds as u64;
+        let mut out = Vec::with_capacity(self.open);
+        for slot in &self.slots {
+            for tk in &slot.open {
+                let Some(st) = self.ticket_state(*tk) else {
+                    continue;
+                };
+                if st.answer.is_some() {
+                    continue;
+                }
+                out.push(LiveSpan {
+                    span: st.seq,
+                    key: slot.key,
+                    rounds_elapsed: now.saturating_sub(st.submit_round),
+                    bounds: slot.session.bounds(st.qid),
+                    parked: slot.session.is_parked(st.qid),
+                });
+            }
+        }
+        out.sort_by_key(|s| s.span);
+        out
+    }
+
+    /// Flight-recorder span id of a ticket (its admission sequence
+    /// number), or `None` for stale tickets.
+    pub fn span_of(&self, ticket: Ticket) -> Option<SpanId> {
+        self.ticket_state(ticket).map(|st| st.seq)
     }
 
     /// A key guaranteed not to collide with other [`Engine::fresh_key`]
@@ -1077,18 +1155,44 @@ impl Engine {
             Some(d) => (self.stats.rounds as u64 + d).saturating_sub(est_rounds),
             None => u64::MAX,
         };
-        let (key, qid, answer) = {
+        // the submission sequence number doubles as the query's flight
+        // span id: unique for the engine's lifetime, known at admission
+        let span = self.seq;
+        self.seq += 1;
+        let submit_round = self.stats.rounds as u64;
+        let submit_ns = self.flight.as_ref().map_or(0, |f| f.now_ns());
+        self.emit(span, FlightEventKind::Submitted);
+        self.emit(
+            span,
+            FlightEventKind::Admitted { cost, deadline: deadline.unwrap_or(u64::MAX) },
+        );
+        let (key, qid, lanes, answer) = {
             let s = &mut self.slots[slot];
             let qid = s.session.submit(q);
             // trivially-decidable queries (zero vectors, empty argmax
             // batches) answer at submission without ever taking a lane
-            (s.key, qid, s.session.answer(qid).cloned())
+            (s.key, qid, s.session.lane_demand(qid), s.session.answer(qid).cloned())
         };
         let resolved = answer.is_some();
-        let seq = self.seq;
-        self.seq += 1;
-        let ticket =
-            self.alloc_ticket(TicketState { key, qid, seq, urgency, cost, sheddable, answer });
+        if resolved {
+            self.emit(span, FlightEventKind::Answered { rounds: 0, wall_ns: 0 });
+        } else {
+            self.emit(
+                span,
+                FlightEventKind::PlannedOntoPanel { op_key: key, lanes: lanes as u32 },
+            );
+        }
+        let ticket = self.alloc_ticket(TicketState {
+            key,
+            qid,
+            seq: span,
+            urgency,
+            cost,
+            sheddable,
+            submit_round,
+            submit_ns,
+            answer,
+        });
         if !resolved {
             let s = &mut self.slots[slot];
             s.open.push(ticket);
@@ -1127,6 +1231,18 @@ impl Engine {
         }
         match victim {
             Some((_, t)) => {
+                if self.flight.is_some() {
+                    // the bracket the victim resolves to (single-lane
+                    // kinds; stochastic sheds answer with their combined
+                    // interval, which NaN endpoints defer to)
+                    let span = self.ticket_state(t).map(|st| st.seq);
+                    let (lo, hi) = self
+                        .bounds(t)
+                        .map_or((f64::NAN, f64::NAN), |b| (b.lower(), b.upper()));
+                    if let Some(span) = span {
+                        self.emit(span, FlightEventKind::Shed { lo, hi });
+                    }
+                }
                 let ok = self.cancel(t);
                 debug_assert!(ok, "shed victim had a bracket but would not cancel");
                 self.stats.shed += 1;
@@ -1199,16 +1315,33 @@ impl Engine {
         }
         let ans = self.slots[i].session.answer(qid).cloned();
         debug_assert!(ans.is_some(), "cancel resolved the query");
-        self.tickets[ticket.idx as usize]
+        // the cancel retired lanes; account them while the ticket is
+        // still in the slot's open list so the flight recorder can
+        // attribute the retire events to its span — and because no
+        // harvest may follow if this was the engine's last open ticket
+        drain_retire_log(
+            &mut self.slots[i],
+            &mut self.stats,
+            &self.tickets,
+            self.flight.as_deref(),
+        );
+        let now = self.stats.rounds as u64;
+        let st = self.tickets[ticket.idx as usize]
             .state
             .as_mut()
-            .expect("ticket_state checked the slot")
-            .answer = ans;
+            .expect("ticket_state checked the slot");
+        st.answer = ans;
+        if let Some(f) = &self.flight {
+            f.record(
+                st.seq,
+                FlightEventKind::Answered {
+                    rounds: now.saturating_sub(st.submit_round),
+                    wall_ns: f.now_ns().saturating_sub(st.submit_ns),
+                },
+            );
+        }
         self.open -= 1;
         self.slots[i].open.retain(|&t| t != ticket);
-        // the cancel retired a lane; account it now — no harvest may
-        // follow if this was the engine's last open ticket
-        drain_retire_log(&mut self.slots[i], &mut self.stats);
         true
     }
 
@@ -1239,15 +1372,15 @@ impl Engine {
         });
         let budget = self.cfg.lanes;
         let mut used = 0usize;
-        let pending: Vec<(OpKey, usize)> = self
+        let pending: Vec<(OpKey, usize, u64)> = self
             .order
             .iter()
             .map(|t| {
                 let st = self.tickets[t.idx as usize].state.as_ref().expect("retained");
-                (st.key, st.qid)
+                (st.key, st.qid, st.seq)
             })
             .collect();
-        for (key, qid) in pending {
+        for (key, qid, span) in pending {
             let Some(i) = self.slot_index(key) else {
                 continue;
             };
@@ -1259,10 +1392,16 @@ impl Engine {
             if used == 0 || used + demand <= budget {
                 if slot.session.is_parked(qid) && slot.session.resume_query(qid) {
                     self.stats.resumes += 1;
+                    if let Some(f) = &self.flight {
+                        f.record(span, FlightEventKind::Resumed);
+                    }
                 }
                 used += demand;
             } else if !slot.session.is_parked(qid) && slot.session.suspend_query(qid) {
                 self.stats.parks += 1;
+                if let Some(f) = &self.flight {
+                    f.record(span, FlightEventKind::Parked);
+                }
             }
         }
         if used > self.stats.peak_live_lanes {
@@ -1276,6 +1415,8 @@ impl Engine {
     fn harvest(&mut self) {
         let ttl = self.cfg.ttl_rounds;
         let now = self.stats.rounds as u64;
+        let flight = self.flight.clone();
+        let flight = flight.as_deref();
         let mut i = 0;
         while i < self.slots.len() {
             let evict = {
@@ -1285,7 +1426,7 @@ impl Engine {
                 slot.last_sweeps = sw;
                 // retire-log delta: counted every harvest, so events are
                 // never lost to a same-round TTL eviction
-                drain_retire_log(slot, &mut self.stats);
+                drain_retire_log(slot, &mut self.stats, &self.tickets, flight);
                 let session = &slot.session;
                 let tickets = &mut self.tickets;
                 let open_count = &mut self.open;
@@ -1296,10 +1437,28 @@ impl Engine {
                     match session.answer(st.qid) {
                         Some(a) => {
                             st.answer = Some(a.clone());
+                            if let Some(f) = flight {
+                                f.record(
+                                    st.seq,
+                                    FlightEventKind::Answered {
+                                        rounds: now.saturating_sub(st.submit_round),
+                                        wall_ns: f.now_ns().saturating_sub(st.submit_ns),
+                                    },
+                                );
+                            }
                             *open_count -= 1;
                             false
                         }
-                        None => true,
+                        None => {
+                            if let Some(f) = flight {
+                                // still racing: snapshot the bracket width
+                                // (NaN for multi-lane kinds, whose state is
+                                // not a single interval)
+                                let gap = session.bounds(st.qid).map_or(f64::NAN, |b| b.gap());
+                                f.record(st.seq, FlightEventKind::SweptRound { round: now, gap });
+                            }
+                            true
+                        }
                     }
                 });
                 if slot.open.is_empty() && !slot.session.has_work() {
@@ -1491,15 +1650,67 @@ fn estimate_cost(q: &Query, n: usize) -> (u64, u64) {
     }
 }
 
+/// Point-in-time snapshot of one in-flight (unanswered) ticket, keyed by
+/// its flight-recorder span — the payload behind `serve`'s `/queries`
+/// endpoint. Built by [`Engine::live_spans`]; carries whatever the
+/// current round knows without touching the panel hot path.
+#[derive(Clone, Copy, Debug)]
+pub struct LiveSpan {
+    /// Flight-recorder span id (the engine submission sequence number).
+    pub span: SpanId,
+    /// Operator the query runs against.
+    pub key: OpKey,
+    /// Engine rounds elapsed since admission.
+    pub rounds_elapsed: u64,
+    /// Latest four-bound bracket — `None` for multi-lane query kinds
+    /// (compare/argmax/stochastic), whose state is not a single interval.
+    pub bounds: Option<Bounds>,
+    /// Whether the admission pass currently has the query parked.
+    pub parked: bool,
+}
+
 /// Pull new [`RetireEvent`](super::block::RetireEvent)s out of a slot's
 /// session log into the engine counters (delta via the slot's
-/// `last_retired` cursor — each event is counted exactly once).
-fn drain_retire_log(slot: &mut OpSlot, stats: &mut EngineStats) {
+/// `last_retired` cursor — each event is counted exactly once). With a
+/// flight recorder attached, each retirement is also attributed to the
+/// owning ticket's span: probe lanes emit `ProbeRetired`, query lanes emit
+/// `RetiredDominated`/`RetiredDecided`.
+fn drain_retire_log(
+    slot: &mut OpSlot,
+    stats: &mut EngineStats,
+    tickets: &[TicketSlot],
+    flight: Option<&FlightRecorder>,
+) {
     let events = slot.session.retired();
     for e in &events[slot.last_retired..] {
         match e.reason {
             RetireReason::Dominated => stats.retired_dominated += 1,
             RetireReason::Decided => stats.retired_decided += 1,
+        }
+        if let Some(f) = flight {
+            if let Some((qid, probe)) = slot.session.lane_query(e.id) {
+                let span = slot.open.iter().find_map(|tk| {
+                    tickets
+                        .get(tk.idx as usize)
+                        .filter(|s| s.gen == tk.gen)
+                        .and_then(|s| s.state.as_ref())
+                        .filter(|st| st.qid == qid)
+                        .map(|st| st.seq)
+                });
+                if let Some(span) = span {
+                    match (e.reason, probe) {
+                        (_, Some(p)) => {
+                            f.record(span, FlightEventKind::ProbeRetired { probe: p as u32 })
+                        }
+                        (RetireReason::Dominated, None) => {
+                            f.record(span, FlightEventKind::RetiredDominated)
+                        }
+                        (RetireReason::Decided, None) => {
+                            f.record(span, FlightEventKind::RetiredDecided)
+                        }
+                    }
+                }
+            }
         }
     }
     slot.last_retired = events.len();
@@ -2761,5 +2972,114 @@ mod tests {
         assert!(r.combined.lo <= r.combined.hi);
         assert!(r.combined.lo.is_finite() && r.combined.hi.is_finite());
         assert!(!r.tol_met, "a 1e-15 tolerance cannot be met mid-flight");
+
+        // the flight recorder saw the whole shed: the victim's span (the
+        // first submission → span 0) carries a Shed event (NaN endpoints
+        // here — a stochastic victim's state is not a single interval),
+        // probe retirements from the cancel, and a terminal Answered
+        let kinds: Vec<FlightEventKind> = eng
+            .flight()
+            .expect("recorder on by default")
+            .span_events(0)
+            .iter()
+            .map(|e| e.kind)
+            .collect();
+        let shed_at = kinds
+            .iter()
+            .position(|k| matches!(k, FlightEventKind::Shed { .. }))
+            .expect("shed event recorded on the victim span");
+        assert!(
+            kinds.iter().any(|k| matches!(k, FlightEventKind::ProbeRetired { .. })),
+            "cancelled probes attribute to the span"
+        );
+        assert!(
+            matches!(kinds.last(), Some(FlightEventKind::Answered { .. })),
+            "shed span terminates answered"
+        );
+        assert!(shed_at < kinds.len() - 1, "shed precedes the terminal event");
+    }
+
+    #[test]
+    fn flight_recorder_traces_the_query_lifecycle() {
+        let mut rng = Rng::new(0xE9630);
+        let (a, w) = random_sparse_spd(&mut rng, 16, 0.3, 0.05);
+        let a = Arc::new(a);
+        let opts = GqlOptions::new(w.lo, w.hi);
+        let mut eng = Engine::new(EngineConfig::default()).unwrap();
+        let u = randvec(&mut rng, 16);
+        let t = eng.submit(1, a.clone(), opts, Query::Estimate { u, stop: StopRule::Iters(3) });
+        let span = eng.span_of(t).expect("live ticket has a span");
+
+        // live introspection mid-flight: the span shows up with its
+        // current bracket and rounds-elapsed
+        assert!(eng.step_round());
+        let live = eng.live_spans();
+        assert_eq!(live.len(), 1);
+        assert_eq!(live[0].span, span);
+        assert_eq!(live[0].key, 1);
+        assert!(live[0].rounds_elapsed >= 1);
+        assert!(!live[0].parked);
+        assert!(live[0].bounds.is_some(), "estimate exposes its four-bound bracket");
+
+        eng.drain();
+        assert!(eng.live_spans().is_empty(), "answered tickets leave the live view");
+        let evs = eng.flight().expect("recorder on by default").span_events(span);
+        let kinds: Vec<&str> = evs.iter().map(|e| e.kind.name()).collect();
+        assert_eq!(
+            &kinds[..3],
+            &["submitted", "admitted", "planned_onto_panel"],
+            "admission prefix in order"
+        );
+        assert!(kinds.contains(&"swept_round"), "mid-flight rounds are recorded");
+        assert_eq!(*kinds.last().unwrap(), "answered");
+        for p in evs.windows(2) {
+            assert!(p[0].seq < p[1].seq, "per-span seq strictly increases");
+            assert!(p[0].ts_ns <= p[1].ts_ns, "per-span timestamps are monotone");
+        }
+        match evs.last().unwrap().kind {
+            FlightEventKind::Answered { rounds, .. } => assert!(rounds >= 1),
+            other => panic!("wrong terminal event {other:?}"),
+        }
+    }
+
+    #[test]
+    fn flight_records_parks_and_resumes_and_off_means_off() {
+        let mut rng = Rng::new(0xE9631);
+        let (a, w) = random_sparse_spd(&mut rng, 20, 0.3, 0.05);
+        let a = Arc::new(a);
+        let opts = GqlOptions::new(w.lo, w.hi);
+        let mut eng = Engine::new(EngineConfig::default().with_lanes(1)).unwrap();
+        let mk = |rng: &mut Rng| Query::Estimate { u: randvec(rng, 20), stop: StopRule::Exhaust };
+        let q1 = mk(&mut rng);
+        let q2 = mk(&mut rng);
+        let t1 = eng.submit(3, a.clone(), opts, q1);
+        let t2 = eng.submit(3, a.clone(), opts, q2);
+        let s2 = eng.span_of(t2).unwrap();
+        assert!(eng.step_round());
+        assert!(
+            eng.live_spans().iter().any(|l| l.span == s2 && l.parked),
+            "budget 1 parks the younger span"
+        );
+        eng.drain();
+        assert!(eng.is_resolved(t1) && eng.is_resolved(t2));
+        let k2: Vec<&str> = eng
+            .flight()
+            .unwrap()
+            .span_events(s2)
+            .iter()
+            .map(|e| e.kind.name())
+            .collect();
+        assert!(k2.contains(&"parked"), "suspension recorded");
+        assert!(k2.contains(&"resumed"), "resumption recorded");
+        assert_eq!(*k2.last().unwrap(), "answered");
+
+        // recorder off: no Arc exists, the engine otherwise behaves
+        // identically (bit-identity is property-tested in prop_engine)
+        let mut off = Engine::new(EngineConfig::default().with_flight(false)).unwrap();
+        assert!(off.flight().is_none());
+        let t = off.submit(3, a, opts, mk(&mut rng));
+        off.drain();
+        assert!(off.is_resolved(t));
+        assert!(off.span_of(t).is_some(), "span ids exist with the recorder off");
     }
 }

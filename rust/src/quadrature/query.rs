@@ -290,6 +290,10 @@ enum Spec {
         /// Probes retired before exhaustion (their bracket met
         /// [`super::stochastic::PROBE_GAP_FRACTION`] of the tolerance).
         retired_early: usize,
+        /// `(probe index, lane iterations)` at each early retirement, in
+        /// retirement order — carried into
+        /// [`StochasticReport::retired_at`].
+        retired_at: Vec<(usize, usize)>,
         /// Resolution rounds this query has lived through.
         rounds: usize,
         /// Standard-error trajectory, one sample per resolution round
@@ -538,6 +542,7 @@ impl Session {
             live: vec![true; m],
             brackets: vec![None; m],
             retired_early: 0,
+            retired_at: Vec::new(),
             rounds: 0,
             stderr_trace: Vec::new(),
         }
@@ -628,6 +633,20 @@ impl Session {
     /// ([`crate::quadrature::engine`]).
     pub fn lane_demand(&self, qid: usize) -> usize {
         self.live_lanes(qid).len()
+    }
+
+    /// Owner of panel lane `lane`: the owning query id, plus the probe
+    /// index when the lane serves a stochastic query. The engine's
+    /// flight recorder uses this to attribute lane-retirement events
+    /// back to the query span (and probe) they belong to.
+    pub fn lane_query(&self, lane: usize) -> Option<(usize, Option<usize>)> {
+        self.lane_owner.get(lane).map(|&(qid, role)| {
+            let probe = match role {
+                Role::Probe(i) => Some(i),
+                _ => None,
+            };
+            (qid, probe)
+        })
     }
 
     /// True while `qid` is parked by [`Session::suspend_query`].
@@ -1029,7 +1048,8 @@ impl Session {
         // --- phase 2: store brackets, mark converged probes ---
         let mut to_retire: Vec<usize> = Vec::new();
         {
-            let Spec::Stochastic { live, brackets, retired_early, rounds, .. } =
+            let latest = &self.latest;
+            let Spec::Stochastic { live, brackets, retired_early, retired_at, rounds, .. } =
                 &mut self.queries[qid].spec
             else {
                 unreachable!("checked above")
@@ -1041,6 +1061,7 @@ impl Session {
                 if live[k] && probe_converged(&b, cfg.tol) {
                     live[k] = false;
                     *retired_early += 1;
+                    retired_at.push((k, latest[lanes[k]].map_or(0, |lb| lb.iter)));
                     to_retire.push(lanes[k]);
                 }
             }
@@ -1100,15 +1121,18 @@ impl Session {
             let ok = self.eng.retire(lane, RetireReason::Decided);
             debug_assert!(ok, "live stochastic lane must be retirable");
         }
-        let (f, cfg, lanes, retired_early, rounds) = match &mut self.queries[qid].spec {
-            Spec::Stochastic { f, cfg, lanes, live, retired_early, rounds, .. } => {
-                for l in live.iter_mut() {
-                    *l = false;
+        let (f, cfg, lanes, retired_early, retired_at, rounds) =
+            match &mut self.queries[qid].spec {
+                Spec::Stochastic {
+                    f, cfg, lanes, live, retired_early, retired_at, rounds, ..
+                } => {
+                    for l in live.iter_mut() {
+                        *l = false;
+                    }
+                    (*f, *cfg, lanes.clone(), *retired_early, retired_at.clone(), *rounds)
                 }
-                (*f, *cfg, lanes.clone(), *retired_early, *rounds)
-            }
-            _ => unreachable!("finish_stochastic on a non-stochastic query"),
-        };
+                _ => unreachable!("finish_stochastic on a non-stochastic query"),
+            };
         let iters: usize =
             lanes.iter().map(|&l| self.latest[l].map_or(0, |b| b.iter)).sum();
         let hit_round = (s.tol_met && s.probes == cfg.probes).then_some(rounds);
@@ -1121,6 +1145,7 @@ impl Session {
             probes_issued: cfg.probes,
             probes_contributing: s.probes,
             probes_retired_early: retired_early,
+            retired_at,
             tol: cfg.tol,
             tol_met: s.tol_met,
             hit_round,

@@ -507,6 +507,12 @@ pub struct StochasticReport {
     /// Probes retired before Krylov exhaustion because their own bracket
     /// met [`PROBE_GAP_FRACTION`] of the tolerance.
     pub probes_retired_early: usize,
+    /// Per-probe early-retirement log: `(probe index, lane iterations at
+    /// retirement)`, in retirement order. Length equals
+    /// `probes_retired_early` for a naturally resolved query; the flight
+    /// recorder replays these as `probe_retired` events and post-mortems
+    /// read which probes stopped pulling their weight, and when.
+    pub retired_at: Vec<(usize, usize)>,
     /// Requested relative tolerance.
     pub tol: f64,
     /// Whether the combined interval met the tolerance.

@@ -12,7 +12,9 @@
 //! * parallel sweeps with ≥ 2 workers, in both [`SweepMode`]s (the
 //!   ISSUE 8 work-stealing fan-out and the static chunk baseline),
 //!   profiled and unprofiled, across random worker counts, skewed
-//!   operator sizes, and mid-flight submissions.
+//!   operator sizes, and mid-flight submissions,
+//! * the query-lifecycle flight recorder on vs. off (ISSUE 10): event
+//!   emission hooks admission/schedule/harvest only, never the sweep.
 
 use gauss_bif::datasets::random_sparse_spd;
 use gauss_bif::metrics::{MetricValue, MetricsRegistry};
@@ -691,6 +693,34 @@ fn shed_answers_carry_a_valid_four_bound_bracket() {
     let refused = eng.try_submit(0, Arc::clone(l), *opts, Query::Threshold { u, t: 0.0 }, Some(1));
     assert!(matches!(refused, Err(SubmitError::Saturated)));
     eng.drain();
+}
+
+#[test]
+fn flight_recorder_on_or_off_is_bit_identical() {
+    // the recorder hooks admission, the lane-budget pass, and harvest —
+    // never `Session::step` or the panel sweep — so answers must not move
+    // a bit when it is disabled, and both must match the sequential
+    // reference; exercised under a lane budget and parallel workers so
+    // the park/resume and fan-out paths emit events too
+    forall(5, 0xE9EE, |rng| {
+        let ops = build_ops(rng, 2 + rng.below(2), 0.05);
+        let queries: Vec<Vec<Query>> = ops
+            .iter()
+            .map(|(l, opts)| mixed_queries(rng, l, *opts))
+            .collect();
+        let want = sequential_answers(&ops, &queries);
+        let base = EngineConfig::default().with_width(PER_OP_LANES);
+        for ecfg in [
+            base,
+            base.with_lanes(1),
+            base.with_workers(2 + rng.below(3)),
+        ] {
+            let on = engine_answers(&ops, &queries, ecfg.with_flight(true));
+            check_identity(&want, &on, "flight on vs sequential");
+            let off = engine_answers(&ops, &queries, ecfg.with_flight(false));
+            check_identity(&on, &off, "flight on vs off");
+        }
+    });
 }
 
 #[test]
